@@ -1,0 +1,81 @@
+//! END-TO-END VALIDATION DRIVER (recorded in EXPERIMENTS.md).
+//!
+//! Exercises the full three-layer stack on the paper's headline experiment:
+//!
+//! 1. loads the AOT-compiled JAX/Pallas contention simulator
+//!    (`artifacts/contention_sim.hlo.txt`) through PJRT — **no Python at
+//!    runtime**;
+//! 2. characterizes all 10 pairing-set kernels on all 4 machines via the
+//!    artifact (Eq. 3);
+//! 3. runs the full Fig. 8 sweep (45 pairings × 4 machines × all symmetric
+//!    thread counts) through the artifact, batched 64 configurations at a
+//!    time;
+//! 4. compares against the analytic model (Eqs. 4+5) and prints the error
+//!    table, asserting the paper's headline claim (max error < 8%).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_validation
+//! ```
+
+use std::time::Instant;
+
+use membw::config::{machine, MachineId};
+use membw::kernels::pairing_set;
+use membw::runtime::{ArtifactPaths, PjrtRuntime, PjrtSimExecutor};
+use membw::stats::ErrorStats;
+use membw::sweep::{pairing_cases, run_cases, symmetric_splits, MeasureEngine};
+
+fn main() {
+    let t0 = Instant::now();
+    let runtime = PjrtRuntime::cpu().expect("PJRT CPU client");
+    println!("PJRT platform: {}", runtime.platform());
+    let exec = PjrtSimExecutor::load(&runtime, &ArtifactPaths::default_dir())
+        .expect("artifact bundle — run `make artifacts` first");
+    println!("artifact: {:?}", exec.meta());
+    let engine = MeasureEngine::Pjrt(&exec);
+
+    let pairs = pairing_cases(&pairing_set(), false);
+    let mut all_errors: Vec<f64> = Vec::new();
+    let mut total_cases = 0usize;
+    for mid in MachineId::ALL {
+        let m = machine(mid);
+        let t_m = Instant::now();
+        // One batched sweep per machine: all pairings x all thread counts
+        // packed into full 64-config PJRT batches.
+        let cases: Vec<_> = pairs.iter().flat_map(|&(k1, k2)| symmetric_splits(&m, k1, k2)).collect();
+        total_cases += cases.len();
+        let rs = run_cases(&m, &cases, &engine).expect("sweep");
+        let machine_errors = rs.all_errors();
+        let stats = ErrorStats::of(&machine_errors);
+        println!(
+            "[{}] {:4} errors | median {:.2}% max {:.2}% | <5%: {:.1}% <8%: {:.1}% | {:.1}s",
+            mid.key(),
+            stats.n,
+            stats.median * 100.0,
+            stats.max * 100.0,
+            stats.frac_below_5pct * 100.0,
+            stats.frac_below_8pct * 100.0,
+            t_m.elapsed().as_secs_f64()
+        );
+        all_errors.extend(machine_errors);
+    }
+
+    let global = ErrorStats::of(&all_errors);
+    println!(
+        "\nGLOBAL over {} pairing cases ({} per-kernel errors): median {:.2}%, max {:.2}%",
+        total_cases,
+        global.n,
+        global.median * 100.0,
+        global.max * 100.0
+    );
+    println!(
+        "paper claim: max < 8%, 75% of cases < 5%  |  ours: max {:.2}%, {:.1}% < 5%",
+        global.max * 100.0,
+        global.frac_below_5pct * 100.0
+    );
+    println!("total wall time: {:.1}s (all measurement through the PJRT artifact)", t0.elapsed().as_secs_f64());
+
+    assert!(global.max < 0.08, "headline claim violated: max error {:.2}%", global.max * 100.0);
+    assert!(global.frac_below_5pct > 0.75);
+    println!("E2E VALIDATION OK");
+}

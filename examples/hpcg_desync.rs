@@ -1,0 +1,61 @@
+//! HPCG desynchronization demo — the paper's motivating observation
+//! (Sect. I-A, Figs. 1 and 3) as a co-simulation.
+//!
+//! Runs the plain HPCG variant (with MPI_Allreduce) and the modified one
+//! (reductions removed), renders timelines, and prints the skewness
+//! analysis that distinguishes resynchronizing from desynchronizing
+//! kernels.
+//!
+//! ```bash
+//! cargo run --release --example hpcg_desync
+//! ```
+
+use membw::config::{machine, MachineId};
+use membw::desync::{hpcg_program, CoSimConfig, CoSimEngine, HpcgVariant, NoiseModel};
+use membw::sharing::{predict_skew, OverlapPartner, SkewPrediction};
+use membw::stats::skewness_dimensioned;
+
+fn main() {
+    let m = machine(MachineId::Clx);
+    let ranks = m.cores;
+    let cfg = CoSimConfig {
+        dt_s: 20e-6,
+        t_max_s: 600.0,
+        initial_stagger_s: 0.2e-3,
+        neighbor_radius: 3,
+        noise: NoiseModel::mild(7),
+    };
+
+    for variant in [HpcgVariant::Plain, HpcgVariant::Modified] {
+        println!("=== HPCG {variant:?} on {} ({ranks} ranks) ===", m.name);
+        let prog = hpcg_program(variant, 96, 3);
+        let eng = CoSimEngine::new(&m, prog, ranks, cfg.clone()).expect("engine");
+        let r = eng.run();
+
+        // Timeline around the DDOT2 of the middle iteration.
+        if let Some(rec) = r.trace.of("DDOT2#1", Some(1)).first() {
+            let t0 = rec.t_start - 0.005;
+            println!("{}", r.trace.render_ascii(t0, t0 + 0.04, ranks, 100));
+        }
+
+        // Per-kernel skewness (Fig. 3 analysis).
+        println!("\n  accumulated-time skewness (ms), iteration 1:");
+        for label in ["DDOT2#1", "DDOT2#2", "DDOT1"] {
+            let durs = r.trace.durations_by_rank(label, 1, ranks);
+            let skew = skewness_dimensioned(&durs.iter().map(|d| d * 1e3).collect::<Vec<_>>());
+            println!("    {label:8}: {skew:+.3} ms");
+        }
+        println!();
+    }
+
+    // Close the loop: the model's qualitative prediction (Sect. V).
+    println!("model prediction (Sect. V): sandwich a kernel between phases and ask");
+    let f_ddot2 = membw::ecm::predict(&membw::kernels::kernel(membw::kernels::KernelId::Ddot2), &m).f;
+    let f_daxpy = membw::ecm::predict(&membw::kernels::kernel(membw::kernels::KernelId::Daxpy), &m).f;
+    let p1 = predict_skew(f_ddot2, OverlapPartner::Idle);
+    let p2 = predict_skew(f_ddot2, OverlapPartner::Kernel { f: f_daxpy });
+    assert_eq!(p1, SkewPrediction::Resynchronize);
+    assert_eq!(p2, SkewPrediction::Desynchronize);
+    println!("  DDOT2 → halo wait (idle)      : {p1:?}  (negative skew)");
+    println!("  DDOT2 → DAXPY (f {f_daxpy:.3} > {f_ddot2:.3}): {p2:?} (positive skew)");
+}

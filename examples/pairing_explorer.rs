@@ -1,0 +1,54 @@
+//! Pairing explorer: sweep a kernel pairing across every thread split and
+//! machine, Fig. 6/7-style.
+//!
+//! ```bash
+//! cargo run --release --example pairing_explorer -- dcopy ddot2 [full|sym]
+//! ```
+
+use membw::config::{machine, MachineId};
+use membw::kernels::{kernel, KernelId};
+use membw::sweep::{full_domain_splits, run_cases, symmetric_splits, MeasureEngine};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let k1 = KernelId::parse(args.first().map(String::as_str).unwrap_or("dcopy")).expect("kernel 1");
+    let k2 = KernelId::parse(args.get(1).map(String::as_str).unwrap_or("ddot2")).expect("kernel 2");
+    let symmetric = args.get(2).map(String::as_str) == Some("sym");
+
+    println!(
+        "pairing {} + {} — {} splits\n",
+        kernel(k1).name,
+        kernel(k2).name,
+        if symmetric { "symmetric (Fig. 7)" } else { "full-domain (Fig. 6)" }
+    );
+
+    for mid in MachineId::ALL {
+        let m = machine(mid);
+        let cases = if symmetric {
+            symmetric_splits(&m, k1, k2)
+        } else {
+            full_domain_splits(&m, k1, k2)
+        };
+        let rs = run_cases(&m, &cases, &MeasureEngine::Fluid).expect("sweep");
+        println!("[{}] {} ({} cores)", mid.key(), m.name, m.cores);
+        println!("  n1  n2 | meas/core I  model I | meas/core II  model II | total  | stacked share I");
+        for c in &rs.cases {
+            let share = c.measured_per_core[0] * c.n[0] as f64 / c.measured_total;
+            let bar = "#".repeat((share * 30.0).round() as usize);
+            println!(
+                "  {:2}  {:2} | {:7.2}  {:7.2} | {:8.2}  {:8.2} | {:6.1} | {:<30}",
+                c.n[0],
+                c.n[1],
+                c.measured_per_core[0],
+                c.model_per_core[0],
+                c.measured_per_core[1],
+                c.model_per_core[1],
+                c.measured_total,
+                bar
+            );
+        }
+        let errs = rs.all_errors();
+        let max = errs.iter().cloned().fold(0.0, f64::max);
+        println!("  max model error: {:.2}%\n", max * 100.0);
+    }
+}

@@ -1,0 +1,54 @@
+//! Quickstart: pair two memory-bound kernels on one machine and compare the
+//! analytic bandwidth-sharing model (paper Eqs. 4+5) against the simulated
+//! measurement.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use membw::config::{machine, MachineId};
+use membw::kernels::{kernel, KernelId};
+use membw::sharing::{share_two_groups, KernelGroup};
+use membw::simulator::{measure_f_bs, measure_pairing, Engine};
+
+fn main() {
+    // 1. Pick a machine (Cascade Lake, 20 cores) and two kernels.
+    let m = machine(MachineId::Clx);
+    let dcopy = kernel(KernelId::Dcopy);
+    let ddot2 = kernel(KernelId::Ddot2);
+    println!("machine: {} ({} cores per ccNUMA domain)\n", m.name, m.cores);
+
+    // 2. Characterize each kernel exactly as the paper does (Eq. 3):
+    //    f = b_meas(1 thread) / b_s(full domain).
+    let c1 = measure_f_bs(&dcopy, &m, Engine::Fluid);
+    let c2 = measure_f_bs(&ddot2, &m, Engine::Fluid);
+    println!("DCOPY : b1 = {:5.2} GB/s, b_s = {:6.2} GB/s, f = {:.3}", c1.b1_gbs, c1.bs_gbs, c1.f);
+    println!("DDOT2 : b1 = {:5.2} GB/s, b_s = {:6.2} GB/s, f = {:.3}\n", c2.b1_gbs, c2.bs_gbs, c2.f);
+
+    // 3. Split the domain 12 + 8 and ask the model who gets what.
+    let (n1, n2) = (12, 8);
+    let pred = share_two_groups(
+        &KernelGroup { n: n1, f: c1.f, bs_gbs: c1.bs_gbs },
+        &KernelGroup { n: n2, f: c2.f, bs_gbs: c2.bs_gbs },
+    );
+
+    // 4. "Measure" the same pairing on the simulated contention domain.
+    let meas = measure_pairing(&m, &dcopy, n1, &ddot2, n2, Engine::Fluid);
+
+    println!("{n1} DCOPY threads + {n2} DDOT2 threads:");
+    println!("              model      measured   error");
+    for (g, name) in [(0usize, "DCOPY"), (1, "DDOT2")] {
+        let err = (meas.per_core_gbs[g] - pred.per_core_gbs[g]).abs() / pred.per_core_gbs[g];
+        println!(
+            "  {name:6} {:6.2} GB/s  {:6.2} GB/s   {:4.1}%  (per core)",
+            pred.per_core_gbs[g],
+            meas.per_core_gbs[g],
+            err * 100.0
+        );
+    }
+    println!(
+        "  total  {:6.1} GB/s  {:6.1} GB/s          (overlapped b_s, Eq. 4)",
+        pred.group_bw_gbs[0] + pred.group_bw_gbs[1],
+        meas.total_gbs
+    );
+}

@@ -1,0 +1,112 @@
+"""AOT pipeline: lower the L2 JAX model to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py.
+
+Artifacts (written to ``artifacts/``):
+
+* ``contention_sim.hlo.txt`` — batched fluid contention simulation
+  (B=64 configs x N=24 cores, 1 warm-up + 3 measure chunks of 4096 cycles).
+  Inputs: d, c, win [B,N] f32; cap [B,1] f32. Output: served [B,N] f32.
+* ``analytic_model.hlo.txt`` — batched Eqs. (4)+(5) evaluation, 256 cases.
+  Inputs: n1, f1, bs1, n2, f2, bs2 [256] f32. Outputs: per-core bandwidths.
+* ``artifacts.meta`` — shapes/cycle counts the Rust runtime needs.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (from ``python/``).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.kernels.contention import BATCH, CHUNK_CYCLES, N_CORES
+from compile import model
+
+WARMUP_CHUNKS = 1
+MEASURE_CHUNKS = 3
+ANALYTIC_BATCH = 256
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to XLA HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_contention_sim() -> str:
+    """Lower the batched contention simulation."""
+    plane = jax.ShapeDtypeStruct((BATCH, N_CORES), jnp.float32)
+    cap = jax.ShapeDtypeStruct((BATCH, 1), jnp.float32)
+
+    def fn(d, c, win, cap):
+        return (
+            model.simulate(
+                d, c, win, cap,
+                warmup_chunks=WARMUP_CHUNKS,
+                measure_chunks=MEASURE_CHUNKS,
+                cycles=CHUNK_CYCLES,
+            ),
+        )
+
+    return to_hlo_text(jax.jit(fn).lower(plane, plane, plane, cap))
+
+
+def lower_analytic() -> str:
+    """Lower the batched analytic model."""
+    vec = jax.ShapeDtypeStruct((ANALYTIC_BATCH,), jnp.float32)
+
+    def fn(n1, f1, bs1, n2, f2, bs2):
+        return model.analytic_two_group(n1, f1, bs1, n2, f2, bs2)
+
+    return to_hlo_text(jax.jit(fn).lower(vec, vec, vec, vec, vec, vec))
+
+
+def write_meta(out_dir: str) -> None:
+    """Emit the artifact geometry for the Rust runtime (key=value lines)."""
+    meta = {
+        "batch": BATCH,
+        "n_cores": N_CORES,
+        "chunk_cycles": CHUNK_CYCLES,
+        "warmup_chunks": WARMUP_CHUNKS,
+        "measure_chunks": MEASURE_CHUNKS,
+        "measure_cycles": MEASURE_CHUNKS * CHUNK_CYCLES,
+        "analytic_batch": ANALYTIC_BATCH,
+    }
+    with open(os.path.join(out_dir, "artifacts.meta"), "w") as f:
+        for k, v in meta.items():
+            f.write(f"{k} = {v}\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    sim = lower_contention_sim()
+    path = os.path.join(args.out_dir, "contention_sim.hlo.txt")
+    with open(path, "w") as f:
+        f.write(sim)
+    print(f"wrote {len(sim)} chars to {path}")
+
+    ana = lower_analytic()
+    path = os.path.join(args.out_dir, "analytic_model.hlo.txt")
+    with open(path, "w") as f:
+        f.write(ana)
+    print(f"wrote {len(ana)} chars to {path}")
+
+    write_meta(args.out_dir)
+    print(f"wrote {os.path.join(args.out_dir, 'artifacts.meta')}")
+
+
+if __name__ == "__main__":
+    main()

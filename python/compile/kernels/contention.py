@@ -1,0 +1,90 @@
+"""Layer-1 Pallas kernel: one cycle-chunk of the batched contention simulation.
+
+This is the compute hot-spot of the reproduction: the fluid-queueing model of
+a memory contention domain (see DESIGN.md §4 and the Rust mirror in
+``rust/src/simulator/fluid.rs`` — the two implementations MUST stay in sync),
+advanced ``cycles`` steps for a whole batch of configurations at once.
+
+State/parameter layout (Struct-of-Arrays, f32):
+
+* ``d``      [B, N]  intrinsic demand per core, lines/cycle (0 = idle core)
+* ``c``      [B, N]  service-cost factor per line (1.0 = pure read)
+* ``win``    [B, N]  prefetch-window depth ``W = D0 + beta * d * c * L0``
+* ``cap``    [B, 1]  interface capacity, cost-lines/cycle
+* ``occ``    [B, N]  queued requests per core (carried state)
+* ``served`` [B, N]  cumulative served lines (carried state)
+
+Per cycle: issue ``min(d, max(win - occ, 0))``; drain proportionally to
+occupancy with capacity ``cap`` in cost units.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): configurations are independent,
+so the kernel tiles the batch dimension into VMEM-sized blocks and keeps all
+six planes resident across the ``fori_loop`` — no HBM round-trips inside a
+chunk. ``interpret=True`` everywhere: the CPU PJRT client cannot execute
+Mosaic custom-calls; numerics are identical.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default artifact geometry. N_CORES must cover the largest machine (CLX: 20
+# cores); the batch tile is sized so the VMEM working set stays small
+# (6 planes x 32 x 24 x 4 B ≈ 18 KiB).
+BATCH = 64
+N_CORES = 24
+TILE_B = 32
+CHUNK_CYCLES = 4096
+
+
+def _chunk_kernel(d_ref, c_ref, win_ref, cap_ref, occ_ref, served_ref,
+                  occ_out_ref, served_out_ref, *, cycles: int):
+    """Advance the fluid model `cycles` steps for one batch tile."""
+    d = d_ref[...]
+    c = c_ref[...]
+    win = win_ref[...]
+    cap = cap_ref[...]
+
+    def body(_, state):
+        occ, served = state
+        # Issue: demand-rate- and window-limited.
+        occ = occ + jnp.minimum(d, jnp.maximum(win - occ, 0.0))
+        # Service: proportional to occupancy, capacity in cost units.
+        occ_cost = jnp.sum(occ * c, axis=1, keepdims=True)
+        lam = jnp.minimum(cap / jnp.maximum(occ_cost, 1e-12), 1.0)
+        s = lam * occ
+        return occ - s, served + s
+
+    occ, served = jax.lax.fori_loop(
+        0, cycles, body, (occ_ref[...], served_ref[...]))
+    occ_out_ref[...] = occ
+    served_out_ref[...] = served
+
+
+@partial(jax.jit, static_argnames=("cycles",))
+def contention_chunk(d, c, win, cap, occ, served, *, cycles: int = CHUNK_CYCLES):
+    """Run one chunk of the batched contention simulation via Pallas.
+
+    All arrays are f32; shapes as in the module docstring. Returns the
+    updated ``(occ, served)`` state. The caller (the Rust runtime, or
+    ``model.simulate``) strings chunks together and handles warm-up.
+    """
+    b, n = d.shape
+    assert b % TILE_B == 0, f"batch {b} must be a multiple of {TILE_B}"
+    grid = (b // TILE_B,)
+    row_spec = pl.BlockSpec((TILE_B, n), lambda i: (i, 0))
+    cap_spec = pl.BlockSpec((TILE_B, 1), lambda i: (i, 0))
+    out_shape = (
+        jax.ShapeDtypeStruct((b, n), jnp.float32),
+        jax.ShapeDtypeStruct((b, n), jnp.float32),
+    )
+    return pl.pallas_call(
+        partial(_chunk_kernel, cycles=cycles),
+        grid=grid,
+        in_specs=[row_spec, row_spec, row_spec, cap_spec, row_spec, row_spec],
+        out_specs=(row_spec, row_spec),
+        out_shape=out_shape,
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(d, c, win, cap, occ, served)

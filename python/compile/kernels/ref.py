@@ -1,0 +1,47 @@
+"""Pure-jnp (and pure-Python) oracles for the Pallas contention kernel.
+
+``ref_chunk`` is the correctness reference pytest compares the Pallas kernel
+against; ``ref_chunk_py`` is an even more naive per-config Python loop used
+to validate the vectorization itself.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def ref_chunk(d, c, win, cap, occ, served, *, cycles: int):
+    """Reference implementation with lax.scan — no Pallas, same math."""
+
+    def body(state, _):
+        occ, served = state
+        occ = occ + jnp.minimum(d, jnp.maximum(win - occ, 0.0))
+        occ_cost = jnp.sum(occ * c, axis=1, keepdims=True)
+        lam = jnp.minimum(cap / jnp.maximum(occ_cost, 1e-12), 1.0)
+        s = lam * occ
+        return (occ - s, served + s), None
+
+    (occ, served), _ = jax.lax.scan(body, (occ, served), None, length=cycles)
+    return occ, served
+
+
+def ref_chunk_py(d, c, win, cap, occ, served, *, cycles: int):
+    """Naive per-config NumPy loop (float32 throughout, like the kernel)."""
+    d = np.asarray(d, np.float32).copy()
+    c = np.asarray(c, np.float32)
+    win = np.asarray(win, np.float32)
+    cap = np.asarray(cap, np.float32)
+    occ = np.asarray(occ, np.float32).copy()
+    served = np.asarray(served, np.float32).copy()
+    b, n = d.shape
+    for _ in range(cycles):
+        for k in range(b):
+            for i in range(n):
+                if d[k, i] > 0.0:
+                    occ[k, i] += min(d[k, i], max(win[k, i] - occ[k, i], np.float32(0.0)))
+            occ_cost = np.float32((occ[k] * c[k]).sum())
+            lam = min(cap[k, 0] / max(occ_cost, np.float32(1e-12)), np.float32(1.0))
+            s = (lam * occ[k]).astype(np.float32)
+            occ[k] -= s
+            served[k] += s
+    return occ, served

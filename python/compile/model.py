@@ -1,0 +1,91 @@
+"""Layer-2 JAX model: the batched contention simulation and the batched
+analytic sharing model (paper Eqs. 4+5), both built on the Layer-1 Pallas
+kernel / plain jnp and AOT-lowered to HLO by ``aot.py``.
+
+Python runs at build time only; the Rust coordinator executes the lowered
+HLO through PJRT on the request path.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.contention import CHUNK_CYCLES, contention_chunk
+
+
+@partial(jax.jit, static_argnames=("warmup_chunks", "measure_chunks", "cycles"))
+def simulate(d, c, win, cap, *, warmup_chunks: int = 1, measure_chunks: int = 3,
+             cycles: int = CHUNK_CYCLES):
+    """Full batched simulation: warm-up, then measurement.
+
+    Returns ``served`` lines per (config, core) accumulated over
+    ``measure_chunks * cycles`` cycles, after ``warmup_chunks * cycles`` of
+    warm-up. The caller converts lines/cycle to GB/s with the machine's
+    frequency.
+    """
+    b, n = d.shape
+    occ = jnp.zeros((b, n), jnp.float32)
+    served = jnp.zeros((b, n), jnp.float32)
+    for _ in range(warmup_chunks):
+        occ, served = contention_chunk(d, c, win, cap, occ, served, cycles=cycles)
+    served = jnp.zeros_like(served)  # discard warm-up traffic
+    for _ in range(measure_chunks):
+        occ, served = contention_chunk(d, c, win, cap, occ, served, cycles=cycles)
+    return served
+
+
+@jax.jit
+def analytic_two_group(n1, f1, bs1, n2, f2, bs2):
+    """Batched analytic sharing model — paper Eqs. (4) and (5) with the
+    demand cap for the nonsaturated case (matches
+    ``rust/src/sharing/multigroup.rs`` for two groups).
+
+    All inputs are f32 vectors of the same length (one entry per case).
+    Returns per-core bandwidths ``(b1_core, b2_core)`` in the same unit as
+    ``bs``.
+    """
+    n1f = n1.astype(jnp.float32)
+    n2f = n2.astype(jnp.float32)
+    ntot = jnp.maximum(n1f + n2f, 1e-9)
+    b_mix = (n1f * bs1 + n2f * bs2) / ntot  # Eq. (4)
+
+    dem1 = n1f * f1 * bs1  # unconstrained group demands
+    dem2 = n2f * f2 * bs2
+    budget = jnp.minimum(b_mix, dem1 + dem2)
+
+    w1 = n1f * f1
+    w2 = n2f * f2
+    wsum = jnp.maximum(w1 + w2, 1e-12)
+    raw1 = budget * w1 / wsum  # Eq. (5) share of the budget
+    raw2 = budget * w2 / wsum
+
+    # Two-group water-fill: if a group's proportional allocation exceeds its
+    # demand, cap it and give the leftover to the other group (up to its own
+    # demand).
+    bw1 = jnp.where(raw1 > dem1, dem1, jnp.where(raw2 > dem2, jnp.minimum(budget - dem2, dem1), raw1))
+    bw2 = jnp.where(raw2 > dem2, dem2, jnp.where(raw1 > dem1, jnp.minimum(budget - dem1, dem2), raw2))
+
+    per1 = jnp.where(n1f > 0, bw1 / jnp.maximum(n1f, 1.0), 0.0)
+    per2 = jnp.where(n2f > 0, bw2 / jnp.maximum(n2f, 1.0), 0.0)
+    return per1, per2
+
+
+def analytic_two_group_scalar(n1, f1, bs1, n2, f2, bs2):
+    """Plain-Python scalar reference for ``analytic_two_group`` (tests)."""
+    ntot = n1 + n2
+    if ntot == 0:
+        return 0.0, 0.0
+    b_mix = (n1 * bs1 + n2 * bs2) / ntot
+    dem1, dem2 = n1 * f1 * bs1, n2 * f2 * bs2
+    budget = min(b_mix, dem1 + dem2)
+    w1, w2 = n1 * f1, n2 * f2
+    wsum = max(w1 + w2, 1e-12)
+    raw1, raw2 = budget * w1 / wsum, budget * w2 / wsum
+    if raw1 > dem1:
+        bw1, bw2 = dem1, min(budget - dem1, dem2)
+    elif raw2 > dem2:
+        bw2, bw1 = dem2, min(budget - dem2, dem1)
+    else:
+        bw1, bw2 = raw1, raw2
+    return (bw1 / n1 if n1 else 0.0), (bw2 / n2 if n2 else 0.0)

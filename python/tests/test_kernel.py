@@ -1,0 +1,93 @@
+"""Pallas kernel vs pure-jnp reference — the core L1 correctness signal."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.contention import TILE_B, contention_chunk
+from compile.kernels.ref import ref_chunk, ref_chunk_py
+
+
+def make_case(rng, b, n, idle_frac=0.2):
+    """Random but physically plausible configuration batch."""
+    d = rng.uniform(0.02, 0.25, size=(b, n)).astype(np.float32)
+    idle = rng.uniform(size=(b, n)) < idle_frac
+    d[idle] = 0.0
+    c = rng.uniform(1.0, 1.3, size=(b, n)).astype(np.float32)
+    l0 = rng.uniform(180.0, 280.0, size=(b, 1)).astype(np.float32)
+    win = (1.5 + d * c * l0).astype(np.float32)
+    cap = rng.uniform(0.2, 0.7, size=(b, 1)).astype(np.float32)
+    occ = np.zeros((b, n), np.float32)
+    served = np.zeros((b, n), np.float32)
+    return d, c, win, cap, occ, served
+
+
+def test_pallas_matches_jnp_reference():
+    rng = np.random.default_rng(42)
+    args = make_case(rng, TILE_B * 2, 24)
+    got_occ, got_served = contention_chunk(*args, cycles=512)
+    want_occ, want_served = ref_chunk(*args, cycles=512)
+    np.testing.assert_allclose(got_occ, want_occ, rtol=2e-5, atol=1e-5)
+    np.testing.assert_allclose(got_served, want_served, rtol=2e-5, atol=1e-4)
+
+
+def test_pallas_matches_python_loop():
+    rng = np.random.default_rng(7)
+    args = make_case(rng, TILE_B, 6)
+    got_occ, got_served = contention_chunk(*args, cycles=64)
+    want_occ, want_served = ref_chunk_py(*args, cycles=64)
+    np.testing.assert_allclose(got_occ, want_occ, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got_served, want_served, rtol=1e-4, atol=1e-3)
+
+
+def test_state_chaining_equivalent_to_single_run():
+    """Two chunks of S cycles == one chunk of 2S cycles (state carries)."""
+    rng = np.random.default_rng(3)
+    d, c, win, cap, occ, served = make_case(rng, TILE_B, 8)
+    o1, s1 = contention_chunk(d, c, win, cap, occ, served, cycles=256)
+    o1, s1 = contention_chunk(d, c, win, cap, o1, s1, cycles=256)
+    o2, s2 = contention_chunk(d, c, win, cap, occ, served, cycles=512)
+    np.testing.assert_allclose(o1, o2, rtol=2e-5, atol=1e-5)
+    np.testing.assert_allclose(s1, s2, rtol=2e-5, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=24),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    cycles=st.integers(min_value=1, max_value=256),
+)
+def test_kernel_invariants_hypothesis(n, seed, cycles):
+    """Property sweep: conservation and non-negativity for arbitrary shapes."""
+    rng = np.random.default_rng(seed)
+    d, c, win, cap, occ, served = make_case(rng, TILE_B, n)
+    occ2, served2 = contention_chunk(d, c, win, cap, occ, served, cycles=cycles)
+    occ2 = np.asarray(occ2)
+    served2 = np.asarray(served2)
+    assert (occ2 >= -1e-5).all()
+    assert (served2 >= -1e-5).all()
+    # Occupancy never exceeds the window.
+    assert (occ2 <= np.asarray(win) + 1e-4).all()
+    # Served cost per cycle cannot exceed capacity.
+    served_cost = (served2 * np.asarray(c)).sum(axis=1)
+    assert (served_cost <= np.asarray(cap)[:, 0] * cycles * (1 + 1e-5)).all()
+    # Idle cores never get bandwidth.
+    assert (served2[np.asarray(d) == 0.0] == 0.0).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_kernel_matches_reference_hypothesis(seed):
+    rng = np.random.default_rng(seed)
+    args = make_case(rng, TILE_B, int(rng.integers(2, 24)))
+    got = contention_chunk(*args, cycles=128)
+    want = ref_chunk(*args, cycles=128)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=5e-5, atol=1e-4)
+
+
+def test_batch_must_be_tile_multiple():
+    rng = np.random.default_rng(0)
+    args = make_case(rng, TILE_B + 1, 4)
+    with pytest.raises(AssertionError):
+        contention_chunk(*args, cycles=8)

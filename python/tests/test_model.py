@@ -1,0 +1,89 @@
+"""L2 model tests: physical steady states of the batched simulation and the
+batched analytic model vs its scalar reference."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.contention import BATCH, N_CORES
+
+# A BDW-1-like machine (see rust/src/config/machine.rs): 66.9 GB/s read
+# bandwidth at 2.2 GHz -> capacity in lines/cycle.
+CAP = np.float32(66.9 / 2.2 / 64.0)
+L0 = np.float32(200.0)
+D0 = np.float32(1.5)
+
+
+def config(demands, costs):
+    """Build one full-batch configuration with the first row populated."""
+    d = np.zeros((BATCH, N_CORES), np.float32)
+    c = np.ones((BATCH, N_CORES), np.float32)
+    d[0, : len(demands)] = demands
+    c[0, : len(costs)] = costs
+    win = (D0 + d * c * L0).astype(np.float32)
+    cap = np.full((BATCH, 1), CAP, np.float32)
+    return d, c, win, cap
+
+
+def test_solo_core_served_rate_equals_demand():
+    d, c, win, cap = config([0.117], [1.23])
+    served = np.asarray(model.simulate(d, c, win, cap))
+    cycles = 3 * 4096
+    rate = served[0, 0] / cycles
+    assert abs(rate - 0.117) / 0.117 < 0.01, rate
+
+
+def test_saturated_domain_serves_at_capacity():
+    d, c, win, cap = config([0.117] * 10, [1.0] * 10)
+    served = np.asarray(model.simulate(d, c, win, cap))
+    cycles = 3 * 4096
+    cost_rate = (served[0] * np.asarray(c)[0]).sum() / cycles
+    assert abs(cost_rate - CAP) / CAP < 0.02, cost_rate
+
+
+def test_share_proportional_to_window():
+    """At saturation, per-core shares follow the prefetch windows."""
+    demands = [0.15] * 5 + [0.08] * 5
+    d, c, win, cap = config(demands, [1.0] * 10)
+    served = np.asarray(model.simulate(d, c, win, cap))
+    hi = served[0, :5].mean()
+    lo = served[0, 5:10].mean()
+    want = (D0 + 0.15 * L0) / (D0 + 0.08 * L0)
+    assert abs(hi / lo - want) / want < 0.05, (hi / lo, want)
+
+
+def test_analytic_matches_scalar_reference():
+    rng = np.random.default_rng(11)
+    k = 256
+    n1 = rng.integers(1, 10, size=k).astype(np.float32)
+    n2 = rng.integers(1, 10, size=k).astype(np.float32)
+    f1 = rng.uniform(0.1, 0.9, size=k).astype(np.float32)
+    f2 = rng.uniform(0.1, 0.9, size=k).astype(np.float32)
+    bs1 = rng.uniform(30, 110, size=k).astype(np.float32)
+    bs2 = rng.uniform(30, 110, size=k).astype(np.float32)
+    per1, per2 = model.analytic_two_group(n1, f1, bs1, n2, f2, bs2)
+    for i in range(k):
+        w1, w2 = model.analytic_two_group_scalar(
+            float(n1[i]), float(f1[i]), float(bs1[i]),
+            float(n2[i]), float(f2[i]), float(bs2[i]))
+        np.testing.assert_allclose(per1[i], w1, rtol=1e-4)
+        np.testing.assert_allclose(per2[i], w2, rtol=1e-4)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    n1=st.integers(1, 16), n2=st.integers(1, 16),
+    f1=st.floats(0.05, 0.99), f2=st.floats(0.05, 0.99),
+    bs1=st.floats(20.0, 120.0), bs2=st.floats(20.0, 120.0),
+)
+def test_analytic_invariants_hypothesis(n1, n2, f1, f2, bs1, bs2):
+    per1, per2 = model.analytic_two_group_scalar(n1, f1, bs1, n2, f2, bs2)
+    # Nobody runs faster than solo.
+    assert per1 <= f1 * bs1 + 1e-9
+    assert per2 <= f2 * bs2 + 1e-9
+    # Total never exceeds the overlapped saturated bandwidth (Eq. 4).
+    b_mix = (n1 * bs1 + n2 * bs2) / (n1 + n2)
+    assert n1 * per1 + n2 * per2 <= b_mix + 1e-6
+    # Homogeneous pairing: equal per-core bandwidth.
+    pa, pb = model.analytic_two_group_scalar(n1, f1, bs1, n1, f1, bs1)
+    assert abs(pa - pb) < 1e-9

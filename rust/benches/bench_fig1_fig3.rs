@@ -1,0 +1,43 @@
+//! Bench: the Fig. 1 / Fig. 3 HPCG co-simulations — wall time and
+//! simulated-seconds-per-wall-second throughput of the desync engine.
+
+use membw::benchutil::Bench;
+use membw::config::{machine, MachineId};
+use membw::desync::{hpcg_program, CoSimConfig, CoSimEngine, HpcgVariant, NoiseModel};
+use membw::report::{fig1_report, fig3_report, ExperimentCtx};
+
+fn main() {
+    let mut b = Bench::new("fig1_fig3");
+
+    let m = machine(MachineId::Clx);
+    let cfg = CoSimConfig {
+        dt_s: 20e-6,
+        t_max_s: 600.0,
+        initial_stagger_s: 0.2e-3,
+        neighbor_radius: 3,
+        noise: NoiseModel::mild(7),
+    };
+
+    // Raw co-sim throughput: simulated seconds per wall second.
+    let prog = hpcg_program(HpcgVariant::Modified, 96, 3);
+    let eng = CoSimEngine::new(&m, prog, m.cores, cfg.clone()).unwrap();
+    b.throughput("co-sim throughput (20 ranks, CLX)", "sim-s", || eng.run().t_end_s);
+
+    // Figure regeneration.
+    let ctx = ExperimentCtx::fluid(std::path::PathBuf::from("results"));
+    let mut fig1 = String::new();
+    b.run("full Fig. 1 (BDW-2 + CLX co-sims)", 1, || {
+        fig1 = fig1_report(&ctx).expect("fig1");
+    });
+    for line in fig1.lines().filter(|l| l.contains("early-starter")) {
+        println!("{line}");
+    }
+    let mut fig3 = String::new();
+    b.run("full Fig. 3 (modified HPCG)", 1, || {
+        fig3 = fig3_report(&ctx).expect("fig3");
+    });
+    for line in fig3.lines().filter(|l| l.contains("skew =")) {
+        println!("{line}");
+    }
+    b.finish();
+}

@@ -1,0 +1,39 @@
+//! Bench: regenerate Figs. 6 (full-domain pairings) and 7 (symmetric
+//! scaling) and time the sweeps per machine.
+
+use membw::benchutil::Bench;
+use membw::config::{machine, MachineId};
+use membw::kernels::KernelId;
+use membw::report::{fig6_report, fig7_report, ExperimentCtx};
+use membw::sweep::{full_domain_splits, run_cases, MeasureEngine};
+
+fn main() {
+    let mut b = Bench::new("fig6_fig7");
+
+    // Time one full-domain pairing sweep per machine (fluid engine).
+    for mid in MachineId::ALL {
+        let m = machine(mid);
+        let cases = full_domain_splits(&m, KernelId::Dcopy, KernelId::Ddot2);
+        b.run(&format!("fig6 sweep dcopy+ddot2 [{}]", mid.key()), 3, || {
+            let _ = run_cases(&m, &cases, &MeasureEngine::Fluid).unwrap();
+        });
+    }
+
+    // Regenerate the full figures.
+    let ctx = ExperimentCtx::fluid(std::path::PathBuf::from("results"));
+    let mut fig6 = String::new();
+    b.run("full Fig. 6 (3 pairings x 4 machines)", 1, || {
+        fig6 = fig6_report(&ctx).expect("fig6");
+    });
+    let mut fig7 = String::new();
+    b.run("full Fig. 7 (3 pairings x 4 machines)", 1, || {
+        fig7 = fig7_report(&ctx).expect("fig7");
+    });
+    // Print the per-pairing summaries only (figures land in results/).
+    for line in fig6.lines().chain(fig7.lines()) {
+        if line.starts_with("FIG") || line.starts_with("===") || line.starts_with('[') {
+            println!("{line}");
+        }
+    }
+    b.finish();
+}

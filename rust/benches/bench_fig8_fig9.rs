@@ -1,0 +1,40 @@
+//! Bench: regenerate Fig. 8 (error overview) and Fig. 9 (gain/loss bars),
+//! timing the full validation sweeps. Uses the PJRT artifact when present
+//! (the hot path), falling back to the in-process fluid engine.
+
+use membw::benchutil::Bench;
+use membw::report::{fig8_report, fig9_report, ExperimentCtx};
+use membw::runtime::{ArtifactPaths, PjrtRuntime, PjrtSimExecutor};
+use membw::simulator::Engine;
+
+fn main() {
+    let mut b = Bench::new("fig8_fig9");
+
+    let pjrt = PjrtRuntime::cpu()
+        .ok()
+        .and_then(|rt| PjrtSimExecutor::load(&rt, &ArtifactPaths::default_dir()).ok());
+    let engine_name = if pjrt.is_some() { "pjrt" } else { "fluid" };
+    let ctx = ExperimentCtx {
+        out_dir: std::path::PathBuf::from("results"),
+        engine: Engine::Fluid,
+        pjrt,
+    };
+
+    let mut fig8 = String::new();
+    b.run(&format!("full Fig. 8 sweep ({engine_name})"), 1, || {
+        fig8 = fig8_report(&ctx).expect("fig8");
+    });
+    // Print the per-machine and global error summaries.
+    for line in fig8.lines() {
+        if line.starts_with('[') || line.starts_with("GLOBAL") {
+            println!("{line}");
+        }
+    }
+
+    let mut fig9 = String::new();
+    b.run(&format!("full Fig. 9 sweep ({engine_name})"), 1, || {
+        fig9 = fig9_report(&ctx).expect("fig9");
+    });
+    println!("fig9: {} bars", fig9.lines().filter(|l| l.contains(" vs ")).count());
+    b.finish();
+}

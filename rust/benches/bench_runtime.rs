@@ -1,0 +1,59 @@
+//! Bench: PJRT runtime — artifact compile time, single-batch dispatch
+//! latency, and end-to-end configuration throughput of the AOT JAX/Pallas
+//! simulator (the paper-sweep hot path).
+
+use membw::benchutil::Bench;
+use membw::config::{machine, MachineId};
+use membw::kernels::{kernel, KernelId};
+use membw::runtime::{ArtifactPaths, PjrtRuntime, PjrtSimExecutor, SimCase};
+use membw::simulator::CoreWorkload;
+
+fn main() {
+    let mut b = Bench::new("runtime");
+    let Ok(rt) = PjrtRuntime::cpu() else {
+        println!("PJRT unavailable — skipping runtime bench");
+        return;
+    };
+    println!("platform: {}", rt.platform());
+
+    let dir = ArtifactPaths::default_dir();
+    if ArtifactPaths::locate(&dir).is_err() {
+        println!("artifacts missing (run `make artifacts`) — skipping");
+        return;
+    }
+
+    let mut exec: Option<PjrtSimExecutor> = None;
+    b.run("load + compile contention_sim.hlo.txt", 3, || {
+        exec = Some(PjrtSimExecutor::load(&rt, &dir).expect("load"));
+    });
+    let exec = exec.unwrap();
+    let meta = exec.meta();
+    println!("geometry: {meta:?}");
+
+    let m = machine(MachineId::Clx);
+    let w = CoreWorkload::from_kernel(&kernel(KernelId::Stream), &m, 0);
+    let one = vec![SimCase { machine: m.clone(), workloads: vec![w; m.cores] }];
+    b.run("dispatch 1 case (padded batch)", 5, || {
+        let _ = exec.run(&one).expect("run");
+    });
+
+    let full: Vec<SimCase> = (0..meta.batch)
+        .map(|i| SimCase {
+            machine: m.clone(),
+            workloads: vec![w; 1 + i % m.cores],
+        })
+        .collect();
+    b.throughput("full batch of configurations", "configs", || {
+        let _ = exec.run(&full).expect("run");
+        meta.batch as f64
+    });
+
+    // Simulated core-cycles per wall second through the artifact.
+    let cycles = ((meta.warmup_chunks + meta.measure_chunks) * meta.chunk_cycles) as f64;
+    b.throughput("simulated core-cycles via pjrt", "core-cy", || {
+        let _ = exec.run(&full).expect("run");
+        cycles * (meta.batch * meta.n_cores) as f64
+    });
+
+    b.finish();
+}

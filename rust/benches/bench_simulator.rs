@@ -1,0 +1,54 @@
+//! Bench: raw simulator performance — the L3 perf-optimization targets.
+//!
+//! * fluid engine: core-cycles advanced per wall second,
+//! * DES: line-service events per wall second,
+//! * multigroup sharing model: evaluations per second (the desync co-sim
+//!   calls it every time step).
+
+use membw::benchutil::Bench;
+use membw::config::{machine, MachineId};
+use membw::kernels::{kernel, KernelId};
+use membw::sharing::{share_multigroup, KernelGroup};
+use membw::simulator::{
+    CoreWorkload, DesConfig, DesSimulator, FluidConfig, FluidSimulator,
+};
+
+fn main() {
+    let mut b = Bench::new("simulator");
+
+    let m = machine(MachineId::Clx);
+    let ws: Vec<CoreWorkload> = (0..m.cores)
+        .map(|i| {
+            let k = if i % 2 == 0 { KernelId::Dcopy } else { KernelId::Ddot2 };
+            CoreWorkload::from_kernel(&kernel(k), &m, i % 2)
+        })
+        .collect();
+
+    // Fluid: core-cycles/s (cycles x cores).
+    let fluid_cfg = FluidConfig { warmup_cycles: 20_000, measure_cycles: 60_000 };
+    let total_cycles = (fluid_cfg.warmup_cycles + fluid_cfg.measure_cycles) as f64;
+    let sim = FluidSimulator::new(&m, fluid_cfg.clone());
+    b.throughput("fluid core-cycles (20 cores, CLX)", "core-cy", || {
+        sim.run(&ws);
+        total_cycles * m.cores as f64
+    });
+
+    // DES: events/s.
+    let des = DesSimulator::new(&m, DesConfig::default());
+    b.throughput("DES line events (20 cores, CLX)", "events", || des.run(&ws).events as f64);
+
+    // Sharing model evaluations.
+    let groups: Vec<KernelGroup> = (0..4)
+        .map(|i| KernelGroup { n: 3 + i, f: 0.15 + 0.05 * i as f64, bs_gbs: 60.0 + i as f64 })
+        .collect();
+    b.throughput("multigroup model evals", "evals", || {
+        let mut acc = 0.0;
+        for _ in 0..1_000_000 {
+            acc += share_multigroup(&groups).b_mix_gbs;
+        }
+        assert!(acc > 0.0);
+        1_000_000.0
+    });
+
+    b.finish();
+}

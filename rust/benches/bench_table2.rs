@@ -1,0 +1,31 @@
+//! Bench: regenerate Table II (kernel characterization) and time the
+//! characterization pipeline per engine.
+
+use membw::benchutil::Bench;
+use membw::config::{machine, MachineId};
+use membw::kernels::all_kernels;
+use membw::report::{table2_report, ExperimentCtx};
+use membw::simulator::{measure_f_bs, Engine};
+
+fn main() {
+    let mut b = Bench::new("table2");
+
+    // Time a single-kernel characterization per engine.
+    let m = machine(MachineId::Bdw1);
+    let (_, stream) = all_kernels().into_iter().find(|(_, k)| k.name == "STREAM").unwrap();
+    b.run("characterize STREAM/bdw1 (fluid)", 5, || {
+        let _ = measure_f_bs(&stream, &m, Engine::Fluid);
+    });
+    b.run("characterize STREAM/bdw1 (des)", 3, || {
+        let _ = measure_f_bs(&stream, &m, Engine::Des);
+    });
+
+    // Full Table II regeneration (all 15 kernels x 4 machines).
+    let ctx = ExperimentCtx::fluid(std::path::PathBuf::from("results"));
+    let mut table = String::new();
+    b.run("full Table II (fluid)", 1, || {
+        table = table2_report(&ctx).expect("table2");
+    });
+    println!("\n{table}");
+    b.finish();
+}

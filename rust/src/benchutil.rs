@@ -1,0 +1,105 @@
+//! Minimal benchmarking harness (the offline build has no criterion).
+//!
+//! Usage in a `[[bench]]` target with `harness = false`:
+//!
+//! ```ignore
+//! let mut b = membw::benchutil::Bench::new("fig8");
+//! b.run("fluid sweep bdw1", 10, || { ... });
+//! b.finish();
+//! ```
+
+use std::time::Instant;
+
+/// One bench suite; prints criterion-style lines and a summary.
+pub struct Bench {
+    suite: String,
+    results: Vec<(String, f64, f64, f64)>, // (name, med, mean, min) in seconds
+}
+
+impl Bench {
+    /// Start a suite.
+    pub fn new(suite: &str) -> Self {
+        println!("== bench suite: {suite} ==");
+        Bench { suite: suite.to_string(), results: vec![] }
+    }
+
+    /// Run `f` `iters` times (plus one warm-up) and record statistics.
+    pub fn run<F: FnMut()>(&mut self, name: &str, iters: usize, mut f: F) {
+        f(); // warm-up
+        let mut times: Vec<f64> = (0..iters.max(1))
+            .map(|_| {
+                let t0 = Instant::now();
+                f();
+                t0.elapsed().as_secs_f64()
+            })
+            .collect();
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = times[times.len() / 2];
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let min = times[0];
+        println!(
+            "{:-40} med {:>12} mean {:>12} min {:>12}  ({} iters)",
+            name,
+            fmt_time(med),
+            fmt_time(mean),
+            fmt_time(min),
+            iters
+        );
+        self.results.push((name.to_string(), med, mean, min));
+    }
+
+    /// Run once and report a throughput in the given unit.
+    pub fn throughput<F: FnOnce() -> f64>(&mut self, name: &str, unit: &str, f: F) {
+        let t0 = Instant::now();
+        let units = f();
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{:-40} {:>12.3e} {unit}/s  ({:.3}s wall, {:.3e} {unit})",
+            name,
+            units / dt,
+            dt,
+            units
+        );
+        self.results.push((name.to_string(), dt, dt, dt));
+    }
+
+    /// Print the summary footer.
+    pub fn finish(self) {
+        println!("== {} done: {} benches ==", self.suite, self.results.len());
+    }
+}
+
+/// Human-readable duration.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(2.5).ends_with(" s"));
+        assert!(fmt_time(2.5e-3).ends_with(" ms"));
+        assert!(fmt_time(2.5e-6).ends_with(" µs"));
+        assert!(fmt_time(2.5e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut b = Bench::new("selftest");
+        let mut count = 0usize;
+        b.run("noop", 3, || count += 1);
+        assert_eq!(count, 4); // 3 + warm-up
+        b.finish();
+    }
+}

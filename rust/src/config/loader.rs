@@ -1,0 +1,203 @@
+//! Machine-config (de)serialization in a TOML subset.
+//!
+//! Built-in machines cover the paper's Table I; this loader lets users add
+//! further architectures (the paper's outlook mentions Power and Arm) or
+//! override calibration parameters without recompiling. The build is fully
+//! offline (no external TOML crate), so we parse a well-defined subset:
+//! `key = value` lines, one optional `[queue]` section, `#` comments,
+//! bare strings in double quotes, numbers, and the enum keywords used by
+//! [`Machine`].
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::config::machine::{LlcKind, Machine, MachineId, OverlapKind, QueueParams};
+use crate::error::{Error, Result};
+
+/// Serialize a machine description to TOML text (round-trips through
+/// [`load_machine_toml`]).
+pub fn machine_to_toml(m: &Machine) -> String {
+    let llc = match m.llc {
+        LlcKind::Inclusive => "inclusive",
+        LlcKind::Victim => "victim",
+    };
+    let overlap = match m.overlap {
+        OverlapKind::NonOverlapping => "non-overlapping",
+        OverlapKind::Overlapping => "overlapping",
+    };
+    format!(
+        "# Machine model (paper Table I row + simulator calibration)\n\
+         id = \"{}\"\n\
+         name = \"{}\"\n\
+         microarch = \"{}\"\n\
+         cores = {}\n\
+         freq_ghz = {}\n\
+         simd_bytes = {}\n\
+         ld_per_cy = {}\n\
+         st_per_cy = {}\n\
+         l1l2_bpc = {}\n\
+         l2l3_bpc = {}\n\
+         llc = \"{}\"\n\
+         overlap = \"{}\"\n\
+         theor_bw_gbs = {}\n\
+         read_bw_gbs = {}\n\
+         stream_penalty = {}\n\
+         latency_residue_cy = {}\n\
+         residue_on_all_lines = {}\n\
+         \n[queue]\n\
+         base_latency_cy = {}\n\
+         depth_floor = {}\n\
+         depth_beta = {}\n\
+         latency_penalty = {}\n\
+         write_penalty = {}\n",
+        m.id.key(),
+        m.name,
+        m.microarch,
+        m.cores,
+        m.freq_ghz,
+        m.simd_bytes,
+        m.ld_per_cy,
+        m.st_per_cy,
+        m.l1l2_bpc,
+        m.l2l3_bpc,
+        llc,
+        overlap,
+        m.theor_bw_gbs,
+        m.read_bw_gbs,
+        m.stream_penalty,
+        m.latency_residue_cy,
+        m.residue_on_all_lines,
+        m.queue.base_latency_cy,
+        m.queue.depth_floor,
+        m.queue.depth_beta,
+        m.queue.latency_penalty,
+        m.queue.write_penalty,
+    )
+}
+
+/// Parse `key = value` lines into (section, key) -> raw value.
+fn parse_kv(text: &str) -> HashMap<(String, String), String> {
+    let mut map = HashMap::new();
+    let mut section = String::new();
+    for raw in text.lines() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') && line.ends_with(']') {
+            section = line[1..line.len() - 1].trim().to_string();
+            continue;
+        }
+        if let Some((k, v)) = line.split_once('=') {
+            let v = v.trim().trim_matches('"').to_string();
+            map.insert((section.clone(), k.trim().to_string()), v);
+        }
+    }
+    map
+}
+
+/// Load a machine description from a TOML file (see [`machine_to_toml`] for
+/// the schema; `configs/machines/*.toml` contains generated examples).
+pub fn load_machine_toml(path: &Path) -> Result<Machine> {
+    let text = std::fs::read_to_string(path)?;
+    let map = parse_kv(&text);
+    let err = |msg: String| Error::Config { path: path.display().to_string(), msg };
+    let get = |section: &str, key: &str| -> Result<String> {
+        map.get(&(section.to_string(), key.to_string()))
+            .cloned()
+            .ok_or_else(|| err(format!("missing key '{key}'")))
+    };
+    let get_f = |section: &str, key: &str| -> Result<f64> {
+        get(section, key)?
+            .parse::<f64>()
+            .map_err(|e| err(format!("bad number for '{key}': {e}")))
+    };
+    let get_u = |section: &str, key: &str| -> Result<usize> {
+        get(section, key)?
+            .parse::<usize>()
+            .map_err(|e| err(format!("bad integer for '{key}': {e}")))
+    };
+
+    let llc = match get("", "llc")?.as_str() {
+        "inclusive" => LlcKind::Inclusive,
+        "victim" => LlcKind::Victim,
+        other => return Err(err(format!("bad llc kind '{other}'"))),
+    };
+    let overlap = match get("", "overlap")?.as_str() {
+        "non-overlapping" => OverlapKind::NonOverlapping,
+        "overlapping" => OverlapKind::Overlapping,
+        other => return Err(err(format!("bad overlap kind '{other}'"))),
+    };
+    Ok(Machine {
+        id: MachineId::parse(&get("", "id")?)?,
+        name: get("", "name")?,
+        microarch: get("", "microarch")?,
+        cores: get_u("", "cores")?,
+        freq_ghz: get_f("", "freq_ghz")?,
+        simd_bytes: get_u("", "simd_bytes")?,
+        ld_per_cy: get_f("", "ld_per_cy")?,
+        st_per_cy: get_f("", "st_per_cy")?,
+        l1l2_bpc: get_f("", "l1l2_bpc")?,
+        l2l3_bpc: get_f("", "l2l3_bpc")?,
+        llc,
+        overlap,
+        theor_bw_gbs: get_f("", "theor_bw_gbs")?,
+        read_bw_gbs: get_f("", "read_bw_gbs")?,
+        stream_penalty: get_f("", "stream_penalty")?,
+        latency_residue_cy: get_f("", "latency_residue_cy")?,
+        residue_on_all_lines: get("", "residue_on_all_lines")? == "true",
+        queue: QueueParams {
+            base_latency_cy: get_f("queue", "base_latency_cy")?,
+            depth_floor: get_f("queue", "depth_floor")?,
+            depth_beta: get_f("queue", "depth_beta")?,
+            latency_penalty: get_f("queue", "latency_penalty")?,
+            write_penalty: get_f("queue", "write_penalty")?,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::builtin_machines;
+
+    #[test]
+    fn toml_roundtrip_all_builtin() {
+        let dir = std::env::temp_dir().join("membw-toml-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        for m in builtin_machines() {
+            let text = machine_to_toml(&m);
+            let path = dir.join(format!("{}.toml", m.id.key()));
+            std::fs::write(&path, &text).unwrap();
+            let back = load_machine_toml(&path).unwrap();
+            assert_eq!(back.id, m.id);
+            assert_eq!(back.cores, m.cores);
+            assert_eq!(back.llc, m.llc);
+            assert_eq!(back.overlap, m.overlap);
+            assert!((back.read_bw_gbs - m.read_bw_gbs).abs() < 1e-12);
+            assert!((back.queue.write_penalty - m.queue.write_penalty).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn comments_and_whitespace_tolerated() {
+        let dir = std::env::temp_dir().join("membw-toml-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("commented.toml");
+        let mut text = machine_to_toml(&builtin_machines()[0]);
+        text.push_str("\n# trailing comment\n\n");
+        std::fs::write(&path, text.replace("cores = 10", "cores = 10   # ten cores")).unwrap();
+        let m = load_machine_toml(&path).unwrap();
+        assert_eq!(m.cores, 10);
+    }
+
+    #[test]
+    fn missing_key_reports_path() {
+        let dir = std::env::temp_dir().join("membw-toml-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("broken.toml");
+        std::fs::write(&path, "cores = 10\n").unwrap();
+        let e = load_machine_toml(&path).unwrap_err();
+        assert!(e.to_string().contains("broken.toml"));
+    }
+}

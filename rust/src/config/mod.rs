@@ -1,0 +1,15 @@
+//! Machine and experiment configuration — the paper's Table I as data.
+//!
+//! The four validation machines (BDW-1, BDW-2, CLX, Rome) are built in;
+//! additional machines can be loaded from TOML files (see
+//! [`loader::load_machine_toml`]), which is how the paper's outlook
+//! ("validation on Power- or Arm-based CPUs") is supported without code
+//! changes.
+
+mod loader;
+mod machine;
+
+pub use loader::{load_machine_toml, machine_to_toml};
+pub use machine::{
+    LlcKind, Machine, MachineId, OverlapKind, QueueParams, builtin_machines, machine,
+};

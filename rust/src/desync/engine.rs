@@ -1,0 +1,388 @@
+//! The time-stepped co-simulation engine.
+//!
+//! At every step, ranks currently inside loop kernels are grouped by kernel
+//! and the multigroup sharing model (generalized Eqs. 4+5) assigns each
+//! group its per-core bandwidth; everything else (collectives, halo waits,
+//! noise idling) is bookkeeping. This is the paper's "MPI simulation
+//! technique that can take node-level bottlenecks into account" (Sect. VI).
+
+use std::collections::HashMap;
+
+use crate::config::Machine;
+use crate::desync::noise::{NoiseModel, NoiseStream};
+use crate::desync::program::{Phase, Program, SyncKind};
+use crate::desync::trace::{PhaseRecord, TraceLog};
+use crate::ecm;
+use crate::error::{Error, Result};
+use crate::kernels::{kernel, KernelId};
+use crate::sharing::{share_multigroup, KernelGroup};
+
+/// Co-simulation configuration.
+#[derive(Debug, Clone)]
+pub struct CoSimConfig {
+    /// Time step, seconds. Kernel durations are resolved to ~dt accuracy.
+    pub dt_s: f64,
+    /// Hard wall on simulated time.
+    pub t_max_s: f64,
+    /// Initial per-rank start stagger, seconds (rank r starts at r*stagger;
+    /// 0 = lockstep start).
+    pub initial_stagger_s: f64,
+    /// Halo radius of the `SyncKind::Neighbors` dependency: how many ranks
+    /// on each side must have completed the previous phase. 1 models a 1D
+    /// chain; HPCG's 3D decomposition couples more broadly (default 3).
+    pub neighbor_radius: usize,
+    /// Noise model.
+    pub noise: NoiseModel,
+}
+
+impl Default for CoSimConfig {
+    fn default() -> Self {
+        CoSimConfig {
+            dt_s: 20e-6,
+            t_max_s: 120.0,
+            initial_stagger_s: 0.0,
+            neighbor_radius: 3,
+            noise: NoiseModel::off(),
+        }
+    }
+}
+
+/// Result of a co-simulation.
+#[derive(Debug, Clone)]
+pub struct CoSimResult {
+    /// Full phase trace.
+    pub trace: TraceLog,
+    /// Per-rank completion time, seconds.
+    pub finish_s: Vec<f64>,
+    /// Simulated time at which the run ended.
+    pub t_end_s: f64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum RankState {
+    /// Waiting for its staggered start.
+    NotStarted,
+    /// Between phases; next phase is `flat` (sync not yet satisfied).
+    Ready { flat: usize },
+    /// Running a kernel phase.
+    Running { flat: usize, kernel: KernelId, remaining: f64, started: f64 },
+    /// Arrived at a collective, waiting for the others.
+    Collective { flat: usize, arrived: f64 },
+    /// Idling until `until` (explicit Idle phase or noise).
+    Idling { flat: Option<usize>, until: f64, resume: Box<RankState>, started: f64 },
+    /// Program complete.
+    Done,
+}
+
+/// The engine.
+pub struct CoSimEngine<'a> {
+    /// Machine the ranks run on (kept for diagnostics / future extensions).
+    pub machine: &'a Machine,
+    program: Program,
+    n_ranks: usize,
+    config: CoSimConfig,
+    /// Pre-computed (f, b_s) per kernel (ECM route — the co-sim is the
+    /// *application* of the analytic model, not its validation).
+    chars: HashMap<KernelId, (f64, f64)>,
+}
+
+impl<'a> CoSimEngine<'a> {
+    /// Build an engine for `n_ranks` ranks of `program` on `machine`.
+    pub fn new(machine: &'a Machine, program: Program, n_ranks: usize, config: CoSimConfig) -> Result<Self> {
+        if n_ranks == 0 || n_ranks > machine.cores {
+            return Err(Error::InvalidPlan(format!(
+                "{n_ranks} ranks on a {}-core domain",
+                machine.cores
+            )));
+        }
+        let mut chars = HashMap::new();
+        for phase in &program.phases {
+            if let Phase::Kernel { kernel: k, .. } = phase {
+                let p = ecm::predict(&kernel(*k), machine);
+                chars.insert(*k, (p.f, p.bs_gbs));
+            }
+        }
+        Ok(CoSimEngine { machine, program, n_ranks, config, chars })
+    }
+
+    /// Run the co-simulation.
+    pub fn run(&self) -> CoSimResult {
+        let n = self.n_ranks;
+        let dt = self.config.dt_s;
+        let mut t = 0.0f64;
+        let mut states: Vec<RankState> = (0..n).map(|_| RankState::NotStarted).collect();
+        let mut completed_upto: Vec<i64> = vec![-1; n]; // last completed flat index
+        let mut trace = TraceLog::default();
+        let mut finish = vec![f64::NAN; n];
+        let mut noise: Vec<NoiseStream> = (0..n).map(|r| self.config.noise.stream(r)).collect();
+        // Collective instance -> (ranks arrived, all-arrived time).
+        let mut collectives: HashMap<usize, (usize, f64)> = HashMap::new();
+        // Memoized sharing-model evaluations by group composition.
+        let mut share_cache: HashMap<Vec<(KernelId, usize)>, HashMap<KernelId, f64>> = HashMap::new();
+
+        let total = self.program.total_phases();
+        while t < self.config.t_max_s && states.iter().any(|s| *s != RankState::Done) {
+            // 1. Start transitions.
+            for r in 0..n {
+                loop {
+                    match states[r].clone() {
+                        RankState::NotStarted => {
+                            if t >= r as f64 * self.config.initial_stagger_s {
+                                states[r] = RankState::Ready { flat: 0 };
+                            } else {
+                                break;
+                            }
+                        }
+                        RankState::Ready { flat } => {
+                            if flat >= total {
+                                states[r] = RankState::Done;
+                                finish[r] = t;
+                                break;
+                            }
+                            match self.program.phase(flat).unwrap().clone() {
+                                Phase::Kernel { kernel: k, volume_bytes, sync, .. } => {
+                                    if self.sync_ok(sync, r, flat, &completed_upto) {
+                                        states[r] = RankState::Running {
+                                            flat,
+                                            kernel: k,
+                                            remaining: volume_bytes,
+                                            started: t,
+                                        };
+                                    }
+                                    break;
+                                }
+                                Phase::Allreduce { .. } => {
+                                    let e = collectives.entry(flat).or_insert((0, f64::NAN));
+                                    e.0 += 1;
+                                    if e.0 == n {
+                                        e.1 = t; // all arrived
+                                    }
+                                    states[r] = RankState::Collective { flat, arrived: t };
+                                    break;
+                                }
+                                Phase::Idle { duration_s, .. } => {
+                                    states[r] = RankState::Idling {
+                                        flat: Some(flat),
+                                        until: t + duration_s,
+                                        resume: Box::new(RankState::Ready { flat: flat + 1 }),
+                                        started: t,
+                                    };
+                                    break;
+                                }
+                            }
+                        }
+                        _ => break,
+                    }
+                }
+            }
+
+            // 2. Bandwidth sharing among running kernel ranks. The group
+            // composition changes only at phase boundaries (rarely relative
+            // to dt), so evaluations are memoized by composition.
+            let mut composition: Vec<(KernelId, usize)> = Vec::new();
+            for s in &states {
+                if let RankState::Running { kernel: k, .. } = s {
+                    match composition.iter_mut().find(|(kk, _)| kk == k) {
+                        Some((_, cnt)) => *cnt += 1,
+                        None => composition.push((*k, 1)),
+                    }
+                }
+            }
+            composition.sort_by_key(|(k, _)| k.key());
+            let per_core: &HashMap<KernelId, f64> =
+                share_cache.entry(composition.clone()).or_insert_with(|| {
+                    let groups: Vec<KernelGroup> = composition
+                        .iter()
+                        .map(|(k, n)| {
+                            let (f, bs) = self.chars[k];
+                            KernelGroup { n: *n, f, bs_gbs: bs }
+                        })
+                        .collect();
+                    let share = share_multigroup(&groups);
+                    composition
+                        .iter()
+                        .zip(&share.groups)
+                        .map(|((k, _), e)| (*k, e.per_core_gbs * 1e9)) // bytes/s
+                        .collect()
+                });
+
+            // 3. Advance.
+            for r in 0..n {
+                match states[r].clone() {
+                    RankState::Running { flat, kernel: k, mut remaining, started } => {
+                        // Noise can preempt the kernel.
+                        if let Some(dur) = noise[r].poll(t, dt) {
+                            states[r] = RankState::Idling {
+                                flat: None,
+                                until: t + dur,
+                                resume: Box::new(RankState::Running { flat, kernel: k, remaining, started }),
+                                started: t,
+                            };
+                            continue;
+                        }
+                        remaining -= per_core[&k] * dt;
+                        if remaining <= 0.0 {
+                            let phase = self.program.phase(flat).unwrap();
+                            trace.records.push(PhaseRecord {
+                                rank: r,
+                                iteration: flat / self.program.phases.len(),
+                                label: phase.label(),
+                                t_start: started,
+                                t_end: t + dt,
+                            });
+                            completed_upto[r] = flat as i64;
+                            states[r] = RankState::Ready { flat: flat + 1 };
+                        } else {
+                            states[r] = RankState::Running { flat, kernel: k, remaining, started };
+                        }
+                    }
+                    RankState::Collective { flat, arrived } => {
+                        let (count, all_at) = collectives[&flat];
+                        if count == n && !all_at.is_nan() {
+                            let cost = match self.program.phase(flat).unwrap() {
+                                Phase::Allreduce { cost_s, .. } => *cost_s,
+                                _ => 0.0,
+                            };
+                            if t >= all_at + cost {
+                                let phase = self.program.phase(flat).unwrap();
+                                trace.records.push(PhaseRecord {
+                                    rank: r,
+                                    iteration: flat / self.program.phases.len(),
+                                    label: phase.label(),
+                                    t_start: arrived,
+                                    t_end: t,
+                                });
+                                completed_upto[r] = flat as i64;
+                                states[r] = RankState::Ready { flat: flat + 1 };
+                            }
+                        }
+                    }
+                    RankState::Idling { flat, until, resume, started } => {
+                        if t >= until {
+                            if let Some(fl) = flat {
+                                let phase = self.program.phase(fl).unwrap();
+                                trace.records.push(PhaseRecord {
+                                    rank: r,
+                                    iteration: fl / self.program.phases.len(),
+                                    label: phase.label(),
+                                    t_start: started,
+                                    t_end: t,
+                                });
+                                completed_upto[r] = fl as i64;
+                            }
+                            states[r] = *resume;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+
+            t += dt;
+        }
+
+        CoSimResult { trace, finish_s: finish, t_end_s: t }
+    }
+
+    /// Is the sync precondition of phase `flat` satisfied for rank `r`?
+    fn sync_ok(&self, sync: SyncKind, r: usize, flat: usize, completed: &[i64]) -> bool {
+        match sync {
+            SyncKind::None => true,
+            SyncKind::Global => true, // handled by the collective machinery
+            SyncKind::Neighbors => {
+                if flat == 0 {
+                    return true;
+                }
+                let n = self.n_ranks;
+                let prev = flat as i64 - 1;
+                let radius = self.config.neighbor_radius.min(n / 2);
+                (1..=radius).all(|k| {
+                    completed[(r + n - k) % n] >= prev && completed[(r + k) % n] >= prev
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{machine, MachineId};
+    use crate::desync::program::{hpcg_program, HpcgVariant};
+
+    fn small_config() -> CoSimConfig {
+        CoSimConfig { dt_s: 50e-6, t_max_s: 600.0, ..Default::default() }
+    }
+
+    #[test]
+    fn all_ranks_complete_without_noise() {
+        let m = machine(MachineId::Rome);
+        let prog = hpcg_program(HpcgVariant::Plain, 48, 2);
+        let eng = CoSimEngine::new(&m, prog, 4, small_config()).unwrap();
+        let r = eng.run();
+        assert!(r.finish_s.iter().all(|f| f.is_finite()), "finish: {:?}", r.finish_s);
+        // Lockstep start, no noise: ranks stay synchronized through the
+        // collectives — finish times must be (nearly) identical.
+        let min = r.finish_s.iter().cloned().fold(f64::MAX, f64::min);
+        let max = r.finish_s.iter().cloned().fold(0.0, f64::max);
+        assert!((max - min) / max < 0.02, "spread {}", max - min);
+    }
+
+    #[test]
+    fn allreduce_resynchronizes_staggered_start() {
+        let m = machine(MachineId::Bdw1);
+        let prog = hpcg_program(HpcgVariant::Plain, 48, 2);
+        let mut cfg = small_config();
+        cfg.initial_stagger_s = 5e-3;
+        let eng = CoSimEngine::new(&m, prog, 6, cfg).unwrap();
+        let r = eng.run();
+        // After the first Allreduce, all ranks leave at the same time.
+        let recs = r.trace.of("Allreduce#1", Some(0));
+        assert_eq!(recs.len(), 6);
+        let ends: Vec<f64> = recs.iter().map(|x| x.t_end).collect();
+        let spread = ends.iter().cloned().fold(0.0, f64::max) - ends.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(spread < 1e-3, "collective exit spread {spread}");
+    }
+
+    #[test]
+    fn trace_contains_all_phases_per_rank() {
+        let m = machine(MachineId::Clx);
+        let prog = hpcg_program(HpcgVariant::Modified, 32, 1);
+        let phases = prog.phases.len();
+        let eng = CoSimEngine::new(&m, prog, 5, small_config()).unwrap();
+        let r = eng.run();
+        assert_eq!(r.trace.records.len(), phases * 5);
+    }
+
+    /// The Fig. 3 headline: skewness signs of the DDOT distributions.
+    /// DDOT2#1 (tail overlaps halo waits) resynchronizes; DDOT2#2 and
+    /// DDOT1 (followed by higher-f DAXPY/WAXPBY) desynchronize.
+    #[test]
+    fn fig3_skewness_signs() {
+        use crate::desync::noise::NoiseModel;
+        let m = machine(MachineId::Clx);
+        let prog = hpcg_program(HpcgVariant::Modified, 96, 3);
+        let cfg = CoSimConfig {
+            dt_s: 20e-6,
+            t_max_s: 600.0,
+            initial_stagger_s: 0.2e-3,
+            neighbor_radius: 3,
+            noise: NoiseModel::mild(7),
+        };
+        let eng = CoSimEngine::new(&m, prog, 20, cfg).unwrap();
+        let r = eng.run();
+        let skew = |label: &str| {
+            let d = r.trace.durations_by_rank(label, 1, 20);
+            crate::stats::skewness_dimensioned(&d)
+        };
+        assert!(skew("DDOT2#1") < 0.0, "DDOT2#1 must resynchronize");
+        assert!(skew("DDOT2#2") > 0.0, "DDOT2#2 must desynchronize");
+        assert!(skew("DDOT1") > 0.0, "DDOT1 must desynchronize");
+    }
+
+    #[test]
+    fn rejects_too_many_ranks() {
+        let m = machine(MachineId::Rome);
+        let prog = hpcg_program(HpcgVariant::Plain, 16, 1);
+        assert!(CoSimEngine::new(&m, prog, 9, small_config()).is_err());
+    }
+}

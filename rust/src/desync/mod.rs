@@ -1,0 +1,27 @@
+//! Rank-level co-simulation of barrier-free bulk-synchronous MPI programs
+//! on one memory contention domain — the paper's motivating HPCG scenario
+//! (Sect. I-A, Figs. 1 and 3) and its proposed application ("a new kind of
+//! MPI simulation technique that can take node-level bottlenecks into
+//! account", Sect. VI).
+//!
+//! Each MPI rank executes a *phase program* (loop kernels with data volumes,
+//! collectives, point-to-point halo waits, idle noise). At every time step
+//! the ranks concurrently inside loop kernels are grouped by kernel and the
+//! multigroup sharing model (generalized Eqs. 4+5) assigns each rank its
+//! instantaneous bandwidth; kernel progress is the integral of that
+//! bandwidth over its data volume.
+//!
+//! * [`program`] — phase programs and the HPCG program builder,
+//! * [`engine`] — the time-stepped co-simulation engine,
+//! * [`trace`] — phase traces, concurrency timelines, ASCII rendering,
+//! * [`noise`] — reproducible system-noise injection.
+
+mod engine;
+mod noise;
+mod program;
+mod trace;
+
+pub use engine::{CoSimConfig, CoSimEngine, CoSimResult};
+pub use noise::NoiseModel;
+pub use program::{hpcg_program, HpcgVariant, Phase, Program, SyncKind};
+pub use trace::{ConcurrencyPoint, PhaseRecord, TraceLog};

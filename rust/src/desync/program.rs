@@ -1,0 +1,201 @@
+//! Phase programs: what each MPI rank executes.
+
+use crate::kernels::KernelId;
+
+/// Synchronization semantics attached to a phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncKind {
+    /// No synchronization: start as soon as the previous phase ends.
+    None,
+    /// Nonblocking point-to-point halo dependency (SpMV/SymGS): the phase
+    /// cannot *start* before both neighbor ranks have finished their
+    /// previous phase (periodic neighbor topology).
+    Neighbors,
+    /// Global collective (MPI_Allreduce): the phase completes only after
+    /// every rank has reached it.
+    Global,
+}
+
+/// One phase of the program.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Phase {
+    /// A memory-bound loop kernel moving `volume_bytes` over the memory
+    /// interface per rank.
+    Kernel {
+        /// Which Table II kernel characterizes the traffic.
+        kernel: KernelId,
+        /// Memory data volume per rank, bytes.
+        volume_bytes: f64,
+        /// Synchronization before the kernel may start.
+        sync: SyncKind,
+        /// Label used in traces ("DDOT2#1", "SymGS-pre", ...).
+        label: &'static str,
+    },
+    /// A global collective with the given base cost (seconds).
+    Allreduce {
+        /// Time the collective itself takes once all ranks arrived.
+        cost_s: f64,
+        /// Trace label.
+        label: &'static str,
+    },
+    /// Idle time (explicitly injected delay, distinct from noise).
+    Idle {
+        /// Duration in seconds.
+        duration_s: f64,
+        /// Trace label.
+        label: &'static str,
+    },
+}
+
+impl Phase {
+    /// Trace label of the phase.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Phase::Kernel { label, .. } => label,
+            Phase::Allreduce { label, .. } => label,
+            Phase::Idle { label, .. } => label,
+        }
+    }
+}
+
+/// A rank's program: a phase list executed `iterations` times.
+#[derive(Debug, Clone)]
+pub struct Program {
+    /// Phases of one iteration.
+    pub phases: Vec<Phase>,
+    /// Number of iterations.
+    pub iterations: usize,
+}
+
+impl Program {
+    /// Total number of phase instances.
+    pub fn total_phases(&self) -> usize {
+        self.phases.len() * self.iterations
+    }
+
+    /// Phase for a given flat index.
+    pub fn phase(&self, flat: usize) -> Option<&Phase> {
+        if flat >= self.total_phases() {
+            None
+        } else {
+            Some(&self.phases[flat % self.phases.len()])
+        }
+    }
+}
+
+/// Which HPCG variant to build (Sect. I-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HpcgVariant {
+    /// Plain HPCG: DDOTs are followed by MPI_Allreduce (Fig. 1).
+    Plain,
+    /// Modified HPCG: all reductions removed, desynchronized states
+    /// survive (Fig. 3).
+    Modified,
+}
+
+/// Build a simplified HPCG iteration at problem size `nx`³ per rank.
+///
+/// Sparse kernels are mapped onto Table II streaming proxies with matching
+/// traffic character (documented substitution, DESIGN.md §2): the paper
+/// itself shows only `f` and `b_s` matter for bandwidth sharing.
+///
+/// Phase structure (one CG iteration, condensed to the Fig. 3 sandwich
+/// order): SymGS (halo) → **DDOT2#1** [→ Allreduce] → SpMV (halo) →
+/// **DDOT2#2** [→ Allreduce] → DAXPY#1 → DAXPY#2 → **DDOT1**
+/// [→ Allreduce] → WAXPBY → next iteration.
+///
+/// * DDOT2#1 sits between SymGS and SpMV: its stragglers overlap the halo
+///   *wait* of early SpMV entrants → resynchronization (Fig. 3a, negative
+///   skew).
+/// * DDOT2#2 is followed by DAXPY (higher f) → desync amplification
+///   (Fig. 3b, positive skew); DDOT1 by WAXPBY likewise.
+///
+/// The SymGS volume is ~20x the DDOT2 volume, matching the runtime ratio
+/// reported for Fig. 1.
+pub fn hpcg_program(variant: HpcgVariant, nx: usize, iterations: usize) -> Program {
+    let n = (nx * nx * nx) as f64; // grid points per rank
+    let vec_bytes = n * 8.0;
+
+    // DDOT2 reads two vectors.
+    let ddot2 = 2.0 * vec_bytes;
+    // DDOT1 reads one vector.
+    let ddot1 = vec_bytes;
+    // DAXPY: 2 reads + 1 write-allocate-free write (in-place) ≈ 3 streams.
+    let daxpy = 3.0 * vec_bytes;
+    // WAXPBY: 4 streams.
+    let waxpby = 4.0 * vec_bytes;
+    // 27-point CRS SpMV: values+cols (12 B/nnz) + vectors ≈ 27*12+3*8 B/row.
+    let spmv = n * (27.0 * 12.0 + 24.0);
+    // SymGS fwd+bwd sweep over the same matrix: ~2x SpMV traffic (the
+    // "~20x DDOT2 runtime" of Sect. I-A comes out of this volume).
+    let symgs = 2.0 * spmv;
+
+    let mut phases = vec![
+        Phase::Kernel { kernel: KernelId::Schoenauer, volume_bytes: symgs, sync: SyncKind::Neighbors, label: "SymGS" },
+        Phase::Kernel { kernel: KernelId::Ddot2, volume_bytes: ddot2, sync: SyncKind::None, label: "DDOT2#1" },
+    ];
+    if variant == HpcgVariant::Plain {
+        phases.push(Phase::Allreduce { cost_s: 15e-6, label: "Allreduce#1" });
+    }
+    phases.extend([
+        Phase::Kernel { kernel: KernelId::Add, volume_bytes: spmv, sync: SyncKind::Neighbors, label: "SpMV" },
+        Phase::Kernel { kernel: KernelId::Ddot2, volume_bytes: ddot2, sync: SyncKind::None, label: "DDOT2#2" },
+    ]);
+    if variant == HpcgVariant::Plain {
+        phases.push(Phase::Allreduce { cost_s: 15e-6, label: "Allreduce#2" });
+    }
+    phases.extend([
+        Phase::Kernel { kernel: KernelId::Daxpy, volume_bytes: daxpy, sync: SyncKind::None, label: "DAXPY#1" },
+        Phase::Kernel { kernel: KernelId::Daxpy, volume_bytes: daxpy, sync: SyncKind::None, label: "DAXPY#2" },
+        Phase::Kernel { kernel: KernelId::Ddot1, volume_bytes: ddot1, sync: SyncKind::None, label: "DDOT1" },
+    ]);
+    if variant == HpcgVariant::Plain {
+        phases.push(Phase::Allreduce { cost_s: 15e-6, label: "Allreduce#3" });
+    }
+    phases.push(Phase::Kernel { kernel: KernelId::Waxpby, volume_bytes: waxpby, sync: SyncKind::None, label: "WAXPBY" });
+
+    Program { phases, iterations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_has_allreduces_modified_does_not() {
+        let plain = hpcg_program(HpcgVariant::Plain, 32, 2);
+        let modified = hpcg_program(HpcgVariant::Modified, 32, 2);
+        let count = |p: &Program| {
+            p.phases.iter().filter(|ph| matches!(ph, Phase::Allreduce { .. })).count()
+        };
+        assert_eq!(count(&plain), 3);
+        assert_eq!(count(&modified), 0);
+    }
+
+    #[test]
+    fn symgs_volume_dominates_ddot2() {
+        // Paper: SymGS runtime ~20x DDOT2 (Sect. I-A). Volumes are the
+        // first-order proxy for runtime at equal bandwidth.
+        let p = hpcg_program(HpcgVariant::Plain, 160, 1);
+        let vol = |label: &str| {
+            p.phases
+                .iter()
+                .find_map(|ph| match ph {
+                    Phase::Kernel { volume_bytes, label: l, .. } if *l == label => Some(*volume_bytes),
+                    _ => None,
+                })
+                .unwrap()
+        };
+        let ratio = vol("SymGS") / vol("DDOT2#1");
+        assert!((15.0..60.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn flat_phase_indexing_wraps_iterations() {
+        let p = hpcg_program(HpcgVariant::Modified, 16, 3);
+        let per_iter = p.phases.len();
+        assert_eq!(p.total_phases(), 3 * per_iter);
+        assert_eq!(p.phase(per_iter), Some(&p.phases[0]));
+        assert_eq!(p.phase(3 * per_iter), None);
+    }
+}

@@ -1,0 +1,161 @@
+//! Phase traces and timeline analytics (the ITAC substitute).
+
+use std::collections::HashMap;
+
+/// One completed phase execution of one rank.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseRecord {
+    /// MPI rank.
+    pub rank: usize,
+    /// Iteration index.
+    pub iteration: usize,
+    /// Phase label ("DDOT2#1", "Allreduce#2", ...).
+    pub label: &'static str,
+    /// Start time, seconds.
+    pub t_start: f64,
+    /// End time, seconds.
+    pub t_end: f64,
+}
+
+impl PhaseRecord {
+    /// Duration in seconds.
+    pub fn duration(&self) -> f64 {
+        self.t_end - self.t_start
+    }
+}
+
+/// A point of the concurrency timeline: how many ranks execute a phase.
+#[derive(Debug, Clone, Copy)]
+pub struct ConcurrencyPoint {
+    /// Time, seconds.
+    pub t: f64,
+    /// Number of ranks inside the phase at `t`.
+    pub count: usize,
+}
+
+/// The full trace of a co-simulation.
+#[derive(Debug, Clone, Default)]
+pub struct TraceLog {
+    /// All completed phase records.
+    pub records: Vec<PhaseRecord>,
+}
+
+impl TraceLog {
+    /// Records of one label, optionally restricted to one iteration.
+    pub fn of(&self, label: &str, iteration: Option<usize>) -> Vec<&PhaseRecord> {
+        self.records
+            .iter()
+            .filter(|r| r.label == label && iteration.map(|i| r.iteration == i).unwrap_or(true))
+            .collect()
+    }
+
+    /// Per-rank durations of a phase in one iteration (rank-indexed).
+    pub fn durations_by_rank(&self, label: &str, iteration: usize, n_ranks: usize) -> Vec<f64> {
+        let mut out = vec![0.0; n_ranks];
+        for r in self.of(label, Some(iteration)) {
+            out[r.rank] += r.duration();
+        }
+        out
+    }
+
+    /// Per-rank start times of a phase in one iteration.
+    pub fn starts_by_rank(&self, label: &str, iteration: usize, n_ranks: usize) -> Vec<f64> {
+        let mut out = vec![f64::NAN; n_ranks];
+        for r in self.of(label, Some(iteration)) {
+            if out[r.rank].is_nan() || r.t_start < out[r.rank] {
+                out[r.rank] = r.t_start;
+            }
+        }
+        out
+    }
+
+    /// Concurrency timeline of a label: at each phase boundary, how many
+    /// ranks are inside (the bottom panels of Fig. 3).
+    pub fn concurrency(&self, label: &str) -> Vec<ConcurrencyPoint> {
+        let mut events: Vec<(f64, i64)> = Vec::new();
+        for r in self.records.iter().filter(|r| r.label == label) {
+            events.push((r.t_start, 1));
+            events.push((r.t_end, -1));
+        }
+        events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut count = 0i64;
+        events
+            .into_iter()
+            .map(|(t, d)| {
+                count += d;
+                ConcurrencyPoint { t, count: count.max(0) as usize }
+            })
+            .collect()
+    }
+
+    /// Render an ASCII timeline of an interval: one row per rank, one
+    /// column per time bucket, showing the first letter of the phase label
+    /// occupying that bucket (the Fig. 1/3 top panels).
+    pub fn render_ascii(&self, t0: f64, t1: f64, n_ranks: usize, width: usize) -> String {
+        let mut grid = vec![vec![' '; width]; n_ranks];
+        let letters: HashMap<&str, char> = self
+            .records
+            .iter()
+            .map(|r| (r.label, r.label.chars().next().unwrap_or('?')))
+            .collect();
+        for r in &self.records {
+            if r.t_end < t0 || r.t_start > t1 || r.rank >= n_ranks {
+                continue;
+            }
+            let col = |t: f64| {
+                (((t - t0) / (t1 - t0)) * width as f64).floor().clamp(0.0, width as f64 - 1.0) as usize
+            };
+            let (a, b) = (col(r.t_start.max(t0)), col(r.t_end.min(t1)));
+            for cell in grid[r.rank][a..=b].iter_mut() {
+                *cell = letters[r.label];
+            }
+        }
+        grid.into_iter()
+            .enumerate()
+            .map(|(rank, row)| format!("r{rank:02} |{}|", row.into_iter().collect::<String>()))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(rank: usize, label: &'static str, t0: f64, t1: f64) -> PhaseRecord {
+        PhaseRecord { rank, iteration: 0, label, t_start: t0, t_end: t1 }
+    }
+
+    #[test]
+    fn durations_and_starts() {
+        let log = TraceLog {
+            records: vec![rec(0, "DDOT2", 1.0, 1.5), rec(1, "DDOT2", 1.2, 1.4)],
+        };
+        let d = log.durations_by_rank("DDOT2", 0, 2);
+        assert!((d[0] - 0.5).abs() < 1e-12);
+        assert!((d[1] - 0.2).abs() < 1e-12);
+        let s = log.starts_by_rank("DDOT2", 0, 2);
+        assert_eq!(s, vec![1.0, 1.2]);
+    }
+
+    #[test]
+    fn concurrency_counts_overlaps() {
+        let log = TraceLog {
+            records: vec![rec(0, "K", 0.0, 2.0), rec(1, "K", 1.0, 3.0), rec(2, "K", 1.5, 1.8)],
+        };
+        let c = log.concurrency("K");
+        let max = c.iter().map(|p| p.count).max().unwrap();
+        assert_eq!(max, 3);
+        assert_eq!(c.last().unwrap().count, 0);
+    }
+
+    #[test]
+    fn ascii_render_shape() {
+        let log = TraceLog { records: vec![rec(0, "SymGS", 0.0, 0.6), rec(1, "DDOT2", 0.4, 1.0)] };
+        let s = log.render_ascii(0.0, 1.0, 2, 40);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains('S'));
+        assert!(lines[1].contains('D'));
+    }
+}

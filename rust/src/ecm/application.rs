@@ -1,0 +1,130 @@
+//! The ECM *application model*: per-kernel, per-machine cycle contributions.
+//!
+//! All times are cycles per **unit** = one cache line of iterations
+//! (8 double elements).
+
+use crate::config::{LlcKind, Machine};
+use crate::kernels::KernelSignature;
+
+/// Cycle contributions of one kernel on one machine (ECM application model).
+#[derive(Debug, Clone, Copy)]
+pub struct ApplicationModel {
+    /// In-core (arithmetic) execution time that overlaps with everything.
+    pub t_ol: f64,
+    /// Load-instruction retirement time (only loads count on the modeled
+    /// machines; stores retire in parallel).
+    pub t_l1reg: f64,
+    /// L1↔L2 transfer time.
+    pub t_l1l2: f64,
+    /// L2↔L3 transfer time (victim-LLC adjusted).
+    pub t_l2l3: f64,
+    /// Memory transfer time at the kernel's saturated bandwidth.
+    pub t_mem: f64,
+    /// Per-line latency residue not hidden by prefetching (limited MLP) —
+    /// calibration extension of the textbook model, see `Machine`.
+    pub t_lat: f64,
+    /// Memory lines per unit.
+    pub mem_lines: f64,
+    /// Write fraction of the memory traffic.
+    pub write_frac: f64,
+    /// Concurrent address streams at the memory interface.
+    pub streams: usize,
+}
+
+/// Effective L2↔L3 cache lines per unit, accounting for the LLC
+/// organization:
+///
+/// * **Inclusive** (BDW): every memory line also crosses L2↔L3 — the full
+///   `l3` stream count applies.
+/// * **Victim** (CLX, Rome): memory-sourced reads and RFOs go directly to
+///   L2, bypassing the LLC; only L3-resident reuse reads (stencil rows) and
+///   dirty write-backs cross L2↔L3.
+pub fn effective_l3_lines(k: &KernelSignature, m: &Machine) -> f64 {
+    match m.llc {
+        LlcKind::Inclusive => k.l3.total() as f64,
+        LlcKind::Victim => {
+            let reuse_reads = k.l3.reads.saturating_sub(k.mem.reads);
+            (reuse_reads + k.l3.writes) as f64
+        }
+    }
+}
+
+impl ApplicationModel {
+    /// Build the application model of kernel `k` on machine `m`.
+    pub fn new(k: &KernelSignature, m: &Machine) -> Self {
+        let lanes = m.simd_bytes as f64 / 8.0; // doubles per SIMD register
+        let iters = crate::ELEMS_PER_LINE as f64;
+
+        // Arithmetic: 2 FMA ports x `lanes` x 2 flops each.
+        let flops_per_cy = 2.0 * lanes * 2.0;
+        let t_ol = iters * k.flops_per_iter as f64 / flops_per_cy;
+
+        // Load instructions per unit, SIMD-packed.
+        let load_instr = (iters * k.loads_per_iter as f64 / lanes).ceil();
+        let t_l1reg = load_instr / m.ld_per_cy;
+
+        let t_l1l2 = k.l2.total() as f64 * m.line_cycles(m.l1l2_bpc);
+        let t_l2l3 = effective_l3_lines(k, m) * m.line_cycles(m.l2l3_bpc);
+
+        let mem_lines = k.mem.total() as f64;
+        let write_frac = k.write_frac();
+        let streams = k.mem.total();
+        let bs_bpc = m.saturated_bw(write_frac, streams) / m.freq_ghz; // bytes/cy
+        let t_mem = mem_lines * crate::CACHE_LINE_BYTES / bs_bpc;
+        // Only latency-critical lines pay the MLP residue: on Intel the
+        // store buffers hide write-back latency; on Rome all lines share
+        // the single L2<->mem port.
+        let residue_lines = if m.residue_on_all_lines {
+            k.mem.total()
+        } else {
+            k.mem.reads + k.mem.rfo
+        } as f64;
+        let t_lat = m.latency_residue_cy * residue_lines;
+
+        ApplicationModel {
+            t_ol,
+            t_l1reg,
+            t_l1l2,
+            t_l2l3,
+            t_mem,
+            t_lat,
+            mem_lines,
+            write_frac,
+            streams,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{machine, MachineId};
+    use crate::kernels::{kernel, KernelId};
+
+    #[test]
+    fn victim_llc_drops_streaming_l3_read_traffic() {
+        let stream = kernel(KernelId::Stream);
+        let bdw = machine(MachineId::Bdw1);
+        let clx = machine(MachineId::Clx);
+        assert_eq!(effective_l3_lines(&stream, &bdw), 4.0);
+        assert_eq!(effective_l3_lines(&stream, &clx), 1.0); // write-back only
+    }
+
+    #[test]
+    fn victim_llc_keeps_stencil_reuse_traffic() {
+        let jac = kernel(KernelId::JacobiV1L3); // 3R+1W+1RFO at L3
+        let clx = machine(MachineId::Clx);
+        // 2 reuse reads (3 total - 1 from memory) + 1 write-back.
+        assert_eq!(effective_l3_lines(&jac, &clx), 3.0);
+    }
+
+    #[test]
+    fn stream_contributions_on_bdw1() {
+        let am = ApplicationModel::new(&kernel(KernelId::Stream), &machine(MachineId::Bdw1));
+        assert!((am.t_l1reg - 2.0).abs() < 1e-9); // 4 AVX2 loads / 2 per cy
+        assert!((am.t_l1l2 - 4.0).abs() < 1e-9); // 4 lines at 64 B/cy
+        assert!((am.t_l2l3 - 8.0).abs() < 1e-9); // 4 lines at 32 B/cy
+        assert!(am.t_mem > 10.0 && am.t_mem < 11.5); // ~10.6 cy at 53.2 GB/s
+        assert!(am.t_ol < am.t_l1reg + am.t_l1l2 + am.t_l2l3 + am.t_mem);
+    }
+}

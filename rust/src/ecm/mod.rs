@@ -1,0 +1,18 @@
+//! Execution-Cache-Memory (ECM) performance model — the paper's modeling
+//! substrate (Hofmann et al. [6,7], Stengel et al. [8]).
+//!
+//! Provides:
+//! * the single-core composition rule (Eq. 1) for non-overlapping (Intel)
+//!   and overlapping (AMD Rome) hierarchies,
+//! * the memory request fraction `f = T_Mem / T_ECM` (Eq. 2),
+//! * saturated-bandwidth prediction per kernel (read/write service mix),
+//! * the simplified recursive multicore scaling model with latency penalty
+//!   `p0 * u(n-1) * (n-1)`, `p0 = T_Mem/2` (Sect. III).
+
+mod application;
+mod prediction;
+mod scaling;
+
+pub use application::{effective_l3_lines, ApplicationModel};
+pub use prediction::{predict, EcmPrediction};
+pub use scaling::{scaling_curve, ScalingPoint};

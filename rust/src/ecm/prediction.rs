@@ -1,0 +1,154 @@
+//! Single-core ECM prediction: Eq. (1), the request fraction f (Eq. 2) and
+//! derived bandwidths.
+
+use crate::config::{Machine, OverlapKind};
+use crate::ecm::application::ApplicationModel;
+use crate::kernels::KernelSignature;
+
+/// Full single-core ECM prediction of one kernel on one machine.
+#[derive(Debug, Clone, Copy)]
+pub struct EcmPrediction {
+    /// The application-model contributions.
+    pub app: ApplicationModel,
+    /// Single-core runtime per unit (cycles), Eq. (1) with the machine's
+    /// overlap rule.
+    pub t_ecm: f64,
+    /// Memory request fraction `f = T_Mem / T_ECM` (Eq. 2).
+    pub f: f64,
+    /// Predicted saturated bandwidth of the kernel on the full domain, GB/s.
+    pub bs_gbs: f64,
+    /// Predicted single-core memory bandwidth, GB/s (`b_1 = f * b_s`).
+    pub b1_gbs: f64,
+    /// Intrinsic single-core demand rate in lines/cycle (`mem_lines/T_ECM`)
+    /// — the issue rate the simulator's cores are driven with.
+    pub demand_lines_per_cy: f64,
+    /// Service-cost factor of this kernel's line mix (1.0 = pure reads).
+    pub cost_factor: f64,
+}
+
+/// Compose the ECM single-core runtime (Eq. 1).
+///
+/// * Intel (non-overlapping): `max(T_OL, T_L1Reg + ΣT_i + T_Mem + T_lat)`
+/// * Rome (overlapping): `max(T_OL, T_L1Reg, T_L1L2, T_L2L3, T_Mem + T_lat)`
+fn compose(m: &Machine, a: &ApplicationModel) -> f64 {
+    match m.overlap {
+        OverlapKind::NonOverlapping => a
+            .t_ol
+            .max(a.t_l1reg + a.t_l1l2 + a.t_l2l3 + a.t_mem + a.t_lat),
+        OverlapKind::Overlapping => a
+            .t_ol
+            .max(a.t_l1reg)
+            .max(a.t_l1l2)
+            .max(a.t_l2l3)
+            .max(a.t_mem + a.t_lat),
+    }
+}
+
+/// Predict single-core behaviour of kernel `k` on machine `m`.
+pub fn predict(k: &KernelSignature, m: &Machine) -> EcmPrediction {
+    let app = ApplicationModel::new(k, m);
+    let t_ecm = compose(m, &app);
+    let f = app.t_mem / t_ecm;
+    let bs_gbs = m.saturated_bw(app.write_frac, app.streams);
+    let b1_gbs = f * bs_gbs;
+    let demand_lines_per_cy = app.mem_lines / t_ecm;
+    let cost_factor = m.cost_factor(app.write_frac, app.streams);
+    EcmPrediction {
+        app,
+        t_ecm,
+        f,
+        bs_gbs,
+        b1_gbs,
+        demand_lines_per_cy,
+        cost_factor,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{machine, MachineId};
+    use crate::kernels::{kernel, pairing_set, KernelId};
+
+    /// Paper Table II anchors for the STREAM triad (the fully legible row).
+    #[test]
+    fn stream_f_matches_paper_anchors() {
+        let anchors = [
+            (MachineId::Bdw1, 0.309),
+            (MachineId::Bdw2, 0.228),
+            (MachineId::Clx, 0.199),
+            (MachineId::Rome, 0.838),
+        ];
+        for (id, want) in anchors {
+            let p = predict(&kernel(KernelId::Stream), &machine(id));
+            let err = (p.f - want).abs() / want;
+            assert!(err < 0.06, "{id:?}: f = {:.3}, want {want}", p.f);
+        }
+    }
+
+    /// Paper Sect. V: on Intel, f_DSCAL > f_DAXPY; on Rome, reversed.
+    #[test]
+    fn dscal_daxpy_ordering_reverses_on_rome() {
+        for id in [MachineId::Bdw1, MachineId::Bdw2, MachineId::Clx] {
+            let m = machine(id);
+            let f_dscal = predict(&kernel(KernelId::Dscal), &m).f;
+            let f_daxpy = predict(&kernel(KernelId::Daxpy), &m).f;
+            assert!(f_dscal > f_daxpy, "{id:?}: {f_dscal} !> {f_daxpy}");
+        }
+        let rome = machine(MachineId::Rome);
+        let f_dscal = predict(&kernel(KernelId::Dscal), &rome).f;
+        let f_daxpy = predict(&kernel(KernelId::Daxpy), &rome).f;
+        assert!(f_daxpy > f_dscal, "Rome: {f_daxpy} !> {f_dscal}");
+    }
+
+    /// Rome's overlapping hierarchy pushes f towards 1 for all kernels.
+    #[test]
+    fn rome_f_near_one() {
+        let rome = machine(MachineId::Rome);
+        for (_, k) in crate::kernels::all_kernels() {
+            let p = predict(&k, &rome);
+            assert!(p.f > 0.55, "{}: f = {}", k.name, p.f);
+            assert!(p.f < 1.0, "{}: f = {}", k.name, p.f);
+        }
+    }
+
+    /// Paper Sect. V: CLX shows less spread in f (2.4x) than BDW-1 (2.7x)
+    /// across the pairing kernel set, and less spread in b_s (10% vs 20%).
+    #[test]
+    fn clx_spread_smaller_than_bdw1() {
+        let spread = |mid: MachineId| -> (f64, f64) {
+            let m = machine(mid);
+            let preds: Vec<EcmPrediction> =
+                pairing_set().iter().map(|&k| predict(&kernel(k), &m)).collect();
+            let fmax = preds.iter().map(|p| p.f).fold(0.0, f64::max);
+            let fmin = preds.iter().map(|p| p.f).fold(f64::MAX, f64::min);
+            let bmax = preds.iter().map(|p| p.bs_gbs).fold(0.0, f64::max);
+            let bmin = preds.iter().map(|p| p.bs_gbs).fold(f64::MAX, f64::min);
+            (fmax / fmin, (bmax - bmin) / bmax)
+        };
+        let (f_bdw, b_bdw) = spread(MachineId::Bdw1);
+        let (f_clx, b_clx) = spread(MachineId::Clx);
+        assert!(f_clx < f_bdw, "f spread: CLX {f_clx} !< BDW-1 {f_bdw}");
+        assert!(b_clx < b_bdw, "b_s spread: CLX {b_clx} !< BDW-1 {b_bdw}");
+    }
+
+    /// Stencil with violated L2 layer condition has a lower f than the
+    /// LC-fulfilled variant (more intra-cache traffic, same memory traffic).
+    #[test]
+    fn layer_condition_reduces_f() {
+        for id in [MachineId::Bdw1, MachineId::Bdw2, MachineId::Clx] {
+            let m = machine(id);
+            let f_l2 = predict(&kernel(KernelId::JacobiV1L2), &m).f;
+            let f_l3 = predict(&kernel(KernelId::JacobiV1L3), &m).f;
+            assert!(f_l3 < f_l2, "{id:?}: {f_l3} !< {f_l2}");
+        }
+    }
+
+    #[test]
+    fn b1_consistent_with_demand_rate() {
+        let m = machine(MachineId::Bdw1);
+        let p = predict(&kernel(KernelId::Ddot2), &m);
+        let b1_from_demand = m.lines_per_cy_to_gbs(p.demand_lines_per_cy);
+        assert!((b1_from_demand - p.b1_gbs).abs() / p.b1_gbs < 1e-9);
+    }
+}

@@ -1,0 +1,106 @@
+//! Simplified recursive ECM multicore scaling model (Sect. III).
+//!
+//! At `n` cores a latency penalty `p0 * u(n-1) * (n-1)` is added to the
+//! single-core runtime, with `u(i)` the utilization of the memory interface
+//! at `i` cores, `u(1) = f`, and `p0 = T_Mem / 2`. Bandwidth is additionally
+//! capped by the saturated bandwidth of the kernel.
+
+use crate::config::Machine;
+use crate::ecm::prediction::EcmPrediction;
+
+/// One point of the predicted scaling curve.
+#[derive(Debug, Clone, Copy)]
+pub struct ScalingPoint {
+    /// Active cores.
+    pub n: usize,
+    /// Predicted runtime per unit at `n` cores (cycles).
+    pub t_cycles: f64,
+    /// Predicted utilization of the memory interface `u(n)`.
+    pub u: f64,
+    /// Predicted aggregate memory bandwidth, GB/s.
+    pub bw_gbs: f64,
+    /// Predicted per-core bandwidth, GB/s.
+    pub bw_per_core_gbs: f64,
+}
+
+/// Predicted scaling curve of a homogeneous kernel from 1 to `n_max` cores.
+pub fn scaling_curve(p: &EcmPrediction, m: &Machine, n_max: usize) -> Vec<ScalingPoint> {
+    let p0 = p.app.t_mem / 2.0 * m.queue.latency_penalty;
+    let mut out = Vec::with_capacity(n_max);
+    let mut u_prev = p.f; // u(1) = f
+    for n in 1..=n_max {
+        let penalty = if n > 1 { p0 * u_prev * (n as f64 - 1.0) } else { 0.0 };
+        let t = p.t_ecm + penalty;
+        // Raw (uncapped) aggregate bandwidth from n cores at runtime t.
+        let raw_lines_per_cy = n as f64 * p.app.mem_lines / t;
+        let raw_bw = m.lines_per_cy_to_gbs(raw_lines_per_cy);
+        let bw = raw_bw.min(p.bs_gbs);
+        let u = (n as f64 * p.app.t_mem / t).min(1.0);
+        out.push(ScalingPoint {
+            n,
+            t_cycles: t,
+            u,
+            bw_gbs: bw,
+            bw_per_core_gbs: bw / n as f64,
+        });
+        u_prev = u;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{machine, MachineId};
+    use crate::ecm::predict;
+    use crate::kernels::{kernel, KernelId};
+
+    #[test]
+    fn bandwidth_monotone_and_saturating() {
+        let m = machine(MachineId::Bdw1);
+        let p = predict(&kernel(KernelId::Stream), &m);
+        let curve = scaling_curve(&p, &m, m.cores);
+        for w in curve.windows(2) {
+            assert!(w[1].bw_gbs >= w[0].bw_gbs - 1e-9, "aggregate bw must not decrease");
+            assert!(
+                w[1].bw_per_core_gbs <= w[0].bw_per_core_gbs + 1e-9,
+                "per-core bw must not increase"
+            );
+        }
+        let last = curve.last().unwrap();
+        assert!((last.bw_gbs - p.bs_gbs).abs() / p.bs_gbs < 0.02, "domain saturates");
+    }
+
+    #[test]
+    fn single_core_point_equals_b1() {
+        let m = machine(MachineId::Clx);
+        let p = predict(&kernel(KernelId::Ddot2), &m);
+        let curve = scaling_curve(&p, &m, 4);
+        assert!((curve[0].bw_gbs - p.b1_gbs).abs() / p.b1_gbs < 1e-9);
+    }
+
+    /// CLX needs more cores to reach saturation than BDW-1 (it is "more
+    /// scalable", Sect. V) — its saturation core count is higher.
+    #[test]
+    fn clx_saturates_later_than_bdw1() {
+        let sat_cores = |id: MachineId| -> usize {
+            let m = machine(id);
+            let p = predict(&kernel(KernelId::Stream), &m);
+            let curve = scaling_curve(&p, &m, m.cores);
+            curve
+                .iter()
+                .find(|pt| pt.bw_gbs > 0.95 * p.bs_gbs)
+                .map(|pt| pt.n)
+                .unwrap_or(m.cores)
+        };
+        assert!(sat_cores(MachineId::Clx) > sat_cores(MachineId::Bdw1));
+    }
+
+    /// Rome nearly saturates with a single thread (overlapping hierarchy).
+    #[test]
+    fn rome_saturates_almost_immediately() {
+        let m = machine(MachineId::Rome);
+        let p = predict(&kernel(KernelId::Ddot2), &m);
+        assert!(p.b1_gbs / p.bs_gbs > 0.7, "b1/bs = {}", p.b1_gbs / p.bs_gbs);
+    }
+}

@@ -1,0 +1,49 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Result alias used across the crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All failure modes of the coordinator.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// An unknown machine id was requested from the registry.
+    #[error("unknown machine '{0}' (known: {1})")]
+    UnknownMachine(String, String),
+
+    /// An unknown kernel name was requested from the registry.
+    #[error("unknown kernel '{0}' (known: {1})")]
+    UnknownKernel(String, String),
+
+    /// A configuration file failed to parse.
+    #[error("config error in {path}: {msg}")]
+    Config { path: String, msg: String },
+
+    /// An experiment plan is inconsistent (e.g. thread counts exceed domain).
+    #[error("invalid plan: {0}")]
+    InvalidPlan(String),
+
+    /// The PJRT runtime failed (client creation, artifact load, execution).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// An AOT artifact is missing — run `make artifacts` first.
+    #[error("artifact not found: {0} (run `make artifacts`)")]
+    MissingArtifact(String),
+
+    /// A simulation failed to converge to steady state.
+    #[error("simulation did not reach steady state: {0}")]
+    NoSteadyState(String),
+
+    /// Any I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl Error {
+    /// Convenience constructor for runtime errors from the `xla` crate.
+    pub fn runtime<E: std::fmt::Display>(e: E) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}

@@ -1,0 +1,116 @@
+//! Layer-condition (LC) analysis for 2D 5-point stencils.
+//!
+//! Following Stengel et al. [8]: reuse across the outer stencil dimension is
+//! possible at a cache level when three consecutive rows of the source grid
+//! fit into (a safety fraction of) that cache. If the LC holds at L2, only
+//! one read stream of the source grid crosses L2↔L3; if it is violated at L2
+//! but holds at L3, three read streams cross L2↔L3.
+
+use crate::kernels::StreamCounts;
+
+/// Where the layer condition of a 2D 5-point stencil is first fulfilled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerCondition {
+    /// Three rows fit into L2 (paper's "LC_L2" grids, e.g. 20000×4000).
+    FulfilledAtL2,
+    /// Three rows fit into L3 but not L2 ("LC_L3" grids, e.g. 5000×25000).
+    FulfilledAtL3,
+    /// Three rows do not even fit into L3 — every read comes from memory.
+    Violated,
+}
+
+/// Result of analyzing a grid against a machine's cache sizes.
+#[derive(Debug, Clone, Copy)]
+pub struct LcAnalysis {
+    /// Outcome of the analysis.
+    pub condition: LayerCondition,
+    /// Bytes required to hold three consecutive rows.
+    pub three_rows_bytes: f64,
+}
+
+/// Fraction of a cache that can realistically hold the stencil rows
+/// (the rest is occupied by the write stream and other data).
+const LC_SAFETY: f64 = 0.5;
+
+/// Analyze the layer condition of a 2D 5-point stencil with `inner` elements
+/// per row of `elem_bytes` each, against private L2 and shared-per-core L3
+/// capacities in bytes.
+pub fn analyze_lc(inner: usize, elem_bytes: usize, l2_bytes: f64, l3_bytes_per_core: f64) -> LcAnalysis {
+    let three_rows = (3 * inner * elem_bytes) as f64;
+    let condition = if three_rows <= LC_SAFETY * l2_bytes {
+        LayerCondition::FulfilledAtL2
+    } else if three_rows <= LC_SAFETY * l3_bytes_per_core {
+        LayerCondition::FulfilledAtL3
+    } else {
+        LayerCondition::Violated
+    };
+    LcAnalysis { condition, three_rows_bytes: three_rows }
+}
+
+/// Traffic per unit (one cache line of updates) of a 2D 5-point Jacobi
+/// stencil with `extra_read_streams` additional non-stencil read streams
+/// (0 for Jacobi-v1, 1 for Jacobi-v2 which also reads the RHS grid F).
+///
+/// Returns `(mem, l3, l2)` stream counts:
+/// * memory traffic is LC-independent (each grid point is loaded once from
+///   memory regardless): `1 + extra` reads, 1 write-back, 1 RFO;
+/// * L2↔L3 traffic depends on the LC at L2: 1 vs 3 source-read streams;
+/// * L1↔L2 traffic assumes the LC at L1 is always violated for the paper's
+///   grid sizes (inner dimension ≥ 4000 elements): 3 source-read streams.
+pub fn jacobi_traffic(lc: LayerCondition, extra_read_streams: usize) -> (StreamCounts, StreamCounts, StreamCounts) {
+    let mem = StreamCounts { reads: 1 + extra_read_streams, writes: 1, rfo: 1 };
+    let l3_reads = match lc {
+        LayerCondition::FulfilledAtL2 => 1,
+        LayerCondition::FulfilledAtL3 | LayerCondition::Violated => 3,
+    };
+    let l3 = StreamCounts { reads: l3_reads + extra_read_streams, writes: 1, rfo: 1 };
+    let l2 = StreamCounts { reads: 3 + extra_read_streams, writes: 1, rfo: 1 };
+    (mem, l3, l2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const KIB: f64 = 1024.0;
+    const MIB: f64 = 1024.0 * 1024.0;
+
+    #[test]
+    fn paper_grid_sizes_reproduce_lc_classes() {
+        // BDW: 256 KiB L2, 2.5 MiB L3 per core.
+        // LC_L2 grid: 20000 x 4000 (outer x inner).
+        let a = analyze_lc(4000, 8, 256.0 * KIB, 2.5 * MIB);
+        assert_eq!(a.condition, LayerCondition::FulfilledAtL2);
+        // LC_L3 grid: 5000 x 25000.
+        let b = analyze_lc(25000, 8, 256.0 * KIB, 2.5 * MIB);
+        assert_eq!(b.condition, LayerCondition::FulfilledAtL3);
+    }
+
+    #[test]
+    fn huge_inner_dimension_violates_even_l3() {
+        let a = analyze_lc(50_000_000, 8, 256.0 * KIB, 2.5 * MIB);
+        assert_eq!(a.condition, LayerCondition::Violated);
+    }
+
+    #[test]
+    fn jacobi_v1_traffic_matches_table2() {
+        // LC_L2: 3 (1+1+1) at L3 level; LC_L3: 5 (3+1+1) at L3 level.
+        let (mem, l3, _l2) = jacobi_traffic(LayerCondition::FulfilledAtL2, 0);
+        assert_eq!(mem.total(), 3);
+        assert_eq!(l3.total(), 3);
+        let (mem, l3, l2) = jacobi_traffic(LayerCondition::FulfilledAtL3, 0);
+        assert_eq!(mem.total(), 3);
+        assert_eq!(l3.total(), 5);
+        assert_eq!(l2.total(), 5);
+    }
+
+    #[test]
+    fn jacobi_v2_traffic_matches_table2() {
+        // v2 reads an extra RHS grid: LC_L2 4 (2+1+1), LC_L3 6 (4+1+1).
+        let (mem, l3, _) = jacobi_traffic(LayerCondition::FulfilledAtL2, 1);
+        assert_eq!(mem.total(), 4);
+        assert_eq!(l3.total(), 4);
+        let (_, l3, _) = jacobi_traffic(LayerCondition::FulfilledAtL3, 1);
+        assert_eq!(l3.total(), 6);
+    }
+}

@@ -1,0 +1,15 @@
+//! Loop-kernel substrate — the paper's Table II as executable data.
+//!
+//! A kernel is characterized *only* by its data-traffic signature: how many
+//! cache lines it moves per unit of work over each level of the memory
+//! hierarchy, and how many load/store/arithmetic instructions it retires.
+//! The paper's central observation is that nothing else matters for
+//! bandwidth sharing.
+
+mod layer_condition;
+mod registry;
+mod signature;
+
+pub use layer_condition::{analyze_lc, jacobi_traffic, LayerCondition, LcAnalysis};
+pub use registry::{all_kernels, kernel, kernel_names, pairing_set, KernelId};
+pub use signature::{KernelClass, KernelSignature, StreamCounts};

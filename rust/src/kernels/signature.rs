@@ -1,0 +1,144 @@
+//! Kernel stream signatures.
+//!
+//! The unit of work throughout is **one cache line of iterations** — 8
+//! double-precision elements. All traffic counts are cache lines per unit.
+
+/// Read/write/RFO stream decomposition (Table II column "Elem. transf.").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamCounts {
+    /// Read streams (lines loaded per unit).
+    pub reads: usize,
+    /// Write-back streams (dirty lines evicted per unit).
+    pub writes: usize,
+    /// Read-for-ownership streams (write-allocate transfers per unit).
+    pub rfo: usize,
+}
+
+impl StreamCounts {
+    /// Total lines over the memory interface per unit (R + W + RFO).
+    pub fn total(&self) -> usize {
+        self.reads + self.writes + self.rfo
+    }
+
+    /// Fraction of memory lines that are writes (write-backs). RFO lines are
+    /// reads from the interface's point of view.
+    pub fn write_frac(&self) -> f64 {
+        if self.total() == 0 {
+            0.0
+        } else {
+            self.writes as f64 / self.total() as f64
+        }
+    }
+}
+
+/// Broad class of a kernel (Table II row groups).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelClass {
+    /// Streaming kernel without write streams (vectorSUM, DDOTx).
+    ReadOnly,
+    /// Streaming kernel with at least one write stream.
+    ReadWrite,
+    /// Stencil with cache reuse governed by layer conditions.
+    Stencil,
+}
+
+/// Full traffic/instruction signature of a loop kernel on a given machine
+/// *class* (traffic is machine-independent except for victim-LLC effects,
+/// which [`crate::ecm`] applies).
+#[derive(Debug, Clone)]
+pub struct KernelSignature {
+    /// Canonical name (Table II).
+    pub name: String,
+    /// Pseudo-code of the loop body, for documentation and reports.
+    pub body: String,
+    /// Class of the kernel.
+    pub class: KernelClass,
+    /// Lines over the *memory* interface per unit.
+    pub mem: StreamCounts,
+    /// Lines over L2↔L3 per unit (differs from `mem` for stencils where the
+    /// layer condition at L2 is violated, and on victim LLCs).
+    pub l3: StreamCounts,
+    /// Lines over L1↔L2 per unit.
+    pub l2: StreamCounts,
+    /// Load instructions (scalar element loads) per iteration — SIMD
+    /// packing is applied by the ECM model using the machine's register
+    /// width. For stencils this counts loads that hit L1/registers too.
+    pub loads_per_iter: usize,
+    /// Store instructions per iteration.
+    pub stores_per_iter: usize,
+    /// Floating-point operations per iteration.
+    pub flops_per_iter: usize,
+    /// Code balance in byte/flop at the *memory* level (Table II B_c).
+    pub code_balance: f64,
+}
+
+impl KernelSignature {
+    /// Convenience constructor for pure streaming kernels, where the traffic
+    /// is identical on every level of the hierarchy.
+    #[allow(clippy::too_many_arguments)]
+    pub fn streaming(
+        name: &str,
+        body: &str,
+        class: KernelClass,
+        reads: usize,
+        writes: usize,
+        rfo: usize,
+        loads_per_iter: usize,
+        stores_per_iter: usize,
+        flops_per_iter: usize,
+    ) -> Self {
+        let sc = StreamCounts { reads, writes, rfo };
+        let bytes_per_iter = sc.total() as f64 * crate::CACHE_LINE_BYTES / crate::ELEMS_PER_LINE as f64;
+        let code_balance = if flops_per_iter == 0 {
+            f64::INFINITY
+        } else {
+            bytes_per_iter / flops_per_iter as f64
+        };
+        KernelSignature {
+            name: name.to_string(),
+            body: body.to_string(),
+            class,
+            mem: sc,
+            l3: sc,
+            l2: sc,
+            loads_per_iter,
+            stores_per_iter,
+            flops_per_iter,
+            code_balance,
+        }
+    }
+
+    /// Bytes over the memory interface per iteration.
+    pub fn bytes_per_iter(&self) -> f64 {
+        self.mem.total() as f64 * crate::CACHE_LINE_BYTES / crate::ELEMS_PER_LINE as f64
+    }
+
+    /// Write fraction of the memory traffic (drives the saturated-bandwidth
+    /// difference between read-only and read-write kernels).
+    pub fn write_frac(&self) -> f64 {
+        self.mem.write_frac()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_counts_total_and_write_frac() {
+        // STREAM triad: a[i] = b[i] + s*c[i] -> 2R + 1W + 1RFO (Table II).
+        let sc = StreamCounts { reads: 2, writes: 1, rfo: 1 };
+        assert_eq!(sc.total(), 4);
+        assert!((sc.write_frac() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn streaming_ctor_computes_code_balance() {
+        // DAXPY: 3 lines / 8 iters = 24 B/iter, 2 flops -> 12 B/F (Table II).
+        let k = KernelSignature::streaming(
+            "daxpy", "a[i] = a[i] + s*b[i]", KernelClass::ReadWrite, 2, 1, 0, 2, 1, 2,
+        );
+        assert!((k.code_balance - 12.0).abs() < 1e-12);
+        assert!((k.bytes_per_iter() - 24.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,52 @@
+//! # membw — bandwidth-sharing model reproduction
+//!
+//! Reproduction of Afzal, Hager, Wellein, *"An analytic performance model for
+//! overlapping execution of memory-bound loop kernels on multicore CPUs"*
+//! (2020).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer Rust + JAX +
+//! Pallas stack:
+//!
+//! * [`config`] — machine descriptions (the paper's Table I) and global
+//!   experiment configuration,
+//! * [`kernels`] — the loop-kernel substrate (Table II): stream signatures
+//!   and layer-condition analysis,
+//! * [`ecm`] — the Execution-Cache-Memory model used by the paper to predict
+//!   single-core runtime, the memory request fraction `f` (Eq. 2) and the
+//!   multicore scaling behaviour,
+//! * [`sharing`] — **the paper's contribution**: the analytic
+//!   bandwidth-sharing model (Eqs. 4–5) plus its multigroup generalization,
+//! * [`simulator`] — the measurement substrate: a line-granularity
+//!   discrete-event simulator of a memory contention domain (stands in for
+//!   the physical BDW/CLX/Rome machines of the paper),
+//! * [`desync`] — rank-level co-simulation of barrier-free MPI programs
+//!   (HPCG), reproducing the desynchronization phenomenology of Figs. 1/3,
+//! * [`runtime`] — PJRT client that loads the AOT-compiled JAX/Pallas batched
+//!   simulator (`artifacts/*.hlo.txt`) and runs it from the hot path,
+//! * [`sweep`] — experiment orchestration (plans, batching, parallel runs),
+//! * [`stats`] — descriptive statistics, error metrics, skewness,
+//! * [`report`] — per-table/figure emitters (CSV + ASCII rendering).
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod benchutil;
+pub mod config;
+pub mod desync;
+pub mod ecm;
+pub mod error;
+pub mod kernels;
+pub mod report;
+pub mod runtime;
+pub mod sharing;
+pub mod simulator;
+pub mod stats;
+pub mod sweep;
+
+pub use error::{Error, Result};
+
+/// Bytes per cache line on every modeled architecture.
+pub const CACHE_LINE_BYTES: f64 = 64.0;
+
+/// Double-precision elements per cache line.
+pub const ELEMS_PER_LINE: usize = 8;

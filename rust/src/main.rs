@@ -1,0 +1,306 @@
+//! `repro` — the Layer-3 coordinator CLI.
+//!
+//! Subcommands (hand-rolled argument parsing; the build is fully offline):
+//!
+//! ```text
+//! repro machines                        # Table I
+//! repro kernels                         # kernel registry
+//! repro characterize [--engine E]       # Table II (f, b_s per kernel)
+//! repro pair --machine M --k1 A --k2 B --n1 X --n2 Y [--engine E]
+//! repro experiment <table2|fig1|fig3|fig4|fig6|fig7|fig8|fig9|all>
+//!                  [--engine fluid|des|pjrt] [--out results/]
+//! repro hpcg [--variant plain|modified] [--machine M] [--ranks N]
+//! repro dump-configs <dir>              # write machine TOMLs
+//! repro selftest                        # PJRT artifact vs rust engines
+//! ```
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use membw::config::{builtin_machines, machine, machine_to_toml, MachineId};
+use membw::desync::{hpcg_program, CoSimConfig, CoSimEngine, HpcgVariant, NoiseModel};
+use membw::error::Result;
+use membw::kernels::{all_kernels, kernel, KernelId};
+use membw::report::{self, ExperimentCtx};
+use membw::runtime::{ArtifactPaths, PjrtRuntime, PjrtSimExecutor, SimCase};
+use membw::simulator::{measure_f_bs, measure_pairing, CoreWorkload, Engine};
+use membw::sweep::{run_cases, MeasureEngine, PairingCase};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+/// Parse `--key value` flags from the tail of an argument list.
+fn flags(args: &[String]) -> HashMap<String, String> {
+    let mut map = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() {
+                map.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    map
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest: &[String] = if args.len() > 1 { &args[1..] } else { &[] };
+    match cmd {
+        "machines" => cmd_machines(),
+        "kernels" => cmd_kernels(),
+        "characterize" => cmd_characterize(&flags(rest)),
+        "pair" => cmd_pair(&flags(rest)),
+        "experiment" => cmd_experiment(rest),
+        "hpcg" => cmd_hpcg(&flags(rest)),
+        "dump-configs" => cmd_dump_configs(rest),
+        "selftest" => cmd_selftest(&flags(rest)),
+        _ => {
+            println!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "repro — bandwidth-sharing model reproduction (Afzal/Hager/Wellein 2020)\n\
+commands:\n  machines | kernels | characterize | pair | experiment <id> | hpcg | dump-configs <dir> | selftest\n\
+run `repro experiment all --out results/` to regenerate every table and figure.";
+
+fn cmd_machines() -> Result<()> {
+    println!("{}", report::table1_report());
+    Ok(())
+}
+
+fn cmd_kernels() -> Result<()> {
+    let mut t = report::AsciiTable::new(&["kernel", "class", "body", "mem(R+W+RFO)", "B_c [B/F]"]);
+    for (_, k) in all_kernels() {
+        let bc = if k.code_balance.is_finite() { format!("{:.2}", k.code_balance) } else { "—".into() };
+        t.row(vec![
+            k.name.clone(),
+            format!("{:?}", k.class),
+            k.body.clone(),
+            format!("{} ({}+{}+{})", k.mem.total(), k.mem.reads, k.mem.writes, k.mem.rfo),
+            bc,
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn parse_engine(f: &HashMap<String, String>) -> Result<Engine> {
+    match f.get("engine").map(String::as_str) {
+        None | Some("fluid") => Ok(Engine::Fluid),
+        Some(other) => Engine::parse(other),
+    }
+}
+
+fn cmd_characterize(f: &HashMap<String, String>) -> Result<()> {
+    let engine = parse_engine(f)?;
+    let out = f.get("out").cloned().unwrap_or_else(|| "results".into());
+    let ctx = ExperimentCtx { out_dir: PathBuf::from(out), engine, pjrt: None };
+    println!("{}", report::table2_report(&ctx)?);
+    Ok(())
+}
+
+fn cmd_pair(f: &HashMap<String, String>) -> Result<()> {
+    let m = machine(MachineId::parse(f.get("machine").map(String::as_str).unwrap_or("clx"))?);
+    let k1 = KernelId::parse(f.get("k1").map(String::as_str).unwrap_or("dcopy"))?;
+    let k2 = KernelId::parse(f.get("k2").map(String::as_str).unwrap_or("ddot2"))?;
+    let n1: usize = f.get("n1").and_then(|s| s.parse().ok()).unwrap_or(m.cores / 2);
+    let n2: usize = f.get("n2").and_then(|s| s.parse().ok()).unwrap_or(m.cores - m.cores / 2);
+    let engine = parse_engine(f)?;
+
+    let meas = measure_pairing(&m, &kernel(k1), n1, &kernel(k2), n2, engine);
+    let c1 = measure_f_bs(&kernel(k1), &m, engine);
+    let c2 = measure_f_bs(&kernel(k2), &m, engine);
+    let pred = membw::sharing::share_two_groups(
+        &membw::sharing::KernelGroup { n: n1, f: c1.f, bs_gbs: c1.bs_gbs },
+        &membw::sharing::KernelGroup { n: n2, f: c2.f, bs_gbs: c2.bs_gbs },
+    );
+    println!(
+        "{} : {} x{}  +  {} x{}   [{:?}]",
+        m.name,
+        kernel(k1).name,
+        n1,
+        kernel(k2).name,
+        n2,
+        engine
+    );
+    println!(
+        "  kernel I : f={:.3} bs={:.1}  measured {:.2} GB/s/core, model {:.2} GB/s/core",
+        c1.f, c1.bs_gbs, meas.per_core_gbs[0], pred.per_core_gbs[0]
+    );
+    println!(
+        "  kernel II: f={:.3} bs={:.1}  measured {:.2} GB/s/core, model {:.2} GB/s/core",
+        c2.f, c2.bs_gbs, meas.per_core_gbs[1], pred.per_core_gbs[1]
+    );
+    println!(
+        "  total    : measured {:.1} GB/s, model {:.1} GB/s",
+        meas.total_gbs,
+        pred.group_bw_gbs[0] + pred.group_bw_gbs[1]
+    );
+    Ok(())
+}
+
+fn make_ctx(f: &HashMap<String, String>) -> Result<ExperimentCtx> {
+    let out = PathBuf::from(f.get("out").cloned().unwrap_or_else(|| "results".into()));
+    match f.get("engine").map(String::as_str) {
+        Some("pjrt") => {
+            let runtime = PjrtRuntime::cpu()?;
+            eprintln!("# PJRT: {}", runtime.platform());
+            let exec = PjrtSimExecutor::load(&runtime, &ArtifactPaths::default_dir())?;
+            Ok(ExperimentCtx { out_dir: out, engine: Engine::Fluid, pjrt: Some(exec) })
+        }
+        Some("des") => Ok(ExperimentCtx { out_dir: out, engine: Engine::Des, pjrt: None }),
+        _ => Ok(ExperimentCtx { out_dir: out, engine: Engine::Fluid, pjrt: None }),
+    }
+}
+
+fn cmd_experiment(rest: &[String]) -> Result<()> {
+    let id = rest.first().map(String::as_str).unwrap_or("all");
+    let f = flags(if rest.len() > 1 { &rest[1..] } else { &[] });
+    let ctx = make_ctx(&f)?;
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    let run = |name: &str, text: String| {
+        println!("{text}");
+        let path = ctx.out_dir.join(format!("{name}.txt"));
+        let _ = std::fs::write(path, text);
+    };
+    match id {
+        "table1" => run("table1", report::table1_report()),
+        "table2" => run("table2", report::table2_report(&ctx)?),
+        "fig1" => run("fig1", report::fig1_report(&ctx)?),
+        "fig3" => run("fig3", report::fig3_report(&ctx)?),
+        "fig4" => run("fig4", report::fig4_report()),
+        "fig6" => run("fig6", report::fig6_report(&ctx)?),
+        "fig7" => run("fig7", report::fig7_report(&ctx)?),
+        "fig8" => run("fig8", report::fig8_report(&ctx)?),
+        "fig9" => run("fig9", report::fig9_report(&ctx)?),
+        "ablation" => run("ablation", report::ablation_report(&ctx)?),
+        "all" => {
+            run("table1", report::table1_report());
+            run("table2", report::table2_report(&ctx)?);
+            run("fig4", report::fig4_report());
+            run("fig6", report::fig6_report(&ctx)?);
+            run("fig7", report::fig7_report(&ctx)?);
+            run("fig8", report::fig8_report(&ctx)?);
+            run("fig9", report::fig9_report(&ctx)?);
+            run("ablation", report::ablation_report(&ctx)?);
+            run("fig1", report::fig1_report(&ctx)?);
+            run("fig3", report::fig3_report(&ctx)?);
+        }
+        other => {
+            return Err(membw::Error::InvalidPlan(format!("unknown experiment '{other}'")));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_hpcg(f: &HashMap<String, String>) -> Result<()> {
+    let variant = match f.get("variant").map(String::as_str) {
+        Some("modified") => HpcgVariant::Modified,
+        _ => HpcgVariant::Plain,
+    };
+    let m = machine(MachineId::parse(f.get("machine").map(String::as_str).unwrap_or("clx"))?);
+    let ranks: usize = f.get("ranks").and_then(|s| s.parse().ok()).unwrap_or(m.cores);
+    let nx: usize = f.get("nx").and_then(|s| s.parse().ok()).unwrap_or(96);
+    let iters: usize = f.get("iterations").and_then(|s| s.parse().ok()).unwrap_or(2);
+    let prog = hpcg_program(variant, nx, iters);
+    let cfg = CoSimConfig {
+        dt_s: 20e-6,
+        t_max_s: 900.0,
+        initial_stagger_s: 0.2e-3,
+        neighbor_radius: 3,
+        noise: NoiseModel::mild(42),
+    };
+    let eng = CoSimEngine::new(&m, prog, ranks, cfg)?;
+    let r = eng.run();
+    println!(
+        "HPCG ({variant:?}) on {}: {ranks} ranks, nx={nx}, {iters} iterations",
+        m.name
+    );
+    println!(
+        "simulated time: {:.3} s, {} phase records",
+        r.t_end_s,
+        r.trace.records.len()
+    );
+    if let Some(rec) = r.trace.of("DDOT2#1", Some(iters.saturating_sub(1))).first() {
+        let t0 = rec.t_start - 0.01;
+        println!("{}", r.trace.render_ascii(t0, t0 + 0.06, ranks, 110));
+    }
+    Ok(())
+}
+
+fn cmd_dump_configs(rest: &[String]) -> Result<()> {
+    let dir = PathBuf::from(rest.first().map(String::as_str).unwrap_or("configs/machines"));
+    std::fs::create_dir_all(&dir)?;
+    for m in builtin_machines() {
+        let path = dir.join(format!("{}.toml", m.id.key()));
+        std::fs::write(&path, machine_to_toml(&m))?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+/// Cross-validate the PJRT artifact against the in-process engines.
+fn cmd_selftest(f: &HashMap<String, String>) -> Result<()> {
+    let runtime = PjrtRuntime::cpu()?;
+    println!("PJRT platform: {}", runtime.platform());
+    let exec = PjrtSimExecutor::load(&runtime, &ArtifactPaths::default_dir())?;
+    println!("artifact geometry: {:?}", exec.meta());
+
+    let tolerance: f64 = f.get("tol").and_then(|s| s.parse().ok()).unwrap_or(0.03);
+    let mut worst: f64 = 0.0;
+    for mid in MachineId::ALL {
+        let m = machine(mid);
+        let cases = vec![
+            PairingCase {
+                k1: KernelId::Dcopy,
+                k2: KernelId::Ddot2,
+                n1: m.cores / 2,
+                n2: m.cores - m.cores / 2,
+            },
+            PairingCase { k1: KernelId::Stream, k2: KernelId::JacobiV1L2, n1: 1, n2: 1 },
+        ];
+        let via_pjrt = run_cases(&m, &cases, &MeasureEngine::Pjrt(&exec))?;
+        let via_fluid = run_cases(&m, &cases, &MeasureEngine::Fluid)?;
+        for (a, b) in via_pjrt.cases.iter().zip(&via_fluid.cases) {
+            for g in 0..2 {
+                let rel = (a.measured_per_core[g] - b.measured_per_core[g]).abs()
+                    / b.measured_per_core[g].max(1e-9);
+                worst = worst.max(rel);
+            }
+        }
+        // Solo sanity: one DDOT2 core through the artifact.
+        let w = CoreWorkload::from_kernel(&kernel(KernelId::Ddot2), &m, 0);
+        let solo = exec.run(&[SimCase { machine: m.clone(), workloads: vec![w] }])?;
+        let ecm_b1 = membw::ecm::predict(&kernel(KernelId::Ddot2), &m).b1_gbs;
+        let rel = (solo[0][0] - ecm_b1).abs() / ecm_b1;
+        println!(
+            "[{}] solo DDOT2 via pjrt: {:.2} GB/s (ECM {:.2}, {:.1}%)",
+            mid.key(),
+            solo[0][0],
+            ecm_b1,
+            rel * 100.0
+        );
+        worst = worst.max(rel);
+    }
+    println!("worst pjrt-vs-rust deviation: {:.2}%", worst * 100.0);
+    if worst > tolerance {
+        return Err(membw::Error::Runtime(format!(
+            "selftest deviation {:.2}% exceeds tolerance {:.2}%",
+            worst * 100.0,
+            tolerance * 100.0
+        )));
+    }
+    println!("selftest OK");
+    Ok(())
+}

@@ -1,0 +1,547 @@
+//! One report generator per paper table/figure. Each returns the rendered
+//! text (also suitable for EXPERIMENTS.md) and writes CSV series under the
+//! results directory.
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use crate::config::{builtin_machines, machine, Machine, MachineId};
+use crate::desync::{hpcg_program, CoSimConfig, CoSimEngine, HpcgVariant, NoiseModel};
+use crate::ecm;
+use crate::error::Result;
+use crate::kernels::{kernel, pairing_set, KernelClass, KernelId};
+use crate::report::table::AsciiTable;
+use crate::runtime::PjrtSimExecutor;
+use crate::simulator::{measure_f_bs, Engine};
+use crate::stats::{skewness_dimensioned, BoxSummary, ErrorStats};
+use crate::sweep::{
+    full_domain_splits, pairing_cases, run_cases, symmetric_splits, MeasureEngine, PairingCase,
+    ResultSet,
+};
+
+/// Shared context for experiment generation.
+pub struct ExperimentCtx {
+    /// Output directory for CSV series.
+    pub out_dir: PathBuf,
+    /// In-process engine used when no PJRT executor is supplied.
+    pub engine: Engine,
+    /// Optional PJRT executor (the AOT artifact path); preferred when set.
+    pub pjrt: Option<PjrtSimExecutor>,
+}
+
+impl ExperimentCtx {
+    /// Context using the in-process fluid engine.
+    pub fn fluid(out_dir: PathBuf) -> Self {
+        ExperimentCtx { out_dir, engine: Engine::Fluid, pjrt: None }
+    }
+
+    fn measure_engine(&self) -> MeasureEngine<'_> {
+        match (&self.pjrt, self.engine) {
+            (Some(exec), _) => MeasureEngine::Pjrt(exec),
+            (None, Engine::Fluid) => MeasureEngine::Fluid,
+            (None, Engine::Des) => MeasureEngine::Des,
+        }
+    }
+
+    fn engine_name(&self) -> &'static str {
+        match (&self.pjrt, self.engine) {
+            (Some(_), _) => "pjrt(jax/pallas artifact)",
+            (None, Engine::Fluid) => "fluid(rust)",
+            (None, Engine::Des) => "des(rust)",
+        }
+    }
+
+    fn run(&self, m: &Machine, cases: &[PairingCase]) -> Result<ResultSet> {
+        run_cases(m, cases, &self.measure_engine())
+    }
+
+    fn save(&self, name: &str, rs: &ResultSet) -> Result<()> {
+        rs.write_csv(&self.out_dir.join(format!("{name}.csv")))?;
+        Ok(())
+    }
+}
+
+/// The three pairings shown in Figs. 6/7.
+fn fig6_pairings() -> [(KernelId, KernelId); 3] {
+    [
+        (KernelId::Dcopy, KernelId::Ddot2),
+        (KernelId::JacobiV1L3, KernelId::Ddot1),
+        (KernelId::Stream, KernelId::JacobiV1L2),
+    ]
+}
+
+/// Table I: machine specifications.
+pub fn table1_report() -> String {
+    let mut t = AsciiTable::new(&[
+        "machine", "model", "uarch", "cores", "GHz", "SIMD", "LLC", "transfers", "theor GB/s", "read GB/s",
+    ]);
+    for m in builtin_machines() {
+        t.row(vec![
+            m.id.key().to_string(),
+            m.name.clone(),
+            m.microarch.clone(),
+            m.cores.to_string(),
+            format!("{:.2}", m.freq_ghz),
+            format!("{}B", m.simd_bytes),
+            format!("{:?}", m.llc),
+            format!("{:?}", m.overlap),
+            format!("{:.1}", m.theor_bw_gbs),
+            format!("{:.1}", m.read_bw_gbs),
+        ]);
+    }
+    format!("TABLE I — machine models (paper Table I + calibration)\n\n{}", t.render())
+}
+
+/// Table II: kernel characterization — ECM-predicted and Eq.-3-measured
+/// `f` and `b_s` on all four machines.
+pub fn table2_report(ctx: &ExperimentCtx) -> Result<String> {
+    let mut out = String::new();
+    writeln!(out, "TABLE II — kernel characterization (engine: {})", ctx.engine_name()).unwrap();
+    writeln!(out).unwrap();
+
+    let mut csv = String::from("kernel,machine,mem_lines,code_balance,f_ecm,f_meas,bs_ecm_gbs,bs_meas_gbs,b1_meas_gbs\n");
+    let mut t = AsciiTable::new(&[
+        "kernel", "transf", "B_c[B/F]", "f bdw1", "f bdw2", "f clx", "f rome", "bs bdw1", "bs bdw2", "bs clx", "bs rome",
+    ]);
+    for (id, k) in crate::kernels::all_kernels() {
+        let mut fs = Vec::new();
+        let mut bss = Vec::new();
+        for mid in MachineId::ALL {
+            let m = machine(mid);
+            let meas = match &ctx.pjrt {
+                Some(_) => measure_f_bs(&k, &m, Engine::Fluid), // Eq. 3 route
+                None => measure_f_bs(&k, &m, ctx.engine),
+            };
+            let pred = ecm::predict(&k, &m);
+            writeln!(
+                csv,
+                "{},{},{},{:.3},{:.4},{:.4},{:.2},{:.2},{:.2}",
+                id.key(),
+                mid.key(),
+                k.mem.total(),
+                k.code_balance,
+                pred.f,
+                meas.f,
+                pred.bs_gbs,
+                meas.bs_gbs,
+                meas.b1_gbs,
+            )
+            .unwrap();
+            fs.push(meas.f);
+            bss.push(meas.bs_gbs);
+        }
+        let bc = if k.code_balance.is_finite() { format!("{:.2}", k.code_balance) } else { "—".into() };
+        let class = match k.class {
+            KernelClass::Stencil => " (L3)",
+            _ => "",
+        };
+        t.row(vec![
+            k.name.clone(),
+            format!("{}{}", k.mem.total(), class),
+            bc,
+            format!("{:.3}", fs[0]),
+            format!("{:.3}", fs[1]),
+            format!("{:.3}", fs[2]),
+            format!("{:.3}", fs[3]),
+            format!("{:.1}", bss[0]),
+            format!("{:.1}", bss[1]),
+            format!("{:.1}", bss[2]),
+            format!("{:.1}", bss[3]),
+        ]);
+    }
+    out.push_str(&t.render());
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    std::fs::write(ctx.out_dir.join("table2.csv"), csv)?;
+    Ok(out)
+}
+
+/// Fig. 4: the thread parameter space.
+pub fn fig4_report() -> String {
+    let mut out = String::from("FIG. 4 — thread parameter space (orange = full domain, blue = symmetric)\n\n");
+    for mid in MachineId::ALL {
+        let m = machine(mid);
+        let (orange, blue) = crate::sweep::fig4_points(&m);
+        writeln!(
+            out,
+            "{:5} ({:2} cores): {} full-domain splits, {} symmetric points",
+            mid.key(),
+            m.cores,
+            orange.len(),
+            blue.len()
+        )
+        .unwrap();
+    }
+    out
+}
+
+/// Figs. 6 (full domain) and 7 (symmetric scaling), shared implementation.
+fn fig67_report(ctx: &ExperimentCtx, symmetric: bool) -> Result<String> {
+    let (figname, split_fn): (_, fn(&Machine, KernelId, KernelId) -> Vec<PairingCase>) = if symmetric {
+        ("FIG. 7 — symmetric thread scaling", symmetric_splits as _)
+    } else {
+        ("FIG. 6 — fully populated domain", full_domain_splits as _)
+    };
+    let mut out = String::new();
+    writeln!(out, "{figname} (engine: {})", ctx.engine_name()).unwrap();
+
+    for (k1, k2) in fig6_pairings() {
+        writeln!(out, "\n=== pairing {} + {} ===", kernel(k1).name, kernel(k2).name).unwrap();
+        for mid in MachineId::ALL {
+            let m = machine(mid);
+            let cases = split_fn(&m, k1, k2);
+            let rs = ctx.run(&m, &cases)?;
+            let tag = format!(
+                "{}_{}_{}_{}",
+                if symmetric { "fig7" } else { "fig6" },
+                mid.key(),
+                k1.key(),
+                k2.key()
+            );
+            ctx.save(&tag, &rs)?;
+            let mut t = AsciiTable::new(&[
+                "n1", "n2", "meas pc1", "model pc1", "meas pc2", "model pc2", "total", "err1%", "err2%",
+            ]);
+            for c in &rs.cases {
+                let e = c.errors();
+                t.row(vec![
+                    c.n[0].to_string(),
+                    c.n[1].to_string(),
+                    format!("{:.2}", c.measured_per_core[0]),
+                    format!("{:.2}", c.model_per_core[0]),
+                    format!("{:.2}", c.measured_per_core[1]),
+                    format!("{:.2}", c.model_per_core[1]),
+                    format!("{:.1}", c.measured_total),
+                    format!("{:.1}", e[0] * 100.0),
+                    format!("{:.1}", e[1] * 100.0),
+                ]);
+            }
+            writeln!(out, "\n[{}] per-core bandwidth (GB/s)", mid.key()).unwrap();
+            out.push_str(&t.render());
+        }
+    }
+    Ok(out)
+}
+
+/// Fig. 6.
+pub fn fig6_report(ctx: &ExperimentCtx) -> Result<String> {
+    fig67_report(ctx, false)
+}
+
+/// Fig. 7.
+pub fn fig7_report(ctx: &ExperimentCtx) -> Result<String> {
+    fig67_report(ctx, true)
+}
+
+/// Fig. 8: modeling-error overview across all pairings, symmetric scaling.
+pub fn fig8_report(ctx: &ExperimentCtx) -> Result<String> {
+    let pairs = pairing_cases(&pairing_set(), false);
+    let mut out = String::new();
+    writeln!(
+        out,
+        "FIG. 8 — relative model error, {} pairings, symmetric scaling (engine: {})",
+        pairs.len(),
+        ctx.engine_name()
+    )
+    .unwrap();
+    writeln!(out, "error = |(b_observed - b_model) / b_model| per kernel per thread count\n").unwrap();
+
+    let mut all_errors: Vec<f64> = Vec::new();
+    let mut csv = String::from("machine,n_per_kernel,kernel1,kernel2,err1,err2\n");
+    for mid in MachineId::ALL {
+        let m = machine(mid);
+        let mut machine_errors: Vec<f64> = Vec::new();
+        // Group by thread count for the per-count box plots of the paper.
+        let mut by_count: Vec<Vec<f64>> = vec![Vec::new(); m.cores / 2 + 1];
+        // One batched sweep per machine: all pairings x all thread counts.
+        let cases: Vec<PairingCase> = pairs
+            .iter()
+            .flat_map(|&(k1, k2)| symmetric_splits(&m, k1, k2))
+            .collect();
+        let rs = ctx.run(&m, &cases)?;
+        {
+            for c in &rs.cases {
+                let e = c.errors();
+                by_count[c.n[0]].extend(e);
+                machine_errors.extend(e);
+                writeln!(csv, "{},{},{},{},{:.5},{:.5}", mid.key(), c.n[0], c.kernels[0].key(), c.kernels[1].key(), e[0], e[1]).unwrap();
+            }
+        }
+        all_errors.extend(machine_errors.iter());
+        let stats = ErrorStats::of(&machine_errors);
+        writeln!(
+            out,
+            "[{}] n={} median {:.2}% max {:.2}% | <5%: {:.0}% of cases, <8%: {:.0}%",
+            mid.key(),
+            stats.n,
+            stats.median * 100.0,
+            stats.max * 100.0,
+            stats.frac_below_5pct * 100.0,
+            stats.frac_below_8pct * 100.0
+        )
+        .unwrap();
+        // Per-thread-count box plot (ASCII) as in the paper's panels.
+        for (n, errs) in by_count.iter().enumerate().skip(1) {
+            if errs.is_empty() {
+                continue;
+            }
+            let b = BoxSummary::of(errs);
+            writeln!(out, "  n={:2} {} max={:.1}%", n, b.render_ascii(0.12, 48), b.max * 100.0).unwrap();
+        }
+    }
+    let global = ErrorStats::of(&all_errors);
+    writeln!(
+        out,
+        "\nGLOBAL: {} cases, median {:.2}%, max {:.2}%, <5%: {:.0}%, <8%: {:.0}%  (paper: max <8%, 75% of cases <5%)",
+        global.n,
+        global.median * 100.0,
+        global.max * 100.0,
+        global.frac_below_5pct * 100.0,
+        global.frac_below_8pct * 100.0
+    )
+    .unwrap();
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    std::fs::write(ctx.out_dir.join("fig8_errors.csv"), csv)?;
+    Ok(out)
+}
+
+/// Fig. 9: bandwidth gain/loss of the first kernel in a pairing relative to
+/// its self-paired bandwidth, at half/half occupation.
+pub fn fig9_report(ctx: &ExperimentCtx) -> Result<String> {
+    let set = pairing_set();
+    let mut out = String::new();
+    writeln!(out, "FIG. 9 — bandwidth gain/loss vs self-pairing, half/half domain (engine: {})", ctx.engine_name()).unwrap();
+    let mut csv = String::from("machine,kernel1,kernel2,percore_gbs,self_gbs,rel\n");
+
+    for mid in MachineId::ALL {
+        let m = machine(mid);
+        let half = m.cores / 2;
+        writeln!(out, "\n[{}]", mid.key()).unwrap();
+        // One batched sweep per machine: all (k1, k2) cases at once (the
+        // self-pairings are included in the grid, k2 == k1).
+        let mut cases: Vec<PairingCase> = Vec::with_capacity(set.len() * set.len());
+        for &k1 in &set {
+            for &k2 in &set {
+                cases.push(PairingCase { k1, k2, n1: half, n2: m.cores - half });
+            }
+        }
+        let rs = ctx.run(&m, &cases)?;
+        for (i, &k1) in set.iter().enumerate() {
+            let self_pc = rs.cases[i * set.len() + i].measured_per_core[0];
+            for (j, &k2) in set.iter().enumerate() {
+                let pc = rs.cases[i * set.len() + j].measured_per_core[0];
+                let rel = pc / self_pc;
+                writeln!(csv, "{},{},{},{:.4},{:.4},{:.4}", mid.key(), k1.key(), k2.key(), pc, self_pc, rel).unwrap();
+                let gain = ((rel - 1.0) * 50.0).round().clamp(-20.0, 20.0) as i64;
+                let bar: String = if gain >= 0 {
+                    format!("{:>20}|{:<20}", "", "+".repeat(gain as usize))
+                } else {
+                    format!("{:>20}|{:<20}", "-".repeat((-gain) as usize), "")
+                };
+                writeln!(out, "  {:12} vs {:12} {} {:+.1}%", k1.key(), k2.key(), bar, (rel - 1.0) * 100.0).unwrap();
+            }
+        }
+    }
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    std::fs::write(ctx.out_dir.join("fig9_gainloss.csv"), csv)?;
+    Ok(out)
+}
+
+/// Fig. 1: plain HPCG co-simulation — desynchronization timelines and
+/// per-rank DDOT2 runtimes sorted by start time.
+pub fn fig1_report(ctx: &ExperimentCtx) -> Result<String> {
+    let mut out = String::from("FIG. 1 — plain HPCG co-simulation (multigroup sharing model)\n");
+    let mut csv = String::from("machine,rank,sorted_idx,ddot2_start_s,ddot2_duration_ms\n");
+    for (mid, ranks) in [(MachineId::Bdw2, 9), (MachineId::Clx, 20)] {
+        let m = machine(mid);
+        let prog = hpcg_program(HpcgVariant::Plain, 96, 3);
+        let cfg = CoSimConfig {
+            dt_s: 20e-6,
+            t_max_s: 600.0,
+            initial_stagger_s: 0.2e-3,
+            neighbor_radius: 3,
+            noise: NoiseModel::mild(42),
+        };
+        let eng = CoSimEngine::new(&m, prog, ranks, cfg)?;
+        let r = eng.run();
+
+        let iter = 1; // skip the first iteration (start-up transient)
+        let starts = r.trace.starts_by_rank("DDOT2#1", iter, ranks);
+        let durs = r.trace.durations_by_rank("DDOT2#1", iter, ranks);
+        let mut order: Vec<usize> = (0..ranks).collect();
+        order.sort_by(|&a, &b| starts[a].partial_cmp(&starts[b]).unwrap());
+
+        writeln!(out, "\n[{}] {} ranks — DDOT2 runtime per rank, sorted by start time (early→late):", mid.key(), ranks).unwrap();
+        for (idx, &rank) in order.iter().enumerate() {
+            writeln!(out, "  #{idx:2} rank {rank:2}: start +{:.3} ms, duration {:.3} ms", (starts[rank] - starts[order[0]]) * 1e3, durs[rank] * 1e3).unwrap();
+            writeln!(csv, "{},{},{},{:.6},{:.4}", mid.key(), rank, idx, starts[rank], durs[rank] * 1e3).unwrap();
+        }
+        let early = durs[order[0]];
+        let late = durs[*order.last().unwrap()];
+        writeln!(out, "  early-starter {:.3} ms vs late-starter {:.3} ms ({}), paper: late starters are faster", early * 1e3, late * 1e3, if late < early { "late FASTER ✓" } else { "late slower ✗" }).unwrap();
+
+        // Timeline snippet around the DDOT2 of the chosen iteration.
+        if let Some(rec) = r.trace.of("DDOT2#1", Some(iter)).first() {
+            let t0 = rec.t_start - 0.01;
+            writeln!(out, "\n  timeline (S=SymGS, A=SpMV/Allreduce, D=DDOT):").unwrap();
+            out.push_str(&r.trace.render_ascii(t0, t0 + 0.05, ranks, 100));
+            out.push('\n');
+        }
+    }
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    std::fs::write(ctx.out_dir.join("fig1_ddot2.csv"), csv)?;
+    Ok(out)
+}
+
+/// Fig. 3: modified HPCG (no reductions) — concurrency timelines and
+/// skewness of the accumulated DDOT time distributions.
+pub fn fig3_report(ctx: &ExperimentCtx) -> Result<String> {
+    let mut out = String::from("FIG. 3 — modified HPCG (no Allreduce) on CLX\n");
+    let m = machine(MachineId::Clx);
+    let ranks = 20;
+    let prog = hpcg_program(HpcgVariant::Modified, 96, 3);
+    let cfg = CoSimConfig {
+        dt_s: 20e-6,
+        t_max_s: 600.0,
+        initial_stagger_s: 0.2e-3,
+            neighbor_radius: 3,
+        noise: NoiseModel::mild(7),
+    };
+    let eng = CoSimEngine::new(&m, prog.clone(), ranks, cfg)?;
+    let r = eng.run();
+
+    let mut csv = String::from("label,rank,duration_ms\n");
+    writeln!(out, "\nskewness of per-rank accumulated kernel time (cbrt of 3rd central moment, ms):").unwrap();
+    // DDOT2#1 tail overlaps the halo wait of SymGS-post (resync expected);
+    // DDOT2#2 and DDOT1 are followed by low-f DAXPY/WAXPBY (desync).
+    for (label, expect) in [("DDOT2#1", "negative (resync)"), ("DDOT2#2", "positive (desync)"), ("DDOT1", "positive (desync)")] {
+        let durs = r.trace.durations_by_rank(label, 1, ranks);
+        for (rank, d) in durs.iter().enumerate() {
+            writeln!(csv, "{label},{rank},{:.4}", d * 1e3).unwrap();
+        }
+        let skew_ms = skewness_dimensioned(&durs.iter().map(|d| d * 1e3).collect::<Vec<_>>());
+        writeln!(out, "  {label:8}: skew = {skew_ms:+.3} ms (expected {expect})").unwrap();
+    }
+    writeln!(out, "\nconcurrency timeline of DDOT2#2 (ranks inside the kernel):").unwrap();
+    let conc = r.trace.concurrency("DDOT2#2");
+    let max_c = conc.iter().map(|p| p.count).max().unwrap_or(0);
+    writeln!(out, "  peak concurrency {max_c} of {ranks} ranks ({} boundary events)", conc.len()).unwrap();
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    std::fs::write(ctx.out_dir.join("fig3_skewness.csv"), csv)?;
+    Ok(out)
+}
+
+/// Ablation (DESIGN.md §5.10): the paper argues that the request fraction
+/// `f` — not code balance or plain thread counts — is the right weight for
+/// bandwidth sharing. Replay the Fig. 8 sweep scoring the f-model against
+/// the equal-share and code-balance baselines.
+pub fn ablation_report(ctx: &ExperimentCtx) -> Result<String> {
+    use crate::sharing::{code_balance_share, equal_share, KernelGroup};
+    let pairs = pairing_cases(&pairing_set(), false);
+    let mut out = String::new();
+    writeln!(out, "ABLATION — f-model (paper) vs equal-share vs code-balance weighting").unwrap();
+    writeln!(out, "error metric as in Fig. 8; symmetric scaling, all pairings
+").unwrap();
+
+    let mut err_model: Vec<f64> = Vec::new();
+    let mut err_equal: Vec<f64> = Vec::new();
+    let mut err_bc: Vec<f64> = Vec::new();
+    for mid in MachineId::ALL {
+        let m = machine(mid);
+        let cases: Vec<PairingCase> = pairs
+            .iter()
+            .flat_map(|&(k1, k2)| symmetric_splits(&m, k1, k2))
+            .collect();
+        let rs = ctx.run(&m, &cases)?;
+        for c in &rs.cases {
+            err_model.extend(c.errors());
+            // Equal-share baseline: per-core bandwidth identical across
+            // groups = measured_total / n_t (what `equal_share` predicts
+            // once normalized to the observed total).
+            let nt = (c.n[0] + c.n[1]) as f64;
+            let eq_pc = c.measured_total / nt;
+            err_equal.push(crate::stats::rel_error(c.measured_per_core[0], eq_pc));
+            err_equal.push(crate::stats::rel_error(c.measured_per_core[1], eq_pc));
+            // Code-balance baseline: weight by B_c instead of f.
+            let b1 = kernel(c.kernels[0]);
+            let b2 = kernel(c.kernels[1]);
+            let bc = code_balance_share(
+                &[
+                    KernelGroup { n: c.n[0], f: 1.0, bs_gbs: c.model_total },
+                    KernelGroup { n: c.n[1], f: 1.0, bs_gbs: c.model_total },
+                ],
+                &[b1.code_balance, b2.code_balance],
+            );
+            // Normalize the code-balance split to the measured total.
+            let denom: f64 = bc.groups.iter().map(|e| e.group_bw_gbs).sum();
+            for g in 0..2 {
+                let pc = if denom > 0.0 && c.n[g] > 0 {
+                    c.measured_total * bc.groups[g].group_bw_gbs / denom / c.n[g] as f64
+                } else {
+                    0.0
+                };
+                err_bc.push(crate::stats::rel_error(c.measured_per_core[g], pc));
+            }
+            // Sanity: `equal_share` is the formal version of the eq_pc
+            // shortcut above (uniform f) — both split by thread count.
+            debug_assert!({
+                let es = equal_share(&[
+                    KernelGroup { n: c.n[0], f: 0.5, bs_gbs: 60.0 },
+                    KernelGroup { n: c.n[1], f: 0.5, bs_gbs: 60.0 },
+                ]);
+                (es.groups[0].alpha - c.n[0] as f64 / nt).abs() < 1e-9
+            });
+        }
+    }
+    for (name, errs) in [("f-model (Eqs. 4+5)", &err_model), ("equal share", &err_equal), ("code balance", &err_bc)] {
+        let st = ErrorStats::of(errs);
+        writeln!(
+            out,
+            "{:22} median {:5.2}%  max {:6.2}%  <5%: {:5.1}%  <8%: {:5.1}%",
+            name,
+            st.median * 100.0,
+            st.max * 100.0,
+            st.frac_below_5pct * 100.0,
+            st.frac_below_8pct * 100.0
+        )
+        .unwrap();
+    }
+    writeln!(out, "
+paper's argument: f embeds machine overlap behaviour; code balance does not.").unwrap();
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    std::fs::write(ctx.out_dir.join("ablation.txt"), &out)?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablation_model_beats_baselines() {
+        let ctx = ExperimentCtx::fluid(std::env::temp_dir().join("membw-ablation"));
+        let text = ablation_report(&ctx).unwrap();
+        // The f-model line must show a lower max error than both baselines.
+        let max_of = |tag: &str| -> f64 {
+            let line = text.lines().find(|l| l.starts_with(tag)).unwrap();
+            let idx = line.find("max").unwrap();
+            line[idx + 3..].trim().split('%').next().unwrap().trim().parse().unwrap()
+        };
+        assert!(max_of("f-model") < max_of("equal share"));
+        assert!(max_of("f-model") < max_of("code balance"));
+    }
+
+    #[test]
+    fn table1_lists_four_machines() {
+        let s = table1_report();
+        for key in ["bdw1", "bdw2", "clx", "rome"] {
+            assert!(s.contains(key), "missing {key}");
+        }
+    }
+
+    #[test]
+    fn fig4_report_counts() {
+        let s = fig4_report();
+        assert!(s.contains("9 full-domain splits")); // BDW-1: 10 cores
+        assert!(s.contains("10 symmetric points")); // CLX: 20 cores
+    }
+}

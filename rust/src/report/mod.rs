@@ -1,0 +1,14 @@
+//! Report layer: regenerates every table and figure of the paper as text
+//! (ASCII) plus machine-readable CSV under a results directory.
+//!
+//! One function per experiment; the CLI (`repro experiment <id>`) and the
+//! bench harness call these.
+
+mod experiments;
+mod table;
+
+pub use experiments::{
+    ablation_report, fig1_report, fig3_report, fig4_report, fig6_report, fig7_report, fig8_report, fig9_report,
+    table1_report, table2_report, ExperimentCtx,
+};
+pub use table::AsciiTable;

@@ -1,0 +1,122 @@
+//! Artifact discovery and geometry metadata.
+//!
+//! `make artifacts` (the build-time Python step) writes the HLO text files
+//! plus an `artifacts.meta` key=value file describing the compiled shapes;
+//! the runtime refuses to run with mismatched geometry rather than
+//! producing silent garbage.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// Geometry the artifacts were compiled for (see `python/compile/aot.py`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    /// Batch dimension of the contention simulation.
+    pub batch: usize,
+    /// Padded core dimension.
+    pub n_cores: usize,
+    /// Cycles per compiled chunk.
+    pub chunk_cycles: usize,
+    /// Warm-up chunks baked into the artifact.
+    pub warmup_chunks: usize,
+    /// Measurement chunks baked into the artifact.
+    pub measure_chunks: usize,
+    /// Total measured cycles (`measure_chunks * chunk_cycles`).
+    pub measure_cycles: usize,
+    /// Batch dimension of the analytic-model artifact.
+    pub analytic_batch: usize,
+}
+
+/// Paths of the artifact bundle.
+#[derive(Debug, Clone)]
+pub struct ArtifactPaths {
+    /// Directory containing the bundle.
+    pub dir: PathBuf,
+    /// Batched contention simulation HLO.
+    pub contention_sim: PathBuf,
+    /// Batched analytic model HLO.
+    pub analytic_model: PathBuf,
+    /// Geometry metadata.
+    pub meta: PathBuf,
+}
+
+impl ArtifactPaths {
+    /// Locate the bundle in `dir`, verifying all files exist.
+    pub fn locate(dir: &Path) -> Result<Self> {
+        let paths = ArtifactPaths {
+            dir: dir.to_path_buf(),
+            contention_sim: dir.join("contention_sim.hlo.txt"),
+            analytic_model: dir.join("analytic_model.hlo.txt"),
+            meta: dir.join("artifacts.meta"),
+        };
+        for p in [&paths.contention_sim, &paths.analytic_model, &paths.meta] {
+            if !p.exists() {
+                return Err(Error::MissingArtifact(p.display().to_string()));
+            }
+        }
+        Ok(paths)
+    }
+
+    /// Default location: `$MEMBW_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("MEMBW_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Parse the geometry metadata.
+    pub fn load_meta(&self) -> Result<ArtifactMeta> {
+        let text = std::fs::read_to_string(&self.meta)?;
+        let map: HashMap<&str, &str> = text
+            .lines()
+            .filter_map(|l| l.split_once('='))
+            .map(|(k, v)| (k.trim(), v.trim()))
+            .collect();
+        let get = |k: &str| -> Result<usize> {
+            map.get(k)
+                .ok_or_else(|| Error::Config {
+                    path: self.meta.display().to_string(),
+                    msg: format!("missing key '{k}'"),
+                })?
+                .parse()
+                .map_err(|e| Error::Config {
+                    path: self.meta.display().to_string(),
+                    msg: format!("bad value for '{k}': {e}"),
+                })
+        };
+        Ok(ArtifactMeta {
+            batch: get("batch")?,
+            n_cores: get("n_cores")?,
+            chunk_cycles: get("chunk_cycles")?,
+            warmup_chunks: get("warmup_chunks")?,
+            measure_chunks: get("measure_chunks")?,
+            measure_cycles: get("measure_cycles")?,
+            analytic_batch: get("analytic_batch")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifact_reported() {
+        let err = ArtifactPaths::locate(Path::new("/nonexistent-dir-xyz")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn meta_parses_when_bundle_present() {
+        // Runs against the real bundle when it has been built.
+        let dir = ArtifactPaths::default_dir();
+        if let Ok(paths) = ArtifactPaths::locate(&dir) {
+            let meta = paths.load_meta().unwrap();
+            assert!(meta.batch >= 1);
+            assert!(meta.n_cores >= 20, "must cover the largest machine");
+            assert_eq!(meta.measure_cycles, meta.measure_chunks * meta.chunk_cycles);
+        }
+    }
+}

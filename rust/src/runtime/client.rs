@@ -1,0 +1,76 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! Pattern from /opt/xla-example/load_hlo.rs: HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// A PJRT client plus compiled executables (one per artifact).
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled HLO module ready for execution.
+pub struct PjrtExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Path the module was loaded from (diagnostics).
+    pub source: String,
+}
+
+impl PjrtRuntime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(Error::runtime)?;
+        Ok(PjrtRuntime { client })
+    }
+
+    /// Human-readable platform string.
+    pub fn platform(&self) -> String {
+        format!(
+            "{} ({} devices)",
+            self.client.platform_name(),
+            self.client.device_count()
+        )
+    }
+
+    /// Load an HLO text file and compile it.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<PjrtExecutable> {
+        if !path.exists() {
+            return Err(Error::MissingArtifact(path.display().to_string()));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+        )
+        .map_err(Error::runtime)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(Error::runtime)?;
+        Ok(PjrtExecutable { exe, source: path.display().to_string() })
+    }
+}
+
+impl PjrtExecutable {
+    /// Execute with f32 input planes; returns the flat f32 outputs of the
+    /// (1-tuple or k-tuple) result, in order.
+    ///
+    /// Each input is `(data, dims)`; data length must equal the dim product.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                debug_assert_eq!(data.len() as i64, dims.iter().product::<i64>());
+                xla::Literal::vec1(data).reshape(dims).map_err(Error::runtime)
+            })
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals).map_err(Error::runtime)?;
+        let out = result[0][0].to_literal_sync().map_err(Error::runtime)?;
+        // Lowered with return_tuple=True: the output is always a tuple.
+        let parts = out.to_tuple().map_err(Error::runtime)?;
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(Error::runtime))
+            .collect()
+    }
+}

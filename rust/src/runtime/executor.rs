@@ -1,0 +1,107 @@
+//! High-level batched execution of the contention-simulation artifact.
+//!
+//! Packs simulation cases (machine + per-core workloads) into the
+//! artifact's `[B, N]` f32 planes, executes through PJRT, and unpacks
+//! per-core bandwidths in GB/s. Cases for *different machines* can share a
+//! batch — the capacity is a per-config runtime input.
+
+use std::path::Path;
+
+use crate::config::Machine;
+use crate::error::Result;
+use crate::runtime::artifact::{ArtifactMeta, ArtifactPaths};
+use crate::runtime::client::{PjrtExecutable, PjrtRuntime};
+use crate::simulator::CoreWorkload;
+
+/// One simulation case: a machine and its per-core workload vector.
+#[derive(Debug, Clone)]
+pub struct SimCase {
+    /// Machine the case runs on (frequency, capacity, queue parameters).
+    pub machine: Machine,
+    /// One workload per active core (≤ machine.cores).
+    pub workloads: Vec<CoreWorkload>,
+}
+
+/// Executor for the batched contention-simulation artifact.
+pub struct PjrtSimExecutor {
+    exe: PjrtExecutable,
+    meta: ArtifactMeta,
+}
+
+impl PjrtSimExecutor {
+    /// Load and compile the artifact bundle from `dir`.
+    pub fn load(runtime: &PjrtRuntime, dir: &Path) -> Result<Self> {
+        let paths = ArtifactPaths::locate(dir)?;
+        let meta = paths.load_meta()?;
+        let exe = runtime.load_hlo_text(&paths.contention_sim)?;
+        Ok(PjrtSimExecutor { exe, meta })
+    }
+
+    /// Artifact geometry.
+    pub fn meta(&self) -> ArtifactMeta {
+        self.meta
+    }
+
+    /// Run an arbitrary number of cases; cases are packed `batch` at a time
+    /// (the final partial batch is padded with idle configs). Returns
+    /// per-case per-core bandwidths in GB/s, aligned with the input order.
+    pub fn run(&self, cases: &[SimCase]) -> Result<Vec<Vec<f64>>> {
+        let mut out = Vec::with_capacity(cases.len());
+        for chunk in cases.chunks(self.meta.batch) {
+            out.extend(self.run_batch(chunk)?);
+        }
+        Ok(out)
+    }
+
+    /// Run one (possibly partial) batch.
+    fn run_batch(&self, cases: &[SimCase]) -> Result<Vec<Vec<f64>>> {
+        let b = self.meta.batch;
+        let n = self.meta.n_cores;
+        assert!(cases.len() <= b);
+
+        let mut d = vec![0.0f32; b * n];
+        let mut c = vec![1.0f32; b * n];
+        let mut win = vec![0.0f32; b * n];
+        let mut cap = vec![1.0f32; b]; // harmless nonzero for padded configs
+
+        for (k, case) in cases.iter().enumerate() {
+            let m = &case.machine;
+            assert!(case.workloads.len() <= n, "artifact n_cores too small");
+            cap[k] = m.capacity_lines_per_cy() as f32;
+            let q = &m.queue;
+            for (i, w) in case.workloads.iter().enumerate() {
+                d[k * n + i] = w.demand_lines_per_cy as f32;
+                c[k * n + i] = w.cost_factor as f32;
+                win[k * n + i] =
+                    (q.depth_floor + q.depth_beta * w.demand_lines_per_cy * w.cost_factor * q.base_latency_cy)
+                        as f32;
+            }
+        }
+
+        let bn = [b as i64, n as i64];
+        let b1 = [b as i64, 1i64];
+        let outputs = self.exe.run_f32(&[
+            (&d, &bn[..]),
+            (&c, &bn[..]),
+            (&win, &bn[..]),
+            (&cap, &b1[..]),
+        ])?;
+        let served = &outputs[0];
+
+        let cycles = self.meta.measure_cycles as f64;
+        Ok(cases
+            .iter()
+            .enumerate()
+            .map(|(k, case)| {
+                case.workloads
+                    .iter()
+                    .enumerate()
+                    .map(|(i, _)| {
+                        let lines_per_cy = served[k * n + i] as f64 / cycles;
+                        case.machine.lines_per_cy_to_gbs(lines_per_cy)
+                    })
+                    .collect()
+            })
+            .collect())
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) and executes them from the coordinator's hot
+//! path. Python never runs here.
+//!
+//! * [`artifact`] — artifact discovery + geometry metadata,
+//! * [`client`] — PJRT CPU client and executable wrappers,
+//! * [`executor`] — high-level batched simulation / analytic-model
+//!   execution (packing [`crate::simulator::CoreWorkload`]s into the
+//!   artifact's `[B, N]` planes and unpacking bandwidths).
+
+mod artifact;
+mod client;
+mod executor;
+
+pub use artifact::{ArtifactMeta, ArtifactPaths};
+pub use client::{PjrtExecutable, PjrtRuntime};
+pub use executor::{PjrtSimExecutor, SimCase};

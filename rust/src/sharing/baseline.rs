@@ -1,0 +1,77 @@
+//! Baseline models the paper argues against — kept for ablation benches.
+//!
+//! 1. **Equal share**: bandwidth splits purely by thread count, ignoring
+//!    kernel characteristics (what one would assume under naive FCFS).
+//! 2. **Code-balance share**: weights threads by the kernel's code balance
+//!    `B_c` instead of `f`. Sect. III explains why this is a worse metric:
+//!    it ignores machine overlap characteristics and intra-cache traffic.
+
+use crate::sharing::model::KernelGroup;
+use crate::sharing::multigroup::{share_multigroup, GroupShare};
+
+/// Which baseline to evaluate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BaselineKind {
+    /// Thread-count-proportional split.
+    EqualShare,
+    /// Code-balance-weighted split.
+    CodeBalance,
+}
+
+/// Equal-share baseline: every thread gets the same bandwidth regardless of
+/// the kernel it runs (replace every `f` with a common constant — the model
+/// (5) then degenerates to thread-count proportionality).
+pub fn equal_share(groups: &[KernelGroup]) -> GroupShare {
+    let unif: Vec<KernelGroup> = groups
+        .iter()
+        .map(|g| KernelGroup { n: g.n, f: 1.0, bs_gbs: g.bs_gbs })
+        .collect();
+    share_multigroup(&unif)
+}
+
+/// Code-balance baseline: weight by `B_c` (bytes per flop at the memory
+/// level) normalized to an `f`-like scale. `code_balance[i]` must align with
+/// `groups[i]`; infinite balances (flop-free kernels like DCOPY) are clamped.
+pub fn code_balance_share(groups: &[KernelGroup], code_balance: &[f64]) -> GroupShare {
+    assert_eq!(groups.len(), code_balance.len());
+    let max_bc = code_balance
+        .iter()
+        .cloned()
+        .filter(|b| b.is_finite())
+        .fold(1.0f64, f64::max);
+    let weighted: Vec<KernelGroup> = groups
+        .iter()
+        .zip(code_balance)
+        .map(|(g, &bc)| KernelGroup {
+            n: g.n,
+            f: if bc.is_finite() { bc / max_bc } else { 1.0 },
+            bs_gbs: g.bs_gbs,
+        })
+        .collect();
+    share_multigroup(&weighted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn g(n: usize, f: f64, bs: f64) -> KernelGroup {
+        KernelGroup { n, f, bs_gbs: bs }
+    }
+
+    #[test]
+    fn equal_share_ignores_f() {
+        let a = equal_share(&[g(6, 0.4, 60.0), g(4, 0.1, 60.0)]);
+        assert!((a.groups[0].alpha - 0.6).abs() < 1e-9);
+        assert!((a.groups[1].alpha - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn code_balance_handles_infinite_bc() {
+        let shares = code_balance_share(
+            &[g(5, 0.3, 55.0), g(5, 0.3, 55.0)],
+            &[f64::INFINITY, 16.0],
+        );
+        assert!(shares.groups[0].alpha >= shares.groups[1].alpha);
+    }
+}

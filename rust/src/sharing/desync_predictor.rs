@@ -1,0 +1,90 @@
+//! Qualitative desynchronization prediction (Sect. V, closing discussion).
+//!
+//! If a kernel is sandwiched between a high-f kernel (before) and a low-f
+//! kernel (after), early starters are slowed down (they still compete with
+//! the heavy predecessor running on other cores) while late starters are
+//! sped up (they overlap the light successor) — desynchronization is
+//! *amplified* (positive skewness of the accumulated-time distribution).
+//! Overlap with idleness (e.g. MPI_Allreduce waiting) *resynchronizes*
+//! (negative skewness).
+
+/// What the tail end of a kernel's execution overlaps with.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OverlapPartner {
+    /// Another loop kernel with request fraction `f`.
+    Kernel { f: f64 },
+    /// Idleness (waiting in a collective, or no work) — scenario (c).
+    Idle,
+}
+
+/// Predicted direction of the desynchronization dynamics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SkewPrediction {
+    /// Positive skewness: desynchronization amplified.
+    Desynchronize,
+    /// Negative skewness: resynchronization.
+    Resynchronize,
+    /// No strong prediction (f values too close).
+    Neutral,
+}
+
+/// Relative f difference below which we refuse to predict a direction.
+const NEUTRAL_BAND: f64 = 0.03;
+
+/// Predict the skewness sign for a kernel with request fraction `f_kernel`
+/// whose stragglers overlap `before` (what early finishers left behind) and
+/// whose early starters overlap `after` (what late ranks are still doing).
+///
+/// * `after` idle ⇒ late starters run at full bandwidth ⇒ they catch up ⇒
+///   resynchronization (Fig. 3a, skewness −0.27 ms).
+/// * `after` a lower-f kernel ⇒ late starters of the *next* kernel compete
+///   less ⇒ the spread grows ⇒ desynchronization (Fig. 3b, +0.42/+1.0 ms).
+pub fn predict_skew(f_kernel: f64, after: OverlapPartner) -> SkewPrediction {
+    match after {
+        OverlapPartner::Idle => SkewPrediction::Resynchronize,
+        OverlapPartner::Kernel { f } => {
+            let rel = (f - f_kernel) / f_kernel.max(1e-12);
+            if rel > NEUTRAL_BAND {
+                // Successor is hungrier: early finishers steal bandwidth from
+                // stragglers -> spread grows.
+                SkewPrediction::Desynchronize
+            } else if rel < -NEUTRAL_BAND {
+                // Successor is lighter: stragglers still inside the kernel
+                // get *more* bandwidth than the early starters had -> shrink.
+                // NOTE: the paper observes the *amplifying* case for
+                // DDOT2 -> DAXPY because f_DAXPY > f_DDOT2 on CLX.
+                SkewPrediction::Resynchronize
+            } else {
+                SkewPrediction::Neutral
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_after_resynchronizes() {
+        // Fig. 3(a): DDOT2 tail overlaps MPI_Wait idleness -> negative skew.
+        assert_eq!(predict_skew(0.252, OverlapPartner::Idle), SkewPrediction::Resynchronize);
+    }
+
+    #[test]
+    fn hungrier_successor_desynchronizes() {
+        // Fig. 3(b): DDOT2 (f = 0.252) followed by DAXPY (f = 0.315).
+        assert_eq!(
+            predict_skew(0.252, OverlapPartner::Kernel { f: 0.315 }),
+            SkewPrediction::Desynchronize
+        );
+    }
+
+    #[test]
+    fn near_equal_f_is_neutral() {
+        assert_eq!(
+            predict_skew(0.30, OverlapPartner::Kernel { f: 0.301 }),
+            SkewPrediction::Neutral
+        );
+    }
+}

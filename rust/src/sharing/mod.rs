@@ -1,0 +1,19 @@
+//! The paper's contribution: the analytic bandwidth-sharing model.
+//!
+//! * [`model`] — Eqs. (4) and (5) for two thread groups,
+//! * [`multigroup`] — the natural k-group generalization (used by the
+//!   desynchronization co-simulator and the task-scheduler example),
+//! * [`baseline`] — the naive models the paper argues against (equal share
+//!   per thread; code-balance-weighted share), kept as ablation baselines,
+//! * [`desync_predictor`] — qualitative desync/resync prediction from
+//!   kernel pairings (Sect. V closing discussion).
+
+mod baseline;
+mod desync_predictor;
+mod model;
+mod multigroup;
+
+pub use baseline::{code_balance_share, equal_share, BaselineKind};
+pub use desync_predictor::{predict_skew, OverlapPartner, SkewPrediction};
+pub use model::{overlapped_saturated_bw, share_two_groups, KernelGroup, SharingPrediction};
+pub use multigroup::{share_multigroup, GroupShare};

@@ -1,0 +1,118 @@
+//! The analytic bandwidth-sharing model, Eqs. (4) and (5).
+//!
+//! Inputs per kernel group: thread count `n`, memory request fraction `f`
+//! (Eq. 3: measured single-thread bandwidth over saturated bandwidth) and
+//! saturated bandwidth `b_s`. Nothing else about the code matters — that is
+//! the paper's point.
+
+/// One group of threads all executing the same kernel.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelGroup {
+    /// Number of threads in the group (`n_t^I` / `n_t^II`).
+    pub n: usize,
+    /// Memory request fraction `f` of the kernel.
+    pub f: f64,
+    /// Saturated (full-domain, homogeneous) bandwidth of the kernel, GB/s.
+    pub bs_gbs: f64,
+}
+
+/// Model output for a two-group pairing.
+#[derive(Debug, Clone, Copy)]
+pub struct SharingPrediction {
+    /// Overlapped saturated bandwidth `b(n_I, n_II)` (Eq. 4), GB/s.
+    pub b_mix_gbs: f64,
+    /// Group bandwidth shares `α^I`, `α^II` (Eq. 5); sum to 1.
+    pub alpha: [f64; 2],
+    /// Aggregate bandwidth per group, GB/s.
+    pub group_bw_gbs: [f64; 2],
+    /// Per-core bandwidth per group, GB/s (what Figs. 6–8 plot).
+    pub per_core_gbs: [f64; 2],
+    /// True iff the domain is bandwidth-saturated (the raw Eq. 5 regime);
+    /// otherwise each group was capped at its unconstrained demand
+    /// `n * f * b_s` and the leftover redistributed (nonsaturated case,
+    /// Sect. IV last paragraph).
+    pub saturated: bool,
+}
+
+/// Eq. (4): thread-weighted mean of the homogeneous saturated bandwidths.
+pub fn overlapped_saturated_bw(g1: &KernelGroup, g2: &KernelGroup) -> f64 {
+    let (n1, n2) = (g1.n as f64, g2.n as f64);
+    if n1 + n2 == 0.0 {
+        return 0.0;
+    }
+    (n1 * g1.bs_gbs + n2 * g2.bs_gbs) / (n1 + n2)
+}
+
+/// Apply the full model (Eqs. 4 + 5) to a two-group pairing.
+///
+/// In the saturated regime this is exactly the paper's Eq. (5). When the
+/// combined demand `Σ n_k f_k b_s,k` does not fill the overlapped saturated
+/// bandwidth, each group simply runs at its unconstrained speed (`f b_s` per
+/// core) — the paper notes the model "can also be applied to the
+/// nonsaturated case"; the cap makes that statement concrete and matches
+/// the linear low-core region of Fig. 7.
+pub fn share_two_groups(g1: &KernelGroup, g2: &KernelGroup) -> SharingPrediction {
+    let groups = [*g1, *g2];
+    let multi = crate::sharing::share_multigroup(&groups);
+    SharingPrediction {
+        b_mix_gbs: multi.b_mix_gbs,
+        alpha: [multi.groups[0].alpha, multi.groups[1].alpha],
+        group_bw_gbs: [multi.groups[0].group_bw_gbs, multi.groups[1].group_bw_gbs],
+        per_core_gbs: [multi.groups[0].per_core_gbs, multi.groups[1].per_core_gbs],
+        saturated: multi.saturated,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn g(n: usize, f: f64, bs: f64) -> KernelGroup {
+        KernelGroup { n, f, bs_gbs: bs }
+    }
+
+    #[test]
+    fn eq4_weighted_mean() {
+        // Fig. 5 example: 6 cores kernel I, 4 cores kernel II.
+        let b = overlapped_saturated_bw(&g(6, 0.3, 50.0), &g(4, 0.2, 70.0));
+        assert!((b - (6.0 * 50.0 + 4.0 * 70.0) / 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn homogeneous_pairing_splits_by_thread_count() {
+        // f^I = f^II: share is solely determined by thread counts (Sect. IV).
+        let p = share_two_groups(&g(6, 0.3, 60.0), &g(4, 0.3, 60.0));
+        assert!((p.alpha[0] - 0.6).abs() < 1e-12);
+        assert!((p.alpha[1] - 0.4).abs() < 1e-12);
+        // Per-core bandwidth is then identical across groups.
+        assert!((p.per_core_gbs[0] - p.per_core_gbs[1]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn higher_f_gets_disproportionate_share() {
+        // Saturated domain: kernel with higher f queues more requests.
+        let p = share_two_groups(&g(5, 0.4, 60.0), &g(5, 0.2, 60.0));
+        assert!(p.saturated);
+        assert!((p.alpha[0] - 2.0 / 3.0).abs() < 1e-12); // 5*0.4 / (5*0.4+5*0.2)
+        assert!(p.per_core_gbs[0] > p.per_core_gbs[1]);
+    }
+
+    #[test]
+    fn nonsaturated_case_runs_at_solo_speed() {
+        // One core each, tiny f: no contention, both get f*bs per core.
+        let p = share_two_groups(&g(1, 0.2, 60.0), &g(1, 0.3, 80.0));
+        assert!(!p.saturated);
+        assert!((p.per_core_gbs[0] - 0.2 * 60.0).abs() < 1e-9);
+        assert!((p.per_core_gbs[1] - 0.3 * 80.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shares_sum_to_one_and_bandwidth_conserved() {
+        let p = share_two_groups(&g(7, 0.35, 55.0), &g(3, 0.18, 65.0));
+        assert!((p.alpha[0] + p.alpha[1] - 1.0).abs() < 1e-12);
+        assert!(
+            (p.group_bw_gbs[0] + p.group_bw_gbs[1] - p.b_mix_gbs).abs() < 1e-9,
+            "saturated: group bandwidths must sum to the overlapped b_s"
+        );
+    }
+}

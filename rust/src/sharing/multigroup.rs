@@ -1,0 +1,160 @@
+//! Multigroup generalization of the sharing model.
+//!
+//! The paper derives Eqs. (4)/(5) for two groups but nothing in the
+//! derivation is specific to two; the desynchronization co-simulator needs
+//! the k-group form (at any instant, ranks are spread over several kernels
+//! plus idle phases). Idle/communicating cores are simply *absent* from the
+//! group list — that is scenario (c) of Fig. 2.
+
+use crate::sharing::model::KernelGroup;
+
+/// Per-group result of the multigroup model.
+#[derive(Debug, Clone, Copy)]
+pub struct GroupShareEntry {
+    /// Bandwidth share of the group (generalized Eq. 5; sums to 1 over
+    /// groups in the saturated regime).
+    pub alpha: f64,
+    /// Aggregate bandwidth of the group, GB/s.
+    pub group_bw_gbs: f64,
+    /// Per-core bandwidth within the group, GB/s.
+    pub per_core_gbs: f64,
+}
+
+/// Result of the multigroup model.
+#[derive(Debug, Clone)]
+pub struct GroupShare {
+    /// Overlapped saturated bandwidth (generalized Eq. 4), GB/s.
+    pub b_mix_gbs: f64,
+    /// Per-group outcome, in input order.
+    pub groups: Vec<GroupShareEntry>,
+    /// Whether the domain is saturated (raw proportional regime).
+    pub saturated: bool,
+}
+
+/// Generalized Eqs. (4)+(5) with demand capping for the nonsaturated case.
+///
+/// Water-filling: a group can never obtain more than its unconstrained
+/// demand `n·f·b_s` (that would mean running faster than solo execution).
+/// Uncapped groups split the remaining bandwidth proportionally to
+/// `n_k · f_k`. The iteration converges in ≤ k rounds.
+pub fn share_multigroup(groups: &[KernelGroup]) -> GroupShare {
+    let n_tot: f64 = groups.iter().map(|g| g.n as f64).sum();
+    if n_tot == 0.0 {
+        return GroupShare { b_mix_gbs: 0.0, groups: vec![], saturated: false };
+    }
+    // Generalized Eq. (4): thread-weighted mean saturated bandwidth.
+    let b_mix: f64 = groups.iter().map(|g| g.n as f64 * g.bs_gbs).sum::<f64>() / n_tot;
+
+    let demand: Vec<f64> = groups.iter().map(|g| g.n as f64 * g.f * g.bs_gbs).collect();
+    let weight: Vec<f64> = groups.iter().map(|g| g.n as f64 * g.f).collect();
+    let total_demand: f64 = demand.iter().sum();
+    let saturated = total_demand >= b_mix;
+
+    // Water-fill: start with everyone uncapped; repeatedly cap groups whose
+    // proportional allocation would exceed their demand.
+    let k = groups.len();
+    let mut bw = vec![0.0f64; k];
+    let mut capped = vec![false; k];
+    let mut remaining = b_mix.min(total_demand);
+    for _round in 0..k {
+        let wsum: f64 = (0..k).filter(|&i| !capped[i]).map(|i| weight[i]).sum();
+        if wsum <= 0.0 || remaining <= 0.0 {
+            break;
+        }
+        let mut newly_capped = false;
+        for i in 0..k {
+            if capped[i] {
+                continue;
+            }
+            let alloc = remaining * weight[i] / wsum;
+            if alloc >= demand[i] - 1e-12 {
+                bw[i] = demand[i];
+                capped[i] = true;
+                newly_capped = true;
+            }
+        }
+        if newly_capped {
+            remaining = (b_mix.min(total_demand)
+                - (0..k).filter(|&i| capped[i]).map(|i| bw[i]).sum::<f64>())
+            .max(0.0);
+        } else {
+            // No caps hit: final proportional split of the remainder.
+            for i in 0..k {
+                if !capped[i] {
+                    bw[i] = remaining * weight[i] / wsum;
+                }
+            }
+            break;
+        }
+    }
+
+    let total_alloc: f64 = bw.iter().sum();
+    let entries: Vec<GroupShareEntry> = (0..k)
+        .map(|i| GroupShareEntry {
+            alpha: if total_alloc > 0.0 { bw[i] / total_alloc } else { 0.0 },
+            group_bw_gbs: bw[i],
+            per_core_gbs: if groups[i].n > 0 { bw[i] / groups[i].n as f64 } else { 0.0 },
+        })
+        .collect();
+
+    GroupShare { b_mix_gbs: b_mix, groups: entries, saturated }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn g(n: usize, f: f64, bs: f64) -> KernelGroup {
+        KernelGroup { n, f, bs_gbs: bs }
+    }
+
+    #[test]
+    fn reduces_to_two_group_model_when_saturated() {
+        let a = g(6, 0.35, 55.0);
+        let b = g(4, 0.20, 66.0);
+        let multi = share_multigroup(&[a, b]);
+        // Raw Eq. 5 values.
+        let alpha1 = 6.0 * 0.35 / (6.0 * 0.35 + 4.0 * 0.20);
+        assert!(multi.saturated);
+        assert!((multi.groups[0].alpha - alpha1).abs() < 1e-9);
+        let b_mix = (6.0 * 55.0 + 4.0 * 66.0) / 10.0;
+        assert!((multi.b_mix_gbs - b_mix).abs() < 1e-12);
+    }
+
+    #[test]
+    fn three_groups_conserve_bandwidth() {
+        let gs = [g(4, 0.3, 55.0), g(3, 0.25, 60.0), g(3, 0.8, 35.0)];
+        let multi = share_multigroup(&gs);
+        let total: f64 = multi.groups.iter().map(|e| e.group_bw_gbs).sum();
+        assert!(total <= multi.b_mix_gbs + 1e-9);
+        let alpha_sum: f64 = multi.groups.iter().map(|e| e.alpha).sum();
+        assert!((alpha_sum - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn low_demand_group_is_capped_at_solo_speed() {
+        // A single near-idle thread (tiny f) next to a saturating group must
+        // not be awarded more than its own demand.
+        let gs = [g(1, 0.02, 60.0), g(9, 0.4, 55.0)];
+        let multi = share_multigroup(&gs);
+        let solo = 0.02 * 60.0;
+        assert!(multi.groups[0].per_core_gbs <= solo + 1e-9);
+    }
+
+    #[test]
+    fn empty_and_zero_thread_groups() {
+        assert!(share_multigroup(&[]).groups.is_empty());
+        let multi = share_multigroup(&[g(0, 0.3, 60.0), g(2, 0.3, 60.0)]);
+        assert_eq!(multi.groups.len(), 2);
+        assert_eq!(multi.groups[0].group_bw_gbs, 0.0);
+    }
+
+    #[test]
+    fn single_group_reproduces_homogeneous_saturation() {
+        // Full domain, one kernel: aggregate = min(n f b_s, b_s).
+        let multi = share_multigroup(&[g(10, 0.3, 60.0)]);
+        assert!((multi.groups[0].group_bw_gbs - 60.0).abs() < 1e-9);
+        let multi2 = share_multigroup(&[g(2, 0.3, 60.0)]);
+        assert!((multi2.groups[0].group_bw_gbs - 2.0 * 0.3 * 60.0).abs() < 1e-9);
+    }
+}

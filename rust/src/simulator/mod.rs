@@ -1,0 +1,31 @@
+//! The measurement substrate: simulators of a memory contention domain.
+//!
+//! Stands in for the paper's physical BDW/CLX/Rome machines. Two independent
+//! implementations with the same physics (see `DESIGN.md` §4):
+//!
+//! * [`fluid`] — time-stepped fluid-queueing simulator (per-cycle fractional
+//!   state). The JAX/Pallas artifact executed via PJRT implements exactly
+//!   this model; the Rust version here is the cross-validation mirror and
+//!   the engine used where PJRT batching is inconvenient.
+//! * [`des`] — line-granularity discrete-event simulator with an explicit
+//!   FCFS-with-lottery memory queue, integer line requests, and stochastic
+//!   tie-breaking. Higher fidelity, slower; the reference.
+//!
+//! Both deliberately model mechanisms the analytic sharing model ignores
+//! (prefetch-depth floors, queueing latency, write-service penalty, the ECM
+//! latency penalty) — the model error measured in Fig. 8 is real.
+
+mod des;
+mod fluid;
+mod measurement;
+mod workload;
+mod xorshift;
+
+pub use des::{DesConfig, DesResult, DesSimulator};
+pub use fluid::{FluidConfig, FluidResult, FluidSimulator};
+pub use measurement::{
+    measure_f_bs, measure_pairing, measure_scaling, run_engine, Engine, KernelMeasurement,
+    PairingMeasurement,
+};
+pub use workload::CoreWorkload;
+pub use xorshift::XorShift64;

@@ -1,0 +1,70 @@
+//! Per-core workload parameters fed to the simulators.
+//!
+//! A workload is fully characterized by the intrinsic demand rate of the
+//! core (lines per cycle it would consume without contention) and the
+//! service-cost factor of its line mix — the simulator-level reflection of
+//! the paper's claim that only `f` and `b_s` matter.
+
+use crate::config::Machine;
+use crate::ecm;
+use crate::kernels::KernelSignature;
+
+/// Parameters of one simulated core's workload.
+#[derive(Debug, Clone, Copy)]
+pub struct CoreWorkload {
+    /// Intrinsic single-core demand in cache lines per cycle
+    /// (`mem_lines / T_ECM` from the ECM analysis).
+    pub demand_lines_per_cy: f64,
+    /// Service-cost factor of the kernel's line mix (1.0 = pure reads).
+    pub cost_factor: f64,
+    /// Memory request fraction predicted by ECM (`d * c / C`); used for the
+    /// latency-penalty term.
+    pub f_ecm: f64,
+    /// Group tag for bookkeeping (kernel I = 0, kernel II = 1, ...).
+    pub group: usize,
+}
+
+impl CoreWorkload {
+    /// Derive the workload of `kernel` on `machine` via the ECM model.
+    pub fn from_kernel(kernel: &KernelSignature, machine: &Machine, group: usize) -> Self {
+        let p = ecm::predict(kernel, machine);
+        CoreWorkload {
+            demand_lines_per_cy: p.demand_lines_per_cy,
+            cost_factor: p.cost_factor,
+            f_ecm: p.f,
+            group,
+        }
+    }
+
+    /// An idle core (scenario (c) of Fig. 2): zero demand.
+    pub fn idle() -> Self {
+        CoreWorkload { demand_lines_per_cy: 0.0, cost_factor: 1.0, f_ecm: 0.0, group: usize::MAX }
+    }
+
+    /// Whether this core issues any memory traffic.
+    pub fn is_active(&self) -> bool {
+        self.demand_lines_per_cy > 0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{machine, MachineId};
+    use crate::kernels::{kernel, KernelId};
+
+    #[test]
+    fn workload_consistent_with_ecm_f() {
+        let m = machine(MachineId::Bdw1);
+        let k = kernel(KernelId::Stream);
+        let w = CoreWorkload::from_kernel(&k, &m, 0);
+        // f = d * c / C must reproduce the ECM request fraction.
+        let f = w.demand_lines_per_cy * w.cost_factor / m.capacity_lines_per_cy();
+        assert!((f - w.f_ecm).abs() < 1e-9);
+    }
+
+    #[test]
+    fn idle_core_is_inactive() {
+        assert!(!CoreWorkload::idle().is_active());
+    }
+}

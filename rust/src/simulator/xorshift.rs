@@ -1,0 +1,102 @@
+//! Tiny deterministic PRNG (xorshift64*) — keeps simulations reproducible
+//! without an external dependency.
+
+/// xorshift64* generator.
+#[derive(Debug, Clone)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    /// Create a generator; `seed` must not be zero (0 is mapped to a fixed
+    /// non-zero constant).
+    pub fn new(seed: u64) -> Self {
+        XorShift64 { state: if seed == 0 { 0x9E3779B97F4A7C15 } else { seed } }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn next_below(&mut self, n: usize) -> usize {
+        (self.next_f64() * n as f64) as usize % n.max(1)
+    }
+
+    /// Sample an index proportionally to `weights` (all ≥ 0; if the total is
+    /// zero, returns None).
+    pub fn weighted_pick(&mut self, weights: &[f64]) -> Option<usize> {
+        let total: f64 = weights.iter().sum();
+        if total <= 0.0 {
+            return None;
+        }
+        let mut x = self.next_f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return Some(i);
+            }
+        }
+        Some(weights.len() - 1)
+    }
+
+    /// Exponentially distributed sample with the given mean.
+    pub fn next_exp(&mut self, mean: f64) -> f64 {
+        let u = 1.0 - self.next_f64(); // (0, 1]
+        -mean * u.ln()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_fixed_seed() {
+        let mut a = XorShift64::new(42);
+        let mut b = XorShift64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut g = XorShift64::new(7);
+        for _ in 0..10_000 {
+            let x = g.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn weighted_pick_respects_weights() {
+        let mut g = XorShift64::new(1234);
+        let weights = [1.0, 3.0];
+        let mut counts = [0usize; 2];
+        for _ in 0..40_000 {
+            counts[g.weighted_pick(&weights).unwrap()] += 1;
+        }
+        let ratio = counts[1] as f64 / counts[0] as f64;
+        assert!((2.6..3.4).contains(&ratio), "ratio {ratio}");
+        assert_eq!(g.weighted_pick(&[0.0, 0.0]), None);
+    }
+
+    #[test]
+    fn exp_mean_roughly_correct() {
+        let mut g = XorShift64::new(99);
+        let mean: f64 = (0..20_000).map(|_| g.next_exp(5.0)).sum::<f64>() / 20_000.0;
+        assert!((4.8..5.2).contains(&mean), "mean {mean}");
+    }
+}

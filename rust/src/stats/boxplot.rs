@@ -1,0 +1,86 @@
+//! Box-plot summaries (Fig. 8: whiskers = min/max, box = 2nd+3rd quartile,
+//! median marked).
+
+/// Five-number summary of a sample.
+#[derive(Debug, Clone, Copy)]
+pub struct BoxSummary {
+    /// Minimum (lower whisker).
+    pub min: f64,
+    /// First quartile (box bottom).
+    pub q1: f64,
+    /// Median.
+    pub median: f64,
+    /// Third quartile (box top).
+    pub q3: f64,
+    /// Maximum (upper whisker).
+    pub max: f64,
+}
+
+/// Linear-interpolation quantile of a sorted sample.
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+impl BoxSummary {
+    /// Compute the five-number summary.
+    pub fn of(xs: &[f64]) -> Self {
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        BoxSummary {
+            min: *sorted.first().unwrap_or(&f64::NAN),
+            q1: quantile(&sorted, 0.25),
+            median: quantile(&sorted, 0.5),
+            q3: quantile(&sorted, 0.75),
+            max: *sorted.last().unwrap_or(&f64::NAN),
+        }
+    }
+
+    /// Render a compact one-line ASCII box plot scaled to `[0, scale_max]`
+    /// over `width` characters (used by the Fig. 8 report).
+    pub fn render_ascii(&self, scale_max: f64, width: usize) -> String {
+        let col = |v: f64| ((v / scale_max) * (width as f64 - 1.0)).round().clamp(0.0, width as f64 - 1.0) as usize;
+        let mut line = vec![' '; width];
+        for i in col(self.min)..=col(self.max) {
+            line[i] = '-';
+        }
+        for i in col(self.q1)..=col(self.q3) {
+            line[i] = '=';
+        }
+        line[col(self.median)] = '|';
+        line.into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quartiles_of_known_sample() {
+        let b = BoxSummary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(b.min, 1.0);
+        assert_eq!(b.median, 3.0);
+        assert_eq!(b.max, 5.0);
+        assert!((b.q1 - 2.0).abs() < 1e-12);
+        assert!((b.q3 - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ascii_render_has_median_marker() {
+        let b = BoxSummary::of(&[0.01, 0.02, 0.03, 0.05, 0.08]);
+        let line = b.render_ascii(0.1, 40);
+        assert_eq!(line.len(), 40);
+        assert!(line.contains('|'));
+        assert!(line.contains('='));
+    }
+}

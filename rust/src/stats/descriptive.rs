@@ -1,0 +1,121 @@
+//! Descriptive statistics.
+
+/// Arithmetic mean; 0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Standard (dimensionless) skewness: third standardized moment.
+pub fn skewness_standard(xs: &[f64]) -> f64 {
+    let s = std_dev(xs);
+    if s == 0.0 || xs.len() < 3 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| ((x - m) / s).powi(3)).sum::<f64>() / xs.len() as f64
+}
+
+/// Dimensioned skewness — signed cube root of the third central moment.
+///
+/// The paper quotes skewness values in *milliseconds* (−0.27 ms, +0.42 ms,
+/// +1.0 ms), i.e. a quantity carrying the unit of the underlying variable.
+/// `cbrt(m3)` has exactly that property and the same sign as the standard
+/// skewness.
+pub fn skewness_dimensioned(xs: &[f64]) -> f64 {
+    if xs.len() < 3 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let m3 = xs.iter().map(|x| (x - m).powi(3)).sum::<f64>() / xs.len() as f64;
+    m3.signum() * m3.abs().cbrt()
+}
+
+/// Compact summary of a sample.
+#[derive(Debug, Clone, Copy)]
+pub struct Summary {
+    /// Sample size.
+    pub n: usize,
+    /// Arithmetic mean.
+    pub mean: f64,
+    /// Population standard deviation.
+    pub std: f64,
+    /// Minimum.
+    pub min: f64,
+    /// Maximum.
+    pub max: f64,
+    /// Dimensioned skewness (unit of the variable).
+    pub skew: f64,
+}
+
+impl Summary {
+    /// Summarize a sample.
+    pub fn of(xs: &[f64]) -> Self {
+        Summary {
+            n: xs.len(),
+            mean: mean(xs),
+            std: std_dev(xs),
+            min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+            skew: skewness_dimensioned(xs),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn skewness_signs() {
+        // Right-tailed sample: positive skew (desynchronization signature).
+        let right = [1.0, 1.0, 1.0, 1.0, 1.0, 10.0];
+        assert!(skewness_standard(&right) > 0.0);
+        assert!(skewness_dimensioned(&right) > 0.0);
+        // Left-tailed: negative skew (resynchronization signature).
+        let left = [10.0, 10.0, 10.0, 10.0, 10.0, 1.0];
+        assert!(skewness_standard(&left) < 0.0);
+        assert!(skewness_dimensioned(&left) < 0.0);
+        // Symmetric: ~zero.
+        let sym = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert!(skewness_dimensioned(&sym).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dimensioned_skew_scales_linearly() {
+        // cbrt(m3) carries the variable's unit: scaling the sample by c
+        // scales the skewness by c (unlike the standardized moment).
+        let xs = [1.0, 1.0, 1.0, 5.0];
+        let scaled: Vec<f64> = xs.iter().map(|x| x * 3.0).collect();
+        let a = skewness_dimensioned(&xs);
+        let b = skewness_dimensioned(&scaled);
+        assert!((b / a - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_handles_small_samples() {
+        let s = Summary::of(&[1.0]);
+        assert_eq!(s.n, 1);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.skew, 0.0);
+    }
+}

@@ -1,0 +1,85 @@
+//! Relative-error metrics for model validation (Fig. 8).
+
+/// Paper's error definition: `|(b_observed − b_model) / b_model|`.
+pub fn rel_error(observed: f64, model: f64) -> f64 {
+    if model == 0.0 {
+        if observed == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        ((observed - model) / model).abs()
+    }
+}
+
+/// Maximum relative error over paired samples.
+pub fn max_rel_error(observed: &[f64], model: &[f64]) -> f64 {
+    observed
+        .iter()
+        .zip(model)
+        .map(|(&o, &m)| rel_error(o, m))
+        .fold(0.0, f64::max)
+}
+
+/// Aggregate error statistics for a set of validation cases.
+#[derive(Debug, Clone, Copy)]
+pub struct ErrorStats {
+    /// Number of cases.
+    pub n: usize,
+    /// Median relative error.
+    pub median: f64,
+    /// Maximum relative error.
+    pub max: f64,
+    /// Fraction of cases with error below 5% (paper: 75%).
+    pub frac_below_5pct: f64,
+    /// Fraction of cases with error below 8% (paper: 100%).
+    pub frac_below_8pct: f64,
+}
+
+impl ErrorStats {
+    /// Compute the aggregate statistics from raw per-case errors.
+    pub fn of(errors: &[f64]) -> Self {
+        if errors.is_empty() {
+            return ErrorStats { n: 0, median: 0.0, max: 0.0, frac_below_5pct: 1.0, frac_below_8pct: 1.0 };
+        }
+        let mut sorted = errors.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = if sorted.len() % 2 == 1 {
+            sorted[sorted.len() / 2]
+        } else {
+            0.5 * (sorted[sorted.len() / 2 - 1] + sorted[sorted.len() / 2])
+        };
+        let below = |t: f64| sorted.iter().filter(|&&e| e < t).count() as f64 / sorted.len() as f64;
+        ErrorStats {
+            n: sorted.len(),
+            median,
+            max: *sorted.last().unwrap(),
+            frac_below_5pct: below(0.05),
+            frac_below_8pct: below(0.08),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_definition_matches_paper() {
+        assert!((rel_error(105.0, 100.0) - 0.05).abs() < 1e-12);
+        assert!((rel_error(95.0, 100.0) - 0.05).abs() < 1e-12);
+        assert_eq!(rel_error(0.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn stats_aggregate() {
+        let errors = [0.01, 0.02, 0.03, 0.06, 0.09];
+        let s = ErrorStats::of(&errors);
+        assert_eq!(s.n, 5);
+        assert!((s.median - 0.03).abs() < 1e-12);
+        assert!((s.max - 0.09).abs() < 1e-12);
+        assert!((s.frac_below_5pct - 0.6).abs() < 1e-12);
+        assert!((s.frac_below_8pct - 0.8).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,11 @@
+//! Statistics utilities: descriptive stats (including the dimensioned
+//! skewness the paper reports in milliseconds), relative-error metrics and
+//! box-plot summaries for Fig. 8.
+
+mod boxplot;
+mod descriptive;
+mod error_metrics;
+
+pub use boxplot::BoxSummary;
+pub use descriptive::{mean, skewness_dimensioned, skewness_standard, std_dev, Summary};
+pub use error_metrics::{max_rel_error, rel_error, ErrorStats};

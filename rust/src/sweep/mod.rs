@@ -1,0 +1,10 @@
+//! Experiment orchestration: plans (the Fig. 4 parameter space), parallel
+//! runners over the measurement engines, and result records.
+
+mod plan;
+mod results;
+mod runner;
+
+pub use plan::{fig4_points, full_domain_splits, pairing_cases, symmetric_splits, PairingCase, PlanKind};
+pub use results::{CaseResult, ResultSet};
+pub use runner::{run_cases, run_cases_pjrt, MeasureEngine};

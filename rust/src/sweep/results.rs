@@ -1,0 +1,178 @@
+//! Result records: measured vs modeled bandwidth per case, with CSV and
+//! JSON-lines emission (hand-rolled — the build is offline).
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::config::MachineId;
+use crate::error::Result;
+use crate::kernels::KernelId;
+use crate::stats::rel_error;
+
+/// Outcome of one pairing case: measurement + model prediction.
+#[derive(Debug, Clone)]
+pub struct CaseResult {
+    /// Machine the case ran on.
+    pub machine: MachineId,
+    /// Kernels of the pairing.
+    pub kernels: [KernelId; 2],
+    /// Threads per group.
+    pub n: [usize; 2],
+    /// Measured (simulated) per-core bandwidth per group, GB/s.
+    pub measured_per_core: [f64; 2],
+    /// Analytic-model per-core bandwidth per group, GB/s.
+    pub model_per_core: [f64; 2],
+    /// Measured aggregate bandwidth, GB/s.
+    pub measured_total: f64,
+    /// Modeled aggregate bandwidth, GB/s.
+    pub model_total: f64,
+}
+
+impl CaseResult {
+    /// Relative per-core model errors per group (paper Fig. 8 metric).
+    pub fn errors(&self) -> [f64; 2] {
+        [
+            rel_error(self.measured_per_core[0], self.model_per_core[0]),
+            rel_error(self.measured_per_core[1], self.model_per_core[1]),
+        ]
+    }
+
+    /// CSV header matching [`CaseResult::to_csv_row`].
+    pub fn csv_header() -> &'static str {
+        "machine,kernel1,kernel2,n1,n2,meas_pc1_gbs,meas_pc2_gbs,model_pc1_gbs,model_pc2_gbs,meas_total_gbs,model_total_gbs,err1,err2"
+    }
+
+    /// One CSV row.
+    pub fn to_csv_row(&self) -> String {
+        let e = self.errors();
+        format!(
+            "{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{:.5},{:.5}",
+            self.machine.key(),
+            self.kernels[0].key(),
+            self.kernels[1].key(),
+            self.n[0],
+            self.n[1],
+            self.measured_per_core[0],
+            self.measured_per_core[1],
+            self.model_per_core[0],
+            self.model_per_core[1],
+            self.measured_total,
+            self.model_total,
+            e[0],
+            e[1],
+        )
+    }
+
+    /// One JSON object (hand-rolled; all fields are numbers/short strings).
+    pub fn to_json(&self) -> String {
+        let e = self.errors();
+        format!(
+            "{{\"machine\":\"{}\",\"kernel1\":\"{}\",\"kernel2\":\"{}\",\"n1\":{},\"n2\":{},\
+             \"meas_pc\":[{:.5},{:.5}],\"model_pc\":[{:.5},{:.5}],\
+             \"meas_total\":{:.5},\"model_total\":{:.5},\"err\":[{:.6},{:.6}]}}",
+            self.machine.key(),
+            self.kernels[0].key(),
+            self.kernels[1].key(),
+            self.n[0],
+            self.n[1],
+            self.measured_per_core[0],
+            self.measured_per_core[1],
+            self.model_per_core[0],
+            self.model_per_core[1],
+            self.measured_total,
+            self.model_total,
+            e[0],
+            e[1],
+        )
+    }
+}
+
+/// A set of case results with persistence helpers.
+#[derive(Debug, Clone, Default)]
+pub struct ResultSet {
+    /// All case results, in plan order.
+    pub cases: Vec<CaseResult>,
+}
+
+impl ResultSet {
+    /// All per-group relative errors, flattened (Fig. 8 input).
+    pub fn all_errors(&self) -> Vec<f64> {
+        self.cases.iter().flat_map(|c| c.errors()).collect()
+    }
+
+    /// Write as CSV.
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "{}", CaseResult::csv_header())?;
+        for c in &self.cases {
+            writeln!(f, "{}", c.to_csv_row())?;
+        }
+        Ok(())
+    }
+
+    /// Write as JSON lines.
+    pub fn write_jsonl(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        for c in &self.cases {
+            writeln!(f, "{}", c.to_json())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn case() -> CaseResult {
+        CaseResult {
+            machine: MachineId::Bdw1,
+            kernels: [KernelId::Dcopy, KernelId::Ddot2],
+            n: [6, 4],
+            measured_per_core: [6.29, 5.00],
+            model_per_core: [6.44, 5.09],
+            measured_total: 57.7,
+            model_total: 59.0,
+        }
+    }
+
+    #[test]
+    fn errors_match_paper_definition() {
+        let c = case();
+        let e = c.errors();
+        assert!((e[0] - (6.44 - 6.29) / 6.44).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_row_has_header_arity() {
+        let c = case();
+        assert_eq!(
+            c.to_csv_row().split(',').count(),
+            CaseResult::csv_header().split(',').count()
+        );
+    }
+
+    #[test]
+    fn json_is_wellformed_enough() {
+        let j = case().to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert!(j.contains("\"machine\":\"bdw1\""));
+    }
+
+    #[test]
+    fn files_roundtrip() {
+        let dir = std::env::temp_dir().join("membw-results-test");
+        let set = ResultSet { cases: vec![case(), case()] };
+        set.write_csv(&dir.join("r.csv")).unwrap();
+        set.write_jsonl(&dir.join("r.jsonl")).unwrap();
+        let csv = std::fs::read_to_string(dir.join("r.csv")).unwrap();
+        assert_eq!(csv.lines().count(), 3);
+    }
+}

@@ -1,0 +1,130 @@
+//! Integration: the full config → sweep → report pipeline on the in-process
+//! engines, plus the headline paper claims end to end.
+
+use membw::config::{machine, MachineId};
+use membw::kernels::{pairing_set, KernelId};
+use membw::report::{table1_report, table2_report, ExperimentCtx};
+use membw::stats::ErrorStats;
+use membw::sweep::{full_domain_splits, pairing_cases, run_cases, symmetric_splits, MeasureEngine};
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("membw-int-{tag}"));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Fig. 6 headline behaviour, DCOPY+DDOT2 on every machine:
+/// DCOPY (higher f) takes a growing share as its thread count rises, and
+/// the overall bandwidth decreases (DCOPY's b_s is lower than DDOT2's).
+#[test]
+fn fig6_dcopy_ddot2_shape_on_all_machines() {
+    for mid in MachineId::ALL {
+        let m = machine(mid);
+        let cases = full_domain_splits(&m, KernelId::Dcopy, KernelId::Ddot2);
+        let rs = run_cases(&m, &cases, &MeasureEngine::Fluid).unwrap();
+        let first = &rs.cases[0]; // 1 DCOPY core
+        let last = rs.cases.last().unwrap(); // cores-1 DCOPY cores
+        assert!(
+            last.measured_total < first.measured_total,
+            "{mid:?}: overall bandwidth must decrease as DCOPY grows ({} -> {})",
+            first.measured_total,
+            last.measured_total
+        );
+        // DCOPY per-core bandwidth always above DDOT2's (higher f).
+        for c in &rs.cases {
+            assert!(
+                c.measured_per_core[0] > c.measured_per_core[1],
+                "{mid:?} at {:?}: DCOPY per-core below DDOT2",
+                c.n
+            );
+        }
+    }
+}
+
+/// Fig. 8 headline: global error of the analytic model vs the fluid
+/// measurement stays below the paper's 8% bound (we sample a subset of
+/// pairings per machine to keep the test fast; the full sweep runs in
+/// `examples/e2e_validation.rs` and `benches/bench_fig8_fig9.rs`).
+#[test]
+fn fig8_error_band_subset() {
+    let set = pairing_set();
+    let pairs = pairing_cases(&set, false);
+    let mut errors = Vec::new();
+    for mid in MachineId::ALL {
+        let m = machine(mid);
+        for (i, &(k1, k2)) in pairs.iter().enumerate() {
+            if i % 5 != 0 {
+                continue; // sample every 5th pairing
+            }
+            let cases = symmetric_splits(&m, k1, k2);
+            let rs = run_cases(&m, &cases, &MeasureEngine::Fluid).unwrap();
+            errors.extend(rs.all_errors());
+        }
+    }
+    let stats = ErrorStats::of(&errors);
+    assert!(stats.n > 100, "sample too small: {}", stats.n);
+    assert!(stats.max < 0.08, "max error {:.3} exceeds the paper bound", stats.max);
+    assert!(stats.frac_below_5pct > 0.75, "fewer than 75% below 5%");
+}
+
+/// Fig. 9 headline: whether a kernel gains or loses bandwidth against a
+/// partner is decided by the f-ratio (Sect. V) — check the sign pattern for
+/// DCOPY and DDOT2 partners on BDW-1.
+#[test]
+fn fig9_gain_loss_signs_follow_f_ratio() {
+    let m = machine(MachineId::Bdw1);
+    let half = m.cores / 2;
+    let chars: Vec<(KernelId, f64)> = pairing_set()
+        .iter()
+        .map(|&k| {
+            let c = membw::simulator::measure_f_bs(
+                &membw::kernels::kernel(k),
+                &m,
+                membw::simulator::Engine::Fluid,
+            );
+            (k, c.f)
+        })
+        .collect();
+    let f_of = |k: KernelId| chars.iter().find(|(id, _)| *id == k).unwrap().1;
+
+    let probe = KernelId::Ddot2;
+    for &partner in &[KernelId::Dcopy, KernelId::VecSum, KernelId::Schoenauer] {
+        let self_case = membw::sweep::PairingCase { k1: probe, k2: probe, n1: half, n2: m.cores - half };
+        let pair_case = membw::sweep::PairingCase { k1: probe, k2: partner, n1: half, n2: m.cores - half };
+        let rs = run_cases(&m, &[self_case, pair_case], &MeasureEngine::Fluid).unwrap();
+        let rel = rs.cases[1].measured_per_core[0] / rs.cases[0].measured_per_core[0];
+        if f_of(partner) > f_of(probe) * 1.03 {
+            assert!(rel < 1.0, "{partner:?} (higher f) should cost DDOT2 bandwidth (rel {rel})");
+        } else if f_of(partner) < f_of(probe) * 0.97 {
+            assert!(rel > 1.0, "{partner:?} (lower f) should give DDOT2 bandwidth (rel {rel})");
+        }
+    }
+}
+
+/// Report generation writes the promised files.
+#[test]
+fn reports_write_outputs() {
+    let dir = tmp_dir("reports");
+    let ctx = ExperimentCtx::fluid(dir.clone());
+    let t1 = table1_report();
+    assert!(t1.contains("TABLE I"));
+    let t2 = table2_report(&ctx).unwrap();
+    assert!(t2.contains("STREAM"));
+    assert!(dir.join("table2.csv").exists());
+    let csv = std::fs::read_to_string(dir.join("table2.csv")).unwrap();
+    assert_eq!(csv.lines().count(), 1 + 15 * 4, "15 kernels x 4 machines + header");
+}
+
+/// The DES engine reproduces the same Fig. 6 shape as the fluid engine
+/// (cross-engine consistency at the sweep level).
+#[test]
+fn des_fluid_sweep_consistency() {
+    let m = machine(MachineId::Rome);
+    let cases = full_domain_splits(&m, KernelId::Dcopy, KernelId::Ddot2);
+    let fluid = run_cases(&m, &cases, &MeasureEngine::Fluid).unwrap();
+    let des = run_cases(&m, &cases, &MeasureEngine::Des).unwrap();
+    for (f, d) in fluid.cases.iter().zip(&des.cases) {
+        let rel = (f.measured_total - d.measured_total).abs() / f.measured_total;
+        assert!(rel < 0.08, "totals diverge at {:?}: {rel}", f.n);
+    }
+}

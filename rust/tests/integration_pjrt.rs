@@ -1,0 +1,90 @@
+//! Integration: the PJRT runtime path — load the AOT JAX/Pallas artifact,
+//! execute it, and cross-validate against the in-process engines.
+//!
+//! These tests require `make artifacts` to have run; they skip (with a
+//! notice) when the bundle is absent so `cargo test` works from a clean
+//! checkout.
+
+use membw::config::{machine, MachineId};
+use membw::kernels::{kernel, KernelId};
+use membw::runtime::{ArtifactPaths, PjrtRuntime, PjrtSimExecutor, SimCase};
+use membw::simulator::{run_engine, CoreWorkload, Engine};
+use membw::sweep::{run_cases, symmetric_splits, MeasureEngine};
+
+fn load() -> Option<(PjrtRuntime, PjrtSimExecutor)> {
+    let dir = ArtifactPaths::default_dir();
+    if ArtifactPaths::locate(&dir).is_err() {
+        eprintln!("NOTE: artifacts missing, PJRT integration tests skipped");
+        return None;
+    }
+    let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+    let exec = PjrtSimExecutor::load(&rt, &dir).expect("compile artifact");
+    Some((rt, exec))
+}
+
+#[test]
+fn artifact_meta_covers_all_machines() {
+    let Some((_rt, exec)) = load() else { return };
+    let meta = exec.meta();
+    for mid in MachineId::ALL {
+        assert!(machine(mid).cores <= meta.n_cores, "{mid:?} exceeds artifact width");
+    }
+}
+
+#[test]
+fn pjrt_matches_fluid_engine_on_mixed_batch() {
+    let Some((_rt, exec)) = load() else { return };
+    // One case per machine, mixed kernels, single batch.
+    let cases: Vec<SimCase> = MachineId::ALL
+        .iter()
+        .map(|&mid| {
+            let m = machine(mid);
+            let mut ws = vec![CoreWorkload::from_kernel(&kernel(KernelId::Dcopy), &m, 0); m.cores / 2];
+            ws.extend(vec![
+                CoreWorkload::from_kernel(&kernel(KernelId::Ddot2), &m, 1);
+                m.cores - m.cores / 2
+            ]);
+            SimCase { machine: m, workloads: ws }
+        })
+        .collect();
+    let out = exec.run(&cases).expect("pjrt run");
+    for (case, pjrt_bw) in cases.iter().zip(&out) {
+        let fluid_bw = run_engine(&case.machine, &case.workloads, Engine::Fluid);
+        assert_eq!(pjrt_bw.len(), fluid_bw.len());
+        for (i, (a, b)) in pjrt_bw.iter().zip(&fluid_bw).enumerate() {
+            let rel = (a - b).abs() / b.max(1e-9);
+            assert!(
+                rel < 0.02,
+                "{} core {i}: pjrt {a} vs fluid {b}",
+                case.machine.name
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_sweep_reproduces_fig8_subset() {
+    let Some((_rt, exec)) = load() else { return };
+    let m = machine(MachineId::Bdw1);
+    let cases = symmetric_splits(&m, KernelId::Dcopy, KernelId::Ddot2);
+    let rs = run_cases(&m, &cases, &MeasureEngine::Pjrt(&exec)).unwrap();
+    let errs = rs.all_errors();
+    let max = errs.iter().cloned().fold(0.0, f64::max);
+    assert!(max < 0.08, "max model error via pjrt: {max}");
+}
+
+#[test]
+fn pjrt_batch_padding_is_transparent() {
+    let Some((_rt, exec)) = load() else { return };
+    let m = machine(MachineId::Rome);
+    let w = CoreWorkload::from_kernel(&kernel(KernelId::Daxpy), &m, 0);
+    let case = SimCase { machine: m.clone(), workloads: vec![w; 4] };
+    // 1 case vs the same case replicated past one batch boundary.
+    let solo = exec.run(std::slice::from_ref(&case)).unwrap();
+    let many = exec.run(&vec![case; exec.meta().batch + 3]).unwrap();
+    for bw in &many {
+        for (a, b) in bw.iter().zip(&solo[0]) {
+            assert!((a - b).abs() < 1e-6, "padding changed results");
+        }
+    }
+}

@@ -1,0 +1,206 @@
+//! Property-based tests on coordinator invariants (hand-rolled random-case
+//! driver — the offline build has no proptest; `XorShift64` supplies
+//! deterministic cases and failures print the seed for replay).
+
+use membw::config::{builtin_machines, machine, MachineId};
+use membw::kernels::{kernel, pairing_set, KernelId};
+use membw::sharing::{share_multigroup, share_two_groups, KernelGroup};
+use membw::simulator::{run_engine, CoreWorkload, Engine, XorShift64};
+use membw::sweep::{full_domain_splits, symmetric_splits, PairingCase};
+
+const CASES: usize = 200;
+
+fn random_group(rng: &mut XorShift64) -> KernelGroup {
+    KernelGroup {
+        n: 1 + rng.next_below(16),
+        f: 0.05 + 0.9 * rng.next_f64(),
+        bs_gbs: 20.0 + 100.0 * rng.next_f64(),
+    }
+}
+
+/// Shares sum to one; bandwidth is conserved; no group beats its solo speed.
+#[test]
+fn prop_sharing_model_invariants() {
+    let mut rng = XorShift64::new(0xFEED01);
+    for case in 0..CASES {
+        let k = 1 + rng.next_below(5);
+        let groups: Vec<KernelGroup> = (0..k).map(|_| random_group(&mut rng)).collect();
+        let out = share_multigroup(&groups);
+        let alpha_sum: f64 = out.groups.iter().map(|g| g.alpha).sum();
+        assert!((alpha_sum - 1.0).abs() < 1e-6, "case {case}: alphas sum to {alpha_sum}");
+        let total: f64 = out.groups.iter().map(|g| g.group_bw_gbs).sum();
+        assert!(total <= out.b_mix_gbs + 1e-6, "case {case}: total {total} > b_mix {}", out.b_mix_gbs);
+        for (g, e) in groups.iter().zip(&out.groups) {
+            assert!(
+                e.per_core_gbs <= g.f * g.bs_gbs + 1e-6,
+                "case {case}: group beats solo speed"
+            );
+            assert!(e.per_core_gbs >= -1e-9, "case {case}: negative bandwidth");
+        }
+    }
+}
+
+/// The two-group wrapper agrees with the multigroup model.
+#[test]
+fn prop_two_group_equals_multigroup() {
+    let mut rng = XorShift64::new(0xFEED02);
+    for _ in 0..CASES {
+        let a = random_group(&mut rng);
+        let b = random_group(&mut rng);
+        let two = share_two_groups(&a, &b);
+        let multi = share_multigroup(&[a, b]);
+        for g in 0..2 {
+            assert!((two.per_core_gbs[g] - multi.groups[g].per_core_gbs).abs() < 1e-9);
+        }
+    }
+}
+
+/// Raising a kernel's f never lowers its own per-core bandwidth share
+/// (monotonicity of Eq. 5).
+#[test]
+fn prop_share_monotone_in_f() {
+    let mut rng = XorShift64::new(0xFEED03);
+    for case in 0..CASES {
+        let a = random_group(&mut rng);
+        let b = random_group(&mut rng);
+        let bumped = KernelGroup { f: (a.f * 1.1).min(1.0), ..a };
+        let base = share_two_groups(&a, &b).per_core_gbs[0];
+        let more = share_two_groups(&bumped, &b).per_core_gbs[0];
+        assert!(more >= base - 1e-9, "case {case}: f up, share down ({base} -> {more})");
+    }
+}
+
+/// Fluid-engine conservation: per-core bandwidths are non-negative, the
+/// total respects capacity, idle cores get nothing, and homogeneous groups
+/// get near-identical per-core bandwidth.
+#[test]
+fn prop_fluid_engine_invariants() {
+    let mut rng = XorShift64::new(0xFEED04);
+    let kernels = pairing_set();
+    for case in 0..40 {
+        let m = machine(MachineId::ALL[rng.next_below(4)]);
+        let n_active = 1 + rng.next_below(m.cores);
+        let k1 = kernels[rng.next_below(kernels.len())];
+        let k2 = kernels[rng.next_below(kernels.len())];
+        let mut ws = Vec::new();
+        for i in 0..n_active {
+            let k = if i % 2 == 0 { k1 } else { k2 };
+            ws.push(CoreWorkload::from_kernel(&kernel(k), &m, i % 2));
+        }
+        let per_core = run_engine(&m, &ws, Engine::Fluid);
+        let total: f64 = per_core.iter().sum();
+        assert!(total <= m.read_bw_gbs * 1.005, "case {case}: total {total} over capacity");
+        assert!(per_core.iter().all(|&x| x >= 0.0));
+        // Same-kernel cores must get (nearly) equal bandwidth.
+        for g in 0..2 {
+            let sel: Vec<f64> = per_core
+                .iter()
+                .zip(&ws)
+                .filter(|(_, w)| w.group == g)
+                .map(|(&x, _)| x)
+                .collect();
+            if sel.len() > 1 {
+                let max = sel.iter().cloned().fold(f64::MIN, f64::max);
+                let min = sel.iter().cloned().fold(f64::MAX, f64::min);
+                assert!(
+                    (max - min) / max < 0.01,
+                    "case {case}: same-kernel cores diverge ({min}..{max})"
+                );
+            }
+        }
+    }
+}
+
+/// DES and fluid agree on random pairings within a tolerance band.
+#[test]
+fn prop_des_fluid_agreement() {
+    let mut rng = XorShift64::new(0xFEED05);
+    let kernels = pairing_set();
+    for case in 0..12 {
+        let m = machine(MachineId::ALL[rng.next_below(4)]);
+        let n1 = 1 + rng.next_below(m.cores / 2);
+        let n2 = 1 + rng.next_below(m.cores - n1);
+        let k1 = kernels[rng.next_below(kernels.len())];
+        let k2 = kernels[rng.next_below(kernels.len())];
+        let mut ws = vec![CoreWorkload::from_kernel(&kernel(k1), &m, 0); n1];
+        ws.extend(vec![CoreWorkload::from_kernel(&kernel(k2), &m, 1); n2]);
+        let fluid = run_engine(&m, &ws, Engine::Fluid);
+        let des = run_engine(&m, &ws, Engine::Des);
+        let f_tot: f64 = fluid.iter().sum();
+        let d_tot: f64 = des.iter().sum();
+        let rel = (f_tot - d_tot).abs() / f_tot;
+        assert!(
+            rel < 0.08,
+            "case {case} ({:?} {k1:?}x{n1} + {k2:?}x{n2}): fluid {f_tot} vs des {d_tot}",
+            m.id
+        );
+    }
+}
+
+/// The default (short) fluid run agrees with a 5x longer one — the cycle
+/// budget is past convergence.
+#[test]
+fn prop_fluid_cycle_convergence() {
+    use membw::simulator::{FluidConfig, FluidSimulator};
+    let mut rng = XorShift64::new(0xFEED06);
+    let kernels = pairing_set();
+    for case in 0..10 {
+        let m = machine(MachineId::ALL[rng.next_below(4)]);
+        let k1 = kernels[rng.next_below(kernels.len())];
+        let k2 = kernels[rng.next_below(kernels.len())];
+        let mut ws = vec![CoreWorkload::from_kernel(&kernel(k1), &m, 0); m.cores / 2];
+        ws.extend(vec![CoreWorkload::from_kernel(&kernel(k2), &m, 1); m.cores - m.cores / 2]);
+        let short = FluidSimulator::new(&m, FluidConfig::default()).run(&ws);
+        let long = FluidSimulator::new(&m, FluidConfig { warmup_cycles: 20_000, measure_cycles: 60_000 })
+            .run(&ws);
+        for (a, b) in short.per_core_gbs.iter().zip(&long.per_core_gbs) {
+            let rel = (a - b).abs() / b.max(1e-9);
+            assert!(rel < 0.002, "case {case}: short {a} vs long {b}");
+        }
+    }
+}
+
+/// Plan enumeration covers the Fig. 4 dots exactly once and never exceeds
+/// the domain.
+#[test]
+fn prop_plans_cover_fig4() {
+    for m in builtin_machines() {
+        let full = full_domain_splits(&m, KernelId::Dcopy, KernelId::Ddot2);
+        assert_eq!(full.len(), m.cores - 1);
+        for (i, c) in full.iter().enumerate() {
+            assert_eq!(c.n1, i + 1);
+            assert_eq!(c.n1 + c.n2, m.cores);
+            c.validate(&m).unwrap();
+        }
+        let sym = symmetric_splits(&m, KernelId::Dcopy, KernelId::Ddot2);
+        assert_eq!(sym.len(), m.cores / 2);
+        for c in &sym {
+            assert_eq!(c.n1, c.n2);
+            c.validate(&m).unwrap();
+        }
+        // Overfull plans must be rejected.
+        let bad = PairingCase { k1: KernelId::Dcopy, k2: KernelId::Ddot2, n1: m.cores, n2: 1 };
+        assert!(bad.validate(&m).is_err());
+    }
+}
+
+/// Eq. 3 consistency under the fluid engine for every pairing-set kernel on
+/// every machine: measured f within a tight band of the ECM prediction.
+#[test]
+fn prop_eq3_close_to_ecm_everywhere() {
+    for mid in MachineId::ALL {
+        let m = machine(mid);
+        for k in pairing_set() {
+            let sig = kernel(k);
+            let meas = membw::simulator::measure_f_bs(&sig, &m, Engine::Fluid);
+            let pred = membw::ecm::predict(&sig, &m);
+            let rel = (meas.f - pred.f).abs() / pred.f;
+            assert!(
+                rel < 0.12,
+                "{mid:?}/{k:?}: measured f {} vs ECM {}",
+                meas.f,
+                pred.f
+            );
+        }
+    }
+}
