@@ -1,49 +1,99 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled — the offline build has no external
+//! error-derive crate).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Result alias used across the crate.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// All failure modes of the coordinator.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// An unknown machine id was requested from the registry.
-    #[error("unknown machine '{0}' (known: {1})")]
     UnknownMachine(String, String),
 
     /// An unknown kernel name was requested from the registry.
-    #[error("unknown kernel '{0}' (known: {1})")]
     UnknownKernel(String, String),
 
     /// A configuration file failed to parse.
-    #[error("config error in {path}: {msg}")]
-    Config { path: String, msg: String },
+    Config {
+        /// Path of the offending file.
+        path: String,
+        /// What went wrong.
+        msg: String,
+    },
 
     /// An experiment plan is inconsistent (e.g. thread counts exceed domain).
-    #[error("invalid plan: {0}")]
     InvalidPlan(String),
 
     /// The PJRT runtime failed (client creation, artifact load, execution).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// An AOT artifact is missing — run `make artifacts` first.
-    #[error("artifact not found: {0} (run `make artifacts`)")]
     MissingArtifact(String),
 
     /// A simulation failed to converge to steady state.
-    #[error("simulation did not reach steady state: {0}")]
     NoSteadyState(String),
 
     /// Any I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::UnknownMachine(name, known) => {
+                write!(f, "unknown machine '{name}' (known: {known})")
+            }
+            Error::UnknownKernel(name, known) => {
+                write!(f, "unknown kernel '{name}' (known: {known})")
+            }
+            Error::Config { path, msg } => write!(f, "config error in {path}: {msg}"),
+            Error::InvalidPlan(msg) => write!(f, "invalid plan: {msg}"),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::MissingArtifact(path) => {
+                write!(f, "artifact not found: {path} (run `make artifacts`)")
+            }
+            Error::NoSteadyState(msg) => {
+                write!(f, "simulation did not reach steady state: {msg}")
+            }
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {
     /// Convenience constructor for runtime errors from the `xla` crate.
     pub fn runtime<E: std::fmt::Display>(e: E) -> Self {
         Error::Runtime(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn messages_keep_key_substrings() {
+        assert!(Error::MissingArtifact("a.hlo".into()).to_string().contains("make artifacts"));
+        let c = Error::Config { path: "m.toml".into(), msg: "missing key".into() };
+        assert!(c.to_string().contains("m.toml"));
+        let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(io.to_string().contains("io error"));
     }
 }

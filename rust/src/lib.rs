@@ -22,13 +22,19 @@
 //! * [`desync`] — rank-level co-simulation of barrier-free MPI programs
 //!   (HPCG), reproducing the desynchronization phenomenology of Figs. 1/3,
 //! * [`runtime`] — PJRT client that loads the AOT-compiled JAX/Pallas batched
-//!   simulator (`artifacts/*.hlo.txt`) and runs it from the hot path,
-//! * [`sweep`] — experiment orchestration (plans, batching, parallel runs),
+//!   simulator (`artifacts/*.hlo.txt`) and runs it from the hot path (gated
+//!   behind the `pjrt` cargo feature; a stub fails gracefully without it),
+//! * [`scenario`] — **the unified measurement pipeline**: arbitrary k-group
+//!   workload mixes (kernel groups + idle cores) and time-phased scenarios,
+//!   executed batched and parallel on any engine through the shared
+//!   characterization cache, with the multigroup prediction attached,
+//! * [`sweep`] — pairing-sweep plans (the Fig. 4 parameter space) and the
+//!   two-group runner, now the k=2 special case of [`scenario`],
 //! * [`stats`] — descriptive statistics, error metrics, skewness,
-//! * [`report`] — per-table/figure emitters (CSV + ASCII rendering).
+//! * [`report`] — per-table/figure emitters (CSV + ASCII rendering), plus
+//!   the k-group scenario share tables.
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! See `README.md` for the crate tour and the scenario-engine CLI/API.
 
 pub mod benchutil;
 pub mod config;
@@ -38,6 +44,7 @@ pub mod error;
 pub mod kernels;
 pub mod report;
 pub mod runtime;
+pub mod scenario;
 pub mod sharing;
 pub mod simulator;
 pub mod stats;

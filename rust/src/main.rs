@@ -7,6 +7,9 @@
 //! repro kernels                         # kernel registry
 //! repro characterize [--engine E]       # Table II (f, b_s per kernel)
 //! repro pair --machine M --k1 A --k2 B --n1 X --n2 Y [--engine E]
+//! repro scenarios [--machine M] [--engine E] [--out results/]
+//!                 [--mix "dcopy:4+ddot2:4+idle:2 / dcopy:8+stream:2"]
+//!                 [--name NAME]            # k-group share tables
 //! repro experiment <table2|fig1|fig3|fig4|fig6|fig7|fig8|fig9|all>
 //!                  [--engine fluid|des|pjrt] [--out results/]
 //! repro hpcg [--variant plain|modified] [--machine M] [--ranks N]
@@ -23,6 +26,7 @@ use membw::error::Result;
 use membw::kernels::{all_kernels, kernel, KernelId};
 use membw::report::{self, ExperimentCtx};
 use membw::runtime::{ArtifactPaths, PjrtRuntime, PjrtSimExecutor, SimCase};
+use membw::scenario::Scenario;
 use membw::simulator::{measure_f_bs, measure_pairing, CoreWorkload, Engine};
 use membw::sweep::{run_cases, MeasureEngine, PairingCase};
 
@@ -59,6 +63,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "kernels" => cmd_kernels(),
         "characterize" => cmd_characterize(&flags(rest)),
         "pair" => cmd_pair(&flags(rest)),
+        "scenarios" => cmd_scenarios(&flags(rest)),
         "experiment" => cmd_experiment(rest),
         "hpcg" => cmd_hpcg(&flags(rest)),
         "dump-configs" => cmd_dump_configs(rest),
@@ -71,8 +76,9 @@ fn dispatch(args: &[String]) -> Result<()> {
 }
 
 const HELP: &str = "repro — bandwidth-sharing model reproduction (Afzal/Hager/Wellein 2020)\n\
-commands:\n  machines | kernels | characterize | pair | experiment <id> | hpcg | dump-configs <dir> | selftest\n\
-run `repro experiment all --out results/` to regenerate every table and figure.";
+commands:\n  machines | kernels | characterize | pair | scenarios | experiment <id> | hpcg | dump-configs <dir> | selftest\n\
+run `repro experiment all --out results/` to regenerate every table and figure;\n\
+`repro scenarios --mix \"dcopy:4+ddot2:4+idle:2\"` measures a k-group workload mix.";
 
 fn cmd_machines() -> Result<()> {
     println!("{}", report::table1_report());
@@ -147,6 +153,25 @@ fn cmd_pair(f: &HashMap<String, String>) -> Result<()> {
         meas.total_gbs,
         pred.group_bw_gbs[0] + pred.group_bw_gbs[1]
     );
+    Ok(())
+}
+
+/// Measure a k-group workload mix (or `/`-separated scenario) and print the
+/// per-group share table. Without `--mix`, runs the built-in demo scenario
+/// scaled to the machine.
+fn cmd_scenarios(f: &HashMap<String, String>) -> Result<()> {
+    let m = machine(MachineId::parse(f.get("machine").map(String::as_str).unwrap_or("clx"))?);
+    let ctx = make_ctx(f)?;
+    let scenario = match f.get("mix") {
+        Some(spec) => Scenario::parse(f.get("name").map(String::as_str).unwrap_or("cli"), spec)?,
+        None => Scenario::demo(&m),
+    };
+    let text = report::scenario_report(&ctx, &m, &scenario)?;
+    println!("{text}");
+    std::fs::write(
+        ctx.out_dir.join(format!("scenario_{}.txt", scenario.file_stem())),
+        &text,
+    )?;
     Ok(())
 }
 

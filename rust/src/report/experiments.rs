@@ -35,7 +35,7 @@ impl ExperimentCtx {
         ExperimentCtx { out_dir, engine: Engine::Fluid, pjrt: None }
     }
 
-    fn measure_engine(&self) -> MeasureEngine<'_> {
+    pub(crate) fn measure_engine(&self) -> MeasureEngine<'_> {
         match (&self.pjrt, self.engine) {
             (Some(exec), _) => MeasureEngine::Pjrt(exec),
             (None, Engine::Fluid) => MeasureEngine::Fluid,
@@ -43,7 +43,7 @@ impl ExperimentCtx {
         }
     }
 
-    fn engine_name(&self) -> &'static str {
+    pub(crate) fn engine_name(&self) -> &'static str {
         match (&self.pjrt, self.engine) {
             (Some(_), _) => "pjrt(jax/pallas artifact)",
             (None, Engine::Fluid) => "fluid(rust)",

@@ -1,0 +1,109 @@
+//! k-group scenario share tables — the report surface of the scenario
+//! engine (what Figs. 6/7 are to the two-group sweeps).
+
+use std::fmt::Write as _;
+
+use crate::config::Machine;
+use crate::error::Result;
+use crate::report::experiments::ExperimentCtx;
+use crate::report::table::AsciiTable;
+use crate::scenario::{run_scenario, Scenario};
+
+/// Run `scenario` on `machine` with the context's engine and render one
+/// share table per phase: measured vs multigroup-model per-core bandwidth
+/// and bandwidth share α per group. Also writes
+/// `scenario_<name>.csv` under the context's output directory.
+pub fn scenario_report(ctx: &ExperimentCtx, machine: &Machine, scenario: &Scenario) -> Result<String> {
+    scenario.validate(machine)?;
+    let result = run_scenario(machine, scenario, &ctx.measure_engine())?;
+
+    let mut out = String::new();
+    writeln!(
+        out,
+        "SCENARIO '{}' on {} — k-group bandwidth shares (engine: {})",
+        result.name,
+        machine.name,
+        ctx.engine_name()
+    )
+    .unwrap();
+
+    let mut worst_err = 0.0f64;
+    for (pi, phase) in result.phases.iter().enumerate() {
+        writeln!(
+            out,
+            "\nphase {}/{}: {}   [{}, b_mix {:.1} GB/s]",
+            pi + 1,
+            result.phases.len(),
+            phase.mix.label(),
+            if phase.saturated { "saturated" } else { "nonsaturated" },
+            phase.b_mix_gbs
+        )
+        .unwrap();
+        let mut t = AsciiTable::new(&[
+            "group", "kernel", "n", "meas/core", "model/core", "alpha meas", "alpha model", "err%",
+        ]);
+        for (gi, g) in phase.groups.iter().enumerate() {
+            worst_err = worst_err.max(g.error());
+            t.row(vec![
+                format!("{gi}"),
+                g.kernel.key().to_string(),
+                g.n.to_string(),
+                format!("{:.2}", g.measured_per_core),
+                format!("{:.2}", g.model_per_core),
+                format!("{:.3}", phase.measured_alpha(gi)),
+                format!("{:.3}", g.model_alpha),
+                format!("{:.1}", g.error() * 100.0),
+            ]);
+        }
+        if phase.mix.idle_cores > 0 {
+            t.row(vec![
+                "-".into(),
+                "(idle)".into(),
+                phase.mix.idle_cores.to_string(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]);
+        }
+        out.push_str(&t.render());
+        writeln!(
+            out,
+            "total: measured {:.1} GB/s, model {:.1} GB/s",
+            phase.measured_total_gbs, phase.model_total_gbs
+        )
+        .unwrap();
+    }
+    writeln!(
+        out,
+        "\nworst per-group model error: {:.2}% (paper's two-group bound: <8%)",
+        worst_err * 100.0
+    )
+    .unwrap();
+
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    result.write_csv(&ctx.out_dir.join(format!("scenario_{}.csv", result.file_stem())))?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{machine, MachineId};
+
+    #[test]
+    fn demo_scenario_report_renders_and_writes_csv() {
+        let dir = std::env::temp_dir().join("membw-scenario-report");
+        let ctx = ExperimentCtx::fluid(dir.clone());
+        let m = machine(MachineId::Rome);
+        let sc = Scenario::demo(&m);
+        let text = scenario_report(&ctx, &m, &sc).unwrap();
+        assert!(text.contains("SCENARIO 'demo'"));
+        assert!(text.contains("alpha model"));
+        assert!(text.contains("(idle)"));
+        let csv = std::fs::read_to_string(dir.join("scenario_demo.csv")).unwrap();
+        // header + (3 + 2 + 4) group rows over the three demo phases
+        assert_eq!(csv.lines().count(), 1 + 9);
+    }
+}

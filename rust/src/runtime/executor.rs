@@ -42,6 +42,12 @@ impl PjrtSimExecutor {
         self.meta
     }
 
+    /// Path the compiled artifact was loaded from (identifies the bundle,
+    /// e.g. for characterization-cache keying).
+    pub fn source(&self) -> &str {
+        &self.exe.source
+    }
+
     /// Run an arbitrary number of cases; cases are packed `batch` at a time
     /// (the final partial batch is padded with idle configs). Returns
     /// per-case per-core bandwidths in GB/s, aligned with the input order.

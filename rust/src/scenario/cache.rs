@@ -1,0 +1,255 @@
+//! Shared kernel-characterization cache.
+//!
+//! Every measurement pipeline needs the Eq.-3 characterization (solo +
+//! full-domain run → `b_1`, `b_s`, `f`) of each kernel it touches, measured
+//! with the same engine as the pairing/mix measurements. Characterizations
+//! are deterministic per (machine, kernel, engine), so a process-wide cache
+//! is safe; it removes the dominant redundant work from multi-call sweeps
+//! (the Fig. 8/9 reports regenerate hundreds of `run_cases` calls).
+//!
+//! The cache is thread-safe (sweeps run batched and parallel) and exposes
+//! hit/miss statistics so tests can pin its behaviour. Use
+//! [`CharCache::global`] for the shared instance or [`CharCache::new`] for
+//! an isolated one (tests).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::config::{Machine, MachineId};
+use crate::error::Result;
+use crate::kernels::{kernel, KernelId};
+use crate::runtime::SimCase;
+use crate::scenario::runner::MeasureEngine;
+use crate::simulator::{measure_f_bs, CoreWorkload, KernelMeasurement};
+
+/// Which measurement engine produced a characterization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EngineKind {
+    /// In-process fluid simulator.
+    Fluid,
+    /// In-process discrete-event simulator.
+    Des,
+    /// AOT JAX/Pallas artifact via PJRT, tagged with a hash of the artifact
+    /// source path so characterizations from different bundles loaded in the
+    /// same process never alias in the global cache.
+    Pjrt(u64),
+}
+
+/// Cache key: one characterization per (machine, kernel, engine).
+pub type CharKey = (MachineId, KernelId, EngineKind);
+
+/// Snapshot of cache counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups served from the cache.
+    pub hits: u64,
+    /// Lookups that had to measure.
+    pub misses: u64,
+    /// Entries currently stored.
+    pub entries: usize,
+}
+
+/// Thread-safe characterization cache with hit/miss accounting.
+#[derive(Default)]
+pub struct CharCache {
+    map: Mutex<HashMap<CharKey, KernelMeasurement>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl CharCache {
+    /// An empty, isolated cache.
+    pub fn new() -> Self {
+        CharCache::default()
+    }
+
+    /// The process-wide shared cache.
+    pub fn global() -> &'static CharCache {
+        static GLOBAL: OnceLock<CharCache> = OnceLock::new();
+        GLOBAL.get_or_init(CharCache::new)
+    }
+
+    /// Look up one characterization, counting a hit or miss.
+    pub fn lookup(&self, key: &CharKey) -> Option<KernelMeasurement> {
+        let found = self.map.lock().unwrap().get(key).copied();
+        match found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
+    }
+
+    /// Store one characterization.
+    pub fn insert(&self, key: CharKey, m: KernelMeasurement) {
+        self.map.lock().unwrap().insert(key, m);
+    }
+
+    /// Whether a key is cached (does not count as a hit or miss).
+    pub fn contains(&self, key: &CharKey) -> bool {
+        self.map.lock().unwrap().contains_key(key)
+    }
+
+    /// Counter + size snapshot.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.map.lock().unwrap().len(),
+        }
+    }
+
+    /// Drop all entries and reset the counters.
+    pub fn clear(&self) {
+        self.map.lock().unwrap().clear();
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+    }
+
+    /// Characterize every kernel in `kernels` on `machine` with `engine`
+    /// (Eq. 3: solo + full domain), serving cached entries and measuring —
+    /// batched, for the PJRT engine — only the missing ones.
+    pub fn characterize(
+        &self,
+        machine: &Machine,
+        kernels: &[KernelId],
+        engine: &MeasureEngine,
+    ) -> Result<HashMap<KernelId, KernelMeasurement>> {
+        let kind = engine.kind();
+        let mut out = HashMap::new();
+        let mut missing: Vec<KernelId> = Vec::new();
+        for &k in kernels {
+            match self.lookup(&(machine.id, k, kind)) {
+                Some(m) => {
+                    out.insert(k, m);
+                }
+                None => missing.push(k),
+            }
+        }
+        if missing.is_empty() {
+            return Ok(out);
+        }
+        match engine {
+            MeasureEngine::Pjrt(exec) => {
+                // Two configs per kernel: 1 core and the full domain, all in
+                // one batched dispatch.
+                let mut cases = Vec::new();
+                for &k in &missing {
+                    let w = CoreWorkload::from_kernel(&kernel(k), machine, 0);
+                    cases.push(SimCase { machine: machine.clone(), workloads: vec![w] });
+                    cases.push(SimCase {
+                        machine: machine.clone(),
+                        workloads: vec![w; machine.cores],
+                    });
+                }
+                let bw = exec.run(&cases)?;
+                for (i, &k) in missing.iter().enumerate() {
+                    let b1 = bw[2 * i][0];
+                    let bs: f64 = bw[2 * i + 1].iter().sum();
+                    out.insert(k, KernelMeasurement { b1_gbs: b1, bs_gbs: bs, f: b1 / bs });
+                }
+            }
+            _ => {
+                let eng = engine.inproc().expect("non-PJRT engines are in-process");
+                for &k in &missing {
+                    out.insert(k, measure_f_bs(&kernel(k), machine, eng));
+                }
+            }
+        }
+        for &k in &missing {
+            self.insert((machine.id, k, kind), out[&k]);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::machine;
+
+    fn rome() -> Machine {
+        machine(MachineId::Rome)
+    }
+
+    #[test]
+    fn miss_then_hit_on_isolated_cache() {
+        let cache = CharCache::new();
+        let m = rome();
+        let ks = [KernelId::Dcopy, KernelId::Ddot2];
+        let first = cache.characterize(&m, &ks, &MeasureEngine::Fluid).unwrap();
+        let s1 = cache.stats();
+        assert_eq!(s1.misses, 2);
+        assert_eq!(s1.hits, 0);
+        assert_eq!(s1.entries, 2);
+
+        let second = cache.characterize(&m, &ks, &MeasureEngine::Fluid).unwrap();
+        let s2 = cache.stats();
+        assert_eq!(s2.misses, 2, "no re-measurement");
+        assert_eq!(s2.hits, 2);
+        assert_eq!(s2.entries, 2);
+        for k in ks {
+            assert_eq!(first[&k].b1_gbs, second[&k].b1_gbs);
+            assert_eq!(first[&k].bs_gbs, second[&k].bs_gbs);
+            assert_eq!(first[&k].f, second[&k].f);
+        }
+    }
+
+    #[test]
+    fn engines_are_cached_separately() {
+        let cache = CharCache::new();
+        let m = rome();
+        let ks = [KernelId::Ddot2];
+        cache.characterize(&m, &ks, &MeasureEngine::Fluid).unwrap();
+        assert!(cache.contains(&(m.id, KernelId::Ddot2, EngineKind::Fluid)));
+        assert!(!cache.contains(&(m.id, KernelId::Ddot2, EngineKind::Des)));
+        cache.characterize(&m, &ks, &MeasureEngine::Des).unwrap();
+        let s = cache.stats();
+        assert_eq!(s.entries, 2, "fluid and des entries are distinct");
+        assert_eq!(s.misses, 2);
+    }
+
+    #[test]
+    fn characterization_is_deterministic_per_engine() {
+        let m = rome();
+        for engine in [MeasureEngine::Fluid, MeasureEngine::Des] {
+            let a = CharCache::new().characterize(&m, &[KernelId::Daxpy], &engine).unwrap();
+            let b = CharCache::new().characterize(&m, &[KernelId::Daxpy], &engine).unwrap();
+            assert_eq!(a[&KernelId::Daxpy].b1_gbs.to_bits(), b[&KernelId::Daxpy].b1_gbs.to_bits());
+            assert_eq!(a[&KernelId::Daxpy].bs_gbs.to_bits(), b[&KernelId::Daxpy].bs_gbs.to_bits());
+        }
+    }
+
+    #[test]
+    fn clear_resets_counters_and_entries() {
+        let cache = CharCache::new();
+        let m = rome();
+        cache.characterize(&m, &[KernelId::Dcopy], &MeasureEngine::Fluid).unwrap();
+        cache.clear();
+        assert_eq!(cache.stats(), CacheStats::default());
+    }
+
+    #[test]
+    fn concurrent_characterize_is_safe_and_consistent() {
+        let cache = CharCache::new();
+        let m = rome();
+        let ks = [KernelId::Dcopy, KernelId::Ddot2, KernelId::Stream];
+        let results: Vec<HashMap<KernelId, KernelMeasurement>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| scope.spawn(|| cache.characterize(&m, &ks, &MeasureEngine::Fluid).unwrap()))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for r in &results[1..] {
+            for k in ks {
+                assert_eq!(r[&k].f.to_bits(), results[0][&k].f.to_bits());
+            }
+        }
+        let s = cache.stats();
+        assert_eq!(s.entries, 3);
+        assert_eq!(s.hits + s.misses, 8 * 3);
+        // At least one thread measured each kernel; duplicated measurement
+        // under the race is permitted (last write wins, values identical).
+        assert!(s.misses >= 3);
+    }
+}

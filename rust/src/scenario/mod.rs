@@ -1,0 +1,34 @@
+//! Scenario engine: arbitrary k-group workload mixes measured through one
+//! batched, parallel pipeline.
+//!
+//! The paper derives its sharing model (Eqs. 4–5) for *pairs* of kernels,
+//! but its own desynchronization phenomenology (Figs. 1–3) has cores spread
+//! over many kernels plus idle phases at once. [`crate::sharing`] already
+//! generalizes the model analytically to k groups; this subsystem makes the
+//! k-group space *measurable*:
+//!
+//! * [`spec`] — [`Mix`] (k kernel groups + idle cores, with a builder and a
+//!   compact text form) and [`Scenario`] (a named, time-phased sequence of
+//!   mixes),
+//! * [`cache`] — the process-wide kernel-characterization cache shared by
+//!   every measurement pipeline, with hit/miss accounting,
+//! * [`runner`] — [`run_mixes`]/[`run_scenario`]: batched execution on the
+//!   fluid, DES, or PJRT engine, parallelized over a dependency-free worker
+//!   pool, with the multigroup prediction attached to every case,
+//! * [`results`] — per-group measured-vs-model records with CSV/JSONL
+//!   emission.
+//!
+//! The legacy two-group pairing sweep ([`crate::sweep`]) is the k=2 special
+//! case: [`crate::sweep::run_cases`] converts each
+//! [`crate::sweep::PairingCase`] into a [`Mix`] and delegates here, so there
+//! is exactly one measurement pipeline.
+
+pub mod cache;
+mod results;
+mod runner;
+mod spec;
+
+pub use cache::{CacheStats, CharCache, CharKey, EngineKind};
+pub use results::{GroupOutcome, MixResult, MixResultSet, ScenarioResult};
+pub use runner::{run_mixes, run_scenario, MeasureEngine};
+pub use spec::{slugify, GroupSpec, Mix, Scenario};

@@ -1,0 +1,288 @@
+//! Result records for k-group mixes: measured vs modeled bandwidth per
+//! group, with CSV and JSON-lines emission (hand-rolled — the build is
+//! offline).
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::config::MachineId;
+use crate::error::Result;
+use crate::kernels::KernelId;
+use crate::scenario::spec::Mix;
+use crate::stats::rel_error;
+
+/// Outcome of one kernel group within a measured mix.
+#[derive(Debug, Clone)]
+pub struct GroupOutcome {
+    /// Kernel of the group.
+    pub kernel: KernelId,
+    /// Cores in the group.
+    pub n: usize,
+    /// Measured aggregate bandwidth of the group, GB/s.
+    pub measured_bw_gbs: f64,
+    /// Measured per-core bandwidth, GB/s.
+    pub measured_per_core: f64,
+    /// Multigroup-model aggregate bandwidth, GB/s.
+    pub model_bw_gbs: f64,
+    /// Multigroup-model per-core bandwidth, GB/s.
+    pub model_per_core: f64,
+    /// Model bandwidth share α of the group (sums to 1 over groups).
+    pub model_alpha: f64,
+}
+
+impl GroupOutcome {
+    /// Relative per-core model error (the paper's Fig. 8 metric).
+    pub fn error(&self) -> f64 {
+        rel_error(self.measured_per_core, self.model_per_core)
+    }
+}
+
+/// Outcome of one measured mix: per-group results plus totals.
+#[derive(Debug, Clone)]
+pub struct MixResult {
+    /// Machine the mix ran on.
+    pub machine: MachineId,
+    /// The mix specification.
+    pub mix: Mix,
+    /// Per-group outcomes, in mix order.
+    pub groups: Vec<GroupOutcome>,
+    /// Measured aggregate bandwidth over all groups, GB/s.
+    pub measured_total_gbs: f64,
+    /// Modeled aggregate bandwidth, GB/s.
+    pub model_total_gbs: f64,
+    /// Overlapped saturated bandwidth (generalized Eq. 4), GB/s.
+    pub b_mix_gbs: f64,
+    /// Whether the model ran in the saturated regime.
+    pub saturated: bool,
+}
+
+impl MixResult {
+    /// Per-group relative errors (groups with zero cores are skipped).
+    pub fn errors(&self) -> Vec<f64> {
+        self.groups.iter().filter(|g| g.n > 0).map(|g| g.error()).collect()
+    }
+
+    /// Measured bandwidth share of group `gi`.
+    pub fn measured_alpha(&self, gi: usize) -> f64 {
+        if self.measured_total_gbs > 0.0 {
+            self.groups[gi].measured_bw_gbs / self.measured_total_gbs
+        } else {
+            0.0
+        }
+    }
+
+    /// CSV header matching [`MixResult::to_csv_rows`].
+    pub fn csv_header() -> &'static str {
+        "machine,mix,k,idle,group,kernel,n,meas_pc_gbs,model_pc_gbs,meas_bw_gbs,model_bw_gbs,alpha_meas,alpha_model,err"
+    }
+
+    /// One CSV row per group.
+    pub fn to_csv_rows(&self) -> Vec<String> {
+        self.groups
+            .iter()
+            .enumerate()
+            .map(|(gi, g)| {
+                format!(
+                    "{},{},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.5},{:.5},{:.5}",
+                    self.machine.key(),
+                    self.mix.label(),
+                    self.mix.k(),
+                    self.mix.idle_cores,
+                    gi,
+                    g.kernel.key(),
+                    g.n,
+                    g.measured_per_core,
+                    g.model_per_core,
+                    g.measured_bw_gbs,
+                    g.model_bw_gbs,
+                    self.measured_alpha(gi),
+                    g.model_alpha,
+                    g.error(),
+                )
+            })
+            .collect()
+    }
+
+    /// One JSON object per mix (hand-rolled).
+    pub fn to_json(&self) -> String {
+        let groups: Vec<String> = self
+            .groups
+            .iter()
+            .enumerate()
+            .map(|(gi, g)| {
+                format!(
+                    "{{\"kernel\":\"{}\",\"n\":{},\"meas_pc\":{:.5},\"model_pc\":{:.5},\
+                     \"alpha_meas\":{:.6},\"alpha_model\":{:.6},\"err\":{:.6}}}",
+                    g.kernel.key(),
+                    g.n,
+                    g.measured_per_core,
+                    g.model_per_core,
+                    self.measured_alpha(gi),
+                    g.model_alpha,
+                    g.error(),
+                )
+            })
+            .collect();
+        format!(
+            "{{\"machine\":\"{}\",\"mix\":\"{}\",\"idle\":{},\"saturated\":{},\
+             \"meas_total\":{:.5},\"model_total\":{:.5},\"b_mix\":{:.5},\"groups\":[{}]}}",
+            self.machine.key(),
+            self.mix.label(),
+            self.mix.idle_cores,
+            self.saturated,
+            self.measured_total_gbs,
+            self.model_total_gbs,
+            self.b_mix_gbs,
+            groups.join(","),
+        )
+    }
+}
+
+/// A set of mix results with persistence helpers.
+#[derive(Debug, Clone, Default)]
+pub struct MixResultSet {
+    /// All mix results, in input order.
+    pub cases: Vec<MixResult>,
+}
+
+impl MixResultSet {
+    /// All per-group relative errors, flattened.
+    pub fn all_errors(&self) -> Vec<f64> {
+        self.cases.iter().flat_map(|c| c.errors()).collect()
+    }
+
+    /// Write as CSV (one row per group).
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "{}", MixResult::csv_header())?;
+        for c in &self.cases {
+            for row in c.to_csv_rows() {
+                writeln!(f, "{row}")?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Write as JSON lines (one object per mix).
+    pub fn write_jsonl(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        for c in &self.cases {
+            writeln!(f, "{}", c.to_json())?;
+        }
+        Ok(())
+    }
+}
+
+/// Result of a time-phased scenario: one [`MixResult`] per phase.
+#[derive(Debug, Clone)]
+pub struct ScenarioResult {
+    /// Scenario name.
+    pub name: String,
+    /// Machine the scenario ran on.
+    pub machine: MachineId,
+    /// Per-phase results, in time order.
+    pub phases: Vec<MixResult>,
+}
+
+impl ScenarioResult {
+    /// All per-group relative errors over all phases.
+    pub fn all_errors(&self) -> Vec<f64> {
+        self.phases.iter().flat_map(|p| p.errors()).collect()
+    }
+
+    /// Safe file stem derived from the scenario name.
+    pub fn file_stem(&self) -> String {
+        crate::scenario::slugify(&self.name)
+    }
+
+    /// Write all phases as one CSV.
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        MixResultSet { cases: self.phases.clone() }.write_csv(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::KernelId;
+
+    fn sample() -> MixResult {
+        MixResult {
+            machine: MachineId::Bdw1,
+            mix: Mix::new().with(KernelId::Dcopy, 6).with(KernelId::Ddot2, 4).idle(0),
+            groups: vec![
+                GroupOutcome {
+                    kernel: KernelId::Dcopy,
+                    n: 6,
+                    measured_bw_gbs: 37.7,
+                    measured_per_core: 6.29,
+                    model_bw_gbs: 38.6,
+                    model_per_core: 6.44,
+                    model_alpha: 0.65,
+                },
+                GroupOutcome {
+                    kernel: KernelId::Ddot2,
+                    n: 4,
+                    measured_bw_gbs: 20.0,
+                    measured_per_core: 5.0,
+                    model_bw_gbs: 20.4,
+                    model_per_core: 5.09,
+                    model_alpha: 0.35,
+                },
+            ],
+            measured_total_gbs: 57.7,
+            model_total_gbs: 59.0,
+            b_mix_gbs: 59.0,
+            saturated: true,
+        }
+    }
+
+    #[test]
+    fn errors_match_fig8_definition() {
+        let r = sample();
+        let e = r.errors();
+        assert_eq!(e.len(), 2);
+        assert!((e[0] - (6.44 - 6.29) / 6.44).abs() < 1e-12);
+    }
+
+    #[test]
+    fn measured_alpha_partitions_total() {
+        let r = sample();
+        assert!((r.measured_alpha(0) + r.measured_alpha(1) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_rows_match_header_arity() {
+        let r = sample();
+        let header_cols = MixResult::csv_header().split(',').count();
+        for row in r.to_csv_rows() {
+            assert_eq!(row.split(',').count(), header_cols);
+        }
+    }
+
+    #[test]
+    fn json_is_wellformed_enough() {
+        let j = sample().to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert!(j.contains("\"mix\":\"dcopy:6+ddot2:4\""));
+    }
+
+    #[test]
+    fn files_roundtrip() {
+        let dir = std::env::temp_dir().join("membw-scenario-results-test");
+        let set = MixResultSet { cases: vec![sample(), sample()] };
+        set.write_csv(&dir.join("mixes.csv")).unwrap();
+        set.write_jsonl(&dir.join("mixes.jsonl")).unwrap();
+        let csv = std::fs::read_to_string(dir.join("mixes.csv")).unwrap();
+        assert_eq!(csv.lines().count(), 1 + 2 * 2, "header + 2 groups x 2 mixes");
+        let jsonl = std::fs::read_to_string(dir.join("mixes.jsonl")).unwrap();
+        assert_eq!(jsonl.lines().count(), 2);
+    }
+}

@@ -1,0 +1,286 @@
+//! The unified measurement pipeline: batched, parallel execution of k-group
+//! mixes on any engine, with the multigroup analytic prediction (generalized
+//! Eqs. 4+5) attached to every measured case.
+//!
+//! This is the single pipeline behind both the scenario CLI and the legacy
+//! two-group pairing sweeps ([`crate::sweep::run_cases`] converts its
+//! [`crate::sweep::PairingCase`]s to k=2 mixes and delegates here).
+//!
+//! Parallelism: in-process engines (fluid, DES) fan the mix list out over a
+//! dynamically scheduled worker pool (rayon-style semantics — an atomic work
+//! index instead of a work-stealing deque — kept dependency-free because the
+//! build is offline); the PJRT engine instead packs the whole list into
+//! batched artifact dispatches. Kernel characterizations are served from the
+//! process-wide [`CharCache`].
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::config::Machine;
+use crate::error::Result;
+use crate::kernels::{kernel, KernelId};
+use crate::runtime::{PjrtSimExecutor, SimCase};
+use crate::scenario::cache::{CharCache, EngineKind};
+use crate::scenario::results::{GroupOutcome, MixResult, MixResultSet, ScenarioResult};
+use crate::scenario::spec::{Mix, Scenario};
+use crate::sharing::{share_multigroup, KernelGroup};
+use crate::simulator::{run_engine, CoreWorkload, Engine, KernelMeasurement};
+
+/// Measurement engine selection for a sweep or scenario run.
+pub enum MeasureEngine<'a> {
+    /// In-process fluid simulator, parallelized over OS threads.
+    Fluid,
+    /// In-process discrete-event simulator, parallelized over OS threads.
+    Des,
+    /// The AOT JAX/Pallas artifact through PJRT (batched).
+    Pjrt(&'a PjrtSimExecutor),
+}
+
+impl MeasureEngine<'_> {
+    /// The in-process engine, if this is not the PJRT path.
+    pub(crate) fn inproc(&self) -> Option<Engine> {
+        match self {
+            MeasureEngine::Fluid => Some(Engine::Fluid),
+            MeasureEngine::Des => Some(Engine::Des),
+            MeasureEngine::Pjrt(_) => None,
+        }
+    }
+
+    /// Engine kind for cache keying.
+    pub fn kind(&self) -> EngineKind {
+        match self {
+            MeasureEngine::Fluid => EngineKind::Fluid,
+            MeasureEngine::Des => EngineKind::Des,
+            MeasureEngine::Pjrt(exec) => {
+                use std::hash::{Hash, Hasher};
+                let mut h = std::collections::hash_map::DefaultHasher::new();
+                exec.source().hash(&mut h);
+                EngineKind::Pjrt(h.finish())
+            }
+        }
+    }
+
+    /// Short display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            MeasureEngine::Fluid => "fluid",
+            MeasureEngine::Des => "des",
+            MeasureEngine::Pjrt(_) => "pjrt",
+        }
+    }
+}
+
+/// Dynamically scheduled parallel map over a slice (results in input order).
+///
+/// Workers pull the next index from a shared atomic counter, so long and
+/// short items balance automatically — the scheduling rayon's `par_iter`
+/// would give, without the dependency (offline build).
+fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    if items.len() <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let workers = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .min(items.len());
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(items.len()));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i]);
+                results.lock().unwrap().push((i, r));
+            });
+        }
+    });
+    let mut pairs = results.into_inner().unwrap();
+    pairs.sort_by_key(|(i, _)| *i);
+    pairs.into_iter().map(|(_, r)| r).collect()
+}
+
+/// Per-core workload vector of a mix: kernel groups in order, idle cores
+/// last (scenario (c) of Fig. 2 — zero demand, absent from contention).
+fn workloads_for(machine: &Machine, mix: &Mix) -> Vec<CoreWorkload> {
+    let mut ws = Vec::with_capacity(mix.total_cores());
+    for (gi, g) in mix.groups.iter().enumerate() {
+        let w = CoreWorkload::from_kernel(&kernel(g.kernel), machine, gi);
+        ws.extend(vec![w; g.cores]);
+    }
+    ws.extend(vec![CoreWorkload::idle(); mix.idle_cores]);
+    ws
+}
+
+/// Compose the per-mix result from raw per-core bandwidths plus the
+/// multigroup model prediction.
+fn compose_result(
+    machine: &Machine,
+    mix: &Mix,
+    per_core: &[f64],
+    chars: &HashMap<KernelId, KernelMeasurement>,
+) -> MixResult {
+    let model_groups: Vec<KernelGroup> = mix
+        .groups
+        .iter()
+        .map(|g| {
+            let c = chars[&g.kernel];
+            KernelGroup { n: g.cores, f: c.f, bs_gbs: c.bs_gbs }
+        })
+        .collect();
+    let share = share_multigroup(&model_groups);
+
+    let mut outcomes = Vec::with_capacity(mix.k());
+    let mut offset = 0usize;
+    let mut measured_total = 0.0f64;
+    let mut model_total = 0.0f64;
+    for (gi, g) in mix.groups.iter().enumerate() {
+        let bw: f64 = per_core[offset..offset + g.cores].iter().sum();
+        offset += g.cores;
+        measured_total += bw;
+        let entry = &share.groups[gi];
+        model_total += entry.group_bw_gbs;
+        outcomes.push(GroupOutcome {
+            kernel: g.kernel,
+            n: g.cores,
+            measured_bw_gbs: bw,
+            measured_per_core: if g.cores > 0 { bw / g.cores as f64 } else { 0.0 },
+            model_bw_gbs: entry.group_bw_gbs,
+            model_per_core: entry.per_core_gbs,
+            model_alpha: entry.alpha,
+        });
+    }
+    MixResult {
+        machine: machine.id,
+        mix: mix.clone(),
+        groups: outcomes,
+        measured_total_gbs: measured_total,
+        model_total_gbs: model_total,
+        b_mix_gbs: share.b_mix_gbs,
+        saturated: share.saturated,
+    }
+}
+
+/// Measure a batch of mixes on `machine` with `engine`; results are in
+/// input order, each carrying the multigroup analytic prediction.
+pub fn run_mixes(machine: &Machine, mixes: &[Mix], engine: &MeasureEngine) -> Result<MixResultSet> {
+    for mix in mixes {
+        mix.validate(machine)?;
+    }
+    let mut kernels: Vec<KernelId> = mixes.iter().flat_map(|m| m.kernels()).collect();
+    kernels.sort_by_key(|k| k.key());
+    kernels.dedup();
+    let chars = CharCache::global().characterize(machine, &kernels, engine)?;
+
+    let per_core: Vec<Vec<f64>> = match engine {
+        MeasureEngine::Pjrt(exec) => {
+            let sim_cases: Vec<SimCase> = mixes
+                .iter()
+                .map(|mx| SimCase {
+                    machine: machine.clone(),
+                    workloads: workloads_for(machine, mx),
+                })
+                .collect();
+            exec.run(&sim_cases)?
+        }
+        _ => {
+            let eng = engine.inproc().expect("non-PJRT engines are in-process");
+            par_map(mixes, |mx| run_engine(machine, &workloads_for(machine, mx), eng))
+        }
+    };
+
+    Ok(MixResultSet {
+        cases: mixes
+            .iter()
+            .zip(&per_core)
+            .map(|(mx, pc)| compose_result(machine, mx, pc, &chars))
+            .collect(),
+    })
+}
+
+/// Run every phase of a scenario (batched through [`run_mixes`]).
+pub fn run_scenario(
+    machine: &Machine,
+    scenario: &Scenario,
+    engine: &MeasureEngine,
+) -> Result<ScenarioResult> {
+    let rs = run_mixes(machine, &scenario.mixes, engine)?;
+    Ok(ScenarioResult { name: scenario.name.clone(), machine: machine.id, phases: rs.cases })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{machine, MachineId};
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<usize> = (0..257).collect();
+        let out = par_map(&items, |&x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+        assert!(par_map(&[] as &[usize], |&x: &usize| x).is_empty());
+    }
+
+    #[test]
+    fn three_group_mix_measures_and_predicts() {
+        let m = machine(MachineId::Rome);
+        let mix = Mix::parse("dcopy:3+ddot2:3+stream:2").unwrap();
+        let rs = run_mixes(&m, std::slice::from_ref(&mix), &MeasureEngine::Fluid).unwrap();
+        let r = &rs.cases[0];
+        assert_eq!(r.groups.len(), 3);
+        assert!(r.measured_total_gbs > 0.0);
+        assert!(r.model_total_gbs > 0.0);
+        let alpha_sum: f64 = r.groups.iter().map(|g| g.model_alpha).sum();
+        assert!((alpha_sum - 1.0).abs() < 1e-9);
+        for g in &r.groups {
+            assert!(g.error() < 0.08, "{:?}: err {}", g.kernel, g.error());
+        }
+    }
+
+    #[test]
+    fn idle_cores_leave_bandwidth_to_active_groups() {
+        let m = machine(MachineId::Bdw1);
+        let contended = Mix::parse("dcopy:3+ddot2:3+stream:4").unwrap();
+        let idle = Mix::parse("dcopy:3+ddot2:3+idle:4").unwrap();
+        let rs = run_mixes(&m, &[contended, idle], &MeasureEngine::Fluid).unwrap();
+        for g in 0..2 {
+            assert!(
+                rs.cases[1].groups[g].measured_per_core > rs.cases[0].groups[g].measured_per_core,
+                "group {g} should speed up when the third group idles"
+            );
+        }
+    }
+
+    #[test]
+    fn batched_run_matches_individual_runs() {
+        let m = machine(MachineId::Rome);
+        let mixes = vec![
+            Mix::parse("dcopy:4+ddot2:4").unwrap(),
+            Mix::parse("stream:2+vecsum:2+idle:4").unwrap(),
+            Mix::parse("daxpy:8").unwrap(),
+        ];
+        let batched = run_mixes(&m, &mixes, &MeasureEngine::Fluid).unwrap();
+        for (i, mix) in mixes.iter().enumerate() {
+            let solo = run_mixes(&m, std::slice::from_ref(mix), &MeasureEngine::Fluid).unwrap();
+            for (a, b) in batched.cases[i].groups.iter().zip(&solo.cases[0].groups) {
+                assert_eq!(a.measured_per_core.to_bits(), b.measured_per_core.to_bits());
+                assert_eq!(a.model_per_core.to_bits(), b.model_per_core.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn invalid_mix_rejected_before_measurement() {
+        let m = machine(MachineId::Rome);
+        let overfull = Mix::parse("dcopy:6+ddot2:6").unwrap();
+        assert!(run_mixes(&m, &[overfull], &MeasureEngine::Fluid).is_err());
+    }
+}

@@ -1,0 +1,331 @@
+//! Scenario specifications: arbitrary k-group workload mixes and
+//! time-phased sequences of mixes.
+//!
+//! A [`Mix`] generalizes [`crate::sweep::PairingCase`] from two thread
+//! groups to any number of groups plus explicit idle cores (scenario (c) of
+//! the paper's Fig. 2 — idle/communicating cores are simply absent from the
+//! contention). A [`Scenario`] is a named sequence of mixes, modelling a
+//! program that moves through workload phases (the desynchronization
+//! phenomenology of Figs. 1–3: at any instant cores are spread over several
+//! kernels and idle waits).
+//!
+//! Mixes have a compact text form for the CLI:
+//! `"dcopy:4+ddot2:4+idle:2"`; scenarios join phases with `/`:
+//! `"dcopy:8+ddot2:8 / dcopy:4+idle:12"`.
+
+use crate::config::Machine;
+use crate::error::{Error, Result};
+use crate::kernels::KernelId;
+use crate::sweep::PairingCase;
+
+/// Reduce a user-supplied name to a safe file stem: `[A-Za-z0-9._-]` kept,
+/// everything else (path separators, spaces, ...) mapped to `-`.
+pub fn slugify(name: &str) -> String {
+    let slug: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-') { c } else { '-' })
+        .collect();
+    let trimmed = slug.trim_matches(|c| c == '.' || c == '-').to_string();
+    if trimmed.is_empty() {
+        "scenario".to_string()
+    } else {
+        trimmed
+    }
+}
+
+/// One group of cores all executing the same kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GroupSpec {
+    /// Kernel the group runs.
+    pub kernel: KernelId,
+    /// Number of cores in the group.
+    pub cores: usize,
+}
+
+/// An instantaneous workload mix: k kernel groups plus idle cores.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Mix {
+    /// Kernel groups, in core order (group i occupies the cores after
+    /// groups 0..i).
+    pub groups: Vec<GroupSpec>,
+    /// Cores that issue no memory traffic (idle or communicating).
+    pub idle_cores: usize,
+}
+
+impl Mix {
+    /// Start an empty mix (builder entry point).
+    pub fn new() -> Self {
+        Mix::default()
+    }
+
+    /// Add a kernel group of `cores` cores.
+    pub fn with(mut self, kernel: KernelId, cores: usize) -> Self {
+        self.groups.push(GroupSpec { kernel, cores });
+        self
+    }
+
+    /// Add `cores` idle cores.
+    pub fn idle(mut self, cores: usize) -> Self {
+        self.idle_cores += cores;
+        self
+    }
+
+    /// The k=2 special case: a pairing case as a mix.
+    pub fn from_pairing(case: &PairingCase) -> Self {
+        Mix::new().with(case.k1, case.n1).with(case.k2, case.n2)
+    }
+
+    /// Number of kernel groups (k).
+    pub fn k(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Cores executing kernels.
+    pub fn active_cores(&self) -> usize {
+        self.groups.iter().map(|g| g.cores).sum()
+    }
+
+    /// Active plus idle cores.
+    pub fn total_cores(&self) -> usize {
+        self.active_cores() + self.idle_cores
+    }
+
+    /// Distinct kernels appearing in the mix.
+    pub fn kernels(&self) -> Vec<KernelId> {
+        let mut ks: Vec<KernelId> = self.groups.iter().map(|g| g.kernel).collect();
+        ks.sort_by_key(|k| k.key());
+        ks.dedup();
+        ks
+    }
+
+    /// Validate the mix against a machine's contention domain.
+    pub fn validate(&self, m: &Machine) -> Result<()> {
+        if self.active_cores() == 0 {
+            return Err(Error::InvalidPlan(format!(
+                "mix '{}' has no active cores",
+                self.label()
+            )));
+        }
+        if self.total_cores() > m.cores {
+            return Err(Error::InvalidPlan(format!(
+                "mix '{}' needs {} cores but the {} domain has {}",
+                self.label(),
+                self.total_cores(),
+                m.name,
+                m.cores
+            )));
+        }
+        Ok(())
+    }
+
+    /// Canonical text form: `kernel:cores` joined by `+`, idle last.
+    pub fn label(&self) -> String {
+        let mut parts: Vec<String> = self
+            .groups
+            .iter()
+            .map(|g| format!("{}:{}", g.kernel.key(), g.cores))
+            .collect();
+        if self.idle_cores > 0 {
+            parts.push(format!("idle:{}", self.idle_cores));
+        }
+        parts.join("+")
+    }
+
+    /// Parse the text form (`"dcopy:4+ddot2:4+idle:2"`; whitespace around
+    /// `+` is tolerated). Inverse of [`Mix::label`].
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut mix = Mix::new();
+        for part in s.split('+') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (name, count) = part.split_once(':').ok_or_else(|| {
+                Error::InvalidPlan(format!("mix term '{part}' is not 'kernel:cores'"))
+            })?;
+            let cores: usize = count.trim().parse().map_err(|_| {
+                Error::InvalidPlan(format!("bad core count in mix term '{part}'"))
+            })?;
+            if cores == 0 {
+                return Err(Error::InvalidPlan(format!(
+                    "mix term '{part}' has zero cores"
+                )));
+            }
+            let name = name.trim();
+            if name.eq_ignore_ascii_case("idle") {
+                mix = mix.idle(cores);
+            } else {
+                mix = mix.with(KernelId::parse(name)?, cores);
+            }
+        }
+        if mix.groups.is_empty() && mix.idle_cores == 0 {
+            return Err(Error::InvalidPlan(format!("empty mix spec '{s}'")));
+        }
+        Ok(mix)
+    }
+}
+
+/// A named, time-phased sequence of mixes. Each phase is measured at its own
+/// steady state (the engines simulate stationary contention, matching the
+/// sharing model's per-composition evaluation in the desync co-simulator).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Scenario {
+    /// Display name (also used for result file names).
+    pub name: String,
+    /// Phases, in time order.
+    pub mixes: Vec<Mix>,
+}
+
+impl Scenario {
+    /// Start an empty scenario.
+    pub fn new(name: &str) -> Self {
+        Scenario { name: name.to_string(), mixes: Vec::new() }
+    }
+
+    /// Append a phase.
+    pub fn then(mut self, mix: Mix) -> Self {
+        self.mixes.push(mix);
+        self
+    }
+
+    /// Parse a `/`-separated sequence of mix specs.
+    pub fn parse(name: &str, s: &str) -> Result<Self> {
+        let mixes = s
+            .split('/')
+            .filter(|p| !p.trim().is_empty())
+            .map(Mix::parse)
+            .collect::<Result<Vec<Mix>>>()?;
+        if mixes.is_empty() {
+            return Err(Error::InvalidPlan(format!("empty scenario spec '{s}'")));
+        }
+        Ok(Scenario { name: name.to_string(), mixes })
+    }
+
+    /// Validate every phase against a machine.
+    pub fn validate(&self, m: &Machine) -> Result<()> {
+        for mix in &self.mixes {
+            mix.validate(m)?;
+        }
+        Ok(())
+    }
+
+    /// Safe file stem derived from the scenario name (see [`slugify`]).
+    pub fn file_stem(&self) -> String {
+        slugify(&self.name)
+    }
+
+    /// A built-in demo scenario scaled to a machine: a fully populated
+    /// 3-group phase, a partially idle phase, and a 4-group phase.
+    pub fn demo(m: &Machine) -> Self {
+        let c = m.cores;
+        let third = c / 3;
+        let quarter = c / 4;
+        Scenario::new("demo")
+            .then(
+                Mix::new()
+                    .with(KernelId::Dcopy, third)
+                    .with(KernelId::Ddot2, third)
+                    .with(KernelId::Stream, c - 2 * third),
+            )
+            .then(
+                Mix::new()
+                    .with(KernelId::Dcopy, third)
+                    .with(KernelId::Ddot2, third)
+                    .idle(c - 2 * third),
+            )
+            .then(
+                Mix::new()
+                    .with(KernelId::VecSum, quarter.max(1))
+                    .with(KernelId::Daxpy, quarter.max(1))
+                    .with(KernelId::Schoenauer, quarter.max(1))
+                    .with(KernelId::Dscal, c.saturating_sub(3 * quarter.max(1)).clamp(1, c)),
+            )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{machine, MachineId};
+
+    #[test]
+    fn builder_and_label_roundtrip() {
+        let mix = Mix::new()
+            .with(KernelId::Dcopy, 4)
+            .with(KernelId::Ddot2, 4)
+            .idle(2);
+        assert_eq!(mix.k(), 2);
+        assert_eq!(mix.active_cores(), 8);
+        assert_eq!(mix.total_cores(), 10);
+        assert_eq!(mix.label(), "dcopy:4+ddot2:4+idle:2");
+        let back = Mix::parse(&mix.label()).unwrap();
+        assert_eq!(back, mix);
+    }
+
+    #[test]
+    fn parse_tolerates_whitespace_and_aliases() {
+        let mix = Mix::parse(" triad:3 + IDLE:2 + ddot2:1 ").unwrap();
+        assert_eq!(mix.groups[0].kernel, KernelId::Stream);
+        assert_eq!(mix.idle_cores, 2);
+        assert_eq!(mix.active_cores(), 4);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        assert!(Mix::parse("dcopy").is_err());
+        assert!(Mix::parse("dcopy:x").is_err());
+        assert!(Mix::parse("nosuchkernel:2").is_err());
+        assert!(Mix::parse("").is_err());
+        assert!(Mix::parse("dcopy:0+ddot2:4").is_err(), "zero-core groups are rejected");
+        assert!(Mix::parse("idle:0").is_err());
+    }
+
+    #[test]
+    fn slugify_neutralizes_path_components() {
+        assert_eq!(slugify("../../tmp/evil"), "tmp-evil");
+        assert_eq!(slugify("demo"), "demo");
+        assert_eq!(slugify("a b/c"), "a-b-c");
+        assert_eq!(slugify("///"), "scenario");
+        assert_eq!(
+            Scenario::new("../x").file_stem(),
+            "x",
+            "scenario file stems cannot escape the output directory"
+        );
+    }
+
+    #[test]
+    fn validation_enforces_domain_and_activity() {
+        let m = machine(MachineId::Rome); // 8 cores
+        assert!(Mix::parse("dcopy:4+ddot2:4").unwrap().validate(&m).is_ok());
+        assert!(Mix::parse("dcopy:5+ddot2:4").unwrap().validate(&m).is_err());
+        assert!(Mix::parse("idle:4").unwrap().validate(&m).is_err());
+        assert!(Mix::parse("dcopy:4+idle:5").unwrap().validate(&m).is_err());
+    }
+
+    #[test]
+    fn pairing_case_is_k2_mix() {
+        let case = PairingCase { k1: KernelId::Dcopy, k2: KernelId::Ddot2, n1: 6, n2: 4 };
+        let mix = Mix::from_pairing(&case);
+        assert_eq!(mix.k(), 2);
+        assert_eq!(mix.groups[0], GroupSpec { kernel: KernelId::Dcopy, cores: 6 });
+        assert_eq!(mix.groups[1], GroupSpec { kernel: KernelId::Ddot2, cores: 4 });
+        assert_eq!(mix.idle_cores, 0);
+    }
+
+    #[test]
+    fn scenario_parse_and_validate() {
+        let m = machine(MachineId::Bdw1);
+        let sc = Scenario::parse("t", "dcopy:4+ddot2:6 / dcopy:3+idle:7").unwrap();
+        assert_eq!(sc.mixes.len(), 2);
+        sc.validate(&m).unwrap();
+        assert!(Scenario::parse("t", " / ").is_err());
+    }
+
+    #[test]
+    fn demo_scenarios_fit_every_machine() {
+        for mid in MachineId::ALL {
+            let m = machine(mid);
+            Scenario::demo(&m).validate(&m).unwrap();
+        }
+    }
+}

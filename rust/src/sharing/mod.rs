@@ -16,4 +16,4 @@ mod multigroup;
 pub use baseline::{code_balance_share, equal_share, BaselineKind};
 pub use desync_predictor::{predict_skew, OverlapPartner, SkewPrediction};
 pub use model::{overlapped_saturated_bw, share_two_groups, KernelGroup, SharingPrediction};
-pub use multigroup::{share_multigroup, GroupShare};
+pub use multigroup::{share_multigroup, GroupShare, GroupShareEntry};

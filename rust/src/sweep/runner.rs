@@ -1,195 +1,45 @@
-//! Parallel sweep runner: measures pairing cases on a machine with a chosen
-//! engine and attaches the analytic-model prediction (Eqs. 4+5) computed
-//! from Eq.-3-measured `f` and `b_s` — exactly the paper's procedure.
-
-use std::collections::HashMap;
-use std::sync::{Mutex, OnceLock};
+//! Pairing sweep runner — the k=2 special case of the scenario engine.
+//!
+//! Historically this module owned its own measurement loop and
+//! characterization cache; both now live in [`crate::scenario`], and this
+//! runner only converts [`PairingCase`]s into two-group [`Mix`]es, delegates
+//! to the batched parallel [`crate::scenario::run_mixes`] pipeline, and
+//! reshapes the k-group results into the legacy two-group [`CaseResult`]
+//! records (what the Fig. 6–9 reports consume). The analytic prediction is
+//! the multigroup generalization evaluated at k=2, which is exactly
+//! Eqs. (4)+(5) — see `share_two_groups`.
 
 use crate::config::Machine;
 use crate::error::Result;
-use crate::kernels::{kernel, KernelId};
-use crate::runtime::{PjrtSimExecutor, SimCase};
-use crate::sharing::{share_two_groups, KernelGroup};
-use crate::simulator::{measure_f_bs, run_engine, CoreWorkload, Engine, KernelMeasurement};
+use crate::runtime::PjrtSimExecutor;
+use crate::scenario::{run_mixes, Mix};
 use crate::sweep::plan::PairingCase;
 use crate::sweep::results::{CaseResult, ResultSet};
 
-/// Measurement engine selection for a sweep.
-pub enum MeasureEngine<'a> {
-    /// In-process fluid simulator, parallelized over OS threads.
-    Fluid,
-    /// In-process discrete-event simulator, parallelized over OS threads.
-    Des,
-    /// The AOT JAX/Pallas artifact through PJRT (batched).
-    Pjrt(&'a PjrtSimExecutor),
-}
-
-impl MeasureEngine<'_> {
-    fn inproc(&self) -> Option<Engine> {
-        match self {
-            MeasureEngine::Fluid => Some(Engine::Fluid),
-            MeasureEngine::Des => Some(Engine::Des),
-            MeasureEngine::Pjrt(_) => None,
-        }
-    }
-}
-
-/// Process-wide characterization cache: (machine, kernel, engine kind) →
-/// Eq.-3 measurement. Characterizations are deterministic per engine, so
-/// caching is safe; it removes the dominant redundant work from multi-call
-/// sweeps (Fig. 8/9 regenerate hundreds of `run_cases` calls).
-fn char_cache() -> &'static Mutex<HashMap<(crate::config::MachineId, KernelId, u8), KernelMeasurement>> {
-    static CACHE: OnceLock<Mutex<HashMap<(crate::config::MachineId, KernelId, u8), KernelMeasurement>>> =
-        OnceLock::new();
-    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
-}
-
-fn engine_kind(engine: &MeasureEngine) -> u8 {
-    match engine {
-        MeasureEngine::Fluid => 0,
-        MeasureEngine::Des => 1,
-        MeasureEngine::Pjrt(_) => 2,
-    }
-}
-
-/// Characterize every kernel appearing in `cases` (Eq. 3: solo + full
-/// domain) with the same engine used for the pairing measurements.
-/// Results are served from the process-wide cache when available.
-fn characterize(
-    machine: &Machine,
-    kernels: &[KernelId],
-    engine: &MeasureEngine,
-) -> Result<HashMap<KernelId, KernelMeasurement>> {
-    let kind = engine_kind(engine);
-    let mut out = HashMap::new();
-    let mut missing: Vec<KernelId> = Vec::new();
-    {
-        let cache = char_cache().lock().unwrap();
-        for &k in kernels {
-            match cache.get(&(machine.id, k, kind)) {
-                Some(m) => {
-                    out.insert(k, *m);
-                }
-                None => missing.push(k),
-            }
-        }
-    }
-    if !missing.is_empty() {
-        match engine {
-            MeasureEngine::Pjrt(exec) => {
-                // Two configs per kernel: 1 core and the full domain.
-                let mut cases = Vec::new();
-                for &k in &missing {
-                    let w = CoreWorkload::from_kernel(&kernel(k), machine, 0);
-                    cases.push(SimCase { machine: machine.clone(), workloads: vec![w] });
-                    cases.push(SimCase { machine: machine.clone(), workloads: vec![w; machine.cores] });
-                }
-                let bw = exec.run(&cases)?;
-                for (i, &k) in missing.iter().enumerate() {
-                    let b1 = bw[2 * i][0];
-                    let bs: f64 = bw[2 * i + 1].iter().sum();
-                    out.insert(k, KernelMeasurement { b1_gbs: b1, bs_gbs: bs, f: b1 / bs });
-                }
-            }
-            _ => {
-                let eng = engine.inproc().unwrap();
-                for &k in &missing {
-                    out.insert(k, measure_f_bs(&kernel(k), machine, eng));
-                }
-            }
-        }
-        let mut cache = char_cache().lock().unwrap();
-        for &k in &missing {
-            cache.insert((machine.id, k, kind), out[&k]);
-        }
-    }
-    Ok(out)
-}
-
-/// Compose the per-case result from raw per-core bandwidths.
-fn to_result(
-    machine: &Machine,
-    case: &PairingCase,
-    per_core: &[f64],
-    chars: &HashMap<KernelId, KernelMeasurement>,
-) -> CaseResult {
-    let g0: f64 = per_core.iter().take(case.n1).sum();
-    let g1: f64 = per_core.iter().skip(case.n1).take(case.n2).sum();
-    let m1 = chars[&case.k1];
-    let m2 = chars[&case.k2];
-    let pred = share_two_groups(
-        &KernelGroup { n: case.n1, f: m1.f, bs_gbs: m1.bs_gbs },
-        &KernelGroup { n: case.n2, f: m2.f, bs_gbs: m2.bs_gbs },
-    );
-    CaseResult {
-        machine: machine.id,
-        kernels: [case.k1, case.k2],
-        n: [case.n1, case.n2],
-        measured_per_core: [
-            if case.n1 > 0 { g0 / case.n1 as f64 } else { 0.0 },
-            if case.n2 > 0 { g1 / case.n2 as f64 } else { 0.0 },
-        ],
-        model_per_core: pred.per_core_gbs,
-        measured_total: g0 + g1,
-        model_total: pred.group_bw_gbs[0] + pred.group_bw_gbs[1],
-    }
-}
-
-fn workloads_for(machine: &Machine, case: &PairingCase) -> Vec<CoreWorkload> {
-    let mut ws = vec![CoreWorkload::from_kernel(&kernel(case.k1), machine, 0); case.n1];
-    ws.extend(vec![CoreWorkload::from_kernel(&kernel(case.k2), machine, 1); case.n2]);
-    ws
-}
+pub use crate::scenario::MeasureEngine;
 
 /// Run `cases` on `machine` with `engine`; results are in plan order.
 pub fn run_cases(machine: &Machine, cases: &[PairingCase], engine: &MeasureEngine) -> Result<ResultSet> {
     for c in cases {
         c.validate(machine)?;
     }
-    let mut kernels: Vec<KernelId> = cases.iter().flat_map(|c| [c.k1, c.k2]).collect();
-    kernels.sort_by_key(|k| k.key());
-    kernels.dedup();
-    let chars = characterize(machine, &kernels, engine)?;
-
-    match engine {
-        MeasureEngine::Pjrt(exec) => {
-            let sim_cases: Vec<SimCase> = cases
-                .iter()
-                .map(|c| SimCase { machine: machine.clone(), workloads: workloads_for(machine, c) })
-                .collect();
-            let bw = exec.run(&sim_cases)?;
-            Ok(ResultSet {
-                cases: cases
-                    .iter()
-                    .zip(&bw)
-                    .map(|(c, pc)| to_result(machine, c, pc, &chars))
-                    .collect(),
+    let mixes: Vec<Mix> = cases.iter().map(Mix::from_pairing).collect();
+    let mixed = run_mixes(machine, &mixes, engine)?;
+    Ok(ResultSet {
+        cases: cases
+            .iter()
+            .zip(&mixed.cases)
+            .map(|(c, m)| CaseResult {
+                machine: machine.id,
+                kernels: [c.k1, c.k2],
+                n: [c.n1, c.n2],
+                measured_per_core: [m.groups[0].measured_per_core, m.groups[1].measured_per_core],
+                model_per_core: [m.groups[0].model_per_core, m.groups[1].model_per_core],
+                measured_total: m.measured_total_gbs,
+                model_total: m.model_total_gbs,
             })
-        }
-        _ => {
-            let eng = engine.inproc().unwrap();
-            let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
-            let results: Mutex<Vec<(usize, CaseResult)>> = Mutex::new(Vec::with_capacity(cases.len()));
-            let next = std::sync::atomic::AtomicUsize::new(0);
-            std::thread::scope(|scope| {
-                for _ in 0..workers.min(cases.len().max(1)) {
-                    scope.spawn(|| loop {
-                        let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                        if i >= cases.len() {
-                            break;
-                        }
-                        let ws = workloads_for(machine, &cases[i]);
-                        let pc = run_engine(machine, &ws, eng);
-                        let r = to_result(machine, &cases[i], &pc, &chars);
-                        results.lock().unwrap().push((i, r));
-                    });
-                }
-            });
-            let mut pairs = results.into_inner().unwrap();
-            pairs.sort_by_key(|(i, _)| *i);
-            Ok(ResultSet { cases: pairs.into_iter().map(|(_, r)| r).collect() })
-        }
-    }
+            .collect(),
+    })
 }
 
 /// Convenience wrapper that loads the artifact bundle and runs via PJRT.
@@ -205,6 +55,7 @@ pub fn run_cases_pjrt(
 mod tests {
     use super::*;
     use crate::config::{machine, MachineId};
+    use crate::kernels::KernelId;
     use crate::sweep::plan::full_domain_splits;
 
     #[test]
@@ -228,5 +79,33 @@ mod tests {
         let errs = rs.all_errors();
         let max = errs.iter().cloned().fold(0.0, f64::max);
         assert!(max < 0.10, "max error {max}");
+    }
+
+    #[test]
+    fn pairing_prediction_equals_two_group_model() {
+        // The scenario pipeline must attach exactly the Eqs. (4)+(5)
+        // prediction the two-group wrapper computes.
+        use crate::scenario::{CharCache, EngineKind};
+        use crate::sharing::{share_two_groups, KernelGroup};
+        let m = machine(MachineId::Bdw1);
+        let case = PairingCase { k1: KernelId::Dcopy, k2: KernelId::Ddot2, n1: 6, n2: 4 };
+        let rs = run_cases(&m, &[case], &MeasureEngine::Fluid).unwrap();
+        let get = |k| {
+            CharCache::global()
+                .lookup(&(m.id, k, EngineKind::Fluid))
+                .expect("characterized by run_cases")
+        };
+        let c1 = get(KernelId::Dcopy);
+        let c2 = get(KernelId::Ddot2);
+        let pred = share_two_groups(
+            &KernelGroup { n: 6, f: c1.f, bs_gbs: c1.bs_gbs },
+            &KernelGroup { n: 4, f: c2.f, bs_gbs: c2.bs_gbs },
+        );
+        for g in 0..2 {
+            assert!(
+                (rs.cases[0].model_per_core[g] - pred.per_core_gbs[g]).abs() < 1e-12,
+                "group {g}"
+            );
+        }
     }
 }

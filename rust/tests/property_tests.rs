@@ -70,6 +70,122 @@ fn prop_share_monotone_in_f() {
     }
 }
 
+/// In the saturated regime the group shares must sum to exactly one and the
+/// allocated bandwidths must sum to the overlapped saturated bandwidth
+/// b_mix (generalized Eq. 4) — nothing is lost to the water-filling.
+#[test]
+fn prop_saturated_shares_partition_b_mix() {
+    let mut rng = XorShift64::new(0xFEED07);
+    let mut saturated_seen = 0usize;
+    for case in 0..CASES {
+        let k = 2 + rng.next_below(4);
+        let groups: Vec<KernelGroup> = (0..k).map(|_| random_group(&mut rng)).collect();
+        let out = share_multigroup(&groups);
+        if !out.saturated {
+            continue;
+        }
+        saturated_seen += 1;
+        let alpha_sum: f64 = out.groups.iter().map(|g| g.alpha).sum();
+        assert!((alpha_sum - 1.0).abs() < 1e-9, "case {case}: alphas sum to {alpha_sum}");
+        let total: f64 = out.groups.iter().map(|g| g.group_bw_gbs).sum();
+        assert!(
+            (total - out.b_mix_gbs).abs() < 1e-6,
+            "case {case}: saturated allocation {total} != b_mix {}",
+            out.b_mix_gbs
+        );
+    }
+    assert!(saturated_seen > CASES / 4, "sampler must reach the saturated regime");
+}
+
+/// Independent closed-form reference for the k=2 model: Eq. (4) for b_mix,
+/// then either the raw Eq. (5) proportional split or the demand-capped
+/// branch, written out by hand (no water-filling loop). Mirrors the
+/// 1e-12 cap margin of `share_multigroup` so agreement is exact.
+fn k2_reference(a: &KernelGroup, b: &KernelGroup) -> (f64, [f64; 2]) {
+    let (n1, n2) = (a.n as f64, b.n as f64);
+    let b_mix = (n1 * a.bs_gbs + n2 * b.bs_gbs) / (n1 + n2);
+    let d = [n1 * a.f * a.bs_gbs, n2 * b.f * b.bs_gbs];
+    let w = [n1 * a.f, n2 * b.f];
+    let budget = b_mix.min(d[0] + d[1]);
+    let alloc = [budget * w[0] / (w[0] + w[1]), budget * w[1] / (w[0] + w[1])];
+    let bw = if alloc[0] >= d[0] - 1e-12 && alloc[1] >= d[1] - 1e-12 {
+        [d[0], d[1]]
+    } else if alloc[0] >= d[0] - 1e-12 {
+        // Group 1 capped at its solo demand; group 2 takes the rest.
+        let rest = (budget - d[0]).max(0.0);
+        [d[0], if rest >= d[1] - 1e-12 { d[1] } else { rest }]
+    } else if alloc[1] >= d[1] - 1e-12 {
+        let rest = (budget - d[1]).max(0.0);
+        [if rest >= d[0] - 1e-12 { d[0] } else { rest }, d[1]]
+    } else {
+        alloc
+    };
+    (b_mix, bw)
+}
+
+/// `share_multigroup` at k=2 must reproduce the hand-derived closed-form
+/// two-group model (Eqs. 4+5 with demand capping) to 1e-12 — an independent
+/// reference, not the library's own `share_two_groups` wrapper (which just
+/// delegates to `share_multigroup`).
+#[test]
+fn prop_multigroup_k2_matches_eq5_to_1e12() {
+    let g = |n: usize, f: f64, bs: f64| KernelGroup { n, f, bs_gbs: bs };
+    // Crafted pairs that provably exercise each branch of the closed form:
+    // raw proportional Eq. 5, nonsaturated (both groups at solo demand), and
+    // saturated with exactly one group demand-capped.
+    let mut cases: Vec<(KernelGroup, KernelGroup)> = vec![
+        (g(6, 0.35, 55.0), g(4, 0.20, 66.0)),  // saturated, uncapped
+        (g(1, 0.10, 60.0), g(1, 0.10, 60.0)),  // nonsaturated, both capped
+        (g(1, 0.95, 20.0), g(4, 0.35, 120.0)), // saturated, group 1 capped
+    ];
+    let mut rng = XorShift64::new(0xFEED08);
+    for _ in 0..CASES {
+        cases.push((random_group(&mut rng), random_group(&mut rng)));
+    }
+    for (case, (a, b)) in cases.into_iter().enumerate() {
+        let multi = share_multigroup(&[a, b]);
+        let (b_mix_ref, bw_ref) = k2_reference(&a, &b);
+        assert!((multi.b_mix_gbs - b_mix_ref).abs() < 1e-12, "case {case}: Eq. 4");
+        let total_ref: f64 = bw_ref.iter().sum();
+        for gi in 0..2 {
+            assert!(
+                (multi.groups[gi].group_bw_gbs - bw_ref[gi]).abs() < 1e-12,
+                "case {case} group {gi}: {} vs reference {}",
+                multi.groups[gi].group_bw_gbs,
+                bw_ref[gi]
+            );
+            let alpha_ref = bw_ref[gi] / total_ref;
+            assert!((multi.groups[gi].alpha - alpha_ref).abs() < 1e-12, "case {case}");
+            let n = if gi == 0 { a.n } else { b.n } as f64;
+            assert!((multi.groups[gi].per_core_gbs - bw_ref[gi] / n).abs() < 1e-12);
+        }
+        // The wrapper must stay a faithful view of the multigroup result.
+        let two = share_two_groups(&a, &b);
+        for gi in 0..2 {
+            assert!((two.per_core_gbs[gi] - multi.groups[gi].per_core_gbs).abs() < 1e-12);
+        }
+    }
+}
+
+/// A single solo core reduces to the ECM single-thread value `f * b_s` —
+/// exactly, for any admissible (f, b_s).
+#[test]
+fn prop_solo_core_reduces_to_ecm_value() {
+    let mut rng = XorShift64::new(0xFEED09);
+    for case in 0..CASES {
+        let f = 0.05 + 0.9 * rng.next_f64();
+        let bs = 20.0 + 100.0 * rng.next_f64();
+        let out = share_multigroup(&[KernelGroup { n: 1, f, bs_gbs: bs }]);
+        assert!(!out.saturated, "case {case}: one core with f<1 cannot saturate");
+        assert!(
+            (out.groups[0].per_core_gbs - f * bs).abs() < 1e-12,
+            "case {case}: solo core got {} instead of f*b_s = {}",
+            out.groups[0].per_core_gbs,
+            f * bs
+        );
+    }
+}
+
 /// Fluid-engine conservation: per-core bandwidths are non-negative, the
 /// total respects capacity, idle cores get nothing, and homogeneous groups
 /// get near-identical per-core bandwidth.

@@ -1,0 +1,219 @@
+//! Conformance suite for the scenario engine: Fluid, DES, and the
+//! multigroup analytic model must agree on a matrix of k-group workload
+//! mixes, with the paper's <8% two-group error bound as the ceiling; the
+//! pairing sweep must be reproduced exactly as the k=2 special case; and
+//! the shared characterization cache must be safe under concurrent sweeps.
+
+use membw::config::{machine, MachineId};
+use membw::kernels::KernelId;
+use membw::scenario::{run_mixes, run_scenario, MeasureEngine, Mix, Scenario};
+use membw::sweep::{full_domain_splits, run_cases};
+
+/// The conformance matrix: k = 2..4 group mixes, with and without idle
+/// cores, spanning saturated and nonsaturated regimes on all four machines.
+fn matrix(mid: MachineId) -> Vec<Mix> {
+    let specs: &[&str] = match mid {
+        MachineId::Bdw1 => &[
+            "dcopy:4+ddot2:3+stream:3",
+            "dcopy:3+ddot2:3+idle:4",
+            "vecsum:2+daxpy:3+schoenauer:3+dscal:2",
+        ],
+        MachineId::Bdw2 => &["ddot2:6+daxpy:6+jacobil2-v1:6"],
+        MachineId::Clx => &["dcopy:7+ddot2:7+stream:6"],
+        MachineId::Rome => &["dcopy:3+ddot2:3+stream:2", "daxpy:2+vecsum:2+idle:4"],
+    };
+    specs.iter().map(|s| Mix::parse(s).unwrap()).collect()
+}
+
+/// Per-group agreement between the multigroup model and the fluid engine on
+/// the whole matrix, within the paper's 8% ceiling.
+#[test]
+fn model_vs_fluid_within_paper_bound() {
+    for mid in MachineId::ALL {
+        let m = machine(mid);
+        let rs = run_mixes(&m, &matrix(mid), &MeasureEngine::Fluid).unwrap();
+        for r in &rs.cases {
+            for g in &r.groups {
+                assert!(
+                    g.error() < 0.08,
+                    "{mid:?} [{}] {:?}: model {:.3} vs fluid {:.3} ({:.1}%)",
+                    r.mix.label(),
+                    g.kernel,
+                    g.model_per_core,
+                    g.measured_per_core,
+                    g.error() * 100.0
+                );
+            }
+        }
+    }
+}
+
+/// Per-group agreement between the multigroup model and the DES engine
+/// (slower, so only the small-domain machines), same 8% ceiling.
+#[test]
+fn model_vs_des_within_paper_bound() {
+    for mid in [MachineId::Bdw1, MachineId::Rome] {
+        let m = machine(mid);
+        let rs = run_mixes(&m, &matrix(mid), &MeasureEngine::Des).unwrap();
+        for r in &rs.cases {
+            for g in &r.groups {
+                assert!(
+                    g.error() < 0.08,
+                    "{mid:?} [{}] {:?}: model {:.3} vs DES {:.3}",
+                    r.mix.label(),
+                    g.kernel,
+                    g.model_per_core,
+                    g.measured_per_core
+                );
+            }
+        }
+    }
+}
+
+/// Cross-engine agreement: DES and fluid must agree per group (6%) and on
+/// the aggregate (6%) across the matrix — the two independent measurement
+/// substrates see the same physics.
+#[test]
+fn des_vs_fluid_cross_engine_agreement() {
+    for mid in [MachineId::Bdw1, MachineId::Rome] {
+        let m = machine(mid);
+        let mixes = matrix(mid);
+        let fluid = run_mixes(&m, &mixes, &MeasureEngine::Fluid).unwrap();
+        let des = run_mixes(&m, &mixes, &MeasureEngine::Des).unwrap();
+        for (rf, rd) in fluid.cases.iter().zip(&des.cases) {
+            let tot_rel = (rf.measured_total_gbs - rd.measured_total_gbs).abs()
+                / rf.measured_total_gbs;
+            assert!(tot_rel < 0.06, "{mid:?} [{}]: totals diverge {tot_rel}", rf.mix.label());
+            for (gf, gd) in rf.groups.iter().zip(&rd.groups) {
+                let rel = (gf.measured_per_core - gd.measured_per_core).abs()
+                    / gf.measured_per_core;
+                assert!(
+                    rel < 0.06,
+                    "{mid:?} [{}] {:?}: fluid {:.3} vs DES {:.3}",
+                    rf.mix.label(),
+                    gf.kernel,
+                    gf.measured_per_core,
+                    gd.measured_per_core
+                );
+            }
+        }
+    }
+}
+
+/// The two-group pairing sweep and the scenario pipeline are the same
+/// measurement: `run_cases` (k=2 conversion) is bit-identical to running
+/// the equivalent mixes directly.
+#[test]
+fn pairing_sweep_is_the_k2_special_case() {
+    let m = machine(MachineId::Bdw1);
+    let cases = full_domain_splits(&m, KernelId::Dcopy, KernelId::Ddot2);
+    let legacy = run_cases(&m, &cases, &MeasureEngine::Fluid).unwrap();
+    let mixes: Vec<Mix> = cases.iter().map(Mix::from_pairing).collect();
+    let unified = run_mixes(&m, &mixes, &MeasureEngine::Fluid).unwrap();
+    for (c, u) in legacy.cases.iter().zip(&unified.cases) {
+        for g in 0..2 {
+            assert!(
+                (c.measured_per_core[g] - u.groups[g].measured_per_core).abs() < 1e-12,
+                "measured diverges at {:?}",
+                c.n
+            );
+            assert!(
+                (c.model_per_core[g] - u.groups[g].model_per_core).abs() < 1e-12,
+                "model diverges at {:?}",
+                c.n
+            );
+        }
+        assert!((c.measured_total - u.measured_total_gbs).abs() < 1e-12);
+        assert!((c.model_total - u.model_total_gbs).abs() < 1e-12);
+    }
+}
+
+/// A nonsaturated mix (one low-demand core per kernel, rest idle) runs
+/// every group at its solo speed: the model predicts exactly `f·b_s` per
+/// core, and the engine measurement agrees to better than 1%.
+#[test]
+fn nonsaturated_mix_runs_at_solo_speed() {
+    let m = machine(MachineId::Bdw1);
+    let mix = Mix::parse("ddot2:1+vecsum:1+idle:8").unwrap();
+    let rs = run_mixes(&m, std::slice::from_ref(&mix), &MeasureEngine::Fluid).unwrap();
+    let r = &rs.cases[0];
+    assert!(!r.saturated, "two low-f cores cannot saturate BDW-1");
+    for g in &r.groups {
+        assert!(
+            g.error() < 0.01,
+            "{:?}: solo-speed mismatch (model {:.3}, measured {:.3})",
+            g.kernel,
+            g.model_per_core,
+            g.measured_per_core
+        );
+    }
+}
+
+/// A solo-core mix reproduces the characterization's single-thread
+/// bandwidth (the ECM value `f·b_s`) exactly — same deterministic engine,
+/// same workload.
+#[test]
+fn solo_mix_reduces_to_single_thread_bandwidth() {
+    use membw::scenario::{CharCache, EngineKind};
+    let m = machine(MachineId::Clx);
+    let mix = Mix::new().with(KernelId::Stream, 1);
+    let rs = run_mixes(&m, std::slice::from_ref(&mix), &MeasureEngine::Fluid).unwrap();
+    let c = CharCache::global()
+        .lookup(&(m.id, KernelId::Stream, EngineKind::Fluid))
+        .expect("characterized by run_mixes");
+    let measured = rs.cases[0].groups[0].measured_per_core;
+    assert!(
+        (measured - c.b1_gbs).abs() < 1e-9,
+        "solo mix {measured} vs characterization b1 {}",
+        c.b1_gbs
+    );
+    assert!(
+        (rs.cases[0].groups[0].model_per_core - c.f * c.bs_gbs).abs() < 1e-9,
+        "model must predict f*b_s for a solo core"
+    );
+}
+
+/// Time-phased scenarios: every phase of the built-in demo stays within the
+/// 8% ceiling on every machine, and idle phases speed up the active groups.
+#[test]
+fn demo_scenario_conforms_on_all_machines() {
+    for mid in MachineId::ALL {
+        let m = machine(mid);
+        let sc = Scenario::demo(&m);
+        let r = run_scenario(&m, &sc, &MeasureEngine::Fluid).unwrap();
+        assert_eq!(r.phases.len(), 3);
+        for e in r.all_errors() {
+            assert!(e < 0.08, "{mid:?}: demo phase error {e}");
+        }
+        // Phase 2 idles the cores phase 1 gave to the third group: the two
+        // surviving groups must get more bandwidth per core.
+        for g in 0..2 {
+            assert!(
+                r.phases[1].groups[g].measured_per_core > r.phases[0].groups[g].measured_per_core,
+                "{mid:?}: idling must free bandwidth"
+            );
+        }
+    }
+}
+
+/// Concurrent sweeps through the shared characterization cache produce
+/// identical results (thread safety of the global cache + batched runner).
+#[test]
+fn concurrent_sweeps_share_the_cache_safely() {
+    let m = machine(MachineId::Rome);
+    let mixes = matrix(MachineId::Rome);
+    let results: Vec<_> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..6)
+            .map(|_| scope.spawn(|| run_mixes(&m, &mixes, &MeasureEngine::Fluid).unwrap()))
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for rs in &results[1..] {
+        for (a, b) in rs.cases.iter().zip(&results[0].cases) {
+            for (ga, gb) in a.groups.iter().zip(&b.groups) {
+                assert_eq!(ga.measured_per_core.to_bits(), gb.measured_per_core.to_bits());
+                assert_eq!(ga.model_per_core.to_bits(), gb.model_per_core.to_bits());
+            }
+        }
+    }
+}
