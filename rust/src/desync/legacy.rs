@@ -1,0 +1,248 @@
+//! The legacy fixed-`dt` time-stepped co-simulation loop.
+//!
+//! Retained **temporarily** as the golden reference for the event-driven
+//! timeline engine (`crate::timeline`): the golden suite in
+//! `desync::golden` pins the event engine's traces against this stepper,
+//! and `repro bench` (with the `legacy-stepper` feature) records the
+//! speedup. The logic is the seed implementation, unchanged — scheduled
+//! for removal once the event engine has survived a few releases.
+//!
+//! Only compiled under `cfg(test)` or the `legacy-stepper` cargo feature.
+
+use std::collections::HashMap;
+
+use crate::desync::noise::NoiseStream;
+use crate::desync::program::{Phase, Program, SyncKind};
+use crate::desync::trace::{PhaseRecord, TraceLog};
+use crate::desync::{CoSimConfig, CoSimResult};
+use crate::kernels::KernelId;
+use crate::sharing::{share_multigroup, KernelGroup};
+
+#[derive(Debug, Clone, PartialEq)]
+enum RankState {
+    /// Waiting for its staggered start.
+    NotStarted,
+    /// Between phases; next phase is `flat` (sync not yet satisfied).
+    Ready { flat: usize },
+    /// Running a kernel phase.
+    Running { flat: usize, kernel: KernelId, remaining: f64, started: f64 },
+    /// Arrived at a collective, waiting for the others.
+    Collective { flat: usize, arrived: f64 },
+    /// Idling until `until` (explicit Idle phase or noise).
+    Idling { flat: Option<usize>, until: f64, resume: Box<RankState>, started: f64 },
+    /// Program complete.
+    Done,
+}
+
+/// Is the sync precondition of phase `flat` satisfied for rank `r`?
+fn sync_ok(
+    sync: SyncKind,
+    r: usize,
+    flat: usize,
+    completed: &[i64],
+    n: usize,
+    neighbor_radius: usize,
+) -> bool {
+    match sync {
+        SyncKind::None => true,
+        SyncKind::Global => true, // handled by the collective machinery
+        SyncKind::Neighbors => {
+            if flat == 0 {
+                return true;
+            }
+            let prev = flat as i64 - 1;
+            let radius = neighbor_radius.min(n / 2);
+            (1..=radius).all(|k| {
+                completed[(r + n - k) % n] >= prev && completed[(r + k) % n] >= prev
+            })
+        }
+    }
+}
+
+/// Run the time-stepped co-simulation (the seed `CoSimEngine::run`).
+///
+/// `chars` maps each program kernel to its `(f, b_s[GB/s])`
+/// characterization.
+pub fn run_stepped(
+    program: &Program,
+    n_ranks: usize,
+    config: &CoSimConfig,
+    chars: &HashMap<KernelId, (f64, f64)>,
+) -> CoSimResult {
+    let n = n_ranks;
+    let dt = config.dt_s;
+    let mut t = 0.0f64;
+    let mut states: Vec<RankState> = (0..n).map(|_| RankState::NotStarted).collect();
+    let mut completed_upto: Vec<i64> = vec![-1; n]; // last completed flat index
+    let mut trace = TraceLog::default();
+    let mut finish = vec![f64::NAN; n];
+    let mut noise: Vec<NoiseStream> = (0..n).map(|r| config.noise.stream(r)).collect();
+    // Collective instance -> (ranks arrived, all-arrived time).
+    let mut collectives: HashMap<usize, (usize, f64)> = HashMap::new();
+    // Memoized sharing-model evaluations by group composition.
+    let mut share_cache: HashMap<Vec<(KernelId, usize)>, HashMap<KernelId, f64>> = HashMap::new();
+    let mut steps: u64 = 0;
+
+    let total = program.total_phases();
+    while t < config.t_max_s && states.iter().any(|s| *s != RankState::Done) {
+        steps += 1;
+        // 1. Start transitions.
+        for r in 0..n {
+            loop {
+                match states[r].clone() {
+                    RankState::NotStarted => {
+                        if t >= r as f64 * config.initial_stagger_s {
+                            states[r] = RankState::Ready { flat: 0 };
+                        } else {
+                            break;
+                        }
+                    }
+                    RankState::Ready { flat } => {
+                        if flat >= total {
+                            states[r] = RankState::Done;
+                            finish[r] = t;
+                            break;
+                        }
+                        match program.phase(flat).unwrap().clone() {
+                            Phase::Kernel { kernel: k, volume_bytes, sync, .. } => {
+                                if sync_ok(sync, r, flat, &completed_upto, n, config.neighbor_radius) {
+                                    states[r] = RankState::Running {
+                                        flat,
+                                        kernel: k,
+                                        remaining: volume_bytes,
+                                        started: t,
+                                    };
+                                }
+                                break;
+                            }
+                            Phase::Allreduce { .. } => {
+                                let e = collectives.entry(flat).or_insert((0, f64::NAN));
+                                e.0 += 1;
+                                if e.0 == n {
+                                    e.1 = t; // all arrived
+                                }
+                                states[r] = RankState::Collective { flat, arrived: t };
+                                break;
+                            }
+                            Phase::Idle { duration_s, .. } => {
+                                states[r] = RankState::Idling {
+                                    flat: Some(flat),
+                                    until: t + duration_s,
+                                    resume: Box::new(RankState::Ready { flat: flat + 1 }),
+                                    started: t,
+                                };
+                                break;
+                            }
+                        }
+                    }
+                    _ => break,
+                }
+            }
+        }
+
+        // 2. Bandwidth sharing among running kernel ranks. The group
+        // composition changes only at phase boundaries (rarely relative
+        // to dt), so evaluations are memoized by composition.
+        let mut composition: Vec<(KernelId, usize)> = Vec::new();
+        for s in &states {
+            if let RankState::Running { kernel: k, .. } = s {
+                match composition.iter_mut().find(|(kk, _)| kk == k) {
+                    Some((_, cnt)) => *cnt += 1,
+                    None => composition.push((*k, 1)),
+                }
+            }
+        }
+        composition.sort_by_key(|(k, _)| k.key());
+        let per_core: &HashMap<KernelId, f64> =
+            share_cache.entry(composition.clone()).or_insert_with(|| {
+                let groups: Vec<KernelGroup> = composition
+                    .iter()
+                    .map(|(k, n)| {
+                        let (f, bs) = chars[k];
+                        KernelGroup { n: *n, f, bs_gbs: bs }
+                    })
+                    .collect();
+                let share = share_multigroup(&groups);
+                composition
+                    .iter()
+                    .zip(&share.groups)
+                    .map(|((k, _), e)| (*k, e.per_core_gbs * 1e9)) // bytes/s
+                    .collect()
+            });
+
+        // 3. Advance.
+        for r in 0..n {
+            match states[r].clone() {
+                RankState::Running { flat, kernel: k, mut remaining, started } => {
+                    // Noise can preempt the kernel.
+                    if let Some(dur) = noise[r].poll(t, dt) {
+                        states[r] = RankState::Idling {
+                            flat: None,
+                            until: t + dur,
+                            resume: Box::new(RankState::Running { flat, kernel: k, remaining, started }),
+                            started: t,
+                        };
+                        continue;
+                    }
+                    remaining -= per_core[&k] * dt;
+                    if remaining <= 0.0 {
+                        let phase = program.phase(flat).unwrap();
+                        trace.records.push(PhaseRecord {
+                            rank: r,
+                            iteration: flat / program.phases.len(),
+                            label: phase.label(),
+                            t_start: started,
+                            t_end: t + dt,
+                        });
+                        completed_upto[r] = flat as i64;
+                        states[r] = RankState::Ready { flat: flat + 1 };
+                    } else {
+                        states[r] = RankState::Running { flat, kernel: k, remaining, started };
+                    }
+                }
+                RankState::Collective { flat, arrived } => {
+                    let (count, all_at) = collectives[&flat];
+                    if count == n && !all_at.is_nan() {
+                        let cost = match program.phase(flat).unwrap() {
+                            Phase::Allreduce { cost_s, .. } => *cost_s,
+                            _ => 0.0,
+                        };
+                        if t >= all_at + cost {
+                            let phase = program.phase(flat).unwrap();
+                            trace.records.push(PhaseRecord {
+                                rank: r,
+                                iteration: flat / program.phases.len(),
+                                label: phase.label(),
+                                t_start: arrived,
+                                t_end: t,
+                            });
+                            completed_upto[r] = flat as i64;
+                            states[r] = RankState::Ready { flat: flat + 1 };
+                        }
+                    }
+                }
+                RankState::Idling { flat, until, resume, started } => {
+                    if t >= until {
+                        if let Some(fl) = flat {
+                            let phase = program.phase(fl).unwrap();
+                            trace.records.push(PhaseRecord {
+                                rank: r,
+                                iteration: fl / program.phases.len(),
+                                label: phase.label(),
+                                t_start: started,
+                                t_end: t,
+                            });
+                            completed_upto[r] = fl as i64;
+                        }
+                        states[r] = *resume;
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        t += dt;
+    }
+
+    CoSimResult { trace, finish_s: finish, t_end_s: t, events: steps }
+}

@@ -5,23 +5,30 @@
 //! account", Sect. VI).
 //!
 //! Each MPI rank executes a *phase program* (loop kernels with data volumes,
-//! collectives, point-to-point halo waits, idle noise). At every time step
-//! the ranks concurrently inside loop kernels are grouped by kernel and the
-//! multigroup sharing model (generalized Eqs. 4+5) assigns each rank its
-//! instantaneous bandwidth; kernel progress is the integral of that
-//! bandwidth over its data volume.
+//! collectives, point-to-point halo waits, idle noise). Since per-core
+//! bandwidth is an analytic function of the instantaneous group composition
+//! (generalized Eqs. 4+5), kernel completion times between composition
+//! changes are solved in closed form: the simulation is **event-driven**
+//! ([`crate::timeline`]) and carries zero time-discretization error.
 //!
 //! * [`program`] — phase programs and the HPCG program builder,
-//! * [`engine`] — the time-stepped co-simulation engine,
+//! * [`engine`] — the co-simulation driver over the timeline layer,
 //! * [`trace`] — phase traces, concurrency timelines, ASCII rendering,
-//! * [`noise`] — reproducible system-noise injection.
+//! * [`noise`] — reproducible system-noise injection (continuous-time
+//!   sampler + the legacy per-`dt` poll),
+//! * `legacy` — the seed's fixed-`dt` stepper, kept temporarily as the
+//!   golden reference (tests / `legacy-stepper` feature only).
 
 mod engine;
+#[cfg(test)]
+mod golden;
+#[cfg(any(test, feature = "legacy-stepper"))]
+pub mod legacy;
 mod noise;
 mod program;
 mod trace;
 
 pub use engine::{CoSimConfig, CoSimEngine, CoSimResult};
-pub use noise::NoiseModel;
+pub use noise::{NoiseModel, NoiseStream};
 pub use program::{hpcg_program, HpcgVariant, Phase, Program, SyncKind};
 pub use trace::{ConcurrencyPoint, PhaseRecord, TraceLog};

@@ -45,6 +45,15 @@ impl NoiseModel {
 }
 
 /// Lazily generated noise events for one rank.
+///
+/// The stream has two consumption modes sharing one RNG draw sequence
+/// (duration first, then the next inter-arrival gap):
+///
+/// * [`NoiseStream::poll`] — the legacy stepper's per-`dt` polling,
+/// * [`NoiseStream::next_at`] + [`NoiseStream::fire`] — the continuous-time
+///   sampler used by the event-driven timeline engine: the next event time
+///   is known in advance, so it can sit in a priority queue instead of being
+///   polled every step.
 pub struct NoiseStream {
     model: NoiseModel,
     rng: XorShift64,
@@ -52,8 +61,28 @@ pub struct NoiseStream {
 }
 
 impl NoiseStream {
+    /// Whether this stream can ever fire.
+    pub fn enabled(&self) -> bool {
+        self.model.enabled()
+    }
+
+    /// Absolute time of the next noise event (+∞ when noise is off).
+    pub fn next_at(&self) -> f64 {
+        self.next_at
+    }
+
+    /// Consume the pending event at time `t` (continuous-time semantics):
+    /// returns the event duration and schedules the next arrival at
+    /// `t + Exp(mean_interval)`.
+    pub fn fire(&mut self, t: f64) -> f64 {
+        let duration = self.rng.next_exp(self.model.mean_duration_s);
+        self.next_at = t + self.rng.next_exp(self.model.mean_interval_s);
+        duration
+    }
+
     /// If a noise event fires in `[t, t+dt)`, returns its duration and
-    /// schedules the next one.
+    /// schedules the next one (legacy `dt`-grid semantics: the next arrival
+    /// is offset from the end of the current step).
     pub fn poll(&mut self, t: f64, dt: f64) -> Option<f64> {
         if !self.model.enabled() || t + dt < self.next_at {
             return None;
@@ -90,6 +119,52 @@ mod tests {
         }
         // 20 s of simulated time at 8 ms mean interval -> ~2500 events.
         assert!((1500..3500).contains(&events), "events {events}");
+    }
+
+    #[test]
+    fn continuous_sampler_matches_poll_draw_sequence() {
+        // fire() and poll() consume the same RNG draws (duration, interval),
+        // so the k-th event of a stream has the same duration under both
+        // consumption modes.
+        let m = NoiseModel::mild(11);
+        let mut cont = m.stream(4);
+        let mut durs_cont = Vec::new();
+        for _ in 0..50 {
+            let at = cont.next_at();
+            assert!(at.is_finite());
+            durs_cont.push(cont.fire(at));
+        }
+        let mut poll = m.stream(4);
+        let mut durs_poll = Vec::new();
+        let dt = 1e-5;
+        let mut t = 0.0;
+        while durs_poll.len() < 50 {
+            if let Some(d) = poll.poll(t, dt) {
+                durs_poll.push(d);
+            }
+            t += dt;
+        }
+        assert_eq!(durs_cont, durs_poll);
+    }
+
+    #[test]
+    fn disabled_stream_never_schedules() {
+        let s = NoiseModel::off().stream(0);
+        assert!(!s.enabled());
+        assert_eq!(s.next_at(), f64::INFINITY);
+    }
+
+    #[test]
+    fn fire_advances_strictly_forward() {
+        let mut s = NoiseModel::mild(3).stream(1);
+        let mut t = 0.0;
+        for _ in 0..1000 {
+            let at = s.next_at();
+            assert!(at > t);
+            t = at;
+            let d = s.fire(at);
+            assert!(d >= 0.0);
+        }
     }
 
     #[test]

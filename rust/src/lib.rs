@@ -19,8 +19,12 @@
 //! * [`simulator`] — the measurement substrate: a line-granularity
 //!   discrete-event simulator of a memory contention domain (stands in for
 //!   the physical BDW/CLX/Rome machines of the paper),
+//! * [`timeline`] — **the contention-timeline layer**: exact event-driven
+//!   simulation of ranks sharing one memory domain (priority-queue core;
+//!   closed-form constant-rate drains between events; zero `dt` error),
 //! * [`desync`] — rank-level co-simulation of barrier-free MPI programs
-//!   (HPCG), reproducing the desynchronization phenomenology of Figs. 1/3,
+//!   (HPCG), reproducing the desynchronization phenomenology of Figs. 1/3;
+//!   a thin driver over [`timeline`],
 //! * [`runtime`] — PJRT client that loads the AOT-compiled JAX/Pallas batched
 //!   simulator (`artifacts/*.hlo.txt`) and runs it from the hot path (gated
 //!   behind the `pjrt` cargo feature; a stub fails gracefully without it),
@@ -49,6 +53,7 @@ pub mod sharing;
 pub mod simulator;
 pub mod stats;
 pub mod sweep;
+pub mod timeline;
 
 pub use error::{Error, Result};
 

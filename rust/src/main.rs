@@ -13,12 +13,19 @@
 //! repro experiment <table2|fig1|fig3|fig4|fig6|fig7|fig8|fig9|all>
 //!                  [--engine fluid|des|pjrt] [--out results/]
 //! repro hpcg [--variant plain|modified] [--machine M] [--ranks N]
+//!            [--engine ecm|fluid|des|pjrt]   # characterization source
+//! repro bench [--mode smoke|full] [--out results/]   # BENCH_cosim.json
 //! repro dump-configs <dir>              # write machine TOMLs
 //! repro selftest                        # PJRT artifact vs rust engines
 //! ```
+//!
+//! Flag parsing is strict: a flag without a value and an unknown flag are
+//! both hard errors (`--machine --engine des` no longer swallows
+//! `--engine` as the machine name).
 
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::time::Instant;
 
 use membw::config::{builtin_machines, machine, machine_to_toml, MachineId};
 use membw::desync::{hpcg_program, CoSimConfig, CoSimEngine, HpcgVariant, NoiseModel};
@@ -26,7 +33,7 @@ use membw::error::Result;
 use membw::kernels::{all_kernels, kernel, KernelId};
 use membw::report::{self, ExperimentCtx};
 use membw::runtime::{ArtifactPaths, PjrtRuntime, PjrtSimExecutor, SimCase};
-use membw::scenario::Scenario;
+use membw::scenario::{run_mixes, CharSource, Mix, Scenario};
 use membw::simulator::{measure_f_bs, measure_pairing, CoreWorkload, Engine};
 use membw::sweep::{run_cases, MeasureEngine, PairingCase};
 
@@ -39,20 +46,42 @@ fn main() {
 }
 
 /// Parse `--key value` flags from the tail of an argument list.
-fn flags(args: &[String]) -> HashMap<String, String> {
+///
+/// Strict: every flag must carry a value and appear in `allowed`; a value
+/// may not itself look like a flag. Both misuses are errors instead of the
+/// silent mis-parses the old parser produced.
+fn flags(args: &[String], allowed: &[&str]) -> Result<HashMap<String, String>> {
     let mut map = HashMap::new();
     let mut i = 0;
     while i < args.len() {
-        if let Some(key) = args[i].strip_prefix("--") {
-            if i + 1 < args.len() {
-                map.insert(key.to_string(), args[i + 1].clone());
+        let arg = &args[i];
+        let key = match arg.strip_prefix("--") {
+            Some(k) => k,
+            None => {
+                return Err(membw::Error::InvalidPlan(format!(
+                    "unexpected argument '{arg}' (expected a --flag)"
+                )));
+            }
+        };
+        if !allowed.contains(&key) {
+            return Err(membw::Error::InvalidPlan(format!(
+                "unknown flag --{key} (expected: {})",
+                allowed.iter().map(|a| format!("--{a}")).collect::<Vec<_>>().join(", ")
+            )));
+        }
+        match args.get(i + 1) {
+            Some(v) if !v.starts_with("--") => {
+                map.insert(key.to_string(), v.clone());
                 i += 2;
-                continue;
+            }
+            _ => {
+                return Err(membw::Error::InvalidPlan(format!(
+                    "flag --{key} requires a value"
+                )));
             }
         }
-        i += 1;
     }
-    map
+    Ok(map)
 }
 
 fn dispatch(args: &[String]) -> Result<()> {
@@ -61,13 +90,19 @@ fn dispatch(args: &[String]) -> Result<()> {
     match cmd {
         "machines" => cmd_machines(),
         "kernels" => cmd_kernels(),
-        "characterize" => cmd_characterize(&flags(rest)),
-        "pair" => cmd_pair(&flags(rest)),
-        "scenarios" => cmd_scenarios(&flags(rest)),
+        "characterize" => cmd_characterize(&flags(rest, &["engine", "out"])?),
+        "pair" => cmd_pair(&flags(rest, &["machine", "k1", "k2", "n1", "n2", "engine"])?),
+        "scenarios" => {
+            cmd_scenarios(&flags(rest, &["machine", "engine", "out", "mix", "name"])?)
+        }
         "experiment" => cmd_experiment(rest),
-        "hpcg" => cmd_hpcg(&flags(rest)),
+        "hpcg" => cmd_hpcg(&flags(
+            rest,
+            &["variant", "machine", "ranks", "nx", "iterations", "engine"],
+        )?),
+        "bench" => cmd_bench(&flags(rest, &["mode", "out"])?),
         "dump-configs" => cmd_dump_configs(rest),
-        "selftest" => cmd_selftest(&flags(rest)),
+        "selftest" => cmd_selftest(&flags(rest, &["tol"])?),
         _ => {
             println!("{HELP}");
             Ok(())
@@ -76,9 +111,10 @@ fn dispatch(args: &[String]) -> Result<()> {
 }
 
 const HELP: &str = "repro — bandwidth-sharing model reproduction (Afzal/Hager/Wellein 2020)\n\
-commands:\n  machines | kernels | characterize | pair | scenarios | experiment <id> | hpcg | dump-configs <dir> | selftest\n\
+commands:\n  machines | kernels | characterize | pair | scenarios | experiment <id> | hpcg | bench | dump-configs <dir> | selftest\n\
 run `repro experiment all --out results/` to regenerate every table and figure;\n\
-`repro scenarios --mix \"dcopy:4+ddot2:4+idle:2\"` measures a k-group workload mix.";
+`repro scenarios --mix \"dcopy:4+ddot2:4+idle:2\"` measures a k-group workload mix;\n\
+`repro bench` runs the fixed-seed co-sim/scenario benchmarks and writes BENCH_cosim.json.";
 
 fn cmd_machines() -> Result<()> {
     println!("{}", report::table1_report());
@@ -185,13 +221,16 @@ fn make_ctx(f: &HashMap<String, String>) -> Result<ExperimentCtx> {
             Ok(ExperimentCtx { out_dir: out, engine: Engine::Fluid, pjrt: Some(exec) })
         }
         Some("des") => Ok(ExperimentCtx { out_dir: out, engine: Engine::Des, pjrt: None }),
-        _ => Ok(ExperimentCtx { out_dir: out, engine: Engine::Fluid, pjrt: None }),
+        None | Some("fluid") => Ok(ExperimentCtx { out_dir: out, engine: Engine::Fluid, pjrt: None }),
+        Some(other) => Err(membw::Error::InvalidPlan(format!(
+            "unknown engine '{other}' (fluid, des, pjrt)"
+        ))),
     }
 }
 
 fn cmd_experiment(rest: &[String]) -> Result<()> {
     let id = rest.first().map(String::as_str).unwrap_or("all");
-    let f = flags(if rest.len() > 1 { &rest[1..] } else { &[] });
+    let f = flags(if rest.len() > 1 { &rest[1..] } else { &[] }, &["engine", "out"])?;
     let ctx = make_ctx(&f)?;
     std::fs::create_dir_all(&ctx.out_dir)?;
     let run = |name: &str, text: String| {
@@ -232,12 +271,39 @@ fn cmd_experiment(rest: &[String]) -> Result<()> {
 fn cmd_hpcg(f: &HashMap<String, String>) -> Result<()> {
     let variant = match f.get("variant").map(String::as_str) {
         Some("modified") => HpcgVariant::Modified,
-        _ => HpcgVariant::Plain,
+        None | Some("plain") => HpcgVariant::Plain,
+        Some(other) => {
+            return Err(membw::Error::InvalidPlan(format!(
+                "unknown variant '{other}' (plain, modified)"
+            )));
+        }
     };
     let m = machine(MachineId::parse(f.get("machine").map(String::as_str).unwrap_or("clx"))?);
     let ranks: usize = f.get("ranks").and_then(|s| s.parse().ok()).unwrap_or(m.cores);
     let nx: usize = f.get("nx").and_then(|s| s.parse().ok()).unwrap_or(96);
     let iters: usize = f.get("iterations").and_then(|s| s.parse().ok()).unwrap_or(2);
+    let engine_key = f.get("engine").map(String::as_str).unwrap_or("ecm");
+
+    // The PJRT executor must outlive the characterization source.
+    let pjrt_exec: Option<PjrtSimExecutor> = if engine_key == "pjrt" {
+        let runtime = PjrtRuntime::cpu()?;
+        eprintln!("# PJRT: {}", runtime.platform());
+        Some(PjrtSimExecutor::load(&runtime, &ArtifactPaths::default_dir())?)
+    } else {
+        None
+    };
+    let source = match engine_key {
+        "ecm" => CharSource::Ecm,
+        "fluid" => CharSource::Measured(MeasureEngine::Fluid),
+        "des" => CharSource::Measured(MeasureEngine::Des),
+        "pjrt" => CharSource::Measured(MeasureEngine::Pjrt(pjrt_exec.as_ref().unwrap())),
+        other => {
+            return Err(membw::Error::InvalidPlan(format!(
+                "unknown characterization engine '{other}' (ecm, fluid, des, pjrt)"
+            )));
+        }
+    };
+
     let prog = hpcg_program(variant, nx, iters);
     let cfg = CoSimConfig {
         dt_s: 20e-6,
@@ -246,21 +312,171 @@ fn cmd_hpcg(f: &HashMap<String, String>) -> Result<()> {
         neighbor_radius: 3,
         noise: NoiseModel::mild(42),
     };
-    let eng = CoSimEngine::new(&m, prog, ranks, cfg)?;
+    let eng = CoSimEngine::with_source(&m, prog, ranks, cfg, &source)?;
+    let t0 = Instant::now();
     let r = eng.run();
+    let wall = t0.elapsed().as_secs_f64();
     println!(
-        "HPCG ({variant:?}) on {}: {ranks} ranks, nx={nx}, {iters} iterations",
-        m.name
+        "HPCG ({variant:?}) on {}: {ranks} ranks, nx={nx}, {iters} iterations, chars: {}",
+        m.name,
+        source.name()
     );
     println!(
-        "simulated time: {:.3} s, {} phase records",
+        "simulated time: {:.3} s, {} phase records, {} events, {:.1} ms wall",
         r.t_end_s,
-        r.trace.records.len()
+        r.trace.records.len(),
+        r.events,
+        wall * 1e3
     );
     if let Some(rec) = r.trace.of("DDOT2#1", Some(iters.saturating_sub(1))).first() {
         let t0 = rec.t_start - 0.01;
         println!("{}", r.trace.render_ascii(t0, t0 + 0.06, ranks, 110));
     }
+    Ok(())
+}
+
+/// Fixed-seed performance benchmarks: the Fig. 3 co-simulation and a
+/// scenario-pipeline workload. Emits `BENCH_cosim.json` under `--out` to
+/// start the perf trajectory (CI uploads it as an artifact).
+fn cmd_bench(f: &HashMap<String, String>) -> Result<()> {
+    let out_dir = PathBuf::from(f.get("out").cloned().unwrap_or_else(|| "results".into()));
+    let smoke = match f.get("mode").map(String::as_str) {
+        Some("smoke") => true,
+        None | Some("full") => false,
+        Some(other) => {
+            return Err(membw::Error::InvalidPlan(format!(
+                "unknown bench mode '{other}' (smoke, full)"
+            )));
+        }
+    };
+    std::fs::create_dir_all(&out_dir)?;
+    let reps = if smoke { 1 } else { 5 };
+
+    // --- co-sim: the Fig. 3 configuration, fixed seed, with and without
+    // noise (noise off is the exact-equivalence configuration of the golden
+    // suite and the headline-speedup pin; mild(7) is the figure run) ---
+    let m = machine(MachineId::Clx);
+    let ranks = 20;
+    let fig3_cfg = |noise: NoiseModel| CoSimConfig {
+        dt_s: 20e-6,
+        t_max_s: 600.0,
+        initial_stagger_s: 0.2e-3,
+        neighbor_radius: 3,
+        noise,
+    };
+    struct CosimRow {
+        tag: &'static str,
+        wall_s: f64,
+        events: u64,
+        records: usize,
+        legacy_wall_s: Option<f64>,
+        speedup: Option<f64>,
+    }
+    let mut cosim_rows: Vec<CosimRow> = Vec::new();
+    for (tag, noise) in [("noise_off", NoiseModel::off()), ("mild7", NoiseModel::mild(7))] {
+        let prog = hpcg_program(HpcgVariant::Modified, 96, 3);
+        let eng = CoSimEngine::new(&m, prog, ranks, fig3_cfg(noise))?;
+        let warm = eng.run(); // warm-up (characterization cache, allocator)
+        let mut walls = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let r = eng.run();
+            walls.push(t0.elapsed().as_secs_f64());
+            assert_eq!(r.events, warm.events, "co-sim must be deterministic");
+        }
+        let event_wall = membw::stats::median(&walls);
+        println!(
+            "co-sim (fig3 {tag}, event engine): {:.3} ms wall, {} events ({:.2e} events/s), {} records",
+            event_wall * 1e3,
+            warm.events,
+            warm.events as f64 / event_wall,
+            warm.trace.records.len()
+        );
+        #[cfg(feature = "legacy-stepper")]
+        let (legacy_wall, speedup) = {
+            let t0 = Instant::now();
+            let leg = eng.run_legacy();
+            let w = t0.elapsed().as_secs_f64();
+            println!(
+                "co-sim (fig3 {tag}, legacy stepper): {:.1} ms wall, {} steps — speedup {:.1}x",
+                w * 1e3,
+                leg.events,
+                w / event_wall
+            );
+            (Some(w), Some(w / event_wall))
+        };
+        #[cfg(not(feature = "legacy-stepper"))]
+        let (legacy_wall, speedup): (Option<f64>, Option<f64>) = {
+            println!("co-sim (fig3 {tag}) legacy stepper: skipped (build with --features legacy-stepper)");
+            (None, None)
+        };
+        cosim_rows.push(CosimRow {
+            tag,
+            wall_s: event_wall,
+            events: warm.events,
+            records: warm.trace.records.len(),
+            legacy_wall_s: legacy_wall,
+            speedup,
+        });
+    }
+
+    // --- scenario pipeline: fixed mix list on the fluid engine ---
+    let mix_specs: &[&str] = if smoke {
+        &["dcopy:10+ddot2:10", "schoenauer:8+ddot2:6+idle:6"]
+    } else {
+        &[
+            "dcopy:10+ddot2:10",
+            "schoenauer:8+ddot2:6+idle:6",
+            "daxpy:5+waxpby:5+stream:5+add:5",
+            "stream:20",
+            "jacobil2-v1:10+ddot1:10",
+            "vecsum:4+dscal:4+ddot3:4+idle:8",
+        ]
+    };
+    let mixes: Vec<Mix> = mix_specs.iter().copied().map(Mix::parse).collect::<Result<Vec<_>>>()?;
+    run_mixes(&m, &mixes, &MeasureEngine::Fluid)?; // warm the char cache
+    let mut swalls = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        run_mixes(&m, &mixes, &MeasureEngine::Fluid)?;
+        swalls.push(t0.elapsed().as_secs_f64());
+    }
+    let scen_wall = membw::stats::median(&swalls);
+    let cases_per_s = mixes.len() as f64 / scen_wall;
+    println!(
+        "scenario pipeline (fluid): {} mixes in {:.3} ms ({:.1} cases/s)",
+        mixes.len(),
+        scen_wall * 1e3,
+        cases_per_s
+    );
+
+    let json_opt = |x: Option<f64>| x.map(|v| format!("{v:.6}")).unwrap_or_else(|| "null".into());
+    let cosim_json: Vec<String> = cosim_rows
+        .iter()
+        .map(|row| {
+            format!(
+                "    {{\n      \"variant\": \"fig3_clx_20ranks_nx96_it3_{}\",\n      \"wall_s\": {:.6},\n      \"events\": {},\n      \"events_per_s\": {:.1},\n      \"phase_records\": {},\n      \"legacy_wall_s\": {},\n      \"speedup_vs_legacy\": {}\n    }}",
+                row.tag,
+                row.wall_s,
+                row.events,
+                row.events as f64 / row.wall_s,
+                row.records,
+                json_opt(row.legacy_wall_s),
+                json_opt(row.speedup),
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"mode\": \"{}\",\n  \"cosim\": [\n{}\n  ],\n  \"scenario\": {{\n    \"engine\": \"fluid\",\n    \"cases\": {},\n    \"wall_s\": {:.6},\n    \"cases_per_s\": {:.1}\n  }}\n}}\n",
+        if smoke { "smoke" } else { "full" },
+        cosim_json.join(",\n"),
+        mixes.len(),
+        scen_wall,
+        cases_per_s,
+    );
+    let path = out_dir.join("BENCH_cosim.json");
+    std::fs::write(&path, &json)?;
+    println!("wrote {}", path.display());
     Ok(())
 }
 

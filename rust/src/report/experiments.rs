@@ -12,6 +12,7 @@ use crate::error::Result;
 use crate::kernels::{kernel, pairing_set, KernelClass, KernelId};
 use crate::report::table::AsciiTable;
 use crate::runtime::PjrtSimExecutor;
+use crate::scenario::CharSource;
 use crate::simulator::{measure_f_bs, Engine};
 use crate::stats::{skewness_dimensioned, BoxSummary, ErrorStats};
 use crate::sweep::{
@@ -41,6 +42,12 @@ impl ExperimentCtx {
             (None, Engine::Fluid) => MeasureEngine::Fluid,
             (None, Engine::Des) => MeasureEngine::Des,
         }
+    }
+
+    /// Characterization source for co-simulations: the context's measurement
+    /// engine, served through the process-wide `CharCache`.
+    pub(crate) fn char_source(&self) -> CharSource<'_> {
+        CharSource::Measured(self.measure_engine())
     }
 
     pub(crate) fn engine_name(&self) -> &'static str {
@@ -347,7 +354,9 @@ pub fn fig9_report(ctx: &ExperimentCtx) -> Result<String> {
 }
 
 /// Fig. 1: plain HPCG co-simulation — desynchronization timelines and
-/// per-rank DDOT2 runtimes sorted by start time.
+/// per-rank DDOT2 runtimes sorted by start time. The co-sim runs on the
+/// event-driven timeline engine; kernel characterizations come from the
+/// context's engine through the shared `CharCache`.
 pub fn fig1_report(ctx: &ExperimentCtx) -> Result<String> {
     let mut out = String::from("FIG. 1 — plain HPCG co-simulation (multigroup sharing model)\n");
     let mut csv = String::from("machine,rank,sorted_idx,ddot2_start_s,ddot2_duration_ms\n");
@@ -361,7 +370,7 @@ pub fn fig1_report(ctx: &ExperimentCtx) -> Result<String> {
             neighbor_radius: 3,
             noise: NoiseModel::mild(42),
         };
-        let eng = CoSimEngine::new(&m, prog, ranks, cfg)?;
+        let eng = CoSimEngine::with_source(&m, prog, ranks, cfg, &ctx.char_source())?;
         let r = eng.run();
 
         let iter = 1; // skip the first iteration (start-up transient)
@@ -393,7 +402,9 @@ pub fn fig1_report(ctx: &ExperimentCtx) -> Result<String> {
 }
 
 /// Fig. 3: modified HPCG (no reductions) — concurrency timelines and
-/// skewness of the accumulated DDOT time distributions.
+/// skewness of the accumulated DDOT time distributions. Runs on the
+/// event-driven timeline engine with characterizations from the context's
+/// engine (shared `CharCache`).
 pub fn fig3_report(ctx: &ExperimentCtx) -> Result<String> {
     let mut out = String::from("FIG. 3 — modified HPCG (no Allreduce) on CLX\n");
     let m = machine(MachineId::Clx);
@@ -403,10 +414,10 @@ pub fn fig3_report(ctx: &ExperimentCtx) -> Result<String> {
         dt_s: 20e-6,
         t_max_s: 600.0,
         initial_stagger_s: 0.2e-3,
-            neighbor_radius: 3,
+        neighbor_radius: 3,
         noise: NoiseModel::mild(7),
     };
-    let eng = CoSimEngine::new(&m, prog.clone(), ranks, cfg)?;
+    let eng = CoSimEngine::with_source(&m, prog.clone(), ranks, cfg, &ctx.char_source())?;
     let r = eng.run();
 
     let mut csv = String::from("label,rank,duration_ms\n");

@@ -23,9 +23,11 @@ use crate::runtime::SimCase;
 use crate::scenario::runner::MeasureEngine;
 use crate::simulator::{measure_f_bs, CoreWorkload, KernelMeasurement};
 
-/// Which measurement engine produced a characterization.
+/// Which engine produced a characterization.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum EngineKind {
+    /// Analytic ECM prediction (no measurement; the paper's model route).
+    Ecm,
     /// In-process fluid simulator.
     Fluid,
     /// In-process discrete-event simulator.
@@ -34,6 +36,35 @@ pub enum EngineKind {
     /// source path so characterizations from different bundles loaded in the
     /// same process never alias in the global cache.
     Pjrt(u64),
+}
+
+/// Where kernel characterizations come from — the analytic ECM route or an
+/// Eq.-3 measurement on one of the scenario engines. Both are served
+/// through the same [`CharCache`], so co-simulations and measurement
+/// pipelines share entries process-wide.
+pub enum CharSource<'a> {
+    /// ECM prediction: `f` from Eq. 2, `b_s` from the machine model.
+    Ecm,
+    /// Eq.-3 measurement (solo + full-domain run) on a scenario engine.
+    Measured(MeasureEngine<'a>),
+}
+
+impl CharSource<'_> {
+    /// Cache keying kind.
+    pub fn kind(&self) -> EngineKind {
+        match self {
+            CharSource::Ecm => EngineKind::Ecm,
+            CharSource::Measured(e) => e.kind(),
+        }
+    }
+
+    /// Short display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CharSource::Ecm => "ecm",
+            CharSource::Measured(e) => e.name(),
+        }
+    }
 }
 
 /// Cache key: one characterization per (machine, kernel, engine).
@@ -104,6 +135,41 @@ impl CharCache {
         self.map.lock().unwrap().clear();
         self.hits.store(0, Ordering::Relaxed);
         self.misses.store(0, Ordering::Relaxed);
+    }
+
+    /// Characterize every kernel in `kernels` on `machine` from `source`
+    /// (analytic ECM or a measurement engine), serving cached entries and
+    /// computing only the missing ones.
+    pub fn characterize_source(
+        &self,
+        machine: &Machine,
+        kernels: &[KernelId],
+        source: &CharSource,
+    ) -> Result<HashMap<KernelId, KernelMeasurement>> {
+        match source {
+            CharSource::Measured(engine) => self.characterize(machine, kernels, engine),
+            CharSource::Ecm => {
+                let mut out = HashMap::new();
+                for &k in kernels {
+                    let key = (machine.id, k, EngineKind::Ecm);
+                    let m = match self.lookup(&key) {
+                        Some(m) => m,
+                        None => {
+                            let p = crate::ecm::predict(&kernel(k), machine);
+                            let m = KernelMeasurement {
+                                b1_gbs: p.b1_gbs,
+                                bs_gbs: p.bs_gbs,
+                                f: p.f,
+                            };
+                            self.insert(key, m);
+                            m
+                        }
+                    };
+                    out.insert(k, m);
+                }
+                Ok(out)
+            }
+        }
     }
 
     /// Characterize every kernel in `kernels` on `machine` with `engine`
@@ -218,6 +284,44 @@ mod tests {
             assert_eq!(a[&KernelId::Daxpy].b1_gbs.to_bits(), b[&KernelId::Daxpy].b1_gbs.to_bits());
             assert_eq!(a[&KernelId::Daxpy].bs_gbs.to_bits(), b[&KernelId::Daxpy].bs_gbs.to_bits());
         }
+    }
+
+    #[test]
+    fn ecm_source_is_cached_and_matches_prediction() {
+        let cache = CharCache::new();
+        let m = rome();
+        let ks = [KernelId::Ddot2, KernelId::Daxpy];
+        let out = cache.characterize_source(&m, &ks, &CharSource::Ecm).unwrap();
+        assert_eq!(cache.stats().misses, 2);
+        for k in ks {
+            let p = crate::ecm::predict(&kernel(k), &m);
+            assert_eq!(out[&k].f.to_bits(), p.f.to_bits());
+            assert_eq!(out[&k].bs_gbs.to_bits(), p.bs_gbs.to_bits());
+            assert_eq!(out[&k].b1_gbs.to_bits(), p.b1_gbs.to_bits());
+        }
+        let again = cache.characterize_source(&m, &ks, &CharSource::Ecm).unwrap();
+        let s = cache.stats();
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.misses, 2);
+        assert_eq!(again[&KernelId::Ddot2].f.to_bits(), out[&KernelId::Ddot2].f.to_bits());
+        // ECM entries never alias measured ones.
+        assert!(cache.contains(&(m.id, KernelId::Ddot2, EngineKind::Ecm)));
+        assert!(!cache.contains(&(m.id, KernelId::Ddot2, EngineKind::Fluid)));
+    }
+
+    #[test]
+    fn measured_source_delegates_to_engine_characterization() {
+        let cache = CharCache::new();
+        let m = rome();
+        let via_source = cache
+            .characterize_source(&m, &[KernelId::Dcopy], &CharSource::Measured(MeasureEngine::Fluid))
+            .unwrap();
+        let direct = cache.characterize(&m, &[KernelId::Dcopy], &MeasureEngine::Fluid).unwrap();
+        assert_eq!(
+            via_source[&KernelId::Dcopy].f.to_bits(),
+            direct[&KernelId::Dcopy].f.to_bits()
+        );
+        assert_eq!(cache.stats().entries, 1, "one shared entry");
     }
 
     #[test]

@@ -28,7 +28,7 @@ mod results;
 mod runner;
 mod spec;
 
-pub use cache::{CacheStats, CharCache, CharKey, EngineKind};
+pub use cache::{CacheStats, CharCache, CharKey, CharSource, EngineKind};
 pub use results::{GroupOutcome, MixResult, MixResultSet, ScenarioResult};
 pub use runner::{run_mixes, run_scenario, MeasureEngine};
 pub use spec::{slugify, GroupSpec, Mix, Scenario};

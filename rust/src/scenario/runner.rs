@@ -13,9 +13,9 @@
 //! batched artifact dispatches. Kernel characterizations are served from the
 //! process-wide [`CharCache`].
 
+use std::cell::UnsafeCell;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 
 use crate::config::Machine;
 use crate::error::Result;
@@ -75,7 +75,10 @@ impl MeasureEngine<'_> {
 ///
 /// Workers pull the next index from a shared atomic counter, so long and
 /// short items balance automatically — the scheduling rayon's `par_iter`
-/// would give, without the dependency (offline build).
+/// would give, without the dependency (offline build). Results go straight
+/// into pre-sized per-index slots: the atomic ticket makes each index the
+/// exclusive property of one worker, so the hot path takes no lock and
+/// needs no post-sort.
 fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
 where
     T: Sync,
@@ -90,7 +93,14 @@ where
         .unwrap_or(4)
         .min(items.len());
     let next = AtomicUsize::new(0);
-    let results: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(items.len()));
+
+    struct Slots<R>(Vec<UnsafeCell<Option<R>>>);
+    // SAFETY: each index is claimed by exactly one worker via the unique
+    // `fetch_add` ticket below, so no cell is ever aliased across threads;
+    // the thread scope joins all workers before the slots are read back.
+    unsafe impl<R: Send> Sync for Slots<R> {}
+
+    let slots: Slots<R> = Slots((0..items.len()).map(|_| UnsafeCell::new(None)).collect());
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| loop {
@@ -99,13 +109,16 @@ where
                     break;
                 }
                 let r = f(&items[i]);
-                results.lock().unwrap().push((i, r));
+                // SAFETY: ticket `i` is unique to this worker (see above).
+                unsafe { *slots.0[i].get() = Some(r) };
             });
         }
     });
-    let mut pairs = results.into_inner().unwrap();
-    pairs.sort_by_key(|(i, _)| *i);
-    pairs.into_iter().map(|(_, r)| r).collect()
+    slots
+        .0
+        .into_iter()
+        .map(|c| c.into_inner().expect("every slot written by a worker"))
+        .collect()
 }
 
 /// Per-core workload vector of a mix: kernel groups in order, idle cores
@@ -227,6 +240,23 @@ mod tests {
         let out = par_map(&items, |&x| x * 2);
         assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
         assert!(par_map(&[] as &[usize], |&x: &usize| x).is_empty());
+    }
+
+    #[test]
+    fn par_map_fills_every_slot_under_unbalanced_load() {
+        // Highly skewed per-item cost exercises the dynamic scheduling; a
+        // lost or duplicated ticket would leave a hole or wrong value.
+        let items: Vec<usize> = (0..503).collect();
+        let out = par_map(&items, |&x| {
+            if x % 97 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            x * x
+        });
+        assert_eq!(out.len(), items.len());
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
     }
 
     #[test]

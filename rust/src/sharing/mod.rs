@@ -6,14 +6,18 @@
 //! * [`baseline`] — the naive models the paper argues against (equal share
 //!   per thread; code-balance-weighted share), kept as ablation baselines,
 //! * [`desync_predictor`] — qualitative desync/resync prediction from
-//!   kernel pairings (Sect. V closing discussion).
+//!   kernel pairings (Sect. V closing discussion),
+//! * [`share_cache`] — memoized multigroup evaluations keyed by group
+//!   composition (the contention-timeline engine's hot lookup).
 
 mod baseline;
 mod desync_predictor;
 mod model;
 mod multigroup;
+mod share_cache;
 
 pub use baseline::{code_balance_share, equal_share, BaselineKind};
 pub use desync_predictor::{predict_skew, OverlapPartner, SkewPrediction};
 pub use model::{overlapped_saturated_bw, share_two_groups, KernelGroup, SharingPrediction};
 pub use multigroup::{share_multigroup, GroupShare, GroupShareEntry};
+pub use share_cache::{ShareCache, ShareCacheStats, MAX_GROUP_CORES, MAX_SLOTS};

@@ -1,0 +1,241 @@
+//! Memoized sharing-model evaluations keyed by group composition.
+//!
+//! The desynchronization co-simulator evaluates the multigroup model
+//! (generalized Eqs. 4+5) every time the set of concurrently running kernels
+//! changes, but the number of *distinct* compositions in a run is small
+//! (hundreds), so evaluations are memoized. This used to live as an ad-hoc
+//! `HashMap` inside the co-sim engine; it is now a reusable component with
+//! hit/miss accounting, shared by the timeline engine and available to any
+//! future consumer (schedulers, what-if explorers).
+//!
+//! Kernels are mapped to dense *slots* at construction; a composition is a
+//! per-slot core-count vector, packed into a 128-bit key (8 bits per slot).
+
+use std::collections::HashMap;
+
+use crate::kernels::KernelId;
+use crate::sharing::{share_multigroup, KernelGroup};
+
+/// Maximum number of distinct kernels one cache can track (the composition
+/// key packs 8 bits per slot into a `u128`). The full Table II registry has
+/// 15 kernels, so this is not a practical limit.
+pub const MAX_SLOTS: usize = 16;
+
+/// Maximum core count per group representable in the packed key.
+pub const MAX_GROUP_CORES: usize = 255;
+
+/// Counter snapshot of a [`ShareCache`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShareCacheStats {
+    /// Lookups served from the cache.
+    pub hits: u64,
+    /// Lookups that evaluated the model.
+    pub misses: u64,
+    /// Distinct compositions stored.
+    pub entries: usize,
+}
+
+/// Memoized `share_multigroup` evaluations for a fixed kernel set.
+pub struct ShareCache {
+    kernels: Vec<KernelId>,
+    /// `(f, b_s[GB/s])` per slot.
+    chars: Vec<(f64, f64)>,
+    /// Composition key → per-core drain rate in bytes/s, per slot.
+    cache: HashMap<u128, Vec<f64>>,
+    /// Two-entry MRU over `cache`: co-sims alternate between a handful of
+    /// compositions around noise events, and this keeps the hot path free of
+    /// hashing. `u128::MAX` marks an empty way.
+    mru: [u128; 2],
+    hits: u64,
+    misses: u64,
+}
+
+impl ShareCache {
+    /// Build a cache for the kernel set `chars`: `(kernel, f, b_s[GB/s])`
+    /// per slot, in slot order.
+    ///
+    /// # Panics
+    /// If more than [`MAX_SLOTS`] kernels are given or a kernel repeats.
+    pub fn new(chars: &[(KernelId, f64, f64)]) -> Self {
+        assert!(
+            chars.len() <= MAX_SLOTS,
+            "ShareCache supports at most {MAX_SLOTS} distinct kernels ({} given)",
+            chars.len()
+        );
+        let kernels: Vec<KernelId> = chars.iter().map(|c| c.0).collect();
+        for (i, k) in kernels.iter().enumerate() {
+            assert!(!kernels[..i].contains(k), "duplicate kernel {k:?} in ShareCache");
+        }
+        ShareCache {
+            kernels,
+            chars: chars.iter().map(|c| (c.1, c.2)).collect(),
+            cache: HashMap::new(),
+            mru: [u128::MAX; 2],
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Number of kernel slots.
+    pub fn slots(&self) -> usize {
+        self.kernels.len()
+    }
+
+    /// Slot of a kernel, if tracked.
+    pub fn slot_of(&self, k: KernelId) -> Option<usize> {
+        self.kernels.iter().position(|kk| *kk == k)
+    }
+
+    /// Kernel of a slot.
+    pub fn kernel_of(&self, slot: usize) -> KernelId {
+        self.kernels[slot]
+    }
+
+    /// `(f, b_s)` of a slot.
+    pub fn chars_of(&self, slot: usize) -> (f64, f64) {
+        self.chars[slot]
+    }
+
+    fn key_of(counts: &[u16]) -> u128 {
+        let mut key = 0u128;
+        for (i, &c) in counts.iter().enumerate() {
+            debug_assert!(c as usize <= MAX_GROUP_CORES);
+            key |= (c as u128) << (8 * i);
+        }
+        key
+    }
+
+    /// Per-core drain rates (bytes/s) per slot for the composition
+    /// `counts[slot] = number of cores running that kernel` (idle cores are
+    /// simply absent — scenario (c) of Fig. 2). Memoized.
+    pub fn rates_bytes(&mut self, counts: &[u16]) -> &[f64] {
+        debug_assert_eq!(counts.len(), self.kernels.len());
+        let key = Self::key_of(counts);
+        if self.mru[0] == key || self.mru[1] == key || self.cache.contains_key(&key) {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+            let groups: Vec<KernelGroup> = counts
+                .iter()
+                .zip(&self.chars)
+                .map(|(&n, &(f, bs))| KernelGroup { n: n as usize, f, bs_gbs: bs })
+                .collect();
+            let rates: Vec<f64> = if counts.iter().all(|&c| c == 0) {
+                vec![0.0; self.kernels.len()]
+            } else {
+                share_multigroup(&groups)
+                    .groups
+                    .iter()
+                    .map(|e| e.per_core_gbs * 1e9)
+                    .collect()
+            };
+            self.cache.insert(key, rates);
+        }
+        if self.mru[0] != key {
+            self.mru[1] = self.mru[0];
+            self.mru[0] = key;
+        }
+        self.cache.get(&key).expect("just inserted").as_slice()
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> ShareCacheStats {
+        ShareCacheStats { hits: self.hits, misses: self.misses, entries: self.cache.len() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache() -> ShareCache {
+        ShareCache::new(&[
+            (KernelId::Ddot2, 0.16, 110.0),
+            (KernelId::Daxpy, 0.21, 103.0),
+            (KernelId::Schoenauer, 0.19, 104.0),
+        ])
+    }
+
+    #[test]
+    fn rates_match_direct_model_evaluation() {
+        let mut c = cache();
+        let counts = [4u16, 3, 2];
+        let rates = c.rates_bytes(&counts).to_vec();
+        let direct = share_multigroup(&[
+            KernelGroup { n: 4, f: 0.16, bs_gbs: 110.0 },
+            KernelGroup { n: 3, f: 0.21, bs_gbs: 103.0 },
+            KernelGroup { n: 2, f: 0.19, bs_gbs: 104.0 },
+        ]);
+        for (slot, e) in direct.groups.iter().enumerate() {
+            assert_eq!(rates[slot].to_bits(), (e.per_core_gbs * 1e9).to_bits());
+        }
+    }
+
+    #[test]
+    fn zero_count_slots_do_not_perturb_active_groups() {
+        // A composition with an absent kernel must equal the model run on
+        // the active groups only (idle groups carry zero demand).
+        let mut c = cache();
+        let rates = c.rates_bytes(&[5, 0, 3]).to_vec();
+        let direct = share_multigroup(&[
+            KernelGroup { n: 5, f: 0.16, bs_gbs: 110.0 },
+            KernelGroup { n: 0, f: 0.21, bs_gbs: 103.0 },
+            KernelGroup { n: 3, f: 0.19, bs_gbs: 104.0 },
+        ]);
+        assert_eq!(rates[0].to_bits(), (direct.groups[0].per_core_gbs * 1e9).to_bits());
+        assert_eq!(rates[1], 0.0);
+        assert_eq!(rates[2].to_bits(), (direct.groups[2].per_core_gbs * 1e9).to_bits());
+    }
+
+    #[test]
+    fn memoizes_by_composition() {
+        let mut c = cache();
+        c.rates_bytes(&[4, 3, 2]);
+        c.rates_bytes(&[4, 3, 2]);
+        c.rates_bytes(&[4, 3, 2]);
+        c.rates_bytes(&[1, 0, 0]);
+        let s = c.stats();
+        assert_eq!(s.misses, 2);
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.entries, 2);
+    }
+
+    #[test]
+    fn mru_alternation_hits() {
+        // The noise-preemption pattern: composition alternates A, B, A, B.
+        let mut c = cache();
+        let a = [4u16, 3, 2];
+        let b = [4u16, 2, 2];
+        c.rates_bytes(&a);
+        c.rates_bytes(&b);
+        for _ in 0..10 {
+            c.rates_bytes(&a);
+            c.rates_bytes(&b);
+        }
+        let s = c.stats();
+        assert_eq!(s.misses, 2);
+        assert_eq!(s.hits, 20);
+    }
+
+    #[test]
+    fn empty_composition_yields_zero_rates() {
+        let mut c = cache();
+        assert!(c.rates_bytes(&[0, 0, 0]).iter().all(|&r| r == 0.0));
+    }
+
+    #[test]
+    fn slot_mapping_round_trips() {
+        let c = cache();
+        assert_eq!(c.slots(), 3);
+        assert_eq!(c.slot_of(KernelId::Daxpy), Some(1));
+        assert_eq!(c.slot_of(KernelId::Dcopy), None);
+        assert_eq!(c.kernel_of(2), KernelId::Schoenauer);
+        assert_eq!(c.chars_of(0), (0.16, 110.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate kernel")]
+    fn rejects_duplicate_kernels() {
+        ShareCache::new(&[(KernelId::Ddot2, 0.1, 50.0), (KernelId::Ddot2, 0.2, 60.0)]);
+    }
+}

@@ -9,6 +9,23 @@ pub fn mean(xs: &[f64]) -> f64 {
     }
 }
 
+/// Median (of a sorted copy); 0 for an empty slice. Even sizes average the
+/// two central elements, matching the convention of `ErrorStats` and the
+/// box-plot quantiles.
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let mid = sorted.len() / 2;
+    if sorted.len() % 2 == 0 {
+        (sorted[mid - 1] + sorted[mid]) / 2.0
+    } else {
+        sorted[mid]
+    }
+}
+
 /// Population standard deviation.
 pub fn std_dev(xs: &[f64]) -> f64 {
     if xs.len() < 2 {
@@ -83,6 +100,13 @@ mod tests {
         let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
         assert!((mean(&xs) - 5.0).abs() < 1e-12);
         assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_of_odd_even_empty() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 3.0, 2.0]), 2.5);
+        assert_eq!(median(&[]), 0.0);
     }
 
     #[test]

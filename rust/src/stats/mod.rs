@@ -7,5 +7,5 @@ mod descriptive;
 mod error_metrics;
 
 pub use boxplot::BoxSummary;
-pub use descriptive::{mean, skewness_dimensioned, skewness_standard, std_dev, Summary};
+pub use descriptive::{mean, median, skewness_dimensioned, skewness_standard, std_dev, Summary};
 pub use error_metrics::{max_rel_error, rel_error, ErrorStats};

@@ -1,0 +1,653 @@
+//! Exact event simulation on the shared contention timeline.
+//!
+//! Between events, every running rank's remaining data volume drains at the
+//! constant per-core rate the multigroup sharing model assigns to its
+//! kernel's group, so the next phase completion is solved in closed form
+//! instead of being stepped to. The engine therefore has *no* time step and
+//! no discretization error: its output is the exact `dt → 0` limit of the
+//! legacy stepper (pinned by the golden suite in `desync::golden`).
+//!
+//! Per-rank progress is tracked through per-kernel *drained-bytes
+//! integrals*: `B_k(t) = ∫ rate_k dt` advances only when rates change
+//! (O(#kernels), not O(#ranks)), and a rank running kernel `k` since `t₀`
+//! with volume `V` completes when `B_k` reaches the *target* `B_k(t₀) + V`.
+//! Ranks of one group complete in target order, so each group keeps a
+//! min-heap of targets, and the earliest projected crossing over all groups
+//! is a single closed-form time (`t_complete`) compared against the event
+//! queue's head — a completion is an *event*, but never a heap entry, so a
+//! composition change costs O(#kernels) instead of queue churn.
+
+use std::collections::HashMap;
+
+use crate::desync::{CoSimConfig, CoSimResult, Phase, Program, SyncKind, TraceLog};
+use crate::desync::{NoiseStream, PhaseRecord};
+use crate::kernels::KernelId;
+use crate::sharing::ShareCache;
+use crate::timeline::event::{EventKind, EventQueue};
+
+/// Relative completion slack on the drained-bytes integrals: absorbs the
+/// floating-point residue of `target - B_k` at the projected crossing (a few
+/// ulp; the slack corresponds to sub-nanosecond simulated time at GB/s
+/// rates).
+const EPS_REL: f64 = 1e-9;
+
+/// How an idling rank resumes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Resume {
+    /// Proceed to phase `flat` (after an explicit `Phase::Idle`).
+    Next { flat: usize },
+    /// Re-enter an interrupted kernel with `remaining` bytes to go.
+    Kernel { flat: usize, slot: usize, remaining: f64, started: f64 },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum RankState {
+    /// Waiting for its staggered start.
+    NotStarted,
+    /// Between phases; next phase is `flat` (sync not yet satisfied).
+    Ready { flat: usize },
+    /// Inside a kernel: completes when the slot's integral reaches `target`.
+    Running { flat: usize, slot: usize, target: f64, started: f64 },
+    /// Arrived at a collective, waiting for the release event.
+    Collective { flat: usize, arrived: f64 },
+    /// Idling until `until` (explicit Idle phase or noise interruption).
+    Idling { flat: Option<usize>, until: f64, started: f64, resume: Resume },
+    /// Program complete.
+    Done,
+}
+
+/// Pre-resolved per-phase execution info (one entry per phase of an
+/// iteration; labels stay in the [`Program`]).
+#[derive(Debug, Clone, Copy)]
+enum PhaseInfo {
+    Kernel { slot: usize, volume: f64, sync: SyncKind },
+    Allreduce { cost: f64 },
+    Idle { duration: f64 },
+}
+
+/// Entry of a per-kernel completion FIFO (min-heap on target, then rank).
+#[derive(Debug, Clone, Copy)]
+struct GroupEntry {
+    target: f64,
+    rank: usize,
+    ver: u64,
+}
+
+impl PartialEq for GroupEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for GroupEntry {}
+
+impl PartialOrd for GroupEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for GroupEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want the smallest target
+        // (then the lowest rank, matching the stepper's rank-order sweep).
+        other
+            .target
+            .total_cmp(&self.target)
+            .then_with(|| other.rank.cmp(&self.rank))
+    }
+}
+
+struct Sim<'a> {
+    program: &'a Program,
+    infos: Vec<PhaseInfo>,
+    n: usize,
+    total: usize,
+    radius: usize,
+    t_max: f64,
+    stagger: f64,
+
+    states: Vec<RankState>,
+    completed: Vec<i64>,
+    trace: TraceLog,
+    finish: Vec<f64>,
+    noise: Vec<NoiseStream>,
+    /// Collective flat index → ranks arrived so far.
+    collectives: HashMap<usize, usize>,
+
+    queue: EventQueue,
+    share: ShareCache,
+    /// Cores currently running each kernel slot.
+    counts: Vec<u16>,
+    /// Drained-bytes integral per slot.
+    integral: Vec<f64>,
+    /// Current per-core drain rate per slot, bytes/s.
+    rates: Vec<f64>,
+    /// Time the integrals were last folded forward.
+    t_rates: f64,
+    /// Composition changed since the last refresh.
+    dirty: bool,
+    /// The analytic next-completion time under the current composition.
+    t_complete: f64,
+    /// Per-rank guard for lazily dropped group-heap entries.
+    run_ver: Vec<u64>,
+    /// Per-slot completion FIFOs.
+    groups: Vec<std::collections::BinaryHeap<GroupEntry>>,
+    events: u64,
+}
+
+/// Run the event-driven co-simulation.
+///
+/// `chars` holds `(kernel, f, b_s[GB/s])` for every kernel the program
+/// references. `config.dt_s` is ignored — the event engine has no step.
+pub fn simulate(
+    program: &Program,
+    n_ranks: usize,
+    config: &CoSimConfig,
+    chars: &[(KernelId, f64, f64)],
+) -> CoSimResult {
+    let share = ShareCache::new(chars);
+    let nk = share.slots();
+    let infos: Vec<PhaseInfo> = program
+        .phases
+        .iter()
+        .map(|p| match p {
+            Phase::Kernel { kernel, volume_bytes, sync, .. } => PhaseInfo::Kernel {
+                slot: share.slot_of(*kernel).expect("program kernel not characterized"),
+                volume: *volume_bytes,
+                sync: *sync,
+            },
+            Phase::Allreduce { cost_s, .. } => PhaseInfo::Allreduce { cost: *cost_s },
+            Phase::Idle { duration_s, .. } => PhaseInfo::Idle { duration: *duration_s },
+        })
+        .collect();
+
+    let sim = Sim {
+        program,
+        infos,
+        n: n_ranks,
+        total: program.total_phases(),
+        radius: config.neighbor_radius,
+        t_max: config.t_max_s,
+        stagger: config.initial_stagger_s,
+        states: vec![RankState::NotStarted; n_ranks],
+        completed: vec![-1; n_ranks],
+        trace: TraceLog::default(),
+        finish: vec![f64::NAN; n_ranks],
+        noise: (0..n_ranks).map(|r| config.noise.stream(r)).collect(),
+        collectives: HashMap::new(),
+        queue: EventQueue::new(),
+        share,
+        counts: vec![0; nk],
+        integral: vec![0.0; nk],
+        rates: vec![0.0; nk],
+        t_rates: 0.0,
+        dirty: false,
+        t_complete: f64::INFINITY,
+        run_ver: vec![0; n_ranks],
+        groups: (0..nk).map(|_| std::collections::BinaryHeap::new()).collect(),
+        events: 0,
+    };
+    sim.run()
+}
+
+impl Sim<'_> {
+    fn info(&self, flat: usize) -> PhaseInfo {
+        self.infos[flat % self.infos.len()]
+    }
+
+    fn label(&self, flat: usize) -> &'static str {
+        self.program.phase(flat).expect("flat in range").label()
+    }
+
+    fn record(&mut self, rank: usize, flat: usize, t_start: f64, t_end: f64) {
+        self.trace.records.push(PhaseRecord {
+            rank,
+            iteration: flat / self.infos.len(),
+            label: self.label(flat),
+            t_start,
+            t_end,
+        });
+    }
+
+    /// Is the sync precondition of phase `flat` satisfied for rank `r`?
+    /// (Identical to the legacy stepper's rule.)
+    fn sync_ok(&self, sync: SyncKind, r: usize, flat: usize) -> bool {
+        match sync {
+            SyncKind::None | SyncKind::Global => true,
+            SyncKind::Neighbors => {
+                if flat == 0 {
+                    return true;
+                }
+                let n = self.n;
+                let prev = flat as i64 - 1;
+                let radius = self.radius.min(n / 2);
+                (1..=radius).all(|k| {
+                    self.completed[(r + n - k) % n] >= prev
+                        && self.completed[(r + k) % n] >= prev
+                })
+            }
+        }
+    }
+
+    /// Advance the drained-bytes integrals to `t` at the current rates.
+    fn fold(&mut self, t: f64) {
+        let dt = t - self.t_rates;
+        if dt > 0.0 {
+            for slot in 0..self.counts.len() {
+                if self.counts[slot] > 0 {
+                    self.integral[slot] += self.rates[slot] * dt;
+                }
+            }
+        }
+        self.t_rates = t;
+    }
+
+    /// After a composition change: new rates + the closed-form time of the
+    /// earliest projected target crossing (no queue traffic).
+    fn refresh(&mut self, t: f64) {
+        if !self.dirty {
+            return;
+        }
+        self.dirty = false;
+        self.t_complete = f64::INFINITY;
+        if self.counts.iter().all(|&c| c == 0) {
+            return; // nothing running: no rates needed, no completion
+        }
+        self.rates.copy_from_slice(self.share.rates_bytes(&self.counts));
+        for slot in 0..self.counts.len() {
+            if self.counts[slot] == 0 || self.rates[slot] <= 0.0 {
+                continue;
+            }
+            loop {
+                let entry = match self.groups[slot].peek() {
+                    Some(e) => *e,
+                    None => break,
+                };
+                if entry.ver != self.run_ver[entry.rank] {
+                    self.groups[slot].pop(); // stale: rank left the group
+                    continue;
+                }
+                let dt_c = (entry.target - self.integral[slot]).max(0.0) / self.rates[slot];
+                self.t_complete = self.t_complete.min(t + dt_c);
+                break;
+            }
+        }
+    }
+
+    /// Put a rank into a kernel phase (or straight into a pending noise
+    /// idle, matching the stepper's deferred poll semantics).
+    fn enter_running(
+        &mut self,
+        rank: usize,
+        flat: usize,
+        slot: usize,
+        remaining: f64,
+        started: f64,
+        t: f64,
+    ) {
+        if self.noise[rank].enabled() && self.noise[rank].next_at() <= t {
+            // Noise that queued up while the rank was not running fires now.
+            let dur = self.noise[rank].fire(t);
+            self.states[rank] = RankState::Idling {
+                flat: None,
+                until: t + dur,
+                started: t,
+                resume: Resume::Kernel { flat, slot, remaining, started },
+            };
+            self.queue.push(t + dur, EventKind::IdleEnd, rank);
+            self.queue.push(self.noise[rank].next_at(), EventKind::Noise, rank);
+            return;
+        }
+        let target = self.integral[slot] + remaining;
+        self.run_ver[rank] += 1;
+        self.states[rank] = RankState::Running { flat, slot, target, started };
+        self.groups[slot].push(GroupEntry { target, rank, ver: self.run_ver[rank] });
+        self.counts[slot] += 1;
+        self.dirty = true;
+    }
+
+    /// Try to move a Ready rank into its next phase.
+    fn try_start(&mut self, rank: usize, t: f64) {
+        let flat = match self.states[rank] {
+            RankState::Ready { flat } => flat,
+            _ => return,
+        };
+        if flat >= self.total {
+            self.states[rank] = RankState::Done;
+            self.finish[rank] = t;
+            return;
+        }
+        match self.info(flat) {
+            PhaseInfo::Kernel { slot, volume, sync } => {
+                if self.sync_ok(sync, rank, flat) {
+                    self.enter_running(rank, flat, slot, volume, t, t);
+                }
+            }
+            PhaseInfo::Allreduce { cost } => {
+                let arrived = self.collectives.entry(flat).or_insert(0);
+                *arrived += 1;
+                let all = *arrived == self.n;
+                self.states[rank] = RankState::Collective { flat, arrived: t };
+                if all {
+                    self.queue.push(t + cost, EventKind::CollectiveRelease, flat);
+                }
+            }
+            PhaseInfo::Idle { duration } => {
+                self.states[rank] = RankState::Idling {
+                    flat: Some(flat),
+                    until: t + duration,
+                    started: t,
+                    resume: Resume::Next { flat: flat + 1 },
+                };
+                self.queue.push(t + duration, EventKind::IdleEnd, rank);
+            }
+        }
+    }
+
+    /// Retry every Ready rank (completions may have unblocked halo syncs).
+    fn start_all(&mut self, t: f64) {
+        for r in 0..self.n {
+            self.try_start(r, t);
+        }
+    }
+
+    /// Complete every rank whose target the integrals have crossed, then
+    /// retry starts (the batch handler of the analytic completion event).
+    fn do_completions(&mut self, t: f64) {
+        for slot in 0..self.counts.len() {
+            let eps = EPS_REL * (self.integral[slot].abs() + 1.0);
+            loop {
+                let entry = match self.groups[slot].peek() {
+                    Some(e) => *e,
+                    None => break,
+                };
+                if entry.ver != self.run_ver[entry.rank] {
+                    self.groups[slot].pop();
+                    continue;
+                }
+                if entry.target > self.integral[slot] + eps {
+                    break;
+                }
+                self.groups[slot].pop();
+                if let RankState::Running { flat, slot: rslot, started, .. } =
+                    self.states[entry.rank]
+                {
+                    self.record(entry.rank, flat, started, t);
+                    self.completed[entry.rank] = flat as i64;
+                    self.counts[rslot] -= 1;
+                    self.run_ver[entry.rank] += 1;
+                    self.dirty = true;
+                    self.states[entry.rank] = RankState::Ready { flat: flat + 1 };
+                }
+            }
+        }
+        self.start_all(t);
+    }
+
+    fn run(mut self) -> CoSimResult {
+        for r in 0..self.n {
+            self.queue.push(r as f64 * self.stagger, EventKind::Start, r);
+            if self.noise[r].enabled() {
+                self.queue.push(self.noise[r].next_at(), EventKind::Noise, r);
+            }
+        }
+        let mut t_end = 0.0f64;
+        loop {
+            let tq = self.queue.peek_time().unwrap_or(f64::INFINITY);
+            // Strict `<`: at equal times queue events fire first (completion
+            // has the lowest tie-break priority, as in the legacy stepper).
+            if self.t_complete < tq {
+                if self.t_complete > self.t_max {
+                    t_end = self.t_max;
+                    break;
+                }
+                let t = self.t_complete;
+                self.t_complete = f64::INFINITY;
+                self.events += 1;
+                self.fold(t);
+                t_end = t;
+                self.do_completions(t);
+                self.refresh(t);
+                continue;
+            }
+            let ev = match self.queue.pop() {
+                Some(e) => e,
+                None => break,
+            };
+            if ev.kind == EventKind::Noise {
+                // Valid only while the rank runs a kernel and the arrival
+                // still matches its stream (deferred arrivals are consumed
+                // by `enter_running` and this entry dropped).
+                let running = matches!(self.states[ev.idx], RankState::Running { .. });
+                if !running || self.noise[ev.idx].next_at() != ev.t {
+                    continue;
+                }
+            }
+            if ev.t > self.t_max {
+                t_end = self.t_max;
+                break;
+            }
+            self.events += 1;
+            self.fold(ev.t);
+            let t = ev.t;
+            t_end = t;
+            match ev.kind {
+                EventKind::Start => {
+                    self.states[ev.idx] = RankState::Ready { flat: 0 };
+                    self.try_start(ev.idx, t);
+                }
+                EventKind::Noise => {
+                    if let RankState::Running { flat, slot, target, started } = self.states[ev.idx]
+                    {
+                        let remaining = (target - self.integral[slot]).max(0.0);
+                        self.counts[slot] -= 1;
+                        self.run_ver[ev.idx] += 1;
+                        self.dirty = true;
+                        let dur = self.noise[ev.idx].fire(t);
+                        self.states[ev.idx] = RankState::Idling {
+                            flat: None,
+                            until: t + dur,
+                            started: t,
+                            resume: Resume::Kernel { flat, slot, remaining, started },
+                        };
+                        self.queue.push(t + dur, EventKind::IdleEnd, ev.idx);
+                        self.queue.push(self.noise[ev.idx].next_at(), EventKind::Noise, ev.idx);
+                    }
+                }
+                EventKind::IdleEnd => {
+                    if let RankState::Idling { flat, until, started, resume } = self.states[ev.idx]
+                    {
+                        if until <= t {
+                            if let Some(fl) = flat {
+                                self.record(ev.idx, fl, started, t);
+                                self.completed[ev.idx] = fl as i64;
+                            }
+                            match resume {
+                                Resume::Next { flat: next } => {
+                                    self.states[ev.idx] = RankState::Ready { flat: next };
+                                    self.try_start(ev.idx, t);
+                                }
+                                Resume::Kernel { flat: kf, slot, remaining, started } => {
+                                    self.enter_running(ev.idx, kf, slot, remaining, started, t);
+                                }
+                            }
+                            if flat.is_some() {
+                                // An explicit Idle phase completed: halo
+                                // neighbours may now be unblocked.
+                                self.start_all(t);
+                            }
+                        }
+                    }
+                }
+                EventKind::CollectiveRelease => {
+                    let flat = ev.idx;
+                    for r in 0..self.n {
+                        if let RankState::Collective { flat: cf, arrived } = self.states[r] {
+                            if cf == flat {
+                                self.record(r, flat, arrived, t);
+                                self.completed[r] = flat as i64;
+                                self.states[r] = RankState::Ready { flat: flat + 1 };
+                            }
+                        }
+                    }
+                    self.start_all(t);
+                }
+            }
+            self.refresh(t);
+        }
+        CoSimResult {
+            trace: self.trace,
+            finish_s: self.finish,
+            t_end_s: t_end,
+            events: self.events,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::desync::NoiseModel;
+
+    fn one_kernel_program(volume: f64) -> Program {
+        Program {
+            phases: vec![Phase::Kernel {
+                kernel: KernelId::Ddot2,
+                volume_bytes: volume,
+                sync: SyncKind::None,
+                label: "K",
+            }],
+            iterations: 1,
+        }
+    }
+
+    fn cfg() -> CoSimConfig {
+        CoSimConfig {
+            dt_s: 1.0, // must be ignored by the event engine
+            t_max_s: 1e6,
+            initial_stagger_s: 0.0,
+            neighbor_radius: 1,
+            noise: NoiseModel::off(),
+        }
+    }
+
+    #[test]
+    fn solo_kernel_duration_is_closed_form() {
+        // One rank, one kernel: per-core rate = f * b_s (unsaturated cap).
+        let (f, bs) = (0.2, 100.0);
+        let volume = 3.2e9;
+        let r = simulate(&one_kernel_program(volume), 1, &cfg(), &[(KernelId::Ddot2, f, bs)]);
+        let expect = volume / (f * bs * 1e9);
+        assert_eq!(r.trace.records.len(), 1);
+        let rec = &r.trace.records[0];
+        assert!((rec.duration() - expect).abs() < 1e-12 * expect, "{}", rec.duration());
+        assert!((r.finish_s[0] - expect).abs() < 1e-12 * expect);
+    }
+
+    #[test]
+    fn saturated_domain_shares_exactly() {
+        // 10 identical ranks saturate: aggregate = b_s, per-core = b_s/10.
+        let (f, bs) = (0.2, 100.0);
+        let volume = 1e9;
+        let r = simulate(&one_kernel_program(volume), 10, &cfg(), &[(KernelId::Ddot2, f, bs)]);
+        let expect = volume / (bs / 10.0 * 1e9);
+        for rec in &r.trace.records {
+            assert!((rec.duration() - expect).abs() < 1e-9 * expect);
+        }
+        // Lockstep, no noise: everyone finishes at exactly the same instant.
+        for w in r.finish_s.windows(2) {
+            assert_eq!(w[0].to_bits(), w[1].to_bits());
+        }
+    }
+
+    #[test]
+    fn idle_and_allreduce_phases_are_exact() {
+        let prog = Program {
+            phases: vec![
+                Phase::Idle { duration_s: 0.25, label: "Wait" },
+                Phase::Allreduce { cost_s: 0.5, label: "AR" },
+            ],
+            iterations: 1,
+        };
+        let r = simulate(&prog, 3, &cfg(), &[(KernelId::Ddot2, 0.2, 100.0)]);
+        assert_eq!(r.trace.records.len(), 6);
+        for rec in r.trace.of("Wait", None) {
+            assert!((rec.duration() - 0.25).abs() < 1e-15);
+        }
+        for rec in r.trace.of("AR", None) {
+            // All arrive at 0.25, release at 0.25 + 0.5.
+            assert!((rec.t_start - 0.25).abs() < 1e-15);
+            assert!((rec.t_end - 0.75).abs() < 1e-15);
+        }
+        for fin in &r.finish_s {
+            assert!((fin - 0.75).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn noisy_run_is_bit_deterministic() {
+        let mut c = cfg();
+        c.noise = NoiseModel::mild(99);
+        let prog = one_kernel_program(5e8);
+        let a = simulate(&prog, 4, &c, &[(KernelId::Ddot2, 0.2, 100.0)]);
+        let b = simulate(&prog, 4, &c, &[(KernelId::Ddot2, 0.2, 100.0)]);
+        assert_eq!(a.trace.records.len(), b.trace.records.len());
+        for (x, y) in a.trace.records.iter().zip(&b.trace.records) {
+            assert_eq!(x.rank, y.rank);
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.t_start.to_bits(), y.t_start.to_bits());
+            assert_eq!(x.t_end.to_bits(), y.t_end.to_bits());
+        }
+        assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn wall_clock_leaves_unfinished_ranks_nan() {
+        let mut c = cfg();
+        c.t_max_s = 1e-6; // far shorter than the kernel
+        let r = simulate(&one_kernel_program(1e12), 2, &c, &[(KernelId::Ddot2, 0.2, 100.0)]);
+        assert!(r.finish_s.iter().all(|f| f.is_nan()));
+        assert_eq!(r.t_end_s, 1e-6);
+    }
+
+    #[test]
+    fn two_groups_drain_at_model_rates() {
+        // 3 ddot2 cores + 2 daxpy cores, saturated: per-core rates follow
+        // the generalized Eq. 5 split exactly.
+        use crate::sharing::{share_multigroup, KernelGroup};
+        let chars = [(KernelId::Ddot2, 0.4, 100.0), (KernelId::Daxpy, 0.6, 90.0)];
+        let vol = 1e9;
+        let prog = Program {
+            phases: vec![
+                Phase::Kernel {
+                    kernel: KernelId::Ddot2,
+                    volume_bytes: vol,
+                    sync: SyncKind::None,
+                    label: "A",
+                },
+                Phase::Kernel {
+                    kernel: KernelId::Daxpy,
+                    volume_bytes: vol,
+                    sync: SyncKind::None,
+                    label: "B",
+                },
+            ],
+            iterations: 1,
+        };
+        // Every rank runs A then B in lockstep, so phase 1 is a single
+        // 5-core ddot2 group whose duration has a closed form.
+        let n = 5;
+        let r = simulate(&prog, n, &cfg(), &chars);
+        let share_a = share_multigroup(&[KernelGroup { n, f: 0.4, bs_gbs: 100.0 }]);
+        let expect_a = vol / (share_a.groups[0].per_core_gbs * 1e9);
+        for rec in r.trace.of("A", None) {
+            assert!(
+                (rec.duration() - expect_a).abs() < 1e-9 * expect_a,
+                "A duration {} vs {}",
+                rec.duration(),
+                expect_a
+            );
+        }
+    }
+}

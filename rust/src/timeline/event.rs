@@ -1,0 +1,186 @@
+//! The priority-queue event core.
+//!
+//! The queue holds the *externally scheduled* events: staggered starts,
+//! noise arrivals, idle expiries, and collective releases. Phase
+//! completions are not stored here — under a fixed composition the next
+//! completion time is a closed-form number, so the engine keeps it as a
+//! single analytic time and compares it against the queue head
+//! ([`crate::timeline::engine`]); at equal times queue events win, which
+//! gives completions the lowest tie-break priority.
+//!
+//! Events that can become stale (noise arrivals for ranks that were
+//! preempted meanwhile) are validated lazily at pop time, keeping
+//! cancellation O(1).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// What an event does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A rank's (possibly staggered) program start.
+    Start,
+    /// A noise arrival. Valid only while the rank runs a kernel and the
+    /// arrival time still matches the rank's stream (a deferred arrival is
+    /// consumed by `enter_running` instead and the popped event dropped).
+    Noise,
+    /// End of an idle interval — an explicit `Phase::Idle` or a noise idle.
+    IdleEnd,
+    /// Release of a collective: every rank has arrived and the collective
+    /// cost has elapsed. `idx` carries the flat phase index.
+    CollectiveRelease,
+}
+
+impl EventKind {
+    /// Same-time tie-break priority. Noise preempts everything that drains
+    /// bytes at the same instant, mirroring the legacy stepper where
+    /// `poll` runs before the per-step drain.
+    fn priority(self) -> u8 {
+        match self {
+            EventKind::Start => 0,
+            EventKind::Noise => 1,
+            EventKind::IdleEnd => 2,
+            EventKind::CollectiveRelease => 3,
+        }
+    }
+}
+
+/// One scheduled event.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// Absolute simulation time, seconds.
+    pub t: f64,
+    /// Event kind.
+    pub kind: EventKind,
+    /// Rank index (`Start`/`Noise`/`IdleEnd`), flat phase index
+    /// (`CollectiveRelease`).
+    pub idx: usize,
+    /// Insertion order (total-order tie break, FIFO within ties).
+    seq: u64,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed on every field: `BinaryHeap` is a max-heap and we want
+        // the earliest event (then lowest priority/idx/seq) on top.
+        other
+            .t
+            .total_cmp(&self.t)
+            .then_with(|| other.kind.priority().cmp(&self.kind.priority()))
+            .then_with(|| other.idx.cmp(&self.idx))
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic min-queue of [`Event`]s.
+#[derive(Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    seq: u64,
+}
+
+impl EventQueue {
+    /// An empty queue.
+    pub fn new() -> Self {
+        EventQueue::default()
+    }
+
+    /// Schedule an event.
+    pub fn push(&mut self, t: f64, kind: EventKind, idx: usize) {
+        debug_assert!(t.is_finite(), "non-finite event time");
+        self.heap.push(Event { t, kind, idx, seq: self.seq });
+        self.seq += 1;
+    }
+
+    /// Time of the earliest pending event.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.t)
+    }
+
+    /// Pop the earliest event.
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop()
+    }
+
+    /// Pending event count (including stale entries awaiting lazy skip).
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Whether no events are pending.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Total number of events ever scheduled.
+    pub fn scheduled(&self) -> u64 {
+        self.seq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, EventKind::CollectiveRelease, 0);
+        q.push(1.0, EventKind::IdleEnd, 2);
+        q.push(2.0, EventKind::Start, 1);
+        assert_eq!(q.peek_time(), Some(1.0));
+        let ts: Vec<f64> = std::iter::from_fn(|| q.pop()).map(|e| e.t).collect();
+        assert_eq!(ts, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn same_time_orders_by_kind_priority_then_idx() {
+        let mut q = EventQueue::new();
+        q.push(1.0, EventKind::CollectiveRelease, 0);
+        q.push(1.0, EventKind::Noise, 5);
+        q.push(1.0, EventKind::Noise, 2);
+        q.push(1.0, EventKind::Start, 9);
+        let order: Vec<(EventKind, usize)> =
+            std::iter::from_fn(|| q.pop()).map(|e| (e.kind, e.idx)).collect();
+        assert_eq!(
+            order,
+            vec![
+                (EventKind::Start, 9),
+                (EventKind::Noise, 2),
+                (EventKind::Noise, 5),
+                (EventKind::CollectiveRelease, 0),
+            ]
+        );
+    }
+
+    #[test]
+    fn full_ties_are_fifo() {
+        let mut q = EventQueue::new();
+        q.push(1.0, EventKind::IdleEnd, 1);
+        q.push(1.0, EventKind::IdleEnd, 1);
+        q.push(1.0, EventKind::IdleEnd, 1);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.scheduled(), 3);
+        let mut last = None;
+        while let Some(e) = q.pop() {
+            assert_eq!(e.t, 1.0);
+            last = Some(e);
+        }
+        assert!(last.is_some());
+        assert!(q.is_empty());
+    }
+}

@@ -1,0 +1,28 @@
+//! The shared contention-timeline layer: exact event-driven simulation of
+//! ranks contending for one memory domain.
+//!
+//! The paper's co-simulation application (Sect. VI) observes that per-core
+//! bandwidth is an *analytic* function of the instantaneous group
+//! composition (generalized Eqs. 4+5). Between composition changes nothing
+//! varies, so the simulation reduces to exactly four event families —
+//! phase completions, collective releases, staggered starts, and noise
+//! interruptions. Starts, noise, idle expiries, and releases live in a
+//! priority queue; the next phase completion is a *closed-form* time under
+//! the current composition and is simply compared against the queue head.
+//! This eliminates the legacy stepper's `dt` discretization error entirely
+//! and runs orders of magnitude faster (see `repro bench` /
+//! `BENCH_cosim.json`).
+//!
+//! * [`event`] — the priority-queue event core (lazy invalidation),
+//! * [`engine`] — the drained-bytes-integral simulation core
+//!   ([`engine::simulate`]).
+//!
+//! [`crate::desync::CoSimEngine`] is the user-facing driver over this
+//! layer; the legacy stepper survives behind the `legacy-stepper` feature
+//! (and in unit tests) as the golden reference.
+
+pub mod event;
+pub mod engine;
+
+pub use engine::simulate;
+pub use event::{Event, EventKind, EventQueue};

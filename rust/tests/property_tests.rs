@@ -320,3 +320,36 @@ fn prop_eq3_close_to_ecm_everywhere() {
         }
     }
 }
+
+/// The event-driven co-simulation is *exactly* independent of the legacy
+/// step-size knob: `dt_s` parameterizes only the retired stepper, so traces
+/// must be bit-identical across wildly different values.
+#[test]
+fn prop_cosim_trace_independent_of_dt_knob() {
+    use membw::desync::{hpcg_program, CoSimConfig, CoSimEngine, HpcgVariant, NoiseModel};
+    let m = machine(MachineId::Clx);
+    let mut base: Option<Vec<(usize, &'static str, u64, u64)>> = None;
+    for dt in [20e-6, 1e-3, 0.5] {
+        let cfg = CoSimConfig {
+            dt_s: dt,
+            t_max_s: 600.0,
+            initial_stagger_s: 0.2e-3,
+            neighbor_radius: 3,
+            noise: NoiseModel::mild(7),
+        };
+        let prog = hpcg_program(HpcgVariant::Modified, 48, 2);
+        let eng = CoSimEngine::new(&m, prog, 10, cfg).unwrap();
+        let r = eng.run();
+        let sig: Vec<(usize, &'static str, u64, u64)> = r
+            .trace
+            .records
+            .iter()
+            .map(|x| (x.rank, x.label, x.t_start.to_bits(), x.t_end.to_bits()))
+            .collect();
+        assert!(!sig.is_empty());
+        match &base {
+            None => base = Some(sig),
+            Some(b) => assert_eq!(b, &sig, "dt={dt} changed the event-driven trace"),
+        }
+    }
+}
