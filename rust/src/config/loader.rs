@@ -31,6 +31,7 @@ pub fn machine_to_toml(m: &Machine) -> String {
          name = \"{}\"\n\
          microarch = \"{}\"\n\
          cores = {}\n\
+         domains_per_socket = {}\n\
          freq_ghz = {}\n\
          simd_bytes = {}\n\
          ld_per_cy = {}\n\
@@ -54,6 +55,7 @@ pub fn machine_to_toml(m: &Machine) -> String {
         m.name,
         m.microarch,
         m.cores,
+        m.domains_per_socket,
         m.freq_ghz,
         m.simd_bytes,
         m.ld_per_cy,
@@ -133,6 +135,14 @@ pub fn load_machine_toml(path: &Path) -> Result<Machine> {
         name: get("", "name")?,
         microarch: get("", "microarch")?,
         cores: get_u("", "cores")?,
+        // Optional with default 1: config files predating the topology
+        // layer describe a single-domain socket.
+        domains_per_socket: match map.get(&(String::new(), "domains_per_socket".to_string())) {
+            Some(v) => v
+                .parse::<usize>()
+                .map_err(|e| err(format!("bad integer for 'domains_per_socket': {e}")))?,
+            None => 1,
+        },
         freq_ghz: get_f("", "freq_ghz")?,
         simd_bytes: get_u("", "simd_bytes")?,
         ld_per_cy: get_f("", "ld_per_cy")?,
@@ -172,6 +182,7 @@ mod tests {
             let back = load_machine_toml(&path).unwrap();
             assert_eq!(back.id, m.id);
             assert_eq!(back.cores, m.cores);
+            assert_eq!(back.domains_per_socket, m.domains_per_socket);
             assert_eq!(back.llc, m.llc);
             assert_eq!(back.overlap, m.overlap);
             assert!((back.read_bw_gbs - m.read_bw_gbs).abs() < 1e-12);
@@ -189,6 +200,20 @@ mod tests {
         std::fs::write(&path, text.replace("cores = 10", "cores = 10   # ten cores")).unwrap();
         let m = load_machine_toml(&path).unwrap();
         assert_eq!(m.cores, 10);
+    }
+
+    #[test]
+    fn missing_domains_per_socket_defaults_to_one() {
+        // Pre-topology config files lack the key; they describe one domain.
+        let dir = std::env::temp_dir().join("membw-toml-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("legacy.toml");
+        let text = machine_to_toml(&builtin_machines()[3]); // Rome: 4 domains
+        let legacy: String =
+            text.lines().filter(|l| !l.starts_with("domains_per_socket")).collect::<Vec<_>>().join("\n");
+        std::fs::write(&path, legacy).unwrap();
+        let m = load_machine_toml(&path).unwrap();
+        assert_eq!(m.domains_per_socket, 1);
     }
 
     #[test]

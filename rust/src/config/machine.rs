@@ -40,19 +40,27 @@ impl MachineId {
         }
     }
 
-    /// Parse a CLI key (case-insensitive; accepts a few aliases).
+    /// Parse a CLI key (case-insensitive, whitespace-trimmed; accepts the
+    /// paper's own spellings — `BDW-1`, `CLX`, `Rome` — next to the short
+    /// keys). Every machine-name flag in the CLI routes through here, so
+    /// aliases behave identically everywhere.
     pub fn parse(s: &str) -> Result<Self> {
-        match s.to_ascii_lowercase().as_str() {
-            "bdw1" | "bdw-1" | "broadwell1" => Ok(MachineId::Bdw1),
-            "bdw2" | "bdw-2" | "broadwell2" => Ok(MachineId::Bdw2),
-            "clx" | "cascadelake" => Ok(MachineId::Clx),
-            "rome" | "epyc" => Ok(MachineId::Rome),
+        match s.trim().to_ascii_lowercase().as_str() {
+            "bdw1" | "bdw-1" | "broadwell1" | "broadwell-1" => Ok(MachineId::Bdw1),
+            "bdw2" | "bdw-2" | "broadwell2" | "broadwell-2" => Ok(MachineId::Bdw2),
+            "clx" | "clx-sp" | "cascadelake" | "cascade-lake" => Ok(MachineId::Clx),
+            "rome" | "rome-nps4" | "epyc" | "zen2" => Ok(MachineId::Rome),
             other => Err(Error::UnknownMachine(
                 other.to_string(),
                 "bdw1, bdw2, clx, rome".to_string(),
             )),
         }
     }
+}
+
+/// Look up a machine by any accepted CLI spelling (see [`MachineId::parse`]).
+pub fn machine_by_name(s: &str) -> Result<Machine> {
+    Ok(machine(MachineId::parse(s)?))
 }
 
 /// Last-level-cache organization (Table I "LLC organization").
@@ -114,6 +122,11 @@ pub struct Machine {
     pub microarch: String,
     /// Physical cores on one ccNUMA contention domain (SMT ignored).
     pub cores: usize,
+    /// ccNUMA memory domains per socket: 1 on the monolithic Intel chips,
+    /// 4 on Rome in NPS4 mode (its Table I row describes *one* of them).
+    /// [`crate::topology::Topology::socket`] expands this into explicit
+    /// per-domain contention domains.
+    pub domains_per_socket: usize,
     /// Fixed (base) clock of core and uncore, GHz.
     pub freq_ghz: f64,
     /// SIMD register width in bytes (32 = AVX2, 64 = AVX-512).
@@ -213,6 +226,7 @@ pub fn builtin_machines() -> Vec<Machine> {
             name: "Intel Xeon E5-2630 v4".into(),
             microarch: "Broadwell EP".into(),
             cores: 10,
+            domains_per_socket: 1,
             freq_ghz: 2.2,
             simd_bytes: 32,
             ld_per_cy: 2.0,
@@ -239,6 +253,7 @@ pub fn builtin_machines() -> Vec<Machine> {
             name: "Intel Xeon E5-2697 v4".into(),
             microarch: "Broadwell EP".into(),
             cores: 18,
+            domains_per_socket: 1,
             freq_ghz: 2.3,
             simd_bytes: 32,
             ld_per_cy: 2.0,
@@ -266,6 +281,7 @@ pub fn builtin_machines() -> Vec<Machine> {
             name: "Intel Xeon Gold 6248".into(),
             microarch: "Cascade Lake SP".into(),
             cores: 20,
+            domains_per_socket: 1,
             freq_ghz: 2.5,
             simd_bytes: 64,
             ld_per_cy: 2.0,
@@ -294,6 +310,7 @@ pub fn builtin_machines() -> Vec<Machine> {
             name: "AMD Epyc 7452".into(),
             microarch: "Zen 2 (Rome), NPS4".into(),
             cores: 8,
+            domains_per_socket: 4,
             freq_ghz: 2.35,
             simd_bytes: 32,
             ld_per_cy: 2.0,
@@ -338,6 +355,40 @@ mod tests {
             assert_eq!(MachineId::parse(id.key()).unwrap(), id);
         }
         assert!(MachineId::parse("power9").is_err());
+    }
+
+    #[test]
+    fn parse_accepts_paper_spellings_and_aliases() {
+        // The paper writes "BDW-1", "BDW-2", "CLX", "Rome" — all must parse,
+        // in any case, with surrounding whitespace.
+        let aliases: [(&str, MachineId); 12] = [
+            ("BDW-1", MachineId::Bdw1),
+            ("broadwell-1", MachineId::Bdw1),
+            (" bdw1 ", MachineId::Bdw1),
+            ("BDW-2", MachineId::Bdw2),
+            ("broadwell-2", MachineId::Bdw2),
+            ("CLX", MachineId::Clx),
+            ("clx-sp", MachineId::Clx),
+            ("cascade-lake", MachineId::Clx),
+            ("Rome", MachineId::Rome),
+            ("rome-nps4", MachineId::Rome),
+            ("EPYC", MachineId::Rome),
+            ("zen2", MachineId::Rome),
+        ];
+        for (name, want) in aliases {
+            assert_eq!(MachineId::parse(name).unwrap(), want, "alias '{name}'");
+            assert_eq!(machine_by_name(name).unwrap().id, want);
+        }
+    }
+
+    #[test]
+    fn domains_per_socket_matches_table1() {
+        // NPS4 Rome has four ccNUMA domains per socket; the Intel chips are
+        // monolithic.
+        for m in builtin_machines() {
+            let want = if m.id == MachineId::Rome { 4 } else { 1 };
+            assert_eq!(m.domains_per_socket, want, "{}", m.name);
+        }
     }
 
     #[test]

@@ -23,6 +23,7 @@ use crate::error::{Error, Result};
 use crate::kernels::KernelId;
 use crate::scenario::{CharCache, CharSource};
 use crate::timeline;
+use crate::topology::{Placement, RankLayout, Topology};
 
 /// Co-simulation configuration.
 #[derive(Debug, Clone)]
@@ -80,6 +81,9 @@ pub struct CoSimEngine<'a> {
     /// `(f, b_s[GB/s])` per program kernel, served by the characterization
     /// cache (ECM route by default).
     chars: HashMap<KernelId, (f64, f64)>,
+    /// Rank→ccNUMA-domain layout (the degenerate single-domain layout
+    /// unless built with [`CoSimEngine::with_topology`]).
+    layout: RankLayout,
 }
 
 impl<'a> CoSimEngine<'a> {
@@ -112,6 +116,43 @@ impl<'a> CoSimEngine<'a> {
                 machine.cores
             )));
         }
+        CoSimEngine::build(machine, program, n_ranks, config, source, RankLayout::single(n_ranks))
+    }
+
+    /// Build an engine on a multi-domain topology: `placement` assigns the
+    /// ranks to ccNUMA domains (compact fills domains in order, scatter
+    /// round-robins) and the timeline engine runs one contention timeline
+    /// per domain. A full NPS4 Rome socket is
+    /// `CoSimEngine::with_topology(&m, &Topology::socket(&m), Placement::Compact, ...)`.
+    pub fn with_topology(
+        machine: &'a Machine,
+        topology: &Topology,
+        placement: Placement,
+        program: Program,
+        n_ranks: usize,
+        config: CoSimConfig,
+        source: &CharSource,
+    ) -> Result<Self> {
+        if machine.id != topology.base.id {
+            return Err(Error::InvalidPlan(format!(
+                "topology {} instantiates {:?}, not {:?}",
+                topology.label(),
+                topology.base.id,
+                machine.id
+            )));
+        }
+        let layout = placement.rank_layout(topology, n_ranks)?;
+        CoSimEngine::build(machine, program, n_ranks, config, source, layout)
+    }
+
+    fn build(
+        machine: &'a Machine,
+        program: Program,
+        n_ranks: usize,
+        config: CoSimConfig,
+        source: &CharSource,
+        layout: RankLayout,
+    ) -> Result<Self> {
         let mut kernels: Vec<KernelId> = program
             .phases
             .iter()
@@ -127,7 +168,7 @@ impl<'a> CoSimEngine<'a> {
             .into_iter()
             .map(|(k, m)| (k, (m.f, m.bs_gbs)))
             .collect();
-        Ok(CoSimEngine { machine, program, n_ranks, config, chars })
+        Ok(CoSimEngine { machine, program, n_ranks, config, chars, layout })
     }
 
     /// The characterizations in deterministic (kernel-key) slot order.
@@ -141,15 +182,24 @@ impl<'a> CoSimEngine<'a> {
         out
     }
 
-    /// Run the co-simulation on the event-driven timeline engine.
+    /// Run the co-simulation on the event-driven timeline engine (one
+    /// contention timeline per ccNUMA domain of the layout).
     pub fn run(&self) -> CoSimResult {
-        timeline::simulate(&self.program, self.n_ranks, &self.config, &self.chars_dense())
+        timeline::simulate_placed(
+            &self.program,
+            self.n_ranks,
+            &self.config,
+            &self.chars_dense(),
+            &self.layout,
+        )
     }
 
     /// Run the legacy fixed-`dt` stepper (golden reference; tests and the
-    /// `legacy-stepper` feature only).
+    /// `legacy-stepper` feature only). The stepper predates the topology
+    /// layer and models a single contention domain.
     #[cfg(any(test, feature = "legacy-stepper"))]
     pub fn run_legacy(&self) -> CoSimResult {
+        assert!(self.layout.is_single(), "legacy stepper is single-domain only");
         crate::desync::legacy::run_stepped(&self.program, self.n_ranks, &self.config, &self.chars)
     }
 }
@@ -238,6 +288,72 @@ mod tests {
         let m = machine(MachineId::Rome);
         let prog = hpcg_program(HpcgVariant::Plain, 16, 1);
         assert!(CoSimEngine::new(&m, prog, 9, small_config()).is_err());
+    }
+
+    #[test]
+    fn full_rome_socket_runs_four_domain_timelines() {
+        // 32 ranks on the 4-domain NPS4 socket — impossible pre-topology
+        // (the single-domain path rejects ranks > 8).
+        let m = machine(MachineId::Rome);
+        let prog = hpcg_program(HpcgVariant::Plain, 32, 1);
+        let topo = Topology::socket(&m);
+        let eng = CoSimEngine::with_topology(
+            &m,
+            &topo,
+            Placement::Compact,
+            prog,
+            32,
+            small_config(),
+            &CharSource::Ecm,
+        )
+        .unwrap();
+        let r = eng.run();
+        assert!(r.finish_s.iter().all(|f| f.is_finite()), "finish: {:?}", r.finish_s);
+        // Lockstep start, identical per-domain composition, no noise: the
+        // whole socket stays synchronized.
+        let min = r.finish_s.iter().cloned().fold(f64::MAX, f64::min);
+        let max = r.finish_s.iter().cloned().fold(0.0, f64::max);
+        assert!(max - min < 1e-12, "spread {}", max - min);
+        // Ranks beyond the socket still fail.
+        let prog2 = hpcg_program(HpcgVariant::Plain, 32, 1);
+        assert!(CoSimEngine::with_topology(
+            &m,
+            &topo,
+            Placement::Compact,
+            prog2,
+            33,
+            small_config(),
+            &CharSource::Ecm,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn single_domain_topology_matches_plain_engine_bitwise() {
+        let m = machine(MachineId::Clx);
+        let prog = hpcg_program(HpcgVariant::Modified, 32, 1);
+        let mut cfg = small_config();
+        cfg.initial_stagger_s = 1e-3;
+        let plain = CoSimEngine::new(&m, prog.clone(), 6, cfg.clone()).unwrap();
+        let topo = Topology::single(&m);
+        let placed = CoSimEngine::with_topology(
+            &m,
+            &topo,
+            Placement::Scatter,
+            prog,
+            6,
+            cfg,
+            &CharSource::Ecm,
+        )
+        .unwrap();
+        let (a, b) = (plain.run(), placed.run());
+        assert_eq!(a.trace.records.len(), b.trace.records.len());
+        for (x, y) in a.trace.records.iter().zip(&b.trace.records) {
+            assert_eq!(x.rank, y.rank);
+            assert_eq!(x.t_start.to_bits(), y.t_start.to_bits());
+            assert_eq!(x.t_end.to_bits(), y.t_end.to_bits());
+        }
+        assert_eq!(a.events, b.events);
     }
 
     #[test]

@@ -26,6 +26,20 @@ pub enum Error {
     /// An experiment plan is inconsistent (e.g. thread counts exceed domain).
     InvalidPlan(String),
 
+    /// A workload-mix / scenario spec failed to parse. Carries the full
+    /// spec, the byte offset of the offending token, what the parser
+    /// expected there, and what it found instead.
+    MixParse {
+        /// The complete spec string handed to the parser.
+        spec: String,
+        /// Byte offset of the offending token within `spec`.
+        pos: usize,
+        /// Expected token class (e.g. "core count").
+        expected: String,
+        /// The offending token (empty if the spec ended early).
+        found: String,
+    },
+
     /// The PJRT runtime failed (client creation, artifact load, execution).
     Runtime(String),
 
@@ -50,6 +64,13 @@ impl fmt::Display for Error {
             }
             Error::Config { path, msg } => write!(f, "config error in {path}: {msg}"),
             Error::InvalidPlan(msg) => write!(f, "invalid plan: {msg}"),
+            Error::MixParse { spec, pos, expected, found } => {
+                let found = if found.is_empty() { "end of input" } else { found.as_str() };
+                write!(
+                    f,
+                    "mix parse error at byte {pos} of '{spec}': expected {expected}, found {found}"
+                )
+            }
             Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
             Error::MissingArtifact(path) => {
                 write!(f, "artifact not found: {path} (run `make artifacts`)")
@@ -87,6 +108,20 @@ impl Error {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn mix_parse_error_carries_position_and_expectation() {
+        let e = Error::MixParse {
+            spec: "dcopy:".into(),
+            pos: 6,
+            expected: "core count".into(),
+            found: String::new(),
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("byte 6"), "{msg}");
+        assert!(msg.contains("core count"), "{msg}");
+        assert!(msg.contains("end of input"), "{msg}");
+    }
 
     #[test]
     fn messages_keep_key_substrings() {

@@ -14,8 +14,13 @@
 //! * [`ecm`] — the Execution-Cache-Memory model used by the paper to predict
 //!   single-core runtime, the memory request fraction `f` (Eq. 2) and the
 //!   multicore scaling behaviour,
+//! * [`topology`] — machine topology (sockets → ccNUMA domains → cores)
+//!   and work placement (compact / scatter / explicit `@dN` pinning): the
+//!   layer that turns the paper's single contention domain into a full
+//!   NPS4 Rome socket (or any socket×domain grid),
 //! * [`sharing`] — **the paper's contribution**: the analytic
-//!   bandwidth-sharing model (Eqs. 4–5) plus its multigroup generalization,
+//!   bandwidth-sharing model (Eqs. 4–5) plus its multigroup generalization
+//!   and the per-domain evaluation (`share_domains`),
 //! * [`simulator`] — the measurement substrate: a line-granularity
 //!   discrete-event simulator of a memory contention domain (stands in for
 //!   the physical BDW/CLX/Rome machines of the paper),
@@ -54,6 +59,7 @@ pub mod simulator;
 pub mod stats;
 pub mod sweep;
 pub mod timeline;
+pub mod topology;
 
 pub use error::{Error, Result};
 

@@ -9,12 +9,16 @@
 //! repro pair --machine M --k1 A --k2 B --n1 X --n2 Y [--engine E]
 //! repro scenarios [--machine M] [--engine E] [--out results/]
 //!                 [--mix "dcopy:4+ddot2:4+idle:2 / dcopy:8+stream:2"]
+//!                 [--topology domain|socket|<D>|<S>x<D>] [--placement compact|scatter]
 //!                 [--name NAME]            # k-group share tables
+//!                 # topology mixes take @dN / @scatter / @compact pins:
+//!                 #   --topology socket --mix "ddot2:4@d0+dcopy:4@d1+stream:12@scatter"
 //! repro experiment <table2|fig1|fig3|fig4|fig6|fig7|fig8|fig9|all>
 //!                  [--engine fluid|des|pjrt] [--out results/]
 //! repro hpcg [--variant plain|modified] [--machine M] [--ranks N]
+//!            [--topology domain|socket|<D>|<S>x<D>] [--placement compact|scatter]
 //!            [--engine ecm|fluid|des|pjrt]   # characterization source
-//! repro bench [--mode smoke|full] [--out results/]   # BENCH_cosim.json
+//! repro bench [--mode smoke|full] [--out results/]   # BENCH_cosim.json + BENCH_topology.json
 //! repro dump-configs <dir>              # write machine TOMLs
 //! repro selftest                        # PJRT artifact vs rust engines
 //! ```
@@ -27,15 +31,16 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::time::Instant;
 
-use membw::config::{builtin_machines, machine, machine_to_toml, MachineId};
+use membw::config::{builtin_machines, machine, machine_by_name, machine_to_toml, MachineId};
 use membw::desync::{hpcg_program, CoSimConfig, CoSimEngine, HpcgVariant, NoiseModel};
 use membw::error::Result;
 use membw::kernels::{all_kernels, kernel, KernelId};
 use membw::report::{self, ExperimentCtx};
 use membw::runtime::{ArtifactPaths, PjrtRuntime, PjrtSimExecutor, SimCase};
-use membw::scenario::{run_mixes, CharSource, Mix, Scenario};
+use membw::scenario::{run_mixes, run_mixes_on, CharSource, Mix, Scenario};
 use membw::simulator::{measure_f_bs, measure_pairing, CoreWorkload, Engine};
 use membw::sweep::{run_cases, MeasureEngine, PairingCase};
+use membw::topology::{GroupPlacement, Placement, Topology};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -92,13 +97,14 @@ fn dispatch(args: &[String]) -> Result<()> {
         "kernels" => cmd_kernels(),
         "characterize" => cmd_characterize(&flags(rest, &["engine", "out"])?),
         "pair" => cmd_pair(&flags(rest, &["machine", "k1", "k2", "n1", "n2", "engine"])?),
-        "scenarios" => {
-            cmd_scenarios(&flags(rest, &["machine", "engine", "out", "mix", "name"])?)
-        }
+        "scenarios" => cmd_scenarios(&flags(
+            rest,
+            &["machine", "engine", "out", "mix", "name", "topology", "placement"],
+        )?),
         "experiment" => cmd_experiment(rest),
         "hpcg" => cmd_hpcg(&flags(
             rest,
-            &["variant", "machine", "ranks", "nx", "iterations", "engine"],
+            &["variant", "machine", "ranks", "nx", "iterations", "engine", "topology", "placement"],
         )?),
         "bench" => cmd_bench(&flags(rest, &["mode", "out"])?),
         "dump-configs" => cmd_dump_configs(rest),
@@ -114,7 +120,10 @@ const HELP: &str = "repro — bandwidth-sharing model reproduction (Afzal/Hager/
 commands:\n  machines | kernels | characterize | pair | scenarios | experiment <id> | hpcg | bench | dump-configs <dir> | selftest\n\
 run `repro experiment all --out results/` to regenerate every table and figure;\n\
 `repro scenarios --mix \"dcopy:4+ddot2:4+idle:2\"` measures a k-group workload mix;\n\
-`repro bench` runs the fixed-seed co-sim/scenario benchmarks and writes BENCH_cosim.json.";
+`repro scenarios --machine rome --topology socket --mix \"dcopy:16@scatter+ddot2:16@scatter\"`\n\
+  resolves a mix onto the four NPS4 ccNUMA domains (per-domain + socket tables);\n\
+`repro hpcg --machine rome --topology socket` co-simulates a full 32-rank Rome socket;\n\
+`repro bench` runs the fixed-seed benchmarks and writes BENCH_cosim.json + BENCH_topology.json.";
 
 fn cmd_machines() -> Result<()> {
     println!("{}", report::table1_report());
@@ -153,7 +162,7 @@ fn cmd_characterize(f: &HashMap<String, String>) -> Result<()> {
 }
 
 fn cmd_pair(f: &HashMap<String, String>) -> Result<()> {
-    let m = machine(MachineId::parse(f.get("machine").map(String::as_str).unwrap_or("clx"))?);
+    let m = machine_by_name(f.get("machine").map(String::as_str).unwrap_or("clx"))?;
     let k1 = KernelId::parse(f.get("k1").map(String::as_str).unwrap_or("dcopy"))?;
     let k2 = KernelId::parse(f.get("k2").map(String::as_str).unwrap_or("ddot2"))?;
     let n1: usize = f.get("n1").and_then(|s| s.parse().ok()).unwrap_or(m.cores / 2);
@@ -194,15 +203,44 @@ fn cmd_pair(f: &HashMap<String, String>) -> Result<()> {
 
 /// Measure a k-group workload mix (or `/`-separated scenario) and print the
 /// per-group share table. Without `--mix`, runs the built-in demo scenario
-/// scaled to the machine.
+/// scaled to the machine. With `--topology socket` (or `<D>`, `<S>x<D>`)
+/// the mix is resolved onto the ccNUMA domains by `--placement`
+/// compact|scatter (plus any `@dN` pins in the mix) and per-domain +
+/// socket-aggregate tables are printed.
 fn cmd_scenarios(f: &HashMap<String, String>) -> Result<()> {
-    let m = machine(MachineId::parse(f.get("machine").map(String::as_str).unwrap_or("clx"))?);
+    let m = machine_by_name(f.get("machine").map(String::as_str).unwrap_or("clx"))?;
     let ctx = make_ctx(f)?;
     let scenario = match f.get("mix") {
         Some(spec) => Scenario::parse(f.get("name").map(String::as_str).unwrap_or("cli"), spec)?,
         None => Scenario::demo(&m),
     };
-    let text = report::scenario_report(&ctx, &m, &scenario)?;
+    let text = match f.get("topology") {
+        Some(spec) => {
+            let topo = Topology::parse(&m, spec)?;
+            let placement =
+                Placement::parse(f.get("placement").map(String::as_str).unwrap_or("compact"))?;
+            report::topology_scenario_report(&ctx, &topo, placement, &scenario)?
+        }
+        None => {
+            if f.contains_key("placement") {
+                return Err(membw::Error::InvalidPlan(
+                    "--placement requires --topology".into(),
+                ));
+            }
+            // Mix-embedded pins (`@dN`/`@scatter`/`@compact`) would be
+            // silently meaningless on the flat single-domain path.
+            if scenario
+                .mixes
+                .iter()
+                .any(|mx| mx.groups.iter().any(|g| g.place != GroupPlacement::Auto))
+            {
+                return Err(membw::Error::InvalidPlan(
+                    "mix placement suffixes (@dN, @scatter, @compact) require --topology".into(),
+                ));
+            }
+            report::scenario_report(&ctx, &m, &scenario)?
+        }
+    };
     println!("{text}");
     std::fs::write(
         ctx.out_dir.join(format!("scenario_{}.txt", scenario.file_stem())),
@@ -278,8 +316,22 @@ fn cmd_hpcg(f: &HashMap<String, String>) -> Result<()> {
             )));
         }
     };
-    let m = machine(MachineId::parse(f.get("machine").map(String::as_str).unwrap_or("clx"))?);
-    let ranks: usize = f.get("ranks").and_then(|s| s.parse().ok()).unwrap_or(m.cores);
+    let m = machine_by_name(f.get("machine").map(String::as_str).unwrap_or("clx"))?;
+    let topo = match f.get("topology") {
+        Some(spec) => Some(Topology::parse(&m, spec)?),
+        None => {
+            if f.contains_key("placement") {
+                return Err(membw::Error::InvalidPlan(
+                    "--placement requires --topology".into(),
+                ));
+            }
+            None
+        }
+    };
+    let placement =
+        Placement::parse(f.get("placement").map(String::as_str).unwrap_or("compact"))?;
+    let default_ranks = topo.as_ref().map(|t| t.total_cores()).unwrap_or(m.cores);
+    let ranks: usize = f.get("ranks").and_then(|s| s.parse().ok()).unwrap_or(default_ranks);
     let nx: usize = f.get("nx").and_then(|s| s.parse().ok()).unwrap_or(96);
     let iters: usize = f.get("iterations").and_then(|s| s.parse().ok()).unwrap_or(2);
     let engine_key = f.get("engine").map(String::as_str).unwrap_or("ecm");
@@ -312,15 +364,27 @@ fn cmd_hpcg(f: &HashMap<String, String>) -> Result<()> {
         neighbor_radius: 3,
         noise: NoiseModel::mild(42),
     };
-    let eng = CoSimEngine::with_source(&m, prog, ranks, cfg, &source)?;
+    let eng = match &topo {
+        Some(t) => CoSimEngine::with_topology(&m, t, placement, prog, ranks, cfg, &source)?,
+        None => CoSimEngine::with_source(&m, prog, ranks, cfg, &source)?,
+    };
     let t0 = Instant::now();
     let r = eng.run();
     let wall = t0.elapsed().as_secs_f64();
-    println!(
-        "HPCG ({variant:?}) on {}: {ranks} ranks, nx={nx}, {iters} iterations, chars: {}",
-        m.name,
-        source.name()
-    );
+    match &topo {
+        Some(t) => println!(
+            "HPCG ({variant:?}) on {} [topology {}, placement {}]: {ranks} ranks, nx={nx}, {iters} iterations, chars: {}",
+            m.name,
+            t.label(),
+            placement.name(),
+            source.name()
+        ),
+        None => println!(
+            "HPCG ({variant:?}) on {}: {ranks} ranks, nx={nx}, {iters} iterations, chars: {}",
+            m.name,
+            source.name()
+        ),
+    }
     println!(
         "simulated time: {:.3} s, {} phase records, {} events, {:.1} ms wall",
         r.t_end_s,
@@ -335,9 +399,10 @@ fn cmd_hpcg(f: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-/// Fixed-seed performance benchmarks: the Fig. 3 co-simulation and a
-/// scenario-pipeline workload. Emits `BENCH_cosim.json` under `--out` to
-/// start the perf trajectory (CI uploads it as an artifact).
+/// Fixed-seed performance benchmarks: the Fig. 3 co-simulation, a
+/// scenario-pipeline workload, and the 4-domain Rome-socket topology
+/// co-sim. Emits `BENCH_cosim.json` and `BENCH_topology.json` under
+/// `--out` (CI uploads both as artifacts).
 fn cmd_bench(f: &HashMap<String, String>) -> Result<()> {
     let out_dir = PathBuf::from(f.get("out").cloned().unwrap_or_else(|| "results".into()));
     let smoke = match f.get("mode").map(String::as_str) {
@@ -449,6 +514,101 @@ fn cmd_bench(f: &HashMap<String, String>) -> Result<()> {
         scen_wall * 1e3,
         cases_per_s
     );
+
+    // --- topology: a full NPS4 Rome socket (32 ranks, four concurrent
+    // per-domain contention timelines) plus a 4-domain scenario pipeline;
+    // emitted as BENCH_topology.json to start the topology perf trajectory ---
+    let rome = machine(MachineId::Rome);
+    let rome_socket = Topology::socket(&rome);
+    struct TopoRow {
+        tag: &'static str,
+        wall_s: f64,
+        events: u64,
+        records: usize,
+    }
+    let mut topo_rows: Vec<TopoRow> = Vec::new();
+    for (tag, noise) in [("noise_off", NoiseModel::off()), ("mild7", NoiseModel::mild(7))] {
+        let prog = hpcg_program(HpcgVariant::Modified, 96, 3);
+        let eng = CoSimEngine::with_topology(
+            &rome,
+            &rome_socket,
+            Placement::Compact,
+            prog,
+            rome_socket.total_cores(),
+            fig3_cfg(noise),
+            &CharSource::Ecm,
+        )?;
+        let warm = eng.run();
+        let mut walls = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let r = eng.run();
+            walls.push(t0.elapsed().as_secs_f64());
+            assert_eq!(r.events, warm.events, "topology co-sim must be deterministic");
+        }
+        let wall = membw::stats::median(&walls);
+        println!(
+            "co-sim (rome socket {tag}, 4 domains x 8 ranks): {:.3} ms wall, {} events ({:.2e} events/s), {} records",
+            wall * 1e3,
+            warm.events,
+            warm.events as f64 / wall,
+            warm.trace.records.len()
+        );
+        topo_rows.push(TopoRow {
+            tag,
+            wall_s: wall,
+            events: warm.events,
+            records: warm.trace.records.len(),
+        });
+    }
+    let topo_mix_specs = [
+        "dcopy:8@d0+ddot2:8@d1+stream:8@d2+daxpy:8@d3",
+        "schoenauer:16@scatter+ddot2:16@scatter",
+        "dcopy:32",
+    ];
+    let topo_mixes: Vec<Mix> =
+        topo_mix_specs.iter().copied().map(Mix::parse).collect::<Result<Vec<_>>>()?;
+    run_mixes_on(&rome_socket, Placement::Compact, &topo_mixes, &MeasureEngine::Fluid)?; // warm
+    let mut twalls = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        run_mixes_on(&rome_socket, Placement::Compact, &topo_mixes, &MeasureEngine::Fluid)?;
+        twalls.push(t0.elapsed().as_secs_f64());
+    }
+    let topo_scen_wall = membw::stats::median(&twalls);
+    let topo_cases_per_s = topo_mixes.len() as f64 / topo_scen_wall;
+    println!(
+        "topology scenario pipeline (fluid, rome socket): {} mixes in {:.3} ms ({:.1} cases/s)",
+        topo_mixes.len(),
+        topo_scen_wall * 1e3,
+        topo_cases_per_s
+    );
+    let topo_json_rows: Vec<String> = topo_rows
+        .iter()
+        .map(|row| {
+            format!(
+                "    {{\n      \"variant\": \"hpcg_rome_socket_32ranks_nx96_it3_{}\",\n      \"topology\": \"{}\",\n      \"placement\": \"compact\",\n      \"wall_s\": {:.6},\n      \"events\": {},\n      \"events_per_s\": {:.1},\n      \"phase_records\": {}\n    }}",
+                row.tag,
+                rome_socket.label(),
+                row.wall_s,
+                row.events,
+                row.events as f64 / row.wall_s,
+                row.records,
+            )
+        })
+        .collect();
+    let topo_json = format!(
+        "{{\n  \"mode\": \"{}\",\n  \"cosim\": [\n{}\n  ],\n  \"scenario\": {{\n    \"engine\": \"fluid\",\n    \"topology\": \"{}\",\n    \"cases\": {},\n    \"wall_s\": {:.6},\n    \"cases_per_s\": {:.1}\n  }}\n}}\n",
+        if smoke { "smoke" } else { "full" },
+        topo_json_rows.join(",\n"),
+        rome_socket.label(),
+        topo_mixes.len(),
+        topo_scen_wall,
+        topo_cases_per_s,
+    );
+    let topo_path = out_dir.join("BENCH_topology.json");
+    std::fs::write(&topo_path, &topo_json)?;
+    println!("wrote {}", topo_path.display());
 
     let json_opt = |x: Option<f64>| x.map(|v| format!("{v:.6}")).unwrap_or_else(|| "null".into());
     let cosim_json: Vec<String> = cosim_rows

@@ -7,7 +7,8 @@ use crate::config::Machine;
 use crate::error::Result;
 use crate::report::experiments::ExperimentCtx;
 use crate::report::table::AsciiTable;
-use crate::scenario::{run_scenario, Scenario};
+use crate::scenario::{run_scenario, run_scenario_on, Scenario};
+use crate::topology::{Placement, Topology};
 
 /// Run `scenario` on `machine` with the context's engine and render one
 /// share table per phase: measured vs multigroup-model per-core bandwidth
@@ -87,10 +88,140 @@ pub fn scenario_report(ctx: &ExperimentCtx, machine: &Machine, scenario: &Scenar
     Ok(out)
 }
 
+/// Run `scenario` on a multi-domain topology and render, per phase, the
+/// socket-level aggregate table plus one per-domain share table (each
+/// domain's shares are its own Eqs. 4+5 over its resident groups). Also
+/// writes `scenario_<name>_<topology>.csv` under the context's output
+/// directory.
+pub fn topology_scenario_report(
+    ctx: &ExperimentCtx,
+    topo: &Topology,
+    placement: Placement,
+    scenario: &Scenario,
+) -> Result<String> {
+    // run_scenario_on re-validates (active cores + placement split) per
+    // phase, so no separate validate_on pass here.
+    let result = run_scenario_on(topo, placement, scenario, &ctx.measure_engine())?;
+
+    let mut out = String::new();
+    writeln!(
+        out,
+        "SCENARIO '{}' on {} — topology {} ({} domains x {} cores), placement {} (engine: {})",
+        result.name,
+        topo.base.name,
+        result.topology,
+        topo.n_domains(),
+        topo.base.cores,
+        placement.name(),
+        ctx.engine_name()
+    )
+    .unwrap();
+
+    let mut worst_err = 0.0f64;
+    for (pi, phase) in result.phases.iter().enumerate() {
+        writeln!(out, "\nphase {}/{}: {}", pi + 1, result.phases.len(), phase.mix.label())
+            .unwrap();
+        let mut t = AsciiTable::new(&[
+            "group", "kernel", "n", "meas/core", "model/core", "alpha model", "err%",
+        ]);
+        for (gi, g) in phase.socket.iter().enumerate() {
+            t.row(vec![
+                format!("{gi}"),
+                g.kernel.key().to_string(),
+                g.n.to_string(),
+                format!("{:.2}", g.measured_per_core),
+                format!("{:.2}", g.model_per_core),
+                format!("{:.3}", g.model_alpha),
+                format!("{:.1}", g.error() * 100.0),
+            ]);
+        }
+        out.push_str("socket aggregate:\n");
+        out.push_str(&t.render());
+        writeln!(
+            out,
+            "total: measured {:.1} GB/s, model {:.1} GB/s",
+            phase.measured_total_gbs, phase.model_total_gbs
+        )
+        .unwrap();
+        for (did, dr) in phase.domain_ids.iter().zip(&phase.domains) {
+            writeln!(
+                out,
+                "[d{did}] {}   [{}, b_mix {:.1} GB/s]",
+                dr.mix.label(),
+                if dr.saturated { "saturated" } else { "nonsaturated" },
+                dr.b_mix_gbs
+            )
+            .unwrap();
+            let mut dt = AsciiTable::new(&[
+                "kernel", "n", "meas/core", "model/core", "alpha meas", "alpha model", "err%",
+            ]);
+            for (gi, g) in dr.groups.iter().enumerate() {
+                worst_err = worst_err.max(g.error());
+                dt.row(vec![
+                    g.kernel.key().to_string(),
+                    g.n.to_string(),
+                    format!("{:.2}", g.measured_per_core),
+                    format!("{:.2}", g.model_per_core),
+                    format!("{:.3}", dr.measured_alpha(gi)),
+                    format!("{:.3}", g.model_alpha),
+                    format!("{:.1}", g.error() * 100.0),
+                ]);
+            }
+            if dr.mix.idle_cores > 0 {
+                dt.row(vec![
+                    "(idle)".into(),
+                    dr.mix.idle_cores.to_string(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+            }
+            out.push_str(&dt.render());
+        }
+    }
+    writeln!(
+        out,
+        "\nworst per-domain per-group model error: {:.2}% (paper's two-group bound: <8%)",
+        worst_err * 100.0
+    )
+    .unwrap();
+
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    result.write_csv(&ctx.out_dir.join(format!(
+        "scenario_{}_{}.csv",
+        result.file_stem(),
+        result.topology
+    )))?;
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::{machine, MachineId};
+
+    #[test]
+    fn rome_socket_topology_report_renders_and_writes_csv() {
+        let dir = std::env::temp_dir().join("membw-topo-report");
+        let ctx = ExperimentCtx::fluid(dir.clone());
+        let m = machine(MachineId::Rome);
+        let topo = Topology::socket(&m);
+        let sc = Scenario::parse(
+            "rome-socket",
+            "dcopy:8@d0+ddot2:8@d1+stream:8@d2+daxpy:8@d3 / dcopy:16@scatter+idle:16",
+        )
+        .unwrap();
+        let text = topology_scenario_report(&ctx, &topo, Placement::Compact, &sc).unwrap();
+        assert!(text.contains("topology rome-1s4d"), "{text}");
+        assert!(text.contains("socket aggregate:"));
+        assert!(text.contains("[d0]") && text.contains("[d3]"));
+        let csv =
+            std::fs::read_to_string(dir.join("scenario_rome-socket_rome-1s4d.csv")).unwrap();
+        assert!(csv.lines().count() > 8);
+        assert!(csv.contains(",socket,"));
+    }
 
     #[test]
     fn demo_scenario_report_renders_and_writes_csv() {

@@ -14,7 +14,11 @@
 //!   every measurement pipeline, with hit/miss accounting,
 //! * [`runner`] — [`run_mixes`]/[`run_scenario`]: batched execution on the
 //!   fluid, DES, or PJRT engine, parallelized over a dependency-free worker
-//!   pool, with the multigroup prediction attached to every case,
+//!   pool, with the multigroup prediction attached to every case; and
+//!   [`run_mixes_on`]/[`run_scenario_on`]: the same pipeline over a
+//!   multi-domain [`crate::topology::Topology`] — mixes are resolved onto
+//!   ccNUMA domains by a [`crate::topology::Placement`] and each domain is
+//!   measured and modeled independently,
 //! * [`results`] — per-group measured-vs-model records with CSV/JSONL
 //!   emission.
 //!
@@ -29,6 +33,9 @@ mod runner;
 mod spec;
 
 pub use cache::{CacheStats, CharCache, CharKey, CharSource, EngineKind};
-pub use results::{GroupOutcome, MixResult, MixResultSet, ScenarioResult};
-pub use runner::{run_mixes, run_scenario, MeasureEngine};
+pub use results::{
+    GroupOutcome, MixResult, MixResultSet, ScenarioResult, TopoMixResult, TopoMixResultSet,
+    TopoScenarioResult,
+};
+pub use runner::{run_mixes, run_mixes_on, run_scenario, run_scenario_on, MeasureEngine};
 pub use spec::{slugify, GroupSpec, Mix, Scenario};

@@ -179,6 +179,162 @@ impl MixResultSet {
     }
 }
 
+/// Outcome of one socket-level mix resolved onto a multi-domain topology:
+/// per-domain [`MixResult`]s (contention is evaluated independently per
+/// ccNUMA domain) plus the socket-level aggregate per original group.
+#[derive(Debug, Clone)]
+pub struct TopoMixResult {
+    /// Machine the domains instantiate.
+    pub machine: MachineId,
+    /// Topology label (e.g. `rome-1s4d`).
+    pub topology: String,
+    /// Placement policy name the split used.
+    pub placement: &'static str,
+    /// The socket-level mix.
+    pub mix: Mix,
+    /// Ids of the domains that ran kernels, in domain order.
+    pub domain_ids: Vec<usize>,
+    /// Per-domain results, parallel to `domain_ids`.
+    pub domains: Vec<MixResult>,
+    /// For each entry of `domains`, the socket-level group index of each of
+    /// its sub-groups.
+    pub origins: Vec<Vec<usize>>,
+    /// Socket-level aggregate per original group (bandwidths summed over
+    /// domains; α is the share of the socket aggregate).
+    pub socket: Vec<GroupOutcome>,
+    /// Measured aggregate bandwidth over the whole socket, GB/s.
+    pub measured_total_gbs: f64,
+    /// Modeled aggregate bandwidth over the whole socket, GB/s.
+    pub model_total_gbs: f64,
+}
+
+impl TopoMixResult {
+    /// All per-domain per-group relative errors.
+    pub fn all_errors(&self) -> Vec<f64> {
+        self.domains.iter().flat_map(|d| d.errors()).collect()
+    }
+
+    /// CSV header matching [`TopoMixResult::to_csv_rows`]. Domain rows
+    /// carry the per-domain Eq. 5 shares; `socket` rows the aggregate.
+    pub fn csv_header() -> &'static str {
+        "machine,topology,placement,mix,domain,origin,kernel,n,meas_pc_gbs,model_pc_gbs,\
+         meas_bw_gbs,model_bw_gbs,alpha_meas,alpha_model,err"
+    }
+
+    /// One CSV row per (domain, sub-group), then one `socket` row per
+    /// original group.
+    pub fn to_csv_rows(&self) -> Vec<String> {
+        let mut rows = Vec::new();
+        for ((did, dr), origin) in self.domain_ids.iter().zip(&self.domains).zip(&self.origins) {
+            for (gi, g) in dr.groups.iter().enumerate() {
+                rows.push(format!(
+                    "{},{},{},{},d{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.5},{:.5},{:.5}",
+                    self.machine.key(),
+                    self.topology,
+                    self.placement,
+                    self.mix.label(),
+                    did,
+                    origin[gi],
+                    g.kernel.key(),
+                    g.n,
+                    g.measured_per_core,
+                    g.model_per_core,
+                    g.measured_bw_gbs,
+                    g.model_bw_gbs,
+                    dr.measured_alpha(gi),
+                    g.model_alpha,
+                    g.error(),
+                ));
+            }
+        }
+        for (gi, g) in self.socket.iter().enumerate() {
+            let alpha_meas = if self.measured_total_gbs > 0.0 {
+                g.measured_bw_gbs / self.measured_total_gbs
+            } else {
+                0.0
+            };
+            rows.push(format!(
+                "{},{},{},{},socket,{},{},{},{:.4},{:.4},{:.4},{:.4},{:.5},{:.5},{:.5}",
+                self.machine.key(),
+                self.topology,
+                self.placement,
+                self.mix.label(),
+                gi,
+                g.kernel.key(),
+                g.n,
+                g.measured_per_core,
+                g.model_per_core,
+                g.measured_bw_gbs,
+                g.model_bw_gbs,
+                alpha_meas,
+                g.model_alpha,
+                g.error(),
+            ));
+        }
+        rows
+    }
+}
+
+/// A set of topology mix results with persistence helpers.
+#[derive(Debug, Clone, Default)]
+pub struct TopoMixResultSet {
+    /// All results, in input order.
+    pub cases: Vec<TopoMixResult>,
+}
+
+impl TopoMixResultSet {
+    /// All per-domain per-group relative errors, flattened.
+    pub fn all_errors(&self) -> Vec<f64> {
+        self.cases.iter().flat_map(|c| c.all_errors()).collect()
+    }
+
+    /// Write as CSV (domain rows + socket-aggregate rows per mix).
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "{}", TopoMixResult::csv_header())?;
+        for c in &self.cases {
+            for row in c.to_csv_rows() {
+                writeln!(f, "{row}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Result of a time-phased scenario on a topology: one [`TopoMixResult`]
+/// per phase.
+#[derive(Debug, Clone)]
+pub struct TopoScenarioResult {
+    /// Scenario name.
+    pub name: String,
+    /// Machine the topology instantiates.
+    pub machine: MachineId,
+    /// Topology label.
+    pub topology: String,
+    /// Per-phase results, in time order.
+    pub phases: Vec<TopoMixResult>,
+}
+
+impl TopoScenarioResult {
+    /// All per-domain per-group relative errors over all phases.
+    pub fn all_errors(&self) -> Vec<f64> {
+        self.phases.iter().flat_map(|p| p.all_errors()).collect()
+    }
+
+    /// Safe file stem derived from the scenario name.
+    pub fn file_stem(&self) -> String {
+        crate::scenario::slugify(&self.name)
+    }
+
+    /// Write all phases as one CSV.
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        TopoMixResultSet { cases: self.phases.clone() }.write_csv(path)
+    }
+}
+
 /// Result of a time-phased scenario: one [`MixResult`] per phase.
 #[derive(Debug, Clone)]
 pub struct ScenarioResult {
@@ -272,6 +428,38 @@ mod tests {
         assert!(j.starts_with('{') && j.ends_with('}'));
         assert_eq!(j.matches('{').count(), j.matches('}').count());
         assert!(j.contains("\"mix\":\"dcopy:6+ddot2:4\""));
+    }
+
+    #[test]
+    fn topo_csv_rows_match_header_arity() {
+        let d0 = sample();
+        let socket = d0.groups.clone();
+        let topo = TopoMixResult {
+            machine: MachineId::Rome,
+            topology: "rome-1s4d".into(),
+            placement: "compact",
+            mix: d0.mix.clone(),
+            domain_ids: vec![0, 1],
+            domains: vec![d0.clone(), sample()],
+            origins: vec![vec![0, 1], vec![0, 1]],
+            socket,
+            measured_total_gbs: 2.0 * d0.measured_total_gbs,
+            model_total_gbs: 2.0 * d0.model_total_gbs,
+        };
+        let header_cols = TopoMixResult::csv_header().split(',').count();
+        let rows = topo.to_csv_rows();
+        // 2 groups x 2 domains + 2 socket rows.
+        assert_eq!(rows.len(), 6);
+        for row in &rows {
+            assert_eq!(row.split(',').count(), header_cols, "{row}");
+        }
+        assert!(rows[4].contains(",socket,"));
+        assert_eq!(topo.all_errors().len(), 4);
+        let dir = std::env::temp_dir().join("membw-topo-results-test");
+        let set = TopoMixResultSet { cases: vec![topo] };
+        set.write_csv(&dir.join("topo.csv")).unwrap();
+        let csv = std::fs::read_to_string(dir.join("topo.csv")).unwrap();
+        assert_eq!(csv.lines().count(), 1 + 6);
     }
 
     #[test]

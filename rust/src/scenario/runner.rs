@@ -22,10 +22,14 @@ use crate::error::Result;
 use crate::kernels::{kernel, KernelId};
 use crate::runtime::{PjrtSimExecutor, SimCase};
 use crate::scenario::cache::{CharCache, EngineKind};
-use crate::scenario::results::{GroupOutcome, MixResult, MixResultSet, ScenarioResult};
+use crate::scenario::results::{
+    GroupOutcome, MixResult, MixResultSet, ScenarioResult, TopoMixResult, TopoMixResultSet,
+    TopoScenarioResult,
+};
 use crate::scenario::spec::{Mix, Scenario};
 use crate::sharing::{share_multigroup, KernelGroup};
 use crate::simulator::{run_engine, CoreWorkload, Engine, KernelMeasurement};
+use crate::topology::{Placement, SplitMix, Topology};
 
 /// Measurement engine selection for a sweep or scenario run.
 pub enum MeasureEngine<'a> {
@@ -182,6 +186,31 @@ fn compose_result(
     }
 }
 
+/// Raw per-core bandwidth measurement of a batch of mixes on one contention
+/// domain, in input order (batched on PJRT, worker pool otherwise).
+fn measure_mixes(
+    machine: &Machine,
+    mixes: &[Mix],
+    engine: &MeasureEngine,
+) -> Result<Vec<Vec<f64>>> {
+    match engine {
+        MeasureEngine::Pjrt(exec) => {
+            let sim_cases: Vec<SimCase> = mixes
+                .iter()
+                .map(|mx| SimCase {
+                    machine: machine.clone(),
+                    workloads: workloads_for(machine, mx),
+                })
+                .collect();
+            exec.run(&sim_cases)
+        }
+        _ => {
+            let eng = engine.inproc().expect("non-PJRT engines are in-process");
+            Ok(par_map(mixes, |mx| run_engine(machine, &workloads_for(machine, mx), eng)))
+        }
+    }
+}
+
 /// Measure a batch of mixes on `machine` with `engine`; results are in
 /// input order, each carrying the multigroup analytic prediction.
 pub fn run_mixes(machine: &Machine, mixes: &[Mix], engine: &MeasureEngine) -> Result<MixResultSet> {
@@ -193,22 +222,7 @@ pub fn run_mixes(machine: &Machine, mixes: &[Mix], engine: &MeasureEngine) -> Re
     kernels.dedup();
     let chars = CharCache::global().characterize(machine, &kernels, engine)?;
 
-    let per_core: Vec<Vec<f64>> = match engine {
-        MeasureEngine::Pjrt(exec) => {
-            let sim_cases: Vec<SimCase> = mixes
-                .iter()
-                .map(|mx| SimCase {
-                    machine: machine.clone(),
-                    workloads: workloads_for(machine, mx),
-                })
-                .collect();
-            exec.run(&sim_cases)?
-        }
-        _ => {
-            let eng = engine.inproc().expect("non-PJRT engines are in-process");
-            par_map(mixes, |mx| run_engine(machine, &workloads_for(machine, mx), eng))
-        }
-    };
+    let per_core = measure_mixes(machine, mixes, engine)?;
 
     Ok(MixResultSet {
         cases: mixes
@@ -227,6 +241,140 @@ pub fn run_scenario(
 ) -> Result<ScenarioResult> {
     let rs = run_mixes(machine, &scenario.mixes, engine)?;
     Ok(ScenarioResult { name: scenario.name.clone(), machine: machine.id, phases: rs.cases })
+}
+
+/// Measure a batch of *socket-level* mixes on a multi-domain topology.
+///
+/// Every mix is resolved onto the domains by `placement` (explicit `@dN`
+/// pins first, then scatter, then compact — see
+/// [`crate::topology::Placement::split`]); each domain's sub-mixes are then
+/// measured and modeled **independently** — one Eqs. (4)+(5) evaluation per
+/// domain over that domain's resident groups, which is the ccNUMA
+/// contention semantics. Kernel characterization happens once on the base
+/// machine (cache-keyed); a domain with bandwidth scale `s` sees `s·b_s`
+/// (the memory request fraction `f` is a property of kernel and core
+/// microarchitecture, not of the DIMM population).
+///
+/// On [`Topology::single`] this reduces bit-identically to [`run_mixes`]
+/// (pinned by the topology conformance suite).
+pub fn run_mixes_on(
+    topo: &Topology,
+    placement: Placement,
+    mixes: &[Mix],
+    engine: &MeasureEngine,
+) -> Result<TopoMixResultSet> {
+    // split rejects empty mixes, out-of-range pins, and capacity overflow.
+    let splits: Vec<SplitMix> =
+        mixes.iter().map(|mx| placement.split(topo, mx)).collect::<Result<_>>()?;
+
+    let mut kernels: Vec<KernelId> = mixes.iter().flat_map(|m| m.kernels()).collect();
+    kernels.sort_by_key(|k| k.key());
+    kernels.dedup();
+    let base_chars = CharCache::global().characterize(&topo.base, &kernels, engine)?;
+
+    // Skeleton results; domains fill in below in domain order.
+    let mut cases: Vec<TopoMixResult> = mixes
+        .iter()
+        .map(|mx| TopoMixResult {
+            machine: topo.base.id,
+            topology: topo.label(),
+            placement: placement.name(),
+            mix: mx.clone(),
+            domain_ids: Vec::new(),
+            domains: Vec::new(),
+            origins: Vec::new(),
+            socket: Vec::new(),
+            measured_total_gbs: 0.0,
+            model_total_gbs: 0.0,
+        })
+        .collect();
+
+    for (d, dom) in topo.domains.iter().enumerate() {
+        let batch: Vec<(usize, &crate::topology::DomainMix)> = splits
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.domains[d].mix.active_cores() > 0)
+            .map(|(ci, s)| (ci, &s.domains[d]))
+            .collect();
+        if batch.is_empty() {
+            continue;
+        }
+        let dmixes: Vec<Mix> = batch.iter().map(|(_, dm)| dm.mix.clone()).collect();
+        let per_core = measure_mixes(&dom.machine, &dmixes, engine)?;
+        let chars_d: HashMap<KernelId, KernelMeasurement> = if dom.bw_scale == 1.0 {
+            base_chars.clone()
+        } else {
+            base_chars
+                .iter()
+                .map(|(k, c)| {
+                    (
+                        *k,
+                        KernelMeasurement {
+                            b1_gbs: c.b1_gbs * dom.bw_scale,
+                            bs_gbs: c.bs_gbs * dom.bw_scale,
+                            f: c.f,
+                        },
+                    )
+                })
+                .collect()
+        };
+        for ((ci, dm), pc) in batch.iter().zip(&per_core) {
+            let r = compose_result(&dom.machine, &dm.mix, pc, &chars_d);
+            let case = &mut cases[*ci];
+            case.domain_ids.push(d);
+            case.domains.push(r);
+            case.origins.push(dm.origin.clone());
+        }
+    }
+
+    // Socket-level aggregation per original group.
+    for (case, mix) in cases.iter_mut().zip(mixes) {
+        let k = mix.groups.len();
+        let mut meas = vec![0.0f64; k];
+        let mut model = vec![0.0f64; k];
+        for (dr, origin) in case.domains.iter().zip(&case.origins) {
+            for (gi, g) in dr.groups.iter().enumerate() {
+                meas[origin[gi]] += g.measured_bw_gbs;
+                model[origin[gi]] += g.model_bw_gbs;
+            }
+        }
+        let model_total: f64 = model.iter().sum();
+        case.measured_total_gbs = meas.iter().sum();
+        case.model_total_gbs = model_total;
+        case.socket = mix
+            .groups
+            .iter()
+            .enumerate()
+            .map(|(gi, g)| GroupOutcome {
+                kernel: g.kernel,
+                n: g.cores,
+                measured_bw_gbs: meas[gi],
+                measured_per_core: if g.cores > 0 { meas[gi] / g.cores as f64 } else { 0.0 },
+                model_bw_gbs: model[gi],
+                model_per_core: if g.cores > 0 { model[gi] / g.cores as f64 } else { 0.0 },
+                model_alpha: if model_total > 0.0 { model[gi] / model_total } else { 0.0 },
+            })
+            .collect();
+    }
+
+    Ok(TopoMixResultSet { cases })
+}
+
+/// Run every phase of a scenario on a topology (batched through
+/// [`run_mixes_on`]).
+pub fn run_scenario_on(
+    topo: &Topology,
+    placement: Placement,
+    scenario: &Scenario,
+    engine: &MeasureEngine,
+) -> Result<TopoScenarioResult> {
+    let rs = run_mixes_on(topo, placement, &scenario.mixes, engine)?;
+    Ok(TopoScenarioResult {
+        name: scenario.name.clone(),
+        machine: topo.base.id,
+        topology: topo.label(),
+        phases: rs.cases,
+    })
 }
 
 #[cfg(test)]
@@ -312,5 +460,96 @@ mod tests {
         let m = machine(MachineId::Rome);
         let overfull = Mix::parse("dcopy:6+ddot2:6").unwrap();
         assert!(run_mixes(&m, &[overfull], &MeasureEngine::Fluid).is_err());
+    }
+
+    #[test]
+    fn single_domain_topology_matches_flat_pipeline_bitwise() {
+        let m = machine(MachineId::Rome);
+        let topo = Topology::single(&m);
+        let mixes = vec![
+            Mix::parse("dcopy:4+ddot2:4").unwrap(),
+            Mix::parse("stream:2+vecsum:2+idle:4").unwrap(),
+        ];
+        let flat = run_mixes(&m, &mixes, &MeasureEngine::Fluid).unwrap();
+        for placement in [Placement::Compact, Placement::Scatter] {
+            let topod = run_mixes_on(&topo, placement, &mixes, &MeasureEngine::Fluid).unwrap();
+            for (t, f) in topod.cases.iter().zip(&flat.cases) {
+                assert_eq!(t.domain_ids, vec![0]);
+                assert_eq!(t.domains[0].groups.len(), f.groups.len());
+                for (a, b) in t.domains[0].groups.iter().zip(&f.groups) {
+                    assert_eq!(a.measured_per_core.to_bits(), b.measured_per_core.to_bits());
+                    assert_eq!(a.model_per_core.to_bits(), b.model_per_core.to_bits());
+                    assert_eq!(a.model_alpha.to_bits(), b.model_alpha.to_bits());
+                }
+                // Socket aggregate of one domain is that domain.
+                for (a, b) in t.socket.iter().zip(&f.groups) {
+                    assert_eq!(a.measured_bw_gbs.to_bits(), b.measured_bw_gbs.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pinned_domains_are_modeled_independently() {
+        use crate::sharing::{share_multigroup, KernelGroup};
+        let m = machine(MachineId::Rome);
+        let topo = Topology::socket(&m); // 4 domains x 8 cores
+        let mix = Mix::parse("dcopy:4@d0+ddot2:4@d0+stream:4@d1+daxpy:4@d1").unwrap();
+        let rs = run_mixes_on(&topo, Placement::Compact, &[mix], &MeasureEngine::Fluid).unwrap();
+        let case = &rs.cases[0];
+        assert_eq!(case.domain_ids, vec![0, 1]);
+        // Each domain's shares are exactly Eq. 5 over that domain's groups.
+        let get = |k| {
+            crate::scenario::CharCache::global()
+                .lookup(&(m.id, k, EngineKind::Fluid))
+                .expect("characterized by run_mixes_on")
+        };
+        for (dr, wanted) in case.domains.iter().zip([
+            [KernelId::Dcopy, KernelId::Ddot2],
+            [KernelId::Stream, KernelId::Daxpy],
+        ]) {
+            let groups: Vec<KernelGroup> = wanted
+                .iter()
+                .map(|&k| {
+                    let c = get(k);
+                    KernelGroup { n: 4, f: c.f, bs_gbs: c.bs_gbs }
+                })
+                .collect();
+            let direct = share_multigroup(&groups);
+            for (g, e) in dr.groups.iter().zip(&direct.groups) {
+                assert!(
+                    (g.model_alpha - e.alpha).abs() < 1e-12,
+                    "{:?}: alpha {} vs {}",
+                    g.kernel,
+                    g.model_alpha,
+                    e.alpha
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scaled_domain_scales_model_bandwidth() {
+        let m = machine(MachineId::Rome);
+        let nominal = Topology::build(&m, 1, 2, &[1.0, 1.0]).unwrap();
+        let scaled = Topology::build(&m, 1, 2, &[1.0, 0.5]).unwrap();
+        let mix = Mix::parse("dcopy:8@d0+dcopy:8@d1").unwrap();
+        let a = run_mixes_on(&nominal, Placement::Compact, &[mix.clone()], &MeasureEngine::Fluid)
+            .unwrap();
+        let b =
+            run_mixes_on(&scaled, Placement::Compact, &[mix], &MeasureEngine::Fluid).unwrap();
+        // Domain 0 is identical; domain 1's saturated model bandwidth halves.
+        let (a0, b0) = (&a.cases[0].domains[0], &b.cases[0].domains[0]);
+        assert_eq!(a0.groups[0].model_bw_gbs.to_bits(), b0.groups[0].model_bw_gbs.to_bits());
+        let (a1, b1) = (&a.cases[0].domains[1], &b.cases[0].domains[1]);
+        assert!(
+            (b1.groups[0].model_bw_gbs - 0.5 * a1.groups[0].model_bw_gbs).abs() < 1e-9,
+            "halved domain: {} vs {}",
+            b1.groups[0].model_bw_gbs,
+            a1.groups[0].model_bw_gbs
+        );
+        // And the measured bandwidth drops too (the simulator sees the
+        // scaled memory interface).
+        assert!(b1.groups[0].measured_bw_gbs < 0.6 * a1.groups[0].measured_bw_gbs);
     }
 }

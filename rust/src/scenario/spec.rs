@@ -11,12 +11,18 @@
 //!
 //! Mixes have a compact text form for the CLI:
 //! `"dcopy:4+ddot2:4+idle:2"`; scenarios join phases with `/`:
-//! `"dcopy:8+ddot2:8 / dcopy:4+idle:12"`.
+//! `"dcopy:8+ddot2:8 / dcopy:4+idle:12"`. On a multi-domain
+//! [`crate::topology::Topology`] each group takes an optional placement
+//! suffix — `"dcopy:12@scatter"` spreads a group over the domains,
+//! `"ddot2:4@d0+dcopy:4@d1"` pins groups to specific ccNUMA domains — and
+//! parse errors are structured ([`Error::MixParse`]: byte position plus
+//! the expected token).
 
 use crate::config::Machine;
 use crate::error::{Error, Result};
 use crate::kernels::KernelId;
 use crate::sweep::PairingCase;
+use crate::topology::{GroupPlacement, Placement, Topology};
 
 /// Reduce a user-supplied name to a safe file stem: `[A-Za-z0-9._-]` kept,
 /// everything else (path separators, spaces, ...) mapped to `-`.
@@ -40,6 +46,9 @@ pub struct GroupSpec {
     pub kernel: KernelId,
     /// Number of cores in the group.
     pub cores: usize,
+    /// Where the group goes on a multi-domain topology (`Auto` = follow
+    /// the mix-level placement policy; irrelevant on a single domain).
+    pub place: GroupPlacement,
 }
 
 /// An instantaneous workload mix: k kernel groups plus idle cores.
@@ -58,9 +67,14 @@ impl Mix {
         Mix::default()
     }
 
-    /// Add a kernel group of `cores` cores.
-    pub fn with(mut self, kernel: KernelId, cores: usize) -> Self {
-        self.groups.push(GroupSpec { kernel, cores });
+    /// Add a kernel group of `cores` cores (default placement).
+    pub fn with(self, kernel: KernelId, cores: usize) -> Self {
+        self.with_on(kernel, cores, GroupPlacement::Auto)
+    }
+
+    /// Add a kernel group with an explicit topology placement.
+    pub fn with_on(mut self, kernel: KernelId, cores: usize, place: GroupPlacement) -> Self {
+        self.groups.push(GroupSpec { kernel, cores, place });
         self
     }
 
@@ -118,12 +132,13 @@ impl Mix {
         Ok(())
     }
 
-    /// Canonical text form: `kernel:cores` joined by `+`, idle last.
+    /// Canonical text form: `kernel:cores[@place]` joined by `+`, idle
+    /// last.
     pub fn label(&self) -> String {
         let mut parts: Vec<String> = self
             .groups
             .iter()
-            .map(|g| format!("{}:{}", g.kernel.key(), g.cores))
+            .map(|g| format!("{}:{}{}", g.kernel.key(), g.cores, g.place.suffix()))
             .collect();
         if self.idle_cores > 0 {
             parts.push(format!("idle:{}", self.idle_cores));
@@ -131,37 +146,106 @@ impl Mix {
         parts.join("+")
     }
 
-    /// Parse the text form (`"dcopy:4+ddot2:4+idle:2"`; whitespace around
-    /// `+` is tolerated). Inverse of [`Mix::label`].
+    /// Parse the text form (`"dcopy:4+ddot2:4+idle:2"`, optional
+    /// `@dN`/`@scatter`/`@compact` placement suffix per group; whitespace
+    /// around `+` is tolerated). Inverse of [`Mix::label`]. Errors are
+    /// structured ([`Error::MixParse`]): byte position of the offending
+    /// token plus the token class the parser expected there.
     pub fn parse(s: &str) -> Result<Self> {
+        Mix::parse_at(s, s, 0)
+    }
+
+    /// [`Mix::parse`] on a slice of a larger spec: `full` is the complete
+    /// spec string (error context), `base` the byte offset of `s` in it.
+    pub(crate) fn parse_at(s: &str, full: &str, base: usize) -> Result<Self> {
+        let err = |pos: usize, expected: &str, found: &str| Error::MixParse {
+            spec: full.to_string(),
+            pos,
+            expected: expected.to_string(),
+            found: found.to_string(),
+        };
         let mut mix = Mix::new();
+        let mut off = 0usize;
         for part in s.split('+') {
-            let part = part.trim();
-            if part.is_empty() {
+            // Byte offset of the trimmed term within `full`.
+            let tstart = base + off + (part.len() - part.trim_start().len());
+            off += part.len() + 1;
+            let term = part.trim();
+            if term.is_empty() {
                 continue;
             }
-            let (name, count) = part.split_once(':').ok_or_else(|| {
-                Error::InvalidPlan(format!("mix term '{part}' is not 'kernel:cores'"))
-            })?;
-            let cores: usize = count.trim().parse().map_err(|_| {
-                Error::InvalidPlan(format!("bad core count in mix term '{part}'"))
-            })?;
+            let (name_raw, rest) = match term.split_once(':') {
+                Some(x) => x,
+                None => return Err(err(tstart, "'kernel:cores' term", term)),
+            };
+            let (count_raw, place_raw) = match rest.split_once('@') {
+                Some((c, p)) => (c, Some(p)),
+                None => (rest, None),
+            };
+            let count_pos =
+                tstart + name_raw.len() + 1 + (count_raw.len() - count_raw.trim_start().len());
+            let count_txt = count_raw.trim();
+            let cores: usize = count_txt
+                .parse()
+                .map_err(|_| err(count_pos, "core count", count_txt))?;
             if cores == 0 {
-                return Err(Error::InvalidPlan(format!(
-                    "mix term '{part}' has zero cores"
-                )));
+                return Err(err(count_pos, "positive core count", "0"));
             }
-            let name = name.trim();
+            let place = match place_raw {
+                None => GroupPlacement::Auto,
+                Some(p) => {
+                    let ppos = tstart
+                        + name_raw.len()
+                        + 1
+                        + count_raw.len()
+                        + 1
+                        + (p.len() - p.trim_start().len());
+                    parse_group_placement(p.trim())
+                        .ok_or_else(|| {
+                            err(ppos, "placement 'dN', 'scatter' or 'compact'", p.trim())
+                        })?
+                }
+            };
+            let name = name_raw.trim();
             if name.eq_ignore_ascii_case("idle") {
+                if place != GroupPlacement::Auto {
+                    return Err(err(
+                        tstart,
+                        "no placement suffix on idle cores (they do not contend)",
+                        term,
+                    ));
+                }
                 mix = mix.idle(cores);
             } else {
-                mix = mix.with(KernelId::parse(name)?, cores);
+                let kernel = KernelId::parse(name)
+                    .map_err(|_| err(tstart, "kernel name or 'idle'", name))?;
+                mix = mix.with_on(kernel, cores, place);
             }
         }
         if mix.groups.is_empty() && mix.idle_cores == 0 {
-            return Err(Error::InvalidPlan(format!("empty mix spec '{s}'")));
+            return Err(err(base, "at least one 'kernel:cores' term", s.trim()));
         }
         Ok(mix)
+    }
+
+    /// Validate the mix against a topology under a placement policy:
+    /// active cores present, every `@dN` pin in range, every group and the
+    /// idle cores placeable (all checked by [`Placement::split`]).
+    pub fn validate_on(&self, topo: &Topology, placement: Placement) -> Result<()> {
+        placement.split(topo, self).map(|_| ())
+    }
+}
+
+/// Parse a group-placement suffix (without the `@`).
+fn parse_group_placement(s: &str) -> Option<GroupPlacement> {
+    let t = s.to_ascii_lowercase();
+    match t.as_str() {
+        "scatter" => Some(GroupPlacement::Scatter),
+        "compact" => Some(GroupPlacement::Compact),
+        _ => t
+            .strip_prefix('d')
+            .and_then(|n| n.parse::<usize>().ok())
+            .map(GroupPlacement::Domain),
     }
 }
 
@@ -188,13 +272,19 @@ impl Scenario {
         self
     }
 
-    /// Parse a `/`-separated sequence of mix specs.
+    /// Parse a `/`-separated sequence of mix specs. Parse errors carry byte
+    /// positions relative to the full scenario spec.
     pub fn parse(name: &str, s: &str) -> Result<Self> {
-        let mixes = s
-            .split('/')
-            .filter(|p| !p.trim().is_empty())
-            .map(Mix::parse)
-            .collect::<Result<Vec<Mix>>>()?;
+        let mut mixes = Vec::new();
+        let mut off = 0usize;
+        for part in s.split('/') {
+            let start = off;
+            off += part.len() + 1;
+            if part.trim().is_empty() {
+                continue;
+            }
+            mixes.push(Mix::parse_at(part, s, start)?);
+        }
         if mixes.is_empty() {
             return Err(Error::InvalidPlan(format!("empty scenario spec '{s}'")));
         }
@@ -205,6 +295,14 @@ impl Scenario {
     pub fn validate(&self, m: &Machine) -> Result<()> {
         for mix in &self.mixes {
             mix.validate(m)?;
+        }
+        Ok(())
+    }
+
+    /// Validate every phase against a topology under a placement policy.
+    pub fn validate_on(&self, topo: &Topology, placement: Placement) -> Result<()> {
+        for mix in &self.mixes {
+            mix.validate_on(topo, placement)?;
         }
         Ok(())
     }
@@ -280,6 +378,76 @@ mod tests {
         assert!(Mix::parse("idle:0").is_err());
     }
 
+    /// Parse errors are structured: byte position + expected token.
+    #[test]
+    fn parse_errors_carry_position_and_expectation() {
+        let case = |spec: &str, want_pos: usize, want_expected: &str| {
+            match Mix::parse(spec).unwrap_err() {
+                Error::MixParse { spec: s, pos, expected, .. } => {
+                    assert_eq!(s, spec, "spec echoed");
+                    assert_eq!(pos, want_pos, "position in '{spec}'");
+                    assert!(
+                        expected.contains(want_expected),
+                        "'{spec}': expected token '{expected}' should mention '{want_expected}'"
+                    );
+                }
+                other => panic!("'{spec}': wanted MixParse, got {other}"),
+            }
+        };
+        case("dcopy:", 6, "core count");
+        case("x:4@d9", 0, "kernel name");
+        case("dcopy:4+ddot2:y", 14, "core count");
+        case("dcopy:4+ddot2", 8, "'kernel:cores'");
+        case("dcopy:0", 6, "positive core count");
+        case("dcopy:4@nowhere", 8, "placement");
+        case("idle:2@d1", 0, "idle");
+        // Positions are relative to the full scenario spec.
+        match Scenario::parse("t", "dcopy:4 / ddot2:").unwrap_err() {
+            Error::MixParse { pos, expected, .. } => {
+                assert_eq!(pos, 16);
+                assert!(expected.contains("core count"));
+            }
+            other => panic!("wanted MixParse, got {other}"),
+        }
+    }
+
+    #[test]
+    fn placement_suffixes_roundtrip() {
+        let mix = Mix::parse("ddot2:4@d0+dcopy:4@d1+stream:12@scatter+daxpy:4@compact+idle:2")
+            .unwrap();
+        assert_eq!(mix.groups[0].place, GroupPlacement::Domain(0));
+        assert_eq!(mix.groups[1].place, GroupPlacement::Domain(1));
+        assert_eq!(mix.groups[2].place, GroupPlacement::Scatter);
+        assert_eq!(mix.groups[3].place, GroupPlacement::Compact);
+        assert_eq!(
+            mix.label(),
+            "ddot2:4@d0+dcopy:4@d1+stream:12@scatter+daxpy:4@compact+idle:2"
+        );
+        assert_eq!(Mix::parse(&mix.label()).unwrap(), mix);
+    }
+
+    #[test]
+    fn validate_on_topology_checks_pins_and_capacity() {
+        let m = machine(MachineId::Rome);
+        let socket = Topology::socket(&m); // 4 domains x 8 cores
+        let ok = Mix::parse("ddot2:4@d0+dcopy:4@d1+stream:12@scatter").unwrap();
+        ok.validate_on(&socket, Placement::Compact).unwrap();
+        // Out-of-range pin: d9 on a 4-domain socket.
+        let oob = Mix::parse("dcopy:4@d9").unwrap();
+        let e = oob.validate_on(&socket, Placement::Compact).unwrap_err().to_string();
+        assert!(e.contains("d9"), "{e}");
+        // Capacity: 9 cores cannot pin to one 8-core domain.
+        assert!(Mix::parse("dcopy:9@d0")
+            .unwrap()
+            .validate_on(&socket, Placement::Compact)
+            .is_err());
+        // The whole socket is fine though.
+        Mix::parse("dcopy:32")
+            .unwrap()
+            .validate_on(&socket, Placement::Scatter)
+            .unwrap();
+    }
+
     #[test]
     fn slugify_neutralizes_path_components() {
         assert_eq!(slugify("../../tmp/evil"), "tmp-evil");
@@ -307,8 +475,14 @@ mod tests {
         let case = PairingCase { k1: KernelId::Dcopy, k2: KernelId::Ddot2, n1: 6, n2: 4 };
         let mix = Mix::from_pairing(&case);
         assert_eq!(mix.k(), 2);
-        assert_eq!(mix.groups[0], GroupSpec { kernel: KernelId::Dcopy, cores: 6 });
-        assert_eq!(mix.groups[1], GroupSpec { kernel: KernelId::Ddot2, cores: 4 });
+        assert_eq!(
+            mix.groups[0],
+            GroupSpec { kernel: KernelId::Dcopy, cores: 6, place: GroupPlacement::Auto }
+        );
+        assert_eq!(
+            mix.groups[1],
+            GroupSpec { kernel: KernelId::Ddot2, cores: 4, place: GroupPlacement::Auto }
+        );
         assert_eq!(mix.idle_cores, 0);
     }
 

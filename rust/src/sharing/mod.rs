@@ -2,7 +2,9 @@
 //!
 //! * [`model`] — Eqs. (4) and (5) for two thread groups,
 //! * [`multigroup`] — the natural k-group generalization (used by the
-//!   desynchronization co-simulator and the task-scheduler example),
+//!   desynchronization co-simulator and the task-scheduler example), plus
+//!   the per-ccNUMA-domain evaluation [`share_domains`] (domains share no
+//!   state; each gets its own Eqs. 4+5),
 //! * [`baseline`] — the naive models the paper argues against (equal share
 //!   per thread; code-balance-weighted share), kept as ablation baselines,
 //! * [`desync_predictor`] — qualitative desync/resync prediction from
@@ -19,5 +21,5 @@ mod share_cache;
 pub use baseline::{code_balance_share, equal_share, BaselineKind};
 pub use desync_predictor::{predict_skew, OverlapPartner, SkewPrediction};
 pub use model::{overlapped_saturated_bw, share_two_groups, KernelGroup, SharingPrediction};
-pub use multigroup::{share_multigroup, GroupShare, GroupShareEntry};
+pub use multigroup::{share_domains, share_multigroup, GroupShare, GroupShareEntry};
 pub use share_cache::{ShareCache, ShareCacheStats, MAX_GROUP_CORES, MAX_SLOTS};

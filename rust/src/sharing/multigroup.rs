@@ -100,12 +100,44 @@ pub fn share_multigroup(groups: &[KernelGroup]) -> GroupShare {
     GroupShare { b_mix_gbs: b_mix, groups: entries, saturated }
 }
 
+/// Evaluate the sharing model independently on every ccNUMA domain.
+///
+/// `domains[d]` lists the groups resident on domain `d`; the result is one
+/// [`GroupShare`] per domain, in order. Domains share no state — Eqs. (4)
+/// and (5) see only the groups on the same memory interface, which is the
+/// physical content of "ccNUMA domain" and what makes scatter vs. compact
+/// placement matter. A property suite pins the independence (perturbing one
+/// domain's mix leaves every other domain's shares bit-identical).
+pub fn share_domains(domains: &[Vec<KernelGroup>]) -> Vec<GroupShare> {
+    domains.iter().map(|groups| share_multigroup(groups)).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn g(n: usize, f: f64, bs: f64) -> KernelGroup {
         KernelGroup { n, f, bs_gbs: bs }
+    }
+
+    #[test]
+    fn per_domain_evaluation_is_independent() {
+        let d0 = vec![g(4, 0.84, 32.0), g(4, 0.75, 33.0)];
+        let d1 = vec![g(4, 0.30, 35.0), g(4, 0.55, 34.0)];
+        let both = share_domains(&[d0.clone(), d1.clone()]);
+        // Each domain equals its standalone evaluation, bit for bit.
+        for (joint, solo) in both.iter().zip([share_multigroup(&d0), share_multigroup(&d1)]) {
+            assert_eq!(joint.b_mix_gbs.to_bits(), solo.b_mix_gbs.to_bits());
+            for (a, b) in joint.groups.iter().zip(&solo.groups) {
+                assert_eq!(a.alpha.to_bits(), b.alpha.to_bits());
+            }
+        }
+        // Perturbing domain 0 leaves domain 1 untouched.
+        let perturbed = share_domains(&[vec![g(8, 0.9, 30.0)], d1]);
+        for (a, b) in perturbed[1].groups.iter().zip(&both[1].groups) {
+            assert_eq!(a.alpha.to_bits(), b.alpha.to_bits());
+            assert_eq!(a.per_core_gbs.to_bits(), b.per_core_gbs.to_bits());
+        }
     }
 
     #[test]

@@ -16,6 +16,14 @@
 //! is a single closed-form time (`t_complete`) compared against the event
 //! queue's head — a completion is an *event*, but never a heap entry, so a
 //! composition change costs O(#kernels) instead of queue churn.
+//!
+//! **ccNUMA topologies**: all contention state — group counts, integrals,
+//! rates, completion heaps, the memoized sharing model itself — is keyed by
+//! `(domain, kernel)`; each domain runs its own contention timeline over
+//! its resident ranks ([`simulate_placed`]) and only the event queue is
+//! shared. The single-domain [`simulate`] is the degenerate
+//! [`RankLayout::single`] case, bit-identical to the pre-topology engine
+//! (pinned by the topology conformance suite).
 
 use std::collections::HashMap;
 
@@ -24,6 +32,7 @@ use crate::desync::{NoiseStream, PhaseRecord};
 use crate::kernels::KernelId;
 use crate::sharing::ShareCache;
 use crate::timeline::event::{EventKind, EventQueue};
+use crate::topology::RankLayout;
 
 /// Relative completion slack on the drained-bytes integrals: absorbs the
 /// floating-point residue of `target - B_k` at the projected crossing (a few
@@ -116,19 +125,28 @@ struct Sim<'a> {
     collectives: HashMap<usize, usize>,
 
     queue: EventQueue,
-    share: ShareCache,
-    /// Cores currently running each kernel slot.
+    /// One memoized sharing model per ccNUMA domain (domains contend
+    /// independently; a scaled domain's cache carries its scaled b_s).
+    share: Vec<ShareCache>,
+    /// Kernel slots per domain.
+    nk: usize,
+    /// Number of ccNUMA domains.
+    nd: usize,
+    /// Domain of each rank.
+    domain_of: Vec<usize>,
+    /// Cores currently running each (domain, kernel) slot; `d * nk + k`.
     counts: Vec<u16>,
-    /// Drained-bytes integral per slot.
+    /// Drained-bytes integral per (domain, kernel) slot.
     integral: Vec<f64>,
     /// Current per-core drain rate per slot, bytes/s.
     rates: Vec<f64>,
     /// Time the integrals were last folded forward.
     t_rates: f64,
-    /// Composition changed since the last refresh.
-    dirty: bool,
-    /// The analytic next-completion time under the current composition.
-    t_complete: f64,
+    /// Per domain: composition changed since the last refresh.
+    dirty: Vec<bool>,
+    /// Per domain: the analytic next-completion time under the current
+    /// composition.
+    t_complete: Vec<f64>,
     /// Per-rank guard for lazily dropped group-heap entries.
     run_ver: Vec<u64>,
     /// Per-slot completion FIFOs.
@@ -136,7 +154,8 @@ struct Sim<'a> {
     events: u64,
 }
 
-/// Run the event-driven co-simulation.
+/// Run the event-driven co-simulation on a single contention domain (the
+/// degenerate [`RankLayout::single`] case of [`simulate_placed`]).
 ///
 /// `chars` holds `(kernel, f, b_s[GB/s])` for every kernel the program
 /// references. `config.dt_s` is ignored — the event engine has no step.
@@ -146,14 +165,47 @@ pub fn simulate(
     config: &CoSimConfig,
     chars: &[(KernelId, f64, f64)],
 ) -> CoSimResult {
-    let share = ShareCache::new(chars);
-    let nk = share.slots();
+    simulate_placed(program, n_ranks, config, chars, &RankLayout::single(n_ranks))
+}
+
+/// Run the event-driven co-simulation on a multi-domain topology.
+///
+/// `layout` assigns every rank to a ccNUMA domain (see
+/// [`crate::topology::Placement::rank_layout`]); each domain drains its
+/// resident ranks against its own memory interface — `layout.n_domains`
+/// concurrent contention timelines over one shared event queue. A domain
+/// with bandwidth scale `s` evaluates the sharing model against `s·b_s`.
+pub fn simulate_placed(
+    program: &Program,
+    n_ranks: usize,
+    config: &CoSimConfig,
+    chars: &[(KernelId, f64, f64)],
+    layout: &RankLayout,
+) -> CoSimResult {
+    let nd = layout.n_domains;
+    assert_eq!(layout.rank_domain.len(), n_ranks, "layout must place every rank");
+    assert_eq!(layout.bw_scale.len(), nd, "layout must scale every domain");
+    assert!(layout.rank_domain.iter().all(|&d| d < nd), "rank placed on missing domain");
+    let share: Vec<ShareCache> = layout
+        .bw_scale
+        .iter()
+        .map(|&s| {
+            if s == 1.0 {
+                ShareCache::new(chars)
+            } else {
+                let scaled: Vec<(KernelId, f64, f64)> =
+                    chars.iter().map(|&(k, f, bs)| (k, f, bs * s)).collect();
+                ShareCache::new(&scaled)
+            }
+        })
+        .collect();
+    let nk = share[0].slots();
     let infos: Vec<PhaseInfo> = program
         .phases
         .iter()
         .map(|p| match p {
             Phase::Kernel { kernel, volume_bytes, sync, .. } => PhaseInfo::Kernel {
-                slot: share.slot_of(*kernel).expect("program kernel not characterized"),
+                slot: share[0].slot_of(*kernel).expect("program kernel not characterized"),
                 volume: *volume_bytes,
                 sync: *sync,
             },
@@ -178,14 +230,17 @@ pub fn simulate(
         collectives: HashMap::new(),
         queue: EventQueue::new(),
         share,
-        counts: vec![0; nk],
-        integral: vec![0.0; nk],
-        rates: vec![0.0; nk],
+        nk,
+        nd,
+        domain_of: layout.rank_domain.clone(),
+        counts: vec![0; nd * nk],
+        integral: vec![0.0; nd * nk],
+        rates: vec![0.0; nd * nk],
         t_rates: 0.0,
-        dirty: false,
-        t_complete: f64::INFINITY,
+        dirty: vec![false; nd],
+        t_complete: vec![f64::INFINITY; nd],
         run_ver: vec![0; n_ranks],
-        groups: (0..nk).map(|_| std::collections::BinaryHeap::new()).collect(),
+        groups: (0..nd * nk).map(|_| std::collections::BinaryHeap::new()).collect(),
         events: 0,
     };
     sim.run()
@@ -243,40 +298,52 @@ impl Sim<'_> {
         self.t_rates = t;
     }
 
+    /// The earliest analytic completion time over all domains.
+    fn next_complete(&self) -> f64 {
+        self.t_complete.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
     /// After a composition change: new rates + the closed-form time of the
-    /// earliest projected target crossing (no queue traffic).
+    /// earliest projected target crossing (no queue traffic). Only dirty
+    /// domains are re-evaluated — a composition change on one ccNUMA
+    /// domain leaves every other domain's rates and projection untouched.
     fn refresh(&mut self, t: f64) {
-        if !self.dirty {
-            return;
-        }
-        self.dirty = false;
-        self.t_complete = f64::INFINITY;
-        if self.counts.iter().all(|&c| c == 0) {
-            return; // nothing running: no rates needed, no completion
-        }
-        self.rates.copy_from_slice(self.share.rates_bytes(&self.counts));
-        for slot in 0..self.counts.len() {
-            if self.counts[slot] == 0 || self.rates[slot] <= 0.0 {
+        for d in 0..self.nd {
+            if !self.dirty[d] {
                 continue;
             }
-            loop {
-                let entry = match self.groups[slot].peek() {
-                    Some(e) => *e,
-                    None => break,
-                };
-                if entry.ver != self.run_ver[entry.rank] {
-                    self.groups[slot].pop(); // stale: rank left the group
+            self.dirty[d] = false;
+            self.t_complete[d] = f64::INFINITY;
+            let lo = d * self.nk;
+            let hi = lo + self.nk;
+            if self.counts[lo..hi].iter().all(|&c| c == 0) {
+                continue; // nothing running here: no rates, no completion
+            }
+            self.rates[lo..hi].copy_from_slice(self.share[d].rates_bytes(&self.counts[lo..hi]));
+            for slot in lo..hi {
+                if self.counts[slot] == 0 || self.rates[slot] <= 0.0 {
                     continue;
                 }
-                let dt_c = (entry.target - self.integral[slot]).max(0.0) / self.rates[slot];
-                self.t_complete = self.t_complete.min(t + dt_c);
-                break;
+                loop {
+                    let entry = match self.groups[slot].peek() {
+                        Some(e) => *e,
+                        None => break,
+                    };
+                    if entry.ver != self.run_ver[entry.rank] {
+                        self.groups[slot].pop(); // stale: rank left the group
+                        continue;
+                    }
+                    let dt_c = (entry.target - self.integral[slot]).max(0.0) / self.rates[slot];
+                    self.t_complete[d] = self.t_complete[d].min(t + dt_c);
+                    break;
+                }
             }
         }
     }
 
     /// Put a rank into a kernel phase (or straight into a pending noise
-    /// idle, matching the stepper's deferred poll semantics).
+    /// idle, matching the stepper's deferred poll semantics). `slot` is the
+    /// rank's *global* `(domain, kernel)` slot.
     fn enter_running(
         &mut self,
         rank: usize,
@@ -304,7 +371,7 @@ impl Sim<'_> {
         self.states[rank] = RankState::Running { flat, slot, target, started };
         self.groups[slot].push(GroupEntry { target, rank, ver: self.run_ver[rank] });
         self.counts[slot] += 1;
-        self.dirty = true;
+        self.dirty[slot / self.nk] = true;
     }
 
     /// Try to move a Ready rank into its next phase.
@@ -321,7 +388,8 @@ impl Sim<'_> {
         match self.info(flat) {
             PhaseInfo::Kernel { slot, volume, sync } => {
                 if self.sync_ok(sync, rank, flat) {
-                    self.enter_running(rank, flat, slot, volume, t, t);
+                    let slot_g = self.domain_of[rank] * self.nk + slot;
+                    self.enter_running(rank, flat, slot_g, volume, t, t);
                 }
             }
             PhaseInfo::Allreduce { cost } => {
@@ -377,7 +445,7 @@ impl Sim<'_> {
                     self.completed[entry.rank] = flat as i64;
                     self.counts[rslot] -= 1;
                     self.run_ver[entry.rank] += 1;
-                    self.dirty = true;
+                    self.dirty[rslot / self.nk] = true;
                     self.states[entry.rank] = RankState::Ready { flat: flat + 1 };
                 }
             }
@@ -395,15 +463,23 @@ impl Sim<'_> {
         let mut t_end = 0.0f64;
         loop {
             let tq = self.queue.peek_time().unwrap_or(f64::INFINITY);
+            let tc = self.next_complete();
             // Strict `<`: at equal times queue events fire first (completion
             // has the lowest tie-break priority, as in the legacy stepper).
-            if self.t_complete < tq {
-                if self.t_complete > self.t_max {
+            if tc < tq {
+                if tc > self.t_max {
                     t_end = self.t_max;
                     break;
                 }
-                let t = self.t_complete;
-                self.t_complete = f64::INFINITY;
+                let t = tc;
+                // Every domain projecting this exact instant completes now;
+                // `do_completions` marks them dirty, so `refresh` rebuilds
+                // their projections (other domains keep theirs).
+                for d in 0..self.nd {
+                    if self.t_complete[d] == t {
+                        self.t_complete[d] = f64::INFINITY;
+                    }
+                }
                 self.events += 1;
                 self.fold(t);
                 t_end = t;
@@ -443,7 +519,7 @@ impl Sim<'_> {
                         let remaining = (target - self.integral[slot]).max(0.0);
                         self.counts[slot] -= 1;
                         self.run_ver[ev.idx] += 1;
-                        self.dirty = true;
+                        self.dirty[slot / self.nk] = true;
                         let dur = self.noise[ev.idx].fire(t);
                         self.states[ev.idx] = RankState::Idling {
                             flat: None,
@@ -609,6 +685,63 @@ mod tests {
         let r = simulate(&one_kernel_program(1e12), 2, &c, &[(KernelId::Ddot2, 0.2, 100.0)]);
         assert!(r.finish_s.iter().all(|f| f.is_nan()));
         assert_eq!(r.t_end_s, 1e-6);
+    }
+
+    #[test]
+    fn domains_contend_independently() {
+        // 8 ranks over 2 domains (4+4): each domain is a 4-core group on
+        // its own memory interface, so every rank's duration equals the
+        // 4-rank single-domain run — bit for bit.
+        let (f, bs) = (0.4, 100.0);
+        let volume = 2e9;
+        let prog = one_kernel_program(volume);
+        let chars = [(KernelId::Ddot2, f, bs)];
+        let solo = simulate(&prog, 4, &cfg(), &chars);
+        let layout = RankLayout {
+            n_domains: 2,
+            rank_domain: vec![0, 0, 0, 0, 1, 1, 1, 1],
+            bw_scale: vec![1.0, 1.0],
+        };
+        let placed = simulate_placed(&prog, 8, &cfg(), &chars, &layout);
+        assert_eq!(placed.trace.records.len(), 8);
+        let want = solo.trace.records[0].duration();
+        for rec in &placed.trace.records {
+            assert_eq!(rec.duration().to_bits(), want.to_bits(), "rank {}", rec.rank);
+        }
+    }
+
+    #[test]
+    fn degenerate_layout_is_bit_identical_to_simulate() {
+        let mut c = cfg();
+        c.noise = NoiseModel::mild(3);
+        let prog = one_kernel_program(7e8);
+        let chars = [(KernelId::Ddot2, 0.3, 90.0)];
+        let a = simulate(&prog, 5, &c, &chars);
+        let b = simulate_placed(&prog, 5, &c, &chars, &RankLayout::single(5));
+        assert_eq!(a.trace.records.len(), b.trace.records.len());
+        for (x, y) in a.trace.records.iter().zip(&b.trace.records) {
+            assert_eq!(x.t_start.to_bits(), y.t_start.to_bits());
+            assert_eq!(x.t_end.to_bits(), y.t_end.to_bits());
+        }
+        assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn scaled_domain_drains_proportionally_slower() {
+        // One rank per domain, unsaturated: per-core rate is f * (s * b_s),
+        // so the half-bandwidth domain takes exactly twice as long.
+        let volume = 1e9;
+        let prog = one_kernel_program(volume);
+        let chars = [(KernelId::Ddot2, 0.2, 100.0)];
+        let layout = RankLayout {
+            n_domains: 2,
+            rank_domain: vec![0, 1],
+            bw_scale: vec![1.0, 0.5],
+        };
+        let r = simulate_placed(&prog, 2, &cfg(), &chars, &layout);
+        let d0 = r.trace.records.iter().find(|x| x.rank == 0).unwrap().duration();
+        let d1 = r.trace.records.iter().find(|x| x.rank == 1).unwrap().duration();
+        assert!((d1 - 2.0 * d0).abs() < 1e-9 * d1, "{d1} vs 2x{d0}");
     }
 
     #[test]

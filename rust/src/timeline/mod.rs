@@ -15,7 +15,9 @@
 //!
 //! * [`event`] — the priority-queue event core (lazy invalidation),
 //! * [`engine`] — the drained-bytes-integral simulation core
-//!   ([`engine::simulate`]).
+//!   ([`engine::simulate`]; [`engine::simulate_placed`] keys all
+//!   contention state by ccNUMA domain, so a full NPS4 socket runs as
+//!   concurrent per-domain timelines over one shared event queue).
 //!
 //! [`crate::desync::CoSimEngine`] is the user-facing driver over this
 //! layer; the legacy stepper survives behind the `legacy-stepper` feature
@@ -24,5 +26,5 @@
 pub mod event;
 pub mod engine;
 
-pub use engine::simulate;
+pub use engine::{simulate, simulate_placed};
 pub use event::{Event, EventKind, EventQueue};

@@ -1,0 +1,297 @@
+//! Machine topology: sockets → ccNUMA domains → cores.
+//!
+//! The paper's contention unit is one ccNUMA memory domain (its Table I
+//! describes exactly one), but its Rome testbed runs NPS4 — *four* such
+//! domains per socket. A [`Topology`] makes that structure explicit: an
+//! ordered list of [`Domain`]s, each a full contention domain (a
+//! [`Machine`], possibly with a per-domain saturated-bandwidth scale for
+//! asymmetric DIMM population), grouped into sockets. Contention is
+//! evaluated *independently per domain* — that is the physical content of
+//! "ccNUMA": a core only queues against its own domain's memory interface.
+//!
+//! The single-domain [`Topology::single`] is the degenerate case every
+//! pre-topology entry point reduces to; conformance tests pin it
+//! bit-identical to the legacy single-domain paths.
+//!
+//! [`placement`] holds the other half of the layer: how work lands on the
+//! domains (compact / scatter / explicit `@dN` pinning) and the per-domain
+//! splitting of workload mixes and rank sets.
+
+mod placement;
+
+pub use placement::{DomainMix, GroupPlacement, Placement, RankLayout, SplitMix};
+
+use crate::config::Machine;
+use crate::error::{Error, Result};
+
+/// Upper bound on ccNUMA domains per topology (generous: the largest real
+/// systems are well under 100 domains across all sockets).
+pub const MAX_DOMAINS: usize = 1024;
+
+/// One ccNUMA contention domain of a topology.
+#[derive(Debug, Clone)]
+pub struct Domain {
+    /// Domain id, dense from 0 in socket order.
+    pub id: usize,
+    /// Socket the domain belongs to.
+    pub socket: usize,
+    /// Saturated-bandwidth scale relative to the machine's Table I row
+    /// (1.0 = nominal; ≠ 1.0 models asymmetric DIMM population).
+    pub bw_scale: f64,
+    /// The domain as a machine model: the base machine with memory
+    /// bandwidths scaled by `bw_scale`. Core count is per domain.
+    pub machine: Machine,
+}
+
+/// A machine topology: an ordered list of ccNUMA domains grouped into
+/// sockets, all instances of one base [`Machine`] row.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    /// The Table I row every domain instantiates.
+    pub base: Machine,
+    /// Number of sockets.
+    pub sockets: usize,
+    /// The domains, dense ids in socket order.
+    pub domains: Vec<Domain>,
+}
+
+fn domain_machine(base: &Machine, bw_scale: f64) -> Machine {
+    if bw_scale == 1.0 {
+        return base.clone();
+    }
+    let mut m = base.clone();
+    m.theor_bw_gbs *= bw_scale;
+    m.read_bw_gbs *= bw_scale;
+    m
+}
+
+impl Topology {
+    /// Build a topology of `sockets` × `domains_per_socket` domains with
+    /// per-domain bandwidth scales (`scales.len()` must equal the domain
+    /// count; pass all-1.0 for nominal domains). At most [`MAX_DOMAINS`]
+    /// domains — each domain clones a full [`Machine`], so an absurd CLI
+    /// spec must fail cleanly instead of exhausting memory.
+    pub fn build(base: &Machine, sockets: usize, domains_per_socket: usize, scales: &[f64]) -> Result<Self> {
+        let nd = sockets
+            .checked_mul(domains_per_socket)
+            .filter(|&nd| nd <= MAX_DOMAINS)
+            .ok_or_else(|| {
+                Error::InvalidPlan(format!(
+                    "topology of {sockets} x {domains_per_socket} domains exceeds the \
+                     {MAX_DOMAINS}-domain limit"
+                ))
+            })?;
+        if nd == 0 {
+            return Err(Error::InvalidPlan("topology needs at least one domain".into()));
+        }
+        if scales.len() != nd {
+            return Err(Error::InvalidPlan(format!(
+                "topology has {nd} domains but {} bandwidth scales were given",
+                scales.len()
+            )));
+        }
+        for (d, &s) in scales.iter().enumerate() {
+            if !(s.is_finite() && s > 0.0) {
+                return Err(Error::InvalidPlan(format!("bad bandwidth scale {s} for domain d{d}")));
+            }
+        }
+        let domains = scales
+            .iter()
+            .enumerate()
+            .map(|(id, &bw_scale)| Domain {
+                id,
+                socket: id / domains_per_socket,
+                bw_scale,
+                machine: domain_machine(base, bw_scale),
+            })
+            .collect();
+        Ok(Topology { base: base.clone(), sockets, domains })
+    }
+
+    /// The degenerate single-domain topology (the pre-topology model).
+    pub fn single(base: &Machine) -> Self {
+        Topology::build(base, 1, 1, &[1.0]).expect("1x1 topology is always valid")
+    }
+
+    /// One full socket: `base.domains_per_socket` nominal domains (4 on
+    /// Rome NPS4, 1 on the Intel machines).
+    pub fn socket(base: &Machine) -> Self {
+        let dps = base.domains_per_socket.max(1);
+        Topology::build(base, 1, dps, &vec![1.0; dps]).expect("socket topology is always valid")
+    }
+
+    /// `n` nominal domains on one socket (explicit domain count).
+    pub fn with_domains(base: &Machine, n: usize) -> Result<Self> {
+        Topology::build(base, 1, n, &vec![1.0; n])
+    }
+
+    /// Number of ccNUMA domains.
+    pub fn n_domains(&self) -> usize {
+        self.domains.len()
+    }
+
+    /// Total cores over all domains.
+    pub fn total_cores(&self) -> usize {
+        self.domains.iter().map(|d| d.machine.cores).sum()
+    }
+
+    /// The domain a core belongs to under the canonical dense core
+    /// numbering (cores 0..c-1 in domain 0, then domain 1, ...).
+    pub fn domain_of_core(&self, core: usize) -> Option<usize> {
+        let mut offset = 0;
+        for d in &self.domains {
+            offset += d.machine.cores;
+            if core < offset {
+                return Some(d.id);
+            }
+        }
+        None
+    }
+
+    /// Whether this is the degenerate pre-topology case: one nominal
+    /// domain.
+    pub fn is_single(&self) -> bool {
+        self.domains.len() == 1 && self.domains[0].bw_scale == 1.0
+    }
+
+    /// Per-domain bandwidth scales, in domain order.
+    pub fn bw_scales(&self) -> Vec<f64> {
+        self.domains.iter().map(|d| d.bw_scale).collect()
+    }
+
+    /// Compact display label, e.g. `rome-1s4d` (1 socket × 4 domains).
+    pub fn label(&self) -> String {
+        format!(
+            "{}-{}s{}d",
+            self.base.id.key(),
+            self.sockets,
+            self.domains.len() / self.sockets.max(1)
+        )
+    }
+
+    /// Parse a CLI topology spec against a base machine:
+    ///
+    /// * `domain` (or `single`) — one domain, the degenerate case;
+    /// * `socket` — the machine's full socket (`domains_per_socket` domains);
+    /// * `<D>` — D domains on one socket (e.g. `4`);
+    /// * `<S>x<D>` — S sockets × D domains each (e.g. `2x4`);
+    /// * an optional `@s0,s1,...` suffix with one saturated-bandwidth scale
+    ///   per domain (e.g. `4@1,1,0.9,0.95`).
+    pub fn parse(base: &Machine, spec: &str) -> Result<Self> {
+        let spec = spec.trim();
+        let (shape, scales_txt) = match spec.split_once('@') {
+            Some((s, sc)) => (s.trim(), Some(sc.trim())),
+            None => (spec, None),
+        };
+        let (sockets, dps) = match shape.to_ascii_lowercase().as_str() {
+            "domain" | "single" => (1, 1),
+            "socket" => (1, base.domains_per_socket.max(1)),
+            other => {
+                let parse_dim = |s: &str, what: &str| -> Result<usize> {
+                    match s.trim().parse::<usize>() {
+                        Ok(v) if v >= 1 => Ok(v),
+                        _ => Err(Error::InvalidPlan(format!(
+                            "bad {what} '{s}' in topology spec '{spec}' \
+                             (expected: domain, socket, <D>, or <S>x<D>)"
+                        ))),
+                    }
+                };
+                match other.split_once('x') {
+                    Some((s, d)) => (parse_dim(s, "socket count")?, parse_dim(d, "domain count")?),
+                    None => (1, parse_dim(other, "domain count")?),
+                }
+            }
+        };
+        let nd = sockets * dps;
+        let scales = match scales_txt {
+            None => vec![1.0; nd],
+            Some(txt) => txt
+                .split(',')
+                .map(|t| {
+                    t.trim().parse::<f64>().map_err(|_| {
+                        Error::InvalidPlan(format!(
+                            "bad bandwidth scale '{t}' in topology spec '{spec}'"
+                        ))
+                    })
+                })
+                .collect::<Result<Vec<f64>>>()?,
+        };
+        Topology::build(base, sockets, dps, &scales)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{machine, MachineId};
+
+    #[test]
+    fn single_topology_is_degenerate() {
+        let m = machine(MachineId::Clx);
+        let t = Topology::single(&m);
+        assert!(t.is_single());
+        assert_eq!(t.n_domains(), 1);
+        assert_eq!(t.total_cores(), m.cores);
+        // The degenerate domain is the base machine, unscaled.
+        assert_eq!(t.domains[0].machine.read_bw_gbs.to_bits(), m.read_bw_gbs.to_bits());
+    }
+
+    #[test]
+    fn rome_socket_expands_to_nps4() {
+        let m = machine(MachineId::Rome);
+        let t = Topology::socket(&m);
+        assert_eq!(t.n_domains(), 4);
+        assert_eq!(t.total_cores(), 32);
+        assert_eq!(t.label(), "rome-1s4d");
+        for d in &t.domains {
+            assert_eq!(d.socket, 0);
+            assert_eq!(d.machine.cores, 8);
+        }
+        // Intel sockets stay monolithic.
+        let clx = Topology::socket(&machine(MachineId::Clx));
+        assert_eq!(clx.n_domains(), 1);
+    }
+
+    #[test]
+    fn core_to_domain_mapping_is_dense() {
+        let t = Topology::socket(&machine(MachineId::Rome));
+        assert_eq!(t.domain_of_core(0), Some(0));
+        assert_eq!(t.domain_of_core(7), Some(0));
+        assert_eq!(t.domain_of_core(8), Some(1));
+        assert_eq!(t.domain_of_core(31), Some(3));
+        assert_eq!(t.domain_of_core(32), None);
+    }
+
+    #[test]
+    fn bandwidth_scales_apply_per_domain() {
+        let m = machine(MachineId::Rome);
+        let t = Topology::build(&m, 1, 4, &[1.0, 1.0, 0.9, 0.5]).unwrap();
+        assert!(!t.is_single());
+        assert_eq!(t.domains[0].machine.read_bw_gbs.to_bits(), m.read_bw_gbs.to_bits());
+        assert!((t.domains[2].machine.read_bw_gbs - 0.9 * m.read_bw_gbs).abs() < 1e-12);
+        assert!((t.domains[3].machine.read_bw_gbs - 0.5 * m.read_bw_gbs).abs() < 1e-12);
+        assert!(Topology::build(&m, 1, 4, &[1.0]).is_err(), "scale arity enforced");
+        assert!(Topology::build(&m, 1, 4, &[1.0, 1.0, 0.0, 1.0]).is_err(), "positive scales");
+    }
+
+    #[test]
+    fn parse_accepts_all_spec_forms() {
+        let m = machine(MachineId::Rome);
+        assert_eq!(Topology::parse(&m, "domain").unwrap().n_domains(), 1);
+        assert_eq!(Topology::parse(&m, "single").unwrap().n_domains(), 1);
+        assert_eq!(Topology::parse(&m, "socket").unwrap().n_domains(), 4);
+        assert_eq!(Topology::parse(&m, "2").unwrap().n_domains(), 2);
+        let two_socket = Topology::parse(&m, "2x4").unwrap();
+        assert_eq!(two_socket.n_domains(), 8);
+        assert_eq!(two_socket.sockets, 2);
+        assert_eq!(two_socket.domains[4].socket, 1);
+        let scaled = Topology::parse(&m, "4@1,1,0.9,0.95").unwrap();
+        assert!((scaled.domains[3].bw_scale - 0.95).abs() < 1e-12);
+        assert!(Topology::parse(&m, "0").is_err());
+        assert!(Topology::parse(&m, "4@1,1").is_err());
+        assert!(Topology::parse(&m, "fullmesh").is_err());
+        // Absurd sizes fail cleanly (no allocation, no overflow).
+        assert!(Topology::parse(&m, "1000000000x100").is_err());
+        assert!(Topology::parse(&m, "2048").is_err());
+    }
+}

@@ -1,0 +1,436 @@
+//! Work placement on a [`Topology`]: how kernel groups, idle cores, and MPI
+//! ranks land on ccNUMA domains.
+//!
+//! Three mechanisms compose:
+//!
+//! * a per-group [`GroupPlacement`] carried by the mix DSL — `@dN` pins a
+//!   group to one domain, `@scatter`/`@compact` override the mix-level
+//!   policy for that group, and the default (`Auto`) follows it;
+//! * a mix-level [`Placement`] policy (`compact` fills domains in order,
+//!   `scatter` round-robins cores over domains — OpenMP's close/spread);
+//! * [`Placement::split`] resolves both into per-domain sub-mixes, and
+//!   [`Placement::rank_layout`] does the same for co-simulation ranks.
+//!
+//! Splitting is deterministic and order-preserving: sub-mixes list their
+//! groups in original mix order, so the single-domain split of any mix is
+//! the mix itself (the degenerate path the conformance suite pins).
+
+use crate::error::{Error, Result};
+use crate::scenario::{GroupSpec, Mix};
+use crate::topology::Topology;
+
+/// Where one kernel group of a mix goes.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum GroupPlacement {
+    /// Follow the mix-level [`Placement`] policy.
+    #[default]
+    Auto,
+    /// Fill domains in order (first fit), regardless of the mix policy.
+    Compact,
+    /// Round-robin the group's cores over the domains.
+    Scatter,
+    /// Pin every core of the group to one domain (`@dN` in the DSL).
+    Domain(usize),
+}
+
+impl GroupPlacement {
+    /// DSL suffix of this placement (empty for `Auto`).
+    pub fn suffix(&self) -> String {
+        match self {
+            GroupPlacement::Auto => String::new(),
+            GroupPlacement::Compact => "@compact".into(),
+            GroupPlacement::Scatter => "@scatter".into(),
+            GroupPlacement::Domain(d) => format!("@d{d}"),
+        }
+    }
+}
+
+/// Mix-level placement policy for `Auto` groups and for co-simulation
+/// ranks.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum Placement {
+    /// Fill domains in order (OpenMP "close").
+    #[default]
+    Compact,
+    /// Round-robin over domains (OpenMP "spread").
+    Scatter,
+}
+
+impl Placement {
+    /// Parse a CLI key.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "compact" | "close" => Ok(Placement::Compact),
+            "scatter" | "spread" => Ok(Placement::Scatter),
+            other => Err(Error::InvalidPlan(format!(
+                "unknown placement '{other}' (compact, scatter)"
+            ))),
+        }
+    }
+
+    /// Short display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Placement::Compact => "compact",
+            Placement::Scatter => "scatter",
+        }
+    }
+
+    /// Split a socket-level mix into per-domain sub-mixes.
+    ///
+    /// Assignment passes, all deterministic: explicitly pinned groups
+    /// first, then scatter groups (round-robin from domain 0 over free
+    /// capacity), then compact groups (first fit in domain order), then
+    /// idle cores (compact fill). Sub-mixes keep groups in original mix
+    /// order; `origin[i]` maps sub-group `i` back to its socket-level
+    /// group.
+    pub fn split(&self, topo: &Topology, mix: &Mix) -> Result<SplitMix> {
+        if mix.active_cores() == 0 {
+            return Err(Error::InvalidPlan(format!(
+                "mix '{}' has no active cores",
+                mix.label()
+            )));
+        }
+        let nd = topo.n_domains();
+        let mut free: Vec<usize> = topo.domains.iter().map(|d| d.machine.cores).collect();
+        let mut assign = vec![vec![0usize; nd]; mix.groups.len()];
+        let overflow = |g: &GroupSpec| {
+            Error::InvalidPlan(format!(
+                "mix '{}': no free cores left for group {}:{} on topology {} ({} cores total)",
+                mix.label(),
+                g.kernel.key(),
+                g.cores,
+                topo.label(),
+                topo.total_cores(),
+            ))
+        };
+
+        // Pass 1: explicit `@dN` pins.
+        for (gi, g) in mix.groups.iter().enumerate() {
+            if let GroupPlacement::Domain(d) = g.place {
+                if d >= nd {
+                    return Err(Error::InvalidPlan(format!(
+                        "mix '{}': group {}:{} pinned to domain d{d} but topology {} has {nd} domains",
+                        mix.label(),
+                        g.kernel.key(),
+                        g.cores,
+                        topo.label(),
+                    )));
+                }
+                if free[d] < g.cores {
+                    return Err(Error::InvalidPlan(format!(
+                        "mix '{}': domain d{d} of topology {} has {} free cores, group {}:{} needs {}",
+                        mix.label(),
+                        topo.label(),
+                        free[d],
+                        g.kernel.key(),
+                        g.cores,
+                        g.cores,
+                    )));
+                }
+                free[d] -= g.cores;
+                assign[gi][d] = g.cores;
+            }
+        }
+
+        let effective = |p: GroupPlacement| match p {
+            GroupPlacement::Auto => match self {
+                Placement::Compact => GroupPlacement::Compact,
+                Placement::Scatter => GroupPlacement::Scatter,
+            },
+            other => other,
+        };
+
+        // Pass 2: scatter groups, one core at a time round-robin.
+        for (gi, g) in mix.groups.iter().enumerate() {
+            if effective(g.place) != GroupPlacement::Scatter {
+                continue;
+            }
+            let (mut d, mut left, mut stuck) = (0usize, g.cores, 0usize);
+            while left > 0 {
+                if free[d] > 0 {
+                    assign[gi][d] += 1;
+                    free[d] -= 1;
+                    left -= 1;
+                    stuck = 0;
+                } else {
+                    stuck += 1;
+                    if stuck >= nd {
+                        return Err(overflow(g));
+                    }
+                }
+                d = (d + 1) % nd;
+            }
+        }
+
+        // Pass 3: compact groups, first fit in domain order.
+        for (gi, g) in mix.groups.iter().enumerate() {
+            if effective(g.place) != GroupPlacement::Compact {
+                continue;
+            }
+            let mut left = g.cores;
+            for d in 0..nd {
+                let take = left.min(free[d]);
+                assign[gi][d] += take;
+                free[d] -= take;
+                left -= take;
+                if left == 0 {
+                    break;
+                }
+            }
+            if left > 0 {
+                return Err(overflow(g));
+            }
+        }
+
+        // Idle cores: compact fill of the remaining capacity.
+        let mut idle = vec![0usize; nd];
+        let mut left = mix.idle_cores;
+        for d in 0..nd {
+            let take = left.min(free[d]);
+            idle[d] = take;
+            free[d] -= take;
+            left -= take;
+        }
+        if left > 0 {
+            return Err(Error::InvalidPlan(format!(
+                "mix '{}': {} idle cores do not fit the remaining capacity of topology {}",
+                mix.label(),
+                mix.idle_cores,
+                topo.label(),
+            )));
+        }
+
+        // Emit per-domain sub-mixes in original group order.
+        let domains = (0..nd)
+            .map(|d| {
+                let mut sub = Mix::new();
+                let mut origin = Vec::new();
+                for (gi, g) in mix.groups.iter().enumerate() {
+                    if assign[gi][d] > 0 {
+                        sub.groups.push(GroupSpec {
+                            kernel: g.kernel,
+                            cores: assign[gi][d],
+                            place: g.place,
+                        });
+                        origin.push(gi);
+                    }
+                }
+                sub.idle_cores = idle[d];
+                DomainMix { domain: d, mix: sub, origin }
+            })
+            .collect();
+        Ok(SplitMix { domains })
+    }
+
+    /// Assign `n_ranks` co-simulation ranks to domains: compact fills
+    /// domains in order, scatter round-robins (rank r → domain r mod nd on
+    /// a uniform topology).
+    pub fn rank_layout(&self, topo: &Topology, n_ranks: usize) -> Result<RankLayout> {
+        let total = topo.total_cores();
+        if n_ranks == 0 || n_ranks > total {
+            return Err(Error::InvalidPlan(format!(
+                "{n_ranks} ranks on topology {} with {total} cores",
+                topo.label()
+            )));
+        }
+        let nd = topo.n_domains();
+        let mut free: Vec<usize> = topo.domains.iter().map(|d| d.machine.cores).collect();
+        let mut rank_domain = Vec::with_capacity(n_ranks);
+        match self {
+            Placement::Compact => {
+                let mut d = 0;
+                for _ in 0..n_ranks {
+                    while free[d] == 0 {
+                        d += 1;
+                    }
+                    rank_domain.push(d);
+                    free[d] -= 1;
+                }
+            }
+            Placement::Scatter => {
+                let mut d = 0;
+                for _ in 0..n_ranks {
+                    while free[d] == 0 {
+                        d = (d + 1) % nd;
+                    }
+                    rank_domain.push(d);
+                    free[d] -= 1;
+                    d = (d + 1) % nd;
+                }
+            }
+        }
+        Ok(RankLayout { n_domains: nd, rank_domain, bw_scale: topo.bw_scales() })
+    }
+}
+
+/// One domain's share of a split mix.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DomainMix {
+    /// Domain id.
+    pub domain: usize,
+    /// The domain-local sub-mix (may be empty).
+    pub mix: Mix,
+    /// For each sub-group, the index of its socket-level group.
+    pub origin: Vec<usize>,
+}
+
+/// A socket-level mix resolved onto a topology: one [`DomainMix`] per
+/// domain, in domain order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SplitMix {
+    /// Per-domain sub-mixes (every domain present, possibly empty).
+    pub domains: Vec<DomainMix>,
+}
+
+impl SplitMix {
+    /// Domains that actually run kernels.
+    pub fn active(&self) -> impl Iterator<Item = &DomainMix> {
+        self.domains.iter().filter(|d| d.mix.active_cores() > 0)
+    }
+}
+
+/// Rank→domain assignment of a co-simulation on a topology (the timeline
+/// engine keys its contention state by `rank_domain`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RankLayout {
+    /// Number of ccNUMA domains.
+    pub n_domains: usize,
+    /// Domain of each rank.
+    pub rank_domain: Vec<usize>,
+    /// Per-domain saturated-bandwidth scale (1.0 = nominal).
+    pub bw_scale: Vec<f64>,
+}
+
+impl RankLayout {
+    /// The degenerate layout: every rank on one nominal domain.
+    pub fn single(n_ranks: usize) -> Self {
+        RankLayout { n_domains: 1, rank_domain: vec![0; n_ranks], bw_scale: vec![1.0] }
+    }
+
+    /// Whether this is the degenerate single-domain layout.
+    pub fn is_single(&self) -> bool {
+        self.n_domains == 1 && self.bw_scale[0] == 1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{machine, MachineId};
+    use crate::kernels::KernelId;
+
+    fn rome_socket() -> Topology {
+        Topology::socket(&machine(MachineId::Rome))
+    }
+
+    #[test]
+    fn scatter_round_robins_over_domains() {
+        // 12 cores over 4x8: 3 per domain.
+        let topo = rome_socket();
+        let mix = Mix::new().with(KernelId::Dcopy, 12);
+        let split = Placement::Scatter.split(&topo, &mix).unwrap();
+        for d in 0..4 {
+            assert_eq!(split.domains[d].mix.active_cores(), 3, "domain {d}");
+            assert_eq!(split.domains[d].origin, vec![0]);
+        }
+    }
+
+    #[test]
+    fn compact_fills_domains_in_order() {
+        let topo = rome_socket();
+        let mix = Mix::new().with(KernelId::Dcopy, 12);
+        let split = Placement::Compact.split(&topo, &mix).unwrap();
+        let cores: Vec<usize> = split.domains.iter().map(|d| d.mix.active_cores()).collect();
+        assert_eq!(cores, vec![8, 4, 0, 0]);
+    }
+
+    #[test]
+    fn explicit_pins_take_priority() {
+        let topo = rome_socket();
+        let mix = Mix::new()
+            .with_on(KernelId::Ddot2, 4, GroupPlacement::Domain(0))
+            .with_on(KernelId::Dcopy, 4, GroupPlacement::Domain(1));
+        let split = Placement::Compact.split(&topo, &mix).unwrap();
+        assert_eq!(split.domains[0].mix.groups[0].kernel, KernelId::Ddot2);
+        assert_eq!(split.domains[1].mix.groups[0].kernel, KernelId::Dcopy);
+        assert_eq!(split.domains[2].mix.groups.len(), 0);
+        // Scatter fills around the pins: 2 free in d0, then round-robin.
+        let mixed = Mix::new()
+            .with_on(KernelId::Stream, 6, GroupPlacement::Domain(0))
+            .with(KernelId::Daxpy, 8);
+        let s = Placement::Scatter.split(&topo, &mixed).unwrap();
+        let daxpy: Vec<usize> = s
+            .domains
+            .iter()
+            .map(|d| {
+                d.mix
+                    .groups
+                    .iter()
+                    .filter(|g| g.kernel == KernelId::Daxpy)
+                    .map(|g| g.cores)
+                    .sum()
+            })
+            .collect();
+        assert_eq!(daxpy, vec![2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn single_domain_split_is_identity() {
+        let m = machine(MachineId::Clx);
+        let topo = Topology::single(&m);
+        let mix = Mix::new().with(KernelId::Dcopy, 7).with(KernelId::Ddot2, 7).idle(6);
+        for p in [Placement::Compact, Placement::Scatter] {
+            let split = p.split(&topo, &mix).unwrap();
+            assert_eq!(split.domains.len(), 1);
+            assert_eq!(split.domains[0].mix, mix, "degenerate split must be the mix itself");
+            assert_eq!(split.domains[0].origin, vec![0, 1]);
+        }
+    }
+
+    #[test]
+    fn capacity_and_range_errors() {
+        let topo = rome_socket();
+        // Pin beyond a domain's capacity.
+        let over = Mix::new().with_on(KernelId::Dcopy, 9, GroupPlacement::Domain(0));
+        assert!(Placement::Compact.split(&topo, &over).is_err());
+        // Pin to a nonexistent domain.
+        let oob = Mix::new().with_on(KernelId::Dcopy, 4, GroupPlacement::Domain(9));
+        let e = Placement::Compact.split(&topo, &oob).unwrap_err().to_string();
+        assert!(e.contains("d9") && e.contains("4 domains"), "{e}");
+        // Socket overflow.
+        let too_big = Mix::new().with(KernelId::Dcopy, 30).idle(4);
+        assert!(Placement::Compact.split(&topo, &too_big).is_err());
+    }
+
+    #[test]
+    fn idle_cores_fill_remaining_capacity() {
+        let topo = rome_socket();
+        let mix = Mix::new().with(KernelId::Dcopy, 30).idle(2);
+        let split = Placement::Compact.split(&topo, &mix).unwrap();
+        assert_eq!(split.domains[3].mix.idle_cores, 2);
+        assert_eq!(split.active().count(), 4);
+    }
+
+    #[test]
+    fn rank_layouts_cover_both_policies() {
+        let topo = rome_socket();
+        let compact = Placement::Compact.rank_layout(&topo, 10).unwrap();
+        assert_eq!(&compact.rank_domain[..10], &[0, 0, 0, 0, 0, 0, 0, 0, 1, 1]);
+        let scatter = Placement::Scatter.rank_layout(&topo, 10).unwrap();
+        assert_eq!(&scatter.rank_domain[..10], &[0, 1, 2, 3, 0, 1, 2, 3, 0, 1]);
+        assert!(Placement::Compact.rank_layout(&topo, 33).is_err());
+        assert!(Placement::Compact.rank_layout(&topo, 0).is_err());
+        // Degenerate layout.
+        let single = Placement::Scatter.rank_layout(&Topology::single(&machine(MachineId::Clx)), 5).unwrap();
+        assert!(single.is_single());
+        assert_eq!(single.rank_domain, vec![0; 5]);
+    }
+
+    #[test]
+    fn placement_parse() {
+        assert_eq!(Placement::parse("compact").unwrap(), Placement::Compact);
+        assert_eq!(Placement::parse(" SPREAD ").unwrap(), Placement::Scatter);
+        assert!(Placement::parse("random").is_err());
+    }
+}

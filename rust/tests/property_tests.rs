@@ -353,3 +353,104 @@ fn prop_cosim_trace_independent_of_dt_knob() {
         }
     }
 }
+
+/// Per-domain sharing model: within every domain the shares sum to 1
+/// (saturated or not — the allocator normalizes), no group beats its solo
+/// speed, and empty domains stay empty.
+#[test]
+fn prop_domain_alpha_sums_to_one_within_each_domain() {
+    use membw::sharing::share_domains;
+    let mut rng = XorShift64::new(0xD0_0A11);
+    for case in 0..CASES {
+        let nd = 1 + rng.next_below(4);
+        let domains: Vec<Vec<KernelGroup>> = (0..nd)
+            .map(|_| {
+                let k = 1 + rng.next_below(4);
+                (0..k).map(|_| random_group(&mut rng)).collect()
+            })
+            .collect();
+        let shares = share_domains(&domains);
+        assert_eq!(shares.len(), nd);
+        for (d, s) in shares.iter().enumerate() {
+            let alpha_sum: f64 = s.groups.iter().map(|g| g.alpha).sum();
+            assert!(
+                (alpha_sum - 1.0).abs() < 1e-6,
+                "case {case} domain {d}: alphas sum to {alpha_sum}"
+            );
+            for (g, e) in domains[d].iter().zip(&s.groups) {
+                assert!(e.per_core_gbs <= g.f * g.bs_gbs + 1e-6, "case {case} domain {d}");
+            }
+        }
+    }
+}
+
+/// ccNUMA independence: perturbing domain 0's mix leaves every other
+/// domain's shares bit-identical.
+#[test]
+fn prop_domains_are_independent() {
+    use membw::sharing::share_domains;
+    let mut rng = XorShift64::new(0xD0_0A12);
+    for case in 0..CASES {
+        let nd = 2 + rng.next_below(3);
+        let domains: Vec<Vec<KernelGroup>> = (0..nd)
+            .map(|_| {
+                let k = 1 + rng.next_below(4);
+                (0..k).map(|_| random_group(&mut rng)).collect()
+            })
+            .collect();
+        let before = share_domains(&domains);
+        let mut perturbed = domains.clone();
+        perturbed[0] = vec![random_group(&mut rng)];
+        let after = share_domains(&perturbed);
+        for d in 1..nd {
+            for (a, b) in before[d].groups.iter().zip(&after[d].groups) {
+                assert_eq!(
+                    a.alpha.to_bits(),
+                    b.alpha.to_bits(),
+                    "case {case}: domain {d} saw domain 0's perturbation"
+                );
+                assert_eq!(a.per_core_gbs.to_bits(), b.per_core_gbs.to_bits());
+            }
+        }
+    }
+}
+
+/// On a 1-domain machine, scatter and compact placement are the same thing:
+/// identical splits and identical rank layouts for random mixes.
+#[test]
+fn prop_scatter_equals_compact_on_single_domain() {
+    use membw::scenario::Mix;
+    use membw::topology::{Placement, Topology};
+    let pool = pairing_set();
+    let mut rng = XorShift64::new(0xD0_0A13);
+    for mid in MachineId::ALL {
+        let m = machine(mid);
+        let topo = Topology::single(&m);
+        for case in 0..50 {
+            let k = 1 + rng.next_below(3);
+            let mut mix = Mix::new();
+            let mut used = 0usize;
+            for _ in 0..k {
+                let cores = 1 + rng.next_below((m.cores - used).max(1).min(6));
+                if used + cores > m.cores {
+                    break;
+                }
+                mix = mix.with(pool[rng.next_below(pool.len())], cores);
+                used += cores;
+            }
+            if mix.active_cores() == 0 {
+                continue;
+            }
+            if used < m.cores && rng.next_below(2) == 1 {
+                mix = mix.idle(rng.next_below(m.cores - used + 1));
+            }
+            let a = Placement::Compact.split(&topo, &mix).unwrap();
+            let b = Placement::Scatter.split(&topo, &mix).unwrap();
+            assert_eq!(a, b, "{mid:?} case {case}: split differs on one domain");
+            assert_eq!(a.domains[0].mix, mix, "{mid:?} case {case}: split is the identity");
+            let ra = Placement::Compact.rank_layout(&topo, mix.active_cores()).unwrap();
+            let rb = Placement::Scatter.rank_layout(&topo, mix.active_cores()).unwrap();
+            assert_eq!(ra, rb, "{mid:?} case {case}: rank layout differs");
+        }
+    }
+}

@@ -1,0 +1,210 @@
+//! Topology conformance suite.
+//!
+//! Two pins required by the topology layer:
+//!
+//! 1. **Degenerate equivalence** — every entry point run through a 1-domain
+//!    [`Topology`] is bit-identical to its pre-topology single-domain path:
+//!    same measured and modeled shares from the mix pipeline, same traces
+//!    from the co-simulator. The topology layer must be a strict
+//!    generalization, not a reimplementation.
+//! 2. **Per-domain model fidelity** — on the 4-domain NPS4 Rome socket with
+//!    independent per-domain mixes, every domain's bandwidth shares equal
+//!    the paper's Eq. 5 evaluated over that domain's resident groups to
+//!    1e-12, and domains are fully independent (a domain's results do not
+//!    change when other domains are populated).
+
+use membw::config::{machine, MachineId};
+use membw::desync::{hpcg_program, CoSimConfig, CoSimEngine, HpcgVariant, NoiseModel};
+use membw::scenario::{
+    run_mixes, run_mixes_on, run_scenario, run_scenario_on, CharCache, CharSource, EngineKind,
+    Mix, Scenario,
+};
+use membw::sweep::MeasureEngine;
+use membw::topology::{Placement, Topology};
+
+/// Mix pipeline, 1-domain topology: measured and modeled per-core values,
+/// shares, and totals are bit-identical to `run_mixes` on every machine.
+#[test]
+fn degenerate_mix_pipeline_is_bit_identical() {
+    for mid in MachineId::ALL {
+        let m = machine(mid);
+        let half = m.cores / 2;
+        let mixes = vec![
+            Mix::parse(&format!("dcopy:{}+ddot2:{}", half, m.cores - half)).unwrap(),
+            Mix::parse(&format!("stream:{half}+idle:{}", m.cores - half)).unwrap(),
+        ];
+        let flat = run_mixes(&m, &mixes, &MeasureEngine::Fluid).unwrap();
+        let topo = Topology::single(&m);
+        for placement in [Placement::Compact, Placement::Scatter] {
+            let placed = run_mixes_on(&topo, placement, &mixes, &MeasureEngine::Fluid).unwrap();
+            for (t, f) in placed.cases.iter().zip(&flat.cases) {
+                assert_eq!(t.domain_ids, vec![0], "{mid:?}: one active domain");
+                assert_eq!(t.domains[0].mix, f.mix, "{mid:?}: sub-mix is the mix");
+                assert_eq!(
+                    t.measured_total_gbs.to_bits(),
+                    f.measured_total_gbs.to_bits(),
+                    "{mid:?}: measured total"
+                );
+                assert_eq!(t.model_total_gbs.to_bits(), f.model_total_gbs.to_bits());
+                for (a, b) in t.domains[0].groups.iter().zip(&f.groups) {
+                    assert_eq!(a.measured_per_core.to_bits(), b.measured_per_core.to_bits());
+                    assert_eq!(a.model_per_core.to_bits(), b.model_per_core.to_bits());
+                    assert_eq!(a.model_alpha.to_bits(), b.model_alpha.to_bits());
+                }
+                for (a, b) in t.socket.iter().zip(&f.groups) {
+                    assert_eq!(a.measured_bw_gbs.to_bits(), b.measured_bw_gbs.to_bits());
+                    assert_eq!(a.model_bw_gbs.to_bits(), b.model_bw_gbs.to_bits());
+                }
+            }
+        }
+    }
+}
+
+/// Scenario pipeline, 1-domain topology: phase-by-phase equivalence.
+#[test]
+fn degenerate_scenario_pipeline_is_bit_identical() {
+    let m = machine(MachineId::Bdw1);
+    let sc = Scenario::parse("conf", "dcopy:4+ddot2:6 / dcopy:3+idle:7").unwrap();
+    let flat = run_scenario(&m, &sc, &MeasureEngine::Fluid).unwrap();
+    let placed =
+        run_scenario_on(&Topology::single(&m), Placement::Compact, &sc, &MeasureEngine::Fluid)
+            .unwrap();
+    assert_eq!(placed.phases.len(), flat.phases.len());
+    for (t, f) in placed.phases.iter().zip(&flat.phases) {
+        for (a, b) in t.socket.iter().zip(&f.groups) {
+            assert_eq!(a.measured_per_core.to_bits(), b.measured_per_core.to_bits());
+            assert_eq!(a.model_per_core.to_bits(), b.model_per_core.to_bits());
+        }
+    }
+}
+
+/// Co-simulation, 1-domain topology: noisy Fig. 3-style run produces a
+/// bit-identical trace through `with_topology` and the plain engine.
+#[test]
+fn degenerate_cosim_trace_is_bit_identical() {
+    let m = machine(MachineId::Clx);
+    let prog = hpcg_program(HpcgVariant::Modified, 48, 2);
+    let cfg = CoSimConfig {
+        dt_s: 20e-6,
+        t_max_s: 600.0,
+        initial_stagger_s: 0.2e-3,
+        neighbor_radius: 3,
+        noise: NoiseModel::mild(7),
+    };
+    let plain = CoSimEngine::new(&m, prog.clone(), 10, cfg.clone()).unwrap();
+    let placed = CoSimEngine::with_topology(
+        &m,
+        &Topology::single(&m),
+        Placement::Compact,
+        prog,
+        10,
+        cfg,
+        &CharSource::Ecm,
+    )
+    .unwrap();
+    let (a, b) = (plain.run(), placed.run());
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.trace.records.len(), b.trace.records.len());
+    for (x, y) in a.trace.records.iter().zip(&b.trace.records) {
+        assert_eq!(x.rank, y.rank);
+        assert_eq!(x.label, y.label);
+        assert_eq!(x.t_start.to_bits(), y.t_start.to_bits());
+        assert_eq!(x.t_end.to_bits(), y.t_end.to_bits());
+    }
+    for (x, y) in a.finish_s.iter().zip(&b.finish_s) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+}
+
+/// 4-domain Rome socket, independent per-domain mixes: every domain's
+/// model shares reproduce Eq. 5 (`α_i = n_i f_i / Σ n_k f_k`) over that
+/// domain's resident groups to 1e-12.
+#[test]
+fn rome_socket_reproduces_per_domain_eq5_shares() {
+    let m = machine(MachineId::Rome);
+    let topo = Topology::socket(&m);
+    // Four different two-group pairings, one per ccNUMA domain.
+    let mix = Mix::parse(
+        "dcopy:4@d0+ddot2:4@d0+stream:4@d1+daxpy:4@d1+vecsum:4@d2+dscal:4@d2+waxpby:4@d3+ddot1:4@d3",
+    )
+    .unwrap();
+    let rs = run_mixes_on(&topo, Placement::Compact, &[mix], &MeasureEngine::Fluid).unwrap();
+    let case = &rs.cases[0];
+    assert_eq!(case.domain_ids, vec![0, 1, 2, 3]);
+    let chars = |k| {
+        CharCache::global()
+            .lookup(&(m.id, k, EngineKind::Fluid))
+            .expect("characterized by run_mixes_on")
+    };
+    for dr in &case.domains {
+        assert!(dr.saturated, "8 Rome cores saturate the domain");
+        let nf: Vec<f64> = dr.groups.iter().map(|g| g.n as f64 * chars(g.kernel).f).collect();
+        let total: f64 = nf.iter().sum();
+        for (g, nf_i) in dr.groups.iter().zip(&nf) {
+            let eq5 = nf_i / total;
+            assert!(
+                (g.model_alpha - eq5).abs() < 1e-12,
+                "{:?}: alpha {} vs Eq.5 {}",
+                g.kernel,
+                g.model_alpha,
+                eq5
+            );
+        }
+    }
+}
+
+/// Domains are independent end to end: domain 0's measured and modeled
+/// results do not change when the other three domains get populated.
+#[test]
+fn rome_socket_domains_are_independent() {
+    let m = machine(MachineId::Rome);
+    let topo = Topology::socket(&m);
+    let solo = Mix::parse("dcopy:4@d0+ddot2:4@d0").unwrap();
+    let full = Mix::parse(
+        "dcopy:4@d0+ddot2:4@d0+stream:8@d1+daxpy:8@d2+schoenauer:4@d3+idle:4",
+    )
+    .unwrap();
+    let a = run_mixes_on(&topo, Placement::Compact, &[solo], &MeasureEngine::Fluid).unwrap();
+    let b = run_mixes_on(&topo, Placement::Compact, &[full], &MeasureEngine::Fluid).unwrap();
+    let (d0_solo, d0_full) = (&a.cases[0].domains[0], &b.cases[0].domains[0]);
+    assert_eq!(d0_solo.groups.len(), d0_full.groups.len());
+    for (x, y) in d0_solo.groups.iter().zip(&d0_full.groups) {
+        assert_eq!(x.kernel, y.kernel);
+        assert_eq!(x.measured_per_core.to_bits(), y.measured_per_core.to_bits());
+        assert_eq!(x.model_per_core.to_bits(), y.model_per_core.to_bits());
+        assert_eq!(x.model_alpha.to_bits(), y.model_alpha.to_bits());
+    }
+}
+
+/// Full-socket HPCG co-simulation: with identical per-domain composition
+/// the 32-rank socket behaves like four copies of the 8-rank domain.
+#[test]
+fn rome_socket_cosim_matches_single_domain_per_domain() {
+    let m = machine(MachineId::Rome);
+    let prog = hpcg_program(HpcgVariant::Plain, 48, 2);
+    let cfg = CoSimConfig { dt_s: 50e-6, t_max_s: 600.0, ..Default::default() };
+    let solo = CoSimEngine::new(&m, prog.clone(), 8, cfg.clone()).unwrap().run();
+    let topo = Topology::socket(&m);
+    let socket = CoSimEngine::with_topology(
+        &m,
+        &topo,
+        Placement::Compact,
+        prog,
+        32,
+        cfg,
+        &CharSource::Ecm,
+    )
+    .unwrap()
+    .run();
+    assert!(socket.finish_s.iter().all(|f| f.is_finite()));
+    assert_eq!(socket.trace.records.len(), 4 * solo.trace.records.len());
+    // Lockstep start, no noise, same composition everywhere: every rank of
+    // the socket finishes when the 8-rank domain run does.
+    let want = solo.finish_s[0];
+    for (r, fin) in socket.finish_s.iter().enumerate() {
+        assert!(
+            (fin - want).abs() <= 1e-12 * want.abs(),
+            "rank {r}: {fin} vs single-domain {want}"
+        );
+    }
+}
