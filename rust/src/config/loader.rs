@@ -45,6 +45,8 @@ pub fn machine_to_toml(m: &Machine) -> String {
          stream_penalty = {}\n\
          latency_residue_cy = {}\n\
          residue_on_all_lines = {}\n\
+         link_bw_gbs = {}\n\
+         link_latency_us = {}\n\
          \n[queue]\n\
          base_latency_cy = {}\n\
          depth_floor = {}\n\
@@ -69,6 +71,8 @@ pub fn machine_to_toml(m: &Machine) -> String {
         m.stream_penalty,
         m.latency_residue_cy,
         m.residue_on_all_lines,
+        m.link_bw_gbs,
+        m.link_latency_us,
         m.queue.base_latency_cy,
         m.queue.depth_floor,
         m.queue.depth_beta,
@@ -119,6 +123,14 @@ pub fn load_machine_toml(path: &Path) -> Result<Machine> {
             .parse::<usize>()
             .map_err(|e| err(format!("bad integer for '{key}': {e}")))
     };
+    let get_f_or = |section: &str, key: &str, default: f64| -> Result<f64> {
+        match map.get(&(section.to_string(), key.to_string())) {
+            Some(v) => v
+                .parse::<f64>()
+                .map_err(|e| err(format!("bad number for '{key}': {e}"))),
+            None => Ok(default),
+        }
+    };
 
     let llc = match get("", "llc")?.as_str() {
         "inclusive" => LlcKind::Inclusive,
@@ -156,6 +168,11 @@ pub fn load_machine_toml(path: &Path) -> Result<Machine> {
         stream_penalty: get_f("", "stream_penalty")?,
         latency_residue_cy: get_f("", "latency_residue_cy")?,
         residue_on_all_lines: get("", "residue_on_all_lines")? == "true",
+        // Optional with default 0 (= no inter-socket link modeled): config
+        // files predating the remote-access extension describe a machine
+        // whose remote traffic never contends on a link.
+        link_bw_gbs: get_f_or("", "link_bw_gbs", 0.0)?,
+        link_latency_us: get_f_or("", "link_latency_us", 0.0)?,
         queue: QueueParams {
             base_latency_cy: get_f("queue", "base_latency_cy")?,
             depth_floor: get_f("queue", "depth_floor")?,
@@ -187,6 +204,8 @@ mod tests {
             assert_eq!(back.overlap, m.overlap);
             assert!((back.read_bw_gbs - m.read_bw_gbs).abs() < 1e-12);
             assert!((back.queue.write_penalty - m.queue.write_penalty).abs() < 1e-12);
+            assert!((back.link_bw_gbs - m.link_bw_gbs).abs() < 1e-12);
+            assert!((back.link_latency_us - m.link_latency_us).abs() < 1e-12);
         }
     }
 
@@ -214,6 +233,25 @@ mod tests {
         std::fs::write(&path, legacy).unwrap();
         let m = load_machine_toml(&path).unwrap();
         assert_eq!(m.domains_per_socket, 1);
+    }
+
+    #[test]
+    fn missing_link_fields_default_to_unmodeled() {
+        // Pre-remote-access config files lack the link keys; they describe
+        // a machine with no inter-socket link contention.
+        let dir = std::env::temp_dir().join("membw-toml-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("no-link.toml");
+        let text = machine_to_toml(&builtin_machines()[0]);
+        let legacy: String = text
+            .lines()
+            .filter(|l| !l.starts_with("link_"))
+            .collect::<Vec<_>>()
+            .join("\n");
+        std::fs::write(&path, legacy).unwrap();
+        let m = load_machine_toml(&path).unwrap();
+        assert_eq!(m.link_bw_gbs, 0.0);
+        assert_eq!(m.link_latency_us, 0.0);
     }
 
     #[test]

@@ -162,6 +162,19 @@ pub struct Machine {
     /// lines (Intel: store buffers drain write-backs off the critical
     /// path). The Intel setting is what makes f_DSCAL > f_DAXPY there.
     pub residue_on_all_lines: bool,
+    /// Saturated bandwidth of one inter-socket link, GB/s per direction
+    /// (QPI/UPI on the Intel machines, xGMI on Rome). Not a Table I
+    /// quantity — the paper models a single contention domain; these are
+    /// spec-sheet estimates used by the remote-access extension, where each
+    /// socket pair's link is an additional contention interface. `0`
+    /// disables link contention (remote traffic then only contends on the
+    /// target domain's memory interface).
+    pub link_bw_gbs: f64,
+    /// One-way inter-socket hop latency, microseconds. Feeds the
+    /// topology-aware collective cost: each Allreduce release on an
+    /// `S`-socket topology pays an extra `(S-1) * link_latency_us` of
+    /// barrier latency. `0` disables the term.
+    pub link_latency_us: f64,
     /// Queueing calibration of the memory interface.
     pub queue: QueueParams,
 }
@@ -240,6 +253,9 @@ pub fn builtin_machines() -> Vec<Machine> {
             stream_penalty: 0.0,
             latency_residue_cy: 3.2,
             residue_on_all_lines: false,
+            // 2x QPI 9.6 GT/s between the sockets of the dual-socket node.
+            link_bw_gbs: 38.4,
+            link_latency_us: 0.6,
             queue: QueueParams {
                 base_latency_cy: 200.0,
                 depth_floor: 1.5,
@@ -268,6 +284,9 @@ pub fn builtin_machines() -> Vec<Machine> {
             // Longer ring, more cores -> higher uncontended L3/mem latency.
             latency_residue_cy: 6.0,
             residue_on_all_lines: false,
+            // Same dual-socket QPI generation as BDW-1.
+            link_bw_gbs: 38.4,
+            link_latency_us: 0.6,
             queue: QueueParams {
                 base_latency_cy: 230.0,
                 depth_floor: 1.5,
@@ -297,6 +316,9 @@ pub fn builtin_machines() -> Vec<Machine> {
             // bandwidth ("more scalable", Sect. V) — high per-line residue.
             latency_residue_cy: 6.0,
             residue_on_all_lines: false,
+            // 3x UPI 10.4 GT/s on the Gold 6248 dual-socket node.
+            link_bw_gbs: 62.4,
+            link_latency_us: 0.5,
             queue: QueueParams {
                 base_latency_cy: 220.0,
                 depth_floor: 1.5,
@@ -326,6 +348,9 @@ pub fn builtin_machines() -> Vec<Machine> {
             // memory transfer; tiny residue keeps f just below 1.
             latency_residue_cy: 0.9,
             residue_on_all_lines: true,
+            // 4x xGMI-2 between the sockets of a dual-socket Rome node.
+            link_bw_gbs: 64.0,
+            link_latency_us: 0.7,
             queue: QueueParams {
                 base_latency_cy: 260.0,
                 depth_floor: 1.5,
@@ -388,6 +413,26 @@ mod tests {
         for m in builtin_machines() {
             let want = if m.id == MachineId::Rome { 4 } else { 1 };
             assert_eq!(m.domains_per_socket, want, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn link_parameters_are_positive_and_below_memory_bandwidth() {
+        // Every built-in machine is a dual-socket part in the paper's
+        // testbed: the inter-socket link must exist, and one link must be
+        // slower than the (socket-aggregate) memory it ships lines for —
+        // otherwise remote accesses could never contend on it.
+        for m in builtin_machines() {
+            assert!(m.link_bw_gbs > 0.0, "{}", m.name);
+            assert!(m.link_latency_us > 0.0, "{}", m.name);
+            let socket_bw = m.read_bw_gbs * m.domains_per_socket as f64;
+            assert!(
+                m.link_bw_gbs < socket_bw,
+                "{}: link {} !< socket {}",
+                m.name,
+                m.link_bw_gbs,
+                socket_bw
+            );
         }
     }
 

@@ -9,7 +9,7 @@
 //! rate the multigroup sharing model (generalized Eqs. 4+5) assigns to its
 //! group, so results carry **zero** time-discretization error.
 //!
-//! The seed's fixed-`dt` stepper survives as [`CoSimEngine::run_legacy`]
+//! The seed's fixed-`dt` stepper survives as `CoSimEngine::run_legacy`
 //! (tests and the `legacy-stepper` feature only) — the golden reference the
 //! event engine is pinned against.
 
@@ -141,8 +141,47 @@ impl<'a> CoSimEngine<'a> {
                 machine.id
             )));
         }
+        // Derived base rows (SNC sub-domains) carry different core counts
+        // and bandwidths than the machine the engine characterizes on;
+        // running them silently would attach socket-row f/b_s to halved
+        // domains. SNC studies go through the scenario pipeline, which
+        // characterizes derived rows directly.
+        if machine.cores != topology.base.cores
+            || machine.read_bw_gbs.to_bits() != topology.base.read_bw_gbs.to_bits()
+        {
+            return Err(Error::InvalidPlan(format!(
+                "topology {} runs on a derived row of {:?} (SNC sub-domains); the co-simulator \
+                 characterizes on the given machine row — run SNC studies through \
+                 `repro scenarios --topology ...`",
+                topology.label(),
+                machine.id
+            )));
+        }
         let layout = placement.rank_layout(topology, n_ranks)?;
         CoSimEngine::build(machine, program, n_ranks, config, source, layout)
+    }
+
+    /// [`CoSimEngine::with_topology`] plus a uniform remote-access
+    /// fraction: every rank sends `remote_frac` of its cache-line stream
+    /// to remote ccNUMA domains (inter-socket portions contending on the
+    /// machine's QPI/UPI/xGMI links — see [`crate::sharing::remote`]).
+    /// `remote_frac = 0` is exactly [`CoSimEngine::with_topology`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_topology_remote(
+        machine: &'a Machine,
+        topology: &Topology,
+        placement: Placement,
+        remote_frac: f64,
+        program: Program,
+        n_ranks: usize,
+        config: CoSimConfig,
+        source: &CharSource,
+    ) -> Result<Self> {
+        let mut eng = CoSimEngine::with_topology(
+            machine, topology, placement, program, n_ranks, config, source,
+        )?;
+        eng.layout = eng.layout.clone().with_remote(remote_frac)?;
+        Ok(eng)
     }
 
     fn build(
@@ -322,6 +361,70 @@ mod tests {
             Placement::Compact,
             prog2,
             33,
+            small_config(),
+            &CharSource::Ecm,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn remote_cosim_zero_fraction_matches_plain_topology_bitwise() {
+        let m = machine(MachineId::Rome);
+        let topo = Topology::parse(&m, "2x4").unwrap();
+        let prog = hpcg_program(HpcgVariant::Plain, 32, 1);
+        let plain = CoSimEngine::with_topology(
+            &m,
+            &topo,
+            Placement::Compact,
+            prog.clone(),
+            16,
+            small_config(),
+            &CharSource::Ecm,
+        )
+        .unwrap();
+        let zero = CoSimEngine::with_topology_remote(
+            &m,
+            &topo,
+            Placement::Compact,
+            0.0,
+            prog.clone(),
+            16,
+            small_config(),
+            &CharSource::Ecm,
+        )
+        .unwrap();
+        let (a, b) = (plain.run(), zero.run());
+        assert_eq!(a.trace.records.len(), b.trace.records.len());
+        for (x, y) in a.trace.records.iter().zip(&b.trace.records) {
+            assert_eq!(x.t_start.to_bits(), y.t_start.to_bits());
+            assert_eq!(x.t_end.to_bits(), y.t_end.to_bits());
+        }
+        assert_eq!(a.events, b.events);
+        // A nonzero remote fraction completes too, on different timings
+        // (the stream splits re-balance every interface).
+        let remote = CoSimEngine::with_topology_remote(
+            &m,
+            &topo,
+            Placement::Compact,
+            0.5,
+            prog,
+            16,
+            small_config(),
+            &CharSource::Ecm,
+        )
+        .unwrap();
+        let r = remote.run();
+        assert!(r.finish_s.iter().all(|f| f.is_finite()), "finish: {:?}", r.finish_s);
+        assert!((r.finish_s[0] - a.finish_s[0]).abs() > 1e-12);
+        // Bad fractions are rejected at construction.
+        let prog2 = hpcg_program(HpcgVariant::Plain, 32, 1);
+        assert!(CoSimEngine::with_topology_remote(
+            &m,
+            &topo,
+            Placement::Compact,
+            1.5,
+            prog2,
+            16,
             small_config(),
             &CharSource::Ecm,
         )

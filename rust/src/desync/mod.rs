@@ -11,10 +11,10 @@
 //! changes are solved in closed form: the simulation is **event-driven**
 //! ([`crate::timeline`]) and carries zero time-discretization error.
 //!
-//! * [`program`] — phase programs and the HPCG program builder,
-//! * [`engine`] — the co-simulation driver over the timeline layer,
-//! * [`trace`] — phase traces, concurrency timelines, ASCII rendering,
-//! * [`noise`] — reproducible system-noise injection (continuous-time
+//! * `program` — phase programs and the HPCG program builder,
+//! * `engine` — the co-simulation driver over the timeline layer,
+//! * `trace` — phase traces, concurrency timelines, ASCII rendering,
+//! * `noise` — reproducible system-noise injection (continuous-time
 //!   sampler + the legacy per-`dt` poll),
 //! * `legacy` — the seed's fixed-`dt` stepper, kept temporarily as the
 //!   golden reference (tests / `legacy-stepper` feature only).

@@ -17,10 +17,13 @@
 //! * [`topology`] — machine topology (sockets → ccNUMA domains → cores)
 //!   and work placement (compact / scatter / explicit `@dN` pinning): the
 //!   layer that turns the paper's single contention domain into a full
-//!   NPS4 Rome socket (or any socket×domain grid),
+//!   NPS4 Rome socket, a Sub-NUMA-Clustered Intel socket (`snc2`/`snc4`),
+//!   or any multi-socket grid with explicit inter-socket links,
 //! * [`sharing`] — **the paper's contribution**: the analytic
-//!   bandwidth-sharing model (Eqs. 4–5) plus its multigroup generalization
-//!   and the per-domain evaluation (`share_domains`),
+//!   bandwidth-sharing model (Eqs. 4–5) plus its multigroup generalization,
+//!   the per-domain evaluation (`share_domains`), and the remote-access
+//!   extension (`sharing::remote`: cache-line streams split over home
+//!   domain, remote domains, and UPI/xGMI links),
 //! * [`simulator`] — the measurement substrate: a line-granularity
 //!   discrete-event simulator of a memory contention domain (stands in for
 //!   the physical BDW/CLX/Rome machines of the paper),
@@ -43,7 +46,9 @@
 //! * [`report`] — per-table/figure emitters (CSV + ASCII rendering), plus
 //!   the k-group scenario share tables.
 //!
-//! See `README.md` for the crate tour and the scenario-engine CLI/API.
+//! See `README.md` for the crate tour, `docs/MODEL.md` for the
+//! paper-to-code map (every equation with its implementing function), and
+//! `docs/CLI.md` for the full `repro` command reference.
 
 pub mod benchutil;
 pub mod config;

@@ -9,14 +9,17 @@
 //! repro pair --machine M --k1 A --k2 B --n1 X --n2 Y [--engine E]
 //! repro scenarios [--machine M] [--engine E] [--out results/]
 //!                 [--mix "dcopy:4+ddot2:4+idle:2 / dcopy:8+stream:2"]
-//!                 [--topology domain|socket|<D>|<S>x<D>] [--placement compact|scatter]
+//!                 [--topology domain|socket|<D>|<S>x<D>|snc<N>|<S>xsnc<N>]
+//!                 [--placement compact|scatter] [--remote-frac F]
 //!                 [--name NAME]            # k-group share tables
-//!                 # topology mixes take @dN / @scatter / @compact pins:
-//!                 #   --topology socket --mix "ddot2:4@d0+dcopy:4@d1+stream:12@scatter"
+//!                 # topology mixes take @dN / @scatter / @compact pins and
+//!                 # %r remote-access fractions:
+//!                 #   --topology 2x4 --mix "dcopy:32@scatter%r0.25+ddot2:32@scatter"
 //! repro experiment <table2|fig1|fig3|fig4|fig6|fig7|fig8|fig9|all>
 //!                  [--engine fluid|des|pjrt] [--out results/]
 //! repro hpcg [--variant plain|modified] [--machine M] [--ranks N]
-//!            [--topology domain|socket|<D>|<S>x<D>] [--placement compact|scatter]
+//!            [--topology domain|socket|<D>|<S>x<D>|snc<N>|<S>xsnc<N>]
+//!            [--placement compact|scatter] [--remote-frac F]
 //!            [--engine ecm|fluid|des|pjrt]   # characterization source
 //! repro bench [--mode smoke|full] [--out results/]   # BENCH_cosim.json + BENCH_topology.json
 //! repro dump-configs <dir>              # write machine TOMLs
@@ -99,12 +102,22 @@ fn dispatch(args: &[String]) -> Result<()> {
         "pair" => cmd_pair(&flags(rest, &["machine", "k1", "k2", "n1", "n2", "engine"])?),
         "scenarios" => cmd_scenarios(&flags(
             rest,
-            &["machine", "engine", "out", "mix", "name", "topology", "placement"],
+            &["machine", "engine", "out", "mix", "name", "topology", "placement", "remote-frac"],
         )?),
         "experiment" => cmd_experiment(rest),
         "hpcg" => cmd_hpcg(&flags(
             rest,
-            &["variant", "machine", "ranks", "nx", "iterations", "engine", "topology", "placement"],
+            &[
+                "variant",
+                "machine",
+                "ranks",
+                "nx",
+                "iterations",
+                "engine",
+                "topology",
+                "placement",
+                "remote-frac",
+            ],
         )?),
         "bench" => cmd_bench(&flags(rest, &["mode", "out"])?),
         "dump-configs" => cmd_dump_configs(rest),
@@ -122,8 +135,11 @@ run `repro experiment all --out results/` to regenerate every table and figure;\
 `repro scenarios --mix \"dcopy:4+ddot2:4+idle:2\"` measures a k-group workload mix;\n\
 `repro scenarios --machine rome --topology socket --mix \"dcopy:16@scatter+ddot2:16@scatter\"`\n\
   resolves a mix onto the four NPS4 ccNUMA domains (per-domain + socket tables);\n\
+`repro scenarios --machine rome --topology 2x4 --remote-frac 0.25 --mix \"dcopy:32@scatter+ddot2:32@scatter\"`\n\
+  runs a dual-socket Rome with remote accesses crossing the xGMI link (per-link tables);\n\
 `repro hpcg --machine rome --topology socket` co-simulates a full 32-rank Rome socket;\n\
-`repro bench` runs the fixed-seed benchmarks and writes BENCH_cosim.json + BENCH_topology.json.";
+`repro bench` runs the fixed-seed benchmarks and writes BENCH_cosim.json + BENCH_topology.json.\n\
+see docs/CLI.md for every flag with sample output.";
 
 fn cmd_machines() -> Result<()> {
     println!("{}", report::table1_report());
@@ -201,12 +217,27 @@ fn cmd_pair(f: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// Parse an optional `--remote-frac` value (a number in `[0, 1]`).
+fn parse_remote_frac(f: &HashMap<String, String>) -> Result<Option<f64>> {
+    match f.get("remote-frac") {
+        None => Ok(None),
+        Some(s) => match s.trim().parse::<f64>() {
+            Ok(v) if v.is_finite() && (0.0..=1.0).contains(&v) => Ok(Some(v)),
+            _ => Err(membw::Error::InvalidPlan(format!(
+                "bad --remote-frac '{s}' (expected a number in [0, 1])"
+            ))),
+        },
+    }
+}
+
 /// Measure a k-group workload mix (or `/`-separated scenario) and print the
 /// per-group share table. Without `--mix`, runs the built-in demo scenario
-/// scaled to the machine. With `--topology socket` (or `<D>`, `<S>x<D>`)
-/// the mix is resolved onto the ccNUMA domains by `--placement`
+/// scaled to the machine. With `--topology socket` (or `<D>`, `<S>x<D>`,
+/// `snc<N>`) the mix is resolved onto the ccNUMA domains by `--placement`
 /// compact|scatter (plus any `@dN` pins in the mix) and per-domain +
-/// socket-aggregate tables are printed.
+/// socket-aggregate tables are printed; `--remote-frac F` (or per-group
+/// `%rF` suffixes) splits cache-line streams over remote domains and the
+/// inter-socket links, adding per-link tables.
 fn cmd_scenarios(f: &HashMap<String, String>) -> Result<()> {
     let m = machine_by_name(f.get("machine").map(String::as_str).unwrap_or("clx"))?;
     let ctx = make_ctx(f)?;
@@ -214,11 +245,16 @@ fn cmd_scenarios(f: &HashMap<String, String>) -> Result<()> {
         Some(spec) => Scenario::parse(f.get("name").map(String::as_str).unwrap_or("cli"), spec)?,
         None => Scenario::demo(&m),
     };
+    let remote_frac = parse_remote_frac(f)?;
     let text = match f.get("topology") {
         Some(spec) => {
             let topo = Topology::parse(&m, spec)?;
             let placement =
                 Placement::parse(f.get("placement").map(String::as_str).unwrap_or("compact"))?;
+            let scenario = match remote_frac {
+                Some(frac) => scenario.with_default_remote(frac),
+                None => scenario,
+            };
             report::topology_scenario_report(&ctx, &topo, placement, &scenario)?
         }
         None => {
@@ -227,8 +263,14 @@ fn cmd_scenarios(f: &HashMap<String, String>) -> Result<()> {
                     "--placement requires --topology".into(),
                 ));
             }
-            // Mix-embedded pins (`@dN`/`@scatter`/`@compact`) would be
-            // silently meaningless on the flat single-domain path.
+            if remote_frac.is_some() {
+                return Err(membw::Error::InvalidPlan(
+                    "--remote-frac requires --topology".into(),
+                ));
+            }
+            // Mix-embedded pins (`@dN`/`@scatter`/`@compact`) and remote
+            // fractions would be silently meaningless on the flat
+            // single-domain path.
             if scenario
                 .mixes
                 .iter()
@@ -236,6 +278,11 @@ fn cmd_scenarios(f: &HashMap<String, String>) -> Result<()> {
             {
                 return Err(membw::Error::InvalidPlan(
                     "mix placement suffixes (@dN, @scatter, @compact) require --topology".into(),
+                ));
+            }
+            if scenario.has_remote() {
+                return Err(membw::Error::InvalidPlan(
+                    "mix remote fractions (%rF) require --topology".into(),
                 ));
             }
             report::scenario_report(&ctx, &m, &scenario)?
@@ -325,11 +372,17 @@ fn cmd_hpcg(f: &HashMap<String, String>) -> Result<()> {
                     "--placement requires --topology".into(),
                 ));
             }
+            if f.contains_key("remote-frac") {
+                return Err(membw::Error::InvalidPlan(
+                    "--remote-frac requires --topology".into(),
+                ));
+            }
             None
         }
     };
     let placement =
         Placement::parse(f.get("placement").map(String::as_str).unwrap_or("compact"))?;
+    let remote_frac = parse_remote_frac(f)?;
     let default_ranks = topo.as_ref().map(|t| t.total_cores()).unwrap_or(m.cores);
     let ranks: usize = f.get("ranks").and_then(|s| s.parse().ok()).unwrap_or(default_ranks);
     let nx: usize = f.get("nx").and_then(|s| s.parse().ok()).unwrap_or(96);
@@ -364,19 +417,23 @@ fn cmd_hpcg(f: &HashMap<String, String>) -> Result<()> {
         neighbor_radius: 3,
         noise: NoiseModel::mild(42),
     };
-    let eng = match &topo {
-        Some(t) => CoSimEngine::with_topology(&m, t, placement, prog, ranks, cfg, &source)?,
-        None => CoSimEngine::with_source(&m, prog, ranks, cfg, &source)?,
+    let eng = match (&topo, remote_frac) {
+        (Some(t), Some(frac)) => CoSimEngine::with_topology_remote(
+            &m, t, placement, frac, prog, ranks, cfg, &source,
+        )?,
+        (Some(t), None) => CoSimEngine::with_topology(&m, t, placement, prog, ranks, cfg, &source)?,
+        (None, _) => CoSimEngine::with_source(&m, prog, ranks, cfg, &source)?,
     };
     let t0 = Instant::now();
     let r = eng.run();
     let wall = t0.elapsed().as_secs_f64();
     match &topo {
         Some(t) => println!(
-            "HPCG ({variant:?}) on {} [topology {}, placement {}]: {ranks} ranks, nx={nx}, {iters} iterations, chars: {}",
+            "HPCG ({variant:?}) on {} [topology {}, placement {}{}]: {ranks} ranks, nx={nx}, {iters} iterations, chars: {}",
             m.name,
             t.label(),
             placement.name(),
+            remote_frac.map(|fr| format!(", remote {fr}")).unwrap_or_default(),
             source.name()
         ),
         None => println!(

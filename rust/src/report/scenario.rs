@@ -144,6 +144,19 @@ pub fn topology_scenario_report(
         )
         .unwrap();
         for (did, dr) in phase.domain_ids.iter().zip(&phase.domains) {
+            // A domain can carry remote traffic without hosting any group
+            // (its resident table would be empty): summarize the interface
+            // and move on.
+            if dr.groups.is_empty() && dr.mix.idle_cores == 0 {
+                writeln!(
+                    out,
+                    "[d{did}] (remote traffic only)   [{}, b_mix {:.1} GB/s]",
+                    if dr.saturated { "saturated" } else { "nonsaturated" },
+                    dr.b_mix_gbs
+                )
+                .unwrap();
+                continue;
+            }
             writeln!(
                 out,
                 "[d{did}] {}   [{}, b_mix {:.1} GB/s]",
@@ -179,6 +192,35 @@ pub fn topology_scenario_report(
                 ]);
             }
             out.push_str(&dt.render());
+        }
+        // Remote-access phases additionally report every inter-socket link
+        // (offered = cross-socket traffic the domain simulations drained;
+        // model = the link water-fill grant).
+        for link in &phase.links {
+            writeln!(
+                out,
+                "[link {}] b_link {:.1} GB/s   [{}, offered {:.1} GB/s, model {:.1} GB/s]",
+                link.label(),
+                link.link_bw_gbs,
+                if link.saturated { "saturated" } else { "nonsaturated" },
+                link.measured_total_gbs,
+                link.model_total_gbs,
+            )
+            .unwrap();
+            let mut lt = AsciiTable::new(&[
+                "group", "kernel", "n", "offered GB/s", "model GB/s", "alpha model",
+            ]);
+            for (g, origin) in link.groups.iter().zip(&link.origins) {
+                lt.row(vec![
+                    format!("{origin}"),
+                    g.kernel.key().to_string(),
+                    g.n.to_string(),
+                    format!("{:.2}", g.measured_bw_gbs),
+                    format!("{:.2}", g.model_bw_gbs),
+                    format!("{:.3}", g.model_alpha),
+                ]);
+            }
+            out.push_str(&lt.render());
         }
     }
     writeln!(
@@ -221,6 +263,27 @@ mod tests {
             std::fs::read_to_string(dir.join("scenario_rome-socket_rome-1s4d.csv")).unwrap();
         assert!(csv.lines().count() > 8);
         assert!(csv.contains(",socket,"));
+    }
+
+    #[test]
+    fn two_socket_remote_report_renders_link_tables() {
+        let dir = std::env::temp_dir().join("membw-topo-remote-report");
+        let ctx = ExperimentCtx::fluid(dir.clone());
+        let m = machine(MachineId::Rome);
+        let topo = Topology::parse(&m, "2x4").unwrap();
+        let sc = Scenario::parse(
+            "rome-2x4-remote",
+            "dcopy:32@scatter%r0.25+ddot2:32@scatter%r0.25",
+        )
+        .unwrap();
+        let text = topology_scenario_report(&ctx, &topo, Placement::Compact, &sc).unwrap();
+        assert!(text.contains("topology rome-2s4d"), "{text}");
+        assert!(text.contains("[link s0<->s1]"), "{text}");
+        assert!(text.contains("alpha model"));
+        let csv = std::fs::read_to_string(dir.join("scenario_rome-2x4-remote_rome-2s4d.csv"))
+            .unwrap();
+        assert!(csv.contains(",l0-1,"), "link rows in the CSV");
+        assert!(csv.contains("%r0.25"), "remote suffix in the mix label");
     }
 
     #[test]

@@ -7,25 +7,41 @@
 //! generalizes the model analytically to k groups; this subsystem makes the
 //! k-group space *measurable*:
 //!
-//! * [`spec`] — [`Mix`] (k kernel groups + idle cores, with a builder and a
+//! * `spec` — [`Mix`] (k kernel groups + idle cores, with a builder and a
 //!   compact text form) and [`Scenario`] (a named, time-phased sequence of
 //!   mixes),
 //! * [`cache`] — the process-wide kernel-characterization cache shared by
 //!   every measurement pipeline, with hit/miss accounting,
-//! * [`runner`] — [`run_mixes`]/[`run_scenario`]: batched execution on the
+//! * `runner` — [`run_mixes`]/[`run_scenario`]: batched execution on the
 //!   fluid, DES, or PJRT engine, parallelized over a dependency-free worker
 //!   pool, with the multigroup prediction attached to every case; and
 //!   [`run_mixes_on`]/[`run_scenario_on`]: the same pipeline over a
 //!   multi-domain [`crate::topology::Topology`] — mixes are resolved onto
 //!   ccNUMA domains by a [`crate::topology::Placement`] and each domain is
 //!   measured and modeled independently,
-//! * [`results`] — per-group measured-vs-model records with CSV/JSONL
+//! * `results` — per-group measured-vs-model records with CSV/JSONL
 //!   emission.
 //!
 //! The legacy two-group pairing sweep ([`crate::sweep`]) is the k=2 special
 //! case: [`crate::sweep::run_cases`] converts each
 //! [`crate::sweep::PairingCase`] into a [`Mix`] and delegates here, so there
 //! is exactly one measurement pipeline.
+//!
+//! # Examples
+//!
+//! The mix DSL round-trips through [`Mix::parse`] / [`Mix::label`],
+//! including `@` placement and `%r` remote-access suffixes:
+//!
+//! ```
+//! use membw::scenario::Mix;
+//!
+//! let mix = Mix::parse("dcopy:8@d0%r0.25+ddot2:8@d1+idle:2").unwrap();
+//! assert_eq!(mix.k(), 2);
+//! assert_eq!(mix.idle_cores, 2);
+//! assert_eq!(mix.groups[0].remote_frac(), 0.25);
+//! assert_eq!(mix.label(), "dcopy:8@d0%r0.25+ddot2:8@d1+idle:2");
+//! assert_eq!(Mix::parse(&mix.label()).unwrap(), mix);
+//! ```
 
 pub mod cache;
 mod results;
@@ -34,8 +50,8 @@ mod spec;
 
 pub use cache::{CacheStats, CharCache, CharKey, CharSource, EngineKind};
 pub use results::{
-    GroupOutcome, MixResult, MixResultSet, ScenarioResult, TopoMixResult, TopoMixResultSet,
-    TopoScenarioResult,
+    GroupOutcome, LinkResult, MixResult, MixResultSet, ScenarioResult, TopoMixResult,
+    TopoMixResultSet, TopoScenarioResult,
 };
 pub use runner::{run_mixes, run_mixes_on, run_scenario, run_scenario_on, MeasureEngine};
-pub use spec::{slugify, GroupSpec, Mix, Scenario};
+pub use spec::{remote_ppm_of, slugify, GroupSpec, Mix, Scenario};

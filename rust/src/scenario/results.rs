@@ -179,6 +179,42 @@ impl MixResultSet {
     }
 }
 
+/// Contention outcome of one inter-socket link under a mix: the groups
+/// whose remote portions cross it, with offered (measured) traffic and
+/// modeled link grants.
+///
+/// The measured substrate simulates memory interfaces only, so the
+/// measured columns are the *offered* cross-socket traffic (what the
+/// domain simulations drained for the crossing portions); the model
+/// columns come from the link's own Eqs. (4)+(5) water-fill at
+/// `link_bw_gbs` capacity.
+#[derive(Debug, Clone)]
+pub struct LinkResult {
+    /// Socket pair the link connects (lexicographic).
+    pub sockets: (usize, usize),
+    /// Saturated bandwidth of the link, GB/s.
+    pub link_bw_gbs: f64,
+    /// Per-group traffic over the link (`n` = cores whose streams cross
+    /// it; `model_alpha` = share of the link's granted traffic).
+    pub groups: Vec<GroupOutcome>,
+    /// For each entry of `groups`, the socket-level group index it
+    /// aggregates.
+    pub origins: Vec<usize>,
+    /// Total offered (measured) traffic, GB/s.
+    pub measured_total_gbs: f64,
+    /// Total modeled link grant, GB/s.
+    pub model_total_gbs: f64,
+    /// Whether the model finds the link saturated.
+    pub saturated: bool,
+}
+
+impl LinkResult {
+    /// Display label of the link, e.g. `s0<->s1`.
+    pub fn label(&self) -> String {
+        format!("s{}<->s{}", self.sockets.0, self.sockets.1)
+    }
+}
+
 /// Outcome of one socket-level mix resolved onto a multi-domain topology:
 /// per-domain [`MixResult`]s (contention is evaluated independently per
 /// ccNUMA domain) plus the socket-level aggregate per original group.
@@ -192,7 +228,9 @@ pub struct TopoMixResult {
     pub placement: &'static str,
     /// The socket-level mix.
     pub mix: Mix,
-    /// Ids of the domains that ran kernels, in domain order.
+    /// Ids of the reported domains, in domain order: every domain that ran
+    /// kernels and, on the remote-access path, every domain that received
+    /// remote traffic (its per-domain result then has no resident groups).
     pub domain_ids: Vec<usize>,
     /// Per-domain results, parallel to `domain_ids`.
     pub domains: Vec<MixResult>,
@@ -202,6 +240,9 @@ pub struct TopoMixResult {
     /// Socket-level aggregate per original group (bandwidths summed over
     /// domains; α is the share of the socket aggregate).
     pub socket: Vec<GroupOutcome>,
+    /// Per-link traffic records (empty when no group sends remote traffic
+    /// across sockets).
+    pub links: Vec<LinkResult>,
     /// Measured aggregate bandwidth over the whole socket, GB/s.
     pub measured_total_gbs: f64,
     /// Modeled aggregate bandwidth over the whole socket, GB/s.
@@ -221,8 +262,8 @@ impl TopoMixResult {
          meas_bw_gbs,model_bw_gbs,alpha_meas,alpha_model,err"
     }
 
-    /// One CSV row per (domain, sub-group), then one `socket` row per
-    /// original group.
+    /// One CSV row per (domain, sub-group), then one `l<a>-<b>` row per
+    /// (link, crossing group), then one `socket` row per original group.
     pub fn to_csv_rows(&self) -> Vec<String> {
         let mut rows = Vec::new();
         for ((did, dr), origin) in self.domain_ids.iter().zip(&self.domains).zip(&self.origins) {
@@ -242,6 +283,34 @@ impl TopoMixResult {
                     g.measured_bw_gbs,
                     g.model_bw_gbs,
                     dr.measured_alpha(gi),
+                    g.model_alpha,
+                    g.error(),
+                ));
+            }
+        }
+        for link in &self.links {
+            for (g, origin) in link.groups.iter().zip(&link.origins) {
+                let alpha_meas = if link.measured_total_gbs > 0.0 {
+                    g.measured_bw_gbs / link.measured_total_gbs
+                } else {
+                    0.0
+                };
+                rows.push(format!(
+                    "{},{},{},{},l{}-{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.5},{:.5},{:.5}",
+                    self.machine.key(),
+                    self.topology,
+                    self.placement,
+                    self.mix.label(),
+                    link.sockets.0,
+                    link.sockets.1,
+                    origin,
+                    g.kernel.key(),
+                    g.n,
+                    g.measured_per_core,
+                    g.model_per_core,
+                    g.measured_bw_gbs,
+                    g.model_bw_gbs,
+                    alpha_meas,
                     g.model_alpha,
                     g.error(),
                 ));
@@ -434,6 +503,16 @@ mod tests {
     fn topo_csv_rows_match_header_arity() {
         let d0 = sample();
         let socket = d0.groups.clone();
+        let link = LinkResult {
+            sockets: (0, 1),
+            link_bw_gbs: 64.0,
+            groups: vec![d0.groups[0].clone()],
+            origins: vec![0],
+            measured_total_gbs: d0.groups[0].measured_bw_gbs,
+            model_total_gbs: d0.groups[0].model_bw_gbs,
+            saturated: false,
+        };
+        assert_eq!(link.label(), "s0<->s1");
         let topo = TopoMixResult {
             machine: MachineId::Rome,
             topology: "rome-1s4d".into(),
@@ -443,23 +522,25 @@ mod tests {
             domains: vec![d0.clone(), sample()],
             origins: vec![vec![0, 1], vec![0, 1]],
             socket,
+            links: vec![link],
             measured_total_gbs: 2.0 * d0.measured_total_gbs,
             model_total_gbs: 2.0 * d0.model_total_gbs,
         };
         let header_cols = TopoMixResult::csv_header().split(',').count();
         let rows = topo.to_csv_rows();
-        // 2 groups x 2 domains + 2 socket rows.
-        assert_eq!(rows.len(), 6);
+        // 2 groups x 2 domains + 1 link row + 2 socket rows.
+        assert_eq!(rows.len(), 7);
         for row in &rows {
             assert_eq!(row.split(',').count(), header_cols, "{row}");
         }
-        assert!(rows[4].contains(",socket,"));
+        assert!(rows[4].contains(",l0-1,"));
+        assert!(rows[5].contains(",socket,"));
         assert_eq!(topo.all_errors().len(), 4);
         let dir = std::env::temp_dir().join("membw-topo-results-test");
         let set = TopoMixResultSet { cases: vec![topo] };
         set.write_csv(&dir.join("topo.csv")).unwrap();
         let csv = std::fs::read_to_string(dir.join("topo.csv")).unwrap();
-        assert_eq!(csv.lines().count(), 1 + 6);
+        assert_eq!(csv.lines().count(), 1 + 7);
     }
 
     #[test]

@@ -23,12 +23,12 @@ use crate::kernels::{kernel, KernelId};
 use crate::runtime::{PjrtSimExecutor, SimCase};
 use crate::scenario::cache::{CharCache, EngineKind};
 use crate::scenario::results::{
-    GroupOutcome, MixResult, MixResultSet, ScenarioResult, TopoMixResult, TopoMixResultSet,
-    TopoScenarioResult,
+    GroupOutcome, LinkResult, MixResult, MixResultSet, ScenarioResult, TopoMixResult,
+    TopoMixResultSet, TopoScenarioResult,
 };
-use crate::scenario::spec::{Mix, Scenario};
-use crate::sharing::{share_multigroup, KernelGroup};
-use crate::simulator::{run_engine, CoreWorkload, Engine, KernelMeasurement};
+use crate::scenario::spec::{GroupSpec, Mix, Scenario};
+use crate::sharing::{share_multigroup, share_remote, KernelGroup, RemoteGroup};
+use crate::simulator::{measure_f_bs, run_engine, CoreWorkload, Engine, KernelMeasurement};
 use crate::topology::{Placement, SplitMix, Topology};
 
 /// Measurement engine selection for a sweep or scenario run.
@@ -263,6 +263,11 @@ pub fn run_mixes_on(
     mixes: &[Mix],
     engine: &MeasureEngine,
 ) -> Result<TopoMixResultSet> {
+    if mixes.iter().any(|m| m.has_remote()) {
+        // Remote traffic couples domains and links; the all-local path
+        // below stays untouched (and bit-identical to its pre-remote form).
+        return run_mixes_on_remote(topo, placement, mixes, engine);
+    }
     // split rejects empty mixes, out-of-range pins, and capacity overflow.
     let splits: Vec<SplitMix> =
         mixes.iter().map(|mx| placement.split(topo, mx)).collect::<Result<_>>()?;
@@ -270,7 +275,7 @@ pub fn run_mixes_on(
     let mut kernels: Vec<KernelId> = mixes.iter().flat_map(|m| m.kernels()).collect();
     kernels.sort_by_key(|k| k.key());
     kernels.dedup();
-    let base_chars = CharCache::global().characterize(&topo.base, &kernels, engine)?;
+    let base_chars = base_chars_for(&topo.base, &kernels, engine)?;
 
     // Skeleton results; domains fill in below in domain order.
     let mut cases: Vec<TopoMixResult> = mixes
@@ -284,6 +289,7 @@ pub fn run_mixes_on(
             domains: Vec::new(),
             origins: Vec::new(),
             socket: Vec::new(),
+            links: Vec::new(),
             measured_total_gbs: 0.0,
             model_total_gbs: 0.0,
         })
@@ -329,34 +335,344 @@ pub fn run_mixes_on(
 
     // Socket-level aggregation per original group.
     for (case, mix) in cases.iter_mut().zip(mixes) {
-        let k = mix.groups.len();
-        let mut meas = vec![0.0f64; k];
-        let mut model = vec![0.0f64; k];
-        for (dr, origin) in case.domains.iter().zip(&case.origins) {
-            for (gi, g) in dr.groups.iter().enumerate() {
-                meas[origin[gi]] += g.measured_bw_gbs;
-                model[origin[gi]] += g.model_bw_gbs;
-            }
-        }
-        let model_total: f64 = model.iter().sum();
-        case.measured_total_gbs = meas.iter().sum();
-        case.model_total_gbs = model_total;
-        case.socket = mix
-            .groups
-            .iter()
-            .enumerate()
-            .map(|(gi, g)| GroupOutcome {
-                kernel: g.kernel,
-                n: g.cores,
-                measured_bw_gbs: meas[gi],
-                measured_per_core: if g.cores > 0 { meas[gi] / g.cores as f64 } else { 0.0 },
-                model_bw_gbs: model[gi],
-                model_per_core: if g.cores > 0 { model[gi] / g.cores as f64 } else { 0.0 },
-                model_alpha: if model_total > 0.0 { model[gi] / model_total } else { 0.0 },
-            })
-            .collect();
+        aggregate_socket(case, mix);
     }
 
+    Ok(TopoMixResultSet { cases })
+}
+
+/// Kernel characterizations for a topology's base row.
+///
+/// Registry rows are served from the process-wide [`CharCache`]. *Derived*
+/// rows — SNC sub-domains, whose `MachineId` would collide with their
+/// parent socket's cache entries — are characterized directly (uncached)
+/// on the derived machine, so their halved `b_s` and correspondingly
+/// higher `f` are real measurements, not stale socket values.
+fn base_chars_for(
+    base: &Machine,
+    kernels: &[KernelId],
+    engine: &MeasureEngine,
+) -> Result<HashMap<KernelId, KernelMeasurement>> {
+    let registry = crate::config::machine(base.id);
+    if registry.cores == base.cores
+        && registry.read_bw_gbs.to_bits() == base.read_bw_gbs.to_bits()
+    {
+        return CharCache::global().characterize(base, kernels, engine);
+    }
+    match engine.inproc() {
+        Some(eng) => Ok(kernels
+            .iter()
+            .map(|&k| (k, measure_f_bs(&kernel(k), base, eng)))
+            .collect()),
+        None => Err(crate::error::Error::InvalidPlan(
+            "derived (SNC) machine rows need an in-process engine (fluid or des)".into(),
+        )),
+    }
+}
+
+/// Fill a topology case's socket-level aggregate from its per-domain
+/// results: bandwidths summed over domains per original group, α = share
+/// of the socket aggregate.
+fn aggregate_socket(case: &mut TopoMixResult, mix: &Mix) {
+    let k = mix.groups.len();
+    let mut meas = vec![0.0f64; k];
+    let mut model = vec![0.0f64; k];
+    for (dr, origin) in case.domains.iter().zip(&case.origins) {
+        for (gi, g) in dr.groups.iter().enumerate() {
+            meas[origin[gi]] += g.measured_bw_gbs;
+            model[origin[gi]] += g.model_bw_gbs;
+        }
+    }
+    let model_total: f64 = model.iter().sum();
+    case.measured_total_gbs = meas.iter().sum();
+    case.model_total_gbs = model_total;
+    case.socket = mix
+        .groups
+        .iter()
+        .enumerate()
+        .map(|(gi, g)| GroupOutcome {
+            kernel: g.kernel,
+            n: g.cores,
+            measured_bw_gbs: meas[gi],
+            measured_per_core: if g.cores > 0 { meas[gi] / g.cores as f64 } else { 0.0 },
+            model_bw_gbs: model[gi],
+            model_per_core: if g.cores > 0 { model[gi] / g.cores as f64 } else { 0.0 },
+            model_alpha: if model_total > 0.0 { model[gi] / model_total } else { 0.0 },
+        })
+        .collect();
+}
+
+/// The remote-access variant of [`run_mixes_on`], taken when any group
+/// carries a `%r` suffix.
+///
+/// **Model**: one [`share_remote`] evaluation per mix — every memory
+/// interface and every inter-socket link runs the generalized Eqs. (4)+(5)
+/// water-fill over the traffic portions it carries, and a group's per-core
+/// bandwidth is gated by its slowest portion (lockstep streams).
+///
+/// **Measurement**: each domain is simulated with its home sub-groups
+/// thinned to their locally-kept traffic weight plus one synthetic pooled
+/// stream per incoming remote portion; the same slowest-portion rule then
+/// combines the per-portion drains. The substrate has no link simulator,
+/// so a link's measured column is the *offered* cross-socket flow while
+/// its model column is capped by the link water-fill (`docs/MODEL.md`
+/// spells out the asymmetry). Not available on the PJRT engine, whose
+/// artifact has a fixed per-domain geometry.
+fn run_mixes_on_remote(
+    topo: &Topology,
+    placement: Placement,
+    mixes: &[Mix],
+    engine: &MeasureEngine,
+) -> Result<TopoMixResultSet> {
+    if matches!(engine, MeasureEngine::Pjrt(_)) {
+        return Err(crate::error::Error::InvalidPlan(
+            "remote-access mixes need an in-process engine (fluid or des); \
+             the PJRT artifact has a fixed per-domain geometry"
+                .into(),
+        ));
+    }
+    let eng = engine.inproc().expect("PJRT rejected above");
+    // split validates capacity, pins, and the >= 2 domains remote rule.
+    let splits: Vec<SplitMix> =
+        mixes.iter().map(|mx| placement.split(topo, mx)).collect::<Result<_>>()?;
+    let mut kernels: Vec<KernelId> = mixes.iter().flat_map(|m| m.kernels()).collect();
+    kernels.sort_by_key(|k| k.key());
+    kernels.dedup();
+    let base_chars = base_chars_for(&topo.base, &kernels, engine)?;
+    let shape = topo.shape();
+    let links = shape.links();
+
+    struct Resident {
+        domain: usize,
+        origin: usize,
+        spec: GroupSpec,
+    }
+
+    /// One memory interface's measurement workload.
+    struct DomainJob {
+        machine: Machine,
+        wls: Vec<CoreWorkload>,
+        /// `(portion index, #workload entries)` in `wls` order.
+        spans: Vec<(usize, usize)>,
+    }
+
+    let mut cases = Vec::with_capacity(mixes.len());
+    for (mx, split) in mixes.iter().zip(&splits) {
+        // Resident sub-groups in (domain, sub-mix) order.
+        let mut residents: Vec<Resident> = Vec::new();
+        for dm in &split.domains {
+            for (sg, &origin) in dm.mix.groups.iter().zip(&dm.origin) {
+                residents.push(Resident { domain: dm.domain, origin, spec: *sg });
+            }
+        }
+        let groups: Vec<RemoteGroup> = residents
+            .iter()
+            .map(|r| {
+                let c = base_chars[&r.spec.kernel];
+                RemoteGroup {
+                    home: r.domain,
+                    n: r.spec.cores,
+                    f: c.f,
+                    bs_gbs: c.bs_gbs,
+                    remote_frac: r.spec.remote_frac(),
+                }
+            })
+            .collect();
+        let share = share_remote(&shape, &groups)?;
+
+        // Gather every memory interface's portion workloads; the per-domain
+        // simulations are independent, so they fan out over the same worker
+        // pool as the all-local pipeline. (Parallelism is per mix: a
+        // many-phase scenario on a tiny topology underfills the pool —
+        // cross-phase batching is a possible follow-up.)
+        let mut jobs: Vec<DomainJob> = Vec::new();
+        for (d, dom) in topo.domains.iter().enumerate() {
+            let pidx: Vec<usize> =
+                (0..share.portions.len()).filter(|&p| share.portions[p].target == d).collect();
+            if pidx.is_empty() {
+                continue;
+            }
+            let mut wls: Vec<CoreWorkload> = Vec::new();
+            let mut spans: Vec<(usize, usize)> = Vec::new();
+            for (tag, &p) in pidx.iter().enumerate() {
+                let portion = &share.portions[p];
+                let r = &residents[portion.group];
+                let w = CoreWorkload::from_kernel(&kernel(r.spec.kernel), &dom.machine, tag);
+                if r.domain == d {
+                    // Home cores, thinned to the locally-kept weight.
+                    wls.extend(vec![w.thinned(portion.weight, tag); r.spec.cores]);
+                    spans.push((p, r.spec.cores));
+                } else {
+                    // One pooled synthetic stream for the whole portion.
+                    wls.push(w.thinned(r.spec.cores as f64 * portion.weight, tag));
+                    spans.push((p, 1));
+                }
+            }
+            wls.extend(vec![CoreWorkload::idle(); split.domains[d].mix.idle_cores]);
+            // Pooled visitor streams can push the workload count past the
+            // domain's core count; the simulators use `cores` only for
+            // their arity assert, so widen a clone.
+            let machine = if wls.len() > dom.machine.cores {
+                let mut m2 = dom.machine.clone();
+                m2.cores = wls.len();
+                m2
+            } else {
+                dom.machine.clone()
+            };
+            jobs.push(DomainJob { machine, wls, spans });
+        }
+        let per_cores = par_map(&jobs, |j| run_engine(&j.machine, &j.wls, eng));
+        let mut portion_meas = vec![0.0f64; share.portions.len()];
+        for (job, per_core) in jobs.iter().zip(&per_cores) {
+            let mut offset = 0usize;
+            for &(p, n_wls) in &job.spans {
+                portion_meas[p] = per_core[offset..offset + n_wls].iter().sum();
+                offset += n_wls;
+            }
+        }
+
+        // Slowest portion gates the lockstep stream (measured side; the
+        // model applies the identical rule inside share_remote).
+        let meas_pc: Vec<f64> = residents
+            .iter()
+            .enumerate()
+            .map(|(ri, r)| {
+                let n = r.spec.cores as f64;
+                let mut rate = f64::INFINITY;
+                for (p, portion) in share.portions.iter().enumerate() {
+                    if portion.group == ri {
+                        rate = rate.min(portion_meas[p] / (n * portion.weight));
+                    }
+                }
+                if rate.is_finite() {
+                    rate
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+
+        // Per-domain results: every domain with resident groups *or*
+        // incoming remote traffic appears, so a saturated visitor-only
+        // interface is not invisible in the report (its resident table is
+        // just empty).
+        let mut domain_ids = Vec::new();
+        let mut domains_out = Vec::new();
+        let mut origins_out = Vec::new();
+        for dm in &split.domains {
+            let d = dm.domain;
+            if dm.mix.active_cores() == 0 && share.domains[d].demand_gbs == 0.0 {
+                continue;
+            }
+            let ridx: Vec<usize> =
+                (0..residents.len()).filter(|&ri| residents[ri].domain == d).collect();
+            let model_domain_total: f64 = ridx.iter().map(|&ri| share.group_bw_gbs[ri]).sum();
+            let mut outcomes = Vec::with_capacity(ridx.len());
+            let mut meas_total = 0.0f64;
+            let mut model_total = 0.0f64;
+            for &ri in &ridx {
+                let r = &residents[ri];
+                let mbw = meas_pc[ri] * r.spec.cores as f64;
+                meas_total += mbw;
+                model_total += share.group_bw_gbs[ri];
+                outcomes.push(GroupOutcome {
+                    kernel: r.spec.kernel,
+                    n: r.spec.cores,
+                    measured_bw_gbs: mbw,
+                    measured_per_core: meas_pc[ri],
+                    model_bw_gbs: share.group_bw_gbs[ri],
+                    model_per_core: share.per_core_gbs[ri],
+                    model_alpha: if model_domain_total > 0.0 {
+                        share.group_bw_gbs[ri] / model_domain_total
+                    } else {
+                        0.0
+                    },
+                });
+            }
+            domain_ids.push(d);
+            domains_out.push(MixResult {
+                machine: topo.base.id,
+                mix: dm.mix.clone(),
+                groups: outcomes,
+                measured_total_gbs: meas_total,
+                model_total_gbs: model_total,
+                b_mix_gbs: share.domains[d].b_mix_gbs,
+                saturated: share.domains[d].saturated,
+            });
+            origins_out.push(dm.origin.clone());
+        }
+
+        // Per-link records, aggregated by socket-level group.
+        let mut link_results: Vec<LinkResult> = Vec::new();
+        for (li, &(a, b)) in links.iter().enumerate() {
+            let pidx: Vec<usize> = (0..share.portions.len())
+                .filter(|&p| share.portions[p].link == Some(li))
+                .collect();
+            if pidx.is_empty() {
+                continue;
+            }
+            let k = mx.groups.len();
+            let mut meas = vec![0.0f64; k];
+            let mut model = vec![0.0f64; k];
+            let mut cores = vec![0usize; k];
+            let mut counted = vec![false; residents.len()];
+            for &p in &pidx {
+                let portion = &share.portions[p];
+                let ri = portion.group;
+                let origin = residents[ri].origin;
+                meas[origin] += portion_meas[p];
+                model[origin] += portion.granted_bw_gbs;
+                if !counted[ri] {
+                    counted[ri] = true;
+                    cores[origin] += residents[ri].spec.cores;
+                }
+            }
+            let meas_total: f64 = meas.iter().sum();
+            let model_total: f64 = model.iter().sum();
+            let mut groups_out = Vec::new();
+            let mut origins = Vec::new();
+            for gi in 0..k {
+                if cores[gi] == 0 {
+                    continue;
+                }
+                groups_out.push(GroupOutcome {
+                    kernel: mx.groups[gi].kernel,
+                    n: cores[gi],
+                    measured_bw_gbs: meas[gi],
+                    measured_per_core: meas[gi] / cores[gi] as f64,
+                    model_bw_gbs: model[gi],
+                    model_per_core: model[gi] / cores[gi] as f64,
+                    model_alpha: if model_total > 0.0 { model[gi] / model_total } else { 0.0 },
+                });
+                origins.push(gi);
+            }
+            link_results.push(LinkResult {
+                sockets: (a, b),
+                link_bw_gbs: shape.link_bw_gbs,
+                groups: groups_out,
+                origins,
+                measured_total_gbs: meas_total,
+                model_total_gbs: model_total,
+                saturated: share.links[li].saturated,
+            });
+        }
+
+        let mut case = TopoMixResult {
+            machine: topo.base.id,
+            topology: topo.label(),
+            placement: placement.name(),
+            mix: mx.clone(),
+            domain_ids,
+            domains: domains_out,
+            origins: origins_out,
+            socket: Vec::new(),
+            links: link_results,
+            measured_total_gbs: 0.0,
+            model_total_gbs: 0.0,
+        };
+        aggregate_socket(&mut case, mx);
+        cases.push(case);
+    }
     Ok(TopoMixResultSet { cases })
 }
 

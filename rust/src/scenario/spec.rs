@@ -15,8 +15,11 @@
 //! [`crate::topology::Topology`] each group takes an optional placement
 //! suffix — `"dcopy:12@scatter"` spreads a group over the domains,
 //! `"ddot2:4@d0+dcopy:4@d1"` pins groups to specific ccNUMA domains — and
-//! parse errors are structured ([`Error::MixParse`]: byte position plus
-//! the expected token).
+//! an optional remote-access fraction: `"dcopy:8@d0%r0.25"` keeps the
+//! group's cores on domain 0 but sends a quarter of its cache-line stream
+//! to the other domains (crossing the inter-socket links where the target
+//! lives on another socket). Parse errors are structured
+//! ([`Error::MixParse`]: byte position plus the expected token).
 
 use crate::config::Machine;
 use crate::error::{Error, Result};
@@ -49,6 +52,26 @@ pub struct GroupSpec {
     /// Where the group goes on a multi-domain topology (`Auto` = follow
     /// the mix-level placement policy; irrelevant on a single domain).
     pub place: GroupPlacement,
+    /// Remote-access fraction in parts per million: how much of the
+    /// group's cache-line stream targets remote ccNUMA domains (`%r`
+    /// suffix in the DSL; 0 = all traffic stays home). Stored as an
+    /// integer so mixes stay `Eq`/hashable; use
+    /// [`GroupSpec::remote_frac`] for the `f64` value.
+    pub remote_ppm: u32,
+}
+
+impl GroupSpec {
+    /// The remote-access fraction as a float in `[0, 1]`.
+    pub fn remote_frac(&self) -> f64 {
+        self.remote_ppm as f64 / 1e6
+    }
+}
+
+/// Convert a remote fraction in `[0, 1]` to the parts-per-million fixed
+/// point [`GroupSpec::remote_ppm`] stores.
+pub fn remote_ppm_of(frac: f64) -> u32 {
+    debug_assert!(frac.is_finite() && (0.0..=1.0).contains(&frac));
+    (frac * 1e6).round() as u32
 }
 
 /// An instantaneous workload mix: k kernel groups plus idle cores.
@@ -74,7 +97,54 @@ impl Mix {
 
     /// Add a kernel group with an explicit topology placement.
     pub fn with_on(mut self, kernel: KernelId, cores: usize, place: GroupPlacement) -> Self {
-        self.groups.push(GroupSpec { kernel, cores, place });
+        self.groups.push(GroupSpec { kernel, cores, place, remote_ppm: 0 });
+        self
+    }
+
+    /// Add a kernel group with a placement and a remote-access fraction
+    /// (the `%r` DSL suffix as a builder).
+    ///
+    /// # Panics
+    /// If `remote_frac` is outside `[0, 1]` (a programming error; the DSL
+    /// parser reports the same condition as a structured
+    /// [`Error::MixParse`]).
+    pub fn with_remote_on(
+        mut self,
+        kernel: KernelId,
+        cores: usize,
+        place: GroupPlacement,
+        remote_frac: f64,
+    ) -> Self {
+        assert!(
+            remote_frac.is_finite() && (0.0..=1.0).contains(&remote_frac),
+            "remote fraction {remote_frac} outside [0, 1]"
+        );
+        let remote_ppm = remote_ppm_of(remote_frac);
+        self.groups.push(GroupSpec { kernel, cores, place, remote_ppm });
+        self
+    }
+
+    /// Whether any group sends traffic to remote domains.
+    pub fn has_remote(&self) -> bool {
+        self.groups.iter().any(|g| g.remote_ppm > 0)
+    }
+
+    /// Apply `remote_frac` to every group that has no explicit `%r` suffix
+    /// (the CLI's `--remote-frac` default).
+    ///
+    /// # Panics
+    /// If `remote_frac` is outside `[0, 1]`.
+    pub fn with_default_remote(mut self, remote_frac: f64) -> Self {
+        assert!(
+            remote_frac.is_finite() && (0.0..=1.0).contains(&remote_frac),
+            "remote fraction {remote_frac} outside [0, 1]"
+        );
+        let ppm = remote_ppm_of(remote_frac);
+        for g in &mut self.groups {
+            if g.remote_ppm == 0 {
+                g.remote_ppm = ppm;
+            }
+        }
         self
     }
 
@@ -120,6 +190,12 @@ impl Mix {
                 self.label()
             )));
         }
+        if self.has_remote() {
+            return Err(Error::InvalidPlan(format!(
+                "mix '{}' carries remote-access fractions, which need a multi-domain topology",
+                self.label()
+            )));
+        }
         if self.total_cores() > m.cores {
             return Err(Error::InvalidPlan(format!(
                 "mix '{}' needs {} cores but the {} domain has {}",
@@ -132,13 +208,20 @@ impl Mix {
         Ok(())
     }
 
-    /// Canonical text form: `kernel:cores[@place]` joined by `+`, idle
-    /// last.
+    /// Canonical text form: `kernel:cores[@place][%rF]` joined by `+`,
+    /// idle last.
     pub fn label(&self) -> String {
         let mut parts: Vec<String> = self
             .groups
             .iter()
-            .map(|g| format!("{}:{}{}", g.kernel.key(), g.cores, g.place.suffix()))
+            .map(|g| {
+                let remote = if g.remote_ppm > 0 {
+                    format!("%r{}", g.remote_frac())
+                } else {
+                    String::new()
+                };
+                format!("{}:{}{}{}", g.kernel.key(), g.cores, g.place.suffix(), remote)
+            })
             .collect();
         if self.idle_cores > 0 {
             parts.push(format!("idle:{}", self.idle_cores));
@@ -146,11 +229,12 @@ impl Mix {
         parts.join("+")
     }
 
-    /// Parse the text form (`"dcopy:4+ddot2:4+idle:2"`, optional
-    /// `@dN`/`@scatter`/`@compact` placement suffix per group; whitespace
-    /// around `+` is tolerated). Inverse of [`Mix::label`]. Errors are
-    /// structured ([`Error::MixParse`]): byte position of the offending
-    /// token plus the token class the parser expected there.
+    /// Parse the text form (`"dcopy:4+ddot2:4+idle:2"`; optional
+    /// `@dN`/`@scatter`/`@compact` placement suffix and `%rF` remote
+    /// fraction per group, in that order — `"dcopy:8@d0%r0.25"`;
+    /// whitespace around `+` is tolerated). Inverse of [`Mix::label`].
+    /// Errors are structured ([`Error::MixParse`]): byte position of the
+    /// offending token plus the token class the parser expected there.
     pub fn parse(s: &str) -> Result<Self> {
         Mix::parse_at(s, s, 0)
     }
@@ -178,9 +262,13 @@ impl Mix {
                 Some(x) => x,
                 None => return Err(err(tstart, "'kernel:cores' term", term)),
             };
-            let (count_raw, place_raw) = match rest.split_once('@') {
-                Some((c, p)) => (c, Some(p)),
+            let (body_raw, remote_raw) = match rest.split_once('%') {
+                Some((b, r)) => (b, Some(r)),
                 None => (rest, None),
+            };
+            let (count_raw, place_raw) = match body_raw.split_once('@') {
+                Some((c, p)) => (c, Some(p)),
+                None => (body_raw, None),
             };
             let count_pos =
                 tstart + name_raw.len() + 1 + (count_raw.len() - count_raw.trim_start().len());
@@ -206,6 +294,28 @@ impl Mix {
                         })?
                 }
             };
+            let remote_ppm = match remote_raw {
+                None => 0,
+                Some(r) => {
+                    let rpos = tstart
+                        + name_raw.len()
+                        + 1
+                        + body_raw.len()
+                        + 1
+                        + (r.len() - r.trim_start().len());
+                    let rtxt = r.trim();
+                    let frac = rtxt
+                        .strip_prefix('r')
+                        .and_then(|v| v.trim().parse::<f64>().ok())
+                        .filter(|v| v.is_finite() && (0.0..=1.0).contains(v));
+                    match frac {
+                        Some(v) => remote_ppm_of(v),
+                        None => {
+                            return Err(err(rpos, "remote fraction 'rF' with F in [0, 1]", rtxt))
+                        }
+                    }
+                }
+            };
             let name = name_raw.trim();
             if name.eq_ignore_ascii_case("idle") {
                 if place != GroupPlacement::Auto {
@@ -215,11 +325,19 @@ impl Mix {
                         term,
                     ));
                 }
+                if remote_ppm > 0 {
+                    return Err(err(
+                        tstart,
+                        "no remote fraction on idle cores (they issue no traffic)",
+                        term,
+                    ));
+                }
                 mix = mix.idle(cores);
             } else {
                 let kernel = KernelId::parse(name)
                     .map_err(|_| err(tstart, "kernel name or 'idle'", name))?;
                 mix = mix.with_on(kernel, cores, place);
+                mix.groups.last_mut().expect("group just pushed").remote_ppm = remote_ppm;
             }
         }
         if mix.groups.is_empty() && mix.idle_cores == 0 {
@@ -305,6 +423,23 @@ impl Scenario {
             mix.validate_on(topo, placement)?;
         }
         Ok(())
+    }
+
+    /// Whether any phase sends traffic to remote domains.
+    pub fn has_remote(&self) -> bool {
+        self.mixes.iter().any(|m| m.has_remote())
+    }
+
+    /// Apply `remote_frac` to every group of every phase that has no
+    /// explicit `%r` suffix (the CLI's `--remote-frac` default). See
+    /// [`Mix::with_default_remote`].
+    pub fn with_default_remote(mut self, remote_frac: f64) -> Self {
+        self.mixes = self
+            .mixes
+            .into_iter()
+            .map(|m| m.with_default_remote(remote_frac))
+            .collect();
+        self
     }
 
     /// Safe file stem derived from the scenario name (see [`slugify`]).
@@ -427,6 +562,69 @@ mod tests {
     }
 
     #[test]
+    fn remote_suffixes_roundtrip() {
+        let mix = Mix::parse("dcopy:8@d0%r0.25+ddot2:8@d1%r0.1+stream:4@scatter+idle:2").unwrap();
+        assert_eq!(mix.groups[0].remote_ppm, 250_000);
+        assert!((mix.groups[0].remote_frac() - 0.25).abs() < 1e-12);
+        assert_eq!(mix.groups[1].remote_ppm, 100_000);
+        assert_eq!(mix.groups[2].remote_ppm, 0);
+        assert!(mix.has_remote());
+        assert_eq!(
+            mix.label(),
+            "dcopy:8@d0%r0.25+ddot2:8@d1%r0.1+stream:4@scatter+idle:2"
+        );
+        assert_eq!(Mix::parse(&mix.label()).unwrap(), mix);
+        // %r without a placement suffix, and %r0 normalizing away.
+        let bare = Mix::parse("dcopy:4%r0.5+ddot2:4%r0").unwrap();
+        assert_eq!(bare.groups[0].remote_ppm, 500_000);
+        assert_eq!(bare.groups[1].remote_ppm, 0);
+        assert_eq!(bare.label(), "dcopy:4%r0.5+ddot2:4");
+        // Builder equivalence.
+        let built = Mix::new()
+            .with_remote_on(KernelId::Dcopy, 4, GroupPlacement::Auto, 0.5)
+            .with(KernelId::Ddot2, 4);
+        assert_eq!(built, bare);
+    }
+
+    #[test]
+    fn default_remote_fills_only_unset_groups() {
+        let mix = Mix::parse("dcopy:4%r0.5+ddot2:4+idle:2")
+            .unwrap()
+            .with_default_remote(0.25);
+        assert_eq!(mix.groups[0].remote_ppm, 500_000, "explicit %r wins");
+        assert_eq!(mix.groups[1].remote_ppm, 250_000, "default applied");
+        assert_eq!(mix.idle_cores, 2);
+    }
+
+    /// Malformed `%r` suffixes surface as structured [`Error::MixParse`].
+    #[test]
+    fn remote_parse_errors_are_structured() {
+        let case = |spec: &str, want_pos: usize, want_expected: &str| {
+            match Mix::parse(spec).unwrap_err() {
+                Error::MixParse { spec: s, pos, expected, .. } => {
+                    assert_eq!(s, spec, "spec echoed");
+                    assert_eq!(pos, want_pos, "position in '{spec}'");
+                    assert!(
+                        expected.contains(want_expected),
+                        "'{spec}': expected token '{expected}' should mention '{want_expected}'"
+                    );
+                }
+                other => panic!("'{spec}': wanted MixParse, got {other}"),
+            }
+        };
+        case("dcopy:4%x0.2", 8, "remote fraction");
+        case("dcopy:4%r", 8, "remote fraction");
+        case("dcopy:4%r1.5", 8, "remote fraction");
+        case("dcopy:4%r-0.1", 8, "remote fraction");
+        case("dcopy:4@d0%rabc", 11, "remote fraction");
+        case("idle:2%r0.1", 0, "idle");
+        // Flat validation rejects remote mixes (they need a topology).
+        let m = machine(MachineId::Rome);
+        let e = Mix::parse("dcopy:4%r0.25").unwrap().validate(&m).unwrap_err().to_string();
+        assert!(e.contains("topology"), "{e}");
+    }
+
+    #[test]
     fn validate_on_topology_checks_pins_and_capacity() {
         let m = machine(MachineId::Rome);
         let socket = Topology::socket(&m); // 4 domains x 8 cores
@@ -477,11 +675,21 @@ mod tests {
         assert_eq!(mix.k(), 2);
         assert_eq!(
             mix.groups[0],
-            GroupSpec { kernel: KernelId::Dcopy, cores: 6, place: GroupPlacement::Auto }
+            GroupSpec {
+                kernel: KernelId::Dcopy,
+                cores: 6,
+                place: GroupPlacement::Auto,
+                remote_ppm: 0
+            }
         );
         assert_eq!(
             mix.groups[1],
-            GroupSpec { kernel: KernelId::Ddot2, cores: 4, place: GroupPlacement::Auto }
+            GroupSpec {
+                kernel: KernelId::Ddot2,
+                cores: 4,
+                place: GroupPlacement::Auto,
+                remote_ppm: 0
+            }
         );
         assert_eq!(mix.idle_cores, 0);
     }

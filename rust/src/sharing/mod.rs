@@ -1,25 +1,53 @@
 //! The paper's contribution: the analytic bandwidth-sharing model.
 //!
-//! * [`model`] — Eqs. (4) and (5) for two thread groups,
-//! * [`multigroup`] — the natural k-group generalization (used by the
+//! * `model` — Eqs. (4) and (5) for two thread groups,
+//! * `multigroup` — the natural k-group generalization (used by the
 //!   desynchronization co-simulator and the task-scheduler example), plus
 //!   the per-ccNUMA-domain evaluation [`share_domains`] (domains share no
-//!   state; each gets its own Eqs. 4+5),
-//! * [`baseline`] — the naive models the paper argues against (equal share
+//!   state; each gets its own Eqs. 4+5) and the fractional-thread-weight
+//!   form [`share_weighted`] the remote-access extension builds on,
+//! * [`remote`] — the remote-access extension: groups whose cache-line
+//!   streams split between their home domain, remote domains, and the
+//!   inter-socket links (UPI/xGMI), each an Eqs. (4)+(5) interface,
+//! * `baseline` — the naive models the paper argues against (equal share
 //!   per thread; code-balance-weighted share), kept as ablation baselines,
-//! * [`desync_predictor`] — qualitative desync/resync prediction from
+//! * `desync_predictor` — qualitative desync/resync prediction from
 //!   kernel pairings (Sect. V closing discussion),
-//! * [`share_cache`] — memoized multigroup evaluations keyed by group
+//! * `share_cache` — memoized multigroup evaluations keyed by group
 //!   composition (the contention-timeline engine's hot lookup).
+//!
+//! # Examples
+//!
+//! The saturated two-group share is the paper's Eq. (5),
+//! `α₁ = n₁f₁ / (n₁f₁ + n₂f₂)`:
+//!
+//! ```
+//! use membw::sharing::{share_multigroup, KernelGroup};
+//!
+//! let share = share_multigroup(&[
+//!     KernelGroup { n: 6, f: 0.35, bs_gbs: 55.0 },
+//!     KernelGroup { n: 4, f: 0.20, bs_gbs: 66.0 },
+//! ]);
+//! let eq5 = 6.0 * 0.35 / (6.0 * 0.35 + 4.0 * 0.20);
+//! assert!(share.saturated);
+//! assert!((share.groups[0].alpha - eq5).abs() < 1e-9);
+//! ```
 
 mod baseline;
 mod desync_predictor;
 mod model;
 mod multigroup;
+pub mod remote;
 mod share_cache;
 
 pub use baseline::{code_balance_share, equal_share, BaselineKind};
 pub use desync_predictor::{predict_skew, OverlapPartner, SkewPrediction};
 pub use model::{overlapped_saturated_bw, share_two_groups, KernelGroup, SharingPrediction};
-pub use multigroup::{share_domains, share_multigroup, GroupShare, GroupShareEntry};
+pub use multigroup::{
+    share_domains, share_multigroup, share_weighted, share_weighted_capacity, GroupShare,
+    GroupShareEntry, WeightedGroup,
+};
+pub use remote::{
+    share_remote, InterfaceShare, Portion, RemoteGroup, RemoteRateModel, RemoteShare, TopoShape,
+};
 pub use share_cache::{ShareCache, ShareCacheStats, MAX_GROUP_CORES, MAX_SLOTS};

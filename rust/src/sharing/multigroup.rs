@@ -31,6 +31,24 @@ pub struct GroupShare {
     pub saturated: bool,
 }
 
+/// A kernel group with a *fractional* thread weight.
+///
+/// The remote-access extension splits one group's cache-line stream over
+/// several contention interfaces; the portion landing on an interface acts
+/// like `n·w` threads of the group (with `w` the traffic weight), which is
+/// in general not an integer. Nothing in the Eqs. (4)+(5) derivation needs
+/// integer thread counts, so the water-fill below is written against this
+/// type; [`share_multigroup`] is the exact integer wrapper.
+#[derive(Debug, Clone, Copy)]
+pub struct WeightedGroup {
+    /// Effective thread count (`n · weight`; may be fractional).
+    pub n: f64,
+    /// Memory request fraction of the kernel (Eq. 2).
+    pub f: f64,
+    /// Saturated bandwidth of the kernel on this interface, GB/s.
+    pub bs_gbs: f64,
+}
+
 /// Generalized Eqs. (4)+(5) with demand capping for the nonsaturated case.
 ///
 /// Water-filling: a group can never obtain more than its unconstrained
@@ -38,15 +56,36 @@ pub struct GroupShare {
 /// Uncapped groups split the remaining bandwidth proportionally to
 /// `n_k · f_k`. The iteration converges in ≤ k rounds.
 pub fn share_multigroup(groups: &[KernelGroup]) -> GroupShare {
-    let n_tot: f64 = groups.iter().map(|g| g.n as f64).sum();
+    let weighted: Vec<WeightedGroup> = groups
+        .iter()
+        .map(|g| WeightedGroup { n: g.n as f64, f: g.f, bs_gbs: g.bs_gbs })
+        .collect();
+    share_weighted(&weighted)
+}
+
+/// [`share_multigroup`] over fractional thread weights: the interface
+/// capacity is the generalized Eq. (4) thread-weighted mean of the groups'
+/// saturated bandwidths. Bit-identical to [`share_multigroup`] when every
+/// `n` is integral (pinned by the conformance suite).
+pub fn share_weighted(groups: &[WeightedGroup]) -> GroupShare {
+    let n_tot: f64 = groups.iter().map(|g| g.n).sum();
     if n_tot == 0.0 {
         return GroupShare { b_mix_gbs: 0.0, groups: vec![], saturated: false };
     }
     // Generalized Eq. (4): thread-weighted mean saturated bandwidth.
-    let b_mix: f64 = groups.iter().map(|g| g.n as f64 * g.bs_gbs).sum::<f64>() / n_tot;
+    let b_mix: f64 = groups.iter().map(|g| g.n * g.bs_gbs).sum::<f64>() / n_tot;
+    share_weighted_capacity(groups, b_mix)
+}
 
-    let demand: Vec<f64> = groups.iter().map(|g| g.n as f64 * g.f * g.bs_gbs).collect();
-    let weight: Vec<f64> = groups.iter().map(|g| g.n as f64 * g.f).collect();
+/// [`share_weighted`] with an explicit interface capacity instead of the
+/// Eq. (4) mean — the form the inter-socket link interfaces need: a link
+/// saturates at its own `link_bw`, regardless of which kernels' lines it
+/// carries, while each portion's *demand* is still `n·f·b_s` of the memory
+/// interface it targets.
+pub fn share_weighted_capacity(groups: &[WeightedGroup], capacity_gbs: f64) -> GroupShare {
+    let b_mix = capacity_gbs;
+    let demand: Vec<f64> = groups.iter().map(|g| g.n * g.f * g.bs_gbs).collect();
+    let weight: Vec<f64> = groups.iter().map(|g| g.n * g.f).collect();
     let total_demand: f64 = demand.iter().sum();
     let saturated = total_demand >= b_mix;
 
@@ -93,7 +132,7 @@ pub fn share_multigroup(groups: &[KernelGroup]) -> GroupShare {
         .map(|i| GroupShareEntry {
             alpha: if total_alloc > 0.0 { bw[i] / total_alloc } else { 0.0 },
             group_bw_gbs: bw[i],
-            per_core_gbs: if groups[i].n > 0 { bw[i] / groups[i].n as f64 } else { 0.0 },
+            per_core_gbs: if groups[i].n > 0.0 { bw[i] / groups[i].n } else { 0.0 },
         })
         .collect();
 

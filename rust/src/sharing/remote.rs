@@ -1,0 +1,595 @@
+//! Remote-access extension of the sharing model: multi-socket and SNC
+//! topologies where part of a group's cache-line stream leaves its home
+//! ccNUMA domain.
+//!
+//! The paper's Eqs. (4)+(5) assume all traffic of a contention domain stays
+//! on that domain's memory interface. Real multi-socket machines (and the
+//! paper's own dual-socket testbed) violate this whenever data is placed
+//! remotely: a line then contends on the *target* domain's memory interface
+//! and, if the target sits on another socket, additionally on the
+//! inter-socket link (QPI/UPI on Intel, xGMI on Rome).
+//!
+//! This module models that with three deliberate simplifications (all
+//! documented in `docs/MODEL.md`):
+//!
+//! 1. **Uniform spread** — a group with remote fraction `r` keeps `1-r` of
+//!    its stream on its home domain and spreads `r` uniformly over all
+//!    other domains (the behaviour of interleaved/first-touch-miss pages).
+//! 2. **Interfaces are independent Eqs. (4)+(5) instances** — every memory
+//!    interface and every link evaluates the generalized water-fill over
+//!    the traffic *portions* it carries ([`share_weighted`] with fractional
+//!    thread counts; links use their own capacity via
+//!    [`share_weighted_capacity`]). There is no global fixed point: a
+//!    portion's demand is its unconstrained `n·w·f·b_s`, not the grant of
+//!    the other interfaces it crosses.
+//! 3. **Lockstep streams** — a core interleaves its local and remote lines
+//!    in fixed proportion, so the slowest portion gates the whole stream:
+//!    the per-core bandwidth of a group is `min_p grant_p / (n·w_p)` over
+//!    its portions `p`.
+//!
+//! With `r = 0` everything collapses to one home portion of weight 1 and
+//! the evaluation is bit-identical to [`share_domains`] (pinned by the
+//! topology conformance suite).
+//!
+//! [`share_domains`]: crate::sharing::share_domains
+//!
+//! # Examples
+//!
+//! ```
+//! use membw::sharing::{share_remote, RemoteGroup, TopoShape};
+//!
+//! // Two sockets x one domain, 10 GB/s link.
+//! let shape = TopoShape {
+//!     socket_of: vec![0, 1],
+//!     bw_scale: vec![1.0, 1.0],
+//!     link_bw_gbs: 10.0,
+//! };
+//! // 8 cores on domain 0 sending a quarter of their lines to domain 1.
+//! let groups = [RemoteGroup { home: 0, n: 8, f: 0.3, bs_gbs: 60.0, remote_frac: 0.25 }];
+//! let share = share_remote(&shape, &groups).unwrap();
+//! // The remote quarter crosses the (only) link...
+//! assert_eq!(shape.links(), vec![(0, 1)]);
+//! assert!(share.links[0].demand_gbs > 0.0);
+//! // ...and the group cannot beat its solo bandwidth.
+//! assert!(share.per_core_gbs[0] <= 0.3 * 60.0 + 1e-9);
+//! ```
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::sharing::multigroup::{share_weighted, share_weighted_capacity, WeightedGroup};
+
+/// The shape of a topology as the remote model sees it: which socket each
+/// ccNUMA domain belongs to, the per-domain bandwidth scales, and the
+/// saturated bandwidth of one inter-socket link.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopoShape {
+    /// Socket of each domain, in domain order.
+    pub socket_of: Vec<usize>,
+    /// Saturated-bandwidth scale of each domain (1.0 = nominal).
+    pub bw_scale: Vec<f64>,
+    /// Saturated bandwidth of one inter-socket link, GB/s per socket pair
+    /// (0 = links not modeled; remote traffic then only contends on the
+    /// target domain's memory interface).
+    pub link_bw_gbs: f64,
+}
+
+impl TopoShape {
+    /// Number of ccNUMA domains.
+    pub fn n_domains(&self) -> usize {
+        self.socket_of.len()
+    }
+
+    /// Number of sockets.
+    pub fn n_sockets(&self) -> usize {
+        self.socket_of.iter().copied().max().map_or(0, |s| s + 1)
+    }
+
+    /// The inter-socket links: all unordered socket pairs, lexicographic.
+    /// Each is one contention interface of capacity [`TopoShape::link_bw_gbs`].
+    pub fn links(&self) -> Vec<(usize, usize)> {
+        let s = self.n_sockets();
+        let mut out = Vec::new();
+        for a in 0..s {
+            for b in (a + 1)..s {
+                out.push((a, b));
+            }
+        }
+        out
+    }
+}
+
+/// One kernel group resident on a home domain, with a remote-access split.
+#[derive(Debug, Clone, Copy)]
+pub struct RemoteGroup {
+    /// Home domain (where the group's cores are pinned).
+    pub home: usize,
+    /// Cores in the group.
+    pub n: usize,
+    /// Memory request fraction of the kernel (Eq. 2).
+    pub f: f64,
+    /// Nominal (unscaled) saturated bandwidth of the kernel, GB/s; the
+    /// per-domain scale of the *target* domain is applied per portion.
+    pub bs_gbs: f64,
+    /// Fraction of the group's cache-line stream that goes to remote
+    /// domains (uniformly spread); in `[0, 1]`.
+    pub remote_frac: f64,
+}
+
+/// One traffic portion of a group: the slice of its line stream aimed at
+/// one target domain (and possibly crossing one inter-socket link).
+#[derive(Debug, Clone, Copy)]
+pub struct Portion {
+    /// Index of the group in the input slice.
+    pub group: usize,
+    /// Target domain of the portion.
+    pub target: usize,
+    /// Fraction of the group's stream in this portion.
+    pub weight: f64,
+    /// Index into [`TopoShape::links`] if the portion crosses sockets
+    /// (None when intra-socket or when links are not modeled).
+    pub link: Option<usize>,
+    /// Water-fill grant on the target memory interface, GB/s.
+    pub mem_bw_gbs: f64,
+    /// Water-fill grant on the link (only meaningful when `link` is set).
+    pub link_grant_gbs: f64,
+    /// Effective grant: the minimum of the two, GB/s.
+    pub granted_bw_gbs: f64,
+}
+
+/// Summary of one contention interface (a domain's memory interface or an
+/// inter-socket link).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct InterfaceShare {
+    /// Capacity of the interface under its traffic mix, GB/s (generalized
+    /// Eq. 4 for memory interfaces; `link_bw` for links).
+    pub b_mix_gbs: f64,
+    /// Total unconstrained demand offered to the interface, GB/s.
+    pub demand_gbs: f64,
+    /// Whether demand meets or exceeds capacity.
+    pub saturated: bool,
+}
+
+/// Result of the remote-aware sharing evaluation.
+#[derive(Debug, Clone)]
+pub struct RemoteShare {
+    /// Per-core bandwidth of each input group after the lockstep-stream
+    /// bottleneck, GB/s.
+    pub per_core_gbs: Vec<f64>,
+    /// Aggregate bandwidth of each input group (`n ·` per-core), GB/s.
+    pub group_bw_gbs: Vec<f64>,
+    /// Per-domain memory-interface summaries.
+    pub domains: Vec<InterfaceShare>,
+    /// Per-link summaries, parallel to [`TopoShape::links`].
+    pub links: Vec<InterfaceShare>,
+    /// All traffic portions with their grants (reporting detail).
+    pub portions: Vec<Portion>,
+}
+
+/// Evaluate the remote-aware sharing model over `groups` on `shape`.
+///
+/// Fails when a remote fraction is outside `[0, 1]`, when a group with
+/// remote traffic sits on a single-domain shape, or when a home domain is
+/// out of range.
+pub fn share_remote(shape: &TopoShape, groups: &[RemoteGroup]) -> Result<RemoteShare> {
+    let nd = shape.n_domains();
+    let links = shape.links();
+
+    // 1. Expand groups into traffic portions.
+    let mut portions: Vec<Portion> = Vec::new();
+    for (gi, g) in groups.iter().enumerate() {
+        if !g.remote_frac.is_finite() || !(0.0..=1.0).contains(&g.remote_frac) {
+            return Err(Error::InvalidPlan(format!(
+                "remote fraction {} of group {gi} outside [0, 1]",
+                g.remote_frac
+            )));
+        }
+        if g.home >= nd {
+            return Err(Error::InvalidPlan(format!(
+                "group {gi} homed on domain d{} but the shape has {nd} domains",
+                g.home
+            )));
+        }
+        if g.remote_frac > 0.0 && nd < 2 {
+            return Err(Error::InvalidPlan(
+                "remote accesses need at least two ccNUMA domains".into(),
+            ));
+        }
+        let home_w = 1.0 - g.remote_frac;
+        if home_w > 0.0 {
+            portions.push(Portion {
+                group: gi,
+                target: g.home,
+                weight: home_w,
+                link: None,
+                mem_bw_gbs: 0.0,
+                link_grant_gbs: 0.0,
+                granted_bw_gbs: 0.0,
+            });
+        }
+        if g.remote_frac > 0.0 {
+            let w = g.remote_frac / (nd - 1) as f64;
+            for t in 0..nd {
+                if t == g.home {
+                    continue;
+                }
+                let link = if shape.socket_of[t] != shape.socket_of[g.home]
+                    && shape.link_bw_gbs > 0.0
+                {
+                    let pair = (
+                        shape.socket_of[g.home].min(shape.socket_of[t]),
+                        shape.socket_of[g.home].max(shape.socket_of[t]),
+                    );
+                    links.iter().position(|&l| l == pair)
+                } else {
+                    None
+                };
+                portions.push(Portion {
+                    group: gi,
+                    target: t,
+                    weight: w,
+                    link,
+                    mem_bw_gbs: 0.0,
+                    link_grant_gbs: 0.0,
+                    granted_bw_gbs: 0.0,
+                });
+            }
+        }
+    }
+
+    // 2. Every memory interface runs the generalized Eqs. (4)+(5) over the
+    // portions it carries.
+    let mut domains = vec![InterfaceShare::default(); nd];
+    for (d, dom_share) in domains.iter_mut().enumerate() {
+        let idx: Vec<usize> = (0..portions.len()).filter(|&p| portions[p].target == d).collect();
+        if idx.is_empty() {
+            continue;
+        }
+        let wg: Vec<WeightedGroup> = idx
+            .iter()
+            .map(|&p| {
+                let g = &groups[portions[p].group];
+                WeightedGroup {
+                    n: g.n as f64 * portions[p].weight,
+                    f: g.f,
+                    bs_gbs: g.bs_gbs * shape.bw_scale[d],
+                }
+            })
+            .collect();
+        let share = share_weighted(&wg);
+        for (k, &p) in idx.iter().enumerate() {
+            portions[p].mem_bw_gbs = share.groups[k].group_bw_gbs;
+        }
+        *dom_share = InterfaceShare {
+            b_mix_gbs: share.b_mix_gbs,
+            demand_gbs: wg.iter().map(|g| g.n * g.f * g.bs_gbs).sum(),
+            saturated: share.saturated,
+        };
+    }
+
+    // 3. Every link runs the same water-fill at its own capacity; a
+    // portion's demand is still that of the memory stream it ships.
+    let mut link_shares = vec![InterfaceShare::default(); links.len()];
+    for (li, link_share) in link_shares.iter_mut().enumerate() {
+        let idx: Vec<usize> =
+            (0..portions.len()).filter(|&p| portions[p].link == Some(li)).collect();
+        if idx.is_empty() {
+            continue;
+        }
+        let wg: Vec<WeightedGroup> = idx
+            .iter()
+            .map(|&p| {
+                let g = &groups[portions[p].group];
+                WeightedGroup {
+                    n: g.n as f64 * portions[p].weight,
+                    f: g.f,
+                    bs_gbs: g.bs_gbs * shape.bw_scale[portions[p].target],
+                }
+            })
+            .collect();
+        let share = share_weighted_capacity(&wg, shape.link_bw_gbs);
+        for (k, &p) in idx.iter().enumerate() {
+            portions[p].link_grant_gbs = share.groups[k].group_bw_gbs;
+        }
+        *link_share = InterfaceShare {
+            b_mix_gbs: shape.link_bw_gbs,
+            demand_gbs: wg.iter().map(|g| g.n * g.f * g.bs_gbs).sum(),
+            saturated: share.saturated,
+        };
+    }
+
+    // 4. Combine: a cross-socket portion is gated by the slower of its two
+    // interfaces; the group by its slowest portion (lockstep streams).
+    for p in portions.iter_mut() {
+        p.granted_bw_gbs = match p.link {
+            Some(_) => p.mem_bw_gbs.min(p.link_grant_gbs),
+            None => p.mem_bw_gbs,
+        };
+    }
+    let mut per_core_gbs = vec![0.0f64; groups.len()];
+    let mut group_bw_gbs = vec![0.0f64; groups.len()];
+    for (gi, g) in groups.iter().enumerate() {
+        if g.n == 0 {
+            continue;
+        }
+        let mut rate = f64::INFINITY;
+        for p in portions.iter().filter(|p| p.group == gi) {
+            rate = rate.min(p.granted_bw_gbs / (g.n as f64 * p.weight));
+        }
+        if !rate.is_finite() {
+            rate = 0.0;
+        }
+        per_core_gbs[gi] = rate;
+        group_bw_gbs[gi] = rate * g.n as f64;
+    }
+
+    Ok(RemoteShare { per_core_gbs, group_bw_gbs, domains, links: link_shares, portions })
+}
+
+/// Upper bound on memoized compositions in a [`RemoteRateModel`]: far
+/// above what a co-sim revisits (hundreds), low enough that the map can
+/// never grow with simulated time.
+const MAX_CACHED_COMPOSITIONS: usize = 4096;
+
+/// Memoized remote-aware rate evaluation for the contention-timeline
+/// engine: a global composition (core counts per `(domain, kernel)` slot)
+/// maps to per-slot per-core drain rates in bytes/s.
+///
+/// Unlike the per-domain [`crate::sharing::ShareCache`], remote traffic
+/// couples every domain (and the links), so the whole composition is one
+/// cache key and one [`share_remote`] evaluation.
+pub struct RemoteRateModel {
+    shape: TopoShape,
+    /// Remote fraction per home domain.
+    frac: Vec<f64>,
+    /// `(f, b_s[GB/s])` per kernel slot (nominal, unscaled).
+    chars: Vec<(f64, f64)>,
+    cache: HashMap<Vec<u16>, Vec<f64>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl RemoteRateModel {
+    /// Build a model for `shape` with per-domain remote fractions `frac`
+    /// and per-slot kernel characterizations `chars` (`(f, b_s)` in slot
+    /// order).
+    ///
+    /// # Panics
+    /// If `frac` does not cover every domain, a fraction is outside
+    /// `[0, 1]`, or remote traffic is requested on a single-domain shape —
+    /// all programming errors of the caller (the layout is validated at
+    /// construction time in [`crate::topology::RankLayout::with_remote`]).
+    pub fn new(shape: TopoShape, frac: Vec<f64>, chars: Vec<(f64, f64)>) -> Self {
+        assert_eq!(frac.len(), shape.n_domains(), "one remote fraction per domain");
+        for &r in &frac {
+            assert!(
+                r.is_finite() && (0.0..=1.0).contains(&r),
+                "remote fraction {r} outside [0, 1]"
+            );
+        }
+        assert!(
+            shape.n_domains() >= 2 || frac.iter().all(|&r| r == 0.0),
+            "remote accesses need at least two ccNUMA domains"
+        );
+        RemoteRateModel { shape, frac, chars, cache: HashMap::new(), hits: 0, misses: 0 }
+    }
+
+    /// Number of kernel slots.
+    pub fn slots(&self) -> usize {
+        self.chars.len()
+    }
+
+    /// One uncached evaluation of the global composition `counts`.
+    fn compute(
+        shape: &TopoShape,
+        frac: &[f64],
+        chars: &[(f64, f64)],
+        counts: &[u16],
+    ) -> Vec<f64> {
+        let nk = chars.len();
+        let mut slots: Vec<usize> = Vec::new();
+        let mut groups: Vec<RemoteGroup> = Vec::new();
+        for d in 0..shape.n_domains() {
+            for (k, &(f, bs)) in chars.iter().enumerate() {
+                let c = counts[d * nk + k];
+                if c > 0 {
+                    slots.push(d * nk + k);
+                    groups.push(RemoteGroup {
+                        home: d,
+                        n: c as usize,
+                        f,
+                        bs_gbs: bs,
+                        remote_frac: frac[d],
+                    });
+                }
+            }
+        }
+        let mut rates = vec![0.0f64; counts.len()];
+        if !groups.is_empty() {
+            let share = share_remote(shape, &groups)
+                .expect("shape and fractions validated at construction");
+            for (i, &slot) in slots.iter().enumerate() {
+                rates[slot] = share.per_core_gbs[i] * 1e9;
+            }
+        }
+        rates
+    }
+
+    /// Per-core drain rates (bytes/s) per `(domain, kernel)` slot for the
+    /// global composition `counts[d * slots + k]`. Memoized.
+    // Not the entry API: that would allocate the `Vec<u16>` key on every
+    // call, while `contains_key`/`get` borrow the slice directly — the hit
+    // path (the timeline engine's per-event cadence) stays allocation-free.
+    #[allow(clippy::map_entry)]
+    pub fn rates_bytes(&mut self, counts: &[u16]) -> &[f64] {
+        debug_assert_eq!(counts.len(), self.shape.n_domains() * self.chars.len());
+        if self.cache.contains_key(counts) {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+            // Bound the memo: a long noisy co-sim churns compositions, and
+            // unlike the 2-entry-MRU ShareCache this map would otherwise
+            // grow with simulated time. A wholesale reset is cheap and
+            // keeps results deterministic (entries are pure functions).
+            if self.cache.len() >= MAX_CACHED_COMPOSITIONS {
+                self.cache.clear();
+            }
+            let rates = Self::compute(&self.shape, &self.frac, &self.chars, counts);
+            self.cache.insert(counts.to_vec(), rates);
+        }
+        self.cache.get(counts).expect("present or just inserted").as_slice()
+    }
+
+    /// `(hits, misses, entries)` counter snapshot.
+    pub fn stats(&self) -> (u64, u64, usize) {
+        (self.hits, self.misses, self.cache.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sharing::{share_multigroup, KernelGroup};
+
+    fn two_socket_shape(link_bw: f64) -> TopoShape {
+        TopoShape { socket_of: vec![0, 0, 1, 1], bw_scale: vec![1.0; 4], link_bw_gbs: link_bw }
+    }
+
+    #[test]
+    fn shape_links_enumerate_socket_pairs() {
+        assert_eq!(two_socket_shape(10.0).links(), vec![(0, 1)]);
+        let four =
+            TopoShape { socket_of: vec![0, 1, 2, 3], bw_scale: vec![1.0; 4], link_bw_gbs: 1.0 };
+        assert_eq!(four.links(), vec![(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)]);
+        assert_eq!(four.n_sockets(), 4);
+    }
+
+    /// r = 0 collapses to the per-domain evaluation, bit for bit.
+    #[test]
+    fn zero_remote_fraction_matches_share_multigroup_bitwise() {
+        let shape = two_socket_shape(40.0);
+        let groups = [
+            RemoteGroup { home: 0, n: 4, f: 0.84, bs_gbs: 32.0, remote_frac: 0.0 },
+            RemoteGroup { home: 0, n: 4, f: 0.75, bs_gbs: 33.0, remote_frac: 0.0 },
+            RemoteGroup { home: 2, n: 6, f: 0.30, bs_gbs: 35.0, remote_frac: 0.0 },
+        ];
+        let remote = share_remote(&shape, &groups).unwrap();
+        let d0 = share_multigroup(&[
+            KernelGroup { n: 4, f: 0.84, bs_gbs: 32.0 },
+            KernelGroup { n: 4, f: 0.75, bs_gbs: 33.0 },
+        ]);
+        let d2 = share_multigroup(&[KernelGroup { n: 6, f: 0.30, bs_gbs: 35.0 }]);
+        assert_eq!(remote.per_core_gbs[0].to_bits(), d0.groups[0].per_core_gbs.to_bits());
+        assert_eq!(remote.per_core_gbs[1].to_bits(), d0.groups[1].per_core_gbs.to_bits());
+        assert_eq!(remote.per_core_gbs[2].to_bits(), d2.groups[0].per_core_gbs.to_bits());
+        assert_eq!(remote.domains[0].b_mix_gbs.to_bits(), d0.b_mix_gbs.to_bits());
+        assert_eq!(remote.domains[2].b_mix_gbs.to_bits(), d2.b_mix_gbs.to_bits());
+        // No portion crosses a link.
+        assert!(remote.portions.iter().all(|p| p.link.is_none()));
+        assert_eq!(remote.links.len(), 1);
+        assert_eq!(remote.links[0].demand_gbs, 0.0);
+    }
+
+    /// A symmetric intra-socket spread is invisible: every domain receives
+    /// exactly the traffic it exports, so rates match the local case.
+    #[test]
+    fn symmetric_intra_socket_spread_is_neutral() {
+        let shape = TopoShape { socket_of: vec![0, 0], bw_scale: vec![1.0, 1.0], link_bw_gbs: 0.0 };
+        let local = share_remote(
+            &shape,
+            &[
+                RemoteGroup { home: 0, n: 8, f: 0.8, bs_gbs: 32.0, remote_frac: 0.0 },
+                RemoteGroup { home: 1, n: 8, f: 0.8, bs_gbs: 32.0, remote_frac: 0.0 },
+            ],
+        )
+        .unwrap();
+        let spread = share_remote(
+            &shape,
+            &[
+                RemoteGroup { home: 0, n: 8, f: 0.8, bs_gbs: 32.0, remote_frac: 0.5 },
+                RemoteGroup { home: 1, n: 8, f: 0.8, bs_gbs: 32.0, remote_frac: 0.5 },
+            ],
+        )
+        .unwrap();
+        for (a, b) in local.per_core_gbs.iter().zip(&spread.per_core_gbs) {
+            assert!((a - b).abs() < 1e-9 * a.max(1.0), "{a} vs {b}");
+        }
+    }
+
+    /// A slow link gates the whole stream: shrinking the link shrinks the
+    /// group bandwidth once the link saturates.
+    #[test]
+    fn saturated_link_bottlenecks_the_stream() {
+        let mk = |link_bw: f64| {
+            let shape = TopoShape {
+                socket_of: vec![0, 1],
+                bw_scale: vec![1.0, 1.0],
+                link_bw_gbs: link_bw,
+            };
+            share_remote(
+                &shape,
+                &[RemoteGroup { home: 0, n: 8, f: 0.8, bs_gbs: 32.0, remote_frac: 0.5 }],
+            )
+            .unwrap()
+        };
+        let wide = mk(1000.0);
+        let narrow = mk(2.0);
+        assert!(narrow.links[0].saturated);
+        assert!(!wide.links[0].saturated);
+        assert!(
+            narrow.per_core_gbs[0] < wide.per_core_gbs[0],
+            "narrow {} !< wide {}",
+            narrow.per_core_gbs[0],
+            wide.per_core_gbs[0]
+        );
+        // The link-gated per-core rate is exactly link_grant / (n w).
+        let p = narrow.portions.iter().find(|p| p.link.is_some()).unwrap();
+        let expect = p.granted_bw_gbs / (8.0 * p.weight);
+        assert!((narrow.per_core_gbs[0] - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn remote_validation_errors() {
+        let single = TopoShape { socket_of: vec![0], bw_scale: vec![1.0], link_bw_gbs: 0.0 };
+        let g = RemoteGroup { home: 0, n: 2, f: 0.5, bs_gbs: 50.0, remote_frac: 0.5 };
+        assert!(share_remote(&single, &[g]).is_err(), "remote needs >= 2 domains");
+        let shape = two_socket_shape(10.0);
+        let bad_frac = RemoteGroup { remote_frac: 1.5, ..g };
+        assert!(share_remote(&shape, &[bad_frac]).is_err());
+        let bad_home = RemoteGroup { home: 9, ..g };
+        assert!(share_remote(&shape, &[bad_home]).is_err());
+        // r = 1 (no home traffic at all) is legal.
+        let all_remote = RemoteGroup { remote_frac: 1.0, ..g };
+        let share = share_remote(&shape, &[all_remote]).unwrap();
+        assert!(share.per_core_gbs[0] > 0.0);
+        assert!(share.portions.iter().all(|p| p.target != 0 || p.weight > 0.0));
+    }
+
+    #[test]
+    fn rate_model_memoizes_global_compositions() {
+        let shape = two_socket_shape(64.0);
+        let mut model = RemoteRateModel::new(
+            shape,
+            vec![0.25; 4],
+            vec![(0.84, 32.0), (0.30, 35.0)],
+        );
+        assert_eq!(model.slots(), 2);
+        let counts = vec![4u16, 0, 0, 2, 0, 0, 0, 0];
+        let a = model.rates_bytes(&counts).to_vec();
+        let b = model.rates_bytes(&counts).to_vec();
+        assert_eq!(a.len(), 8);
+        assert!(a[0] > 0.0 && a[3] > 0.0);
+        assert_eq!(a[1], 0.0, "empty slots drain nothing");
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        let (hits, misses, entries) = model.stats();
+        assert_eq!((hits, misses, entries), (1, 1, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "remote fraction")]
+    fn rate_model_rejects_bad_fractions() {
+        RemoteRateModel::new(two_socket_shape(1.0), vec![2.0; 4], vec![(0.5, 30.0)]);
+    }
+}

@@ -3,11 +3,11 @@
 //! Stands in for the paper's physical BDW/CLX/Rome machines. Two independent
 //! implementations with the same physics (see `DESIGN.md` §4):
 //!
-//! * [`fluid`] — time-stepped fluid-queueing simulator (per-cycle fractional
+//! * `fluid` — time-stepped fluid-queueing simulator (per-cycle fractional
 //!   state). The JAX/Pallas artifact executed via PJRT implements exactly
 //!   this model; the Rust version here is the cross-validation mirror and
 //!   the engine used where PJRT batching is inconvenient.
-//! * [`des`] — line-granularity discrete-event simulator with an explicit
+//! * `des` — line-granularity discrete-event simulator with an explicit
 //!   FCFS-with-lottery memory queue, integer line requests, and stochastic
 //!   tie-breaking. Higher fidelity, slower; the reference.
 //!

@@ -41,6 +41,21 @@ impl CoreWorkload {
         CoreWorkload { demand_lines_per_cy: 0.0, cost_factor: 1.0, f_ecm: 0.0, group: usize::MAX }
     }
 
+    /// The same stream thinned to a fraction `scale` of its line rate,
+    /// re-tagged as `group`. Used by the remote-access measurement: a core
+    /// that sends only part of its lines to an interface looks, to that
+    /// interface, like a core of proportionally lower demand (and several
+    /// remote cores' portions can be pooled into one synthetic workload by
+    /// passing `scale > 1`).
+    pub fn thinned(&self, scale: f64, group: usize) -> Self {
+        CoreWorkload {
+            demand_lines_per_cy: self.demand_lines_per_cy * scale,
+            cost_factor: self.cost_factor,
+            f_ecm: self.f_ecm * scale,
+            group,
+        }
+    }
+
     /// Whether this core issues any memory traffic.
     pub fn is_active(&self) -> bool {
         self.demand_lines_per_cy > 0.0
@@ -66,5 +81,16 @@ mod tests {
     #[test]
     fn idle_core_is_inactive() {
         assert!(!CoreWorkload::idle().is_active());
+    }
+
+    #[test]
+    fn thinned_scales_demand_linearly() {
+        let m = machine(MachineId::Bdw1);
+        let w = CoreWorkload::from_kernel(&kernel(KernelId::Stream), &m, 0);
+        let t = w.thinned(0.25, 7);
+        assert_eq!(t.group, 7);
+        assert!((t.demand_lines_per_cy - 0.25 * w.demand_lines_per_cy).abs() < 1e-15);
+        assert_eq!(t.cost_factor.to_bits(), w.cost_factor.to_bits());
+        assert!((t.f_ecm - 0.25 * w.f_ecm).abs() < 1e-15);
     }
 }

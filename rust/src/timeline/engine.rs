@@ -30,7 +30,7 @@ use std::collections::HashMap;
 use crate::desync::{CoSimConfig, CoSimResult, Phase, Program, SyncKind, TraceLog};
 use crate::desync::{NoiseStream, PhaseRecord};
 use crate::kernels::KernelId;
-use crate::sharing::ShareCache;
+use crate::sharing::{RemoteRateModel, ShareCache, TopoShape};
 use crate::timeline::event::{EventKind, EventQueue};
 use crate::topology::RankLayout;
 
@@ -128,6 +128,11 @@ struct Sim<'a> {
     /// One memoized sharing model per ccNUMA domain (domains contend
     /// independently; a scaled domain's cache carries its scaled b_s).
     share: Vec<ShareCache>,
+    /// The coupled remote-access rate model, when the layout carries a
+    /// nonzero remote fraction: remote traffic makes domains (and links)
+    /// interdependent, so rates come from one global evaluation instead of
+    /// the per-domain caches.
+    remote: Option<RemoteRateModel>,
     /// Kernel slots per domain.
     nk: usize,
     /// Number of ccNUMA domains.
@@ -175,6 +180,17 @@ pub fn simulate(
 /// resident ranks against its own memory interface — `layout.n_domains`
 /// concurrent contention timelines over one shared event queue. A domain
 /// with bandwidth scale `s` evaluates the sharing model against `s·b_s`.
+///
+/// When the layout carries a nonzero remote-access fraction
+/// ([`RankLayout::with_remote`]), drain rates come from the coupled
+/// remote model instead ([`crate::sharing::RemoteRateModel`]): each rank's
+/// stream splits over its home domain, the remote domains, and the
+/// inter-socket links, and any composition change re-evaluates every
+/// domain (the interfaces are no longer independent). Collective releases
+/// additionally pay the layout's inter-socket barrier latency
+/// (`collective_extra_s`; zero on single-socket layouts). An all-zero
+/// remote spec is normalized away, keeping the independent per-domain
+/// path bit-identical (pinned by the topology conformance suite).
 pub fn simulate_placed(
     program: &Program,
     n_ranks: usize,
@@ -186,6 +202,26 @@ pub fn simulate_placed(
     assert_eq!(layout.rank_domain.len(), n_ranks, "layout must place every rank");
     assert_eq!(layout.bw_scale.len(), nd, "layout must scale every domain");
     assert!(layout.rank_domain.iter().all(|&d| d < nd), "rank placed on missing domain");
+    let remote_active = layout
+        .remote
+        .as_ref()
+        .is_some_and(|r| r.frac.iter().any(|&f| f > 0.0));
+    let remote = if remote_active {
+        let spec = layout.remote.as_ref().expect("checked above");
+        assert_eq!(spec.frac.len(), nd, "remote spec must cover every domain");
+        assert_eq!(layout.socket_of.len(), nd, "remote layouts must map domains to sockets");
+        Some(RemoteRateModel::new(
+            TopoShape {
+                socket_of: layout.socket_of.clone(),
+                bw_scale: layout.bw_scale.clone(),
+                link_bw_gbs: layout.link_bw_gbs,
+            },
+            spec.frac.clone(),
+            chars.iter().map(|&(_, f, bs)| (f, bs)).collect(),
+        ))
+    } else {
+        None
+    };
     let share: Vec<ShareCache> = layout
         .bw_scale
         .iter()
@@ -209,7 +245,12 @@ pub fn simulate_placed(
                 volume: *volume_bytes,
                 sync: *sync,
             },
-            Phase::Allreduce { cost_s, .. } => PhaseInfo::Allreduce { cost: *cost_s },
+            // Multi-socket layouts pay the inter-socket barrier hops on
+            // every collective release (0.0 on single-socket layouts, so
+            // the addition is bit-neutral there).
+            Phase::Allreduce { cost_s, .. } => {
+                PhaseInfo::Allreduce { cost: *cost_s + layout.collective_extra_s }
+            }
             Phase::Idle { duration_s, .. } => PhaseInfo::Idle { duration: *duration_s },
         })
         .collect();
@@ -230,6 +271,7 @@ pub fn simulate_placed(
         collectives: HashMap::new(),
         queue: EventQueue::new(),
         share,
+        remote,
         nk,
         nd,
         domain_of: layout.rank_domain.clone(),
@@ -307,7 +349,17 @@ impl Sim<'_> {
     /// earliest projected target crossing (no queue traffic). Only dirty
     /// domains are re-evaluated — a composition change on one ccNUMA
     /// domain leaves every other domain's rates and projection untouched.
+    /// With remote traffic the interfaces are coupled, so any dirty domain
+    /// re-rates (and re-projects) all of them from one global evaluation.
     fn refresh(&mut self, t: f64) {
+        if self.remote.is_some() && self.dirty.iter().any(|&d| d) {
+            self.dirty.fill(true);
+            // Field-split borrows keep the per-event hit path copy-once and
+            // allocation-free (the model's cache hands out a borrowed slice).
+            let (rates_dst, remote) =
+                (&mut self.rates, self.remote.as_mut().expect("checked above"));
+            rates_dst.copy_from_slice(remote.rates_bytes(&self.counts));
+        }
         for d in 0..self.nd {
             if !self.dirty[d] {
                 continue;
@@ -319,7 +371,10 @@ impl Sim<'_> {
             if self.counts[lo..hi].iter().all(|&c| c == 0) {
                 continue; // nothing running here: no rates, no completion
             }
-            self.rates[lo..hi].copy_from_slice(self.share[d].rates_bytes(&self.counts[lo..hi]));
+            if self.remote.is_none() {
+                self.rates[lo..hi]
+                    .copy_from_slice(self.share[d].rates_bytes(&self.counts[lo..hi]));
+            }
             for slot in lo..hi {
                 if self.counts[slot] == 0 || self.rates[slot] <= 0.0 {
                     continue;
@@ -701,6 +756,10 @@ mod tests {
             n_domains: 2,
             rank_domain: vec![0, 0, 0, 0, 1, 1, 1, 1],
             bw_scale: vec![1.0, 1.0],
+            socket_of: vec![0, 0],
+            link_bw_gbs: 0.0,
+            collective_extra_s: 0.0,
+            remote: None,
         };
         let placed = simulate_placed(&prog, 8, &cfg(), &chars, &layout);
         assert_eq!(placed.trace.records.len(), 8);
@@ -737,11 +796,110 @@ mod tests {
             n_domains: 2,
             rank_domain: vec![0, 1],
             bw_scale: vec![1.0, 0.5],
+            socket_of: vec![0, 0],
+            link_bw_gbs: 0.0,
+            collective_extra_s: 0.0,
+            remote: None,
         };
         let r = simulate_placed(&prog, 2, &cfg(), &chars, &layout);
         let d0 = r.trace.records.iter().find(|x| x.rank == 0).unwrap().duration();
         let d1 = r.trace.records.iter().find(|x| x.rank == 1).unwrap().duration();
         assert!((d1 - 2.0 * d0).abs() < 1e-9 * d1, "{d1} vs 2x{d0}");
+    }
+
+    #[test]
+    fn all_zero_remote_spec_is_bit_identical_to_none() {
+        use crate::topology::RemoteTraffic;
+        let prog = one_kernel_program(2e9);
+        let chars = [(KernelId::Ddot2, 0.4, 100.0)];
+        let base = RankLayout {
+            n_domains: 2,
+            rank_domain: vec![0, 0, 1, 1],
+            bw_scale: vec![1.0, 1.0],
+            socket_of: vec![0, 1],
+            link_bw_gbs: 40.0,
+            collective_extra_s: 0.0,
+            remote: None,
+        };
+        let mut zeroed = base.clone();
+        zeroed.remote = Some(RemoteTraffic { frac: vec![0.0, 0.0] });
+        let a = simulate_placed(&prog, 4, &cfg(), &chars, &base);
+        let b = simulate_placed(&prog, 4, &cfg(), &chars, &zeroed);
+        assert_eq!(a.trace.records.len(), b.trace.records.len());
+        for (x, y) in a.trace.records.iter().zip(&b.trace.records) {
+            assert_eq!(x.t_start.to_bits(), y.t_start.to_bits());
+            assert_eq!(x.t_end.to_bits(), y.t_end.to_bits());
+        }
+        assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn symmetric_intra_socket_remote_is_neutral() {
+        // Both domains run the same composition and exchange equal traffic
+        // with no link in the way: every domain receives exactly what it
+        // exports, so the drain rates match the all-local run.
+        let prog = one_kernel_program(1.5e9);
+        let chars = [(KernelId::Ddot2, 0.4, 100.0)];
+        let mk = |remote: Option<f64>| {
+            let layout = RankLayout {
+                n_domains: 2,
+                rank_domain: vec![0, 0, 0, 1, 1, 1],
+                bw_scale: vec![1.0, 1.0],
+                socket_of: vec![0, 0],
+                link_bw_gbs: 0.0,
+                collective_extra_s: 0.0,
+                remote: None,
+            };
+            let layout = match remote {
+                Some(f) => layout.with_remote(f).unwrap(),
+                None => layout,
+            };
+            simulate_placed(&prog, 6, &cfg(), &chars, &layout)
+        };
+        let local = mk(None);
+        let spread = mk(Some(0.5));
+        for (x, y) in local.trace.records.iter().zip(&spread.trace.records) {
+            let (a, b) = (x.duration(), y.duration());
+            assert!((a - b).abs() < 1e-9 * a, "rank {}: {a} vs {b}", x.rank);
+        }
+    }
+
+    #[test]
+    fn saturated_link_slows_cross_socket_remote_drain() {
+        let prog = one_kernel_program(1.5e9);
+        let chars = [(KernelId::Ddot2, 0.4, 100.0)];
+        let mk = |link_bw: f64, frac: f64| {
+            let layout = RankLayout {
+                n_domains: 2,
+                rank_domain: vec![0, 0, 0, 1, 1, 1],
+                bw_scale: vec![1.0, 1.0],
+                socket_of: vec![0, 1],
+                link_bw_gbs: link_bw,
+                collective_extra_s: 0.0,
+                remote: None,
+            }
+            .with_remote(frac)
+            .unwrap();
+            simulate_placed(&prog, 6, &cfg(), &chars, &layout)
+        };
+        let wide = mk(1000.0, 0.5);
+        let narrow = mk(2.0, 0.5);
+        let (a, b) = (wide.trace.records[0].duration(), narrow.trace.records[0].duration());
+        assert!(b > 1.5 * a, "narrow-link duration {b} should far exceed {a}");
+    }
+
+    #[test]
+    fn collective_extra_delays_every_release() {
+        let prog = Program {
+            phases: vec![Phase::Allreduce { cost_s: 0.5, label: "AR" }],
+            iterations: 1,
+        };
+        let mut layout = RankLayout::single(3);
+        layout.collective_extra_s = 1e-3;
+        let r = simulate_placed(&prog, 3, &cfg(), &[(KernelId::Ddot2, 0.2, 100.0)], &layout);
+        for fin in &r.finish_s {
+            assert!((fin - 0.501).abs() < 1e-12, "finish {fin}");
+        }
     }
 
     #[test]

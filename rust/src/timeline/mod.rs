@@ -22,6 +22,37 @@
 //! [`crate::desync::CoSimEngine`] is the user-facing driver over this
 //! layer; the legacy stepper survives behind the `legacy-stepper` feature
 //! (and in unit tests) as the golden reference.
+//!
+//! # Examples
+//!
+//! One rank draining one kernel completes at the closed-form time
+//! `volume / (f · b_s)` — exactly, with no time step:
+//!
+//! ```
+//! use membw::desync::{CoSimConfig, NoiseModel, Phase, Program, SyncKind};
+//! use membw::kernels::KernelId;
+//! use membw::timeline::simulate;
+//!
+//! let program = Program {
+//!     phases: vec![Phase::Kernel {
+//!         kernel: KernelId::Ddot2,
+//!         volume_bytes: 2e9,
+//!         sync: SyncKind::None,
+//!         label: "K",
+//!     }],
+//!     iterations: 1,
+//! };
+//! let config = CoSimConfig {
+//!     dt_s: 1.0, // ignored: the event engine has no time step
+//!     t_max_s: 1e6,
+//!     initial_stagger_s: 0.0,
+//!     neighbor_radius: 1,
+//!     noise: NoiseModel::off(),
+//! };
+//! let r = simulate(&program, 1, &config, &[(KernelId::Ddot2, 0.2, 100.0)]);
+//! let expect = 2e9 / (0.2 * 100.0e9);
+//! assert!((r.finish_s[0] - expect).abs() < 1e-9 * expect);
+//! ```
 
 pub mod event;
 pub mod engine;

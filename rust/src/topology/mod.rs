@@ -13,16 +13,42 @@
 //! pre-topology entry point reduces to; conformance tests pin it
 //! bit-identical to the legacy single-domain paths.
 //!
-//! [`placement`] holds the other half of the layer: how work lands on the
-//! domains (compact / scatter / explicit `@dN` pinning) and the per-domain
-//! splitting of workload mixes and rank sets.
+//! Multi-socket topologies (`<S>x<D>` specs) additionally expose the
+//! inter-socket links ([`Topology::links`]) as contention interfaces for
+//! the remote-access extension ([`crate::sharing::remote`]), and
+//! Sub-NUMA-Clustering specs (`snc2`, `snc4`) split a monolithic Intel
+//! socket into equal sub-domains. `placement` holds the other half of the
+//! layer: how work lands on the domains (compact / scatter / explicit
+//! `@dN` pinning) and the per-domain splitting of workload mixes and rank
+//! sets.
+//!
+//! # Examples
+//!
+//! ```
+//! use membw::config::{machine, MachineId};
+//! use membw::topology::Topology;
+//!
+//! let rome = machine(MachineId::Rome);
+//! // Two sockets x NPS4: eight ccNUMA domains, one xGMI link.
+//! let two_socket = Topology::parse(&rome, "2x4").unwrap();
+//! assert_eq!(two_socket.n_domains(), 8);
+//! assert_eq!(two_socket.domains[4].socket, 1);
+//! assert_eq!(two_socket.links(), vec![(0, 1)]);
+//!
+//! // Sub-NUMA-Clustering splits a monolithic Cascade Lake socket.
+//! let clx = machine(MachineId::Clx);
+//! let snc2 = Topology::parse(&clx, "snc2").unwrap();
+//! assert_eq!(snc2.n_domains(), 2);
+//! assert_eq!(snc2.domains[0].machine.cores, clx.cores / 2);
+//! ```
 
 mod placement;
 
-pub use placement::{DomainMix, GroupPlacement, Placement, RankLayout, SplitMix};
+pub use placement::{DomainMix, GroupPlacement, Placement, RankLayout, RemoteTraffic, SplitMix};
 
 use crate::config::Machine;
 use crate::error::{Error, Result};
+use crate::sharing::TopoShape;
 
 /// Upper bound on ccNUMA domains per topology (generous: the largest real
 /// systems are well under 100 domains across all sockets).
@@ -159,6 +185,34 @@ impl Topology {
         self.domains.iter().map(|d| d.bw_scale).collect()
     }
 
+    /// Socket of each domain, in domain order.
+    pub fn socket_of(&self) -> Vec<usize> {
+        self.domains.iter().map(|d| d.socket).collect()
+    }
+
+    /// The inter-socket links (all unordered socket pairs, lexicographic);
+    /// empty on single-socket topologies.
+    pub fn links(&self) -> Vec<(usize, usize)> {
+        self.shape().links()
+    }
+
+    /// The topology as the remote-access model sees it: domain→socket map,
+    /// bandwidth scales, and the base machine's per-link bandwidth.
+    pub fn shape(&self) -> TopoShape {
+        TopoShape {
+            socket_of: self.socket_of(),
+            bw_scale: self.bw_scales(),
+            link_bw_gbs: self.base.link_bw_gbs,
+        }
+    }
+
+    /// Extra collective (Allreduce) release latency of the topology: each
+    /// socket beyond the first adds one inter-socket hop,
+    /// `(S-1) · link_latency`. Zero on single-socket topologies.
+    pub fn collective_extra_s(&self) -> f64 {
+        self.sockets.saturating_sub(1) as f64 * self.base.link_latency_us * 1e-6
+    }
+
     /// Compact display label, e.g. `rome-1s4d` (1 socket × 4 domains).
     pub fn label(&self) -> String {
         format!(
@@ -169,12 +223,40 @@ impl Topology {
         )
     }
 
+    /// The base row of a Sub-NUMA-Clustering mode: the monolithic socket
+    /// described by `base` split into `n` equal sub-domains (cores and
+    /// memory channels divide evenly; the per-domain saturated bandwidth is
+    /// `1/n` of the socket's). Inter-socket link parameters are per link
+    /// and stay untouched.
+    fn snc_base(base: &Machine, n: usize) -> Result<Machine> {
+        if n < 2 {
+            return Err(Error::InvalidPlan(format!(
+                "SNC needs at least 2 sub-domains (got {n})"
+            )));
+        }
+        if base.cores % n != 0 {
+            return Err(Error::InvalidPlan(format!(
+                "snc{n} needs a core count divisible by {n}, but {} has {} cores",
+                base.name, base.cores
+            )));
+        }
+        let mut m = base.clone();
+        m.cores /= n;
+        m.theor_bw_gbs /= n as f64;
+        m.read_bw_gbs /= n as f64;
+        m.domains_per_socket = n;
+        m.microarch = format!("{} SNC{n}", m.microarch);
+        Ok(m)
+    }
+
     /// Parse a CLI topology spec against a base machine:
     ///
     /// * `domain` (or `single`) — one domain, the degenerate case;
     /// * `socket` — the machine's full socket (`domains_per_socket` domains);
     /// * `<D>` — D domains on one socket (e.g. `4`);
     /// * `<S>x<D>` — S sockets × D domains each (e.g. `2x4`);
+    /// * `snc<N>` / `<S>xsnc<N>` — Sub-NUMA-Clustering: the monolithic
+    ///   socket row split into N equal sub-domains (e.g. `snc2` on CLX);
     /// * an optional `@s0,s1,...` suffix with one saturated-bandwidth scale
     ///   per domain (e.g. `4@1,1,0.9,0.95`).
     pub fn parse(base: &Machine, spec: &str) -> Result<Self> {
@@ -183,22 +265,30 @@ impl Topology {
             Some((s, sc)) => (s.trim(), Some(sc.trim())),
             None => (spec, None),
         };
-        let (sockets, dps) = match shape.to_ascii_lowercase().as_str() {
-            "domain" | "single" => (1, 1),
-            "socket" => (1, base.domains_per_socket.max(1)),
+        let (sockets, dps, snc) = match shape.to_ascii_lowercase().as_str() {
+            "domain" | "single" => (1, 1, false),
+            "socket" => (1, base.domains_per_socket.max(1), false),
             other => {
                 let parse_dim = |s: &str, what: &str| -> Result<usize> {
                     match s.trim().parse::<usize>() {
                         Ok(v) if v >= 1 => Ok(v),
                         _ => Err(Error::InvalidPlan(format!(
                             "bad {what} '{s}' in topology spec '{spec}' \
-                             (expected: domain, socket, <D>, or <S>x<D>)"
+                             (expected: domain, socket, <D>, <S>x<D>, snc<N>, or <S>xsnc<N>)"
                         ))),
                     }
                 };
-                match other.split_once('x') {
-                    Some((s, d)) => (parse_dim(s, "socket count")?, parse_dim(d, "domain count")?),
-                    None => (1, parse_dim(other, "domain count")?),
+                let (socket_txt, domain_txt) = match other.split_once('x') {
+                    Some((s, d)) => (Some(s), d),
+                    None => (None, other),
+                };
+                let sockets = match socket_txt {
+                    Some(s) => parse_dim(s, "socket count")?,
+                    None => 1,
+                };
+                match domain_txt.trim().strip_prefix("snc") {
+                    Some(n_txt) => (sockets, parse_dim(n_txt, "SNC sub-domain count")?, true),
+                    None => (sockets, parse_dim(domain_txt, "domain count")?, false),
                 }
             }
         };
@@ -216,7 +306,12 @@ impl Topology {
                 })
                 .collect::<Result<Vec<f64>>>()?,
         };
-        Topology::build(base, sockets, dps, &scales)
+        if snc {
+            let sub = Topology::snc_base(base, dps)?;
+            Topology::build(&sub, sockets, dps, &scales)
+        } else {
+            Topology::build(base, sockets, dps, &scales)
+        }
     }
 }
 
@@ -272,6 +367,53 @@ mod tests {
         assert!((t.domains[3].machine.read_bw_gbs - 0.5 * m.read_bw_gbs).abs() < 1e-12);
         assert!(Topology::build(&m, 1, 4, &[1.0]).is_err(), "scale arity enforced");
         assert!(Topology::build(&m, 1, 4, &[1.0, 1.0, 0.0, 1.0]).is_err(), "positive scales");
+    }
+
+    #[test]
+    fn snc_specs_split_monolithic_sockets() {
+        let clx = machine(MachineId::Clx); // 20 cores, 110 GB/s read
+        let snc2 = Topology::parse(&clx, "snc2").unwrap();
+        assert_eq!(snc2.n_domains(), 2);
+        assert_eq!(snc2.total_cores(), clx.cores);
+        for d in &snc2.domains {
+            assert_eq!(d.machine.cores, 10);
+            assert!((d.machine.read_bw_gbs - clx.read_bw_gbs / 2.0).abs() < 1e-12);
+        }
+        let snc4 = Topology::parse(&clx, "snc4").unwrap();
+        assert_eq!(snc4.n_domains(), 4);
+        assert_eq!(snc4.domains[0].machine.cores, 5);
+        // Two-socket SNC2: four domains over two sockets.
+        let two = Topology::parse(&clx, "2xsnc2").unwrap();
+        assert_eq!(two.n_domains(), 4);
+        assert_eq!(two.sockets, 2);
+        assert_eq!(two.domains[2].socket, 1);
+        // Link parameters are per link, not per domain: untouched by SNC.
+        assert_eq!(two.base.link_bw_gbs.to_bits(), clx.link_bw_gbs.to_bits());
+        // BDW-1 has 10 cores: snc4 does not divide evenly.
+        let bdw = machine(MachineId::Bdw1);
+        assert!(Topology::parse(&bdw, "snc4").is_err());
+        assert!(Topology::parse(&bdw, "snc2").is_ok());
+        assert!(Topology::parse(&clx, "snc1").is_err(), "SNC needs >= 2 sub-domains");
+        assert!(Topology::parse(&clx, "sncx").is_err());
+    }
+
+    #[test]
+    fn links_and_shape_expose_socket_structure() {
+        let m = machine(MachineId::Rome);
+        let one = Topology::socket(&m);
+        assert!(one.links().is_empty());
+        assert_eq!(one.collective_extra_s(), 0.0);
+        let two = Topology::parse(&m, "2x4").unwrap();
+        assert_eq!(two.links(), vec![(0, 1)]);
+        let shape = two.shape();
+        assert_eq!(shape.socket_of, vec![0, 0, 0, 0, 1, 1, 1, 1]);
+        assert_eq!(shape.n_sockets(), 2);
+        assert_eq!(shape.link_bw_gbs.to_bits(), m.link_bw_gbs.to_bits());
+        let want = m.link_latency_us * 1e-6;
+        assert!((two.collective_extra_s() - want).abs() < 1e-18);
+        let four = Topology::parse(&m, "4x1").unwrap();
+        assert_eq!(four.links().len(), 6);
+        assert!((four.collective_extra_s() - 3.0 * want).abs() < 1e-18);
     }
 
     #[test]

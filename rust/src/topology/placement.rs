@@ -92,6 +92,19 @@ impl Placement {
             )));
         }
         let nd = topo.n_domains();
+        if nd < 2 {
+            if let Some(g) = mix.groups.iter().find(|g| g.remote_ppm > 0) {
+                return Err(Error::InvalidPlan(format!(
+                    "mix '{}': group {}:{} has remote fraction {} but topology {} has a single \
+                     domain (remote accesses need at least two)",
+                    mix.label(),
+                    g.kernel.key(),
+                    g.cores,
+                    g.remote_frac(),
+                    topo.label(),
+                )));
+            }
+        }
         let mut free: Vec<usize> = topo.domains.iter().map(|d| d.machine.cores).collect();
         let mut assign = vec![vec![0usize; nd]; mix.groups.len()];
         let overflow = |g: &GroupSpec| {
@@ -212,6 +225,7 @@ impl Placement {
                             kernel: g.kernel,
                             cores: assign[gi][d],
                             place: g.place,
+                            remote_ppm: g.remote_ppm,
                         });
                         origin.push(gi);
                     }
@@ -260,7 +274,15 @@ impl Placement {
                 }
             }
         }
-        Ok(RankLayout { n_domains: nd, rank_domain, bw_scale: topo.bw_scales() })
+        Ok(RankLayout {
+            n_domains: nd,
+            rank_domain,
+            bw_scale: topo.bw_scales(),
+            socket_of: topo.socket_of(),
+            link_bw_gbs: topo.base.link_bw_gbs,
+            collective_extra_s: topo.collective_extra_s(),
+            remote: None,
+        })
     }
 }
 
@@ -290,6 +312,16 @@ impl SplitMix {
     }
 }
 
+/// Remote-access traffic of a co-simulation layout: every rank homed on
+/// domain `d` sends `frac[d]` of its cache-line stream to remote domains
+/// (uniform spread, inter-socket portions crossing the links — see
+/// [`crate::sharing::remote`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RemoteTraffic {
+    /// Remote fraction per home domain, each in `[0, 1]`.
+    pub frac: Vec<f64>,
+}
+
 /// Rank→domain assignment of a co-simulation on a topology (the timeline
 /// engine keys its contention state by `rank_domain`).
 #[derive(Debug, Clone, PartialEq)]
@@ -300,17 +332,53 @@ pub struct RankLayout {
     pub rank_domain: Vec<usize>,
     /// Per-domain saturated-bandwidth scale (1.0 = nominal).
     pub bw_scale: Vec<f64>,
+    /// Socket of each domain (all zero on single-socket layouts).
+    pub socket_of: Vec<usize>,
+    /// Saturated bandwidth of one inter-socket link, GB/s (0 = links not
+    /// modeled).
+    pub link_bw_gbs: f64,
+    /// Extra collective (Allreduce) release latency from inter-socket
+    /// barrier hops, seconds; 0 on single-socket layouts.
+    pub collective_extra_s: f64,
+    /// Remote-access traffic spec (None = all traffic stays home).
+    pub remote: Option<RemoteTraffic>,
 }
 
 impl RankLayout {
     /// The degenerate layout: every rank on one nominal domain.
     pub fn single(n_ranks: usize) -> Self {
-        RankLayout { n_domains: 1, rank_domain: vec![0; n_ranks], bw_scale: vec![1.0] }
+        RankLayout {
+            n_domains: 1,
+            rank_domain: vec![0; n_ranks],
+            bw_scale: vec![1.0],
+            socket_of: vec![0],
+            link_bw_gbs: 0.0,
+            collective_extra_s: 0.0,
+            remote: None,
+        }
     }
 
     /// Whether this is the degenerate single-domain layout.
     pub fn is_single(&self) -> bool {
         self.n_domains == 1 && self.bw_scale[0] == 1.0
+    }
+
+    /// Attach a uniform remote-access fraction: every rank sends `frac` of
+    /// its cache-line stream to remote domains. Fails when `frac` is
+    /// outside `[0, 1]` or nonzero on a single-domain layout.
+    pub fn with_remote(mut self, frac: f64) -> Result<Self> {
+        if !frac.is_finite() || !(0.0..=1.0).contains(&frac) {
+            return Err(Error::InvalidPlan(format!(
+                "remote fraction {frac} outside [0, 1]"
+            )));
+        }
+        if frac > 0.0 && self.n_domains < 2 {
+            return Err(Error::InvalidPlan(
+                "remote accesses need at least two ccNUMA domains".into(),
+            ));
+        }
+        self.remote = Some(RemoteTraffic { frac: vec![frac; self.n_domains] });
+        Ok(self)
     }
 }
 
@@ -425,6 +493,54 @@ mod tests {
         let single = Placement::Scatter.rank_layout(&Topology::single(&machine(MachineId::Clx)), 5).unwrap();
         assert!(single.is_single());
         assert_eq!(single.rank_domain, vec![0; 5]);
+    }
+
+    #[test]
+    fn split_carries_remote_fractions_to_sub_groups() {
+        let topo = rome_socket();
+        let mix = Mix::parse("dcopy:12@scatter%r0.25+ddot2:4@d1").unwrap();
+        let split = Placement::Scatter.split(&topo, &mix).unwrap();
+        for d in 0..4 {
+            let dcopy = split.domains[d]
+                .mix
+                .groups
+                .iter()
+                .find(|g| g.kernel == KernelId::Dcopy)
+                .expect("dcopy scattered everywhere");
+            assert_eq!(dcopy.remote_ppm, 250_000, "domain {d}");
+        }
+        let ddot = split.domains[1]
+            .mix
+            .groups
+            .iter()
+            .find(|g| g.kernel == KernelId::Ddot2)
+            .unwrap();
+        assert_eq!(ddot.remote_ppm, 0);
+        // Remote fractions on a single-domain topology are rejected.
+        let single = Topology::single(&machine(MachineId::Clx));
+        let remote = Mix::parse("dcopy:4%r0.5").unwrap();
+        let e = Placement::Compact.split(&single, &remote).unwrap_err().to_string();
+        assert!(e.contains("single"), "{e}");
+    }
+
+    #[test]
+    fn rank_layout_exposes_sockets_links_and_remote() {
+        let m = machine(MachineId::Rome);
+        let two = Topology::parse(&m, "2x4").unwrap();
+        let layout = Placement::Compact.rank_layout(&two, 16).unwrap();
+        assert_eq!(layout.socket_of, vec![0, 0, 0, 0, 1, 1, 1, 1]);
+        assert_eq!(layout.link_bw_gbs.to_bits(), m.link_bw_gbs.to_bits());
+        assert!((layout.collective_extra_s - m.link_latency_us * 1e-6).abs() < 1e-18);
+        assert!(layout.remote.is_none());
+        let with = layout.clone().with_remote(0.25).unwrap();
+        assert_eq!(with.remote.as_ref().unwrap().frac, vec![0.25; 8]);
+        assert!(layout.clone().with_remote(1.5).is_err());
+        // Single-socket layouts have no collective extra; single-domain
+        // layouts reject remote traffic.
+        let one = Placement::Compact.rank_layout(&Topology::socket(&m), 8).unwrap();
+        assert_eq!(one.collective_extra_s, 0.0);
+        assert!(RankLayout::single(4).with_remote(0.5).is_err());
+        assert!(RankLayout::single(4).with_remote(0.0).is_ok());
     }
 
     #[test]
