@@ -1,0 +1,664 @@
+#!/usr/bin/env python3
+"""Pure-Python mirror of the multi-interface simulation substrate.
+
+Mirrors `rust/src/simulator/network.rs` (and the single-interface seed
+loops it generalizes) operation for operation — same IEEE-754 double
+arithmetic in the same order, same xorshift64* draw sequence — so the two
+implementations can be compared *bitwise*. Run it directly:
+
+    python3 python/netfluid_mirror.py
+
+It executes the mirror's own conformance checks:
+
+1. the generalized multi-interface fluid loop, run on a degenerate
+   single-interface network, is bit-identical to the seed fused loop of
+   `rust/src/simulator/fluid.rs`;
+2. the generalized multi-interface DES, run with r = 0 on a multi-domain
+   network, decomposes into components that replay the seed DES of
+   `rust/src/simulator/des.rs` per domain, bit for bit;
+3. the worked 2xNPS4 Rome link-gated example of `docs/SIMULATORS.md`:
+   multi-interface fluid vs the analytic `share_remote` water-fill within
+   the paper's 8% ceiling (and the link never exceeds its capacity).
+
+Keep this file in sync with the Rust — it is the reference the docs'
+numbers are cross-checked against (see docs/SIMULATORS.md).
+"""
+
+import heapq
+import math
+
+CACHE_LINE = 64.0
+ELEMS_PER_LINE = 8.0
+
+# --------------------------------------------------------------------------
+# Machine rows (rust/src/config/machine.rs) — the fields the simulators use.
+# --------------------------------------------------------------------------
+
+MACHINES = {
+    "bdw1": dict(cores=10, freq=2.2, simd=32, ld_per_cy=2.0, l1l2=64.0, l2l3=32.0,
+                 llc="inclusive", overlap="sum", read_bw=66.9, stream_pen=0.0,
+                 residue=3.2, residue_all=False, link_bw=38.4,
+                 L0=200.0, D0=1.5, beta=1.0, wp=0.26),
+    "rome": dict(cores=8, freq=2.35, simd=32, ld_per_cy=2.0, l1l2=64.0, l2l3=32.0,
+                 llc="victim", overlap="max", read_bw=35.0, stream_pen=0.022,
+                 residue=0.9, residue_all=True, link_bw=64.0,
+                 L0=260.0, D0=1.5, beta=1.0, wp=0.02),
+}
+
+# Streaming kernels: (reads, writes, rfo, loads/iter, stores/iter, flops/iter)
+KERNELS = {
+    "dcopy": (1, 1, 1, 1, 1, 0),
+    "ddot2": (2, 0, 0, 2, 0, 2),
+    "stream": (2, 1, 1, 2, 1, 2),
+    "daxpy": (2, 1, 0, 2, 1, 2),
+}
+
+
+def cost_factor(m, write_frac, streams):
+    g = 1.0 - math.exp(-write_frac / 0.12)
+    wr = 1.0 + m["wp"] * g
+    st = max(1.0 - m["stream_pen"] * (streams - 1), 0.5)
+    return wr / st
+
+
+def saturated_bw(m, write_frac, streams):
+    return m["read_bw"] / cost_factor(m, write_frac, streams)
+
+
+def capacity_lines_per_cy(m):
+    return m["read_bw"] / m["freq"] / CACHE_LINE
+
+
+def to_gbs(m, lines_per_cy):
+    return lines_per_cy * CACHE_LINE * m["freq"]
+
+
+def ecm_workload(m, kname):
+    """Mirror of ecm::predict -> CoreWorkload: (d, c, f, bs)."""
+    reads, writes, rfo, loads, stores, flops = KERNELS[kname]
+    total = reads + writes + rfo
+    wf = writes / total
+    lanes = m["simd"] / 8.0
+    iters = ELEMS_PER_LINE
+    t_ol = iters * flops / (2.0 * lanes * 2.0)
+    t_l1reg = math.ceil(iters * loads / lanes) / m["ld_per_cy"]
+    t_l1l2 = total * CACHE_LINE / m["l1l2"]
+    if m["llc"] == "inclusive":
+        l3_lines = total
+    else:
+        l3_lines = max(reads - reads, 0) + writes  # l3 == mem for streaming
+    t_l2l3 = l3_lines * CACHE_LINE / m["l2l3"]
+    bs = saturated_bw(m, wf, total)
+    t_mem = total * CACHE_LINE / (bs / m["freq"])
+    residue_lines = total if m["residue_all"] else reads + rfo
+    t_lat = m["residue"] * residue_lines
+    if m["overlap"] == "sum":
+        t_ecm = max(t_ol, t_l1reg + t_l1l2 + t_l2l3 + t_mem + t_lat)
+    else:
+        t_ecm = max(t_ol, t_l1reg, t_l1l2, t_l2l3, t_mem + t_lat)
+    f = t_mem / t_ecm
+    d = total / t_ecm
+    c = cost_factor(m, wf, total)
+    return d, c, f, bs
+
+
+# --------------------------------------------------------------------------
+# xorshift64* (rust/src/simulator/xorshift.rs)
+# --------------------------------------------------------------------------
+
+M64 = (1 << 64) - 1
+
+
+class XorShift64:
+    def __init__(self, seed):
+        self.state = seed if seed != 0 else 0x9E3779B97F4A7C15
+
+    def next_u64(self):
+        x = self.state
+        x ^= x >> 12
+        x = (x ^ (x << 25)) & M64
+        x ^= x >> 27
+        self.state = x
+        return (x * 0x2545F4914F6CDD1D) & M64
+
+    def next_f64(self):
+        return (self.next_u64() >> 11) / float(1 << 53)
+
+
+# --------------------------------------------------------------------------
+# Seed single-interface loops (fluid.rs / des.rs, verbatim semantics)
+# --------------------------------------------------------------------------
+
+def fluid_seed(m, workloads, warmup=4096, measure=12288):
+    """workloads: list of (d, c). Returns (per_core_lines_per_cy, util)."""
+    cap = capacity_lines_per_cy(m)
+    n = len(workloads)
+    d = [w[0] for w in workloads]
+    c = [w[1] for w in workloads]
+    win = [m["D0"] + m["beta"] * d[i] * c[i] * m["L0"] for i in range(n)]
+    occ = [0.0] * n
+    served = [0.0] * n
+    u_accum = 0.0
+    occ_cost = 0.0
+    for cycle in range(warmup + measure + 1):
+        measuring = cycle > warmup
+        lam = min(cap / occ_cost, 1.0) if occ_cost > 1e-12 else 1.0
+        if measuring:
+            u_accum += min(occ_cost / cap, 1.0)
+        keep = 1.0 - lam
+        occ_cost = 0.0
+        for i in range(n):
+            o_pre = occ[i]
+            if measuring:
+                served[i] += lam * o_pre
+            o = o_pre * keep
+            if d[i] > 0.0:
+                o += min(d[i], max(win[i] - o, 0.0))
+            occ[i] = o
+            occ_cost += o * c[i]
+    return [s / measure for s in served], u_accum / measure
+
+
+def des_seed(m, workloads, warmup=40000.0, measure=400000.0, seed=0xB4D5EED):
+    """Seed DES. workloads: list of (d, c). Returns per-core served lines/cy."""
+    cap = capacity_lines_per_cy(m)
+    rng = XorShift64(seed)
+    n = len(workloads)
+    gap, window, cost, queued, busy_flag = [], [], [], [], [False]
+    outstanding = [0] * n
+    blocked = [False] * n
+    served = [0] * n
+    for d, c in workloads:
+        gap.append(1.0 / d if d > 0.0 else math.inf)
+        w = m["D0"] + m["beta"] * d * c * m["L0"]
+        window.append(max(int(math.floor(w + 0.5)), 1))  # f64::round, half away
+        cost.append(c / cap)
+        queued.append(0)
+    heap = []
+    for i in range(n):
+        if math.isfinite(gap[i]):
+            heapq.heappush(heap, (rng.next_f64() * gap[i], i, 0))
+    t_end = warmup + measure
+
+    def try_serve(t):
+        if busy_flag[0]:
+            return
+        total = sum(queued)
+        if total == 0:
+            return
+        x = int(rng.next_f64() * total)
+        pick = 0
+        for i in range(n):
+            if x < queued[i]:
+                pick = i
+                break
+            x -= queued[i]
+        queued[pick] -= 1
+        busy_flag[0] = True
+        heapq.heappush(heap, (t + cost[pick], pick, 1))
+
+    while heap:
+        t, idx, kind = heapq.heappop(heap)
+        if t >= t_end:
+            break
+        if kind == 0:
+            if outstanding[idx] < window[idx]:
+                queued[idx] += 1
+                outstanding[idx] += 1
+                blocked[idx] = False
+                jitter = 0.95 + 0.1 * rng.next_f64()
+                heapq.heappush(heap, (t + gap[idx] * jitter, idx, 0))
+                try_serve(t)
+            else:
+                blocked[idx] = True
+        else:
+            outstanding[idx] -= 1
+            if t >= warmup:
+                served[idx] += 1
+            busy_flag[0] = False
+            if blocked[idx]:
+                blocked[idx] = False
+                heapq.heappush(heap, (t, idx, 0))
+            try_serve(t)
+    return [s / measure for s in served]
+
+
+# --------------------------------------------------------------------------
+# The interface network (network.rs)
+# --------------------------------------------------------------------------
+
+class Net:
+    """mem_caps: lines/cy per domain; links: socket pairs; link_cap lines/cy."""
+
+    def __init__(self, mem_caps, socket_of, links, link_cap, m):
+        self.mem_caps = mem_caps
+        self.socket_of = socket_of
+        self.links = links
+        self.link_cap = link_cap
+        self.m = m
+
+
+def net_of(m, sockets, domains_per_socket, bw_scale=None):
+    nd = sockets * domains_per_socket
+    scale = bw_scale or [1.0] * nd
+    mem_caps = [capacity_lines_per_cy(m) * s for s in scale]
+    socket_of = [d // domains_per_socket for d in range(nd)]
+    links = [(a, b) for a in range(sockets) for b in range(a + 1, sockets)]
+    link_cap = m["link_bw"] / m["freq"] / CACHE_LINE if m["link_bw"] > 0 else 0.0
+    return Net(mem_caps, socket_of, links, link_cap, m)
+
+
+def route(net, streams):
+    """streams: list of (d, c, home, r). Returns portions
+    (stream, target, link_or_None, weight)."""
+    nd = len(net.mem_caps)
+    portions = []
+    for si, (d, c, home, r) in enumerate(streams):
+        home_w = 1.0 - r
+        if home_w > 0.0:
+            portions.append((si, home, None, home_w))
+        if r > 0.0:
+            w = r / (nd - 1)
+            for t in range(nd):
+                if t == home:
+                    continue
+                link = None
+                if net.socket_of[t] != net.socket_of[home] and net.link_cap > 0.0:
+                    pair = (min(net.socket_of[home], net.socket_of[t]),
+                            max(net.socket_of[home], net.socket_of[t]))
+                    link = net.links.index(pair)
+                portions.append((si, t, link, w))
+    return portions
+
+
+def fluid_net(net, streams, warmup=4096, measure=12288):
+    """Generalized fluid loop. Returns (per-portion lines/cy, portions,
+    per-interface utilization [mem..., links...])."""
+    m = net.m
+    nd = len(net.mem_caps)
+    nl = len(net.links)
+    portions = route(net, streams)
+    np_ = len(portions)
+    dp = [streams[p[0]][0] * p[3] for p in portions]
+    cp = [streams[p[0]][1] for p in portions]
+    win = [m["D0"] + m["beta"] * dp[i] * cp[i] * m["L0"] for i in range(np_)]
+    occ = [0.0] * np_
+    served = [0.0] * np_
+    occ_mem = [0.0] * nd
+    occ_link = [0.0] * nl
+    u_mem = [0.0] * nd
+    u_link = [0.0] * nl
+    for cycle in range(warmup + measure + 1):
+        measuring = cycle > warmup
+        lam_mem = [min(net.mem_caps[d] / occ_mem[d], 1.0) if occ_mem[d] > 1e-12 else 1.0
+                   for d in range(nd)]
+        lam_link = [min(net.link_cap / occ_link[l], 1.0) if occ_link[l] > 1e-12 else 1.0
+                    for l in range(nl)]
+        if measuring:
+            for d in range(nd):
+                u_mem[d] += min(occ_mem[d] / net.mem_caps[d], 1.0)
+            for l in range(nl):
+                u_link[l] += min(occ_link[l] / net.link_cap, 1.0)
+        occ_mem = [0.0] * nd
+        occ_link = [0.0] * nl
+        for i in range(np_):
+            _, tgt, link, _ = portions[i]
+            lam = lam_mem[tgt] if link is None else min(lam_mem[tgt], lam_link[link])
+            o_pre = occ[i]
+            if measuring:
+                served[i] += lam * o_pre
+            o = o_pre * (1.0 - lam)
+            if dp[i] > 0.0:
+                o += min(dp[i], max(win[i] - o, 0.0))
+            occ[i] = o
+            occ_mem[tgt] += o * cp[i]
+            if link is not None:
+                occ_link[link] += o
+    util = [u / measure for u in u_mem] + [u / measure for u in u_link]
+    return [s / measure for s in served], portions, util
+
+
+def des_net(net, streams, warmup=40000.0, measure=400000.0, seed=0xB4D5EED):
+    """Generalized DES: connected components of the interface graph, each
+    replayed with its own xorshift stream. Links are a first service stage
+    (cost 1/C_link per line), the target memory interface the second.
+    Returns (per-portion lines/cy, portions)."""
+    m = net.m
+    nd = len(net.mem_caps)
+    portions = route(net, streams)
+    np_ = len(portions)
+
+    # Union-find over interfaces (mem d -> d, link l -> nd + l).
+    parent = list(range(nd + len(net.links)))
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for _, tgt, link, _ in portions:
+        if link is not None:
+            ra, rb = find(tgt), find(nd + link)
+            if ra != rb:
+                parent[max(ra, rb)] = min(ra, rb)
+
+    comp_of_iface = [find(x) for x in range(nd + len(net.links))]
+    comps = sorted(set(comp_of_iface[portions[i][1]] for i in range(np_)))
+    served = [0] * np_
+    for comp in comps:
+        local = [i for i in range(np_) if comp_of_iface[portions[i][1]] == comp]
+        rng = XorShift64(seed)
+        k = len(local)
+        gap, window, mcost, lcost = [], [], [], []
+        q_mem, q_link = [0] * k, [0] * k
+        outstanding, blocked = [0] * k, [False] * k
+        for i in local:
+            _, tgt, link, _ = portions[i]
+            d, c = (streams[portions[i][0]][0] * portions[i][3],
+                    streams[portions[i][0]][1])
+            gap.append(1.0 / d if d > 0.0 else math.inf)
+            w = m["D0"] + m["beta"] * d * c * m["L0"]
+            window.append(max(int(math.floor(w + 0.5)), 1))
+            mcost.append(c / net.mem_caps[tgt])
+            lcost.append(1.0 / net.link_cap if link is not None else 0.0)
+        mem_busy = {}
+        link_busy = {}
+        heap = []
+        for j in range(k):
+            if math.isfinite(gap[j]):
+                heapq.heappush(heap, (rng.next_f64() * gap[j], j, 0))
+        t_end = warmup + measure
+
+        def try_serve_mem(t, d):
+            if mem_busy.get(d, False):
+                return
+            members = [j for j in range(k) if portions[local[j]][1] == d]
+            total = sum(q_mem[j] for j in members)
+            if total == 0:
+                return
+            x = int(rng.next_f64() * total)
+            pick = members[0]
+            for j in members:
+                if x < q_mem[j]:
+                    pick = j
+                    break
+                x -= q_mem[j]
+            q_mem[pick] -= 1
+            mem_busy[d] = True
+            heapq.heappush(heap, (t + mcost[pick], pick, 1))
+
+        def try_serve_link(t, l):
+            if link_busy.get(l, False):
+                return
+            members = [j for j in range(k) if portions[local[j]][2] == l]
+            total = sum(q_link[j] for j in members)
+            if total == 0:
+                return
+            x = int(rng.next_f64() * total)
+            pick = members[0]
+            for j in members:
+                if x < q_link[j]:
+                    pick = j
+                    break
+                x -= q_link[j]
+            q_link[pick] -= 1
+            link_busy[l] = True
+            heapq.heappush(heap, (t + lcost[pick], pick, 2))
+
+        while heap:
+            t, j, kind = heapq.heappop(heap)
+            if t >= t_end:
+                break
+            _, tgt, link, _ = portions[local[j]]
+            if kind == 0:
+                if outstanding[j] < window[j]:
+                    outstanding[j] += 1
+                    blocked[j] = False
+                    jitter = 0.95 + 0.1 * rng.next_f64()
+                    heapq.heappush(heap, (t + gap[j] * jitter, j, 0))
+                    if link is not None:
+                        q_link[j] += 1
+                        try_serve_link(t, link)
+                    else:
+                        q_mem[j] += 1
+                        try_serve_mem(t, tgt)
+                else:
+                    blocked[j] = True
+            elif kind == 2:
+                q_mem[j] += 1
+                link_busy[link] = False
+                try_serve_mem(t, tgt)
+                try_serve_link(t, link)
+            else:
+                outstanding[j] -= 1
+                if t >= warmup:
+                    served[local[j]] += 1
+                mem_busy[tgt] = False
+                if blocked[j]:
+                    blocked[j] = False
+                    heapq.heappush(heap, (t, j, 0))
+                try_serve_mem(t, tgt)
+    return [s / measure for s in served], portions
+
+
+def lockstep_per_stream(net, streams, per_portion, portions):
+    """min_p drain_p / weight_p, in GB/s."""
+    out = []
+    for si in range(len(streams)):
+        rate = math.inf
+        for i, (s, _, _, w) in enumerate(portions):
+            if s == si:
+                rate = min(rate, to_gbs(net.m, per_portion[i]) / w)
+        out.append(rate if math.isfinite(rate) else 0.0)
+    return out
+
+
+# --------------------------------------------------------------------------
+# The analytic model (sharing/multigroup.rs + sharing/remote.rs)
+# --------------------------------------------------------------------------
+
+def share_weighted_capacity(groups, capacity):
+    """groups: list of (n, f, bs). Returns per-group bandwidth."""
+    k = len(groups)
+    demand = [n * f * bs for n, f, bs in groups]
+    weight = [n * f for n, f, _ in groups]
+    bw = [0.0] * k
+    capped = [False] * k
+    remaining = min(capacity, sum(demand))
+    for _ in range(k):
+        wsum = sum(weight[i] for i in range(k) if not capped[i])
+        if wsum <= 0.0 or remaining <= 0.0:
+            break
+        newly = False
+        for i in range(k):
+            if capped[i]:
+                continue
+            if remaining * weight[i] / wsum >= demand[i] - 1e-12:
+                bw[i] = demand[i]
+                capped[i] = True
+                newly = True
+        if newly:
+            remaining = max(min(capacity, sum(demand))
+                            - sum(bw[i] for i in range(k) if capped[i]), 0.0)
+        else:
+            for i in range(k):
+                if not capped[i]:
+                    bw[i] = remaining * weight[i] / wsum
+            break
+    return bw
+
+
+def share_remote(net, groups):
+    """groups: (home, n, f, bs, r). Returns (per_core, portions-with-grants).
+    Mirrors sharing::remote::share_remote (uniform spread + lockstep min)."""
+    nd = len(net.mem_caps)
+    scale = [net.mem_caps[d] / capacity_lines_per_cy(net.m) for d in range(nd)]
+    portions = []  # (group, target, link, weight)
+    for gi, (home, n, f, bs, r) in enumerate(groups):
+        if 1.0 - r > 0.0:
+            portions.append((gi, home, None, 1.0 - r))
+        if r > 0.0:
+            w = r / (nd - 1)
+            for t in range(nd):
+                if t == home:
+                    continue
+                link = None
+                if net.socket_of[t] != net.socket_of[home] and net.m["link_bw"] > 0:
+                    pair = (min(net.socket_of[home], net.socket_of[t]),
+                            max(net.socket_of[home], net.socket_of[t]))
+                    link = net.links.index(pair)
+                portions.append((gi, t, link, w))
+    mem_grant = [0.0] * len(portions)
+    link_grant = [0.0] * len(portions)
+    for d in range(nd):
+        idx = [i for i, p in enumerate(portions) if p[1] == d]
+        wg = [(groups[portions[i][0]][1] * portions[i][3],
+               groups[portions[i][0]][2],
+               groups[portions[i][0]][3] * scale[d]) for i in idx]
+        n_tot = sum(g[0] for g in wg)
+        if n_tot == 0.0:
+            continue
+        b_mix = sum(g[0] * g[2] for g in wg) / n_tot
+        for i, bw in zip(idx, share_weighted_capacity(wg, b_mix)):
+            mem_grant[i] = bw
+    for l in range(len(net.links)):
+        idx = [i for i, p in enumerate(portions) if p[2] == l]
+        if not idx:
+            continue
+        wg = [(groups[portions[i][0]][1] * portions[i][3],
+               groups[portions[i][0]][2],
+               groups[portions[i][0]][3] * scale[portions[i][1]]) for i in idx]
+        for i, bw in zip(idx, share_weighted_capacity(wg, net.m["link_bw"])):
+            link_grant[i] = bw
+    per_core = []
+    for gi, (home, n, f, bs, r) in enumerate(groups):
+        rate = math.inf
+        for i, (g, _, link, w) in enumerate(portions):
+            if g != gi:
+                continue
+            grant = mem_grant[i] if link is None else min(mem_grant[i], link_grant[i])
+            rate = min(rate, grant / (n * w))
+        per_core.append(rate if math.isfinite(rate) else 0.0)
+    return per_core, portions
+
+
+# --------------------------------------------------------------------------
+# Conformance checks
+# --------------------------------------------------------------------------
+
+def check_fluid_degenerate():
+    for mname in ("bdw1", "rome"):
+        m = MACHINES[mname]
+        wl = [ecm_workload(m, "dcopy")[:2]] * 4 + [ecm_workload(m, "ddot2")[:2]] * 3
+        wl += [(0.0, 1.0)]  # idle core
+        seed_pc, seed_u = fluid_seed(m, wl)
+        net = net_of(m, 1, 1)
+        streams = [(d, c, 0, 0.0) for d, c in wl]
+        pp, portions, util = fluid_net(net, streams)
+        assert len(pp) == len(wl)
+        for a, b in zip(seed_pc, pp):
+            assert a == b, f"fluid degenerate mismatch on {mname}: {a} vs {b}"
+        assert seed_u == util[0], f"utilization mismatch on {mname}"
+    print("ok: generalized fluid == seed fluid (single interface, bitwise)")
+
+
+def check_fluid_r0_multidomain():
+    m = MACHINES["rome"]
+    dc = ecm_workload(m, "dcopy")[:2]
+    dd = ecm_workload(m, "ddot2")[:2]
+    # Domain 0: 4x dcopy + 2x ddot2; domain 1 (scaled 0.5): 3x ddot2.
+    net = net_of(m, 1, 2, bw_scale=[1.0, 0.5])
+    streams = ([(dc[0], dc[1], 0, 0.0)] * 4 + [(dd[0], dd[1], 0, 0.0)] * 2
+               + [(dd[0], dd[1], 1, 0.0)] * 3)
+    pp, portions, _ = fluid_net(net, streams)
+    # Per-domain seed runs (scaled domain: scaled capacity).
+    seed0, _ = fluid_seed(m, [dc] * 4 + [dd] * 2)
+    m_scaled = dict(m)
+    m_scaled["read_bw"] = m["read_bw"] * 0.5
+    seed1, _ = fluid_seed(m_scaled, [dd] * 3)
+    want = seed0 + seed1
+    for a, b in zip(want, pp):
+        assert a == b, f"fluid r=0 multi-domain mismatch: {a} vs {b}"
+    print("ok: generalized fluid r=0 == per-domain seed runs (bitwise)")
+
+
+def check_des_degenerate_and_r0():
+    m = MACHINES["rome"]
+    dc = ecm_workload(m, "dcopy")[:2]
+    dd = ecm_workload(m, "ddot2")[:2]
+    cfg = dict(warmup=20000.0, measure=100000.0)
+    # Degenerate single interface.
+    wl = [dc] * 3 + [dd] * 2
+    seed_pc = des_seed(m, wl, **cfg)
+    net = net_of(m, 1, 1)
+    pp, portions = des_net(net, [(d, c, 0, 0.0) for d, c in wl], **cfg)
+    for a, b in zip(seed_pc, pp):
+        assert a == b, f"DES degenerate mismatch: {a} vs {b}"
+    # r=0 over two domains == two independent seed runs.
+    net2 = net_of(m, 1, 2)
+    streams = [(dc[0], dc[1], 0, 0.0)] * 3 + [(dd[0], dd[1], 1, 0.0)] * 4
+    pp2, _ = des_net(net2, streams, **cfg)
+    want = des_seed(m, [dc] * 3, **cfg) + des_seed(m, [dd] * 4, **cfg)
+    for a, b in zip(want, pp2):
+        assert a == b, f"DES r=0 multi-domain mismatch: {a} vs {b}"
+    print("ok: generalized DES == seed DES (degenerate + r=0, bitwise)")
+
+
+def worked_example(verbose=True):
+    """docs/SIMULATORS.md: 2 x NPS4 Rome, dcopy:64@scatter %r0.5 —
+    the xGMI link is the bottleneck of every cross-socket portion."""
+    m = MACHINES["rome"]
+    net = net_of(m, 2, 4)
+    d, c, f, bs = ecm_workload(m, "dcopy")
+    # 64 cores, 8 per domain, each sending half its lines remote.
+    streams = [(d, c, dom, 0.5) for dom in range(8) for _ in range(8)]
+    pp, portions, util = fluid_net(net, streams)
+    sim_pc = lockstep_per_stream(net, streams, pp, portions)
+    groups = [(dom, 8, f, bs, 0.5) for dom in range(8)]
+    model_pc, _ = share_remote(net, groups)
+    # Link throughput: sum of cross-portion drains, in GB/s.
+    link_gbs = sum(to_gbs(m, pp[i]) for i, p in enumerate(portions)
+                   if p[2] is not None)
+    link_cap_gbs = m["link_bw"]
+    errs = [abs(sim_pc[8 * dom] - model_pc[dom]) / model_pc[dom] for dom in range(8)]
+    if verbose:
+        print("\nworked example: 2xNPS4 Rome, dcopy on all 64 cores, r = 0.5")
+        print(f"  kernel chars: f = {f:.3f}, b_s = {bs:.2f} GB/s, "
+              f"d = {d:.4f} lines/cy, c = {c:.4f}")
+        print(f"  model  per-core: {model_pc[0]:.3f} GB/s (link-gated)")
+        print(f"  fluid  per-core: {sim_pc[0]:.3f} GB/s "
+              f"(err {errs[0] * 100:.2f}%)")
+        print(f"  link traffic: {link_gbs:.2f} GB/s simulated vs "
+              f"{link_cap_gbs:.1f} GB/s capacity (util {util[8]:.3f})")
+    assert link_gbs <= link_cap_gbs * 1.001, "link exceeded capacity"
+    assert max(errs) < 0.08, f"link-gated fluid vs model error {max(errs)}"
+    print("ok: link-gated fluid within 8% of the analytic water-fill "
+          f"(worst {max(errs) * 100:.2f}%)")
+    return sim_pc, model_pc, link_gbs
+
+
+def mixed_example(verbose=True):
+    """The docs/MODEL.md-style example: dcopy:8@d0%r0.25 + ddot2:8@d4."""
+    m = MACHINES["rome"]
+    net = net_of(m, 2, 4)
+    d1, c1, f1, bs1 = ecm_workload(m, "dcopy")
+    d2, c2, f2, bs2 = ecm_workload(m, "ddot2")
+    streams = [(d1, c1, 0, 0.25)] * 8 + [(d2, c2, 4, 0.0)] * 8
+    pp, portions, _ = fluid_net(net, streams)
+    sim_pc = lockstep_per_stream(net, streams, pp, portions)
+    model_pc, _ = share_remote(net, [(0, 8, f1, bs1, 0.25), (4, 8, f2, bs2, 0.0)])
+    if verbose:
+        print("\nmixed example: dcopy:8@d0%r0.25 + ddot2:8@d4 on 2x4 Rome")
+        print(f"  dcopy: model {model_pc[0]:.3f}, fluid {sim_pc[0]:.3f} GB/s/core")
+        print(f"  ddot2: model {model_pc[1]:.3f}, fluid {sim_pc[8]:.3f} GB/s/core")
+    return sim_pc, model_pc
+
+
+if __name__ == "__main__":
+    check_fluid_degenerate()
+    check_fluid_r0_multidomain()
+    check_des_degenerate_and_r0()
+    worked_example()
+    mixed_example()
+    print("\nall mirror checks passed")

@@ -162,8 +162,10 @@ pub struct Machine {
     /// lines (Intel: store buffers drain write-backs off the critical
     /// path). The Intel setting is what makes f_DSCAL > f_DAXPY there.
     pub residue_on_all_lines: bool,
-    /// Saturated bandwidth of one inter-socket link, GB/s per direction
-    /// (QPI/UPI on the Intel machines, xGMI on Rome). Not a Table I
+    /// Saturated bandwidth of one inter-socket link, GB/s, shared by both
+    /// directions (the half-duplex simplification both the model and the
+    /// simulators apply — see `docs/SIMULATORS.md`; QPI/UPI on the Intel
+    /// machines, xGMI on Rome). Not a Table I
     /// quantity — the paper models a single contention domain; these are
     /// spec-sheet estimates used by the remote-access extension, where each
     /// socket pair's link is an additional contention interface. `0`
@@ -179,7 +181,77 @@ pub struct Machine {
     pub queue: QueueParams,
 }
 
+/// A characterization-relevant fingerprint of a machine row.
+///
+/// Kernel characterizations (Eq. 3: `b_1`, `b_s`, `f`) depend on the row's
+/// core count and memory/link bandwidths — *not* only on its registry
+/// [`MachineId`]. Derived rows (SNC sub-domains with halved cores and
+/// bandwidth, DIMM-scaled topology domains) share their parent's id but
+/// must never share its cache entries, so the characterization cache keys
+/// on this fingerprint instead of the bare id (see
+/// [`crate::scenario::CharKey`]). Bandwidths are captured as IEEE-754 bit
+/// patterns: two rows alias only if they are numerically identical.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MachineFingerprint {
+    /// Registry id of the row (or of the row it was derived from).
+    pub id: MachineId,
+    /// Cores on the contention domain.
+    pub cores: usize,
+    /// Bit pattern of the achievable read bandwidth (`read_bw_gbs`).
+    read_bw_bits: u64,
+    /// Bit pattern of the theoretical bandwidth (`theor_bw_gbs`).
+    theor_bw_bits: u64,
+    /// Hash of the inter-socket link table (`link_bw_gbs`,
+    /// `link_latency_us`).
+    link_table_bits: u64,
+    /// FNV-style fold of every remaining characterization-relevant numeric
+    /// (clock, ECM machine parameters, queue calibration, LLC/overlap
+    /// kinds): a TOML-loaded row that reuses a registry id but edits, say,
+    /// `queue.depth_floor` or `freq_ghz` must not alias the registry
+    /// entry's cache line either.
+    calib_bits: u64,
+}
+
+/// One FNV-1a-style mixing step over a 64-bit word.
+fn mix_bits(h: u64, v: u64) -> u64 {
+    (h ^ v).wrapping_mul(0x0000_0100_0000_01B3)
+}
+
 impl Machine {
+    /// The row's characterization fingerprint (see [`MachineFingerprint`]).
+    pub fn fingerprint(&self) -> MachineFingerprint {
+        let mut calib = 0xCBF2_9CE4_8422_2325u64; // FNV offset basis
+        for v in [
+            self.freq_ghz.to_bits(),
+            self.simd_bytes as u64,
+            self.ld_per_cy.to_bits(),
+            self.st_per_cy.to_bits(),
+            self.l1l2_bpc.to_bits(),
+            self.l2l3_bpc.to_bits(),
+            matches!(self.llc, LlcKind::Victim) as u64,
+            matches!(self.overlap, OverlapKind::Overlapping) as u64,
+            self.stream_penalty.to_bits(),
+            self.latency_residue_cy.to_bits(),
+            self.residue_on_all_lines as u64,
+            self.queue.base_latency_cy.to_bits(),
+            self.queue.depth_floor.to_bits(),
+            self.queue.depth_beta.to_bits(),
+            self.queue.latency_penalty.to_bits(),
+            self.queue.write_penalty.to_bits(),
+        ] {
+            calib = mix_bits(calib, v);
+        }
+        MachineFingerprint {
+            id: self.id,
+            cores: self.cores,
+            read_bw_bits: self.read_bw_gbs.to_bits(),
+            theor_bw_bits: self.theor_bw_gbs.to_bits(),
+            link_table_bits: self.link_bw_gbs.to_bits()
+                ^ self.link_latency_us.to_bits().rotate_left(32),
+            calib_bits: calib,
+        }
+    }
+
     /// Cycles to move one cache line over a path of `bpc` bytes/cycle.
     pub fn line_cycles(&self, bpc: f64) -> f64 {
         crate::CACHE_LINE_BYTES / bpc
@@ -470,6 +542,29 @@ mod tests {
             let err = (got - want).abs() / want;
             assert!(err < 0.03, "{}: b_s(STREAM) = {got:.1}, want {want}", m.name);
         }
+    }
+
+    #[test]
+    fn fingerprint_discriminates_characterization_relevant_fields() {
+        let m = machine(MachineId::Rome);
+        assert_eq!(m.fingerprint(), machine(MachineId::Rome).fingerprint());
+        let mut halved = m.clone();
+        halved.cores /= 2;
+        assert_ne!(m.fingerprint(), halved.fingerprint());
+        let mut scaled = m.clone();
+        scaled.read_bw_gbs *= 0.5;
+        assert_ne!(m.fingerprint(), scaled.fingerprint());
+        let mut relinked = m.clone();
+        relinked.link_latency_us *= 2.0;
+        assert_ne!(m.fingerprint(), relinked.fingerprint());
+        // Calibration fields matter too: a TOML row reusing the id but
+        // editing the queue model or the clock must not alias the cache.
+        let mut requeued = m.clone();
+        requeued.queue.depth_floor += 0.5;
+        assert_ne!(m.fingerprint(), requeued.fingerprint());
+        let mut clocked = m.clone();
+        clocked.freq_ghz *= 1.1;
+        assert_ne!(m.fingerprint(), clocked.fingerprint());
     }
 
     #[test]

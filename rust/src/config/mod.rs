@@ -11,6 +11,6 @@ mod machine;
 
 pub use loader::{load_machine_toml, machine_to_toml};
 pub use machine::{
-    LlcKind, Machine, MachineId, OverlapKind, QueueParams, builtin_machines, machine,
-    machine_by_name,
+    LlcKind, Machine, MachineFingerprint, MachineId, OverlapKind, QueueParams, builtin_machines,
+    machine, machine_by_name,
 };

@@ -116,7 +116,15 @@ impl<'a> CoSimEngine<'a> {
                 machine.cores
             )));
         }
-        CoSimEngine::build(machine, program, n_ranks, config, source, RankLayout::single(n_ranks))
+        CoSimEngine::build(
+            machine,
+            machine,
+            program,
+            n_ranks,
+            config,
+            source,
+            RankLayout::single(n_ranks),
+        )
     }
 
     /// Build an engine on a multi-domain topology: `placement` assigns the
@@ -141,24 +149,14 @@ impl<'a> CoSimEngine<'a> {
                 machine.id
             )));
         }
-        // Derived base rows (SNC sub-domains) carry different core counts
-        // and bandwidths than the machine the engine characterizes on;
-        // running them silently would attach socket-row f/b_s to halved
-        // domains. SNC studies go through the scenario pipeline, which
-        // characterizes derived rows directly.
-        if machine.cores != topology.base.cores
-            || machine.read_bw_gbs.to_bits() != topology.base.read_bw_gbs.to_bits()
-        {
-            return Err(Error::InvalidPlan(format!(
-                "topology {} runs on a derived row of {:?} (SNC sub-domains); the co-simulator \
-                 characterizes on the given machine row — run SNC studies through \
-                 `repro scenarios --topology ...`",
-                topology.label(),
-                machine.id
-            )));
-        }
+        // Characterize on the topology's *base row*: for SNC topologies
+        // that is the derived sub-domain row (halved cores and bandwidth),
+        // whose cache fingerprint differs from the parent socket's — so
+        // `repro hpcg --topology snc2` gets real sub-domain f/b_s instead
+        // of being rejected (the pre-fingerprint cache would have served
+        // stale socket values here).
         let layout = placement.rank_layout(topology, n_ranks)?;
-        CoSimEngine::build(machine, program, n_ranks, config, source, layout)
+        CoSimEngine::build(machine, &topology.base, program, n_ranks, config, source, layout)
     }
 
     /// [`CoSimEngine::with_topology`] plus a uniform remote-access
@@ -184,8 +182,12 @@ impl<'a> CoSimEngine<'a> {
         Ok(eng)
     }
 
+    /// `char_machine` is the row kernels characterize on — the machine
+    /// itself on the flat path, the topology's base row (possibly a
+    /// derived SNC sub-domain) on the topology paths.
     fn build(
         machine: &'a Machine,
+        char_machine: &Machine,
         program: Program,
         n_ranks: usize,
         config: CoSimConfig,
@@ -202,7 +204,7 @@ impl<'a> CoSimEngine<'a> {
             .collect();
         kernels.sort_by_key(|k| k.key());
         kernels.dedup();
-        let measured = CharCache::global().characterize_source(machine, &kernels, source)?;
+        let measured = CharCache::global().characterize_source(char_machine, &kernels, source)?;
         let chars: HashMap<KernelId, (f64, f64)> = measured
             .into_iter()
             .map(|(k, m)| (k, (m.f, m.bs_gbs)))
@@ -468,7 +470,7 @@ mod tests {
         // engine kind.
         for k in [KernelId::Ddot2, KernelId::Daxpy, KernelId::Schoenauer] {
             assert!(
-                CharCache::global().contains(&(m.id, k, EngineKind::Ecm)),
+                CharCache::global().contains(&(m.fingerprint(), k, EngineKind::Ecm)),
                 "{k:?} not cached"
             );
         }

@@ -24,9 +24,11 @@
 //!   the per-domain evaluation (`share_domains`), and the remote-access
 //!   extension (`sharing::remote`: cache-line streams split over home
 //!   domain, remote domains, and UPI/xGMI links),
-//! * [`simulator`] — the measurement substrate: a line-granularity
-//!   discrete-event simulator of a memory contention domain (stands in for
-//!   the physical BDW/CLX/Rome machines of the paper),
+//! * [`simulator`] — the measurement substrate: fluid-queueing and
+//!   line-granularity discrete-event engines over a *network* of
+//!   contention interfaces (per-domain memory controllers + inter-socket
+//!   links; `docs/SIMULATORS.md`), standing in for the physical
+//!   BDW/CLX/Rome machines of the paper,
 //! * [`timeline`] — **the contention-timeline layer**: exact event-driven
 //!   simulation of ranks sharing one memory domain (priority-queue core;
 //!   closed-form constant-rate drains between events; zero `dt` error),

@@ -21,7 +21,7 @@
 //!            [--topology domain|socket|<D>|<S>x<D>|snc<N>|<S>xsnc<N>]
 //!            [--placement compact|scatter] [--remote-frac F]
 //!            [--engine ecm|fluid|des|pjrt]   # characterization source
-//! repro bench [--mode smoke|full] [--out results/]   # BENCH_cosim.json + BENCH_topology.json
+//! repro bench [--mode smoke|full] [--out results/]   # BENCH_{cosim,topology,multi_iface}.json
 //! repro dump-configs <dir>              # write machine TOMLs
 //! repro selftest                        # PJRT artifact vs rust engines
 //! ```
@@ -138,7 +138,8 @@ run `repro experiment all --out results/` to regenerate every table and figure;\
 `repro scenarios --machine rome --topology 2x4 --remote-frac 0.25 --mix \"dcopy:32@scatter+ddot2:32@scatter\"`\n\
   runs a dual-socket Rome with remote accesses crossing the xGMI link (per-link tables);\n\
 `repro hpcg --machine rome --topology socket` co-simulates a full 32-rank Rome socket;\n\
-`repro bench` runs the fixed-seed benchmarks and writes BENCH_cosim.json + BENCH_topology.json.\n\
+`repro bench` runs the fixed-seed benchmarks and writes BENCH_cosim.json,\n\
+  BENCH_topology.json and BENCH_multi_iface.json;\n\
 see docs/CLI.md for every flag with sample output.";
 
 fn cmd_machines() -> Result<()> {
@@ -457,9 +458,11 @@ fn cmd_hpcg(f: &HashMap<String, String>) -> Result<()> {
 }
 
 /// Fixed-seed performance benchmarks: the Fig. 3 co-simulation, a
-/// scenario-pipeline workload, and the 4-domain Rome-socket topology
-/// co-sim. Emits `BENCH_cosim.json` and `BENCH_topology.json` under
-/// `--out` (CI uploads both as artifacts).
+/// scenario-pipeline workload, the 4-domain Rome-socket topology co-sim,
+/// and the multi-interface remote-access pipeline vs its single-interface
+/// baseline. Emits `BENCH_cosim.json`, `BENCH_topology.json`, and
+/// `BENCH_multi_iface.json` under `--out` (CI uploads all as artifacts
+/// and checks their existence).
 fn cmd_bench(f: &HashMap<String, String>) -> Result<()> {
     let out_dir = PathBuf::from(f.get("out").cloned().unwrap_or_else(|| "results".into()));
     let smoke = match f.get("mode").map(String::as_str) {
@@ -666,6 +669,82 @@ fn cmd_bench(f: &HashMap<String, String>) -> Result<()> {
     let topo_path = out_dir.join("BENCH_topology.json");
     std::fs::write(&topo_path, &topo_json)?;
     println!("wrote {}", topo_path.display());
+
+    // --- multi-interface substrate: remote-access mixes on a dual-socket
+    // NPS4 Rome (one multi-interface fluid run per mix: 8 memory
+    // interfaces + the xGMI link, per-core routed portions) against the
+    // single-interface pipeline as the baseline; emitted as
+    // BENCH_multi_iface.json (CI checks its existence) ---
+    let rome2 = Topology::parse(&rome, "2x4")?;
+    let remote_specs = [
+        "dcopy:64@scatter%r0.5",
+        "dcopy:32@scatter%r0.25+ddot2:32@scatter%r0.25",
+        "dcopy:8@d0%r0.5+ddot2:8@d4",
+    ];
+    let remote_mixes: Vec<Mix> =
+        remote_specs.iter().copied().map(Mix::parse).collect::<Result<Vec<_>>>()?;
+    let remote_warm =
+        run_mixes_on(&rome2, Placement::Compact, &remote_mixes, &MeasureEngine::Fluid)?;
+    let mut mwalls = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        run_mixes_on(&rome2, Placement::Compact, &remote_mixes, &MeasureEngine::Fluid)?;
+        mwalls.push(t0.elapsed().as_secs_f64());
+    }
+    let multi_wall = membw::stats::median(&mwalls);
+    let multi_cases_per_s = remote_mixes.len() as f64 / multi_wall;
+    let single_specs = ["dcopy:8", "dcopy:4+ddot2:4", "ddot2:8"];
+    let single_mixes: Vec<Mix> =
+        single_specs.iter().copied().map(Mix::parse).collect::<Result<Vec<_>>>()?;
+    run_mixes(&rome, &single_mixes, &MeasureEngine::Fluid)?; // warm
+    let mut bwalls = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        run_mixes(&rome, &single_mixes, &MeasureEngine::Fluid)?;
+        bwalls.push(t0.elapsed().as_secs_f64());
+    }
+    let single_wall = membw::stats::median(&bwalls);
+    let single_cases_per_s = single_mixes.len() as f64 / single_wall;
+    println!(
+        "multi-interface pipeline (fluid, rome 2x4 + xGMI): {} remote mixes in {:.3} ms \
+         ({:.1} cases/s); single-interface baseline: {} mixes in {:.3} ms ({:.1} cases/s)",
+        remote_mixes.len(),
+        multi_wall * 1e3,
+        multi_cases_per_s,
+        single_mixes.len(),
+        single_wall * 1e3,
+        single_cases_per_s,
+    );
+    let case_rows: Vec<String> = remote_warm
+        .cases
+        .iter()
+        .map(|case| {
+            let link_gbs: f64 = case.links.iter().map(|l| l.measured_total_gbs).sum();
+            format!(
+                "    {{\n      \"mix\": \"{}\",\n      \"simulated_total_gbs\": {:.4},\n      \"model_total_gbs\": {:.4},\n      \"link_simulated_gbs\": {:.4}\n    }}",
+                case.mix.label(),
+                case.measured_total_gbs,
+                case.model_total_gbs,
+                link_gbs,
+            )
+        })
+        .collect();
+    let multi_json = format!(
+        "{{\n  \"mode\": \"{}\",\n  \"multi_iface\": {{\n    \"engine\": \"fluid\",\n    \"topology\": \"{}\",\n    \"link_capacity_gbs\": {:.1},\n    \"cases\": {},\n    \"wall_s\": {:.6},\n    \"cases_per_s\": {:.1}\n  }},\n  \"single_iface_baseline\": {{\n    \"engine\": \"fluid\",\n    \"cases\": {},\n    \"wall_s\": {:.6},\n    \"cases_per_s\": {:.1}\n  }},\n  \"case_detail\": [\n{}\n  ]\n}}\n",
+        if smoke { "smoke" } else { "full" },
+        rome2.label(),
+        rome.link_bw_gbs,
+        remote_mixes.len(),
+        multi_wall,
+        multi_cases_per_s,
+        single_mixes.len(),
+        single_wall,
+        single_cases_per_s,
+        case_rows.join(",\n"),
+    );
+    let multi_path = out_dir.join("BENCH_multi_iface.json");
+    std::fs::write(&multi_path, &multi_json)?;
+    println!("wrote {}", multi_path.display());
 
     let json_opt = |x: Option<f64>| x.map(|v| format!("{v:.6}")).unwrap_or_else(|| "null".into());
     let cosim_json: Vec<String> = cosim_rows

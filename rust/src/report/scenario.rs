@@ -194,12 +194,12 @@ pub fn topology_scenario_report(
             out.push_str(&dt.render());
         }
         // Remote-access phases additionally report every inter-socket link
-        // (offered = cross-socket traffic the domain simulations drained;
-        // model = the link water-fill grant).
+        // (simulated = lines that actually crossed the link interface in
+        // the multi-interface engine; model = the link water-fill grant).
         for link in &phase.links {
             writeln!(
                 out,
-                "[link {}] b_link {:.1} GB/s   [{}, offered {:.1} GB/s, model {:.1} GB/s]",
+                "[link {}] b_link {:.1} GB/s   [{}, simulated {:.1} GB/s, model {:.1} GB/s]",
                 link.label(),
                 link.link_bw_gbs,
                 if link.saturated { "saturated" } else { "nonsaturated" },
@@ -208,7 +208,7 @@ pub fn topology_scenario_report(
             )
             .unwrap();
             let mut lt = AsciiTable::new(&[
-                "group", "kernel", "n", "offered GB/s", "model GB/s", "alpha model",
+                "group", "kernel", "n", "sim GB/s", "model GB/s", "alpha model",
             ]);
             for (g, origin) in link.groups.iter().zip(&link.origins) {
                 lt.row(vec![

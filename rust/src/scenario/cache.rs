@@ -3,9 +3,17 @@
 //! Every measurement pipeline needs the Eq.-3 characterization (solo +
 //! full-domain run → `b_1`, `b_s`, `f`) of each kernel it touches, measured
 //! with the same engine as the pairing/mix measurements. Characterizations
-//! are deterministic per (machine, kernel, engine), so a process-wide cache
-//! is safe; it removes the dominant redundant work from multi-call sweeps
-//! (the Fig. 8/9 reports regenerate hundreds of `run_cases` calls).
+//! are deterministic per (machine row, kernel, engine), so a process-wide
+//! cache is safe; it removes the dominant redundant work from multi-call
+//! sweeps (the Fig. 8/9 reports regenerate hundreds of `run_cases` calls).
+//!
+//! The machine component of the key is a **full fingerprint**
+//! ([`MachineFingerprint`]: registry id, cores, read/theoretical bandwidth
+//! bits, link-table hash, and a fold of the clock/ECM/queue calibration
+//! fields), not the bare [`crate::config::MachineId`] —
+//! derived rows (SNC sub-domains, DIMM-scaled topology domains) share
+//! their parent's id but have different physics, and must characterize
+//! independently (pinned by the id-collision regression test below).
 //!
 //! The cache is thread-safe (sweeps run batched and parallel) and exposes
 //! hit/miss statistics so tests can pin its behaviour. Use
@@ -16,7 +24,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
 
-use crate::config::{Machine, MachineId};
+use crate::config::{Machine, MachineFingerprint};
 use crate::error::Result;
 use crate::kernels::{kernel, KernelId};
 use crate::runtime::SimCase;
@@ -67,8 +75,11 @@ impl CharSource<'_> {
     }
 }
 
-/// Cache key: one characterization per (machine, kernel, engine).
-pub type CharKey = (MachineId, KernelId, EngineKind);
+/// Cache key: one characterization per (machine fingerprint, kernel,
+/// engine). The fingerprint — not the bare id — keeps derived machine rows
+/// (SNC sub-domains, scaled topology domains) from aliasing their parent's
+/// entries; build it with [`Machine::fingerprint`].
+pub type CharKey = (MachineFingerprint, KernelId, EngineKind);
 
 /// Snapshot of cache counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -151,7 +162,7 @@ impl CharCache {
             CharSource::Ecm => {
                 let mut out = HashMap::new();
                 for &k in kernels {
-                    let key = (machine.id, k, EngineKind::Ecm);
+                    let key = (machine.fingerprint(), k, EngineKind::Ecm);
                     let m = match self.lookup(&key) {
                         Some(m) => m,
                         None => {
@@ -182,10 +193,11 @@ impl CharCache {
         engine: &MeasureEngine,
     ) -> Result<HashMap<KernelId, KernelMeasurement>> {
         let kind = engine.kind();
+        let fp = machine.fingerprint();
         let mut out = HashMap::new();
         let mut missing: Vec<KernelId> = Vec::new();
         for &k in kernels {
-            match self.lookup(&(machine.id, k, kind)) {
+            match self.lookup(&(fp, k, kind)) {
                 Some(m) => {
                     out.insert(k, m);
                 }
@@ -223,7 +235,7 @@ impl CharCache {
             }
         }
         for &k in &missing {
-            self.insert((machine.id, k, kind), out[&k]);
+            self.insert((fp, k, kind), out[&k]);
         }
         Ok(out)
     }
@@ -232,7 +244,7 @@ impl CharCache {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::machine;
+    use crate::config::{machine, MachineId};
 
     fn rome() -> Machine {
         machine(MachineId::Rome)
@@ -267,8 +279,8 @@ mod tests {
         let m = rome();
         let ks = [KernelId::Ddot2];
         cache.characterize(&m, &ks, &MeasureEngine::Fluid).unwrap();
-        assert!(cache.contains(&(m.id, KernelId::Ddot2, EngineKind::Fluid)));
-        assert!(!cache.contains(&(m.id, KernelId::Ddot2, EngineKind::Des)));
+        assert!(cache.contains(&(m.fingerprint(), KernelId::Ddot2, EngineKind::Fluid)));
+        assert!(!cache.contains(&(m.fingerprint(), KernelId::Ddot2, EngineKind::Des)));
         cache.characterize(&m, &ks, &MeasureEngine::Des).unwrap();
         let s = cache.stats();
         assert_eq!(s.entries, 2, "fluid and des entries are distinct");
@@ -305,8 +317,8 @@ mod tests {
         assert_eq!(s.misses, 2);
         assert_eq!(again[&KernelId::Ddot2].f.to_bits(), out[&KernelId::Ddot2].f.to_bits());
         // ECM entries never alias measured ones.
-        assert!(cache.contains(&(m.id, KernelId::Ddot2, EngineKind::Ecm)));
-        assert!(!cache.contains(&(m.id, KernelId::Ddot2, EngineKind::Fluid)));
+        assert!(cache.contains(&(m.fingerprint(), KernelId::Ddot2, EngineKind::Ecm)));
+        assert!(!cache.contains(&(m.fingerprint(), KernelId::Ddot2, EngineKind::Fluid)));
     }
 
     #[test]
@@ -322,6 +334,37 @@ mod tests {
             direct[&KernelId::Dcopy].f.to_bits()
         );
         assert_eq!(cache.stats().entries, 1, "one shared entry");
+    }
+
+    /// Regression for the pre-fingerprint id-collision: two rows with the
+    /// same `MachineId` but different bandwidths (an SNC half-socket next
+    /// to its parent socket) must characterize independently — the old
+    /// bare-id key served the socket's f/b_s to the derived row.
+    #[test]
+    fn derived_rows_with_equal_id_characterize_independently() {
+        let cache = CharCache::new();
+        let m = rome();
+        let mut derived = m.clone();
+        derived.cores /= 2;
+        derived.read_bw_gbs /= 2.0;
+        derived.theor_bw_gbs /= 2.0;
+        assert_eq!(m.id, derived.id, "precondition: ids collide");
+        assert_ne!(m.fingerprint(), derived.fingerprint());
+        let a = cache.characterize(&m, &[KernelId::Dcopy], &MeasureEngine::Fluid).unwrap();
+        let b = cache.characterize(&derived, &[KernelId::Dcopy], &MeasureEngine::Fluid).unwrap();
+        let s = cache.stats();
+        assert_eq!(s.entries, 2, "one entry per fingerprint, no aliasing");
+        assert_eq!(s.misses, 2, "the derived row is measured, not served stale");
+        // The halved row's saturated bandwidth is really about half.
+        let (bs_full, bs_half) = (a[&KernelId::Dcopy].bs_gbs, b[&KernelId::Dcopy].bs_gbs);
+        assert!(
+            bs_half < 0.6 * bs_full && bs_half > 0.4 * bs_full,
+            "derived b_s {bs_half} vs parent {bs_full}"
+        );
+        // Scaled link parameters change the fingerprint too (link table).
+        let mut relinked = m.clone();
+        relinked.link_bw_gbs *= 2.0;
+        assert_ne!(m.fingerprint(), relinked.fingerprint());
     }
 
     #[test]

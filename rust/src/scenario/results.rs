@@ -180,14 +180,14 @@ impl MixResultSet {
 }
 
 /// Contention outcome of one inter-socket link under a mix: the groups
-/// whose remote portions cross it, with offered (measured) traffic and
-/// modeled link grants.
+/// whose remote portions cross it, with simulated traffic and modeled
+/// link grants.
 ///
-/// The measured substrate simulates memory interfaces only, so the
-/// measured columns are the *offered* cross-socket traffic (what the
-/// domain simulations drained for the crossing portions); the model
-/// columns come from the link's own Eqs. (4)+(5) water-fill at
-/// `link_bw_gbs` capacity.
+/// The multi-interface substrate simulates the link as a contention
+/// interface of its own, so the measured columns are the **simulated**
+/// link traffic — the lines that actually crossed, gated by the link
+/// server — while the model columns come from the link's Eqs. (4)+(5)
+/// water-fill at `link_bw_gbs` capacity (see `docs/SIMULATORS.md`).
 #[derive(Debug, Clone)]
 pub struct LinkResult {
     /// Socket pair the link connects (lexicographic).
@@ -200,7 +200,7 @@ pub struct LinkResult {
     /// For each entry of `groups`, the socket-level group index it
     /// aggregates.
     pub origins: Vec<usize>,
-    /// Total offered (measured) traffic, GB/s.
+    /// Total simulated (measured) link traffic, GB/s.
     pub measured_total_gbs: f64,
     /// Total modeled link grant, GB/s.
     pub model_total_gbs: f64,

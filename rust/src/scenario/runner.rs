@@ -28,7 +28,9 @@ use crate::scenario::results::{
 };
 use crate::scenario::spec::{GroupSpec, Mix, Scenario};
 use crate::sharing::{share_multigroup, share_remote, KernelGroup, RemoteGroup};
-use crate::simulator::{measure_f_bs, run_engine, CoreWorkload, Engine, KernelMeasurement};
+use crate::simulator::{
+    run_engine, run_net_engine, CoreWorkload, Engine, IfaceNet, KernelMeasurement, NetStream,
+};
 use crate::topology::{Placement, SplitMix, Topology};
 
 /// Measurement engine selection for a sweep or scenario run.
@@ -275,7 +277,10 @@ pub fn run_mixes_on(
     let mut kernels: Vec<KernelId> = mixes.iter().flat_map(|m| m.kernels()).collect();
     kernels.sort_by_key(|k| k.key());
     kernels.dedup();
-    let base_chars = base_chars_for(&topo.base, &kernels, engine)?;
+    // Derived base rows (SNC sub-domains) carry their own cache fingerprint
+    // (cores + bandwidth bits), so the global cache serves every row —
+    // registry or derived — without aliasing.
+    let base_chars = CharCache::global().characterize(&topo.base, &kernels, engine)?;
 
     // Skeleton results; domains fill in below in domain order.
     let mut cases: Vec<TopoMixResult> = mixes
@@ -341,35 +346,6 @@ pub fn run_mixes_on(
     Ok(TopoMixResultSet { cases })
 }
 
-/// Kernel characterizations for a topology's base row.
-///
-/// Registry rows are served from the process-wide [`CharCache`]. *Derived*
-/// rows — SNC sub-domains, whose `MachineId` would collide with their
-/// parent socket's cache entries — are characterized directly (uncached)
-/// on the derived machine, so their halved `b_s` and correspondingly
-/// higher `f` are real measurements, not stale socket values.
-fn base_chars_for(
-    base: &Machine,
-    kernels: &[KernelId],
-    engine: &MeasureEngine,
-) -> Result<HashMap<KernelId, KernelMeasurement>> {
-    let registry = crate::config::machine(base.id);
-    if registry.cores == base.cores
-        && registry.read_bw_gbs.to_bits() == base.read_bw_gbs.to_bits()
-    {
-        return CharCache::global().characterize(base, kernels, engine);
-    }
-    match engine.inproc() {
-        Some(eng) => Ok(kernels
-            .iter()
-            .map(|&k| (k, measure_f_bs(&kernel(k), base, eng)))
-            .collect()),
-        None => Err(crate::error::Error::InvalidPlan(
-            "derived (SNC) machine rows need an in-process engine (fluid or des)".into(),
-        )),
-    }
-}
-
 /// Fill a topology case's socket-level aggregate from its per-domain
 /// results: bandwidths summed over domains per original group, α = share
 /// of the socket aggregate.
@@ -410,14 +386,15 @@ fn aggregate_socket(case: &mut TopoMixResult, mix: &Mix) {
 /// water-fill over the traffic portions it carries, and a group's per-core
 /// bandwidth is gated by its slowest portion (lockstep streams).
 ///
-/// **Measurement**: each domain is simulated with its home sub-groups
-/// thinned to their locally-kept traffic weight plus one synthetic pooled
-/// stream per incoming remote portion; the same slowest-portion rule then
-/// combines the per-portion drains. The substrate has no link simulator,
-/// so a link's measured column is the *offered* cross-socket flow while
-/// its model column is capped by the link water-fill (`docs/MODEL.md`
-/// spells out the asymmetry). Not available on the PJRT engine, whose
-/// artifact has a fixed per-domain geometry.
+/// **Measurement**: one *multi-interface* simulation per mix
+/// ([`run_net_engine`] on [`IfaceNet::of_topology`]): every resident core
+/// is one routed stream whose portions mirror the model's expansion, the
+/// engine water-fills every memory interface *and* every inter-socket
+/// link directly, and each core is gated by its slowest portion inside
+/// the engine. Per-link rows therefore report **simulated** link traffic
+/// (lines that actually crossed), not offered demand. Mixes fan out over
+/// the same worker pool as the all-local pipeline. Not available on the
+/// PJRT engine, whose artifact has a fixed single-interface geometry.
 fn run_mixes_on_remote(
     topo: &Topology,
     placement: Placement,
@@ -427,7 +404,7 @@ fn run_mixes_on_remote(
     if matches!(engine, MeasureEngine::Pjrt(_)) {
         return Err(crate::error::Error::InvalidPlan(
             "remote-access mixes need an in-process engine (fluid or des); \
-             the PJRT artifact has a fixed per-domain geometry"
+             the PJRT artifact has a fixed single-interface geometry"
                 .into(),
         ));
     }
@@ -438,9 +415,12 @@ fn run_mixes_on_remote(
     let mut kernels: Vec<KernelId> = mixes.iter().flat_map(|m| m.kernels()).collect();
     kernels.sort_by_key(|k| k.key());
     kernels.dedup();
-    let base_chars = base_chars_for(&topo.base, &kernels, engine)?;
+    // Derived rows carry their own cache fingerprint, so the global cache
+    // serves SNC and scaled bases without aliasing their parents.
+    let base_chars = CharCache::global().characterize(&topo.base, &kernels, engine)?;
     let shape = topo.shape();
     let links = shape.links();
+    let net = IfaceNet::of_topology(topo);
 
     struct Resident {
         domain: usize,
@@ -448,16 +428,18 @@ fn run_mixes_on_remote(
         spec: GroupSpec,
     }
 
-    /// One memory interface's measurement workload.
-    struct DomainJob {
-        machine: Machine,
-        wls: Vec<CoreWorkload>,
-        /// `(portion index, #workload entries)` in `wls` order.
-        spans: Vec<(usize, usize)>,
+    /// One mix's model evaluation plus its routed measurement streams.
+    struct Prepared {
+        residents: Vec<Resident>,
+        share: crate::sharing::RemoteShare,
+        streams: Vec<NetStream>,
+        /// Resident index of each stream.
+        stream_resident: Vec<usize>,
     }
 
-    let mut cases = Vec::with_capacity(mixes.len());
-    for (mx, split) in mixes.iter().zip(&splits) {
+    // Pass 1 (cheap, serial): the analytic evaluation and the stream lists.
+    let mut prepared: Vec<Prepared> = Vec::with_capacity(mixes.len());
+    for split in &splits {
         // Resident sub-groups in (domain, sub-mix) order.
         let mut residents: Vec<Resident> = Vec::new();
         for dm in &split.domains {
@@ -479,78 +461,65 @@ fn run_mixes_on_remote(
             })
             .collect();
         let share = share_remote(&shape, &groups)?;
-
-        // Gather every memory interface's portion workloads; the per-domain
-        // simulations are independent, so they fan out over the same worker
-        // pool as the all-local pipeline. (Parallelism is per mix: a
-        // many-phase scenario on a tiny topology underfills the pool —
-        // cross-phase batching is a possible follow-up.)
-        let mut jobs: Vec<DomainJob> = Vec::new();
-        for (d, dom) in topo.domains.iter().enumerate() {
-            let pidx: Vec<usize> =
-                (0..share.portions.len()).filter(|&p| share.portions[p].target == d).collect();
-            if pidx.is_empty() {
-                continue;
+        // Every resident core is one stream homed on its domain; its
+        // intrinsic demand comes from the home domain's (possibly scaled)
+        // machine row, exactly as on the all-local per-domain path.
+        let mut streams: Vec<NetStream> = Vec::new();
+        let mut stream_resident: Vec<usize> = Vec::new();
+        for (ri, r) in residents.iter().enumerate() {
+            let w = CoreWorkload::from_kernel(
+                &kernel(r.spec.kernel),
+                &topo.domains[r.domain].machine,
+                ri,
+            );
+            for _ in 0..r.spec.cores {
+                streams.push(NetStream {
+                    workload: w,
+                    home: r.domain,
+                    remote_frac: r.spec.remote_frac(),
+                });
+                stream_resident.push(ri);
             }
-            let mut wls: Vec<CoreWorkload> = Vec::new();
-            let mut spans: Vec<(usize, usize)> = Vec::new();
-            for (tag, &p) in pidx.iter().enumerate() {
-                let portion = &share.portions[p];
-                let r = &residents[portion.group];
-                let w = CoreWorkload::from_kernel(&kernel(r.spec.kernel), &dom.machine, tag);
-                if r.domain == d {
-                    // Home cores, thinned to the locally-kept weight.
-                    wls.extend(vec![w.thinned(portion.weight, tag); r.spec.cores]);
-                    spans.push((p, r.spec.cores));
-                } else {
-                    // One pooled synthetic stream for the whole portion.
-                    wls.push(w.thinned(r.spec.cores as f64 * portion.weight, tag));
-                    spans.push((p, 1));
-                }
-            }
-            wls.extend(vec![CoreWorkload::idle(); split.domains[d].mix.idle_cores]);
-            // Pooled visitor streams can push the workload count past the
-            // domain's core count; the simulators use `cores` only for
-            // their arity assert, so widen a clone.
-            let machine = if wls.len() > dom.machine.cores {
-                let mut m2 = dom.machine.clone();
-                m2.cores = wls.len();
-                m2
-            } else {
-                dom.machine.clone()
-            };
-            jobs.push(DomainJob { machine, wls, spans });
         }
-        let per_cores = par_map(&jobs, |j| run_engine(&j.machine, &j.wls, eng));
+        prepared.push(Prepared { residents, share, streams, stream_resident });
+    }
+
+    // Pass 2: one multi-interface engine run per mix, batch-parallel.
+    let sims = par_map(&prepared, |p| run_net_engine(&net, &p.streams, eng));
+
+    // Pass 3: compose the per-domain, per-link, and socket records.
+    let mut cases = Vec::with_capacity(mixes.len());
+    for ((mx, split), (prep, sim)) in
+        mixes.iter().zip(&splits).zip(prepared.iter().zip(&sims))
+    {
+        let Prepared { residents, share, stream_resident, .. } = prep;
+
+        // Aggregate the engine's per-core portion drains onto the model's
+        // portion list (both sides enumerate portions in the same routing
+        // order: home first, then remote targets in domain order).
+        let mut portion_index: HashMap<(usize, usize), usize> = HashMap::new();
+        for (p, portion) in share.portions.iter().enumerate() {
+            portion_index.insert((portion.group, portion.target), p);
+        }
         let mut portion_meas = vec![0.0f64; share.portions.len()];
-        for (job, per_core) in jobs.iter().zip(&per_cores) {
-            let mut offset = 0usize;
-            for &(p, n_wls) in &job.spans {
-                portion_meas[p] = per_core[offset..offset + n_wls].iter().sum();
-                offset += n_wls;
-            }
+        for (pi, np) in sim.portions.iter().enumerate() {
+            let ri = stream_resident[np.stream];
+            let p = portion_index[&(ri, np.target)];
+            portion_meas[p] += sim.per_portion_gbs[pi];
         }
 
-        // Slowest portion gates the lockstep stream (measured side; the
-        // model applies the identical rule inside share_remote).
-        let meas_pc: Vec<f64> = residents
-            .iter()
-            .enumerate()
-            .map(|(ri, r)| {
-                let n = r.spec.cores as f64;
-                let mut rate = f64::INFINITY;
-                for (p, portion) in share.portions.iter().enumerate() {
-                    if portion.group == ri {
-                        rate = rate.min(portion_meas[p] / (n * portion.weight));
-                    }
-                }
-                if rate.is_finite() {
-                    rate
-                } else {
-                    0.0
-                }
-            })
-            .collect();
+        // Per-core lockstep rates straight from the engine (slowest portion
+        // gates each core; the model applies the identical rule inside
+        // share_remote), averaged over each resident group's cores.
+        let mut meas_pc = vec![0.0f64; residents.len()];
+        for (si, &ri) in stream_resident.iter().enumerate() {
+            meas_pc[ri] += sim.per_stream_gbs[si];
+        }
+        for (pc, r) in meas_pc.iter_mut().zip(residents) {
+            if r.spec.cores > 0 {
+                *pc /= r.spec.cores as f64;
+            }
+        }
 
         // Per-domain results: every domain with resident groups *or*
         // incoming remote traffic appears, so a saturated visitor-only
@@ -817,7 +786,7 @@ mod tests {
         // Each domain's shares are exactly Eq. 5 over that domain's groups.
         let get = |k| {
             crate::scenario::CharCache::global()
-                .lookup(&(m.id, k, EngineKind::Fluid))
+                .lookup(&(m.fingerprint(), k, EngineKind::Fluid))
                 .expect("characterized by run_mixes_on")
         };
         for (dr, wanted) in case.domains.iter().zip([

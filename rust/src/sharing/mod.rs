@@ -48,6 +48,7 @@ pub use multigroup::{
     GroupShareEntry, WeightedGroup,
 };
 pub use remote::{
-    share_remote, InterfaceShare, Portion, RemoteGroup, RemoteRateModel, RemoteShare, TopoShape,
+    portion_routes, share_remote, InterfaceShare, Portion, RemoteGroup, RemoteRateModel,
+    RemoteShare, TopoShape,
 };
 pub use share_cache::{ShareCache, ShareCacheStats, MAX_GROUP_CORES, MAX_SLOTS};

@@ -31,6 +31,12 @@
 //! the evaluation is bit-identical to [`share_domains`] (pinned by the
 //! topology conformance suite).
 //!
+//! The measurement substrate simulates the *same* interface network with
+//! the same portion expansion ([`crate::simulator::route_streams`] mirrors
+//! the routing in [`share_remote`] one for one), so the model's water-fill
+//! can be validated against simulated — not offered — link traffic; see
+//! `docs/SIMULATORS.md`.
+//!
 //! [`share_domains`]: crate::sharing::share_domains
 //!
 //! # Examples
@@ -97,6 +103,51 @@ impl TopoShape {
         }
         out
     }
+}
+
+/// The shared portion-routing rule of model and measurement: the slices
+/// of one stream homed on `home` with remote fraction `remote_frac`, as
+/// `(target domain, link index, weight)` triples — the home portion of
+/// weight `1-r` first (omitted at `r = 1`), then `r/(D-1)` per remote
+/// target in domain order, with the socket pair's link attached when the
+/// target lives on another socket and `links_modeled` is set.
+///
+/// [`share_remote`] expands its analytic groups through this function and
+/// the simulation substrate routes its per-core streams through the very
+/// same one (`route_streams` in `simulator::network`), so the two sides
+/// cannot drift apart.
+///
+/// The caller validates inputs first: `remote_frac` must be in `[0, 1]`,
+/// `home` in range, and `remote_frac > 0` needs at least two domains.
+pub fn portion_routes(
+    socket_of: &[usize],
+    links: &[(usize, usize)],
+    links_modeled: bool,
+    home: usize,
+    remote_frac: f64,
+) -> Vec<(usize, Option<usize>, f64)> {
+    let nd = socket_of.len();
+    let mut out = Vec::new();
+    let home_w = 1.0 - remote_frac;
+    if home_w > 0.0 {
+        out.push((home, None, home_w));
+    }
+    if remote_frac > 0.0 {
+        let w = remote_frac / (nd - 1) as f64;
+        for t in 0..nd {
+            if t == home {
+                continue;
+            }
+            let link = if socket_of[t] != socket_of[home] && links_modeled {
+                let pair = (socket_of[home].min(socket_of[t]), socket_of[home].max(socket_of[t]));
+                links.iter().position(|&l| l == pair)
+            } else {
+                None
+            };
+            out.push((t, link, w));
+        }
+    }
+    out
 }
 
 /// One kernel group resident on a home domain, with a remote-access split.
@@ -195,45 +246,18 @@ pub fn share_remote(shape: &TopoShape, groups: &[RemoteGroup]) -> Result<RemoteS
                 "remote accesses need at least two ccNUMA domains".into(),
             ));
         }
-        let home_w = 1.0 - g.remote_frac;
-        if home_w > 0.0 {
+        for (target, link, weight) in
+            portion_routes(&shape.socket_of, &links, shape.link_bw_gbs > 0.0, g.home, g.remote_frac)
+        {
             portions.push(Portion {
                 group: gi,
-                target: g.home,
-                weight: home_w,
-                link: None,
+                target,
+                weight,
+                link,
                 mem_bw_gbs: 0.0,
                 link_grant_gbs: 0.0,
                 granted_bw_gbs: 0.0,
             });
-        }
-        if g.remote_frac > 0.0 {
-            let w = g.remote_frac / (nd - 1) as f64;
-            for t in 0..nd {
-                if t == g.home {
-                    continue;
-                }
-                let link = if shape.socket_of[t] != shape.socket_of[g.home]
-                    && shape.link_bw_gbs > 0.0
-                {
-                    let pair = (
-                        shape.socket_of[g.home].min(shape.socket_of[t]),
-                        shape.socket_of[g.home].max(shape.socket_of[t]),
-                    );
-                    links.iter().position(|&l| l == pair)
-                } else {
-                    None
-                };
-                portions.push(Portion {
-                    group: gi,
-                    target: t,
-                    weight: w,
-                    link,
-                    mem_bw_gbs: 0.0,
-                    link_grant_gbs: 0.0,
-                    granted_bw_gbs: 0.0,
-                });
-            }
         }
     }
 

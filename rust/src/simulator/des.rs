@@ -18,12 +18,9 @@
 //! the fluid model — `cargo test` cross-validates the two (they agree to a
 //! few percent), and the PJRT artifact is validated against both.
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
-
 use crate::config::Machine;
+use crate::simulator::network::{IfaceNet, NetDesSimulator, NetStream};
 use crate::simulator::workload::CoreWorkload;
-use crate::simulator::xorshift::XorShift64;
 
 /// Configuration of a DES run.
 #[derive(Debug, Clone)]
@@ -73,43 +70,10 @@ impl DesResult {
     }
 }
 
-/// Event kinds (encoded as a u8 in the heap tuple): a core generating its
-/// next request, or the server finishing the line in service.
-#[derive(Debug, Clone, Copy, PartialEq)]
-enum Event {
-    /// Core tries to generate its next request.
-    Issue { core: usize },
-}
-
-/// Heap entry ordered by time (f64 bits — valid for non-negative times).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
-struct TimeKey(u64);
-
-impl TimeKey {
-    fn of(t: f64) -> Self {
-        debug_assert!(t >= 0.0 && t.is_finite());
-        TimeKey(t.to_bits())
-    }
-    fn time(&self) -> f64 {
-        f64::from_bits(self.0)
-    }
-}
-
 /// The discrete-event simulator.
 pub struct DesSimulator<'a> {
     machine: &'a Machine,
     config: DesConfig,
-}
-
-struct CoreState {
-    gap_cy: f64,     // cycles between generated requests (1/d)
-    window: usize,   // max outstanding lines
-    cost_cy: f64,    // service cycles per line (c / C)
-    queued: usize,   // lines waiting at the interface
-    in_service: bool,
-    outstanding: usize, // queued + in_service
-    blocked: bool,      // demand clock paused on a full window
-    served: u64,        // lines served inside the measurement window
 }
 
 impl<'a> DesSimulator<'a> {
@@ -119,145 +83,28 @@ impl<'a> DesSimulator<'a> {
     }
 
     /// Run the DES for the given per-core workloads.
+    ///
+    /// This is the degenerate one-interface case of the multi-interface
+    /// engine ([`crate::simulator::NetDesSimulator`]): one component, one
+    /// memory server, every core a whole-stream portion. The delegation is
+    /// bit-identical to the seed event loop — same xorshift draw sequence,
+    /// same heap tie-breaking (pinned by a verbatim reference copy in
+    /// `rust/tests/simulator_conformance.rs`).
     pub fn run(&self, workloads: &[CoreWorkload]) -> DesResult {
         let m = self.machine;
         assert!(workloads.len() <= m.cores);
-        let cap = m.capacity_lines_per_cy();
-        let q = &m.queue;
-        let mut rng = XorShift64::new(self.config.seed);
-
-        let mut cores: Vec<CoreState> = workloads
+        let net = IfaceNet::single(m);
+        let streams: Vec<NetStream> = workloads
             .iter()
-            .map(|w| {
-                let window =
-                    (q.depth_floor + q.depth_beta * w.demand_lines_per_cy * w.cost_factor * q.base_latency_cy)
-                        .round()
-                        .max(1.0) as usize;
-                CoreState {
-                    gap_cy: if w.is_active() { 1.0 / w.demand_lines_per_cy } else { f64::INFINITY },
-                    window,
-                    cost_cy: w.cost_factor / cap,
-                    queued: 0,
-                    in_service: false,
-                    outstanding: 0,
-                    blocked: false,
-                    served: 0,
-                }
-            })
+            .map(|&w| NetStream { workload: w, home: 0, remote_frac: 0.0 })
             .collect();
-
-        let mut heap: BinaryHeap<Reverse<(TimeKey, usize, u8)>> = BinaryHeap::new();
-        // Encode events as (time, core, kind) with kind 0=Issue 1=ServiceDone
-        // (service completions are pushed directly where service starts).
-        let push = |heap: &mut BinaryHeap<Reverse<(TimeKey, usize, u8)>>, t: f64, e: Event| {
-            let Event::Issue { core } = e;
-            heap.push(Reverse((TimeKey::of(t), core, 0u8)));
-        };
-
-        // Stagger initial issues to avoid a synchronized start.
-        for (i, c) in cores.iter().enumerate() {
-            if c.gap_cy.is_finite() {
-                push(&mut heap, rng.next_f64() * c.gap_cy, Event::Issue { core: i });
-            }
-        }
-
-        let t_end = self.config.warmup_cycles + self.config.measure_cycles;
-        let mut server_busy = false;
-        let mut busy_accum = 0.0f64;
-        let mut events: u64 = 0;
-
-        // Start service on the weighted-lottery winner, if any queue is
-        // non-empty and the server is idle.
-        fn try_serve(
-            t: f64,
-            cores: &mut [CoreState],
-            server_busy: &mut bool,
-            rng: &mut XorShift64,
-            heap: &mut BinaryHeap<Reverse<(TimeKey, usize, u8)>>,
-        ) {
-            if *server_busy {
-                return;
-            }
-            // Inline weighted lottery over queue occupancies (no allocation
-            // in the hot path — this runs once per line-service event).
-            let total: usize = cores.iter().map(|c| c.queued).sum();
-            if total == 0 {
-                return;
-            }
-            let mut x = (rng.next_f64() * total as f64) as usize;
-            let mut pick = 0;
-            for (i, c) in cores.iter().enumerate() {
-                if x < c.queued {
-                    pick = i;
-                    break;
-                }
-                x -= c.queued;
-            }
-            cores[pick].queued -= 1;
-            cores[pick].in_service = true;
-            *server_busy = true;
-            let done = t + cores[pick].cost_cy;
-            heap.push(Reverse((TimeKey::of(done), pick, 1u8)));
-        }
-
-        while let Some(Reverse((key, core, kind))) = heap.pop() {
-            let t = key.time();
-            if t >= t_end {
-                break;
-            }
-            events += 1;
-            match kind {
-                0 => {
-                    // Issue event.
-                    let c = &mut cores[core];
-                    if c.outstanding < c.window {
-                        c.queued += 1;
-                        c.outstanding += 1;
-                        c.blocked = false;
-                        let jitter = 0.95 + 0.1 * rng.next_f64();
-                        push(&mut heap, t + c.gap_cy * jitter, Event::Issue { core });
-                        try_serve(t, &mut cores, &mut server_busy, &mut rng, &mut heap);
-                    } else {
-                        // Window full: pause the demand clock until a
-                        // completion unblocks us.
-                        c.blocked = true;
-                    }
-                }
-                _ => {
-                    // ServiceDone event.
-                    let in_measure = t >= self.config.warmup_cycles;
-                    {
-                        let c = &mut cores[core];
-                        c.in_service = false;
-                        c.outstanding -= 1;
-                        if in_measure {
-                            c.served += 1;
-                        }
-                    }
-                    if in_measure {
-                        busy_accum += cores[core].cost_cy;
-                    }
-                    server_busy = false;
-                    if cores[core].blocked {
-                        cores[core].blocked = false;
-                        push(&mut heap, t, Event::Issue { core });
-                    }
-                    try_serve(t, &mut cores, &mut server_busy, &mut rng, &mut heap);
-                }
-            }
-        }
-
-        let cycles = self.config.measure_cycles;
-        let per_core_gbs: Vec<f64> = cores
-            .iter()
-            .map(|c| m.lines_per_cy_to_gbs(c.served as f64 / cycles))
-            .collect();
-        let total_gbs = per_core_gbs.iter().sum();
+        let r = NetDesSimulator::new(&net, self.config.clone()).run(&streams);
+        let total_gbs = r.per_stream_gbs.iter().sum();
         DesResult {
-            per_core_gbs,
+            per_core_gbs: r.per_stream_gbs,
             total_gbs,
-            utilization: (busy_accum / cycles).min(1.0),
-            events,
+            utilization: r.mem_utilization[0],
+            events: r.events,
         }
     }
 }

@@ -25,6 +25,7 @@
 //!   thread-weighted) service mix.
 
 use crate::config::Machine;
+use crate::simulator::network::{IfaceNet, NetFluidSimulator, NetStream};
 use crate::simulator::workload::CoreWorkload;
 
 /// Configuration of one fluid simulation run.
@@ -99,59 +100,29 @@ impl<'a> FluidSimulator<'a> {
 
     /// Run the per-cycle fluid model for the given per-core workloads
     /// (one entry per core; use [`CoreWorkload::idle`] for idle cores).
+    ///
+    /// This is the degenerate one-interface case of the multi-interface
+    /// engine ([`crate::simulator::NetFluidSimulator`]): every core is one
+    /// home portion of weight 1 on a single-memory-interface network. The
+    /// delegation is bit-identical to the seed fused loop (pinned by a
+    /// verbatim reference copy in `rust/tests/simulator_conformance.rs`).
     pub fn run(&self, workloads: &[CoreWorkload]) -> FluidResult {
         let m = self.machine;
         let n = workloads.len();
         assert!(n <= m.cores, "more workloads ({n}) than cores ({})", m.cores);
 
-        let cap = m.capacity_lines_per_cy();
-        let d: Vec<f64> = workloads.iter().map(|w| w.demand_lines_per_cy).collect();
-        let c: Vec<f64> = workloads.iter().map(|w| w.cost_factor).collect();
-        let win: Vec<f64> = workloads.iter().map(|w| self.window(w)).collect();
-
-        let mut occ = vec![0.0f64; n]; // queued requests per core (lines)
-        let mut served = vec![0.0f64; n]; // cumulative, measurement window
-        let mut u_accum = 0.0f64;
-
-        // Fused hot loop: the service of cycle k and the issue of cycle k+1
-        // happen in one pass over the cores (λ of cycle k is computed from
-        // the occupancy accumulated at the end of the previous pass).
-        // Semantically identical to the separate issue→serve formulation up
-        // to a one-cycle shift at the warm-up boundary; ~1.5x faster.
-        let total_cycles = self.config.warmup_cycles + self.config.measure_cycles;
-        let mut occ_cost = 0.0f64; // Σ o_i c_i at the end of the last pass
-        for cycle in 0..=total_cycles {
-            // `occ` currently holds the post-issue state of cycle `cycle-1`
-            // (empty for cycle 0): serve it, then issue for this cycle.
-            let measuring = cycle > self.config.warmup_cycles;
-            let lambda = if occ_cost > 1e-12 { (cap / occ_cost).min(1.0) } else { 1.0 };
-            if measuring {
-                u_accum += (occ_cost / cap).min(1.0);
-            }
-            let keep = 1.0 - lambda;
-            occ_cost = 0.0;
-            for i in 0..n {
-                let o_pre = occ[i];
-                if measuring {
-                    served[i] += lambda * o_pre;
-                }
-                let mut o = o_pre * keep;
-                let di = d[i];
-                if di > 0.0 {
-                    o += di.min((win[i] - o).max(0.0));
-                }
-                occ[i] = o;
-                occ_cost += o * c[i];
-            }
-        }
-
-        let cycles = self.config.measure_cycles as f64;
-        let per_core_gbs: Vec<f64> = served
+        let net = IfaceNet::single(m);
+        let streams: Vec<NetStream> = workloads
             .iter()
-            .map(|s| m.lines_per_cy_to_gbs(s / cycles))
+            .map(|&w| NetStream { workload: w, home: 0, remote_frac: 0.0 })
             .collect();
-        let total_gbs = per_core_gbs.iter().sum();
-        FluidResult { per_core_gbs, total_gbs, utilization: u_accum / cycles }
+        let r = NetFluidSimulator::new(&net, self.config.clone()).run(&streams);
+        let total_gbs = r.per_stream_gbs.iter().sum();
+        FluidResult {
+            per_core_gbs: r.per_stream_gbs,
+            total_gbs,
+            utilization: r.mem_utilization[0],
+        }
     }
 }
 

@@ -10,6 +10,13 @@
 //! * `des` — line-granularity discrete-event simulator with an explicit
 //!   FCFS-with-lottery memory queue, integer line requests, and stochastic
 //!   tie-breaking. Higher fidelity, slower; the reference.
+//! * `network` — the multi-interface generalization both engines are built
+//!   on: a set of interfaces (per-domain memory controllers + inter-socket
+//!   links), each core's stream split into routed portions, every
+//!   interface water-filled independently, the slowest portion gating the
+//!   stream (see `docs/SIMULATORS.md`). The single-interface engines above
+//!   are its degenerate one-interface case (delegation pinned bit-identical
+//!   by `rust/tests/simulator_conformance.rs`).
 //!
 //! Both deliberately model mechanisms the analytic sharing model ignores
 //! (prefetch-depth floors, queueing latency, write-service penalty, the ECM
@@ -18,6 +25,7 @@
 mod des;
 mod fluid;
 mod measurement;
+mod network;
 mod workload;
 mod xorshift;
 
@@ -26,6 +34,10 @@ pub use fluid::{FluidConfig, FluidResult, FluidSimulator};
 pub use measurement::{
     measure_f_bs, measure_pairing, measure_scaling, run_engine, Engine, KernelMeasurement,
     PairingMeasurement,
+};
+pub use network::{
+    route_streams, run_net_engine, IfaceNet, NetDesSimulator, NetFluidSimulator, NetPortion,
+    NetResult, NetStream,
 };
 pub use workload::CoreWorkload;
 pub use xorshift::XorShift64;

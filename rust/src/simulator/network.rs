@@ -1,0 +1,793 @@
+//! The multi-interface simulation substrate: fluid and discrete-event
+//! engines over a *network* of contention interfaces (per-domain memory
+//! controllers plus inter-socket links) instead of one capacity-`C`
+//! interface.
+//!
+//! A core's request stream is split into traffic **portions** — a home
+//! portion of weight `1-r` plus, for remote fraction `r > 0`, one portion
+//! of weight `r/(D-1)` per remote domain ([`route_streams`], mirroring the
+//! analytic model's expansion in [`crate::sharing::remote`], so model and
+//! measurement share one routing abstraction). Each portion is routed over
+//! an interface *path*: the target domain's memory interface and, when the
+//! target sits on another socket, the inter-socket link of that socket
+//! pair.
+//!
+//! **Fluid** ([`NetFluidSimulator`]): the per-cycle service step
+//! water-fills every interface independently (`λ_j = min(1, C_j / Σ o c)`),
+//! and a portion crossing a link drains at the *slower* of its two
+//! interfaces (`min(λ_mem, λ_link)`). Issue is per portion with the
+//! bandwidth-delay window `W_p = D0 + β d_p c L0` of the portion's thinned
+//! demand `d_p = d·w`. Links transfer lines at wire rate, so their service
+//! cost factor is 1.0 regardless of the line mix (memory interfaces keep
+//! the kernel's read/write cost factor).
+//!
+//! **DES** ([`NetDesSimulator`]): the interface graph decomposes into
+//! connected components (interfaces joined by link-crossing portions);
+//! each component replays its own event loop with its own xorshift64*
+//! stream, so an `r = 0` multi-domain run is *bit-identical* to the
+//! independent per-domain runs of the single-interface engine. A
+//! link-crossing line is served in tandem: first by the link server
+//! (cost `1/C_link`), then by the target memory server — the steady-state
+//! throughput is gated by the slower stage, the event-level analogue of
+//! the fluid `min(λ)` rule.
+//!
+//! A core's effective bandwidth applies the **lockstep-stream** rule of
+//! the analytic model: local and remote lines interleave in fixed
+//! proportion, so the slowest portion gates the stream —
+//! `per_stream = min_p drain_p / w_p`.
+//!
+//! The single-interface engines ([`crate::simulator::FluidSimulator`],
+//! [`crate::simulator::DesSimulator`]) are the degenerate one-portion,
+//! zero-link case and delegate here; `rust/tests/simulator_conformance.rs`
+//! pins them bit-identical to verbatim copies of the seed loops, and the
+//! whole substrate is mirrored operation-for-operation by
+//! `python/netfluid_mirror.py` (see `docs/SIMULATORS.md`).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::config::{Machine, QueueParams};
+use crate::simulator::des::DesConfig;
+use crate::simulator::fluid::FluidConfig;
+use crate::simulator::measurement::Engine;
+use crate::simulator::workload::CoreWorkload;
+use crate::simulator::xorshift::XorShift64;
+use crate::topology::Topology;
+
+/// A network of contention interfaces: one memory interface per ccNUMA
+/// domain plus the inter-socket links, all in capacity units of
+/// (read-cost) cache lines per core cycle.
+#[derive(Debug, Clone)]
+pub struct IfaceNet {
+    /// Memory-interface capacity per domain, lines/cy.
+    pub mem_capacity: Vec<f64>,
+    /// Socket of each domain.
+    pub socket_of: Vec<usize>,
+    /// Inter-socket links (unordered socket pairs, lexicographic — the
+    /// same enumeration as [`crate::sharing::TopoShape::links`]).
+    pub links: Vec<(usize, usize)>,
+    /// Capacity of one link, lines/cy (`0` = links not modeled; remote
+    /// portions then only contend on the target memory interface).
+    pub link_capacity: f64,
+    /// Core clock, GHz (converts line rates to GB/s).
+    pub freq_ghz: f64,
+    /// Queueing calibration shared by every interface.
+    pub queue: QueueParams,
+}
+
+impl IfaceNet {
+    /// The degenerate single-interface network of one machine row — the
+    /// network the pre-existing single-interface engines run on.
+    pub fn single(m: &Machine) -> Self {
+        IfaceNet {
+            mem_capacity: vec![m.capacity_lines_per_cy()],
+            socket_of: vec![0],
+            links: Vec::new(),
+            link_capacity: 0.0,
+            freq_ghz: m.freq_ghz,
+            queue: m.queue,
+        }
+    }
+
+    /// The network of a [`Topology`]: one memory interface per domain
+    /// (scaled rows keep their scaled capacity) plus the base machine's
+    /// inter-socket links.
+    pub fn of_topology(topo: &Topology) -> Self {
+        let link_capacity = if topo.base.link_bw_gbs > 0.0 {
+            topo.base.link_bw_gbs / topo.base.freq_ghz / crate::CACHE_LINE_BYTES
+        } else {
+            0.0
+        };
+        IfaceNet {
+            mem_capacity: topo.domains.iter().map(|d| d.machine.capacity_lines_per_cy()).collect(),
+            socket_of: topo.socket_of(),
+            links: topo.links(),
+            link_capacity,
+            freq_ghz: topo.base.freq_ghz,
+            queue: topo.base.queue,
+        }
+    }
+
+    /// Number of ccNUMA domains (memory interfaces).
+    pub fn n_domains(&self) -> usize {
+        self.mem_capacity.len()
+    }
+
+    /// Convert a line rate (lines/cy) to GB/s (same arithmetic as
+    /// [`Machine::lines_per_cy_to_gbs`]).
+    pub fn to_gbs(&self, lines_per_cy: f64) -> f64 {
+        lines_per_cy * crate::CACHE_LINE_BYTES * self.freq_ghz
+    }
+}
+
+/// One simulated core with its routing: the workload it runs, the domain
+/// its cores are pinned to, and the fraction of its cache-line stream that
+/// targets remote domains (uniform spread).
+#[derive(Debug, Clone, Copy)]
+pub struct NetStream {
+    /// The core's workload (intrinsic demand + service-cost factor).
+    pub workload: CoreWorkload,
+    /// Home ccNUMA domain.
+    pub home: usize,
+    /// Remote-access fraction in `[0, 1]`.
+    pub remote_frac: f64,
+}
+
+/// One traffic portion of a stream: the slice aimed at one target domain,
+/// possibly crossing one inter-socket link.
+#[derive(Debug, Clone, Copy)]
+pub struct NetPortion {
+    /// Index of the stream in the input slice.
+    pub stream: usize,
+    /// Target domain of the portion.
+    pub target: usize,
+    /// Index into [`IfaceNet::links`] when the portion crosses sockets.
+    pub link: Option<usize>,
+    /// Fraction of the stream's lines in this portion (`> 0`).
+    pub weight: f64,
+}
+
+/// Expand streams into routed portions through the *same* routing rule
+/// the analytic model uses ([`crate::sharing::portion_routes`], shared
+/// with [`crate::sharing::share_remote`]) — home portion first, then
+/// remote targets in domain order; the two sides cannot drift apart.
+///
+/// # Panics
+/// On a remote fraction outside `[0, 1]`, a home domain out of range, or
+/// remote traffic on a single-domain network — all programming errors of
+/// the caller (the scenario runner validates specs before routing).
+pub fn route_streams(net: &IfaceNet, streams: &[NetStream]) -> Vec<NetPortion> {
+    let nd = net.n_domains();
+    let mut portions = Vec::with_capacity(streams.len());
+    for (si, s) in streams.iter().enumerate() {
+        let r = s.remote_frac;
+        assert!(r.is_finite() && (0.0..=1.0).contains(&r), "remote fraction {r} outside [0, 1]");
+        assert!(s.home < nd, "stream {si} homed on domain d{} of {nd}", s.home);
+        assert!(r == 0.0 || nd >= 2, "remote accesses need at least two ccNUMA domains");
+        for (target, link, weight) in crate::sharing::portion_routes(
+            &net.socket_of,
+            &net.links,
+            net.link_capacity > 0.0,
+            s.home,
+            r,
+        ) {
+            portions.push(NetPortion { stream: si, target, link, weight });
+        }
+    }
+    portions
+}
+
+/// Result of a multi-interface run (fluid or DES).
+#[derive(Debug, Clone)]
+pub struct NetResult {
+    /// The routed portions the run simulated, in routing order.
+    pub portions: Vec<NetPortion>,
+    /// Drained bandwidth per portion, GB/s.
+    pub per_portion_gbs: Vec<f64>,
+    /// Effective per-core bandwidth per stream after the lockstep rule
+    /// (`min_p drain_p / w_p`), GB/s.
+    pub per_stream_gbs: Vec<f64>,
+    /// Total drained bandwidth per memory interface, GB/s.
+    pub mem_total_gbs: Vec<f64>,
+    /// Total *simulated* traffic per link, GB/s (lines that actually
+    /// crossed, not offered demand).
+    pub link_total_gbs: Vec<f64>,
+    /// Mean utilization per memory interface (0..1).
+    pub mem_utilization: Vec<f64>,
+    /// Mean utilization per link (0..1).
+    pub link_utilization: Vec<f64>,
+    /// Events processed (DES; 0 for the fluid engine).
+    pub events: u64,
+}
+
+impl NetResult {
+    fn from_served(
+        net: &IfaceNet,
+        streams: &[NetStream],
+        portions: Vec<NetPortion>,
+        served_lines_per_cy: &[f64],
+        mem_utilization: Vec<f64>,
+        link_utilization: Vec<f64>,
+        events: u64,
+    ) -> Self {
+        let per_portion_gbs: Vec<f64> =
+            served_lines_per_cy.iter().map(|&s| net.to_gbs(s)).collect();
+        let mut per_stream_gbs = vec![0.0f64; streams.len()];
+        for (si, rate) in per_stream_gbs.iter_mut().enumerate() {
+            let mut r = f64::INFINITY;
+            for (pi, p) in portions.iter().enumerate() {
+                if p.stream == si {
+                    r = r.min(per_portion_gbs[pi] / p.weight);
+                }
+            }
+            *rate = if r.is_finite() { r } else { 0.0 };
+        }
+        let mut mem_total_gbs = vec![0.0f64; net.n_domains()];
+        let mut link_total_gbs = vec![0.0f64; net.links.len()];
+        for (pi, p) in portions.iter().enumerate() {
+            mem_total_gbs[p.target] += per_portion_gbs[pi];
+            if let Some(l) = p.link {
+                link_total_gbs[l] += per_portion_gbs[pi];
+            }
+        }
+        NetResult {
+            portions,
+            per_portion_gbs,
+            per_stream_gbs,
+            mem_total_gbs,
+            link_total_gbs,
+            mem_utilization,
+            link_utilization,
+            events,
+        }
+    }
+}
+
+/// The multi-interface fluid simulator (per-cycle fractional state; see
+/// the module docs for the physics).
+pub struct NetFluidSimulator<'a> {
+    net: &'a IfaceNet,
+    config: FluidConfig,
+}
+
+impl<'a> NetFluidSimulator<'a> {
+    /// Create a simulator for `net`.
+    pub fn new(net: &'a IfaceNet, config: FluidConfig) -> Self {
+        NetFluidSimulator { net, config }
+    }
+
+    /// Run the per-cycle fluid model for the given streams.
+    pub fn run(&self, streams: &[NetStream]) -> NetResult {
+        let net = self.net;
+        let q = &net.queue;
+        let nd = net.n_domains();
+        let nl = net.links.len();
+        let portions = route_streams(net, streams);
+        let np = portions.len();
+        let dp: Vec<f64> =
+            portions.iter().map(|p| streams[p.stream].workload.demand_lines_per_cy * p.weight).collect();
+        let cp: Vec<f64> = portions.iter().map(|p| streams[p.stream].workload.cost_factor).collect();
+        let win: Vec<f64> = (0..np)
+            .map(|i| q.depth_floor + q.depth_beta * dp[i] * cp[i] * q.base_latency_cy)
+            .collect();
+
+        let mut occ = vec![0.0f64; np];
+        let mut served = vec![0.0f64; np];
+        let mut occ_mem = vec![0.0f64; nd];
+        let mut occ_link = vec![0.0f64; nl];
+        let mut u_mem = vec![0.0f64; nd];
+        let mut u_link = vec![0.0f64; nl];
+        let mut lam_mem = vec![1.0f64; nd];
+        let mut lam_link = vec![1.0f64; nl];
+
+        // Same fused hot loop as the seed single-interface engine: the
+        // service of cycle k and the issue of cycle k+1 happen in one pass
+        // (λ of cycle k comes from the occupancy at the end of the previous
+        // pass). The degenerate one-interface case is bit-identical to the
+        // seed loop (pinned by the simulator conformance suite).
+        let total_cycles = self.config.warmup_cycles + self.config.measure_cycles;
+        for cycle in 0..=total_cycles {
+            let measuring = cycle > self.config.warmup_cycles;
+            for d in 0..nd {
+                lam_mem[d] = if occ_mem[d] > 1e-12 {
+                    (net.mem_capacity[d] / occ_mem[d]).min(1.0)
+                } else {
+                    1.0
+                };
+            }
+            for l in 0..nl {
+                lam_link[l] = if occ_link[l] > 1e-12 {
+                    (net.link_capacity / occ_link[l]).min(1.0)
+                } else {
+                    1.0
+                };
+            }
+            if measuring {
+                for d in 0..nd {
+                    u_mem[d] += (occ_mem[d] / net.mem_capacity[d]).min(1.0);
+                }
+                // Guarded: with unmodeled links (capacity 0) the quotient
+                // would be 0/0 = NaN and `min` would discard it as 1.0 —
+                // an unmodeled link must report 0 utilization, not 100%.
+                if net.link_capacity > 0.0 {
+                    for l in 0..nl {
+                        u_link[l] += (occ_link[l] / net.link_capacity).min(1.0);
+                    }
+                }
+            }
+            occ_mem.fill(0.0);
+            occ_link.fill(0.0);
+            for i in 0..np {
+                let p = &portions[i];
+                let lam = match p.link {
+                    Some(l) => lam_mem[p.target].min(lam_link[l]),
+                    None => lam_mem[p.target],
+                };
+                let o_pre = occ[i];
+                if measuring {
+                    served[i] += lam * o_pre;
+                }
+                let mut o = o_pre * (1.0 - lam);
+                if dp[i] > 0.0 {
+                    o += dp[i].min((win[i] - o).max(0.0));
+                }
+                occ[i] = o;
+                occ_mem[p.target] += o * cp[i];
+                if let Some(l) = p.link {
+                    occ_link[l] += o; // wire rate: link cost factor 1.0
+                }
+            }
+        }
+
+        let cycles = self.config.measure_cycles as f64;
+        let served_rate: Vec<f64> = served.iter().map(|s| s / cycles).collect();
+        NetResult::from_served(
+            net,
+            streams,
+            portions,
+            &served_rate,
+            u_mem.iter().map(|u| u / cycles).collect(),
+            u_link.iter().map(|u| u / cycles).collect(),
+            0,
+        )
+    }
+}
+
+/// Heap key ordering nonnegative event times by their IEEE-754 bits (the
+/// same trick as the seed DES).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct TimeKey(u64);
+
+impl TimeKey {
+    fn of(t: f64) -> Self {
+        debug_assert!(t >= 0.0 && t.is_finite());
+        TimeKey(t.to_bits())
+    }
+    fn time(&self) -> f64 {
+        f64::from_bits(self.0)
+    }
+}
+
+/// Event kinds of the multi-interface DES, ordered so that at equal
+/// `(time, portion)` an Issue fires before a memory completion before a
+/// link completion (the seed engine's Issue-before-ServiceDone rule).
+const EV_ISSUE: u8 = 0;
+const EV_MEM_DONE: u8 = 1;
+const EV_LINK_DONE: u8 = 2;
+
+/// The multi-interface discrete-event simulator (see the module docs).
+pub struct NetDesSimulator<'a> {
+    net: &'a IfaceNet,
+    config: DesConfig,
+}
+
+impl<'a> NetDesSimulator<'a> {
+    /// Create a DES for `net`.
+    pub fn new(net: &'a IfaceNet, config: DesConfig) -> Self {
+        NetDesSimulator { net, config }
+    }
+
+    /// Run the DES for the given streams.
+    pub fn run(&self, streams: &[NetStream]) -> NetResult {
+        let net = self.net;
+        let nd = net.n_domains();
+        let nl = net.links.len();
+        let portions = route_streams(net, streams);
+        let np = portions.len();
+
+        // Connected components of the interface graph (mem d ↔ link l for
+        // every link-crossing portion), via union-find over interface ids
+        // (mem d → d, link l → nd + l).
+        let mut parent: Vec<usize> = (0..nd + nl).collect();
+        fn find(parent: &mut [usize], mut x: usize) -> usize {
+            while parent[x] != x {
+                parent[x] = parent[parent[x]];
+                x = parent[x];
+            }
+            x
+        }
+        for p in &portions {
+            if let Some(l) = p.link {
+                let (ra, rb) = (find(&mut parent, p.target), find(&mut parent, nd + l));
+                if ra != rb {
+                    parent[ra.max(rb)] = ra.min(rb);
+                }
+            }
+        }
+        let comp_of_iface: Vec<usize> = (0..nd + nl).map(|x| find(&mut parent, x)).collect();
+        let mut roots: Vec<usize> = portions.iter().map(|p| comp_of_iface[p.target]).collect();
+        roots.sort_unstable();
+        roots.dedup();
+
+        let mut served = vec![0u64; np];
+        let mut mem_busy_accum = vec![0.0f64; nd];
+        let mut link_busy_accum = vec![0.0f64; nl];
+        let mut events: u64 = 0;
+        for &root in &roots {
+            let local: Vec<usize> =
+                (0..np).filter(|&i| comp_of_iface[portions[i].target] == root).collect();
+            events += run_des_component(
+                net,
+                &self.config,
+                streams,
+                &portions,
+                &local,
+                &mut served,
+                &mut mem_busy_accum,
+                &mut link_busy_accum,
+            );
+        }
+
+        let cycles = self.config.measure_cycles;
+        let served_rate: Vec<f64> = served.iter().map(|&s| s as f64 / cycles).collect();
+        NetResult::from_served(
+            net,
+            streams,
+            portions,
+            &served_rate,
+            mem_busy_accum.iter().map(|b| (b / cycles).min(1.0)).collect(),
+            link_busy_accum.iter().map(|b| (b / cycles).min(1.0)).collect(),
+            events,
+        )
+    }
+}
+
+/// One component's event loop, with its own RNG stream — for a component
+/// containing a single memory interface and whole-core portions this is
+/// the seed DES loop verbatim (pinned bitwise by the conformance suite).
+#[allow(clippy::too_many_arguments)]
+fn run_des_component(
+    net: &IfaceNet,
+    config: &DesConfig,
+    streams: &[NetStream],
+    portions: &[NetPortion],
+    local: &[usize],
+    served: &mut [u64],
+    mem_busy_accum: &mut [f64],
+    link_busy_accum: &mut [f64],
+) -> u64 {
+    let q = &net.queue;
+    let mut rng = XorShift64::new(config.seed);
+    let k = local.len();
+
+    let mut gap = vec![f64::INFINITY; k];
+    let mut window = vec![1usize; k];
+    let mut mcost = vec![0.0f64; k];
+    let mut lcost = vec![0.0f64; k];
+    let mut q_mem = vec![0usize; k];
+    let mut q_link = vec![0usize; k];
+    let mut outstanding = vec![0usize; k];
+    let mut blocked = vec![false; k];
+    for (j, &i) in local.iter().enumerate() {
+        let p = &portions[i];
+        let d = streams[p.stream].workload.demand_lines_per_cy * p.weight;
+        let c = streams[p.stream].workload.cost_factor;
+        gap[j] = if d > 0.0 { 1.0 / d } else { f64::INFINITY };
+        window[j] =
+            (q.depth_floor + q.depth_beta * d * c * q.base_latency_cy).round().max(1.0) as usize;
+        mcost[j] = c / net.mem_capacity[p.target];
+        if p.link.is_some() {
+            lcost[j] = 1.0 / net.link_capacity;
+        }
+    }
+
+    // Per-interface member lists (component-local indices, routing order —
+    // the lottery iterates them in this order).
+    let mut mem_members: Vec<Vec<usize>> = vec![Vec::new(); net.n_domains()];
+    let mut link_members: Vec<Vec<usize>> = vec![Vec::new(); net.links.len()];
+    for (j, &i) in local.iter().enumerate() {
+        mem_members[portions[i].target].push(j);
+        if let Some(l) = portions[i].link {
+            link_members[l].push(j);
+        }
+    }
+    let mut mem_busy = vec![false; net.n_domains()];
+    let mut link_busy = vec![false; net.links.len()];
+
+    let mut heap: BinaryHeap<Reverse<(TimeKey, usize, u8)>> = BinaryHeap::new();
+    for (j, g) in gap.iter().enumerate() {
+        if g.is_finite() {
+            heap.push(Reverse((TimeKey::of(rng.next_f64() * g), j, EV_ISSUE)));
+        }
+    }
+    let t_end = config.warmup_cycles + config.measure_cycles;
+
+    /// Weighted lottery over one interface's queues (no allocation in the
+    /// hot path), then start service — the seed `try_serve`, per interface.
+    fn try_serve(
+        t: f64,
+        members: &[usize],
+        queues: &mut [usize],
+        busy: &mut bool,
+        cost: &[f64],
+        done_kind: u8,
+        rng: &mut XorShift64,
+        heap: &mut BinaryHeap<Reverse<(TimeKey, usize, u8)>>,
+    ) {
+        if *busy {
+            return;
+        }
+        let total: usize = members.iter().map(|&j| queues[j]).sum();
+        if total == 0 {
+            return;
+        }
+        let mut x = (rng.next_f64() * total as f64) as usize;
+        let mut pick = members[0];
+        for &j in members {
+            if x < queues[j] {
+                pick = j;
+                break;
+            }
+            x -= queues[j];
+        }
+        queues[pick] -= 1;
+        *busy = true;
+        heap.push(Reverse((TimeKey::of(t + cost[pick]), pick, done_kind)));
+    }
+
+    let mut events: u64 = 0;
+    while let Some(Reverse((key, j, kind))) = heap.pop() {
+        let t = key.time();
+        if t >= t_end {
+            break;
+        }
+        events += 1;
+        let p = &portions[local[j]];
+        match kind {
+            EV_ISSUE => {
+                if outstanding[j] < window[j] {
+                    outstanding[j] += 1;
+                    blocked[j] = false;
+                    let jitter = 0.95 + 0.1 * rng.next_f64();
+                    heap.push(Reverse((TimeKey::of(t + gap[j] * jitter), j, EV_ISSUE)));
+                    match p.link {
+                        Some(l) => {
+                            q_link[j] += 1;
+                            try_serve(
+                                t,
+                                &link_members[l],
+                                &mut q_link,
+                                &mut link_busy[l],
+                                &lcost,
+                                EV_LINK_DONE,
+                                &mut rng,
+                                &mut heap,
+                            );
+                        }
+                        None => {
+                            q_mem[j] += 1;
+                            try_serve(
+                                t,
+                                &mem_members[p.target],
+                                &mut q_mem,
+                                &mut mem_busy[p.target],
+                                &mcost,
+                                EV_MEM_DONE,
+                                &mut rng,
+                                &mut heap,
+                            );
+                        }
+                    }
+                } else {
+                    blocked[j] = true;
+                }
+            }
+            EV_LINK_DONE => {
+                // The line crossed the link: it now queues at the target
+                // memory interface (tandem service).
+                let l = p.link.expect("link completion on a link portion");
+                q_mem[j] += 1;
+                if t >= config.warmup_cycles {
+                    link_busy_accum[l] += lcost[j];
+                }
+                link_busy[l] = false;
+                try_serve(
+                    t,
+                    &mem_members[p.target],
+                    &mut q_mem,
+                    &mut mem_busy[p.target],
+                    &mcost,
+                    EV_MEM_DONE,
+                    &mut rng,
+                    &mut heap,
+                );
+                try_serve(
+                    t,
+                    &link_members[l],
+                    &mut q_link,
+                    &mut link_busy[l],
+                    &lcost,
+                    EV_LINK_DONE,
+                    &mut rng,
+                    &mut heap,
+                );
+            }
+            _ => {
+                // EV_MEM_DONE: the line is fully served.
+                outstanding[j] -= 1;
+                if t >= config.warmup_cycles {
+                    served[local[j]] += 1;
+                    mem_busy_accum[p.target] += mcost[j];
+                }
+                mem_busy[p.target] = false;
+                if blocked[j] {
+                    blocked[j] = false;
+                    heap.push(Reverse((TimeKey::of(t), j, EV_ISSUE)));
+                }
+                try_serve(
+                    t,
+                    &mem_members[p.target],
+                    &mut q_mem,
+                    &mut mem_busy[p.target],
+                    &mcost,
+                    EV_MEM_DONE,
+                    &mut rng,
+                    &mut heap,
+                );
+            }
+        }
+    }
+    events
+}
+
+/// Run `streams` on `net` with the given in-process engine and default
+/// config (the multi-interface analogue of
+/// [`crate::simulator::run_engine`]).
+pub fn run_net_engine(net: &IfaceNet, streams: &[NetStream], engine: Engine) -> NetResult {
+    match engine {
+        Engine::Fluid => NetFluidSimulator::new(net, FluidConfig::default()).run(streams),
+        Engine::Des => NetDesSimulator::new(net, DesConfig::default()).run(streams),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{machine, MachineId};
+    use crate::kernels::{kernel, KernelId};
+
+    fn stream(k: KernelId, m: &Machine, home: usize, r: f64) -> NetStream {
+        NetStream {
+            workload: CoreWorkload::from_kernel(&kernel(k), m, 0),
+            home,
+            remote_frac: r,
+        }
+    }
+
+    fn two_socket_rome() -> (Machine, Topology) {
+        let m = machine(MachineId::Rome);
+        let topo = Topology::parse(&m, "2x4").unwrap();
+        (m, topo)
+    }
+
+    #[test]
+    fn routing_mirrors_share_remote_expansion() {
+        let (m, topo) = two_socket_rome();
+        let net = IfaceNet::of_topology(&topo);
+        assert_eq!(net.n_domains(), 8);
+        assert_eq!(net.links, vec![(0, 1)]);
+        let ps = route_streams(&net, &[stream(KernelId::Dcopy, &m, 0, 0.25)]);
+        // Home portion + 7 remote portions, home first.
+        assert_eq!(ps.len(), 8);
+        assert_eq!(ps[0].target, 0);
+        assert!(ps[0].link.is_none());
+        assert!((ps[0].weight - 0.75).abs() < 1e-15);
+        let crossing: Vec<&NetPortion> = ps.iter().filter(|p| p.link.is_some()).collect();
+        assert_eq!(crossing.len(), 4, "four targets on the other socket");
+        assert!(crossing.iter().all(|p| p.target >= 4));
+        let wsum: f64 = ps.iter().map(|p| p.weight).sum();
+        assert!((wsum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn r_zero_net_fluid_matches_single_interface_engine() {
+        // One domain populated, one idle: the populated domain's streams
+        // drain exactly as the single-interface fluid engine drains them.
+        use crate::simulator::fluid::FluidSimulator;
+        let (m, topo) = two_socket_rome();
+        let net = IfaceNet::of_topology(&topo);
+        let ws = [
+            stream(KernelId::Dcopy, &m, 0, 0.0),
+            stream(KernelId::Dcopy, &m, 0, 0.0),
+            stream(KernelId::Ddot2, &m, 0, 0.0),
+        ];
+        let r = NetFluidSimulator::new(&net, FluidConfig::default()).run(&ws);
+        let solo = FluidSimulator::new(&m, FluidConfig::default())
+            .run(&ws.iter().map(|s| s.workload).collect::<Vec<_>>());
+        for (a, b) in r.per_stream_gbs.iter().zip(&solo.per_core_gbs) {
+            assert_eq!(a.to_bits(), b.to_bits(), "r=0 must be the single-interface engine");
+        }
+    }
+
+    #[test]
+    fn link_gated_fluid_matches_model_within_ceiling() {
+        // The docs/SIMULATORS.md worked example: 64 dcopy cores at r = 0.5
+        // on 2xNPS4 Rome saturate the xGMI link; the fluid per-core rate is
+        // link-gated and matches the analytic water-fill (mirror-checked in
+        // python/netfluid_mirror.py).
+        use crate::sharing::{share_remote, RemoteGroup};
+        let (m, topo) = two_socket_rome();
+        let net = IfaceNet::of_topology(&topo);
+        let chars = crate::ecm::predict(&kernel(KernelId::Dcopy), &m);
+        let streams: Vec<NetStream> = (0..8)
+            .flat_map(|d| (0..8).map(move |_| (d, 0.5)))
+            .map(|(d, r)| stream(KernelId::Dcopy, &m, d, r))
+            .collect();
+        let r = NetFluidSimulator::new(&net, FluidConfig::default()).run(&streams);
+        let groups: Vec<RemoteGroup> = (0..8)
+            .map(|d| RemoteGroup {
+                home: d,
+                n: 8,
+                f: chars.f,
+                bs_gbs: chars.bs_gbs,
+                remote_frac: 0.5,
+            })
+            .collect();
+        let model = share_remote(&topo.shape(), &groups).unwrap();
+        for d in 0..8 {
+            let sim = r.per_stream_gbs[8 * d];
+            let err = (sim - model.per_core_gbs[d]).abs() / model.per_core_gbs[d];
+            assert!(err < 0.08, "domain {d}: fluid {sim} vs model {}", model.per_core_gbs[d]);
+        }
+        // Simulated link traffic saturates at, and never exceeds, capacity.
+        assert!(r.link_total_gbs[0] <= m.link_bw_gbs * 1.001, "{}", r.link_total_gbs[0]);
+        assert!(r.link_total_gbs[0] > 0.9 * m.link_bw_gbs, "{}", r.link_total_gbs[0]);
+        assert!(r.link_utilization[0] > 0.95);
+    }
+
+    #[test]
+    fn des_and_fluid_agree_on_a_remote_case() {
+        let (m, topo) = two_socket_rome();
+        let net = IfaceNet::of_topology(&topo);
+        let streams: Vec<NetStream> =
+            (0..8).map(|_| stream(KernelId::Dcopy, &m, 0, 0.5)).collect();
+        let rf = NetFluidSimulator::new(&net, FluidConfig::default()).run(&streams);
+        let rd = NetDesSimulator::new(&net, DesConfig::default()).run(&streams);
+        assert!(rd.events > 0);
+        for (a, b) in rf.per_stream_gbs.iter().zip(&rd.per_stream_gbs) {
+            let rel = (a - b).abs() / a;
+            assert!(rel < 0.12, "fluid {a} vs DES {b}");
+        }
+    }
+
+    #[test]
+    fn idle_and_all_remote_streams_are_handled() {
+        let (m, topo) = two_socket_rome();
+        let net = IfaceNet::of_topology(&topo);
+        let idle = NetStream { workload: CoreWorkload::idle(), home: 0, remote_frac: 0.0 };
+        let all_remote = stream(KernelId::Ddot2, &m, 0, 1.0);
+        let r = NetFluidSimulator::new(&net, FluidConfig::default()).run(&[idle, all_remote]);
+        assert_eq!(r.per_stream_gbs[0], 0.0, "idle streams drain nothing");
+        assert!(r.per_stream_gbs[1] > 0.0, "r = 1 still drains through remote portions");
+        // r = 1 has no home portion.
+        assert!(r.portions.iter().all(|p| p.stream != 1 || p.target != 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "remote fraction")]
+    fn routing_rejects_bad_fractions() {
+        let (m, topo) = two_socket_rome();
+        let net = IfaceNet::of_topology(&topo);
+        route_streams(&net, &[stream(KernelId::Dcopy, &m, 0, 1.5)]);
+    }
+}

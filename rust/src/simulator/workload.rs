@@ -42,11 +42,11 @@ impl CoreWorkload {
     }
 
     /// The same stream thinned to a fraction `scale` of its line rate,
-    /// re-tagged as `group`. Used by the remote-access measurement: a core
-    /// that sends only part of its lines to an interface looks, to that
-    /// interface, like a core of proportionally lower demand (and several
-    /// remote cores' portions can be pooled into one synthetic workload by
-    /// passing `scale > 1`).
+    /// re-tagged as `group`: a core that sends only part of its lines to
+    /// an interface looks, to that interface, like a core of
+    /// proportionally lower demand. The multi-interface engines
+    /// (`simulator::network`) thin per routed portion internally; this
+    /// helper remains for ad-hoc workload construction.
     pub fn thinned(&self, scale: f64, group: usize) -> Self {
         CoreWorkload {
             demand_lines_per_cy: self.demand_lines_per_cy * scale,

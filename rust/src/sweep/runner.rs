@@ -92,7 +92,7 @@ mod tests {
         let rs = run_cases(&m, &[case], &MeasureEngine::Fluid).unwrap();
         let get = |k| {
             CharCache::global()
-                .lookup(&(m.id, k, EngineKind::Fluid))
+                .lookup(&(m.fingerprint(), k, EngineKind::Fluid))
                 .expect("characterized by run_cases")
         };
         let c1 = get(KernelId::Dcopy);

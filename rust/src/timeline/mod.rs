@@ -21,7 +21,11 @@
 //!
 //! [`crate::desync::CoSimEngine`] is the user-facing driver over this
 //! layer; the legacy stepper survives behind the `legacy-stepper` feature
-//! (and in unit tests) as the golden reference.
+//! (and in unit tests) as the golden reference. The timeline drains ranks
+//! at *model* rates (Eqs. 4+5 / the coupled remote model); the
+//! measurement-side analogue — simulating the same interface network with
+//! fluid or DES physics — lives in `simulator::network` and is documented
+//! next to it in `docs/SIMULATORS.md`.
 //!
 //! # Examples
 //!

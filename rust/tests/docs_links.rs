@@ -1,0 +1,81 @@
+//! Documentation link check: every *relative* markdown link in README.md
+//! and docs/*.md must resolve to an existing file or directory. Dangling
+//! links are exactly the kind of rot a docs-heavy PR introduces; CI runs
+//! this test as its link-check step.
+
+use std::path::{Path, PathBuf};
+
+/// Extract `](target)` link targets from one markdown file.
+fn link_targets(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let bytes = text.as_bytes();
+    let mut i = 0;
+    while i + 1 < bytes.len() {
+        if bytes[i] == b']' && bytes[i + 1] == b'(' {
+            if let Some(end) = text[i + 2..].find(')') {
+                out.push(text[i + 2..i + 2 + end].to_string());
+                i += 2 + end;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Whether a link target is a relative filesystem path we should resolve
+/// (not a URL, not an intra-page anchor, not an autolink).
+fn is_relative(target: &str) -> bool {
+    !(target.is_empty()
+        || target.starts_with('#')
+        || target.contains("://")
+        || target.starts_with("mailto:")
+        || target.starts_with('<'))
+}
+
+#[test]
+fn no_dangling_relative_links_in_docs() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut files: Vec<PathBuf> = vec![root.join("README.md")];
+    let docs = root.join("docs");
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(&docs)
+        .expect("docs/ exists")
+        .map(|e| e.expect("readable docs entry").path())
+        .filter(|p| p.extension().is_some_and(|e| e == "md"))
+        .collect();
+    entries.sort();
+    assert!(!entries.is_empty(), "docs/*.md must exist");
+    files.extend(entries);
+
+    let mut dangling: Vec<String> = Vec::new();
+    let mut checked = 0usize;
+    for file in &files {
+        let text = std::fs::read_to_string(file).expect("readable markdown");
+        let dir = file.parent().unwrap_or(Path::new("."));
+        for raw in link_targets(&text) {
+            let target = raw.split(&[' ', '#'][..]).next().unwrap_or("").trim();
+            if !is_relative(target) {
+                continue;
+            }
+            checked += 1;
+            let resolved = dir.join(target);
+            if !resolved.exists() {
+                dangling.push(format!("{}: ({})", file.display(), raw));
+            }
+        }
+    }
+    assert!(checked > 0, "expected at least one relative link across the docs");
+    assert!(dangling.is_empty(), "dangling relative links:\n{}", dangling.join("\n"));
+}
+
+#[test]
+fn link_extractor_handles_edge_cases() {
+    let md = "see [a](docs/MODEL.md), [b](https://x.y/z), [c](#anchor), \
+              and [d](missing.md#frag).";
+    let targets = link_targets(md);
+    assert_eq!(targets, vec!["docs/MODEL.md", "https://x.y/z", "#anchor", "missing.md#frag"]);
+    assert!(is_relative("docs/MODEL.md"));
+    assert!(!is_relative("https://x.y/z"));
+    assert!(!is_relative("#anchor"));
+    assert!(is_relative("missing.md#frag"));
+}

@@ -159,7 +159,7 @@ fn solo_mix_reduces_to_single_thread_bandwidth() {
     let mix = Mix::new().with(KernelId::Stream, 1);
     let rs = run_mixes(&m, std::slice::from_ref(&mix), &MeasureEngine::Fluid).unwrap();
     let c = CharCache::global()
-        .lookup(&(m.id, KernelId::Stream, EngineKind::Fluid))
+        .lookup(&(m.fingerprint(), KernelId::Stream, EngineKind::Fluid))
         .expect("characterized by run_mixes");
     let measured = rs.cases[0].groups[0].measured_per_core;
     assert!(

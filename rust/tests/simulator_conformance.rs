@@ -1,0 +1,394 @@
+//! Simulator conformance suite for the multi-interface substrate.
+//!
+//! The fluid and DES engines were generalized from one capacity-`C`
+//! memory interface to a network of interfaces (per-domain memory
+//! controllers + inter-socket links); the single-interface engines are now
+//! the degenerate one-portion case of `simulator::network`. This suite
+//! pins the generalization:
+//!
+//! 1. **Seed equivalence** — the delegating single-interface engines are
+//!    bit-identical to *verbatim copies of the seed loops* kept below
+//!    (the same retained-reference pattern as `desync::legacy`);
+//! 2. **r = 0 degeneracy** — a multi-domain run with no remote traffic is
+//!    bit-identical to independent per-domain single-interface runs, for
+//!    both engines (including scaled domains);
+//! 3. **Link-gated fidelity** — the homogeneous two-socket link-saturated
+//!    scenario stays within the paper's 8% ceiling against the analytic
+//!    `share_remote` water-fill, end to end through the scenario runner,
+//!    and reported link traffic is *simulated* (never exceeds capacity).
+//!
+//! The numerics are mirrored operation-for-operation in
+//! `python/netfluid_mirror.py` (run it directly for the same checks).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use membw::config::{machine, Machine, MachineId};
+use membw::kernels::{kernel, KernelId};
+use membw::scenario::{run_mixes_on, MeasureEngine, Mix};
+use membw::simulator::{
+    CoreWorkload, DesConfig, DesSimulator, FluidConfig, FluidSimulator, XorShift64,
+};
+use membw::topology::{Placement, Topology};
+
+fn wl(k: KernelId, m: &Machine) -> CoreWorkload {
+    CoreWorkload::from_kernel(&kernel(k), m, 0)
+}
+
+/// Verbatim copy of the seed single-interface fluid loop (pre-network
+/// `FluidSimulator::run`), kept as the bit-level reference.
+fn seed_fluid(m: &Machine, workloads: &[CoreWorkload], cfg: &FluidConfig) -> (Vec<f64>, f64) {
+    let n = workloads.len();
+    let cap = m.capacity_lines_per_cy();
+    let q = &m.queue;
+    let d: Vec<f64> = workloads.iter().map(|w| w.demand_lines_per_cy).collect();
+    let c: Vec<f64> = workloads.iter().map(|w| w.cost_factor).collect();
+    let win: Vec<f64> = workloads
+        .iter()
+        .map(|w| {
+            q.depth_floor + q.depth_beta * w.demand_lines_per_cy * w.cost_factor * q.base_latency_cy
+        })
+        .collect();
+
+    let mut occ = vec![0.0f64; n];
+    let mut served = vec![0.0f64; n];
+    let mut u_accum = 0.0f64;
+    let total_cycles = cfg.warmup_cycles + cfg.measure_cycles;
+    let mut occ_cost = 0.0f64;
+    for cycle in 0..=total_cycles {
+        let measuring = cycle > cfg.warmup_cycles;
+        let lambda = if occ_cost > 1e-12 { (cap / occ_cost).min(1.0) } else { 1.0 };
+        if measuring {
+            u_accum += (occ_cost / cap).min(1.0);
+        }
+        let keep = 1.0 - lambda;
+        occ_cost = 0.0;
+        for i in 0..n {
+            let o_pre = occ[i];
+            if measuring {
+                served[i] += lambda * o_pre;
+            }
+            let mut o = o_pre * keep;
+            let di = d[i];
+            if di > 0.0 {
+                o += di.min((win[i] - o).max(0.0));
+            }
+            occ[i] = o;
+            occ_cost += o * c[i];
+        }
+    }
+    let cycles = cfg.measure_cycles as f64;
+    let per_core: Vec<f64> = served.iter().map(|s| m.lines_per_cy_to_gbs(s / cycles)).collect();
+    (per_core, u_accum / cycles)
+}
+
+/// Verbatim copy of the seed single-interface DES loop (pre-network
+/// `DesSimulator::run`), kept as the bit-level reference.
+fn seed_des(m: &Machine, workloads: &[CoreWorkload], cfg: &DesConfig) -> (Vec<f64>, f64, u64) {
+    #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+    struct TimeKey(u64);
+    impl TimeKey {
+        fn of(t: f64) -> Self {
+            TimeKey(t.to_bits())
+        }
+        fn time(&self) -> f64 {
+            f64::from_bits(self.0)
+        }
+    }
+    struct CoreState {
+        gap_cy: f64,
+        window: usize,
+        cost_cy: f64,
+        queued: usize,
+        outstanding: usize,
+        blocked: bool,
+        served: u64,
+    }
+    let cap = m.capacity_lines_per_cy();
+    let q = &m.queue;
+    let mut rng = XorShift64::new(cfg.seed);
+    let mut cores: Vec<CoreState> = workloads
+        .iter()
+        .map(|w| {
+            let window = (q.depth_floor
+                + q.depth_beta * w.demand_lines_per_cy * w.cost_factor * q.base_latency_cy)
+                .round()
+                .max(1.0) as usize;
+            CoreState {
+                gap_cy: if w.is_active() { 1.0 / w.demand_lines_per_cy } else { f64::INFINITY },
+                window,
+                cost_cy: w.cost_factor / cap,
+                queued: 0,
+                outstanding: 0,
+                blocked: false,
+                served: 0,
+            }
+        })
+        .collect();
+    let mut heap: BinaryHeap<Reverse<(TimeKey, usize, u8)>> = BinaryHeap::new();
+    for (i, c) in cores.iter().enumerate() {
+        if c.gap_cy.is_finite() {
+            heap.push(Reverse((TimeKey::of(rng.next_f64() * c.gap_cy), i, 0u8)));
+        }
+    }
+    let t_end = cfg.warmup_cycles + cfg.measure_cycles;
+    let mut server_busy = false;
+    let mut busy_accum = 0.0f64;
+    let mut events: u64 = 0;
+    fn try_serve(
+        t: f64,
+        cores: &mut [CoreState],
+        server_busy: &mut bool,
+        rng: &mut XorShift64,
+        heap: &mut BinaryHeap<Reverse<(TimeKey, usize, u8)>>,
+    ) {
+        if *server_busy {
+            return;
+        }
+        let total: usize = cores.iter().map(|c| c.queued).sum();
+        if total == 0 {
+            return;
+        }
+        let mut x = (rng.next_f64() * total as f64) as usize;
+        let mut pick = 0;
+        for (i, c) in cores.iter().enumerate() {
+            if x < c.queued {
+                pick = i;
+                break;
+            }
+            x -= c.queued;
+        }
+        cores[pick].queued -= 1;
+        *server_busy = true;
+        let done = t + cores[pick].cost_cy;
+        heap.push(Reverse((TimeKey::of(done), pick, 1u8)));
+    }
+    while let Some(Reverse((key, core, kind))) = heap.pop() {
+        let t = key.time();
+        if t >= t_end {
+            break;
+        }
+        events += 1;
+        match kind {
+            0 => {
+                let c = &mut cores[core];
+                if c.outstanding < c.window {
+                    c.queued += 1;
+                    c.outstanding += 1;
+                    c.blocked = false;
+                    let jitter = 0.95 + 0.1 * rng.next_f64();
+                    heap.push(Reverse((TimeKey::of(t + c.gap_cy * jitter), core, 0u8)));
+                    try_serve(t, &mut cores, &mut server_busy, &mut rng, &mut heap);
+                } else {
+                    c.blocked = true;
+                }
+            }
+            _ => {
+                let in_measure = t >= cfg.warmup_cycles;
+                {
+                    let c = &mut cores[core];
+                    c.outstanding -= 1;
+                    if in_measure {
+                        c.served += 1;
+                    }
+                }
+                if in_measure {
+                    busy_accum += cores[core].cost_cy;
+                }
+                server_busy = false;
+                if cores[core].blocked {
+                    cores[core].blocked = false;
+                    heap.push(Reverse((TimeKey::of(t), core, 0u8)));
+                }
+                try_serve(t, &mut cores, &mut server_busy, &mut rng, &mut heap);
+            }
+        }
+    }
+    let cycles = cfg.measure_cycles;
+    let per_core: Vec<f64> =
+        cores.iter().map(|c| m.lines_per_cy_to_gbs(c.served as f64 / cycles)).collect();
+    ((per_core), (busy_accum / cycles).min(1.0), events)
+}
+
+/// The conformance workloads: mixed kernels, an idle core, on two machine
+/// classes (Intel inclusive-LLC and Rome victim-LLC).
+fn mixes(m: &Machine, mid: MachineId) -> Vec<Vec<CoreWorkload>> {
+    let half = m.cores / 2;
+    vec![
+        vec![wl(KernelId::Stream, m); m.cores],
+        {
+            let mut ws = vec![wl(KernelId::Dcopy, m); half];
+            ws.extend(vec![wl(KernelId::Ddot2, m); m.cores - half - 1]);
+            ws.push(CoreWorkload::idle());
+            ws
+        },
+        vec![wl(
+            if mid == MachineId::Rome { KernelId::Daxpy } else { KernelId::VecSum },
+            m,
+        )],
+    ]
+}
+
+/// Pin 1a: the delegating fluid engine reproduces the seed fused loop bit
+/// for bit (per-core bandwidths, total, utilization).
+#[test]
+fn fluid_engine_is_bit_identical_to_seed_loop() {
+    for mid in MachineId::ALL {
+        let m = machine(mid);
+        for ws in mixes(&m, mid) {
+            let cfg = FluidConfig::default();
+            let (want_pc, want_u) = seed_fluid(&m, &ws, &cfg);
+            let got = FluidSimulator::new(&m, cfg).run(&ws);
+            assert_eq!(got.per_core_gbs.len(), want_pc.len());
+            for (a, b) in got.per_core_gbs.iter().zip(&want_pc) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{mid:?}: fluid per-core diverged");
+            }
+            assert_eq!(got.utilization.to_bits(), want_u.to_bits(), "{mid:?}: utilization");
+            let want_total: f64 = want_pc.iter().sum();
+            assert_eq!(got.total_gbs.to_bits(), want_total.to_bits(), "{mid:?}: total");
+        }
+    }
+}
+
+/// Pin 1b: the delegating DES engine reproduces the seed event loop bit
+/// for bit — same xorshift draw sequence, same heap tie-breaking, same
+/// event count.
+#[test]
+fn des_engine_is_bit_identical_to_seed_loop() {
+    for mid in [MachineId::Bdw1, MachineId::Rome] {
+        let m = machine(mid);
+        for ws in mixes(&m, mid) {
+            let cfg = DesConfig { measure_cycles: 120_000.0, ..Default::default() };
+            let (want_pc, want_u, want_events) = seed_des(&m, &ws, &cfg);
+            let got = DesSimulator::new(&m, cfg).run(&ws);
+            for (a, b) in got.per_core_gbs.iter().zip(&want_pc) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{mid:?}: DES per-core diverged");
+            }
+            assert_eq!(got.utilization.to_bits(), want_u.to_bits(), "{mid:?}: utilization");
+            assert_eq!(got.events, want_events, "{mid:?}: event count");
+        }
+    }
+}
+
+/// Pin 2a: r = 0 on a multi-domain network decomposes into the per-domain
+/// single-interface fluid runs, bit for bit — including a scaled domain.
+#[test]
+fn net_fluid_r0_matches_per_domain_runs_bitwise() {
+    use membw::simulator::{IfaceNet, NetFluidSimulator, NetStream};
+    let m = machine(MachineId::Rome);
+    let topo = Topology::build(&m, 1, 2, &[1.0, 0.5]).unwrap();
+    let net = IfaceNet::of_topology(&topo);
+    // Domain 0: 4x dcopy + 2x ddot2 (+1 idle); domain 1 (scaled): 3x ddot2.
+    let d0m = &topo.domains[0].machine;
+    let d1m = &topo.domains[1].machine;
+    let mut streams: Vec<NetStream> = Vec::new();
+    let mut w0 = vec![wl(KernelId::Dcopy, d0m); 4];
+    w0.extend(vec![wl(KernelId::Ddot2, d0m); 2]);
+    w0.push(CoreWorkload::idle());
+    for &w in &w0 {
+        streams.push(NetStream { workload: w, home: 0, remote_frac: 0.0 });
+    }
+    let w1 = vec![wl(KernelId::Ddot2, d1m); 3];
+    for &w in &w1 {
+        streams.push(NetStream { workload: w, home: 1, remote_frac: 0.0 });
+    }
+    let r = NetFluidSimulator::new(&net, FluidConfig::default()).run(&streams);
+    let solo0 = FluidSimulator::new(d0m, FluidConfig::default()).run(&w0);
+    let solo1 = FluidSimulator::new(d1m, FluidConfig::default()).run(&w1);
+    let want: Vec<f64> =
+        solo0.per_core_gbs.iter().chain(&solo1.per_core_gbs).copied().collect();
+    assert_eq!(r.per_stream_gbs.len(), want.len());
+    for (a, b) in r.per_stream_gbs.iter().zip(&want) {
+        assert_eq!(a.to_bits(), b.to_bits(), "net fluid r=0 diverged from per-domain runs");
+    }
+    assert_eq!(r.mem_utilization[0].to_bits(), solo0.utilization.to_bits());
+    assert_eq!(r.mem_utilization[1].to_bits(), solo1.utilization.to_bits());
+}
+
+/// Pin 2b: the same for the DES — components replay the per-domain seed
+/// runs with their own RNG streams.
+#[test]
+fn net_des_r0_matches_per_domain_runs_bitwise() {
+    use membw::simulator::{IfaceNet, NetDesSimulator, NetStream};
+    let m = machine(MachineId::Rome);
+    let topo = Topology::parse(&m, "2").unwrap();
+    let net = IfaceNet::of_topology(&topo);
+    let cfg = DesConfig { measure_cycles: 120_000.0, ..Default::default() };
+    let w0 = vec![wl(KernelId::Dcopy, &m); 3];
+    let w1 = vec![wl(KernelId::Ddot2, &m); 4];
+    let mut streams: Vec<NetStream> = Vec::new();
+    for &w in &w0 {
+        streams.push(NetStream { workload: w, home: 0, remote_frac: 0.0 });
+    }
+    for &w in &w1 {
+        streams.push(NetStream { workload: w, home: 1, remote_frac: 0.0 });
+    }
+    let r = NetDesSimulator::new(&net, cfg.clone()).run(&streams);
+    let solo0 = DesSimulator::new(&m, cfg.clone()).run(&w0);
+    let solo1 = DesSimulator::new(&m, cfg).run(&w1);
+    let want: Vec<f64> =
+        solo0.per_core_gbs.iter().chain(&solo1.per_core_gbs).copied().collect();
+    for (a, b) in r.per_stream_gbs.iter().zip(&want) {
+        assert_eq!(a.to_bits(), b.to_bits(), "net DES r=0 diverged from per-domain runs");
+    }
+    assert_eq!(r.events, solo0.events + solo1.events);
+}
+
+/// Pin 3: the link-gated homogeneous scenario end to end through the
+/// runner — 64 dcopy cores at r = 0.5 on dual-socket NPS4 Rome saturate
+/// the xGMI link; measured (simulated) and modeled socket shares agree
+/// within the paper's 8% ceiling, and the reported link traffic is
+/// simulated (it can never exceed the link capacity — offered demand is
+/// ~4x over it).
+#[test]
+fn link_gated_scenario_within_model_ceiling_end_to_end() {
+    let m = machine(MachineId::Rome);
+    let topo = Topology::parse(&m, "2x4").unwrap();
+    let mix = Mix::parse("dcopy:64@scatter%r0.5").unwrap();
+    let rs = run_mixes_on(&topo, Placement::Compact, &[mix], &MeasureEngine::Fluid).unwrap();
+    let case = &rs.cases[0];
+    for g in &case.socket {
+        assert!(
+            g.error() < 0.08,
+            "link-gated socket share: model {} vs simulated {} ({}%)",
+            g.model_per_core,
+            g.measured_per_core,
+            g.error() * 100.0
+        );
+    }
+    assert_eq!(case.links.len(), 1);
+    let link = &case.links[0];
+    assert!(link.saturated, "the xGMI link must saturate");
+    assert!(
+        link.measured_total_gbs <= link.link_bw_gbs * 1.001,
+        "simulated link traffic {} exceeds capacity {} — this would be offered demand",
+        link.measured_total_gbs,
+        link.link_bw_gbs
+    );
+    assert!(
+        link.measured_total_gbs > 0.9 * link.link_bw_gbs,
+        "a saturated link must run near capacity (got {})",
+        link.measured_total_gbs
+    );
+    // The model link grant respects the same capacity.
+    assert!(link.model_total_gbs <= link.link_bw_gbs * (1.0 + 1e-9));
+}
+
+/// DES cross-check of the link-gated case at a loose band (stochastic
+/// arbitration + tandem-queue discretization): per-core within 10% of the
+/// fluid engine, link capped.
+#[test]
+fn link_gated_des_agrees_with_fluid() {
+    let m = machine(MachineId::Rome);
+    let topo = Topology::parse(&m, "2x4").unwrap();
+    let mix = Mix::parse("dcopy:16@scatter%r0.5").unwrap();
+    let fluid =
+        run_mixes_on(&topo, Placement::Compact, &[mix.clone()], &MeasureEngine::Fluid).unwrap();
+    let des = run_mixes_on(&topo, Placement::Compact, &[mix], &MeasureEngine::Des).unwrap();
+    let (gf, gd) = (&fluid.cases[0].socket[0], &des.cases[0].socket[0]);
+    let rel = (gf.measured_per_core - gd.measured_per_core).abs() / gf.measured_per_core;
+    assert!(rel < 0.10, "fluid {} vs DES {}", gf.measured_per_core, gd.measured_per_core);
+    for l in &des.cases[0].links {
+        assert!(l.measured_total_gbs <= l.link_bw_gbs * 1.001);
+    }
+}
