@@ -16,9 +16,16 @@ It executes the mirror's own conformance checks:
 2. the generalized multi-interface DES, run with r = 0 on a multi-domain
    network, decomposes into components that replay the seed DES of
    `rust/src/simulator/des.rs` per domain, bit for bit;
-3. the worked 2xNPS4 Rome link-gated example of `docs/SIMULATORS.md`:
-   multi-interface fluid vs the analytic `share_remote` water-fill within
-   the paper's 8% ceiling (and the link never exceeds its capacity).
+3. the stranded-capacity fix: `share_remote` is a global fixed point
+   (gated groups release the grants their slowest portion cannot use),
+   links are DIRECTED full-duplex interfaces, and both simulators issue
+   lockstep streams (one shared window per stream); the historical
+   single-pass/half-duplex numbers are pinned for the degenerate cases
+   (no gating, r = 0, single interface, one-direction duplex traffic);
+4. the worked 2xNPS4 Rome example and the gated-regime example of
+   `docs/SIMULATORS.md`: multi-interface fluid vs the analytic fixed
+   point within the paper's 8% ceiling (the old single pass is >8% off
+   in the gated regime, and no link ever exceeds its capacity).
 
 Keep this file in sync with the Rust — it is the reference the docs'
 numbers are cross-checked against (see docs/SIMULATORS.md).
@@ -228,14 +235,21 @@ def des_seed(m, workloads, warmup=40000.0, measure=400000.0, seed=0xB4D5EED):
 # --------------------------------------------------------------------------
 
 class Net:
-    """mem_caps: lines/cy per domain; links: socket pairs; link_cap lines/cy."""
+    """mem_caps: lines/cy per domain; links: DIRECTED socket pairs (a, b)
+    with per-direction capacities link_caps (lines/cy) / link_caps_gbs."""
 
-    def __init__(self, mem_caps, socket_of, links, link_cap, m):
+    def __init__(self, mem_caps, socket_of, links, link_caps_gbs, m):
         self.mem_caps = mem_caps
         self.socket_of = socket_of
         self.links = links
-        self.link_cap = link_cap
+        self.link_caps_gbs = link_caps_gbs
+        self.link_caps = [g / m["freq"] / CACHE_LINE for g in link_caps_gbs]
         self.m = m
+
+
+def directed_links(sockets):
+    """All ordered socket pairs (a, b), a != b, lexicographic."""
+    return [(a, b) for a in range(sockets) for b in range(sockets) if a != b]
 
 
 def net_of(m, sockets, domains_per_socket, bw_scale=None):
@@ -243,14 +257,17 @@ def net_of(m, sockets, domains_per_socket, bw_scale=None):
     scale = bw_scale or [1.0] * nd
     mem_caps = [capacity_lines_per_cy(m) * s for s in scale]
     socket_of = [d // domains_per_socket for d in range(nd)]
-    links = [(a, b) for a in range(sockets) for b in range(a + 1, sockets)]
-    link_cap = m["link_bw"] / m["freq"] / CACHE_LINE if m["link_bw"] > 0 else 0.0
-    return Net(mem_caps, socket_of, links, link_cap, m)
+    links = directed_links(sockets) if m["link_bw"] > 0 else []
+    fwd = m["link_bw"]
+    rev = m.get("link_bw_rev", fwd) or fwd
+    link_caps_gbs = [fwd if a < b else rev for a, b in links]
+    return Net(mem_caps, socket_of, links, link_caps_gbs, m)
 
 
 def route(net, streams):
     """streams: list of (d, c, home, r). Returns portions
-    (stream, target, link_or_None, weight)."""
+    (stream, target, link_or_None, weight). A cross-socket portion rides
+    the directed link (socket_of[home] -> socket_of[target])."""
     nd = len(net.mem_caps)
     portions = []
     for si, (d, c, home, r) in enumerate(streams):
@@ -263,25 +280,33 @@ def route(net, streams):
                 if t == home:
                     continue
                 link = None
-                if net.socket_of[t] != net.socket_of[home] and net.link_cap > 0.0:
-                    pair = (min(net.socket_of[home], net.socket_of[t]),
-                            max(net.socket_of[home], net.socket_of[t]))
-                    link = net.links.index(pair)
+                if net.socket_of[t] != net.socket_of[home] and net.links:
+                    link = net.links.index((net.socket_of[home], net.socket_of[t]))
                 portions.append((si, t, link, w))
     return portions
 
 
 def fluid_net(net, streams, warmup=4096, measure=12288):
-    """Generalized fluid loop. Returns (per-portion lines/cy, portions,
-    per-interface utilization [mem..., links...])."""
+    """Generalized fluid loop with lockstep streams: each stream owns ONE
+    issue window shared by all its portions, and issued occupancy is split
+    across portions in proportion to their routing weights — a lagging
+    portion (e.g. a link-gated remote slice) clogs the shared window and
+    throttles the whole stream, which is what the analytic lockstep rule
+    `min_p grant_p / w_p` assumes. With r = 0 every stream has exactly one
+    portion and the loop is bit-identical to the seed fused loop.
+
+    Returns (per-portion lines/cy, portions, per-interface utilization
+    [mem..., links...])."""
     m = net.m
     nd = len(net.mem_caps)
     nl = len(net.links)
+    ns = len(streams)
     portions = route(net, streams)
     np_ = len(portions)
-    dp = [streams[p[0]][0] * p[3] for p in portions]
-    cp = [streams[p[0]][1] for p in portions]
-    win = [m["D0"] + m["beta"] * dp[i] * cp[i] * m["L0"] for i in range(np_)]
+    by_stream = [[i for i in range(np_) if portions[i][0] == s] for s in range(ns)]
+    ds = [streams[s][0] for s in range(ns)]
+    cs = [streams[s][1] for s in range(ns)]
+    win = [m["D0"] + m["beta"] * ds[s] * cs[s] * m["L0"] for s in range(ns)]
     occ = [0.0] * np_
     served = [0.0] * np_
     occ_mem = [0.0] * nd
@@ -292,43 +317,58 @@ def fluid_net(net, streams, warmup=4096, measure=12288):
         measuring = cycle > warmup
         lam_mem = [min(net.mem_caps[d] / occ_mem[d], 1.0) if occ_mem[d] > 1e-12 else 1.0
                    for d in range(nd)]
-        lam_link = [min(net.link_cap / occ_link[l], 1.0) if occ_link[l] > 1e-12 else 1.0
+        lam_link = [min(net.link_caps[l] / occ_link[l], 1.0) if occ_link[l] > 1e-12 else 1.0
                     for l in range(nl)]
         if measuring:
             for d in range(nd):
                 u_mem[d] += min(occ_mem[d] / net.mem_caps[d], 1.0)
             for l in range(nl):
-                u_link[l] += min(occ_link[l] / net.link_cap, 1.0)
+                u_link[l] += min(occ_link[l] / net.link_caps[l], 1.0)
         occ_mem = [0.0] * nd
         occ_link = [0.0] * nl
+        # Drain every portion at its interface rate.
         for i in range(np_):
             _, tgt, link, _ = portions[i]
             lam = lam_mem[tgt] if link is None else min(lam_mem[tgt], lam_link[link])
             o_pre = occ[i]
             if measuring:
                 served[i] += lam * o_pre
-            o = o_pre * (1.0 - lam)
-            if dp[i] > 0.0:
-                o += min(dp[i], max(win[i] - o, 0.0))
-            occ[i] = o
-            occ_mem[tgt] += o * cp[i]
+            occ[i] = o_pre * (1.0 - lam)
+        # Issue per stream through the shared window, split by weight.
+        for s in range(ns):
+            if ds[s] > 0.0:
+                occ_s = sum(occ[i] for i in by_stream[s])
+                inflow = min(ds[s], max(win[s] - occ_s, 0.0))
+                for i in by_stream[s]:
+                    occ[i] += inflow * portions[i][3]
+        for i in range(np_):
+            _, tgt, link, _ = portions[i]
+            occ_mem[tgt] += occ[i] * cs[portions[i][0]]
             if link is not None:
-                occ_link[link] += o
+                occ_link[link] += occ[i]
     util = [u / measure for u in u_mem] + [u / measure for u in u_link]
     return [s / measure for s in served], portions, util
 
 
 def des_net(net, streams, warmup=40000.0, measure=400000.0, seed=0xB4D5EED):
-    """Generalized DES: connected components of the interface graph, each
-    replayed with its own xorshift stream. Links are a first service stage
-    (cost 1/C_link per line), the target memory interface the second.
+    """Generalized DES with lockstep streams: one issue process and one
+    outstanding-line window per STREAM (portion picked per line with
+    probability = routing weight), links a first service stage (cost
+    1/C_link per line), the target memory interface the second. A stream's
+    interfaces are all coupled through its shared window, so connected
+    components are built over both link crossings and stream membership.
+    With r = 0 every stream has one portion, no portion-pick draw is made,
+    and each domain replays the seed DES bit for bit.
+
     Returns (per-portion lines/cy, portions)."""
     m = net.m
     nd = len(net.mem_caps)
+    ns = len(streams)
     portions = route(net, streams)
     np_ = len(portions)
 
-    # Union-find over interfaces (mem d -> d, link l -> nd + l).
+    # Union-find over interfaces (mem d -> d, link l -> nd + l); a stream
+    # couples every interface its portions touch.
     parent = list(range(nd + len(net.links)))
 
     def find(x):
@@ -337,37 +377,53 @@ def des_net(net, streams, warmup=40000.0, measure=400000.0, seed=0xB4D5EED):
             x = parent[x]
         return x
 
+    def union(a, b):
+        ra, rb = find(a), find(b)
+        if ra != rb:
+            parent[max(ra, rb)] = min(ra, rb)
+
     for _, tgt, link, _ in portions:
         if link is not None:
-            ra, rb = find(tgt), find(nd + link)
-            if ra != rb:
-                parent[max(ra, rb)] = min(ra, rb)
+            union(tgt, nd + link)
+    for s in range(ns):
+        targets = [portions[i][1] for i in range(np_) if portions[i][0] == s]
+        for t in targets[1:]:
+            union(targets[0], t)
 
     comp_of_iface = [find(x) for x in range(nd + len(net.links))]
     comps = sorted(set(comp_of_iface[portions[i][1]] for i in range(np_)))
     served = [0] * np_
     for comp in comps:
+        # Local streams (issuers) and local portions (service customers).
+        sl = [s for s in range(ns)
+              if any(p[0] == s and comp_of_iface[p[1]] == comp for p in portions)]
         local = [i for i in range(np_) if comp_of_iface[portions[i][1]] == comp]
         rng = XorShift64(seed)
         k = len(local)
-        gap, window, mcost, lcost = [], [], [], []
-        q_mem, q_link = [0] * k, [0] * k
-        outstanding, blocked = [0] * k, [False] * k
-        for i in local:
-            _, tgt, link, _ = portions[i]
-            d, c = (streams[portions[i][0]][0] * portions[i][3],
-                    streams[portions[i][0]][1])
+        ks = len(sl)
+        pof = [[j for j in range(k) if portions[local[j]][0] == s] for s in sl]
+        gap, window = [], []
+        outstanding, blocked = [0] * ks, [False] * ks
+        for s in sl:
+            d, c = streams[s][0], streams[s][1]
             gap.append(1.0 / d if d > 0.0 else math.inf)
             w = m["D0"] + m["beta"] * d * c * m["L0"]
             window.append(max(int(math.floor(w + 0.5)), 1))
+        mcost, lcost = [], []
+        q_mem, q_link = [0] * k, [0] * k
+        stream_of = []
+        for i in local:
+            _, tgt, link, _ = portions[i]
+            c = streams[portions[i][0]][1]
             mcost.append(c / net.mem_caps[tgt])
-            lcost.append(1.0 / net.link_cap if link is not None else 0.0)
+            lcost.append(1.0 / net.link_caps[link] if link is not None else 0.0)
+            stream_of.append(sl.index(portions[i][0]))
         mem_busy = {}
         link_busy = {}
         heap = []
-        for j in range(k):
-            if math.isfinite(gap[j]):
-                heapq.heappush(heap, (rng.next_f64() * gap[j], j, 0))
+        for sj in range(ks):
+            if math.isfinite(gap[sj]):
+                heapq.heappush(heap, (rng.next_f64() * gap[sj], sj, 0))
         t_end = warmup + measure
 
         def try_serve_mem(t, d):
@@ -410,34 +466,52 @@ def des_net(net, streams, warmup=40000.0, measure=400000.0, seed=0xB4D5EED):
             t, j, kind = heapq.heappop(heap)
             if t >= t_end:
                 break
-            _, tgt, link, _ = portions[local[j]]
             if kind == 0:
+                # j is a local stream index.
                 if outstanding[j] < window[j]:
                     outstanding[j] += 1
                     blocked[j] = False
                     jitter = 0.95 + 0.1 * rng.next_f64()
                     heapq.heappush(heap, (t + gap[j] * jitter, j, 0))
+                    mine = pof[j]
+                    if len(mine) == 1:
+                        p = mine[0]
+                    else:
+                        x = rng.next_f64()
+                        p = mine[-1]
+                        for cand in mine:
+                            w = portions[local[cand]][3]
+                            if x < w:
+                                p = cand
+                                break
+                            x -= w
+                    link = portions[local[p]][2]
                     if link is not None:
-                        q_link[j] += 1
+                        q_link[p] += 1
                         try_serve_link(t, link)
                     else:
-                        q_mem[j] += 1
-                        try_serve_mem(t, tgt)
+                        q_mem[p] += 1
+                        try_serve_mem(t, portions[local[p]][1])
                 else:
                     blocked[j] = True
             elif kind == 2:
+                # j is a local portion index leaving its link stage.
+                _, tgt, link, _ = portions[local[j]]
                 q_mem[j] += 1
                 link_busy[link] = False
                 try_serve_mem(t, tgt)
                 try_serve_link(t, link)
             else:
-                outstanding[j] -= 1
+                # j is a local portion index whose line finished at memory.
+                _, tgt, link, _ = portions[local[j]]
+                sj = stream_of[j]
+                outstanding[sj] -= 1
                 if t >= warmup:
                     served[local[j]] += 1
                 mem_busy[tgt] = False
-                if blocked[j]:
-                    blocked[j] = False
-                    heapq.heappush(heap, (t, j, 0))
+                if blocked[sj]:
+                    blocked[sj] = False
+                    heapq.heappush(heap, (t, sj, 0))
                 try_serve_mem(t, tgt)
     return [s / measure for s in served], portions
 
@@ -460,8 +534,15 @@ def lockstep_per_stream(net, streams, per_portion, portions):
 
 def share_weighted_capacity(groups, capacity):
     """groups: list of (n, f, bs). Returns per-group bandwidth."""
+    return share_weighted_capped(groups, capacity, [math.inf] * len(groups))
+
+
+def share_weighted_capped(groups, capacity, rate_caps):
+    """share_weighted_capacity with per-group per-core rate caps: the
+    demand of group i is min(n f bs, n rate_caps[i]). With all caps
+    infinite this is bit-identical to the uncapped fill."""
     k = len(groups)
-    demand = [n * f * bs for n, f, bs in groups]
+    demand = [min(n * f * bs, n * rate_caps[i]) for i, (n, f, bs) in enumerate(groups)]
     weight = [n * f for n, f, _ in groups]
     bw = [0.0] * k
     capped = [False] * k
@@ -489,12 +570,11 @@ def share_weighted_capacity(groups, capacity):
     return bw
 
 
-def share_remote(net, groups):
-    """groups: (home, n, f, bs, r). Returns (per_core, portions-with-grants).
-    Mirrors sharing::remote::share_remote (uniform spread + lockstep min)."""
+def _expand_portions(net, groups):
+    """Analytic portion expansion: (group, target, link_or_None, weight),
+    routed through the same directed-link rule as route()."""
     nd = len(net.mem_caps)
-    scale = [net.mem_caps[d] / capacity_lines_per_cy(net.m) for d in range(nd)]
-    portions = []  # (group, target, link, weight)
+    portions = []
     for gi, (home, n, f, bs, r) in enumerate(groups):
         if 1.0 - r > 0.0:
             portions.append((gi, home, None, 1.0 - r))
@@ -504,11 +584,17 @@ def share_remote(net, groups):
                 if t == home:
                     continue
                 link = None
-                if net.socket_of[t] != net.socket_of[home] and net.m["link_bw"] > 0:
-                    pair = (min(net.socket_of[home], net.socket_of[t]),
-                            max(net.socket_of[home], net.socket_of[t]))
-                    link = net.links.index(pair)
+                if net.socket_of[t] != net.socket_of[home] and net.links:
+                    link = net.links.index((net.socket_of[home], net.socket_of[t]))
                 portions.append((gi, t, link, w))
+    return portions
+
+
+def _fill(net, groups, portions, caps):
+    """One global water-fill over every interface with per-group per-core
+    rate caps. Returns (mem_grant, link_grant) per portion."""
+    nd = len(net.mem_caps)
+    scale = [net.mem_caps[d] / capacity_lines_per_cy(net.m) for d in range(nd)]
     mem_grant = [0.0] * len(portions)
     link_grant = [0.0] * len(portions)
     for d in range(nd):
@@ -520,7 +606,8 @@ def share_remote(net, groups):
         if n_tot == 0.0:
             continue
         b_mix = sum(g[0] * g[2] for g in wg) / n_tot
-        for i, bw in zip(idx, share_weighted_capacity(wg, b_mix)):
+        rc = [caps[portions[i][0]] for i in idx]
+        for i, bw in zip(idx, share_weighted_capped(wg, b_mix, rc)):
             mem_grant[i] = bw
     for l in range(len(net.links)):
         idx = [i for i, p in enumerate(portions) if p[2] == l]
@@ -529,18 +616,70 @@ def share_remote(net, groups):
         wg = [(groups[portions[i][0]][1] * portions[i][3],
                groups[portions[i][0]][2],
                groups[portions[i][0]][3] * scale[portions[i][1]]) for i in idx]
-        for i, bw in zip(idx, share_weighted_capacity(wg, net.m["link_bw"])):
+        rc = [caps[portions[i][0]] for i in idx]
+        for i, bw in zip(idx, share_weighted_capped(wg, net.link_caps_gbs[l], rc)):
             link_grant[i] = bw
-    per_core = []
-    for gi, (home, n, f, bs, r) in enumerate(groups):
-        rate = math.inf
-        for i, (g, _, link, w) in enumerate(portions):
-            if g != gi:
-                continue
-            grant = mem_grant[i] if link is None else min(mem_grant[i], link_grant[i])
-            rate = min(rate, grant / (n * w))
-        per_core.append(rate if math.isfinite(rate) else 0.0)
-    return per_core, portions
+    return mem_grant, link_grant
+
+
+def _group_rate(groups, portions, mem_grant, link_grant, gi):
+    """Lockstep rate of one group: min_p grant_p / (n w_p)."""
+    n = groups[gi][1]
+    if n == 0:
+        return 0.0
+    rate = math.inf
+    for i, (g, _, link, w) in enumerate(portions):
+        if g != gi:
+            continue
+        grant = mem_grant[i] if link is None else min(mem_grant[i], link_grant[i])
+        rate = min(rate, grant / (n * w))
+    return rate if math.isfinite(rate) else 0.0
+
+
+def share_remote(net, groups, max_sweeps=64, tol=1e-12):
+    """groups: (home, n, f, bs, r). Returns (per_core, portions, info).
+    Mirrors sharing::remote::share_remote: global fixed-point water-fill.
+
+    Pass 1 is the plain uncapped fill; if no group is gated by a slower
+    portion the result is returned verbatim (iterations == 1, bit-identical
+    to the historical single-pass evaluation). Otherwise Gauss-Seidel
+    sweeps re-evaluate each group uncapped against the others capped at
+    their current rates, so capacity stranded on a gated group's fast
+    portions is redistributed; sweeps stop when no cap moves by more than
+    tol (relative) or after max_sweeps."""
+    k = len(groups)
+    portions = _expand_portions(net, groups)
+    caps = [math.inf] * k
+    mem_grant, link_grant = _fill(net, groups, portions, caps)
+    rates = [_group_rate(groups, portions, mem_grant, link_grant, g) for g in range(k)]
+    gated = [False] * k
+    for i, (g, _, link, w) in enumerate(portions):
+        n = groups[g][1]
+        if n == 0:
+            continue
+        grant = mem_grant[i] if link is None else min(mem_grant[i], link_grant[i])
+        if grant / (n * w) > rates[g] * (1.0 + 1e-9):
+            gated[g] = True
+    info = dict(iterations=1, mem_grant=mem_grant, link_grant=link_grant)
+    if not any(gated):
+        return rates, portions, info
+    iterations = 1
+    for _ in range(max_sweeps):
+        delta = math.inf if any(not math.isfinite(c) for c in caps) else 0.0
+        for g in range(k):
+            saved = caps[g]
+            caps[g] = math.inf
+            mg, lg = _fill(net, groups, portions, caps)
+            r = _group_rate(groups, portions, mg, lg, g)
+            caps[g] = r
+            if math.isfinite(saved):
+                delta = max(delta, abs(r - saved) / max(saved, 1.0))
+        iterations += 1
+        if delta <= tol:
+            break
+    mem_grant, link_grant = _fill(net, groups, portions, caps)
+    info = dict(iterations=iterations, mem_grant=mem_grant, link_grant=link_grant)
+    return caps, portions, info
 
 
 # --------------------------------------------------------------------------
@@ -616,11 +755,10 @@ def worked_example(verbose=True):
     pp, portions, util = fluid_net(net, streams)
     sim_pc = lockstep_per_stream(net, streams, pp, portions)
     groups = [(dom, 8, f, bs, 0.5) for dom in range(8)]
-    model_pc, _ = share_remote(net, groups)
-    # Link throughput: sum of cross-portion drains, in GB/s.
-    link_gbs = sum(to_gbs(m, pp[i]) for i, p in enumerate(portions)
-                   if p[2] is not None)
-    link_cap_gbs = m["link_bw"]
+    model_pc, _, _ = share_remote(net, groups)
+    # Per-direction link throughput: sum of cross-portion drains, in GB/s.
+    link_gbs = [sum(to_gbs(m, pp[i]) for i, p in enumerate(portions) if p[2] == l)
+                for l in range(len(net.links))]
     errs = [abs(sim_pc[8 * dom] - model_pc[dom]) / model_pc[dom] for dom in range(8)]
     if verbose:
         print("\nworked example: 2xNPS4 Rome, dcopy on all 64 cores, r = 0.5")
@@ -629,9 +767,11 @@ def worked_example(verbose=True):
         print(f"  model  per-core: {model_pc[0]:.3f} GB/s (link-gated)")
         print(f"  fluid  per-core: {sim_pc[0]:.3f} GB/s "
               f"(err {errs[0] * 100:.2f}%)")
-        print(f"  link traffic: {link_gbs:.2f} GB/s simulated vs "
-              f"{link_cap_gbs:.1f} GB/s capacity (util {util[8]:.3f})")
-    assert link_gbs <= link_cap_gbs * 1.001, "link exceeded capacity"
+        for l, (a, b) in enumerate(net.links):
+            print(f"  link s{a}->s{b}: {link_gbs[l]:.2f} GB/s simulated vs "
+                  f"{net.link_caps_gbs[l]:.1f} GB/s capacity (util {util[8 + l]:.3f})")
+    for l in range(len(net.links)):
+        assert link_gbs[l] <= net.link_caps_gbs[l] * 1.001, "link exceeded capacity"
     assert max(errs) < 0.08, f"link-gated fluid vs model error {max(errs)}"
     print("ok: link-gated fluid within 8% of the analytic water-fill "
           f"(worst {max(errs) * 100:.2f}%)")
@@ -647,7 +787,7 @@ def mixed_example(verbose=True):
     streams = [(d1, c1, 0, 0.25)] * 8 + [(d2, c2, 4, 0.0)] * 8
     pp, portions, _ = fluid_net(net, streams)
     sim_pc = lockstep_per_stream(net, streams, pp, portions)
-    model_pc, _ = share_remote(net, [(0, 8, f1, bs1, 0.25), (4, 8, f2, bs2, 0.0)])
+    model_pc, _, _ = share_remote(net, [(0, 8, f1, bs1, 0.25), (4, 8, f2, bs2, 0.0)])
     if verbose:
         print("\nmixed example: dcopy:8@d0%r0.25 + ddot2:8@d4 on 2x4 Rome")
         print(f"  dcopy: model {model_pc[0]:.3f}, fluid {sim_pc[0]:.3f} GB/s/core")
@@ -655,10 +795,115 @@ def mixed_example(verbose=True):
     return sim_pc, model_pc
 
 
+def check_stranded_capacity():
+    """The tentpole regression: a link-gated group must not strand its
+    memory-interface grant. Two sockets x one domain, 2 GB/s link, f=0.8,
+    b_s=32: group A (n=4, r=0.5) is link-gated at 1.0 GB/s/core; group B
+    (n=4, r=0) must then receive the freed home bandwidth: 7.5 GB/s/core,
+    where the historical single pass stranded it at 16/3 = 5.333."""
+    m = dict(read_bw=32.0, freq=1.0, link_bw=2.0)
+    net = net_of(m, 2, 1)
+    groups = [(0, 4, 0.8, 32.0, 0.5), (0, 4, 0.8, 32.0, 0.0)]
+    pc, portions, info = share_remote(net, groups)
+    assert info["iterations"] > 1, "gated case must iterate"
+    assert abs(pc[0] - 1.0) < 1e-12, f"A per-core {pc[0]!r} != 1.0"
+    assert abs(pc[1] - 7.5) < 1e-12, f"B per-core {pc[1]!r} != 7.5"
+    # The historical single pass: one uncapped fill of domain 0.
+    old = share_weighted_capacity([(2.0, 0.8, 32.0), (4.0, 0.8, 32.0)], 32.0)
+    old_b = old[1] / 4.0
+    assert abs(old_b - 16.0 / 3.0) < 1e-12
+    assert old_b < pc[1] - 2.0, "old single pass must under-predict B"
+    print(f"ok: stranded capacity redistributed (B {old_b:.3f} -> {pc[1]:.3f} "
+          f"GB/s/core, {info['iterations']} iterations)")
+
+
+def check_fixed_point_degenerates():
+    """No-gating cases terminate in one pass (the uncapped fill verbatim)."""
+    m = MACHINES["rome"]
+    d, c, f, bs = ecm_workload(m, "dcopy")
+    f2, bs2 = ecm_workload(m, "ddot2")[2:]
+    # r = 0 on a multi-domain net: one portion per group, never gated.
+    net = net_of(m, 2, 2)
+    pc, _, info = share_remote(net, [(0, 4, f, bs, 0.0), (3, 4, f2, bs2, 0.0)])
+    assert info["iterations"] == 1, "r=0 must terminate in one pass"
+    # Single interface.
+    net1 = net_of(m, 1, 1)
+    pc1, _, info1 = share_remote(net1, [(0, 4, f, bs, 0.0), (0, 4, f2, bs2, 0.0)])
+    assert info1["iterations"] == 1, "single interface must terminate in one pass"
+    # Wide link, balanced portions: gating never triggers.
+    m_wide = dict(m, link_bw=1e6)
+    netw = net_of(m_wide, 2, 1)
+    pcw, _, infow = share_remote(netw, [(0, 8, f, bs, 0.5)])
+    assert infow["iterations"] == 1, "ungated remote case must terminate in one pass"
+    print("ok: no-gating cases terminate in one fixed-point pass")
+
+
+def check_duplex_one_direction():
+    """Directed full-duplex links with one-direction traffic reproduce the
+    historical half-duplex numbers (pinned from the pre-duplex mirror)."""
+    m = MACHINES["rome"]
+    d, c, f, bs = ecm_workload(m, "dcopy")
+    net = net_of(m, 2, 1)
+    pins = [
+        ([(0, 8, f, bs, 0.25)], [5.473993867539909]),
+        ([(0, 8, f, bs, 0.5)], [8.210990801309864]),
+        # Two identical groups: saturated but ungated by symmetry (one pass).
+        ([(0, 4, f, bs, 0.5), (0, 4, f, bs, 0.5)],
+         [8.210990801309864, 8.210990801309864]),
+    ]
+    for groups, want in pins:
+        pc, portions, _ = share_remote(net, groups)
+        # All cross-socket traffic rides the s0->s1 direction only.
+        assert all(p[2] in (None, 0) for p in portions)
+        for a, b in zip(pc, want):
+            assert a == b, f"one-direction duplex mismatch: {a!r} vs {b!r}"
+    print("ok: one-direction traffic on duplex links == half-duplex pins (bitwise)")
+
+
+def gated_example(verbose=True):
+    """The gated-regime conformance case: Rome narrowed to an 8 GB/s link,
+    dcopy:4@d0%r0.5 + ddot2:4@d0. The dcopy group is link-gated; the old
+    single pass strands its home grant and under-predicts ddot2. The fluid
+    simulation agrees with the fixed point, not the single pass."""
+    m = dict(MACHINES["rome"], link_bw=8.0)
+    net = net_of(m, 2, 1)
+    d1, c1, f1, bs1 = ecm_workload(m, "dcopy")
+    d2, c2, f2, bs2 = ecm_workload(m, "ddot2")
+    streams = [(d1, c1, 0, 0.5)] * 4 + [(d2, c2, 0, 0.0)] * 4
+    pp, portions, _ = fluid_net(net, streams)
+    sim_pc = lockstep_per_stream(net, streams, pp, portions)
+    groups = [(0, 4, f1, bs1, 0.5), (0, 4, f2, bs2, 0.0)]
+    model_pc, mportions, info = share_remote(net, groups)
+    # Historical single pass: uncapped fill only.
+    caps = [math.inf] * len(groups)
+    mg, lg = _fill(net, groups, mportions, caps)
+    old_pc = [_group_rate(groups, mportions, mg, lg, g) for g in range(len(groups))]
+    errs = [abs(sim_pc[4 * g] - model_pc[g]) / model_pc[g] for g in range(2)]
+    old_err = abs(sim_pc[4] - old_pc[1]) / old_pc[1]
+    if verbose:
+        print("\ngated example: dcopy:4@d0%r0.5 + ddot2:4@d0, 8 GB/s link")
+        print(f"  dcopy: model {model_pc[0]:.3f}, old {old_pc[0]:.3f}, "
+              f"fluid {sim_pc[0]:.3f} GB/s/core (err {errs[0] * 100:.2f}%)")
+        print(f"  ddot2: model {model_pc[1]:.3f}, old {old_pc[1]:.3f}, "
+              f"fluid {sim_pc[4]:.3f} GB/s/core (err {errs[1] * 100:.2f}%, "
+              f"old err {old_err * 100:.2f}%)")
+        print(f"  fixed point: {info['iterations']} iterations")
+    assert info["iterations"] > 1
+    assert max(errs) < 0.08, f"gated-regime fluid vs fixed point error {max(errs)}"
+    assert old_err > 0.08, "old single pass should be outside the 8% ceiling"
+    print("ok: gated-regime fluid within 8% of the fixed point "
+          f"(worst {max(errs) * 100:.2f}%); single pass off by {old_err * 100:.1f}%")
+    return sim_pc, model_pc, old_pc
+
+
 if __name__ == "__main__":
     check_fluid_degenerate()
     check_fluid_r0_multidomain()
     check_des_degenerate_and_r0()
+    check_stranded_capacity()
+    check_fixed_point_degenerates()
+    check_duplex_one_direction()
     worked_example()
+    gated_example()
     mixed_example()
     print("\nall mirror checks passed")

@@ -46,6 +46,7 @@ pub fn machine_to_toml(m: &Machine) -> String {
          latency_residue_cy = {}\n\
          residue_on_all_lines = {}\n\
          link_bw_gbs = {}\n\
+         link_bw_rev_gbs = {}\n\
          link_latency_us = {}\n\
          \n[queue]\n\
          base_latency_cy = {}\n\
@@ -72,6 +73,7 @@ pub fn machine_to_toml(m: &Machine) -> String {
         m.latency_residue_cy,
         m.residue_on_all_lines,
         m.link_bw_gbs,
+        m.link_bw_rev_gbs,
         m.link_latency_us,
         m.queue.base_latency_cy,
         m.queue.depth_floor,
@@ -142,6 +144,13 @@ pub fn load_machine_toml(path: &Path) -> Result<Machine> {
         "overlapping" => OverlapKind::Overlapping,
         other => return Err(err(format!("bad overlap kind '{other}'"))),
     };
+    // Optional with default 0 (= no inter-socket link modeled): config
+    // files predating the remote-access extension describe a machine whose
+    // remote traffic never contends on a link. The reverse direction
+    // defaults to the forward capacity: files predating directed links
+    // describe a symmetric full-duplex interconnect.
+    let link_bw_gbs = get_f_or("", "link_bw_gbs", 0.0)?;
+    let link_bw_rev_gbs = get_f_or("", "link_bw_rev_gbs", link_bw_gbs)?;
     Ok(Machine {
         id: MachineId::parse(&get("", "id")?)?,
         name: get("", "name")?,
@@ -168,10 +177,8 @@ pub fn load_machine_toml(path: &Path) -> Result<Machine> {
         stream_penalty: get_f("", "stream_penalty")?,
         latency_residue_cy: get_f("", "latency_residue_cy")?,
         residue_on_all_lines: get("", "residue_on_all_lines")? == "true",
-        // Optional with default 0 (= no inter-socket link modeled): config
-        // files predating the remote-access extension describe a machine
-        // whose remote traffic never contends on a link.
-        link_bw_gbs: get_f_or("", "link_bw_gbs", 0.0)?,
+        link_bw_gbs,
+        link_bw_rev_gbs,
         link_latency_us: get_f_or("", "link_latency_us", 0.0)?,
         queue: QueueParams {
             base_latency_cy: get_f("queue", "base_latency_cy")?,
@@ -205,6 +212,7 @@ mod tests {
             assert!((back.read_bw_gbs - m.read_bw_gbs).abs() < 1e-12);
             assert!((back.queue.write_penalty - m.queue.write_penalty).abs() < 1e-12);
             assert!((back.link_bw_gbs - m.link_bw_gbs).abs() < 1e-12);
+            assert!((back.link_bw_rev_gbs - m.link_bw_rev_gbs).abs() < 1e-12);
             assert!((back.link_latency_us - m.link_latency_us).abs() < 1e-12);
         }
     }
@@ -251,7 +259,27 @@ mod tests {
         std::fs::write(&path, legacy).unwrap();
         let m = load_machine_toml(&path).unwrap();
         assert_eq!(m.link_bw_gbs, 0.0);
+        assert_eq!(m.link_bw_rev_gbs, 0.0);
         assert_eq!(m.link_latency_us, 0.0);
+    }
+
+    #[test]
+    fn missing_reverse_capacity_defaults_to_symmetric_duplex() {
+        // Files predating directed links carry only `link_bw_gbs`; they
+        // describe a symmetric full-duplex interconnect.
+        let dir = std::env::temp_dir().join("membw-toml-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("symmetric.toml");
+        let text = machine_to_toml(&builtin_machines()[3]);
+        let legacy: String = text
+            .lines()
+            .filter(|l| !l.starts_with("link_bw_rev_gbs"))
+            .collect::<Vec<_>>()
+            .join("\n");
+        std::fs::write(&path, legacy).unwrap();
+        let m = load_machine_toml(&path).unwrap();
+        assert!(m.link_bw_gbs > 0.0);
+        assert_eq!(m.link_bw_rev_gbs.to_bits(), m.link_bw_gbs.to_bits());
     }
 
     #[test]

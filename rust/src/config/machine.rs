@@ -162,16 +162,22 @@ pub struct Machine {
     /// lines (Intel: store buffers drain write-backs off the critical
     /// path). The Intel setting is what makes f_DSCAL > f_DAXPY there.
     pub residue_on_all_lines: bool,
-    /// Saturated bandwidth of one inter-socket link, GB/s, shared by both
-    /// directions (the half-duplex simplification both the model and the
-    /// simulators apply — see `docs/SIMULATORS.md`; QPI/UPI on the Intel
-    /// machines, xGMI on Rome). Not a Table I
+    /// Saturated bandwidth of the FORWARD direction (lower → higher socket
+    /// index) of one inter-socket link, GB/s (QPI/UPI on the Intel
+    /// machines, xGMI on Rome). Links are full duplex: each direction of a
+    /// socket pair is its own contention interface. Not a Table I
     /// quantity — the paper models a single contention domain; these are
     /// spec-sheet estimates used by the remote-access extension, where each
-    /// socket pair's link is an additional contention interface. `0`
+    /// directed link is an additional contention interface. `0`
     /// disables link contention (remote traffic then only contends on the
     /// target domain's memory interface).
     pub link_bw_gbs: f64,
+    /// Saturated bandwidth of the REVERSE direction (higher → lower socket
+    /// index), GB/s. Equal to [`Machine::link_bw_gbs`] on the symmetric
+    /// full-duplex interconnects of every built-in machine; machine TOML
+    /// may set `link_bw_rev_gbs` for asymmetric fabrics (old files without
+    /// the key load as symmetric duplex).
+    pub link_bw_rev_gbs: f64,
     /// One-way inter-socket hop latency, microseconds. Feeds the
     /// topology-aware collective cost: each Allreduce release on an
     /// `S`-socket topology pays an extra `(S-1) * link_latency_us` of
@@ -202,7 +208,7 @@ pub struct MachineFingerprint {
     /// Bit pattern of the theoretical bandwidth (`theor_bw_gbs`).
     theor_bw_bits: u64,
     /// Hash of the inter-socket link table (`link_bw_gbs`,
-    /// `link_latency_us`).
+    /// `link_bw_rev_gbs`, `link_latency_us`).
     link_table_bits: u64,
     /// FNV-style fold of every remaining characterization-relevant numeric
     /// (clock, ECM machine parameters, queue calibration, LLC/overlap
@@ -247,6 +253,7 @@ impl Machine {
             read_bw_bits: self.read_bw_gbs.to_bits(),
             theor_bw_bits: self.theor_bw_gbs.to_bits(),
             link_table_bits: self.link_bw_gbs.to_bits()
+                ^ self.link_bw_rev_gbs.to_bits().rotate_left(16)
                 ^ self.link_latency_us.to_bits().rotate_left(32),
             calib_bits: calib,
         }
@@ -325,8 +332,10 @@ pub fn builtin_machines() -> Vec<Machine> {
             stream_penalty: 0.0,
             latency_residue_cy: 3.2,
             residue_on_all_lines: false,
-            // 2x QPI 9.6 GT/s between the sockets of the dual-socket node.
+            // 2x QPI 9.6 GT/s between the sockets of the dual-socket node,
+            // full duplex: 38.4 GB/s per direction.
             link_bw_gbs: 38.4,
+            link_bw_rev_gbs: 38.4,
             link_latency_us: 0.6,
             queue: QueueParams {
                 base_latency_cy: 200.0,
@@ -358,6 +367,7 @@ pub fn builtin_machines() -> Vec<Machine> {
             residue_on_all_lines: false,
             // Same dual-socket QPI generation as BDW-1.
             link_bw_gbs: 38.4,
+            link_bw_rev_gbs: 38.4,
             link_latency_us: 0.6,
             queue: QueueParams {
                 base_latency_cy: 230.0,
@@ -390,6 +400,7 @@ pub fn builtin_machines() -> Vec<Machine> {
             residue_on_all_lines: false,
             // 3x UPI 10.4 GT/s on the Gold 6248 dual-socket node.
             link_bw_gbs: 62.4,
+            link_bw_rev_gbs: 62.4,
             link_latency_us: 0.5,
             queue: QueueParams {
                 base_latency_cy: 220.0,
@@ -422,6 +433,7 @@ pub fn builtin_machines() -> Vec<Machine> {
             residue_on_all_lines: true,
             // 4x xGMI-2 between the sockets of a dual-socket Rome node.
             link_bw_gbs: 64.0,
+            link_bw_rev_gbs: 64.0,
             link_latency_us: 0.7,
             queue: QueueParams {
                 base_latency_cy: 260.0,
@@ -496,6 +508,8 @@ mod tests {
         // otherwise remote accesses could never contend on it.
         for m in builtin_machines() {
             assert!(m.link_bw_gbs > 0.0, "{}", m.name);
+            // All built-in interconnects are symmetric full duplex.
+            assert_eq!(m.link_bw_rev_gbs.to_bits(), m.link_bw_gbs.to_bits(), "{}", m.name);
             assert!(m.link_latency_us > 0.0, "{}", m.name);
             let socket_bw = m.read_bw_gbs * m.domains_per_socket as f64;
             assert!(
@@ -557,6 +571,9 @@ mod tests {
         let mut relinked = m.clone();
         relinked.link_latency_us *= 2.0;
         assert_ne!(m.fingerprint(), relinked.fingerprint());
+        let mut rev = m.clone();
+        rev.link_bw_rev_gbs *= 0.5;
+        assert_ne!(m.fingerprint(), rev.fingerprint());
         // Calibration fields matter too: a TOML row reusing the id but
         // editing the queue model or the clock must not alias the cache.
         let mut requeued = m.clone();

@@ -193,9 +193,10 @@ pub fn topology_scenario_report(
             }
             out.push_str(&dt.render());
         }
-        // Remote-access phases additionally report every inter-socket link
-        // (simulated = lines that actually crossed the link interface in
-        // the multi-interface engine; model = the link water-fill grant).
+        // Remote-access phases additionally report every directed
+        // inter-socket link interface that carried traffic (simulated =
+        // lines that actually crossed it in the multi-interface engine;
+        // model = the direction's water-fill grant).
         for link in &phase.links {
             writeln!(
                 out,
@@ -278,11 +279,15 @@ mod tests {
         .unwrap();
         let text = topology_scenario_report(&ctx, &topo, Placement::Compact, &sc).unwrap();
         assert!(text.contains("topology rome-2s4d"), "{text}");
-        assert!(text.contains("[link s0<->s1]"), "{text}");
+        // Scatter with symmetric remote fractions drives traffic in both
+        // directions, so both directed interfaces render.
+        assert!(text.contains("[link s0->s1]"), "{text}");
+        assert!(text.contains("[link s1->s0]"), "{text}");
         assert!(text.contains("alpha model"));
         let csv = std::fs::read_to_string(dir.join("scenario_rome-2x4-remote_rome-2s4d.csv"))
             .unwrap();
-        assert!(csv.contains(",l0-1,"), "link rows in the CSV");
+        assert!(csv.contains(",l0-1,"), "forward link rows in the CSV");
+        assert!(csv.contains(",l1-0,"), "reverse link rows in the CSV");
         assert!(csv.contains("%r0.25"), "remote suffix in the mix label");
     }
 

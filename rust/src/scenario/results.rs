@@ -179,20 +179,23 @@ impl MixResultSet {
     }
 }
 
-/// Contention outcome of one inter-socket link under a mix: the groups
-/// whose remote portions cross it, with simulated traffic and modeled
-/// link grants.
+/// Contention outcome of one *directed* inter-socket link interface under
+/// a mix: the groups whose remote portions cross it in this direction,
+/// with simulated traffic and modeled link grants. A full-duplex physical
+/// link contributes two records, one per direction.
 ///
-/// The multi-interface substrate simulates the link as a contention
-/// interface of its own, so the measured columns are the **simulated**
-/// link traffic — the lines that actually crossed, gated by the link
-/// server — while the model columns come from the link's Eqs. (4)+(5)
-/// water-fill at `link_bw_gbs` capacity (see `docs/SIMULATORS.md`).
+/// The multi-interface substrate simulates the link direction as a
+/// contention interface of its own, so the measured columns are the
+/// **simulated** link traffic — the lines that actually crossed, gated by
+/// the link server — while the model columns come from the direction's
+/// Eqs. (4)+(5) water-fill at `link_bw_gbs` capacity (see
+/// `docs/SIMULATORS.md`).
 #[derive(Debug, Clone)]
 pub struct LinkResult {
-    /// Socket pair the link connects (lexicographic).
+    /// Ordered socket pair the directed interface connects (source,
+    /// destination).
     pub sockets: (usize, usize),
-    /// Saturated bandwidth of the link, GB/s.
+    /// Saturated bandwidth of this direction of the link, GB/s.
     pub link_bw_gbs: f64,
     /// Per-group traffic over the link (`n` = cores whose streams cross
     /// it; `model_alpha` = share of the link's granted traffic).
@@ -209,9 +212,9 @@ pub struct LinkResult {
 }
 
 impl LinkResult {
-    /// Display label of the link, e.g. `s0<->s1`.
+    /// Display label of the directed link interface, e.g. `s0->s1`.
     pub fn label(&self) -> String {
-        format!("s{}<->s{}", self.sockets.0, self.sockets.1)
+        format!("s{}->s{}", self.sockets.0, self.sockets.1)
     }
 }
 
@@ -512,7 +515,7 @@ mod tests {
             model_total_gbs: d0.groups[0].model_bw_gbs,
             saturated: false,
         };
-        assert_eq!(link.label(), "s0<->s1");
+        assert_eq!(link.label(), "s0->s1");
         let topo = TopoMixResult {
             machine: MachineId::Rome,
             topology: "rome-1s4d".into(),

@@ -617,7 +617,7 @@ fn run_mixes_on_remote(
             }
             link_results.push(LinkResult {
                 sockets: (a, b),
-                link_bw_gbs: shape.link_bw_gbs,
+                link_bw_gbs: shape.link_capacity_gbs((a, b)),
                 groups: groups_out,
                 origins,
                 measured_total_gbs: meas_total,

@@ -44,8 +44,8 @@ pub use baseline::{code_balance_share, equal_share, BaselineKind};
 pub use desync_predictor::{predict_skew, OverlapPartner, SkewPrediction};
 pub use model::{overlapped_saturated_bw, share_two_groups, KernelGroup, SharingPrediction};
 pub use multigroup::{
-    share_domains, share_multigroup, share_weighted, share_weighted_capacity, GroupShare,
-    GroupShareEntry, WeightedGroup,
+    share_domains, share_multigroup, share_weighted, share_weighted_capacity,
+    share_weighted_capped, GroupShare, GroupShareEntry, WeightedGroup,
 };
 pub use remote::{
     portion_routes, share_remote, InterfaceShare, Portion, RemoteGroup, RemoteRateModel,

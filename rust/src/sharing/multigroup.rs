@@ -83,8 +83,28 @@ pub fn share_weighted(groups: &[WeightedGroup]) -> GroupShare {
 /// carries, while each portion's *demand* is still `n·f·b_s` of the memory
 /// interface it targets.
 pub fn share_weighted_capacity(groups: &[WeightedGroup], capacity_gbs: f64) -> GroupShare {
+    share_weighted_capped(groups, capacity_gbs, &vec![f64::INFINITY; groups.len()])
+}
+
+/// [`share_weighted_capacity`] with per-group per-core rate caps: the
+/// demand of group `i` is `min(n·f·b_s, n·rate_caps[i])`. The remote
+/// fixed point uses the caps to re-offer only what a gated group's
+/// slowest portion can actually drain, so the water-fill redistributes
+/// the rest. With every cap infinite this is bit-identical to the
+/// uncapped fill (`min(x, ∞) = x`), which is what makes the no-gating
+/// fast path of [`crate::sharing::share_remote`] exact.
+pub fn share_weighted_capped(
+    groups: &[WeightedGroup],
+    capacity_gbs: f64,
+    rate_caps: &[f64],
+) -> GroupShare {
+    debug_assert_eq!(groups.len(), rate_caps.len());
     let b_mix = capacity_gbs;
-    let demand: Vec<f64> = groups.iter().map(|g| g.n * g.f * g.bs_gbs).collect();
+    let demand: Vec<f64> = groups
+        .iter()
+        .zip(rate_caps)
+        .map(|(g, &cap)| (g.n * g.f * g.bs_gbs).min(g.n * cap))
+        .collect();
     let weight: Vec<f64> = groups.iter().map(|g| g.n * g.f).collect();
     let total_demand: f64 = demand.iter().sum();
     let saturated = total_demand >= b_mix;

@@ -9,23 +9,30 @@
 //! and, if the target sits on another socket, additionally on the
 //! inter-socket link (QPI/UPI on Intel, xGMI on Rome).
 //!
-//! This module models that with three deliberate simplifications (all
-//! documented in `docs/MODEL.md`):
+//! This module models that with three deliberate rules (all documented in
+//! `docs/MODEL.md`):
 //!
 //! 1. **Uniform spread** — a group with remote fraction `r` keeps `1-r` of
 //!    its stream on its home domain and spreads `r` uniformly over all
 //!    other domains (the behaviour of interleaved/first-touch-miss pages).
-//! 2. **Interfaces are independent Eqs. (4)+(5) instances** — every memory
+//! 2. **Directed full-duplex links** — every socket pair contributes TWO
+//!    link interfaces, one per direction; a cross-socket portion rides the
+//!    directed link `socket(home) → socket(target)` (the direction its
+//!    cores issue into), so opposing traffic no longer contends.
+//! 3. **Lockstep streams with a global fixed point** — a core interleaves
+//!    its local and remote lines in fixed proportion, so the slowest
+//!    portion gates the whole stream: the per-core bandwidth of a group is
+//!    `min_p grant_p / (n·w_p)` over its portions `p`. Every memory
 //!    interface and every link evaluates the generalized water-fill over
-//!    the traffic *portions* it carries ([`share_weighted`] with fractional
-//!    thread counts; links use their own capacity via
-//!    [`share_weighted_capacity`]). There is no global fixed point: a
-//!    portion's demand is its unconstrained `n·w·f·b_s`, not the grant of
-//!    the other interfaces it crosses.
-//! 3. **Lockstep streams** — a core interleaves its local and remote lines
-//!    in fixed proportion, so the slowest portion gates the whole stream:
-//!    the per-core bandwidth of a group is `min_p grant_p / (n·w_p)` over
-//!    its portions `p`.
+//!    the traffic portions it carries ([`share_weighted_capped`] with
+//!    fractional thread counts; links use their own directed capacity) —
+//!    and the evaluation iterates to a fixed point: a gated group's
+//!    demand is re-offered as only what its slowest portion can drain
+//!    (`n·w·rate`), so the capacity its faster portions cannot use is
+//!    redistributed to the other groups instead of being stranded. The
+//!    uncapped first pass is returned verbatim when no group is gated,
+//!    which keeps every degenerate case bit-identical to the historical
+//!    single-pass evaluation.
 //!
 //! With `r = 0` everything collapses to one home portion of weight 1 and
 //! the evaluation is bit-identical to [`share_domains`] (pinned by the
@@ -44,18 +51,20 @@
 //! ```
 //! use membw::sharing::{share_remote, RemoteGroup, TopoShape};
 //!
-//! // Two sockets x one domain, 10 GB/s link.
+//! // Two sockets x one domain, 10 GB/s per link direction.
 //! let shape = TopoShape {
 //!     socket_of: vec![0, 1],
 //!     bw_scale: vec![1.0, 1.0],
 //!     link_bw_gbs: 10.0,
+//!     link_bw_rev_gbs: 10.0,
 //! };
 //! // 8 cores on domain 0 sending a quarter of their lines to domain 1.
 //! let groups = [RemoteGroup { home: 0, n: 8, f: 0.3, bs_gbs: 60.0, remote_frac: 0.25 }];
 //! let share = share_remote(&shape, &groups).unwrap();
-//! // The remote quarter crosses the (only) link...
-//! assert_eq!(shape.links(), vec![(0, 1)]);
+//! // The remote quarter crosses the s0->s1 direction of the duplex link...
+//! assert_eq!(shape.links(), vec![(0, 1), (1, 0)]);
 //! assert!(share.links[0].demand_gbs > 0.0);
+//! assert_eq!(share.links[1].demand_gbs, 0.0);
 //! // ...and the group cannot beat its solo bandwidth.
 //! assert!(share.per_core_gbs[0] <= 0.3 * 60.0 + 1e-9);
 //! ```
@@ -63,21 +72,26 @@
 use std::collections::HashMap;
 
 use crate::error::{Error, Result};
-use crate::sharing::multigroup::{share_weighted, share_weighted_capacity, WeightedGroup};
+use crate::sharing::multigroup::{share_weighted_capped, WeightedGroup};
 
 /// The shape of a topology as the remote model sees it: which socket each
 /// ccNUMA domain belongs to, the per-domain bandwidth scales, and the
-/// saturated bandwidth of one inter-socket link.
+/// per-direction saturated bandwidths of the inter-socket links.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TopoShape {
     /// Socket of each domain, in domain order.
     pub socket_of: Vec<usize>,
     /// Saturated-bandwidth scale of each domain (1.0 = nominal).
     pub bw_scale: Vec<f64>,
-    /// Saturated bandwidth of one inter-socket link, GB/s per socket pair
-    /// (0 = links not modeled; remote traffic then only contends on the
-    /// target domain's memory interface).
+    /// Saturated bandwidth of the forward direction (lower → higher socket
+    /// index) of one inter-socket link, GB/s per socket pair (0 = links
+    /// not modeled; remote traffic then only contends on the target
+    /// domain's memory interface).
     pub link_bw_gbs: f64,
+    /// Saturated bandwidth of the reverse direction (higher → lower socket
+    /// index), GB/s. Equal to [`TopoShape::link_bw_gbs`] on symmetric
+    /// duplex machines (the common case, and the loader default).
+    pub link_bw_rev_gbs: f64,
 }
 
 impl TopoShape {
@@ -91,17 +105,31 @@ impl TopoShape {
         self.socket_of.iter().copied().max().map_or(0, |s| s + 1)
     }
 
-    /// The inter-socket links: all unordered socket pairs, lexicographic.
-    /// Each is one contention interface of capacity [`TopoShape::link_bw_gbs`].
+    /// The inter-socket links: all DIRECTED socket pairs `(a, b)` with
+    /// `a != b`, lexicographic. Each direction is its own contention
+    /// interface ([`TopoShape::link_capacity_gbs`] gives its capacity).
     pub fn links(&self) -> Vec<(usize, usize)> {
         let s = self.n_sockets();
         let mut out = Vec::new();
         for a in 0..s {
-            for b in (a + 1)..s {
-                out.push((a, b));
+            for b in 0..s {
+                if a != b {
+                    out.push((a, b));
+                }
             }
         }
         out
+    }
+
+    /// Capacity of one directed link, GB/s: forward (`a < b`) directions
+    /// saturate at [`TopoShape::link_bw_gbs`], reverse directions at
+    /// [`TopoShape::link_bw_rev_gbs`].
+    pub fn link_capacity_gbs(&self, link: (usize, usize)) -> f64 {
+        if link.0 < link.1 {
+            self.link_bw_gbs
+        } else {
+            self.link_bw_rev_gbs
+        }
     }
 }
 
@@ -109,8 +137,9 @@ impl TopoShape {
 /// of one stream homed on `home` with remote fraction `remote_frac`, as
 /// `(target domain, link index, weight)` triples — the home portion of
 /// weight `1-r` first (omitted at `r = 1`), then `r/(D-1)` per remote
-/// target in domain order, with the socket pair's link attached when the
-/// target lives on another socket and `links_modeled` is set.
+/// target in domain order, with the DIRECTED link
+/// `socket(home) → socket(target)` attached when the target lives on
+/// another socket and `links_modeled` is set.
 ///
 /// [`share_remote`] expands its analytic groups through this function and
 /// the simulation substrate routes its per-core streams through the very
@@ -139,8 +168,8 @@ pub fn portion_routes(
                 continue;
             }
             let link = if socket_of[t] != socket_of[home] && links_modeled {
-                let pair = (socket_of[home].min(socket_of[t]), socket_of[home].max(socket_of[t]));
-                links.iter().position(|&l| l == pair)
+                let dir = (socket_of[home], socket_of[t]);
+                links.iter().position(|&l| l == dir)
             } else {
                 None
             };
@@ -215,9 +244,154 @@ pub struct RemoteShare {
     pub links: Vec<InterfaceShare>,
     /// All traffic portions with their grants (reporting detail).
     pub portions: Vec<Portion>,
+    /// Water-fill passes until convergence: 1 when no group was gated (the
+    /// uncapped pass is already the fixed point), > 1 otherwise.
+    pub iterations: usize,
+}
+
+/// Sweep cap of the fixed-point iteration. In practice gated scenarios
+/// converge in a handful of sweeps (the stranded-capacity regression takes
+/// 3); the cap only bounds pathological non-convergence.
+const MAX_FIXED_POINT_SWEEPS: usize = 64;
+
+/// Relative convergence tolerance on the per-group rate caps.
+const FIXED_POINT_TOL: f64 = 1e-12;
+
+/// Relative slack when deciding whether a portion outruns its group's
+/// lockstep rate (i.e. whether the group is gated at all); loose enough to
+/// ignore round-off between portions of an ungated group.
+const GATING_TOL: f64 = 1e-9;
+
+/// One global water-fill over every interface with per-group per-core rate
+/// caps: grants per portion plus per-interface summaries.
+struct Fill {
+    mem_grant: Vec<f64>,
+    link_grant: Vec<f64>,
+    domains: Vec<InterfaceShare>,
+    links: Vec<InterfaceShare>,
+}
+
+fn fill(
+    shape: &TopoShape,
+    groups: &[RemoteGroup],
+    portions: &[Portion],
+    links: &[(usize, usize)],
+    caps: &[f64],
+) -> Fill {
+    let nd = shape.n_domains();
+    let mut mem_grant = vec![0.0f64; portions.len()];
+    let mut link_grant = vec![0.0f64; portions.len()];
+
+    // Every memory interface runs the generalized Eqs. (4)+(5) over the
+    // portions it carries; the capacity (generalized Eq. 4 mean) is taken
+    // over the *uncapped* thread weights, so caps redistribute bandwidth
+    // without changing what the interface can deliver.
+    let mut domains = vec![InterfaceShare::default(); nd];
+    for (d, dom_share) in domains.iter_mut().enumerate() {
+        let idx: Vec<usize> = (0..portions.len()).filter(|&p| portions[p].target == d).collect();
+        let wg: Vec<WeightedGroup> = idx
+            .iter()
+            .map(|&p| {
+                let g = &groups[portions[p].group];
+                WeightedGroup {
+                    n: g.n as f64 * portions[p].weight,
+                    f: g.f,
+                    bs_gbs: g.bs_gbs * shape.bw_scale[d],
+                }
+            })
+            .collect();
+        let n_tot: f64 = wg.iter().map(|g| g.n).sum();
+        if n_tot == 0.0 {
+            continue;
+        }
+        let b_mix: f64 = wg.iter().map(|g| g.n * g.bs_gbs).sum::<f64>() / n_tot;
+        let rc: Vec<f64> = idx.iter().map(|&p| caps[portions[p].group]).collect();
+        let share = share_weighted_capped(&wg, b_mix, &rc);
+        for (k, &p) in idx.iter().enumerate() {
+            mem_grant[p] = share.groups[k].group_bw_gbs;
+        }
+        *dom_share = InterfaceShare {
+            b_mix_gbs: b_mix,
+            demand_gbs: wg.iter().map(|g| g.n * g.f * g.bs_gbs).sum(),
+            saturated: share.saturated,
+        };
+    }
+
+    // Every directed link runs the same water-fill at its own per-direction
+    // capacity; a portion's demand is still that of the memory stream it
+    // ships.
+    let mut link_shares = vec![InterfaceShare::default(); links.len()];
+    for (li, link_share) in link_shares.iter_mut().enumerate() {
+        let idx: Vec<usize> =
+            (0..portions.len()).filter(|&p| portions[p].link == Some(li)).collect();
+        if idx.is_empty() {
+            continue;
+        }
+        let wg: Vec<WeightedGroup> = idx
+            .iter()
+            .map(|&p| {
+                let g = &groups[portions[p].group];
+                WeightedGroup {
+                    n: g.n as f64 * portions[p].weight,
+                    f: g.f,
+                    bs_gbs: g.bs_gbs * shape.bw_scale[portions[p].target],
+                }
+            })
+            .collect();
+        let capacity = shape.link_capacity_gbs(links[li]);
+        let rc: Vec<f64> = idx.iter().map(|&p| caps[portions[p].group]).collect();
+        let share = share_weighted_capped(&wg, capacity, &rc);
+        for (k, &p) in idx.iter().enumerate() {
+            link_grant[p] = share.groups[k].group_bw_gbs;
+        }
+        *link_share = InterfaceShare {
+            b_mix_gbs: capacity,
+            demand_gbs: wg.iter().map(|g| g.n * g.f * g.bs_gbs).sum(),
+            saturated: share.saturated,
+        };
+    }
+
+    Fill { mem_grant, link_grant, domains, links: link_shares }
+}
+
+/// Lockstep rate of one group under a fill: `min_p grant_p / (n · w_p)`
+/// over its portions (a cross-socket portion is gated by the slower of its
+/// two interfaces).
+fn group_rate(groups: &[RemoteGroup], portions: &[Portion], f: &Fill, gi: usize) -> f64 {
+    let n = groups[gi].n as f64;
+    if n == 0.0 {
+        return 0.0;
+    }
+    let mut rate = f64::INFINITY;
+    for (i, p) in portions.iter().enumerate() {
+        if p.group != gi {
+            continue;
+        }
+        let grant = match p.link {
+            Some(_) => f.mem_grant[i].min(f.link_grant[i]),
+            None => f.mem_grant[i],
+        };
+        rate = rate.min(grant / (n * p.weight));
+    }
+    if rate.is_finite() {
+        rate
+    } else {
+        0.0
+    }
 }
 
 /// Evaluate the remote-aware sharing model over `groups` on `shape`.
+///
+/// The evaluation is a global fixed point over the whole interface
+/// network. Pass 1 is the plain uncapped water-fill on every interface; if
+/// no group is gated by a slower portion it is returned verbatim
+/// (`iterations == 1`, bit-identical to the historical single-pass
+/// evaluation). Otherwise Gauss-Seidel sweeps re-evaluate each group
+/// *uncapped* against the others capped at their current lockstep rates,
+/// so the capacity a gated group's faster portions cannot drain is
+/// redistributed to the other groups instead of being stranded; sweeps
+/// stop when no cap moves by more than [`FIXED_POINT_TOL`] (relative) or
+/// after [`MAX_FIXED_POINT_SWEEPS`].
 ///
 /// Fails when a remote fraction is outside `[0, 1]`, when a group with
 /// remote traffic sits on a single-domain shape, or when a home domain is
@@ -261,93 +435,79 @@ pub fn share_remote(shape: &TopoShape, groups: &[RemoteGroup]) -> Result<RemoteS
         }
     }
 
-    // 2. Every memory interface runs the generalized Eqs. (4)+(5) over the
-    // portions it carries.
-    let mut domains = vec![InterfaceShare::default(); nd];
-    for (d, dom_share) in domains.iter_mut().enumerate() {
-        let idx: Vec<usize> = (0..portions.len()).filter(|&p| portions[p].target == d).collect();
-        if idx.is_empty() {
+    // 2. Pass 1: uncapped global fill (the historical single-pass answer).
+    let k = groups.len();
+    let mut caps = vec![f64::INFINITY; k];
+    let first = fill(shape, groups, &portions, &links, &caps);
+    let rates: Vec<f64> = (0..k).map(|g| group_rate(groups, &portions, &first, g)).collect();
+
+    // 3. A group is gated when some portion of it could run faster than
+    // its lockstep rate — that surplus grant is stranded capacity.
+    let mut gated = vec![false; k];
+    for (i, p) in portions.iter().enumerate() {
+        let n = groups[p.group].n as f64;
+        if n == 0.0 {
             continue;
         }
-        let wg: Vec<WeightedGroup> = idx
-            .iter()
-            .map(|&p| {
-                let g = &groups[portions[p].group];
-                WeightedGroup {
-                    n: g.n as f64 * portions[p].weight,
-                    f: g.f,
-                    bs_gbs: g.bs_gbs * shape.bw_scale[d],
-                }
-            })
-            .collect();
-        let share = share_weighted(&wg);
-        for (k, &p) in idx.iter().enumerate() {
-            portions[p].mem_bw_gbs = share.groups[k].group_bw_gbs;
-        }
-        *dom_share = InterfaceShare {
-            b_mix_gbs: share.b_mix_gbs,
-            demand_gbs: wg.iter().map(|g| g.n * g.f * g.bs_gbs).sum(),
-            saturated: share.saturated,
+        let grant = match p.link {
+            Some(_) => first.mem_grant[i].min(first.link_grant[i]),
+            None => first.mem_grant[i],
         };
+        if grant / (n * p.weight) > rates[p.group] * (1.0 + GATING_TOL) {
+            gated[p.group] = true;
+        }
     }
 
-    // 3. Every link runs the same water-fill at its own capacity; a
-    // portion's demand is still that of the memory stream it ships.
-    let mut link_shares = vec![InterfaceShare::default(); links.len()];
-    for (li, link_share) in link_shares.iter_mut().enumerate() {
-        let idx: Vec<usize> =
-            (0..portions.len()).filter(|&p| portions[p].link == Some(li)).collect();
-        if idx.is_empty() {
-            continue;
-        }
-        let wg: Vec<WeightedGroup> = idx
-            .iter()
-            .map(|&p| {
-                let g = &groups[portions[p].group];
-                WeightedGroup {
-                    n: g.n as f64 * portions[p].weight,
-                    f: g.f,
-                    bs_gbs: g.bs_gbs * shape.bw_scale[portions[p].target],
+    let (per_core_gbs, final_fill, iterations) = if !gated.iter().any(|&g| g) {
+        // No stranded capacity: pass 1 is already the fixed point.
+        (rates, first, 1)
+    } else {
+        // 4. Gauss-Seidel sweeps: re-fill with group g uncapped and every
+        // other group capped at its current rate; g's resulting lockstep
+        // rate becomes its new cap. Converged when no cap moves.
+        let mut iterations = 1usize;
+        for _ in 0..MAX_FIXED_POINT_SWEEPS {
+            let mut delta =
+                if caps.iter().any(|c| !c.is_finite()) { f64::INFINITY } else { 0.0 };
+            for g in 0..k {
+                let saved = caps[g];
+                caps[g] = f64::INFINITY;
+                let f = fill(shape, groups, &portions, &links, &caps);
+                let r = group_rate(groups, &portions, &f, g);
+                caps[g] = r;
+                if saved.is_finite() {
+                    delta = delta.max((r - saved).abs() / saved.max(1.0));
                 }
-            })
-            .collect();
-        let share = share_weighted_capacity(&wg, shape.link_bw_gbs);
-        for (k, &p) in idx.iter().enumerate() {
-            portions[p].link_grant_gbs = share.groups[k].group_bw_gbs;
+            }
+            iterations += 1;
+            if delta <= FIXED_POINT_TOL {
+                break;
+            }
         }
-        *link_share = InterfaceShare {
-            b_mix_gbs: shape.link_bw_gbs,
-            demand_gbs: wg.iter().map(|g| g.n * g.f * g.bs_gbs).sum(),
-            saturated: share.saturated,
-        };
-    }
+        // Reporting fill with every group at its converged cap.
+        let f = fill(shape, groups, &portions, &links, &caps);
+        (caps, f, iterations)
+    };
 
-    // 4. Combine: a cross-socket portion is gated by the slower of its two
-    // interfaces; the group by its slowest portion (lockstep streams).
-    for p in portions.iter_mut() {
+    for (i, p) in portions.iter_mut().enumerate() {
+        p.mem_bw_gbs = final_fill.mem_grant[i];
+        p.link_grant_gbs = final_fill.link_grant[i];
         p.granted_bw_gbs = match p.link {
             Some(_) => p.mem_bw_gbs.min(p.link_grant_gbs),
             None => p.mem_bw_gbs,
         };
     }
-    let mut per_core_gbs = vec![0.0f64; groups.len()];
-    let mut group_bw_gbs = vec![0.0f64; groups.len()];
-    for (gi, g) in groups.iter().enumerate() {
-        if g.n == 0 {
-            continue;
-        }
-        let mut rate = f64::INFINITY;
-        for p in portions.iter().filter(|p| p.group == gi) {
-            rate = rate.min(p.granted_bw_gbs / (g.n as f64 * p.weight));
-        }
-        if !rate.is_finite() {
-            rate = 0.0;
-        }
-        per_core_gbs[gi] = rate;
-        group_bw_gbs[gi] = rate * g.n as f64;
-    }
+    let group_bw_gbs: Vec<f64> =
+        per_core_gbs.iter().zip(groups).map(|(&r, g)| r * g.n as f64).collect();
 
-    Ok(RemoteShare { per_core_gbs, group_bw_gbs, domains, links: link_shares, portions })
+    Ok(RemoteShare {
+        per_core_gbs,
+        group_bw_gbs,
+        domains: final_fill.domains,
+        links: final_fill.links,
+        portions,
+        iterations,
+    })
 }
 
 /// Upper bound on memoized compositions in a [`RemoteRateModel`]: far
@@ -473,19 +633,101 @@ impl RemoteRateModel {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sharing::multigroup::share_weighted_capacity;
     use crate::sharing::{share_multigroup, KernelGroup};
 
+    /// The stranded-capacity regression (mirror-checked in
+    /// `python/netfluid_mirror.py::check_stranded_capacity`): two groups on
+    /// one home domain, one link-gated. The historical single pass left the
+    /// gated group's unused memory grant stranded and under-predicted the
+    /// ungated group (16/3 ≈ 5.33 GB/s/core); the fixed point redistributes
+    /// it (7.5 GB/s/core).
+    #[test]
+    fn stranded_capacity_is_redistributed() {
+        let shape = TopoShape {
+            socket_of: vec![0, 1],
+            bw_scale: vec![1.0, 1.0],
+            link_bw_gbs: 2.0,
+            link_bw_rev_gbs: 2.0,
+        };
+        let groups = [
+            RemoteGroup { home: 0, n: 4, f: 0.8, bs_gbs: 32.0, remote_frac: 0.5 },
+            RemoteGroup { home: 0, n: 4, f: 0.8, bs_gbs: 32.0, remote_frac: 0.0 },
+        ];
+        let share = share_remote(&shape, &groups).unwrap();
+        // A is gated by the 2 GB/s link: 2 / (4 * 0.5) = 1 GB/s per core.
+        assert!((share.per_core_gbs[0] - 1.0).abs() < 1e-12, "{}", share.per_core_gbs[0]);
+        // B gets everything A's home portion cannot drain: b_mix = 32,
+        // A's home portion drains 4*0.5*1 = 2, so B = 30/4 = 7.5.
+        assert!((share.per_core_gbs[1] - 7.5).abs() < 1e-12, "{}", share.per_core_gbs[1]);
+        assert!(share.iterations > 1, "gated case must iterate");
+
+        // The historical single pass (domain 0 water-fill over A's home
+        // portion and B, no cap feedback) awards B only 16/3.
+        let old = share_weighted_capacity(
+            &[
+                WeightedGroup { n: 2.0, f: 0.8, bs_gbs: 32.0 },
+                WeightedGroup { n: 4.0, f: 0.8, bs_gbs: 32.0 },
+            ],
+            32.0,
+        );
+        let old_b = old.groups[1].group_bw_gbs / 4.0;
+        assert!((old_b - 16.0 / 3.0).abs() < 1e-12, "{old_b}");
+        assert!(share.per_core_gbs[1] > old_b + 2.0, "fixed point must beat the stranded answer");
+    }
+
+    /// Opposing cross-socket streams ride different directed interfaces of
+    /// a full-duplex link and no longer contend: each gets the full
+    /// per-direction capacity (the old shared-capacity model halved it).
+    #[test]
+    fn opposing_streams_use_both_link_directions() {
+        let shape = TopoShape {
+            socket_of: vec![0, 1],
+            bw_scale: vec![1.0, 1.0],
+            link_bw_gbs: 2.0,
+            link_bw_rev_gbs: 2.0,
+        };
+        let groups = [
+            RemoteGroup { home: 0, n: 4, f: 0.8, bs_gbs: 32.0, remote_frac: 1.0 },
+            RemoteGroup { home: 1, n: 4, f: 0.8, bs_gbs: 32.0, remote_frac: 1.0 },
+        ];
+        let share = share_remote(&shape, &groups).unwrap();
+        // Single-portion groups are never gated: one pass.
+        assert_eq!(share.iterations, 1);
+        for pc in &share.per_core_gbs {
+            assert!((pc - 0.5).abs() < 1e-12, "each direction delivers 2/4 GB/s/core, got {pc}");
+        }
+        assert!(share.links[0].saturated && share.links[1].saturated);
+        assert!(share.links[0].demand_gbs > 0.0 && share.links[1].demand_gbs > 0.0);
+    }
+
     fn two_socket_shape(link_bw: f64) -> TopoShape {
-        TopoShape { socket_of: vec![0, 0, 1, 1], bw_scale: vec![1.0; 4], link_bw_gbs: link_bw }
+        TopoShape {
+            socket_of: vec![0, 0, 1, 1],
+            bw_scale: vec![1.0; 4],
+            link_bw_gbs: link_bw,
+            link_bw_rev_gbs: link_bw,
+        }
     }
 
     #[test]
-    fn shape_links_enumerate_socket_pairs() {
-        assert_eq!(two_socket_shape(10.0).links(), vec![(0, 1)]);
-        let four =
-            TopoShape { socket_of: vec![0, 1, 2, 3], bw_scale: vec![1.0; 4], link_bw_gbs: 1.0 };
-        assert_eq!(four.links(), vec![(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)]);
+    fn shape_links_enumerate_directed_socket_pairs() {
+        assert_eq!(two_socket_shape(10.0).links(), vec![(0, 1), (1, 0)]);
+        let four = TopoShape {
+            socket_of: vec![0, 1, 2, 3],
+            bw_scale: vec![1.0; 4],
+            link_bw_gbs: 1.0,
+            link_bw_rev_gbs: 2.0,
+        };
+        let links = four.links();
+        assert_eq!(links.len(), 12, "4 sockets -> 12 directed pairs");
+        assert_eq!(links[0], (0, 1));
+        assert_eq!(links[11], (3, 2));
+        assert!(links.iter().all(|&(a, b)| a != b));
         assert_eq!(four.n_sockets(), 4);
+        // Forward directions at link_bw, reverse at link_bw_rev.
+        assert_eq!(four.link_capacity_gbs((0, 3)), 1.0);
+        assert_eq!(four.link_capacity_gbs((3, 0)), 2.0);
     }
 
     /// r = 0 collapses to the per-domain evaluation, bit for bit.
@@ -508,17 +750,24 @@ mod tests {
         assert_eq!(remote.per_core_gbs[2].to_bits(), d2.groups[0].per_core_gbs.to_bits());
         assert_eq!(remote.domains[0].b_mix_gbs.to_bits(), d0.b_mix_gbs.to_bits());
         assert_eq!(remote.domains[2].b_mix_gbs.to_bits(), d2.b_mix_gbs.to_bits());
-        // No portion crosses a link.
+        // No portion crosses a link, and no gating -> one pass.
         assert!(remote.portions.iter().all(|p| p.link.is_none()));
-        assert_eq!(remote.links.len(), 1);
+        assert_eq!(remote.links.len(), 2);
         assert_eq!(remote.links[0].demand_gbs, 0.0);
+        assert_eq!(remote.links[1].demand_gbs, 0.0);
+        assert_eq!(remote.iterations, 1);
     }
 
     /// A symmetric intra-socket spread is invisible: every domain receives
     /// exactly the traffic it exports, so rates match the local case.
     #[test]
     fn symmetric_intra_socket_spread_is_neutral() {
-        let shape = TopoShape { socket_of: vec![0, 0], bw_scale: vec![1.0, 1.0], link_bw_gbs: 0.0 };
+        let shape = TopoShape {
+            socket_of: vec![0, 0],
+            bw_scale: vec![1.0, 1.0],
+            link_bw_gbs: 0.0,
+            link_bw_rev_gbs: 0.0,
+        };
         let local = share_remote(
             &shape,
             &[
@@ -549,6 +798,7 @@ mod tests {
                 socket_of: vec![0, 1],
                 bw_scale: vec![1.0, 1.0],
                 link_bw_gbs: link_bw,
+                link_bw_rev_gbs: link_bw,
             };
             share_remote(
                 &shape,
@@ -574,7 +824,12 @@ mod tests {
 
     #[test]
     fn remote_validation_errors() {
-        let single = TopoShape { socket_of: vec![0], bw_scale: vec![1.0], link_bw_gbs: 0.0 };
+        let single = TopoShape {
+            socket_of: vec![0],
+            bw_scale: vec![1.0],
+            link_bw_gbs: 0.0,
+            link_bw_rev_gbs: 0.0,
+        };
         let g = RemoteGroup { home: 0, n: 2, f: 0.5, bs_gbs: 50.0, remote_frac: 0.5 };
         assert!(share_remote(&single, &[g]).is_err(), "remote needs >= 2 domains");
         let shape = two_socket_shape(10.0);

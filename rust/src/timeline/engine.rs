@@ -215,6 +215,7 @@ pub fn simulate_placed(
                 socket_of: layout.socket_of.clone(),
                 bw_scale: layout.bw_scale.clone(),
                 link_bw_gbs: layout.link_bw_gbs,
+                link_bw_rev_gbs: layout.link_bw_rev_gbs,
             },
             spec.frac.clone(),
             chars.iter().map(|&(_, f, bs)| (f, bs)).collect(),
@@ -758,6 +759,7 @@ mod tests {
             bw_scale: vec![1.0, 1.0],
             socket_of: vec![0, 0],
             link_bw_gbs: 0.0,
+            link_bw_rev_gbs: 0.0,
             collective_extra_s: 0.0,
             remote: None,
         };
@@ -798,6 +800,7 @@ mod tests {
             bw_scale: vec![1.0, 0.5],
             socket_of: vec![0, 0],
             link_bw_gbs: 0.0,
+            link_bw_rev_gbs: 0.0,
             collective_extra_s: 0.0,
             remote: None,
         };
@@ -818,6 +821,7 @@ mod tests {
             bw_scale: vec![1.0, 1.0],
             socket_of: vec![0, 1],
             link_bw_gbs: 40.0,
+            link_bw_rev_gbs: 40.0,
             collective_extra_s: 0.0,
             remote: None,
         };
@@ -847,6 +851,7 @@ mod tests {
                 bw_scale: vec![1.0, 1.0],
                 socket_of: vec![0, 0],
                 link_bw_gbs: 0.0,
+                link_bw_rev_gbs: 0.0,
                 collective_extra_s: 0.0,
                 remote: None,
             };
@@ -875,6 +880,7 @@ mod tests {
                 bw_scale: vec![1.0, 1.0],
                 socket_of: vec![0, 1],
                 link_bw_gbs: link_bw,
+                link_bw_rev_gbs: link_bw,
                 collective_extra_s: 0.0,
                 remote: None,
             }

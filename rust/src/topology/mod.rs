@@ -29,11 +29,12 @@
 //! use membw::topology::Topology;
 //!
 //! let rome = machine(MachineId::Rome);
-//! // Two sockets x NPS4: eight ccNUMA domains, one xGMI link.
+//! // Two sockets x NPS4: eight ccNUMA domains, one full-duplex xGMI link
+//! // (two directed interfaces).
 //! let two_socket = Topology::parse(&rome, "2x4").unwrap();
 //! assert_eq!(two_socket.n_domains(), 8);
 //! assert_eq!(two_socket.domains[4].socket, 1);
-//! assert_eq!(two_socket.links(), vec![(0, 1)]);
+//! assert_eq!(two_socket.links(), vec![(0, 1), (1, 0)]);
 //!
 //! // Sub-NUMA-Clustering splits a monolithic Cascade Lake socket.
 //! let clx = machine(MachineId::Clx);
@@ -190,19 +191,22 @@ impl Topology {
         self.domains.iter().map(|d| d.socket).collect()
     }
 
-    /// The inter-socket links (all unordered socket pairs, lexicographic);
-    /// empty on single-socket topologies.
+    /// The directed inter-socket links (all *ordered* socket pairs `a → b`
+    /// with `a ≠ b`, lexicographic — each physical link contributes one
+    /// interface per duplex direction); empty on single-socket topologies.
     pub fn links(&self) -> Vec<(usize, usize)> {
         self.shape().links()
     }
 
     /// The topology as the remote-access model sees it: domain→socket map,
-    /// bandwidth scales, and the base machine's per-link bandwidth.
+    /// bandwidth scales, and the base machine's per-direction link
+    /// bandwidths.
     pub fn shape(&self) -> TopoShape {
         TopoShape {
             socket_of: self.socket_of(),
             bw_scale: self.bw_scales(),
             link_bw_gbs: self.base.link_bw_gbs,
+            link_bw_rev_gbs: self.base.link_bw_rev_gbs,
         }
     }
 
@@ -404,15 +408,17 @@ mod tests {
         assert!(one.links().is_empty());
         assert_eq!(one.collective_extra_s(), 0.0);
         let two = Topology::parse(&m, "2x4").unwrap();
-        assert_eq!(two.links(), vec![(0, 1)]);
+        // Directed duplex: one interface per direction of the socket pair.
+        assert_eq!(two.links(), vec![(0, 1), (1, 0)]);
         let shape = two.shape();
         assert_eq!(shape.socket_of, vec![0, 0, 0, 0, 1, 1, 1, 1]);
         assert_eq!(shape.n_sockets(), 2);
         assert_eq!(shape.link_bw_gbs.to_bits(), m.link_bw_gbs.to_bits());
+        assert_eq!(shape.link_bw_rev_gbs.to_bits(), m.link_bw_rev_gbs.to_bits());
         let want = m.link_latency_us * 1e-6;
         assert!((two.collective_extra_s() - want).abs() < 1e-18);
         let four = Topology::parse(&m, "4x1").unwrap();
-        assert_eq!(four.links().len(), 6);
+        assert_eq!(four.links().len(), 12);
         assert!((four.collective_extra_s() - 3.0 * want).abs() < 1e-18);
     }
 

@@ -280,6 +280,7 @@ impl Placement {
             bw_scale: topo.bw_scales(),
             socket_of: topo.socket_of(),
             link_bw_gbs: topo.base.link_bw_gbs,
+            link_bw_rev_gbs: topo.base.link_bw_rev_gbs,
             collective_extra_s: topo.collective_extra_s(),
             remote: None,
         })
@@ -334,9 +335,12 @@ pub struct RankLayout {
     pub bw_scale: Vec<f64>,
     /// Socket of each domain (all zero on single-socket layouts).
     pub socket_of: Vec<usize>,
-    /// Saturated bandwidth of one inter-socket link, GB/s (0 = links not
-    /// modeled).
+    /// Saturated bandwidth of the forward (lower → higher socket index)
+    /// direction of one inter-socket link, GB/s (0 = links not modeled).
     pub link_bw_gbs: f64,
+    /// Saturated bandwidth of the reverse direction, GB/s (symmetric
+    /// duplex when equal to `link_bw_gbs`).
+    pub link_bw_rev_gbs: f64,
     /// Extra collective (Allreduce) release latency from inter-socket
     /// barrier hops, seconds; 0 on single-socket layouts.
     pub collective_extra_s: f64,
@@ -353,6 +357,7 @@ impl RankLayout {
             bw_scale: vec![1.0],
             socket_of: vec![0],
             link_bw_gbs: 0.0,
+            link_bw_rev_gbs: 0.0,
             collective_extra_s: 0.0,
             remote: None,
         }
@@ -530,6 +535,7 @@ mod tests {
         let layout = Placement::Compact.rank_layout(&two, 16).unwrap();
         assert_eq!(layout.socket_of, vec![0, 0, 0, 0, 1, 1, 1, 1]);
         assert_eq!(layout.link_bw_gbs.to_bits(), m.link_bw_gbs.to_bits());
+        assert_eq!(layout.link_bw_rev_gbs.to_bits(), m.link_bw_rev_gbs.to_bits());
         assert!((layout.collective_extra_s - m.link_latency_us * 1e-6).abs() < 1e-18);
         assert!(layout.remote.is_none());
         let with = layout.clone().with_remote(0.25).unwrap();

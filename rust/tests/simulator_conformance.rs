@@ -12,10 +12,11 @@
 //! 2. **r = 0 degeneracy** — a multi-domain run with no remote traffic is
 //!    bit-identical to independent per-domain single-interface runs, for
 //!    both engines (including scaled domains);
-//! 3. **Link-gated fidelity** — the homogeneous two-socket link-saturated
-//!    scenario stays within the paper's 8% ceiling against the analytic
-//!    `share_remote` water-fill, end to end through the scenario runner,
-//!    and reported link traffic is *simulated* (never exceeds capacity).
+//! 3. **Remote fidelity** — the homogeneous two-socket remote scenario
+//!    stays within the paper's 8% ceiling against the analytic
+//!    `share_remote` fixed point, end to end through the scenario runner,
+//!    with one reported row per directed link interface whose traffic is
+//!    *simulated* (never exceeds the direction's capacity).
 //!
 //! The numerics are mirrored operation-for-operation in
 //! `python/netfluid_mirror.py` (run it directly for the same checks).
@@ -334,14 +335,18 @@ fn net_des_r0_matches_per_domain_runs_bitwise() {
     assert_eq!(r.events, solo0.events + solo1.events);
 }
 
-/// Pin 3: the link-gated homogeneous scenario end to end through the
-/// runner — 64 dcopy cores at r = 0.5 on dual-socket NPS4 Rome saturate
-/// the xGMI link; measured (simulated) and modeled socket shares agree
-/// within the paper's 8% ceiling, and the reported link traffic is
-/// simulated (it can never exceed the link capacity — offered demand is
-/// ~4x over it).
+/// Pin 3: the homogeneous remote scenario end to end through the runner —
+/// 64 dcopy cores at r = 0.5 on dual-socket NPS4 Rome. Under directed
+/// full-duplex links each direction carries only one socket's outbound
+/// lines, so the memory interfaces gate the streams (per-direction
+/// throughput 37.54 of 64 GB/s — the historical half-duplex accounting
+/// summed both directions onto one 64 GB/s server and misread this
+/// scenario as link-gated). Measured (simulated) and modeled socket
+/// shares agree within the paper's 8% ceiling, both directed link rows
+/// are reported, and reported link traffic is simulated (never offered
+/// demand, which is ~3x per-direction capacity).
 #[test]
-fn link_gated_scenario_within_model_ceiling_end_to_end() {
+fn spread_remote_scenario_within_model_ceiling_end_to_end() {
     let m = machine(MachineId::Rome);
     let topo = Topology::parse(&m, "2x4").unwrap();
     let mix = Mix::parse("dcopy:64@scatter%r0.5").unwrap();
@@ -350,35 +355,49 @@ fn link_gated_scenario_within_model_ceiling_end_to_end() {
     for g in &case.socket {
         assert!(
             g.error() < 0.08,
-            "link-gated socket share: model {} vs simulated {} ({}%)",
+            "remote socket share: model {} vs simulated {} ({}%)",
             g.model_per_core,
             g.measured_per_core,
             g.error() * 100.0
         );
     }
-    assert_eq!(case.links.len(), 1);
-    let link = &case.links[0];
-    assert!(link.saturated, "the xGMI link must saturate");
-    assert!(
-        link.measured_total_gbs <= link.link_bw_gbs * 1.001,
-        "simulated link traffic {} exceeds capacity {} — this would be offered demand",
-        link.measured_total_gbs,
-        link.link_bw_gbs
-    );
-    assert!(
-        link.measured_total_gbs > 0.9 * link.link_bw_gbs,
-        "a saturated link must run near capacity (got {})",
-        link.measured_total_gbs
-    );
-    // The model link grant respects the same capacity.
-    assert!(link.model_total_gbs <= link.link_bw_gbs * (1.0 + 1e-9));
+    // One LinkResult per duplex direction.
+    assert_eq!(case.links.len(), 2);
+    assert_eq!(case.links[0].sockets, (0, 1));
+    assert_eq!(case.links[1].sockets, (1, 0));
+    for link in &case.links {
+        // Offered demand still exceeds each direction's capacity...
+        assert!(link.saturated, "offered demand exceeds per-direction capacity");
+        assert!(
+            link.measured_total_gbs <= link.link_bw_gbs * 1.001,
+            "simulated link traffic {} exceeds capacity {} — this would be offered demand",
+            link.measured_total_gbs,
+            link.link_bw_gbs
+        );
+        // ...but the lockstep streams are memory-gated well below it
+        // (mirror: 37.536 GB/s per direction against the 64 GB/s cap).
+        assert!(
+            link.measured_total_gbs > 0.5 * link.link_bw_gbs
+                && link.measured_total_gbs < 0.7 * link.link_bw_gbs,
+            "per-direction traffic should be memory-gated near 0.59x capacity (got {})",
+            link.measured_total_gbs
+        );
+        // Simulated crossings track the model's effective link grant.
+        let rel = (link.measured_total_gbs - link.model_total_gbs).abs()
+            / link.model_total_gbs;
+        assert!(rel < 0.08, "link {} vs model {}", link.measured_total_gbs, link.model_total_gbs);
+        assert!(link.model_total_gbs <= link.link_bw_gbs * (1.0 + 1e-9));
+    }
+    // Scatter symmetry: both directions carry the same traffic.
+    let (a, b) = (case.links[0].measured_total_gbs, case.links[1].measured_total_gbs);
+    assert!((a - b).abs() < 0.01 * a, "duplex symmetry: {a} vs {b}");
 }
 
-/// DES cross-check of the link-gated case at a loose band (stochastic
+/// DES cross-check of the remote spread case at a loose band (stochastic
 /// arbitration + tandem-queue discretization): per-core within 10% of the
-/// fluid engine, link capped.
+/// fluid engine (mirror: 4.6%), every directed link capped.
 #[test]
-fn link_gated_des_agrees_with_fluid() {
+fn remote_spread_des_agrees_with_fluid() {
     let m = machine(MachineId::Rome);
     let topo = Topology::parse(&m, "2x4").unwrap();
     let mix = Mix::parse("dcopy:16@scatter%r0.5").unwrap();

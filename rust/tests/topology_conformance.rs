@@ -290,21 +290,24 @@ fn rome_2x4_remote_scenario_end_to_end() {
             }
             assert!(dr.b_mix_gbs > 0.0);
         }
-        // Per-link shares: the single xGMI link carries traffic both ways.
-        assert_eq!(phase.links.len(), 1, "one socket pair, one link");
-        let link = &phase.links[0];
-        assert_eq!(link.sockets, (0, 1));
-        assert_eq!(link.link_bw_gbs.to_bits(), m.link_bw_gbs.to_bits());
-        assert!(link.model_total_gbs > 0.0);
-        assert!(link.measured_total_gbs > 0.0);
-        assert!(
-            link.model_total_gbs <= link.link_bw_gbs * (1.0 + 1e-9),
-            "model grant {} cannot exceed the link capacity {}",
-            link.model_total_gbs,
-            link.link_bw_gbs
-        );
-        let alpha_sum: f64 = link.groups.iter().map(|g| g.model_alpha).sum();
-        assert!((alpha_sum - 1.0).abs() < 1e-9, "link alpha sum {alpha_sum}");
+        // Per-link shares: both phases drive traffic both ways across the
+        // duplex xGMI link, so both directed interfaces report.
+        assert_eq!(phase.links.len(), 2, "one socket pair, two directed interfaces");
+        assert_eq!(phase.links[0].sockets, (0, 1));
+        assert_eq!(phase.links[1].sockets, (1, 0));
+        for link in &phase.links {
+            assert_eq!(link.link_bw_gbs.to_bits(), m.link_bw_gbs.to_bits());
+            assert!(link.model_total_gbs > 0.0);
+            assert!(link.measured_total_gbs > 0.0);
+            assert!(
+                link.model_total_gbs <= link.link_bw_gbs * (1.0 + 1e-9),
+                "model grant {} cannot exceed the direction capacity {}",
+                link.model_total_gbs,
+                link.link_bw_gbs
+            );
+            let alpha_sum: f64 = link.groups.iter().map(|g| g.model_alpha).sum();
+            assert!((alpha_sum - 1.0).abs() < 1e-9, "link alpha sum {alpha_sum}");
+        }
         // Socket aggregates cover every original group.
         assert_eq!(phase.socket.len(), phase.mix.groups.len());
         assert!(phase.measured_total_gbs > 0.0);
@@ -315,7 +318,7 @@ fn rome_2x4_remote_scenario_end_to_end() {
     // split streams: the slowest-portion rule amplifies the fluid engine's
     // depth-floor generosity towards tiny remote portions (a real
     // second-order effect the thread-weighted model ignores), so only a
-    // loose band is pinned here — the *link-gated homogeneous* case is
+    // loose band is pinned here — the *homogeneous* remote case is
     // pinned at the 8% ceiling in rust/tests/simulator_conformance.rs.
     for phase in &rs.phases {
         for g in &phase.socket {

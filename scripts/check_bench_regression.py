@@ -1,0 +1,178 @@
+#!/usr/bin/env python3
+"""Bench regression gate: compare a fresh `repro bench` run against the
+committed baselines and fail on a >15% throughput drop.
+
+Metrics (higher is better):
+
+* ``BENCH_cosim.json``   — ``events_per_s`` of every co-sim variant and
+  ``scenario.cases_per_s`` of the scenario sweep;
+* ``BENCH_multi_iface.json`` — ``cases_per_s`` of the multi-interface
+  pipeline and of its single-interface baseline sweep.
+
+Usage::
+
+    # gate (CI): compare results/ against benchmarks/baselines/
+    python3 scripts/check_bench_regression.py \
+        --results results --baselines benchmarks/baselines \
+        --report results/BENCH_regression_report.json
+
+    # refresh the baselines from a trusted run, then commit them
+    python3 scripts/check_bench_regression.py --results results \
+        --baselines benchmarks/baselines --update
+
+Behaviour:
+
+* missing baseline files (fresh clone, first run) → SKIP with exit 0, so
+  the gate is safe to wire into CI before baselines are committed;
+* a ``mode`` mismatch (``smoke`` vs ``full``) between run and baseline →
+  SKIP that file (the two modes are not comparable);
+* speed-ups are reported but never fail;
+* the comparison report is written as JSON (``--report``) so CI can
+  upload it as an artifact next to the bench output itself.
+
+Wall-clock noise on shared CI runners is real; the 15% threshold is
+deliberately loose — it catches algorithmic regressions (an accidental
+O(n^2), a lost cache), not scheduler jitter.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+from pathlib import Path
+
+# >15% slower than the committed baseline fails the gate.
+THRESHOLD = 0.15
+
+GATED_FILES = ["BENCH_cosim.json", "BENCH_multi_iface.json"]
+
+
+def metrics_of(name: str, doc: dict) -> dict[str, float]:
+    """Flatten one bench JSON into {metric key: throughput}."""
+    out: dict[str, float] = {}
+    if name == "BENCH_cosim.json":
+        for row in doc.get("cosim", []):
+            out[f"cosim[{row['variant']}].events_per_s"] = float(row["events_per_s"])
+        if "scenario" in doc:
+            out["scenario.cases_per_s"] = float(doc["scenario"]["cases_per_s"])
+    elif name == "BENCH_multi_iface.json":
+        out["multi_iface.cases_per_s"] = float(doc["multi_iface"]["cases_per_s"])
+        out["single_iface_baseline.cases_per_s"] = float(
+            doc["single_iface_baseline"]["cases_per_s"]
+        )
+    return out
+
+
+def compare(results_dir: Path, baselines_dir: Path) -> tuple[list[dict], list[str]]:
+    """Return (per-metric comparison rows, skip notes)."""
+    rows: list[dict] = []
+    skipped: list[str] = []
+    for name in GATED_FILES:
+        cur_path = results_dir / name
+        base_path = baselines_dir / name
+        if not cur_path.exists():
+            skipped.append(f"{name}: no fresh result at {cur_path} (run `repro bench` first)")
+            continue
+        if not base_path.exists():
+            skipped.append(
+                f"{name}: no committed baseline at {base_path} (seed with --update)"
+            )
+            continue
+        cur = json.loads(cur_path.read_text())
+        base = json.loads(base_path.read_text())
+        if cur.get("mode") != base.get("mode"):
+            skipped.append(
+                f"{name}: mode mismatch (run {cur.get('mode')!r} vs baseline "
+                f"{base.get('mode')!r}) — not comparable"
+            )
+            continue
+        cur_m = metrics_of(name, cur)
+        base_m = metrics_of(name, base)
+        for key in sorted(base_m):
+            if key not in cur_m:
+                skipped.append(f"{name}: metric {key} gone from the fresh run")
+                continue
+            b, c = base_m[key], cur_m[key]
+            ratio = c / b if b > 0 else float("inf")
+            rows.append(
+                {
+                    "file": name,
+                    "metric": key,
+                    "baseline": b,
+                    "current": c,
+                    "ratio": ratio,
+                    "regressed": ratio < 1.0 - THRESHOLD,
+                }
+            )
+    return rows, skipped
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--results", type=Path, default=Path("results"))
+    ap.add_argument("--baselines", type=Path, default=Path("benchmarks/baselines"))
+    ap.add_argument("--report", type=Path, default=None, help="write comparison JSON here")
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="copy the fresh results over the baselines instead of gating",
+    )
+    args = ap.parse_args()
+
+    if args.update:
+        args.baselines.mkdir(parents=True, exist_ok=True)
+        copied = []
+        for name in GATED_FILES:
+            src = args.results / name
+            if src.exists():
+                shutil.copyfile(src, args.baselines / name)
+                copied.append(name)
+        if not copied:
+            print(f"nothing to update: no bench JSON under {args.results}")
+            return 1
+        print(f"baselines refreshed from {args.results}: {', '.join(copied)}")
+        return 0
+
+    rows, skipped = compare(args.results, args.baselines)
+
+    for note in skipped:
+        print(f"SKIP  {note}")
+    regressions = [r for r in rows if r["regressed"]]
+    for r in rows:
+        tag = "FAIL" if r["regressed"] else "ok  "
+        print(
+            f"{tag}  {r['file']} {r['metric']}: {r['current']:.1f} vs "
+            f"baseline {r['baseline']:.1f} ({(r['ratio'] - 1.0) * 100:+.1f}%)"
+        )
+
+    if args.report is not None:
+        args.report.parent.mkdir(parents=True, exist_ok=True)
+        args.report.write_text(
+            json.dumps(
+                {
+                    "threshold": THRESHOLD,
+                    "comparisons": rows,
+                    "skipped": skipped,
+                    "regressions": len(regressions),
+                },
+                indent=2,
+            )
+            + "\n"
+        )
+        print(f"report written to {args.report}")
+
+    if regressions:
+        print(
+            f"{len(regressions)} metric(s) regressed by more than "
+            f"{THRESHOLD:.0%} — failing the gate"
+        )
+        return 1
+    if not rows:
+        print("no comparable metrics (baselines not seeded yet) — gate passes vacuously")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
