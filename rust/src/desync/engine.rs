@@ -57,6 +57,33 @@ impl Default for CoSimConfig {
     }
 }
 
+/// Engine-internal efficiency counters of one co-simulation run (all zero
+/// on the legacy stepper, which predates the caches it counts).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SimStats {
+    /// Node re-ratings the coupled remote path performed: one per dirty
+    /// node per refresh on the incremental path, one per node per refresh
+    /// on the full-recompute reference.
+    pub rate_evals: u64,
+    /// Node re-ratings skipped because the node's composition was clean —
+    /// the incremental path's savings. Always zero on the full-recompute
+    /// reference and on runs without remote traffic.
+    pub node_rates_reused: u64,
+    /// Aggregated composition-memo hits over the per-domain
+    /// [`crate::sharing::ShareCache`]s (independent-domain path).
+    pub share_hits: u64,
+    /// Aggregated composition-memo misses over the per-domain
+    /// [`crate::sharing::ShareCache`]s.
+    pub share_misses: u64,
+    /// Composition-memo hits of the [`crate::sharing::RemoteRateModel`]
+    /// (coupled path; identical cluster nodes share one memo).
+    pub remote_hits: u64,
+    /// Composition-memo misses of the remote rate model.
+    pub remote_misses: u64,
+    /// Live entries in the remote rate model's memo at the end of the run.
+    pub remote_entries: usize,
+}
+
 /// Result of a co-simulation.
 #[derive(Debug, Clone)]
 pub struct CoSimResult {
@@ -69,6 +96,8 @@ pub struct CoSimResult {
     /// Simulation effort: events processed by the timeline engine, or time
     /// steps executed by the legacy stepper.
     pub events: u64,
+    /// Cache and re-rating counters (surfaced in `repro bench` payloads).
+    pub stats: SimStats,
 }
 
 /// The engine.
@@ -232,6 +261,21 @@ impl<'a> CoSimEngine<'a> {
             &self.config,
             &self.chars_dense(),
             &self.layout,
+        )
+    }
+
+    /// Run with the full-recompute rating reference
+    /// ([`timeline::RatingMode::FullRecompute`]): every refresh re-rates
+    /// every node. Pinned bit-identical to [`CoSimEngine::run`]; exists so
+    /// `repro bench` can measure the incremental path's speedup.
+    pub fn run_full_recompute(&self) -> CoSimResult {
+        timeline::simulate_placed_mode(
+            &self.program,
+            self.n_ranks,
+            &self.config,
+            &self.chars_dense(),
+            &self.layout,
+            timeline::RatingMode::FullRecompute,
         )
     }
 

@@ -244,5 +244,11 @@ pub fn run_stepped(
         t += dt;
     }
 
-    CoSimResult { trace, finish_s: finish, t_end_s: t, events: steps }
+    CoSimResult {
+        trace,
+        finish_s: finish,
+        t_end_s: t,
+        events: steps,
+        stats: crate::desync::SimStats::default(),
+    }
 }

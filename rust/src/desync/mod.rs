@@ -28,7 +28,7 @@ mod noise;
 mod program;
 mod trace;
 
-pub use engine::{CoSimConfig, CoSimEngine, CoSimResult};
+pub use engine::{CoSimConfig, CoSimEngine, CoSimResult, SimStats};
 pub use noise::{NoiseModel, NoiseStream};
 pub use program::{hpcg_program, HpcgVariant, Phase, Program, SyncKind};
 pub use trace::{ConcurrencyPoint, PhaseRecord, TraceLog};

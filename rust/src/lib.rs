@@ -11,6 +11,8 @@
 //!   experiment configuration,
 //! * [`kernels`] — the loop-kernel substrate (Table II): stream signatures
 //!   and layer-condition analysis,
+//! * [`parallel`] — the dependency-free lock-free worker pool shared by
+//!   the scenario pipeline and the component-parallel DES,
 //! * [`ecm`] — the Execution-Cache-Memory model used by the paper to predict
 //!   single-core runtime, the memory request fraction `f` (Eq. 2) and the
 //!   multicore scaling behaviour,
@@ -58,6 +60,7 @@ pub mod desync;
 pub mod ecm;
 pub mod error;
 pub mod kernels;
+pub mod parallel;
 pub mod report;
 pub mod runtime;
 pub mod scenario;

@@ -9,7 +9,7 @@
 //! repro pair --machine M --k1 A --k2 B --n1 X --n2 Y [--engine E]
 //! repro scenarios [--machine M] [--engine E] [--out results/]
 //!                 [--mix "dcopy:4+ddot2:4+idle:2 / dcopy:8+stream:2"]
-//!                 [--topology domain|socket|<D>|<S>x<D>|snc<N>|<S>xsnc<N>]
+//!                 [--topology domain|socket|<D>|<S>x<D>|snc<N>|<S>xsnc<N>|<N>n<spec>]
 //!                 [--placement compact|scatter] [--remote-frac F]
 //!                 [--name NAME]            # k-group share tables
 //!                 # topology mixes take @dN / @scatter / @compact pins and
@@ -18,10 +18,11 @@
 //! repro experiment <table2|fig1|fig3|fig4|fig6|fig7|fig8|fig9|all>
 //!                  [--engine fluid|des|pjrt] [--out results/]
 //! repro hpcg [--variant plain|modified] [--machine M] [--ranks N]
-//!            [--topology domain|socket|<D>|<S>x<D>|snc<N>|<S>xsnc<N>]
+//!            [--topology domain|socket|<D>|<S>x<D>|snc<N>|<S>xsnc<N>|<N>n<spec>]
 //!            [--placement compact|scatter] [--remote-frac F]
 //!            [--engine ecm|fluid|des|pjrt]   # characterization source
-//! repro bench [--mode smoke|full] [--out results/]   # BENCH_{cosim,topology,multi_iface}.json
+//! repro bench [--mode smoke|full] [--out results/]
+//!             # BENCH_{cosim,topology,multi_iface,cluster}.json
 //! repro dump-configs <dir>              # write machine TOMLs
 //! repro selftest                        # PJRT artifact vs rust engines
 //! ```
@@ -35,12 +36,12 @@ use std::path::PathBuf;
 use std::time::Instant;
 
 use membw::config::{builtin_machines, machine, machine_by_name, machine_to_toml, MachineId};
-use membw::desync::{hpcg_program, CoSimConfig, CoSimEngine, HpcgVariant, NoiseModel};
+use membw::desync::{hpcg_program, CoSimConfig, CoSimEngine, HpcgVariant, NoiseModel, SimStats};
 use membw::error::Result;
 use membw::kernels::{all_kernels, kernel, KernelId};
 use membw::report::{self, ExperimentCtx};
 use membw::runtime::{ArtifactPaths, PjrtRuntime, PjrtSimExecutor, SimCase};
-use membw::scenario::{run_mixes, run_mixes_on, CharSource, Mix, Scenario};
+use membw::scenario::{run_mixes, run_mixes_on, CharCache, CharSource, Mix, Scenario};
 use membw::simulator::{measure_f_bs, measure_pairing, CoreWorkload, Engine};
 use membw::sweep::{run_cases, MeasureEngine, PairingCase};
 use membw::topology::{GroupPlacement, Placement, Topology};
@@ -139,7 +140,8 @@ run `repro experiment all --out results/` to regenerate every table and figure;\
   runs a dual-socket Rome with remote accesses crossing the xGMI link (per-link tables);\n\
 `repro hpcg --machine rome --topology socket` co-simulates a full 32-rank Rome socket;\n\
 `repro bench` runs the fixed-seed benchmarks and writes BENCH_cosim.json,\n\
-  BENCH_topology.json and BENCH_multi_iface.json;\n\
+  BENCH_topology.json, BENCH_multi_iface.json and BENCH_cluster.json\n\
+  (the 64-node cluster co-sim: incremental re-rating vs full recompute);\n\
 see docs/CLI.md for every flag with sample output.";
 
 fn cmd_machines() -> Result<()> {
@@ -234,7 +236,8 @@ fn parse_remote_frac(f: &HashMap<String, String>) -> Result<Option<f64>> {
 /// Measure a k-group workload mix (or `/`-separated scenario) and print the
 /// per-group share table. Without `--mix`, runs the built-in demo scenario
 /// scaled to the machine. With `--topology socket` (or `<D>`, `<S>x<D>`,
-/// `snc<N>`) the mix is resolved onto the ccNUMA domains by `--placement`
+/// `snc<N>`, a `<N>n<spec>` cluster) the mix is resolved onto the ccNUMA
+/// domains by `--placement`
 /// compact|scatter (plus any `@dN` pins in the mix) and per-domain +
 /// socket-aggregate tables are printed; `--remote-frac F` (or per-group
 /// `%rF` suffixes) splits cache-line streams over remote domains and the
@@ -459,10 +462,15 @@ fn cmd_hpcg(f: &HashMap<String, String>) -> Result<()> {
 
 /// Fixed-seed performance benchmarks: the Fig. 3 co-simulation, a
 /// scenario-pipeline workload, the 4-domain Rome-socket topology co-sim,
-/// and the multi-interface remote-access pipeline vs its single-interface
-/// baseline. Emits `BENCH_cosim.json`, `BENCH_topology.json`, and
-/// `BENCH_multi_iface.json` under `--out` (CI uploads all as artifacts
-/// and checks their existence).
+/// the multi-interface remote-access pipeline vs its single-interface
+/// baseline, and the 64-node cluster co-sim (incremental re-rating vs the
+/// full-recompute reference). Emits `BENCH_cosim.json`,
+/// `BENCH_topology.json`, `BENCH_multi_iface.json`, and
+/// `BENCH_cluster.json` under `--out` (CI uploads all as artifacts,
+/// checks their existence, and gates events/s regressions against the
+/// committed baselines). Every payload carries the cache counters of the
+/// run: the shared characterization cache plus, for co-sims, the
+/// per-domain share memos and the remote rate-model memo.
 fn cmd_bench(f: &HashMap<String, String>) -> Result<()> {
     let out_dir = PathBuf::from(f.get("out").cloned().unwrap_or_else(|| "results".into()));
     let smoke = match f.get("mode").map(String::as_str) {
@@ -496,7 +504,30 @@ fn cmd_bench(f: &HashMap<String, String>) -> Result<()> {
         records: usize,
         legacy_wall_s: Option<f64>,
         speedup: Option<f64>,
+        stats: SimStats,
     }
+    // Cache counters as a JSON object, shared by every BENCH payload.
+    let stats_json = |s: &SimStats| {
+        format!(
+            "{{ \"rate_evals\": {}, \"node_rates_reused\": {}, \"share_hits\": {}, \
+             \"share_misses\": {}, \"remote_hits\": {}, \"remote_misses\": {}, \
+             \"remote_entries\": {} }}",
+            s.rate_evals,
+            s.node_rates_reused,
+            s.share_hits,
+            s.share_misses,
+            s.remote_hits,
+            s.remote_misses,
+            s.remote_entries,
+        )
+    };
+    let char_cache_json = || {
+        let s = CharCache::global().stats();
+        format!(
+            "{{ \"hits\": {}, \"misses\": {}, \"entries\": {} }}",
+            s.hits, s.misses, s.entries
+        )
+    };
     let mut cosim_rows: Vec<CosimRow> = Vec::new();
     for (tag, noise) in [("noise_off", NoiseModel::off()), ("mild7", NoiseModel::mild(7))] {
         let prog = hpcg_program(HpcgVariant::Modified, 96, 3);
@@ -542,6 +573,7 @@ fn cmd_bench(f: &HashMap<String, String>) -> Result<()> {
             records: warm.trace.records.len(),
             legacy_wall_s: legacy_wall,
             speedup,
+            stats: warm.stats,
         });
     }
 
@@ -658,13 +690,14 @@ fn cmd_bench(f: &HashMap<String, String>) -> Result<()> {
         })
         .collect();
     let topo_json = format!(
-        "{{\n  \"mode\": \"{}\",\n  \"cosim\": [\n{}\n  ],\n  \"scenario\": {{\n    \"engine\": \"fluid\",\n    \"topology\": \"{}\",\n    \"cases\": {},\n    \"wall_s\": {:.6},\n    \"cases_per_s\": {:.1}\n  }}\n}}\n",
+        "{{\n  \"mode\": \"{}\",\n  \"cosim\": [\n{}\n  ],\n  \"scenario\": {{\n    \"engine\": \"fluid\",\n    \"topology\": \"{}\",\n    \"cases\": {},\n    \"wall_s\": {:.6},\n    \"cases_per_s\": {:.1}\n  }},\n  \"char_cache\": {}\n}}\n",
         if smoke { "smoke" } else { "full" },
         topo_json_rows.join(",\n"),
         rome_socket.label(),
         topo_mixes.len(),
         topo_scen_wall,
         topo_cases_per_s,
+        char_cache_json(),
     );
     let topo_path = out_dir.join("BENCH_topology.json");
     std::fs::write(&topo_path, &topo_json)?;
@@ -730,7 +763,7 @@ fn cmd_bench(f: &HashMap<String, String>) -> Result<()> {
         })
         .collect();
     let multi_json = format!(
-        "{{\n  \"mode\": \"{}\",\n  \"multi_iface\": {{\n    \"engine\": \"fluid\",\n    \"topology\": \"{}\",\n    \"link_capacity_gbs\": {:.1},\n    \"cases\": {},\n    \"wall_s\": {:.6},\n    \"cases_per_s\": {:.1}\n  }},\n  \"single_iface_baseline\": {{\n    \"engine\": \"fluid\",\n    \"cases\": {},\n    \"wall_s\": {:.6},\n    \"cases_per_s\": {:.1}\n  }},\n  \"case_detail\": [\n{}\n  ]\n}}\n",
+        "{{\n  \"mode\": \"{}\",\n  \"multi_iface\": {{\n    \"engine\": \"fluid\",\n    \"topology\": \"{}\",\n    \"link_capacity_gbs\": {:.1},\n    \"cases\": {},\n    \"wall_s\": {:.6},\n    \"cases_per_s\": {:.1}\n  }},\n  \"single_iface_baseline\": {{\n    \"engine\": \"fluid\",\n    \"cases\": {},\n    \"wall_s\": {:.6},\n    \"cases_per_s\": {:.1}\n  }},\n  \"case_detail\": [\n{}\n  ],\n  \"char_cache\": {}\n}}\n",
         if smoke { "smoke" } else { "full" },
         rome2.label(),
         rome.link_bw_gbs,
@@ -741,17 +774,107 @@ fn cmd_bench(f: &HashMap<String, String>) -> Result<()> {
         single_wall,
         single_cases_per_s,
         case_rows.join(",\n"),
+        char_cache_json(),
     );
     let multi_path = out_dir.join("BENCH_multi_iface.json");
     std::fs::write(&multi_path, &multi_json)?;
     println!("wrote {}", multi_path.display());
+
+    // --- cluster co-sim: a 64-node fleet of NPS4 Rome sockets (256
+    // domains, 2048 ranks) with inter-domain remote traffic inside every
+    // node. The incremental path (interface-composition
+    // fingerprints: only nodes whose group composition changed are
+    // re-rated) is timed against the full-recompute reference, which
+    // re-rates all 64 nodes on every refresh. The two rating modes are
+    // pinned bit-identical first, so the events/s ratio is pure engine
+    // speedup, not a model change. Emitted as BENCH_cluster.json (CI
+    // checks its existence and gates events/s regressions) ---
+    let cluster = Topology::parse(&rome, "64n1x4")?;
+    let cluster_ranks = cluster.total_cores();
+    let cluster_frac = 0.25;
+    let cluster_iters = if smoke { 2 } else { 3 };
+    let cprog = hpcg_program(HpcgVariant::Modified, 96, cluster_iters);
+    let ceng = CoSimEngine::with_topology_remote(
+        &rome,
+        &cluster,
+        Placement::Compact,
+        cluster_frac,
+        cprog,
+        cluster_ranks,
+        fig3_cfg(NoiseModel::mild(7)),
+        &CharSource::Ecm,
+    )?;
+    let cwarm = ceng.run(); // warm-up (characterization + composition memos)
+    let cfull = ceng.run_full_recompute();
+    assert_eq!(cfull.events, cwarm.events, "rating modes must process identical event streams");
+    assert!(
+        cfull.finish_s.iter().zip(&cwarm.finish_s).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "incremental re-rating must be bit-identical to the full-recompute reference"
+    );
+    let mut cwalls = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let r = ceng.run();
+        cwalls.push(t0.elapsed().as_secs_f64());
+        assert_eq!(r.events, cwarm.events, "cluster co-sim must be deterministic");
+    }
+    let cluster_wall = membw::stats::median(&cwalls);
+    let mut fwalls = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let r = ceng.run_full_recompute();
+        fwalls.push(t0.elapsed().as_secs_f64());
+        assert_eq!(r.events, cwarm.events, "cluster co-sim must be deterministic");
+    }
+    let full_wall = membw::stats::median(&fwalls);
+    let cluster_eps = cwarm.events as f64 / cluster_wall;
+    let full_eps = cwarm.events as f64 / full_wall;
+    let cluster_speedup = full_wall / cluster_wall;
+    println!(
+        "cluster co-sim ({}, {} nodes, {} ranks, %r{}): incremental {:.1} ms ({:.2e} events/s), \
+         full-recompute {:.1} ms ({:.2e} events/s) — speedup {:.1}x; \
+         {} node ratings skipped, {} performed",
+        cluster.label(),
+        cluster.nodes,
+        cluster_ranks,
+        cluster_frac,
+        cluster_wall * 1e3,
+        cluster_eps,
+        full_wall * 1e3,
+        full_eps,
+        cluster_speedup,
+        cwarm.stats.node_rates_reused,
+        cwarm.stats.rate_evals,
+    );
+    let cluster_json = format!(
+        "{{\n  \"mode\": \"{}\",\n  \"cluster\": {{\n    \"topology\": \"{}\",\n    \"nodes\": {},\n    \"domains\": {},\n    \"ranks\": {},\n    \"remote_frac\": {},\n    \"hpcg_iterations\": {},\n    \"events\": {},\n    \"wall_s\": {:.6},\n    \"events_per_s\": {:.1},\n    \"full_recompute_wall_s\": {:.6},\n    \"full_recompute_events_per_s\": {:.1},\n    \"speedup_vs_full\": {:.3},\n    \"stats\": {},\n    \"full_recompute_stats\": {}\n  }},\n  \"char_cache\": {}\n}}\n",
+        if smoke { "smoke" } else { "full" },
+        cluster.label(),
+        cluster.nodes,
+        cluster.n_domains(),
+        cluster_ranks,
+        cluster_frac,
+        cluster_iters,
+        cwarm.events,
+        cluster_wall,
+        cluster_eps,
+        full_wall,
+        full_eps,
+        cluster_speedup,
+        stats_json(&cwarm.stats),
+        stats_json(&cfull.stats),
+        char_cache_json(),
+    );
+    let cluster_path = out_dir.join("BENCH_cluster.json");
+    std::fs::write(&cluster_path, &cluster_json)?;
+    println!("wrote {}", cluster_path.display());
 
     let json_opt = |x: Option<f64>| x.map(|v| format!("{v:.6}")).unwrap_or_else(|| "null".into());
     let cosim_json: Vec<String> = cosim_rows
         .iter()
         .map(|row| {
             format!(
-                "    {{\n      \"variant\": \"fig3_clx_20ranks_nx96_it3_{}\",\n      \"wall_s\": {:.6},\n      \"events\": {},\n      \"events_per_s\": {:.1},\n      \"phase_records\": {},\n      \"legacy_wall_s\": {},\n      \"speedup_vs_legacy\": {}\n    }}",
+                "    {{\n      \"variant\": \"fig3_clx_20ranks_nx96_it3_{}\",\n      \"wall_s\": {:.6},\n      \"events\": {},\n      \"events_per_s\": {:.1},\n      \"phase_records\": {},\n      \"legacy_wall_s\": {},\n      \"speedup_vs_legacy\": {},\n      \"stats\": {}\n    }}",
                 row.tag,
                 row.wall_s,
                 row.events,
@@ -759,16 +882,18 @@ fn cmd_bench(f: &HashMap<String, String>) -> Result<()> {
                 row.records,
                 json_opt(row.legacy_wall_s),
                 json_opt(row.speedup),
+                stats_json(&row.stats),
             )
         })
         .collect();
     let json = format!(
-        "{{\n  \"mode\": \"{}\",\n  \"cosim\": [\n{}\n  ],\n  \"scenario\": {{\n    \"engine\": \"fluid\",\n    \"cases\": {},\n    \"wall_s\": {:.6},\n    \"cases_per_s\": {:.1}\n  }}\n}}\n",
+        "{{\n  \"mode\": \"{}\",\n  \"cosim\": [\n{}\n  ],\n  \"scenario\": {{\n    \"engine\": \"fluid\",\n    \"cases\": {},\n    \"wall_s\": {:.6},\n    \"cases_per_s\": {:.1}\n  }},\n  \"char_cache\": {}\n}}\n",
         if smoke { "smoke" } else { "full" },
         cosim_json.join(",\n"),
         mixes.len(),
         scen_wall,
         cases_per_s,
+        char_cache_json(),
     );
     let path = out_dir.join("BENCH_cosim.json");
     std::fs::write(&path, &json)?;

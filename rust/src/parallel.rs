@@ -1,0 +1,94 @@
+//! Dependency-free data parallelism: a dynamically scheduled, lock-free
+//! parallel map over OS threads.
+//!
+//! The build is offline (no rayon), so the crate carries its own minimal
+//! worker pool: an atomic ticket counter hands each input index to exactly
+//! one worker, results land in pre-sized per-index slots, and a thread
+//! scope joins everything before the slots are read back — rayon-style
+//! dynamic scheduling without the dependency. Shared by the scenario
+//! measurement pipeline (mix fan-out) and the multi-interface DES
+//! (independent connected components replay concurrently; see
+//! [`crate::simulator::NetDesSimulator`]).
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Dynamically scheduled parallel map over a slice (results in input order).
+///
+/// Workers pull the next index from a shared atomic counter, so long and
+/// short items balance automatically — the scheduling rayon's `par_iter`
+/// would give, without the dependency (offline build). Results go straight
+/// into pre-sized per-index slots: the atomic ticket makes each index the
+/// exclusive property of one worker, so the hot path takes no lock and
+/// needs no post-sort.
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    if items.len() <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let workers = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .min(items.len());
+    let next = AtomicUsize::new(0);
+
+    struct Slots<R>(Vec<UnsafeCell<Option<R>>>);
+    // SAFETY: each index is claimed by exactly one worker via the unique
+    // `fetch_add` ticket below, so no cell is ever aliased across threads;
+    // the thread scope joins all workers before the slots are read back.
+    unsafe impl<R: Send> Sync for Slots<R> {}
+
+    let slots: Slots<R> = Slots((0..items.len()).map(|_| UnsafeCell::new(None)).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i]);
+                // SAFETY: ticket `i` is unique to this worker (see above).
+                unsafe { *slots.0[i].get() = Some(r) };
+            });
+        }
+    });
+    slots
+        .0
+        .into_iter()
+        .map(|c| c.into_inner().expect("every slot written by a worker"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<usize> = (0..257).collect();
+        let out = par_map(&items, |&x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+        assert!(par_map(&[] as &[usize], |&x: &usize| x).is_empty());
+    }
+
+    #[test]
+    fn par_map_fills_every_slot_under_unbalanced_load() {
+        // Highly skewed per-item cost exercises the dynamic scheduling; a
+        // lost or duplicated ticket would leave a hole or wrong value.
+        let items: Vec<usize> = (0..503).collect();
+        let out = par_map(&items, |&x| {
+            if x % 97 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            x * x
+        });
+        assert_eq!(out.len(), items.len());
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+}

@@ -121,6 +121,17 @@ pub fn topology_scenario_report(
     for (pi, phase) in result.phases.iter().enumerate() {
         writeln!(out, "\nphase {}/{}: {}", pi + 1, result.phases.len(), phase.mix.label())
             .unwrap();
+        if phase.remote_converged == Some(false) {
+            // The gated remote fixed point hit its sweep cap: the model
+            // columns of this phase are the last iterate, not a fixed
+            // point — flag them instead of printing them as exact.
+            writeln!(
+                out,
+                "WARNING: remote fixed point did not converge within the sweep cap; \
+                 model columns are approximate"
+            )
+            .unwrap();
+        }
         let mut t = AsciiTable::new(&[
             "group", "kernel", "n", "meas/core", "model/core", "alpha model", "err%",
         ]);

@@ -250,6 +250,12 @@ pub struct TopoMixResult {
     pub measured_total_gbs: f64,
     /// Modeled aggregate bandwidth over the whole socket, GB/s.
     pub model_total_gbs: f64,
+    /// Whether the remote-access fixed point converged
+    /// ([`crate::sharing::RemoteShare::converged`]). `None` on the
+    /// all-local path (no fixed point runs); `Some(false)` marks model
+    /// columns that stopped at the sweep cap and should be read as
+    /// approximate.
+    pub remote_converged: Option<bool>,
 }
 
 impl TopoMixResult {
@@ -528,6 +534,7 @@ mod tests {
             links: vec![link],
             measured_total_gbs: 2.0 * d0.measured_total_gbs,
             model_total_gbs: 2.0 * d0.model_total_gbs,
+            remote_converged: None,
         };
         let header_cols = TopoMixResult::csv_header().split(',').count();
         let rows = topo.to_csv_rows();

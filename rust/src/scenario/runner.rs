@@ -13,13 +13,12 @@
 //! batched artifact dispatches. Kernel characterizations are served from the
 //! process-wide [`CharCache`].
 
-use std::cell::UnsafeCell;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::config::Machine;
 use crate::error::Result;
 use crate::kernels::{kernel, KernelId};
+use crate::parallel::par_map;
 use crate::runtime::{PjrtSimExecutor, SimCase};
 use crate::scenario::cache::{CharCache, EngineKind};
 use crate::scenario::results::{
@@ -75,56 +74,6 @@ impl MeasureEngine<'_> {
             MeasureEngine::Pjrt(_) => "pjrt",
         }
     }
-}
-
-/// Dynamically scheduled parallel map over a slice (results in input order).
-///
-/// Workers pull the next index from a shared atomic counter, so long and
-/// short items balance automatically — the scheduling rayon's `par_iter`
-/// would give, without the dependency (offline build). Results go straight
-/// into pre-sized per-index slots: the atomic ticket makes each index the
-/// exclusive property of one worker, so the hot path takes no lock and
-/// needs no post-sort.
-fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
-where
-    T: Sync,
-    R: Send,
-    F: Fn(&T) -> R + Sync,
-{
-    if items.len() <= 1 {
-        return items.iter().map(&f).collect();
-    }
-    let workers = std::thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(4)
-        .min(items.len());
-    let next = AtomicUsize::new(0);
-
-    struct Slots<R>(Vec<UnsafeCell<Option<R>>>);
-    // SAFETY: each index is claimed by exactly one worker via the unique
-    // `fetch_add` ticket below, so no cell is ever aliased across threads;
-    // the thread scope joins all workers before the slots are read back.
-    unsafe impl<R: Send> Sync for Slots<R> {}
-
-    let slots: Slots<R> = Slots((0..items.len()).map(|_| UnsafeCell::new(None)).collect());
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= items.len() {
-                    break;
-                }
-                let r = f(&items[i]);
-                // SAFETY: ticket `i` is unique to this worker (see above).
-                unsafe { *slots.0[i].get() = Some(r) };
-            });
-        }
-    });
-    slots
-        .0
-        .into_iter()
-        .map(|c| c.into_inner().expect("every slot written by a worker"))
-        .collect()
 }
 
 /// Per-core workload vector of a mix: kernel groups in order, idle cores
@@ -297,6 +246,7 @@ pub fn run_mixes_on(
             links: Vec::new(),
             measured_total_gbs: 0.0,
             model_total_gbs: 0.0,
+            remote_converged: None,
         })
         .collect();
 
@@ -638,6 +588,7 @@ fn run_mixes_on_remote(
             links: link_results,
             measured_total_gbs: 0.0,
             model_total_gbs: 0.0,
+            remote_converged: Some(share.converged),
         };
         aggregate_socket(&mut case, mx);
         cases.push(case);
@@ -666,31 +617,6 @@ pub fn run_scenario_on(
 mod tests {
     use super::*;
     use crate::config::{machine, MachineId};
-
-    #[test]
-    fn par_map_preserves_order() {
-        let items: Vec<usize> = (0..257).collect();
-        let out = par_map(&items, |&x| x * 2);
-        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
-        assert!(par_map(&[] as &[usize], |&x: &usize| x).is_empty());
-    }
-
-    #[test]
-    fn par_map_fills_every_slot_under_unbalanced_load() {
-        // Highly skewed per-item cost exercises the dynamic scheduling; a
-        // lost or duplicated ticket would leave a hole or wrong value.
-        let items: Vec<usize> = (0..503).collect();
-        let out = par_map(&items, |&x| {
-            if x % 97 == 0 {
-                std::thread::sleep(std::time::Duration::from_millis(2));
-            }
-            x * x
-        });
-        assert_eq!(out.len(), items.len());
-        for (i, v) in out.iter().enumerate() {
-            assert_eq!(*v, i * i);
-        }
-    }
 
     #[test]
     fn three_group_mix_measures_and_predicts() {

@@ -247,6 +247,11 @@ pub struct RemoteShare {
     /// Water-fill passes until convergence: 1 when no group was gated (the
     /// uncapped pass is already the fixed point), > 1 otherwise.
     pub iterations: usize,
+    /// Whether the fixed point actually converged (cap movement below
+    /// [`FIXED_POINT_TOL`]). `false` means the Gauss-Seidel iteration ran
+    /// into its sweep cap and the result is the last iterate — callers
+    /// surfacing model numbers should report that.
+    pub converged: bool,
 }
 
 /// Sweep cap of the fixed-point iteration. In practice gated scenarios
@@ -397,6 +402,17 @@ fn group_rate(groups: &[RemoteGroup], portions: &[Portion], f: &Fill, gi: usize)
 /// remote traffic sits on a single-domain shape, or when a home domain is
 /// out of range.
 pub fn share_remote(shape: &TopoShape, groups: &[RemoteGroup]) -> Result<RemoteShare> {
+    share_remote_with_cap(shape, groups, MAX_FIXED_POINT_SWEEPS)
+}
+
+/// [`share_remote`] with an explicit sweep cap — test hook for forcing the
+/// non-converged-at-cap path (`RemoteShare::converged == false`).
+#[doc(hidden)]
+pub fn share_remote_with_cap(
+    shape: &TopoShape,
+    groups: &[RemoteGroup],
+    max_sweeps: usize,
+) -> Result<RemoteShare> {
     let nd = shape.n_domains();
     let links = shape.links();
 
@@ -458,15 +474,16 @@ pub fn share_remote(shape: &TopoShape, groups: &[RemoteGroup]) -> Result<RemoteS
         }
     }
 
-    let (per_core_gbs, final_fill, iterations) = if !gated.iter().any(|&g| g) {
+    let (per_core_gbs, final_fill, iterations, converged) = if !gated.iter().any(|&g| g) {
         // No stranded capacity: pass 1 is already the fixed point.
-        (rates, first, 1)
+        (rates, first, 1, true)
     } else {
         // 4. Gauss-Seidel sweeps: re-fill with group g uncapped and every
         // other group capped at its current rate; g's resulting lockstep
         // rate becomes its new cap. Converged when no cap moves.
         let mut iterations = 1usize;
-        for _ in 0..MAX_FIXED_POINT_SWEEPS {
+        let mut converged = false;
+        for _ in 0..max_sweeps {
             let mut delta =
                 if caps.iter().any(|c| !c.is_finite()) { f64::INFINITY } else { 0.0 };
             for g in 0..k {
@@ -481,12 +498,13 @@ pub fn share_remote(shape: &TopoShape, groups: &[RemoteGroup]) -> Result<RemoteS
             }
             iterations += 1;
             if delta <= FIXED_POINT_TOL {
+                converged = true;
                 break;
             }
         }
         // Reporting fill with every group at its converged cap.
         let f = fill(shape, groups, &portions, &links, &caps);
-        (caps, f, iterations)
+        (caps, f, iterations, converged)
     };
 
     for (i, p) in portions.iter_mut().enumerate() {
@@ -507,6 +525,7 @@ pub fn share_remote(shape: &TopoShape, groups: &[RemoteGroup]) -> Result<RemoteS
         links: final_fill.links,
         portions,
         iterations,
+        converged,
     })
 }
 
@@ -674,6 +693,32 @@ mod tests {
         let old_b = old.groups[1].group_bw_gbs / 4.0;
         assert!((old_b - 16.0 / 3.0).abs() < 1e-12, "{old_b}");
         assert!(share.per_core_gbs[1] > old_b + 2.0, "fixed point must beat the stranded answer");
+        assert!(share.converged, "default sweep cap must suffice for this shape");
+    }
+
+    /// With the sweep cap forced to one, the gated fixed point cannot reach
+    /// its tolerance and the result must say so instead of silently
+    /// returning a partially relaxed answer.
+    #[test]
+    fn sweep_cap_exhaustion_is_reported() {
+        let shape = TopoShape {
+            socket_of: vec![0, 1],
+            bw_scale: vec![1.0, 1.0],
+            link_bw_gbs: 2.0,
+            link_bw_rev_gbs: 2.0,
+        };
+        let groups = [
+            RemoteGroup { home: 0, n: 4, f: 0.8, bs_gbs: 32.0, remote_frac: 0.5 },
+            RemoteGroup { home: 0, n: 4, f: 0.8, bs_gbs: 32.0, remote_frac: 0.0 },
+        ];
+        let capped = share_remote_with_cap(&shape, &groups, 1).unwrap();
+        assert!(!capped.converged, "one sweep from infinite caps cannot settle");
+        assert_eq!(capped.iterations, 2, "pass 1 plus the single allowed sweep");
+        // The ungated branch never sweeps, so a cap of zero still converges.
+        let ungated = [RemoteGroup { home: 0, n: 4, f: 0.8, bs_gbs: 32.0, remote_frac: 1.0 }];
+        let one_pass = share_remote_with_cap(&shape, &ungated, 0).unwrap();
+        assert!(one_pass.converged);
+        assert_eq!(one_pass.iterations, 1);
     }
 
     /// Opposing cross-socket streams ride different directed interfaces of

@@ -36,7 +36,11 @@
 //! by the shared windows of multi-portion streams); each component replays
 //! its own event loop with its own xorshift64* stream, so an `r = 0`
 //! multi-domain run is *bit-identical* to the independent per-domain runs
-//! of the single-interface engine. Each stream runs one issue process;
+//! of the single-interface engine. Components are replayed **in parallel**
+//! over the crate's lock-free worker pool into private per-component
+//! buffers — bit-identical to the serial replay
+//! ([`NetDesSimulator::run_serial`], pinned by a test), since components
+//! partition the interfaces and every component seeds its own RNG. Each stream runs one issue process;
 //! every issued line picks a portion by routing weight (one RNG draw,
 //! skipped for single-portion streams to preserve the seed draw sequence).
 //! A link-crossing line is served in tandem: first by the directed link
@@ -414,8 +418,24 @@ impl<'a> NetDesSimulator<'a> {
         NetDesSimulator { net, config }
     }
 
-    /// Run the DES for the given streams.
+    /// Run the DES for the given streams, replaying independent connected
+    /// components **in parallel** over the crate's lock-free worker pool
+    /// ([`crate::parallel::par_map`]). Each component owns private served /
+    /// busy-time buffers and its own xorshift stream, and components
+    /// partition the interfaces and portions, so the merged result is
+    /// bit-identical to [`NetDesSimulator::run_serial`] (pinned by a test).
     pub fn run(&self, streams: &[NetStream]) -> NetResult {
+        self.run_impl(streams, true)
+    }
+
+    /// The serial reference replay: identical physics, components replayed
+    /// one after another on the calling thread. Retained as the
+    /// determinism anchor for the parallel path.
+    pub fn run_serial(&self, streams: &[NetStream]) -> NetResult {
+        self.run_impl(streams, false)
+    }
+
+    fn run_impl(&self, streams: &[NetStream], parallel: bool) -> NetResult {
         let net = self.net;
         let nd = net.n_domains();
         let nl = net.links.len();
@@ -460,23 +480,54 @@ impl<'a> NetDesSimulator<'a> {
         roots.sort_unstable();
         roots.dedup();
 
-        let mut served = vec![0u64; np];
-        let mut mem_busy_accum = vec![0.0f64; nd];
-        let mut link_busy_accum = vec![0.0f64; nl];
-        let mut events: u64 = 0;
-        for &root in &roots {
-            let local: Vec<usize> =
-                (0..np).filter(|&i| comp_of_iface[portions[i].target] == root).collect();
-            events += run_des_component(
+        let comps: Vec<Vec<usize>> = roots
+            .iter()
+            .map(|&root| {
+                (0..np).filter(|&i| comp_of_iface[portions[i].target] == root).collect()
+            })
+            .collect();
+        // One private (served, mem-busy, link-busy) buffer set per
+        // component: components partition the portions and interfaces, so
+        // summing the zero-initialized buffers reproduces the serial
+        // accumulation bit for bit (every index is written by exactly one
+        // component). Each component seeds its own xorshift stream inside
+        // `run_des_component`, so replay order cannot matter either.
+        let run_one = |local: &Vec<usize>| {
+            let mut served = vec![0u64; np];
+            let mut mem_busy_accum = vec![0.0f64; nd];
+            let mut link_busy_accum = vec![0.0f64; nl];
+            let events = run_des_component(
                 net,
                 &self.config,
                 streams,
                 &portions,
-                &local,
+                local,
                 &mut served,
                 &mut mem_busy_accum,
                 &mut link_busy_accum,
             );
+            (events, served, mem_busy_accum, link_busy_accum)
+        };
+        let results = if parallel {
+            crate::parallel::par_map(&comps, run_one)
+        } else {
+            comps.iter().map(run_one).collect()
+        };
+        let mut served = vec![0u64; np];
+        let mut mem_busy_accum = vec![0.0f64; nd];
+        let mut link_busy_accum = vec![0.0f64; nl];
+        let mut events: u64 = 0;
+        for (ev, s, mb, lb) in &results {
+            events += ev;
+            for (acc, v) in served.iter_mut().zip(s) {
+                *acc += v;
+            }
+            for (acc, v) in mem_busy_accum.iter_mut().zip(mb) {
+                *acc += v;
+            }
+            for (acc, v) in link_busy_accum.iter_mut().zip(lb) {
+                *acc += v;
+            }
         }
 
         let cycles = self.config.measure_cycles;
@@ -864,6 +915,40 @@ mod tests {
         for (a, b) in rf.per_stream_gbs.iter().zip(&rd.per_stream_gbs) {
             let rel = (a - b).abs() / a;
             assert!(rel < 0.12, "fluid {a} vs DES {b}");
+        }
+    }
+
+    #[test]
+    fn parallel_component_replay_is_bit_identical_to_serial() {
+        // 8 domains at r = 0: every domain is its own connected component,
+        // so the parallel path replays 8 components concurrently. Served
+        // counts, busy times, and event totals must match the serial
+        // replay bit for bit (private per-component buffers + per-component
+        // RNG streams). A coupled r > 0 case (fewer, larger components)
+        // must match too.
+        let (m, topo) = two_socket_rome();
+        let net = IfaceNet::of_topology(&topo);
+        for r in [0.0, 0.25] {
+            let streams: Vec<NetStream> = (0..8)
+                .flat_map(|d| (0..4).map(move |_| d))
+                .map(|d| stream(KernelId::Dcopy, &m, d, r))
+                .collect();
+            let sim = NetDesSimulator::new(&net, DesConfig::default());
+            let par = sim.run(&streams);
+            let ser = sim.run_serial(&streams);
+            assert_eq!(par.events, ser.events, "r={r}");
+            for (a, b) in par.per_portion_gbs.iter().zip(&ser.per_portion_gbs) {
+                assert_eq!(a.to_bits(), b.to_bits(), "r={r}");
+            }
+            for (a, b) in par.per_stream_gbs.iter().zip(&ser.per_stream_gbs) {
+                assert_eq!(a.to_bits(), b.to_bits(), "r={r}");
+            }
+            for (a, b) in par.mem_utilization.iter().zip(&ser.mem_utilization) {
+                assert_eq!(a.to_bits(), b.to_bits(), "r={r}");
+            }
+            for (a, b) in par.link_utilization.iter().zip(&ser.link_utilization) {
+                assert_eq!(a.to_bits(), b.to_bits(), "r={r}");
+            }
         }
     }
 

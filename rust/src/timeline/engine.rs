@@ -24,10 +24,41 @@
 //! shared. The single-domain [`simulate`] is the degenerate
 //! [`RankLayout::single`] case, bit-identical to the pre-topology engine
 //! (pinned by the topology conformance suite).
+//!
+//! # Cluster scaling
+//!
+//! Three properties keep per-event cost independent of the topology size,
+//! so hundreds of nodes simulate interactively (`repro bench`,
+//! `BENCH_cluster.json`):
+//!
+//! * **Incremental re-rating.** Remote traffic couples the interfaces of
+//!   one *node*, never of the whole cluster: a cluster layout
+//!   ([`RankLayout::node_of`]) partitions its domains into identical
+//!   nodes, and drain rates are a pure function of the node's own group
+//!   composition. A refresh therefore re-rates only nodes whose
+//!   composition actually changed (`dirty` per domain, scoped per node) —
+//!   the historical path re-rated *every* domain of the shape on any
+//!   change. Within a re-rated node a composition fingerprint
+//!   (bitwise rate comparison against the memoized pure function) decides
+//!   which domains re-project their completion times; clean domains keep
+//!   their analytic projections, which stay valid because their integrals
+//!   advance at unchanged rates. [`RatingMode::FullRecompute`] retains the
+//!   every-node rating as a benchmark reference; both modes are pinned
+//!   bit-identical (same pure rates, same projections).
+//! * **Flat index-keyed state.** Integrals, counts, and rates are flat
+//!   `(domain, kernel)`-indexed arrays sized by the [`RankLayout`];
+//!   completion-heap entries and queue events are packed `u128` keys
+//!   (see [`crate::timeline::event`]); collective arrival counters are a
+//!   flat per-phase array. No per-event allocation, no pointer chasing.
+//! * **Lazy per-domain integral folding.** Integrals advance only when
+//!   *observed* — at a completion, a composition change, or a rate change
+//!   in their own domain — so an event touches O(affected domains ×
+//!   kernels) state, not O(all domains × kernels).
 
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
-use crate::desync::{CoSimConfig, CoSimResult, Phase, Program, SyncKind, TraceLog};
+use crate::desync::{CoSimConfig, CoSimResult, Phase, Program, SimStats, SyncKind, TraceLog};
 use crate::desync::{NoiseStream, PhaseRecord};
 use crate::kernels::KernelId;
 use crate::sharing::{RemoteRateModel, ShareCache, TopoShape};
@@ -39,6 +70,19 @@ use crate::topology::RankLayout;
 /// ulp; the slack corresponds to sub-nanosecond simulated time at GB/s
 /// rates).
 const EPS_REL: f64 = 1e-9;
+
+/// How the coupled remote-rate path re-rates on a composition change.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum RatingMode {
+    /// Re-rate only nodes with a dirty domain (the production path).
+    #[default]
+    Incremental,
+    /// Re-rate every node on every refresh — the retained reference the
+    /// incremental path is benchmarked against and pinned bit-identical to
+    /// (rates are pure functions of the node composition, so skipping a
+    /// clean node can never change a result).
+    FullRecompute,
+}
 
 /// How an idling rank resumes.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -74,37 +118,22 @@ enum PhaseInfo {
     Idle { duration: f64 },
 }
 
-/// Entry of a per-kernel completion FIFO (min-heap on target, then rank).
-#[derive(Debug, Clone, Copy)]
-struct GroupEntry {
-    target: f64,
-    rank: usize,
-    ver: u64,
+/// Pack a completion-heap entry into one `u128` whose ascending numeric
+/// order is `(target, rank, ver)` — targets are non-negative finite (the
+/// integrals only grow), which is the range where `f64::to_bits` is
+/// order-preserving. `ver` participates only for exact `(target, rank)`
+/// duplicates, where any order is correct (at most one entry is live).
+#[inline]
+fn pack_entry(target: f64, rank: usize, ver: u64) -> u128 {
+    debug_assert!(target.is_finite() && target >= 0.0, "completion target {target}");
+    debug_assert!(rank < (1usize << 32), "rank {rank} exceeds the 32-bit entry field");
+    ((target.to_bits() as u128) << 64) | ((rank as u128) << 32) | ((ver as u32) as u128)
 }
 
-impl PartialEq for GroupEntry {
-    fn eq(&self, other: &Self) -> bool {
-        self.cmp(other) == std::cmp::Ordering::Equal
-    }
-}
-
-impl Eq for GroupEntry {}
-
-impl PartialOrd for GroupEntry {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for GroupEntry {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // Reversed: BinaryHeap is a max-heap, we want the smallest target
-        // (then the lowest rank, matching the stepper's rank-order sweep).
-        other
-            .target
-            .total_cmp(&self.target)
-            .then_with(|| other.rank.cmp(&self.rank))
-    }
+/// `(target, rank, ver)` of a packed completion-heap entry.
+#[inline]
+fn entry_parts(key: u128) -> (f64, usize, u32) {
+    (f64::from_bits((key >> 64) as u64), ((key >> 32) & 0xFFFF_FFFF) as usize, key as u32)
 }
 
 struct Sim<'a> {
@@ -115,28 +144,35 @@ struct Sim<'a> {
     radius: usize,
     t_max: f64,
     stagger: f64,
+    mode: RatingMode,
 
     states: Vec<RankState>,
     completed: Vec<i64>,
     trace: TraceLog,
     finish: Vec<f64>,
     noise: Vec<NoiseStream>,
-    /// Collective flat index → ranks arrived so far.
-    collectives: HashMap<usize, usize>,
+    /// Ranks arrived so far, per collective flat phase index.
+    collective_arrived: Vec<u32>,
 
     queue: EventQueue,
     /// One memoized sharing model per ccNUMA domain (domains contend
     /// independently; a scaled domain's cache carries its scaled b_s).
     share: Vec<ShareCache>,
     /// The coupled remote-access rate model, when the layout carries a
-    /// nonzero remote fraction: remote traffic makes domains (and links)
-    /// interdependent, so rates come from one global evaluation instead of
-    /// the per-domain caches.
+    /// nonzero remote fraction. Remote traffic couples the interfaces of
+    /// one *node*, so the model is built on the per-node sub-shape and
+    /// evaluated once per dirty node (identical nodes share its
+    /// composition memo).
     remote: Option<RemoteRateModel>,
     /// Kernel slots per domain.
     nk: usize,
     /// Number of ccNUMA domains.
     nd: usize,
+    /// Cluster nodes (1 unless the layout carries a node partition and
+    /// remote traffic is active).
+    n_nodes: usize,
+    /// Domains per node (`nd` when `n_nodes == 1`).
+    dpn: usize,
     /// Domain of each rank.
     domain_of: Vec<usize>,
     /// Cores currently running each (domain, kernel) slot; `d * nk + k`.
@@ -145,8 +181,9 @@ struct Sim<'a> {
     integral: Vec<f64>,
     /// Current per-core drain rate per slot, bytes/s.
     rates: Vec<f64>,
-    /// Time the integrals were last folded forward.
-    t_rates: f64,
+    /// Per domain: time its integrals were last folded forward (lazy
+    /// folding — an untouched domain's integrals advance closed-form).
+    t_fold: Vec<f64>,
     /// Per domain: composition changed since the last refresh.
     dirty: Vec<bool>,
     /// Per domain: the analytic next-completion time under the current
@@ -154,9 +191,19 @@ struct Sim<'a> {
     t_complete: Vec<f64>,
     /// Per-rank guard for lazily dropped group-heap entries.
     run_ver: Vec<u64>,
-    /// Per-slot completion FIFOs.
-    groups: Vec<std::collections::BinaryHeap<GroupEntry>>,
+    /// Per-slot completion FIFOs over packed `(target, rank, ver)` keys.
+    groups: Vec<BinaryHeap<Reverse<u128>>>,
+    /// Scratch: one node's freshly rated slots (borrow decoupling).
+    scratch_rates: Vec<f64>,
+    /// Scratch: domains whose projected completion fires at the current
+    /// instant.
+    due: Vec<usize>,
+    /// Scratch: ranks whose `completed` advanced during the current event.
+    wake: Vec<usize>,
+    /// Scratch: the deduplicated halo-neighbourhood of `wake`.
+    wake_set: Vec<usize>,
     events: u64,
+    stats: SimStats,
 }
 
 /// Run the event-driven co-simulation on a single contention domain (the
@@ -184,13 +231,17 @@ pub fn simulate(
 /// When the layout carries a nonzero remote-access fraction
 /// ([`RankLayout::with_remote`]), drain rates come from the coupled
 /// remote model instead ([`crate::sharing::RemoteRateModel`]): each rank's
-/// stream splits over its home domain, the remote domains, and the
-/// inter-socket links, and any composition change re-evaluates every
-/// domain (the interfaces are no longer independent). Collective releases
-/// additionally pay the layout's inter-socket barrier latency
-/// (`collective_extra_s`; zero on single-socket layouts). An all-zero
-/// remote spec is normalized away, keeping the independent per-domain
-/// path bit-identical (pinned by the topology conformance suite).
+/// stream splits over its home domain, the remote domains of its *node*,
+/// and the inter-socket links, and a composition change re-evaluates the
+/// affected node (see the module docs on incremental re-rating). On a
+/// cluster layout ([`RankLayout::node_of`] non-uniform) the nodes must be
+/// identical — same socket pattern, bandwidth scales, and remote fractions
+/// per node — and remote traffic never leaves a node; nodes couple only
+/// through collectives. Collective releases additionally pay the layout's
+/// inter-socket barrier latency (`collective_extra_s`; zero on
+/// single-socket layouts). An all-zero remote spec is normalized away,
+/// keeping the independent per-domain path bit-identical (pinned by the
+/// topology conformance suite).
 pub fn simulate_placed(
     program: &Program,
     n_ranks: usize,
@@ -198,30 +249,82 @@ pub fn simulate_placed(
     chars: &[(KernelId, f64, f64)],
     layout: &RankLayout,
 ) -> CoSimResult {
+    simulate_placed_mode(program, n_ranks, config, chars, layout, RatingMode::Incremental)
+}
+
+/// [`simulate_placed`] with an explicit [`RatingMode`] — the
+/// `FullRecompute` reference exists for benchmarking and for pinning the
+/// incremental path (`repro bench` reports the speedup between the two).
+pub fn simulate_placed_mode(
+    program: &Program,
+    n_ranks: usize,
+    config: &CoSimConfig,
+    chars: &[(KernelId, f64, f64)],
+    layout: &RankLayout,
+    mode: RatingMode,
+) -> CoSimResult {
     let nd = layout.n_domains;
     assert_eq!(layout.rank_domain.len(), n_ranks, "layout must place every rank");
     assert_eq!(layout.bw_scale.len(), nd, "layout must scale every domain");
+    assert_eq!(layout.node_of.len(), nd, "layout must assign every domain to a node");
     assert!(layout.rank_domain.iter().all(|&d| d < nd), "rank placed on missing domain");
     let remote_active = layout
         .remote
         .as_ref()
         .is_some_and(|r| r.frac.iter().any(|&f| f > 0.0));
-    let remote = if remote_active {
+    let (remote, n_nodes, dpn) = if remote_active {
         let spec = layout.remote.as_ref().expect("checked above");
         assert_eq!(spec.frac.len(), nd, "remote spec must cover every domain");
         assert_eq!(layout.socket_of.len(), nd, "remote layouts must map domains to sockets");
-        Some(RemoteRateModel::new(
+        let n_nodes = layout.n_nodes();
+        let (n_nodes, dpn) = if n_nodes > 1 {
+            // Cluster layouts must be node-major and node-uniform: the
+            // per-node rate model (and its composition memo, shared by all
+            // nodes) is only a valid pure function of a node's composition
+            // when every node presents the same interface network.
+            assert_eq!(nd % n_nodes, 0, "node partition must divide the domains evenly");
+            let dpn = nd / n_nodes;
+            for (d, &node) in layout.node_of.iter().enumerate() {
+                assert_eq!(node, d / dpn, "cluster layouts must be node-major");
+            }
+            for i in 1..n_nodes {
+                let off = layout.socket_of[i * dpn] - layout.socket_of[0];
+                for j in 0..dpn {
+                    assert_eq!(
+                        layout.socket_of[i * dpn + j],
+                        layout.socket_of[j] + off,
+                        "cluster nodes must share one socket pattern"
+                    );
+                    assert_eq!(
+                        layout.bw_scale[i * dpn + j].to_bits(),
+                        layout.bw_scale[j].to_bits(),
+                        "cluster nodes must share one bandwidth profile"
+                    );
+                    assert_eq!(
+                        spec.frac[i * dpn + j].to_bits(),
+                        spec.frac[j].to_bits(),
+                        "cluster nodes must share one remote-traffic profile"
+                    );
+                }
+            }
+            (n_nodes, dpn)
+        } else {
+            (1, nd)
+        };
+        let socket_base = layout.socket_of[0];
+        let model = RemoteRateModel::new(
             TopoShape {
-                socket_of: layout.socket_of.clone(),
-                bw_scale: layout.bw_scale.clone(),
+                socket_of: layout.socket_of[..dpn].iter().map(|&s| s - socket_base).collect(),
+                bw_scale: layout.bw_scale[..dpn].to_vec(),
                 link_bw_gbs: layout.link_bw_gbs,
                 link_bw_rev_gbs: layout.link_bw_rev_gbs,
             },
-            spec.frac.clone(),
+            spec.frac[..dpn].to_vec(),
             chars.iter().map(|&(_, f, bs)| (f, bs)).collect(),
-        ))
+        );
+        (Some(model), n_nodes, dpn)
     } else {
-        None
+        (None, 1, nd)
     };
     let share: Vec<ShareCache> = layout
         .bw_scale
@@ -256,6 +359,7 @@ pub fn simulate_placed(
         })
         .collect();
 
+    let scratch_len = if remote.is_some() { dpn * nk } else { 0 };
     let sim = Sim {
         program,
         infos,
@@ -264,27 +368,35 @@ pub fn simulate_placed(
         radius: config.neighbor_radius,
         t_max: config.t_max_s,
         stagger: config.initial_stagger_s,
+        mode,
         states: vec![RankState::NotStarted; n_ranks],
         completed: vec![-1; n_ranks],
         trace: TraceLog::default(),
         finish: vec![f64::NAN; n_ranks],
         noise: (0..n_ranks).map(|r| config.noise.stream(r)).collect(),
-        collectives: HashMap::new(),
+        collective_arrived: vec![0; program.total_phases()],
         queue: EventQueue::new(),
         share,
         remote,
         nk,
         nd,
+        n_nodes,
+        dpn,
         domain_of: layout.rank_domain.clone(),
         counts: vec![0; nd * nk],
         integral: vec![0.0; nd * nk],
         rates: vec![0.0; nd * nk],
-        t_rates: 0.0,
+        t_fold: vec![0.0; nd],
         dirty: vec![false; nd],
         t_complete: vec![f64::INFINITY; nd],
         run_ver: vec![0; n_ranks],
-        groups: (0..nd * nk).map(|_| std::collections::BinaryHeap::new()).collect(),
+        groups: (0..nd * nk).map(|_| BinaryHeap::new()).collect(),
+        scratch_rates: vec![0.0; scratch_len],
+        due: Vec::new(),
+        wake: Vec::new(),
+        wake_set: Vec::new(),
         events: 0,
+        stats: SimStats::default(),
     };
     sim.run()
 }
@@ -328,17 +440,22 @@ impl Sim<'_> {
         }
     }
 
-    /// Advance the drained-bytes integrals to `t` at the current rates.
-    fn fold(&mut self, t: f64) {
-        let dt = t - self.t_rates;
+    /// Advance domain `d`'s drained-bytes integrals to `t` at the current
+    /// rates. Lazy: called only when the domain is *observed* (a
+    /// completion, a composition change, or a rate change there) — rates
+    /// are constant between observations, so the closed-form advance is
+    /// exact.
+    fn fold_domain(&mut self, d: usize, t: f64) {
+        let dt = t - self.t_fold[d];
         if dt > 0.0 {
-            for slot in 0..self.counts.len() {
+            let lo = d * self.nk;
+            for slot in lo..lo + self.nk {
                 if self.counts[slot] > 0 {
                     self.integral[slot] += self.rates[slot] * dt;
                 }
             }
         }
-        self.t_rates = t;
+        self.t_fold[d] = t;
     }
 
     /// The earliest analytic completion time over all domains.
@@ -346,26 +463,67 @@ impl Sim<'_> {
         self.t_complete.iter().cloned().fold(f64::INFINITY, f64::min)
     }
 
+    /// The coupled-path half of [`Sim::refresh`]: re-rate dirty nodes
+    /// through the per-node remote model. A domain whose freshly rated
+    /// slots differ bitwise from its current rates is folded forward and
+    /// marked dirty for re-projection; a domain whose rates are unchanged
+    /// keeps its projection (its integrals advance at the same rates, so
+    /// the projected crossing is still exact). `FullRecompute` rates every
+    /// node regardless — bit-identical output, all savings forfeited.
+    fn refresh_remote(&mut self, t: f64) {
+        let nper = self.dpn * self.nk;
+        for node in 0..self.n_nodes {
+            let dlo = node * self.dpn;
+            let node_dirty = self.dirty[dlo..dlo + self.dpn].iter().any(|&x| x);
+            if !node_dirty {
+                if self.mode == RatingMode::Incremental {
+                    self.stats.node_rates_reused += 1;
+                    continue;
+                }
+                // FullRecompute: pay for the clean node anyway.
+            }
+            let slo = dlo * self.nk;
+            self.stats.rate_evals += 1;
+            {
+                let (scratch, remote) = (
+                    &mut self.scratch_rates,
+                    self.remote.as_mut().expect("remote refresh without a model"),
+                );
+                scratch.copy_from_slice(remote.rates_bytes(&self.counts[slo..slo + nper]));
+            }
+            for dd in 0..self.dpn {
+                let d = dlo + dd;
+                let a = dd * self.nk;
+                let changed = (0..self.nk)
+                    .any(|k| self.rates[slo + a + k].to_bits() != self.scratch_rates[a + k].to_bits());
+                if !changed {
+                    continue;
+                }
+                self.fold_domain(d, t);
+                self.rates[slo + a..slo + a + self.nk]
+                    .copy_from_slice(&self.scratch_rates[a..a + self.nk]);
+                self.dirty[d] = true;
+            }
+        }
+    }
+
     /// After a composition change: new rates + the closed-form time of the
     /// earliest projected target crossing (no queue traffic). Only dirty
     /// domains are re-evaluated — a composition change on one ccNUMA
     /// domain leaves every other domain's rates and projection untouched.
-    /// With remote traffic the interfaces are coupled, so any dirty domain
-    /// re-rates (and re-projects) all of them from one global evaluation.
+    /// With remote traffic the interfaces of a *node* are coupled, so a
+    /// dirty domain re-rates its node (and only domains whose rates moved
+    /// re-project) — see [`Sim::refresh_remote`].
     fn refresh(&mut self, t: f64) {
-        if self.remote.is_some() && self.dirty.iter().any(|&d| d) {
-            self.dirty.fill(true);
-            // Field-split borrows keep the per-event hit path copy-once and
-            // allocation-free (the model's cache hands out a borrowed slice).
-            let (rates_dst, remote) =
-                (&mut self.rates, self.remote.as_mut().expect("checked above"));
-            rates_dst.copy_from_slice(remote.rates_bytes(&self.counts));
+        if self.remote.is_some() {
+            self.refresh_remote(t);
         }
         for d in 0..self.nd {
             if !self.dirty[d] {
                 continue;
             }
             self.dirty[d] = false;
+            self.fold_domain(d, t);
             self.t_complete[d] = f64::INFINITY;
             let lo = d * self.nk;
             let hi = lo + self.nk;
@@ -381,15 +539,16 @@ impl Sim<'_> {
                     continue;
                 }
                 loop {
-                    let entry = match self.groups[slot].peek() {
-                        Some(e) => *e,
+                    let key = match self.groups[slot].peek() {
+                        Some(k) => k.0,
                         None => break,
                     };
-                    if entry.ver != self.run_ver[entry.rank] {
+                    let (target, rank, ver) = entry_parts(key);
+                    if ver != self.run_ver[rank] as u32 {
                         self.groups[slot].pop(); // stale: rank left the group
                         continue;
                     }
-                    let dt_c = (entry.target - self.integral[slot]).max(0.0) / self.rates[slot];
+                    let dt_c = (target - self.integral[slot]).max(0.0) / self.rates[slot];
                     self.t_complete[d] = self.t_complete[d].min(t + dt_c);
                     break;
                 }
@@ -422,10 +581,11 @@ impl Sim<'_> {
             self.queue.push(self.noise[rank].next_at(), EventKind::Noise, rank);
             return;
         }
+        self.fold_domain(slot / self.nk, t);
         let target = self.integral[slot] + remaining;
         self.run_ver[rank] += 1;
         self.states[rank] = RankState::Running { flat, slot, target, started };
-        self.groups[slot].push(GroupEntry { target, rank, ver: self.run_ver[rank] });
+        self.groups[slot].push(Reverse(pack_entry(target, rank, self.run_ver[rank])));
         self.counts[slot] += 1;
         self.dirty[slot / self.nk] = true;
     }
@@ -449,9 +609,9 @@ impl Sim<'_> {
                 }
             }
             PhaseInfo::Allreduce { cost } => {
-                let arrived = self.collectives.entry(flat).or_insert(0);
+                let arrived = &mut self.collective_arrived[flat];
                 *arrived += 1;
-                let all = *arrived == self.n;
+                let all = *arrived as usize == self.n;
                 self.states[rank] = RankState::Collective { flat, arrived: t };
                 if all {
                     self.queue.push(t + cost, EventKind::CollectiveRelease, flat);
@@ -469,44 +629,85 @@ impl Sim<'_> {
         }
     }
 
-    /// Retry every Ready rank (completions may have unblocked halo syncs).
+    /// Retry every Ready rank (collective releases advance everyone, so
+    /// every halo sync may have been unblocked).
     fn start_all(&mut self, t: f64) {
         for r in 0..self.n {
             self.try_start(r, t);
         }
     }
 
-    /// Complete every rank whose target the integrals have crossed, then
-    /// retry starts (the batch handler of the analytic completion event).
+    /// Retry only the ranks whose `Neighbors` sync can have been newly
+    /// satisfied: the halo neighbourhood of every rank in `wake` (whose
+    /// `completed` just advanced), in ascending rank order — the same
+    /// order, restricted to the only ranks where `try_start` is not a
+    /// no-op, as the historical full `start_all` sweep.
+    fn wake_neighbors(&mut self, t: f64) {
+        if self.wake.is_empty() {
+            return;
+        }
+        let radius = self.radius.min(self.n / 2);
+        let mut set = std::mem::take(&mut self.wake_set);
+        set.clear();
+        for &r in &self.wake {
+            set.push(r);
+            for k in 1..=radius {
+                set.push((r + self.n - k) % self.n);
+                set.push((r + k) % self.n);
+            }
+        }
+        set.sort_unstable();
+        set.dedup();
+        for &r in &set {
+            self.try_start(r, t);
+        }
+        self.wake_set = set;
+        self.wake.clear();
+    }
+
+    /// Complete every rank whose target the integrals have crossed in the
+    /// domains listed in `due`, then retry the affected halo
+    /// neighbourhoods (the batch handler of the analytic completion
+    /// event). Only due domains can hold crossings: every other domain's
+    /// projected completion lies strictly in the future.
     fn do_completions(&mut self, t: f64) {
-        for slot in 0..self.counts.len() {
-            let eps = EPS_REL * (self.integral[slot].abs() + 1.0);
-            loop {
-                let entry = match self.groups[slot].peek() {
-                    Some(e) => *e,
-                    None => break,
-                };
-                if entry.ver != self.run_ver[entry.rank] {
+        let due = std::mem::take(&mut self.due);
+        for &d in &due {
+            self.fold_domain(d, t);
+            let lo = d * self.nk;
+            for slot in lo..lo + self.nk {
+                let eps = EPS_REL * (self.integral[slot].abs() + 1.0);
+                loop {
+                    let key = match self.groups[slot].peek() {
+                        Some(k) => k.0,
+                        None => break,
+                    };
+                    let (target, rank, ver) = entry_parts(key);
+                    if ver != self.run_ver[rank] as u32 {
+                        self.groups[slot].pop();
+                        continue;
+                    }
+                    if target > self.integral[slot] + eps {
+                        break;
+                    }
                     self.groups[slot].pop();
-                    continue;
-                }
-                if entry.target > self.integral[slot] + eps {
-                    break;
-                }
-                self.groups[slot].pop();
-                if let RankState::Running { flat, slot: rslot, started, .. } =
-                    self.states[entry.rank]
-                {
-                    self.record(entry.rank, flat, started, t);
-                    self.completed[entry.rank] = flat as i64;
-                    self.counts[rslot] -= 1;
-                    self.run_ver[entry.rank] += 1;
-                    self.dirty[rslot / self.nk] = true;
-                    self.states[entry.rank] = RankState::Ready { flat: flat + 1 };
+                    if let RankState::Running { flat, slot: rslot, started, .. } =
+                        self.states[rank]
+                    {
+                        self.record(rank, flat, started, t);
+                        self.completed[rank] = flat as i64;
+                        self.counts[rslot] -= 1;
+                        self.run_ver[rank] += 1;
+                        self.dirty[rslot / self.nk] = true;
+                        self.states[rank] = RankState::Ready { flat: flat + 1 };
+                        self.wake.push(rank);
+                    }
                 }
             }
         }
-        self.start_all(t);
+        self.due = due;
+        self.due.clear();
+        self.wake_neighbors(t);
     }
 
     fn run(mut self) -> CoSimResult {
@@ -529,15 +730,16 @@ impl Sim<'_> {
                 }
                 let t = tc;
                 // Every domain projecting this exact instant completes now;
-                // `do_completions` marks them dirty, so `refresh` rebuilds
-                // their projections (other domains keep theirs).
+                // `do_completions` sweeps exactly those, marks them dirty,
+                // and `refresh` rebuilds their projections (other domains
+                // keep theirs).
                 for d in 0..self.nd {
                     if self.t_complete[d] == t {
                         self.t_complete[d] = f64::INFINITY;
+                        self.due.push(d);
                     }
                 }
                 self.events += 1;
-                self.fold(t);
                 t_end = t;
                 self.do_completions(t);
                 self.refresh(t);
@@ -561,7 +763,6 @@ impl Sim<'_> {
                 break;
             }
             self.events += 1;
-            self.fold(ev.t);
             let t = ev.t;
             t_end = t;
             match ev.kind {
@@ -572,6 +773,7 @@ impl Sim<'_> {
                 EventKind::Noise => {
                     if let RankState::Running { flat, slot, target, started } = self.states[ev.idx]
                     {
+                        self.fold_domain(slot / self.nk, t);
                         let remaining = (target - self.integral[slot]).max(0.0);
                         self.counts[slot] -= 1;
                         self.run_ver[ev.idx] += 1;
@@ -605,9 +807,11 @@ impl Sim<'_> {
                                 }
                             }
                             if flat.is_some() {
-                                // An explicit Idle phase completed: halo
-                                // neighbours may now be unblocked.
-                                self.start_all(t);
+                                // An explicit Idle phase completed: only
+                                // this rank's halo neighbours can be newly
+                                // unblocked.
+                                self.wake.push(ev.idx);
+                                self.wake_neighbors(t);
                             }
                         }
                     }
@@ -628,11 +832,24 @@ impl Sim<'_> {
             }
             self.refresh(t);
         }
+        let mut stats = self.stats;
+        for c in &self.share {
+            let s = c.stats();
+            stats.share_hits += s.hits;
+            stats.share_misses += s.misses;
+        }
+        if let Some(r) = &self.remote {
+            let (h, m, e) = r.stats();
+            stats.remote_hits = h;
+            stats.remote_misses = m;
+            stats.remote_entries = e;
+        }
         CoSimResult {
             trace: self.trace,
             finish_s: self.finish,
             t_end_s: t_end,
             events: self.events,
+            stats,
         }
     }
 }
@@ -691,6 +908,8 @@ mod tests {
         for w in r.finish_s.windows(2) {
             assert_eq!(w[0].to_bits(), w[1].to_bits());
         }
+        // The share model was consulted and memoized.
+        assert!(r.stats.share_misses >= 1);
     }
 
     #[test]
@@ -758,6 +977,7 @@ mod tests {
             rank_domain: vec![0, 0, 0, 0, 1, 1, 1, 1],
             bw_scale: vec![1.0, 1.0],
             socket_of: vec![0, 0],
+            node_of: vec![0, 0],
             link_bw_gbs: 0.0,
             link_bw_rev_gbs: 0.0,
             collective_extra_s: 0.0,
@@ -799,6 +1019,7 @@ mod tests {
             rank_domain: vec![0, 1],
             bw_scale: vec![1.0, 0.5],
             socket_of: vec![0, 0],
+            node_of: vec![0, 0],
             link_bw_gbs: 0.0,
             link_bw_rev_gbs: 0.0,
             collective_extra_s: 0.0,
@@ -820,6 +1041,7 @@ mod tests {
             rank_domain: vec![0, 0, 1, 1],
             bw_scale: vec![1.0, 1.0],
             socket_of: vec![0, 1],
+            node_of: vec![0, 0],
             link_bw_gbs: 40.0,
             link_bw_rev_gbs: 40.0,
             collective_extra_s: 0.0,
@@ -850,6 +1072,7 @@ mod tests {
                 rank_domain: vec![0, 0, 0, 1, 1, 1],
                 bw_scale: vec![1.0, 1.0],
                 socket_of: vec![0, 0],
+                node_of: vec![0, 0],
                 link_bw_gbs: 0.0,
                 link_bw_rev_gbs: 0.0,
                 collective_extra_s: 0.0,
@@ -879,6 +1102,7 @@ mod tests {
                 rank_domain: vec![0, 0, 0, 1, 1, 1],
                 bw_scale: vec![1.0, 1.0],
                 socket_of: vec![0, 1],
+                node_of: vec![0, 0],
                 link_bw_gbs: link_bw,
                 link_bw_rev_gbs: link_bw,
                 collective_extra_s: 0.0,
@@ -946,5 +1170,111 @@ mod tests {
                 expect_a
             );
         }
+    }
+
+    /// A hand-built 2-node cluster: each node is one socket with two
+    /// ccNUMA domains exchanging intra-node remote traffic.
+    fn two_node_layout(frac: f64) -> RankLayout {
+        RankLayout {
+            n_domains: 4,
+            rank_domain: vec![0, 0, 1, 1, 2, 2, 3, 3],
+            bw_scale: vec![1.0; 4],
+            socket_of: vec![0, 0, 1, 1],
+            node_of: vec![0, 0, 1, 1],
+            link_bw_gbs: 0.0,
+            link_bw_rev_gbs: 0.0,
+            collective_extra_s: 0.0,
+            remote: None,
+        }
+        .with_remote(frac)
+        .unwrap()
+    }
+
+    #[test]
+    fn cluster_nodes_contend_independently_under_remote() {
+        // Remote traffic never leaves a node: each node of the 2-node
+        // cluster reproduces the single-node 4-rank run bit for bit.
+        let prog = one_kernel_program(1.5e9);
+        let chars = [(KernelId::Ddot2, 0.4, 100.0)];
+        let solo_layout = RankLayout {
+            n_domains: 2,
+            rank_domain: vec![0, 0, 1, 1],
+            bw_scale: vec![1.0, 1.0],
+            socket_of: vec![0, 0],
+            node_of: vec![0, 0],
+            link_bw_gbs: 0.0,
+            link_bw_rev_gbs: 0.0,
+            collective_extra_s: 0.0,
+            remote: None,
+        }
+        .with_remote(0.5)
+        .unwrap();
+        let solo = simulate_placed(&prog, 4, &cfg(), &chars, &solo_layout);
+        let cluster = simulate_placed(&prog, 8, &cfg(), &chars, &two_node_layout(0.5));
+        assert_eq!(cluster.trace.records.len(), 8);
+        let want = solo.trace.records[0].duration();
+        for rec in &cluster.trace.records {
+            assert_eq!(rec.duration().to_bits(), want.to_bits(), "rank {}", rec.rank);
+        }
+    }
+
+    #[test]
+    fn incremental_rating_is_bit_identical_to_full_recompute() {
+        // Noise desynchronizes the two nodes, so the incremental path
+        // skips clean-node re-ratings — without changing a single bit of
+        // the trace (rates are pure functions of the node composition).
+        let mut c = cfg();
+        c.noise = NoiseModel::mild(11);
+        c.initial_stagger_s = 1e-4;
+        let prog = one_kernel_program(9e8);
+        let chars = [(KernelId::Ddot2, 0.4, 100.0)];
+        let layout = two_node_layout(0.4);
+        let incr = simulate_placed_mode(&prog, 8, &c, &chars, &layout, RatingMode::Incremental);
+        let full = simulate_placed_mode(&prog, 8, &c, &chars, &layout, RatingMode::FullRecompute);
+        assert_eq!(incr.trace.records.len(), full.trace.records.len());
+        for (x, y) in incr.trace.records.iter().zip(&full.trace.records) {
+            assert_eq!(x.rank, y.rank);
+            assert_eq!(x.t_start.to_bits(), y.t_start.to_bits());
+            assert_eq!(x.t_end.to_bits(), y.t_end.to_bits());
+        }
+        assert_eq!(incr.events, full.events);
+        for (a, b) in incr.finish_s.iter().zip(&full.finish_s) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // The all-dirty fallback is gone: the incremental path skipped
+        // clean nodes, the reference rated every node on every refresh.
+        assert!(incr.stats.node_rates_reused > 0, "no clean-node skips recorded");
+        assert!(
+            incr.stats.rate_evals < full.stats.rate_evals,
+            "incremental ({}) must rate fewer nodes than full ({})",
+            incr.stats.rate_evals,
+            full.stats.rate_evals
+        );
+        assert_eq!(full.stats.node_rates_reused, 0);
+        assert!(incr.stats.remote_misses > 0);
+    }
+
+    #[test]
+    fn idle_nodes_are_never_re_rated() {
+        // Ranks only on node 0: node 1 never gets dirty, so the
+        // incremental path evaluates exactly one node per refresh (the
+        // historical fallback re-rated the whole shape every time).
+        let prog = one_kernel_program(1e9);
+        let chars = [(KernelId::Ddot2, 0.4, 100.0)];
+        let mut layout = two_node_layout(0.5);
+        layout.rank_domain = vec![0, 0, 1, 1];
+        let r = simulate_placed(&prog, 4, &cfg(), &chars, &layout);
+        assert!(r.finish_s.iter().all(|f| f.is_finite()));
+        assert!(r.stats.node_rates_reused >= r.stats.rate_evals);
+    }
+
+    #[test]
+    #[should_panic(expected = "cluster nodes must share one bandwidth profile")]
+    fn non_uniform_cluster_nodes_are_rejected() {
+        let prog = one_kernel_program(1e9);
+        let chars = [(KernelId::Ddot2, 0.4, 100.0)];
+        let mut layout = two_node_layout(0.5);
+        layout.bw_scale = vec![1.0, 1.0, 1.0, 0.5];
+        simulate_placed(&prog, 8, &cfg(), &chars, &layout);
     }
 }

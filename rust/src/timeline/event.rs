@@ -11,8 +11,31 @@
 //! Events that can become stale (noise arrivals for ranks that were
 //! preempted meanwhile) are validated lazily at pop time, keeping
 //! cancellation O(1).
+//!
+//! # Data layout
+//!
+//! Internally the heap stores no [`Event`] structs at all: every event is
+//! packed into a single `u128` key whose ascending numeric order *is* the
+//! event order —
+//!
+//! ```text
+//! bits 127..64   t.to_bits()   (f64; monotone under to_bits for t ≥ 0)
+//! bits  63..62   kind priority (Start=0 < Noise < IdleEnd < CollectiveRelease)
+//! bits  61..32   idx           (rank / flat phase index)
+//! bits  31..0    seq           (insertion order: FIFO among exact duplicates)
+//! ```
+//!
+//! so the heap is a flat `Vec<u128>` under the hood (one word-pair per
+//! event, single integer compares while sifting) instead of a vector of
+//! padded structs with four-field lexicographic comparisons. For
+//! cluster-scale runs (hundreds of thousands of scheduled events) this
+//! halves the queue's memory traffic and removes all branching from the
+//! comparator. Event times are non-negative and finite by construction
+//! (simulation time starts at 0 and only advances), which is exactly the
+//! range where `f64::to_bits` is order-preserving.
 
 use std::cmp::Ordering;
+use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 /// What an event does when it fires.
@@ -43,9 +66,19 @@ impl EventKind {
             EventKind::CollectiveRelease => 3,
         }
     }
+
+    fn from_priority(p: u8) -> Self {
+        match p {
+            0 => EventKind::Start,
+            1 => EventKind::Noise,
+            2 => EventKind::IdleEnd,
+            _ => EventKind::CollectiveRelease,
+        }
+    }
 }
 
-/// One scheduled event.
+/// One scheduled event (the unpacked view handed back by
+/// [`EventQueue::pop`]; the queue itself stores packed keys).
 #[derive(Debug, Clone, Copy)]
 pub struct Event {
     /// Absolute simulation time, seconds.
@@ -75,8 +108,8 @@ impl PartialOrd for Event {
 
 impl Ord for Event {
     fn cmp(&self, other: &Self) -> Ordering {
-        // Reversed on every field: `BinaryHeap` is a max-heap and we want
-        // the earliest event (then lowest priority/idx/seq) on top.
+        // Reversed on every field: earliest event (then lowest
+        // priority/idx/seq) first — the order the packed keys realize.
         other
             .t
             .total_cmp(&self.t)
@@ -86,10 +119,32 @@ impl Ord for Event {
     }
 }
 
-/// Deterministic min-queue of [`Event`]s.
+/// Widest `idx` the packed key can carry (30 bits).
+const MAX_IDX: usize = (1 << 30) - 1;
+
+fn pack(t: f64, kind: EventKind, idx: usize, seq: u64) -> u128 {
+    debug_assert!(t.is_finite() && t >= 0.0, "event time {t} outside [0, ∞)");
+    debug_assert!(idx <= MAX_IDX, "event idx {idx} exceeds the 30-bit key field");
+    debug_assert!(seq <= u32::MAX as u64, "event seq overflow (2^32 events scheduled)");
+    ((t.to_bits() as u128) << 64)
+        | ((kind.priority() as u128) << 62)
+        | ((idx as u128) << 32)
+        | (seq as u128 & 0xFFFF_FFFF)
+}
+
+fn unpack(key: u128) -> Event {
+    Event {
+        t: f64::from_bits((key >> 64) as u64),
+        kind: EventKind::from_priority(((key >> 62) & 0b11) as u8),
+        idx: ((key >> 32) & (MAX_IDX as u128)) as usize,
+        seq: key as u32 as u64,
+    }
+}
+
+/// Deterministic min-queue of [`Event`]s over packed `u128` keys.
 #[derive(Default)]
 pub struct EventQueue {
-    heap: BinaryHeap<Event>,
+    heap: BinaryHeap<Reverse<u128>>,
     seq: u64,
 }
 
@@ -101,19 +156,18 @@ impl EventQueue {
 
     /// Schedule an event.
     pub fn push(&mut self, t: f64, kind: EventKind, idx: usize) {
-        debug_assert!(t.is_finite(), "non-finite event time");
-        self.heap.push(Event { t, kind, idx, seq: self.seq });
+        self.heap.push(Reverse(pack(t, kind, idx, self.seq)));
         self.seq += 1;
     }
 
     /// Time of the earliest pending event.
     pub fn peek_time(&self) -> Option<f64> {
-        self.heap.peek().map(|e| e.t)
+        self.heap.peek().map(|k| f64::from_bits((k.0 >> 64) as u64))
     }
 
     /// Pop the earliest event.
     pub fn pop(&mut self) -> Option<Event> {
-        self.heap.pop()
+        self.heap.pop().map(|k| unpack(k.0))
     }
 
     /// Pending event count (including stale entries awaiting lazy skip).
@@ -182,5 +236,34 @@ mod tests {
         }
         assert!(last.is_some());
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn packed_key_round_trips_and_preserves_struct_order() {
+        // The packed ascending-u128 order must agree with the Event
+        // comparator on every field, including times whose exponent bits
+        // differ by orders of magnitude.
+        let cases = [
+            (0.0, EventKind::Start, 0),
+            (1e-12, EventKind::Noise, 3),
+            (1e-12, EventKind::IdleEnd, 3),
+            (1e-12, EventKind::IdleEnd, 4),
+            (7.25, EventKind::CollectiveRelease, MAX_IDX),
+            (1e9, EventKind::Start, 17),
+        ];
+        let mut q = EventQueue::new();
+        for &(t, k, i) in cases.iter().rev() {
+            q.push(t, k, i);
+        }
+        let popped: Vec<(f64, EventKind, usize)> =
+            std::iter::from_fn(|| q.pop()).map(|e| (e.t, e.kind, e.idx)).collect();
+        let want: Vec<(f64, EventKind, usize)> = cases.to_vec();
+        assert_eq!(popped, want);
+        // Round trip of the widest representable index.
+        let e = unpack(pack(7.25, EventKind::CollectiveRelease, MAX_IDX, 9));
+        assert_eq!(e.t, 7.25);
+        assert_eq!(e.kind, EventKind::CollectiveRelease);
+        assert_eq!(e.idx, MAX_IDX);
+        assert_eq!(e.seq, 9);
     }
 }

@@ -17,7 +17,10 @@
 //! * [`engine`] — the drained-bytes-integral simulation core
 //!   ([`engine::simulate`]; [`engine::simulate_placed`] keys all
 //!   contention state by ccNUMA domain, so a full NPS4 socket runs as
-//!   concurrent per-domain timelines over one shared event queue).
+//!   concurrent per-domain timelines over one shared event queue; on
+//!   cluster layouts the coupled remote path re-rates *per node*,
+//!   incrementally — see [`engine::RatingMode`] and the engine's module
+//!   docs on cluster scaling).
 //!
 //! [`crate::desync::CoSimEngine`] is the user-facing driver over this
 //! layer; the legacy stepper survives behind the `legacy-stepper` feature
@@ -61,5 +64,5 @@
 pub mod event;
 pub mod engine;
 
-pub use engine::{simulate, simulate_placed};
+pub use engine::{simulate, simulate_placed, simulate_placed_mode, RatingMode};
 pub use event::{Event, EventKind, EventQueue};

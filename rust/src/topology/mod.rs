@@ -17,10 +17,13 @@
 //! inter-socket links ([`Topology::links`]) as contention interfaces for
 //! the remote-access extension ([`crate::sharing::remote`]), and
 //! Sub-NUMA-Clustering specs (`snc2`, `snc4`) split a monolithic Intel
-//! socket into equal sub-domains. `placement` holds the other half of the
-//! layer: how work lands on the domains (compact / scatter / explicit
-//! `@dN` pinning) and the per-domain splitting of workload mixes and rank
-//! sets.
+//! socket into equal sub-domains. Cluster specs (`<N>n<spec>`, e.g.
+//! `64n1x4`) replicate one node shape N times: bandwidth is shared only
+//! within a node, while collectives couple the nodes in time — the
+//! substrate of the cluster-scale co-simulation (`docs/SIMULATORS.md`).
+//! `placement` holds the other half of the layer: how work lands on the
+//! domains (compact / scatter / explicit `@dN` pinning) and the
+//! per-domain splitting of workload mixes and rank sets.
 //!
 //! # Examples
 //!
@@ -41,6 +44,12 @@
 //! let snc2 = Topology::parse(&clx, "snc2").unwrap();
 //! assert_eq!(snc2.n_domains(), 2);
 //! assert_eq!(snc2.domains[0].machine.cores, clx.cores / 2);
+//!
+//! // A 64-node cluster of NPS4 Rome sockets: 256 domains, node-major.
+//! let cluster = Topology::parse(&rome, "64n1x4").unwrap();
+//! assert_eq!(cluster.nodes, 64);
+//! assert_eq!(cluster.n_domains(), 256);
+//! assert_eq!(cluster.node_of()[5], 1);
 //! ```
 
 mod placement;
@@ -51,9 +60,11 @@ use crate::config::Machine;
 use crate::error::{Error, Result};
 use crate::sharing::TopoShape;
 
-/// Upper bound on ccNUMA domains per topology (generous: the largest real
-/// systems are well under 100 domains across all sockets).
-pub const MAX_DOMAINS: usize = 1024;
+/// Upper bound on ccNUMA domains per topology. Sized for cluster specs
+/// (`<N>n...`): 256 NPS4 nodes still fit; each domain clones a full
+/// [`Machine`], so an absurd spec must fail cleanly instead of exhausting
+/// memory.
+pub const MAX_DOMAINS: usize = 4096;
 
 /// One ccNUMA contention domain of a topology.
 #[derive(Debug, Clone)]
@@ -76,9 +87,14 @@ pub struct Domain {
 pub struct Topology {
     /// The Table I row every domain instantiates.
     pub base: Machine,
-    /// Number of sockets.
+    /// Number of sockets (total over all nodes of a cluster).
     pub sockets: usize,
-    /// The domains, dense ids in socket order.
+    /// Number of cluster nodes (1 for every single-node topology). Nodes
+    /// are identical replicas of one node shape; bandwidth is shared only
+    /// *within* a node (remote traffic spreads over the other domains of
+    /// the same node), while collectives couple nodes in time.
+    pub nodes: usize,
+    /// The domains, dense ids in socket order (node-major on clusters).
     pub domains: Vec<Domain>,
 }
 
@@ -132,7 +148,47 @@ impl Topology {
                 machine: domain_machine(base, bw_scale),
             })
             .collect();
-        Ok(Topology { base: base.clone(), sockets, domains })
+        Ok(Topology { base: base.clone(), sockets, nodes: 1, domains })
+    }
+
+    /// A cluster of `n_nodes` identical nodes, each a replica of `node`
+    /// (which must itself be single-node). Domain ids stay dense in
+    /// node-major socket order; sockets are numbered across nodes, so the
+    /// existing socket machinery (links within a node, collective hop
+    /// latency) extends unchanged.
+    pub fn cluster(node: &Topology, n_nodes: usize) -> Result<Self> {
+        if n_nodes == 0 {
+            return Err(Error::InvalidPlan("cluster needs at least one node".into()));
+        }
+        if node.nodes != 1 {
+            return Err(Error::InvalidPlan("nested cluster specs are not supported".into()));
+        }
+        node.n_domains()
+            .checked_mul(n_nodes)
+            .filter(|&nd| nd <= MAX_DOMAINS)
+            .ok_or_else(|| {
+                Error::InvalidPlan(format!(
+                    "cluster of {n_nodes} x {} domains exceeds the {MAX_DOMAINS}-domain limit",
+                    node.n_domains()
+                ))
+            })?;
+        let mut domains = Vec::with_capacity(node.n_domains() * n_nodes);
+        for node_i in 0..n_nodes {
+            for d in &node.domains {
+                domains.push(Domain {
+                    id: domains.len(),
+                    socket: node_i * node.sockets + d.socket,
+                    bw_scale: d.bw_scale,
+                    machine: d.machine.clone(),
+                });
+            }
+        }
+        Ok(Topology {
+            base: node.base.clone(),
+            sockets: n_nodes * node.sockets,
+            nodes: n_nodes,
+            domains,
+        })
     }
 
     /// The degenerate single-domain topology (the pre-topology model).
@@ -191,6 +247,24 @@ impl Topology {
         self.domains.iter().map(|d| d.socket).collect()
     }
 
+    /// Sockets per cluster node (= `sockets` on single-node topologies).
+    pub fn sockets_per_node(&self) -> usize {
+        self.sockets / self.nodes.max(1)
+    }
+
+    /// ccNUMA domains per cluster node (= `n_domains()` on single-node
+    /// topologies).
+    pub fn domains_per_node(&self) -> usize {
+        self.n_domains() / self.nodes.max(1)
+    }
+
+    /// Cluster node of each domain, in domain order (all zero on
+    /// single-node topologies).
+    pub fn node_of(&self) -> Vec<usize> {
+        let spn = self.sockets_per_node().max(1);
+        self.domains.iter().map(|d| d.socket / spn).collect()
+    }
+
     /// The directed inter-socket links (all *ordered* socket pairs `a → b`
     /// with `a ≠ b`, lexicographic — each physical link contributes one
     /// interface per duplex direction); empty on single-socket topologies.
@@ -217,14 +291,21 @@ impl Topology {
         self.sockets.saturating_sub(1) as f64 * self.base.link_latency_us * 1e-6
     }
 
-    /// Compact display label, e.g. `rome-1s4d` (1 socket × 4 domains).
+    /// Compact display label, e.g. `rome-1s4d` (1 socket × 4 domains) or
+    /// `rome-64n1s4d` (64 nodes × 1 socket × 4 domains).
     pub fn label(&self) -> String {
-        format!(
-            "{}-{}s{}d",
-            self.base.id.key(),
-            self.sockets,
-            self.domains.len() / self.sockets.max(1)
-        )
+        let dps = self.domains.len() / self.sockets.max(1);
+        if self.nodes > 1 {
+            format!(
+                "{}-{}n{}s{}d",
+                self.base.id.key(),
+                self.nodes,
+                self.sockets_per_node(),
+                dps
+            )
+        } else {
+            format!("{}-{}s{}d", self.base.id.key(), self.sockets, dps)
+        }
     }
 
     /// The base row of a Sub-NUMA-Clustering mode: the monolithic socket
@@ -261,10 +342,27 @@ impl Topology {
     /// * `<S>x<D>` — S sockets × D domains each (e.g. `2x4`);
     /// * `snc<N>` / `<S>xsnc<N>` — Sub-NUMA-Clustering: the monolithic
     ///   socket row split into N equal sub-domains (e.g. `snc2` on CLX);
+    /// * `<N>n<spec>` — a cluster of N identical nodes, each the inner
+    ///   spec (e.g. `64n1x4`, `8n2xsnc2`); bandwidth scales apply per node
+    ///   and replicate across nodes;
     /// * an optional `@s0,s1,...` suffix with one saturated-bandwidth scale
     ///   per domain (e.g. `4@1,1,0.9,0.95`).
     pub fn parse(base: &Machine, spec: &str) -> Result<Self> {
         let spec = spec.trim();
+        // `<N>n<inner>` cluster prefix: digits followed by 'n'. No other
+        // spec form starts with digits-then-'n' ("snc2" starts with 's',
+        // "<S>x<D>" has no 'n'), so the prefix is unambiguous.
+        if let Some((count_txt, inner)) = spec.split_once('n') {
+            if !count_txt.is_empty() && count_txt.chars().all(|c| c.is_ascii_digit()) {
+                let n_nodes: usize = count_txt.parse().map_err(|_| {
+                    Error::InvalidPlan(format!(
+                        "bad node count '{count_txt}' in topology spec '{spec}'"
+                    ))
+                })?;
+                let node = Topology::parse(base, inner)?;
+                return Topology::cluster(&node, n_nodes);
+            }
+        }
         let (shape, scales_txt) = match spec.split_once('@') {
             Some((s, sc)) => (s.trim(), Some(sc.trim())),
             None => (spec, None),
@@ -440,6 +538,52 @@ mod tests {
         assert!(Topology::parse(&m, "fullmesh").is_err());
         // Absurd sizes fail cleanly (no allocation, no overflow).
         assert!(Topology::parse(&m, "1000000000x100").is_err());
-        assert!(Topology::parse(&m, "2048").is_err());
+        assert!(Topology::parse(&m, "8192").is_err());
+    }
+
+    #[test]
+    fn cluster_specs_replicate_nodes() {
+        let m = machine(MachineId::Rome);
+        let c = Topology::parse(&m, "64n1x4").unwrap();
+        assert_eq!(c.nodes, 64);
+        assert_eq!(c.sockets, 64);
+        assert_eq!(c.sockets_per_node(), 1);
+        assert_eq!(c.domains_per_node(), 4);
+        assert_eq!(c.n_domains(), 256);
+        assert_eq!(c.total_cores(), 64 * 32);
+        assert_eq!(c.label(), "rome-64n1s4d");
+        // Node-major socket and node numbering.
+        assert_eq!(c.domains[4].socket, 1);
+        let node_of = c.node_of();
+        assert_eq!(node_of[0], 0);
+        assert_eq!(node_of[3], 0);
+        assert_eq!(node_of[4], 1);
+        assert_eq!(node_of[255], 63);
+        // Multi-socket nodes: sockets number across nodes.
+        let two = Topology::parse(&m, "2n2x4").unwrap();
+        assert_eq!(two.nodes, 2);
+        assert_eq!(two.sockets, 4);
+        assert_eq!(two.sockets_per_node(), 2);
+        assert_eq!(two.domains[8].socket, 2);
+        assert_eq!(two.node_of(), [vec![0usize; 8], vec![1usize; 8]].concat());
+        // SNC inner specs compose.
+        let clx = machine(MachineId::Clx);
+        let snc = Topology::parse(&clx, "4n2xsnc2").unwrap();
+        assert_eq!(snc.nodes, 4);
+        assert_eq!(snc.n_domains(), 16);
+        assert_eq!(snc.domains[0].machine.cores, clx.cores / 2);
+        // Per-node scales replicate across nodes.
+        let scaled = Topology::parse(&m, "2n4@1,1,0.9,0.95").unwrap();
+        assert!((scaled.domains[7].bw_scale - 0.95).abs() < 1e-12);
+        assert!((scaled.domains[2].bw_scale - 0.9).abs() < 1e-12);
+        // Degenerate one-node cluster is the inner topology plus nodes=1.
+        let one = Topology::parse(&m, "1nsocket").unwrap();
+        assert_eq!(one.nodes, 1);
+        assert_eq!(one.n_domains(), 4);
+        assert_eq!(one.label(), "rome-1s4d");
+        // Rejections: zero nodes, nesting, over the domain cap.
+        assert!(Topology::parse(&m, "0n4").is_err());
+        assert!(Topology::parse(&m, "2n2n4").is_err());
+        assert!(Topology::parse(&m, "100000n1x4").is_err());
     }
 }

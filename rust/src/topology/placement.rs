@@ -279,6 +279,7 @@ impl Placement {
             rank_domain,
             bw_scale: topo.bw_scales(),
             socket_of: topo.socket_of(),
+            node_of: topo.node_of(),
             link_bw_gbs: topo.base.link_bw_gbs,
             link_bw_rev_gbs: topo.base.link_bw_rev_gbs,
             collective_extra_s: topo.collective_extra_s(),
@@ -335,6 +336,10 @@ pub struct RankLayout {
     pub bw_scale: Vec<f64>,
     /// Socket of each domain (all zero on single-socket layouts).
     pub socket_of: Vec<usize>,
+    /// Cluster node of each domain (all zero on single-node layouts).
+    /// Bandwidth couples domains only within a node; the timeline engine
+    /// re-rates per node (see `crate::timeline`).
+    pub node_of: Vec<usize>,
     /// Saturated bandwidth of the forward (lower → higher socket index)
     /// direction of one inter-socket link, GB/s (0 = links not modeled).
     pub link_bw_gbs: f64,
@@ -356,6 +361,7 @@ impl RankLayout {
             rank_domain: vec![0; n_ranks],
             bw_scale: vec![1.0],
             socket_of: vec![0],
+            node_of: vec![0],
             link_bw_gbs: 0.0,
             link_bw_rev_gbs: 0.0,
             collective_extra_s: 0.0,
@@ -366,6 +372,11 @@ impl RankLayout {
     /// Whether this is the degenerate single-domain layout.
     pub fn is_single(&self) -> bool {
         self.n_domains == 1 && self.bw_scale[0] == 1.0
+    }
+
+    /// Number of cluster nodes in the layout.
+    pub fn n_nodes(&self) -> usize {
+        self.node_of.iter().copied().max().unwrap_or(0) + 1
     }
 
     /// Attach a uniform remote-access fraction: every rank sends `frac` of
@@ -534,6 +545,14 @@ mod tests {
         let two = Topology::parse(&m, "2x4").unwrap();
         let layout = Placement::Compact.rank_layout(&two, 16).unwrap();
         assert_eq!(layout.socket_of, vec![0, 0, 0, 0, 1, 1, 1, 1]);
+        assert_eq!(layout.node_of, vec![0; 8], "a single node spans both sockets");
+        assert_eq!(layout.n_nodes(), 1);
+        // Cluster layouts expose the node partition.
+        let cl = Topology::parse(&m, "4n1x4").unwrap();
+        let clayout = Placement::Scatter.rank_layout(&cl, 32).unwrap();
+        assert_eq!(clayout.n_nodes(), 4);
+        assert_eq!(clayout.node_of[0], 0);
+        assert_eq!(clayout.node_of[15], 3);
         assert_eq!(layout.link_bw_gbs.to_bits(), m.link_bw_gbs.to_bits());
         assert_eq!(layout.link_bw_rev_gbs.to_bits(), m.link_bw_rev_gbs.to_bits());
         assert!((layout.collective_extra_s - m.link_latency_us * 1e-6).abs() < 1e-18);

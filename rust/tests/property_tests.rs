@@ -415,6 +415,158 @@ fn prop_domains_are_independent() {
     }
 }
 
+/// Randomized-trace pin for the incremental water-fill engine: over random
+/// noise seeds, rank counts, and placements — with and without remote
+/// traffic, on single-socket, dual-socket, and multi-node cluster
+/// topologies — the interface-composition re-rating path
+/// ([`RatingMode::Incremental`], the default) must reproduce the retained
+/// full-recompute reference *bit for bit*: same event count, same phase
+/// records, same per-rank finish times.
+#[test]
+fn prop_incremental_rating_bit_identical_to_full_recompute() {
+    use membw::desync::{hpcg_program, CoSimConfig, CoSimEngine, HpcgVariant, NoiseModel};
+    use membw::scenario::CharSource;
+    use membw::topology::{Placement, Topology};
+    let rome = machine(MachineId::Rome);
+    let mut rng = XorShift64::new(0xC1_0B01);
+    // (topology spec, remote fraction): 0.0 exercises the independent-domain
+    // ShareCache path, >0.0 the coupled remote water-fill — on one socket,
+    // across the xGMI link, and across identical cluster nodes.
+    let specs: &[(&str, f64)] = &[("1x4", 0.0), ("2x4", 0.25), ("2n1x4", 0.25), ("4n1x4", 0.5)];
+    for &(spec, frac) in specs {
+        let topo = Topology::parse(&rome, spec).unwrap();
+        for rep in 0..3 {
+            let noise = match rng.next_below(3) {
+                0 => NoiseModel::off(),
+                _ => NoiseModel::mild(1 + rng.next_below(1 << 20) as u64),
+            };
+            let cfg = CoSimConfig {
+                dt_s: 20e-6,
+                t_max_s: 600.0,
+                initial_stagger_s: 0.1e-3,
+                noise,
+                neighbor_radius: 1 + rng.next_below(3),
+            };
+            let placement =
+                if rng.next_below(2) == 0 { Placement::Compact } else { Placement::Scatter };
+            let total = topo.total_cores();
+            let n_ranks = total / 2 + rng.next_below(total / 2) + 1;
+            let prog = hpcg_program(HpcgVariant::Modified, 48, 2);
+            let eng = if frac > 0.0 {
+                CoSimEngine::with_topology_remote(
+                    &rome,
+                    &topo,
+                    placement,
+                    frac,
+                    prog,
+                    n_ranks,
+                    cfg,
+                    &CharSource::Ecm,
+                )
+                .unwrap()
+            } else {
+                CoSimEngine::with_topology(
+                    &rome,
+                    &topo,
+                    placement,
+                    prog,
+                    n_ranks,
+                    cfg,
+                    &CharSource::Ecm,
+                )
+                .unwrap()
+            };
+            let inc = eng.run();
+            let full = eng.run_full_recompute();
+            let tag = format!("{spec} %r{frac} rep {rep} ({n_ranks} ranks)");
+            assert_eq!(inc.events, full.events, "{tag}: event counts diverge");
+            assert_eq!(inc.t_end_s.to_bits(), full.t_end_s.to_bits(), "{tag}: t_end");
+            assert_eq!(
+                inc.trace.records.len(),
+                full.trace.records.len(),
+                "{tag}: record counts diverge"
+            );
+            for (a, b) in inc.trace.records.iter().zip(&full.trace.records) {
+                assert_eq!(a.rank, b.rank, "{tag}");
+                assert_eq!(a.label, b.label, "{tag}");
+                assert_eq!(a.t_start.to_bits(), b.t_start.to_bits(), "{tag}: t_start");
+                assert_eq!(a.t_end.to_bits(), b.t_end.to_bits(), "{tag}: t_end");
+            }
+            for (r, (a, b)) in inc.finish_s.iter().zip(&full.finish_s).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{tag}: finish of rank {r}");
+            }
+        }
+    }
+}
+
+/// Regression pin: the all-dirty fallback (every refresh re-rating every
+/// node) is gone. On a remote-traffic cluster the incremental run must
+/// actually skip clean nodes — nonzero reuse counter, strictly fewer node
+/// ratings than the full-recompute reference — and on a cluster whose
+/// ranks all land on node 0, the idle nodes must never be re-rated after
+/// their first rating.
+#[test]
+fn prop_incremental_skips_clean_nodes() {
+    use membw::desync::{hpcg_program, CoSimConfig, CoSimEngine, HpcgVariant, NoiseModel};
+    use membw::scenario::CharSource;
+    use membw::topology::{Placement, Topology};
+    let rome = machine(MachineId::Rome);
+    let topo = Topology::parse(&rome, "4n1x4").unwrap();
+    let cfg = CoSimConfig {
+        dt_s: 20e-6,
+        t_max_s: 600.0,
+        initial_stagger_s: 0.1e-3,
+        noise: NoiseModel::mild(11),
+        neighbor_radius: 2,
+    };
+    // All four nodes busy: staggered noise keeps compositions changing on
+    // one node while the others are mid-phase, so reuse and re-rating both
+    // happen.
+    let busy = CoSimEngine::with_topology_remote(
+        &rome,
+        &topo,
+        Placement::Compact,
+        0.25,
+        hpcg_program(HpcgVariant::Modified, 48, 2),
+        topo.total_cores(),
+        cfg.clone(),
+        &CharSource::Ecm,
+    )
+    .unwrap();
+    let inc = busy.run();
+    let full = busy.run_full_recompute();
+    assert!(inc.stats.node_rates_reused > 0, "incremental run never skipped a clean node");
+    assert_eq!(full.stats.node_rates_reused, 0, "the reference must re-rate everything");
+    assert!(
+        inc.stats.rate_evals < full.stats.rate_evals,
+        "incremental ({}) must rate fewer nodes than full recompute ({})",
+        inc.stats.rate_evals,
+        full.stats.rate_evals
+    );
+
+    // Compact placement of one node's worth of ranks: nodes 1-3 idle. With
+    // the fallback gone, their ratings can only come from the initial
+    // all-dirty sweep, so skips dominate ratings.
+    let lop = CoSimEngine::with_topology_remote(
+        &rome,
+        &topo,
+        Placement::Compact,
+        0.25,
+        hpcg_program(HpcgVariant::Modified, 48, 2),
+        topo.total_cores() / 4,
+        cfg,
+        &CharSource::Ecm,
+    )
+    .unwrap();
+    let r = lop.run();
+    assert!(
+        r.stats.node_rates_reused >= r.stats.rate_evals,
+        "idle nodes kept getting re-rated: {} reused vs {} rated",
+        r.stats.node_rates_reused,
+        r.stats.rate_evals
+    );
+}
+
 /// On a 1-domain machine, scatter and compact placement are the same thing:
 /// identical splits and identical rank layouts for random mixes.
 #[test]

@@ -7,7 +7,10 @@ Metrics (higher is better):
 * ``BENCH_cosim.json``   — ``events_per_s`` of every co-sim variant and
   ``scenario.cases_per_s`` of the scenario sweep;
 * ``BENCH_multi_iface.json`` — ``cases_per_s`` of the multi-interface
-  pipeline and of its single-interface baseline sweep.
+  pipeline and of its single-interface baseline sweep;
+* ``BENCH_cluster.json`` — ``events_per_s`` of the 64-node cluster co-sim
+  and its ``speedup_vs_full`` over the full-recompute rating reference
+  (a drop in either means the incremental path lost its edge).
 
 Usage::
 
@@ -46,7 +49,7 @@ from pathlib import Path
 # >15% slower than the committed baseline fails the gate.
 THRESHOLD = 0.15
 
-GATED_FILES = ["BENCH_cosim.json", "BENCH_multi_iface.json"]
+GATED_FILES = ["BENCH_cosim.json", "BENCH_multi_iface.json", "BENCH_cluster.json"]
 
 
 def metrics_of(name: str, doc: dict) -> dict[str, float]:
@@ -62,6 +65,9 @@ def metrics_of(name: str, doc: dict) -> dict[str, float]:
         out["single_iface_baseline.cases_per_s"] = float(
             doc["single_iface_baseline"]["cases_per_s"]
         )
+    elif name == "BENCH_cluster.json":
+        out["cluster.events_per_s"] = float(doc["cluster"]["events_per_s"])
+        out["cluster.speedup_vs_full"] = float(doc["cluster"]["speedup_vs_full"])
     return out
 
 
