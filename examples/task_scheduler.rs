@@ -13,10 +13,12 @@
 //!   "locality-friendly" policy). Pairs of compute-bound tasks leave the
 //!   memory interface idle — bandwidth that can never be recovered.
 //! * **FIFO**: take the next two tasks in queue order.
-//! * **Model-guided**: greedy partner choice minimizing the co-run time
-//!   *predicted by the sharing model* (Eqs. 4+5). The model knows that a
-//!   low-f compute task and a high-f memory task barely interfere, so it
-//!   overlaps them.
+//! * **Model-guided**: partner choice minimizing the co-run time
+//!   *predicted by the sharing model* (Eqs. 4+5), via the optimizer's
+//!   pairing planner ([`membw::optimizer::plan_pairing`]; beam 1 is the
+//!   greedy policy this example originally hand-rolled). The model knows
+//!   that a low-f compute task and a high-f memory task barely interfere,
+//!   so it overlaps them.
 //!
 //! Makespans are evaluated with the fluid simulator (not the model), so
 //! the comparison is fair.
@@ -27,7 +29,7 @@
 
 use membw::config::{machine, Machine, MachineId};
 use membw::kernels::{kernel, KernelClass, KernelId, KernelSignature};
-use membw::sharing::{share_two_groups, KernelGroup};
+use membw::optimizer::{plan_pairing, PairTask};
 use membw::simulator::{measure_f_bs, measure_pairing, Engine, KernelMeasurement};
 
 /// A compute-bound task kernel: one read stream, 128 flops per element —
@@ -78,76 +80,32 @@ fn pairwise_schedule(m: &Machine, order: &[Task]) -> f64 {
         .sum()
 }
 
+/// Plan the pairing with the optimizer's model-guided planner (beam 1 =
+/// the greedy this example originally hand-rolled), then evaluate the
+/// resulting plan with the fluid simulator — same fairness rule as the
+/// other two policies.
 fn model_guided_schedule(m: &Machine, tasks: &[Task], chars: &[(String, KernelMeasurement)]) -> f64 {
     let lookup = |t: &Task| {
         chars.iter().find(|(n, _)| *n == t.sig.name).expect("characterized").1
     };
-    let mut queue: Vec<Task> = tasks.to_vec();
-    // Longest-predicted-solo-time first (classic LPT), so big tasks anchor
-    // the gang slots and short complementary tasks fill them.
-    let solo_time = |t: &Task| {
-        let c = lookup(t);
-        t.gbytes / (m.cores as f64 / 2.0 * c.f * c.bs_gbs).min(c.bs_gbs)
-    };
-    queue.sort_by(|x, y| solo_time(x).partial_cmp(&solo_time(y)).unwrap());
-    let mut total = 0.0;
-    while let Some(a) = queue.pop() {
-        if queue.is_empty() {
-            let c = lookup(&a);
-            total += a.gbytes / (m.cores as f64 * c.f * c.bs_gbs).min(c.bs_gbs);
-            break;
-        }
-        let half = m.cores / 2;
-        let ca = lookup(&a);
-        // Score a partner by predicted slot time; among near-equal slot
-        // times prefer the partner that gets the most of its own work done
-        // inside the slot (max min(ta, tb)).
-        //
-        // Scenario split per the paper's Fig. 2: two *saturating* kernels
-        // share via Eqs. 4+5 (scenario a); a non-saturating (compute-bound)
-        // kernel simply subtracts its demand (scenario c — it addresses a
-        // scalable resource and barely touches the interface).
-        let predict = |t: &Task| -> (f64, f64) {
-            let ct = lookup(t);
-            let (na, nb) = (half, m.cores - half);
-            let (da, db) = (na as f64 * ca.f * ca.bs_gbs, nb as f64 * ct.f * ct.bs_gbs);
-            let sat_a = na as f64 * ca.f >= 0.95;
-            let sat_b = nb as f64 * ct.f >= 0.95;
-            let (bw_a, bw_b) = match (sat_a, sat_b) {
-                (true, true) => {
-                    let p = share_two_groups(
-                        &KernelGroup { n: na, f: ca.f, bs_gbs: ca.bs_gbs },
-                        &KernelGroup { n: nb, f: ct.f, bs_gbs: ct.bs_gbs },
-                    );
-                    (p.group_bw_gbs[0], p.group_bw_gbs[1])
-                }
-                (true, false) => (da.min(ca.bs_gbs - db), db),
-                (false, true) => (da, db.min(ct.bs_gbs - da)),
-                (false, false) => (da, db),
-            };
-            let ta = a.gbytes / bw_a.max(1e-9);
-            let tb = t.gbytes / bw_b.max(1e-9);
-            (ta.max(tb), ta.min(tb))
-        };
-        let best = queue
-            .iter()
-            .enumerate()
-            .min_by(|(_, x), (_, y)| {
-                let (tx, fx) = predict(x);
-                let (ty, fy) = predict(y);
-                // 2% slot-time tolerance, then maximize filled work.
-                if (tx - ty).abs() / tx.max(ty).max(1e-9) < 0.02 {
-                    fy.partial_cmp(&fx).unwrap()
-                } else {
-                    tx.partial_cmp(&ty).unwrap()
-                }
-            })
-            .map(|(i, _)| i)
-            .unwrap();
-        let b = queue.remove(best);
-        total += co_run_time(m, &a, &b);
-    }
-    total
+    let pair_tasks: Vec<PairTask> = tasks
+        .iter()
+        .map(|t| {
+            let c = lookup(t);
+            PairTask { name: t.name.to_string(), f: c.f, bs_gbs: c.bs_gbs, gbytes: t.gbytes }
+        })
+        .collect();
+    let plan = plan_pairing(m.cores, &pair_tasks, 1);
+    plan.pairs
+        .iter()
+        .map(|&(a, b)| match b {
+            Some(b) => co_run_time(m, &tasks[a], &tasks[b]),
+            None => {
+                let c = lookup(&tasks[a]);
+                tasks[a].gbytes / (m.cores as f64 * c.f * c.bs_gbs).min(c.bs_gbs)
+            }
+        })
+        .sum()
 }
 
 fn main() {

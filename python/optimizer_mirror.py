@@ -1,0 +1,324 @@
+"""Pure-Python mirror of the optimizer's delta evaluation
+(rust/src/optimizer/delta.rs), validated against the full share_remote
+re-solve of netfluid_mirror.py before the Rust port.
+
+The claim under test (docs/OPTIMIZER.md, "delta-evaluation invariant"):
+
+    A candidate move changes the (home, remote_frac) of a subset of
+    groups. Re-running the pass-1 water-fill ONLY on the interfaces whose
+    portion inputs changed -- and copying every other portion's grant from
+    the incumbent fill, keyed by (group, target) -- reproduces the full
+    pass-1 fill bit for bit. Gating detection on those grants is then
+    also bit-identical, and the gated minority falls back to the full
+    Gauss-Seidel solve (which IS the reference), so the final per-group
+    rates are bit-identical to share_remote on every composition.
+
+Why the dirty set is what it is:
+
+* A mem interface d is dirty iff some changed group's portion weight at
+  target d differs from before (home moves swap the 1-r / r/(D-1)
+  weights of the two endpoints; a remote-fraction retune changes every
+  weight of the group). Portions of UNchanged groups at d keep identical
+  (n*w, f, bs*scale[d]) inputs; portions of changed groups with equal
+  weight do too, because weight values r/(D-1) are computed by the same
+  expression from the same operands.
+* A directed link is dirty iff a changed group's portion enters, leaves,
+  or changes weight on it (a cross-socket home move redirects portions
+  to the other direction; an intra-socket move keeps link ids and
+  weights).
+* Member ORDER per interface is stable under clean-ness: portions are
+  group-major with targets ascending, and each group has at most one
+  portion per target, so a clean interface sees the same members in the
+  same order -- float summation order (b_mix) cannot drift.
+
+Run:  python3 python/optimizer_mirror.py
+"""
+
+import math
+import random
+
+from netfluid_mirror import (
+    MACHINES,
+    _expand_portions,
+    _fill,
+    _group_rate,
+    net_of,
+    share_remote,
+    share_weighted_capped,
+)
+
+
+def _routes(net, home, r):
+    """(target, link_or_None, weight) triples of one group -- the shared
+    portion-routing rule (portion_routes in sharing/remote.rs)."""
+    nd = len(net.mem_caps)
+    out = []
+    if 1.0 - r > 0.0:
+        out.append((home, None, 1.0 - r))
+    if r > 0.0:
+        w = r / (nd - 1)
+        for t in range(nd):
+            if t == home:
+                continue
+            link = None
+            if net.socket_of[t] != net.socket_of[home] and net.links:
+                link = net.links.index((net.socket_of[home], net.socket_of[t]))
+            out.append((t, link, w))
+    return out
+
+
+class DeltaEval:
+    """Incremental pass-1 evaluator over (home, remote_frac) moves."""
+
+    def __init__(self, net, groups):
+        self.net = net
+        self.groups = list(groups)
+        self.portions = _expand_portions(net, groups)
+        caps = [math.inf] * len(groups)
+        self.mem_grant, self.link_grant = _fill(net, groups, self.portions, caps)
+        self.rates, self.gated = self._finish(groups, self.portions,
+                                              self.mem_grant, self.link_grant)
+        # Effort counters (the Rust port surfaces these through SimStats).
+        self.iface_evals = len(net.mem_caps) + len(net.links)
+        self.iface_reused = 0
+        self.full_solves = 0
+
+    def _finish(self, groups, portions, mem_grant, link_grant):
+        rates = [_group_rate(groups, portions, mem_grant, link_grant, g)
+                 for g in range(len(groups))]
+        gated = False
+        for i, (g, _, link, w) in enumerate(portions):
+            n = groups[g][1]
+            if n == 0:
+                continue
+            grant = mem_grant[i] if link is None else min(mem_grant[i], link_grant[i])
+            if grant / (n * w) > rates[g] * (1.0 + 1e-9):
+                gated = True
+        if gated:
+            self_rates, _, _ = share_remote(self.net, groups)
+            return self_rates, True
+        return rates, False
+
+    def dirty_set(self, changes):
+        """(dirty mem domains, dirty links) of a move; changes maps
+        group index -> new (home, n, f, bs, r)."""
+        dirty_mem, dirty_link = set(), set()
+        for gi, new_g in changes.items():
+            old = {t: (l, w) for t, l, w in
+                   _routes(self.net, self.groups[gi][0], self.groups[gi][4])}
+            new = {t: (l, w) for t, l, w in _routes(self.net, new_g[0], new_g[4])}
+            for t in set(old) | set(new):
+                lo, wo = old.get(t, (None, 0.0))
+                ln, wn = new.get(t, (None, 0.0))
+                if wo != wn:
+                    dirty_mem.add(t)
+                if (lo, wo) != (ln, wn):
+                    if lo is not None:
+                        dirty_link.add(lo)
+                    if ln is not None:
+                        dirty_link.add(ln)
+        return dirty_mem, dirty_link
+
+    def eval_move(self, changes):
+        """Score a move without committing: returns (rates, state) where
+        state carries everything commit() needs."""
+        net = self.net
+        new_groups = list(self.groups)
+        for gi, g in changes.items():
+            new_groups[gi] = g
+        new_portions = _expand_portions(net, new_groups)
+        dirty_mem, dirty_link = self.dirty_set(changes)
+
+        # Old grants keyed by (group, target): each group has exactly one
+        # portion per target, so the key is unique.
+        old_at = {(p[0], p[1]): i for i, p in enumerate(self.portions)}
+        nd = len(net.mem_caps)
+        # scale as _fill computes it (mem_caps[d] / capacity):
+        from netfluid_mirror import capacity_lines_per_cy
+        cap0 = capacity_lines_per_cy(net.m)
+        scale = [net.mem_caps[d] / cap0 for d in range(nd)]
+
+        mem_grant = [0.0] * len(new_portions)
+        link_grant = [0.0] * len(new_portions)
+        caps = [math.inf] * len(new_groups)
+
+        for d in range(nd):
+            idx = [i for i, p in enumerate(new_portions) if p[1] == d]
+            if d in dirty_mem:
+                wg = [(new_groups[new_portions[i][0]][1] * new_portions[i][3],
+                       new_groups[new_portions[i][0]][2],
+                       new_groups[new_portions[i][0]][3] * scale[d]) for i in idx]
+                n_tot = sum(g[0] for g in wg)
+                if n_tot == 0.0:
+                    continue
+                b_mix = sum(g[0] * g[2] for g in wg) / n_tot
+                rc = [caps[new_portions[i][0]] for i in idx]
+                for i, bw in zip(idx, share_weighted_capped(wg, b_mix, rc)):
+                    mem_grant[i] = bw
+                self.iface_evals += 1
+            else:
+                for i in idx:
+                    mem_grant[i] = self.mem_grant[old_at[(new_portions[i][0],
+                                                          new_portions[i][1])]]
+                self.iface_reused += 1
+        for l in range(len(net.links)):
+            idx = [i for i, p in enumerate(new_portions) if p[2] == l]
+            if l in dirty_link:
+                if not idx:
+                    self.iface_evals += 1
+                    continue
+                wg = [(new_groups[new_portions[i][0]][1] * new_portions[i][3],
+                       new_groups[new_portions[i][0]][2],
+                       new_groups[new_portions[i][0]][3] * scale[new_portions[i][1]])
+                      for i in idx]
+                rc = [caps[new_portions[i][0]] for i in idx]
+                for i, bw in zip(idx, share_weighted_capped(wg, net.link_caps_gbs[l], rc)):
+                    link_grant[i] = bw
+                self.iface_evals += 1
+            else:
+                for i in idx:
+                    link_grant[i] = self.link_grant[old_at[(new_portions[i][0],
+                                                            new_portions[i][1])]]
+                self.iface_reused += 1
+
+        rates = [_group_rate(new_groups, new_portions, mem_grant, link_grant, g)
+                 for g in range(len(new_groups))]
+        gated = False
+        for i, (g, _, link, w) in enumerate(new_portions):
+            n = new_groups[g][1]
+            if n == 0:
+                continue
+            grant = mem_grant[i] if link is None else min(mem_grant[i], link_grant[i])
+            if grant / (n * w) > rates[g] * (1.0 + 1e-9):
+                gated = True
+        if gated:
+            rates, _, _ = share_remote(net, new_groups)
+            self.full_solves += 1
+        return rates, (new_groups, new_portions, mem_grant, link_grant, rates, gated)
+
+    def commit(self, state):
+        (self.groups, self.portions, self.mem_grant, self.link_grant,
+         self.rates, self.gated) = state
+
+
+def random_shape(rng):
+    m = dict(MACHINES["rome"])
+    kind = rng.choice(["2x1", "2x2", "2x4", "4x1", "1x4"])
+    sockets, per = (int(kind.split("x")[0]), int(kind.split("x")[1]))
+    if rng.random() < 0.3:
+        m["link_bw"] = rng.choice([2.0, 8.0, 20.0])
+    if rng.random() < 0.3:
+        m["link_bw_rev"] = rng.choice([2.0, 8.0, 20.0])
+    scale = None
+    if rng.random() < 0.3:
+        scale = [rng.choice([0.5, 1.0, 1.25]) for _ in range(sockets * per)]
+    return net_of(m, sockets, per, scale)
+
+
+def random_groups(rng, nd, k):
+    levels = [0.0, 0.1, 0.25, 0.5, 1.0]
+    out = []
+    for _ in range(k):
+        out.append((rng.randrange(nd), rng.choice([1, 2, 4, 8]),
+                    rng.choice([0.08, 0.3, 0.55, 0.84]),
+                    rng.choice([24.0, 32.0, 60.0]),
+                    rng.choice(levels)))
+    return out
+
+
+def random_move(rng, groups, nd):
+    levels = [0.0, 0.1, 0.25, 0.5, 1.0]
+    kind = rng.choice(["migrate", "retune", "swap"])
+    if kind == "swap" and len(groups) >= 2:
+        a, b = rng.sample(range(len(groups)), 2)
+        ga, gb = groups[a], groups[b]
+        return {a: (gb[0],) + ga[1:], b: (ga[0],) + gb[1:]}
+    gi = rng.randrange(len(groups))
+    g = groups[gi]
+    if kind == "retune":
+        return {gi: g[:4] + (rng.choice(levels),)}
+    return {gi: (rng.randrange(nd),) + g[1:]}
+
+
+def check_delta_vs_full(cases=300, moves_per_case=8, seed=0xD17A):
+    rng = random.Random(seed)
+    gated_hits = 0
+    reused_total = evald_total = 0
+    for case in range(cases):
+        net = random_shape(rng)
+        nd = len(net.mem_caps)
+        groups = random_groups(rng, nd, rng.choice([2, 3, 4, 6, 8]))
+        delta = DeltaEval(net, groups)
+        ref_rates, _, _ = share_remote(net, groups)
+        assert delta.rates == ref_rates, f"case {case}: init mismatch"
+        for mv in range(moves_per_case):
+            changes = random_move(rng, delta.groups, nd)
+            rates, state = delta.eval_move(changes)
+            new_groups = list(delta.groups)
+            for gi, g in changes.items():
+                new_groups[gi] = g
+            ref_rates, ref_portions, ref_info = share_remote(net, new_groups)
+            assert rates == ref_rates, (
+                f"case {case} move {mv}: delta {rates} != full {ref_rates}\n"
+                f"  groups {new_groups}")
+            if not state[5]:  # ungated: grants must match pass 1 exactly
+                assert state[2] == ref_info["mem_grant"], f"case {case} move {mv}: mem"
+                assert state[3] == ref_info["link_grant"], f"case {case} move {mv}: link"
+            else:
+                gated_hits += 1
+            delta.commit(state)
+        reused_total += delta.iface_reused
+        evald_total += delta.iface_evals
+    assert gated_hits > 0, "the sweep never exercised the gated fallback"
+    assert reused_total > evald_total, (
+        f"delta must reuse more interfaces than it evaluates "
+        f"(reused {reused_total}, evaluated {evald_total})")
+    print(f"[OK] delta == full on {cases} cases x {moves_per_case} moves "
+          f"({gated_hits} gated fallbacks, {reused_total} ifaces reused, "
+          f"{evald_total} evaluated)")
+
+
+def check_clean_interface_inputs(cases=200, seed=0xFACE):
+    """Independent check of the dirty-set rule itself: on every move, the
+    (n*w, f, bs*scale, order) inputs of every CLEAN interface are
+    bit-identical before and after."""
+    from netfluid_mirror import capacity_lines_per_cy
+    rng = random.Random(seed)
+    for case in range(cases):
+        net = random_shape(rng)
+        nd = len(net.mem_caps)
+        cap0 = capacity_lines_per_cy(net.m)
+        scale = [net.mem_caps[d] / cap0 for d in range(nd)]
+        groups = random_groups(rng, nd, rng.choice([2, 4, 8]))
+        delta = DeltaEval(net, groups)
+        changes = random_move(rng, groups, nd)
+        new_groups = list(groups)
+        for gi, g in changes.items():
+            new_groups[gi] = g
+        dirty_mem, dirty_link = delta.dirty_set(changes)
+        old_p = _expand_portions(net, groups)
+        new_p = _expand_portions(net, new_groups)
+
+        def iface_inputs(portions, gs, d=None, l=None):
+            sel = [p for p in portions if (p[1] == d if d is not None else p[2] == l)]
+            t = d if d is not None else None
+            return [(p[0], p[1], gs[p[0]][1] * p[3], gs[p[0]][2],
+                     gs[p[0]][3] * scale[p[1]]) for p in sel]
+
+        for d in range(nd):
+            if d in dirty_mem:
+                continue
+            assert iface_inputs(old_p, groups, d=d) == iface_inputs(new_p, new_groups, d=d), (
+                f"case {case}: clean mem iface {d} inputs drifted")
+        for l in range(len(net.links)):
+            if l in dirty_link:
+                continue
+            assert iface_inputs(old_p, groups, l=l) == iface_inputs(new_p, new_groups, l=l), (
+                f"case {case}: clean link {l} inputs drifted")
+    print(f"[OK] clean-interface inputs bit-stable on {cases} random moves")
+
+
+if __name__ == "__main__":
+    check_clean_interface_inputs()
+    check_delta_vs_full()
+    print("optimizer mirror: all checks passed")

@@ -82,6 +82,16 @@ pub struct SimStats {
     pub remote_misses: u64,
     /// Live entries in the remote rate model's memo at the end of the run.
     pub remote_entries: usize,
+    /// Hits of the placement optimizer's sharded score memo
+    /// ([`crate::optimizer::ShardedScoreMemo`]); zero on plain co-sim
+    /// runs — the field rides along so every BENCH payload surfaces
+    /// cache-thrash regressions through one counter struct.
+    pub memo_hits: u64,
+    /// Misses of the sharded score memo (zero on plain co-sim runs).
+    pub memo_misses: u64,
+    /// Live entries in the sharded score memo at the end of the search
+    /// (zero on plain co-sim runs).
+    pub memo_entries: usize,
 }
 
 /// Result of a co-simulation.

@@ -37,6 +37,10 @@
 //! * [`desync`] — rank-level co-simulation of barrier-free MPI programs
 //!   (HPCG), reproducing the desynchronization phenomenology of Figs. 1/3;
 //!   a thin driver over [`timeline`],
+//! * [`optimizer`] — the placement/co-schedule search engine built *on*
+//!   the model: neighborhood search over home domains and remote
+//!   fractions with incremental (bit-identical) delta re-rating, batched
+//!   parallel scoring, and a sharded score memo (`docs/OPTIMIZER.md`),
 //! * [`runtime`] — PJRT client that loads the AOT-compiled JAX/Pallas batched
 //!   simulator (`artifacts/*.hlo.txt`) and runs it from the hot path (gated
 //!   behind the `pjrt` cargo feature; a stub fails gracefully without it),
@@ -60,6 +64,7 @@ pub mod desync;
 pub mod ecm;
 pub mod error;
 pub mod kernels;
+pub mod optimizer;
 pub mod parallel;
 pub mod report;
 pub mod runtime;

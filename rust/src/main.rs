@@ -21,8 +21,14 @@
 //!            [--topology domain|socket|<D>|<S>x<D>|snc<N>|<S>xsnc<N>|<N>n<spec>]
 //!            [--placement compact|scatter] [--remote-frac F]
 //!            [--engine ecm|fluid|des|pjrt]   # characterization source
+//! repro optimize [--machine M] [--topology <S>x<D>|...] [--mix "dcopy:8+ddot2:8"]
+//!                [--objective throughput|makespan|max-interference]
+//!                [--starts N] [--beam B] [--budget N] [--seed S]
+//!                [--gb-per-core G] [--engine ecm|fluid|des|pjrt] [--out results/]
+//!                # placement search: `@dN` pins and `%r` fractions in the
+//!                # mix are hard constraints; everything else is searched
 //! repro bench [--mode smoke|full] [--out results/]
-//!             # BENCH_{cosim,topology,multi_iface,cluster}.json
+//!             # BENCH_{cosim,topology,multi_iface,cluster,optimizer}.json
 //! repro dump-configs <dir>              # write machine TOMLs
 //! repro selftest                        # PJRT artifact vs rust engines
 //! ```
@@ -39,6 +45,7 @@ use membw::config::{builtin_machines, machine, machine_by_name, machine_to_toml,
 use membw::desync::{hpcg_program, CoSimConfig, CoSimEngine, HpcgVariant, NoiseModel, SimStats};
 use membw::error::Result;
 use membw::kernels::{all_kernels, kernel, KernelId};
+use membw::optimizer::{optimize, Objective, SearchConfig, SearchSpace};
 use membw::report::{self, ExperimentCtx};
 use membw::runtime::{ArtifactPaths, PjrtRuntime, PjrtSimExecutor, SimCase};
 use membw::scenario::{run_mixes, run_mixes_on, CharCache, CharSource, Mix, Scenario};
@@ -120,6 +127,22 @@ fn dispatch(args: &[String]) -> Result<()> {
                 "remote-frac",
             ],
         )?),
+        "optimize" => cmd_optimize(&flags(
+            rest,
+            &[
+                "machine",
+                "topology",
+                "mix",
+                "objective",
+                "starts",
+                "beam",
+                "budget",
+                "seed",
+                "gb-per-core",
+                "engine",
+                "out",
+            ],
+        )?),
         "bench" => cmd_bench(&flags(rest, &["mode", "out"])?),
         "dump-configs" => cmd_dump_configs(rest),
         "selftest" => cmd_selftest(&flags(rest, &["tol"])?),
@@ -131,7 +154,7 @@ fn dispatch(args: &[String]) -> Result<()> {
 }
 
 const HELP: &str = "repro — bandwidth-sharing model reproduction (Afzal/Hager/Wellein 2020)\n\
-commands:\n  machines | kernels | characterize | pair | scenarios | experiment <id> | hpcg | bench | dump-configs <dir> | selftest\n\
+commands:\n  machines | kernels | characterize | pair | scenarios | experiment <id> | hpcg | optimize | bench | dump-configs <dir> | selftest\n\
 run `repro experiment all --out results/` to regenerate every table and figure;\n\
 `repro scenarios --mix \"dcopy:4+ddot2:4+idle:2\"` measures a k-group workload mix;\n\
 `repro scenarios --machine rome --topology socket --mix \"dcopy:16@scatter+ddot2:16@scatter\"`\n\
@@ -139,9 +162,12 @@ run `repro experiment all --out results/` to regenerate every table and figure;\
 `repro scenarios --machine rome --topology 2x4 --remote-frac 0.25 --mix \"dcopy:32@scatter+ddot2:32@scatter\"`\n\
   runs a dual-socket Rome with remote accesses crossing the xGMI link (per-link tables);\n\
 `repro hpcg --machine rome --topology socket` co-simulates a full 32-rank Rome socket;\n\
+`repro optimize --machine rome --topology 2x4 --mix \"dcopy:8+ddot2:8+stream:8+daxpy:8\"`\n\
+  searches home domains and %r fractions for the best placement (docs/OPTIMIZER.md);\n\
 `repro bench` runs the fixed-seed benchmarks and writes BENCH_cosim.json,\n\
-  BENCH_topology.json, BENCH_multi_iface.json and BENCH_cluster.json\n\
-  (the 64-node cluster co-sim: incremental re-rating vs full recompute);\n\
+  BENCH_topology.json, BENCH_multi_iface.json, BENCH_cluster.json\n\
+  (the 64-node cluster co-sim: incremental re-rating vs full recompute)\n\
+  and BENCH_optimizer.json (placement-search evaluation throughput);\n\
 see docs/CLI.md for every flag with sample output.";
 
 fn cmd_machines() -> Result<()> {
@@ -460,17 +486,101 @@ fn cmd_hpcg(f: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// Search placements of a k-group mix over a ccNUMA topology with the
+/// analytic model as the scoring inner loop (`docs/OPTIMIZER.md`). `@dN`
+/// pins and explicit `%r` fractions in the mix are hard constraints; free
+/// groups get their home domain and remote fraction searched. Prints the
+/// incumbent trace and winner tables, writes `optimizer_<topology>.{txt,csv}`
+/// under `--out`.
+fn cmd_optimize(f: &HashMap<String, String>) -> Result<()> {
+    let m = machine_by_name(f.get("machine").map(String::as_str).unwrap_or("rome"))?;
+    let topo = Topology::parse(&m, f.get("topology").map(String::as_str).unwrap_or("2x4"))?;
+    let mix = Mix::parse(
+        f.get("mix").map(String::as_str).unwrap_or("dcopy:8+ddot2:8+stream:8+daxpy:8"),
+    )?;
+    let engine_key = f.get("engine").map(String::as_str).unwrap_or("ecm");
+    // The PJRT executor must outlive the characterization source.
+    let pjrt_exec: Option<PjrtSimExecutor> = if engine_key == "pjrt" {
+        let runtime = PjrtRuntime::cpu()?;
+        eprintln!("# PJRT: {}", runtime.platform());
+        Some(PjrtSimExecutor::load(&runtime, &ArtifactPaths::default_dir())?)
+    } else {
+        None
+    };
+    let source = match engine_key {
+        "ecm" => CharSource::Ecm,
+        "fluid" => CharSource::Measured(MeasureEngine::Fluid),
+        "des" => CharSource::Measured(MeasureEngine::Des),
+        "pjrt" => CharSource::Measured(MeasureEngine::Pjrt(pjrt_exec.as_ref().unwrap())),
+        other => {
+            return Err(membw::Error::InvalidPlan(format!(
+                "unknown characterization engine '{other}' (ecm, fluid, des, pjrt)"
+            )));
+        }
+    };
+
+    // Characterize against the base machine: RemoteGroup.bs_gbs is the
+    // nominal saturated bandwidth; the model scales per portion through
+    // shape.bw_scale (same convention as the scenario runner).
+    let mut kernels: Vec<KernelId> = mix.groups.iter().map(|g| g.kernel).collect();
+    kernels.sort_by_key(|k| k.key());
+    kernels.dedup();
+    let meas = CharCache::global().characterize_source(&topo.base, &kernels, &source)?;
+    let chars: HashMap<KernelId, (f64, f64)> =
+        meas.iter().map(|(&k, c)| (k, (c.f, c.bs_gbs))).collect();
+    let space = SearchSpace::from_mix(&topo, &mix, &chars)?;
+
+    let parse_num = |key: &str, default: usize| -> Result<usize> {
+        match f.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                membw::Error::InvalidPlan(format!("--{key} expects an integer, got '{v}'"))
+            }),
+        }
+    };
+    let defaults = SearchConfig::default();
+    let cfg = SearchConfig {
+        objective: Objective::parse(
+            f.get("objective").map(String::as_str).unwrap_or("throughput"),
+        )?,
+        seed: parse_num("seed", defaults.seed as usize)? as u64,
+        starts: parse_num("starts", defaults.starts)?,
+        beam: parse_num("beam", defaults.beam)?,
+        budget: parse_num("budget", defaults.budget)?,
+        gb_per_core: match f.get("gb-per-core") {
+            None => defaults.gb_per_core,
+            Some(v) => v.parse().map_err(|_| {
+                membw::Error::InvalidPlan(format!("--gb-per-core expects a number, got '{v}'"))
+            })?,
+        },
+        ..defaults
+    };
+
+    let result = optimize(&space, &cfg)?;
+    let out = PathBuf::from(f.get("out").cloned().unwrap_or_else(|| "results".into()));
+    // The report only needs the output directory; `--engine` above picks the
+    // characterization source, not a measurement engine.
+    let ctx = ExperimentCtx { out_dir: out, engine: Engine::Fluid, pjrt: None };
+    let text = report::optimizer_report(&ctx, &topo, &space, &cfg, &result)?;
+    println!("{text}");
+    std::fs::write(ctx.out_dir.join(format!("optimizer_{}.txt", topo.label())), &text)?;
+    Ok(())
+}
+
 /// Fixed-seed performance benchmarks: the Fig. 3 co-simulation, a
 /// scenario-pipeline workload, the 4-domain Rome-socket topology co-sim,
 /// the multi-interface remote-access pipeline vs its single-interface
 /// baseline, and the 64-node cluster co-sim (incremental re-rating vs the
-/// full-recompute reference). Emits `BENCH_cosim.json`,
-/// `BENCH_topology.json`, `BENCH_multi_iface.json`, and
-/// `BENCH_cluster.json` under `--out` (CI uploads all as artifacts,
+/// full-recompute reference), plus the placement-optimizer search
+/// (delta + parallel + memo vs a sequential full-re-solve baseline on an
+/// 8-group dual-socket Rome mix). Emits `BENCH_cosim.json`,
+/// `BENCH_topology.json`, `BENCH_multi_iface.json`, `BENCH_cluster.json`,
+/// and `BENCH_optimizer.json` under `--out` (CI uploads all as artifacts,
 /// checks their existence, and gates events/s regressions against the
 /// committed baselines). Every payload carries the cache counters of the
 /// run: the shared characterization cache plus, for co-sims, the
-/// per-domain share memos and the remote rate-model memo.
+/// per-domain share memos and the remote rate-model memo, and for the
+/// optimizer, the sharded score-memo counters.
 fn cmd_bench(f: &HashMap<String, String>) -> Result<()> {
     let out_dir = PathBuf::from(f.get("out").cloned().unwrap_or_else(|| "results".into()));
     let smoke = match f.get("mode").map(String::as_str) {
@@ -511,7 +621,8 @@ fn cmd_bench(f: &HashMap<String, String>) -> Result<()> {
         format!(
             "{{ \"rate_evals\": {}, \"node_rates_reused\": {}, \"share_hits\": {}, \
              \"share_misses\": {}, \"remote_hits\": {}, \"remote_misses\": {}, \
-             \"remote_entries\": {} }}",
+             \"remote_entries\": {}, \"memo_hits\": {}, \"memo_misses\": {}, \
+             \"memo_entries\": {} }}",
             s.rate_evals,
             s.node_rates_reused,
             s.share_hits,
@@ -519,6 +630,9 @@ fn cmd_bench(f: &HashMap<String, String>) -> Result<()> {
             s.remote_hits,
             s.remote_misses,
             s.remote_entries,
+            s.memo_hits,
+            s.memo_misses,
+            s.memo_entries,
         )
     };
     let char_cache_json = || {
@@ -868,6 +982,112 @@ fn cmd_bench(f: &HashMap<String, String>) -> Result<()> {
     let cluster_path = out_dir.join("BENCH_cluster.json");
     std::fs::write(&cluster_path, &cluster_json)?;
     println!("wrote {}", cluster_path.display());
+
+    // --- placement optimizer: an 8-group 64-core mix on a dual-socket
+    // NPS4 Rome (8 domains + 2 directed xGMI links). The production path
+    // (incremental delta re-rating + batched parallel scoring + sharded
+    // score memo) is timed against the sequential baseline that re-solves
+    // the full remote fixed point for every candidate. Both modes are
+    // pinned to the identical winner and bit-identical best score first,
+    // so evaluations/s ratios are pure engine speedup. Emitted as
+    // BENCH_optimizer.json (CI checks its existence and gates
+    // evaluations/s + speedup regressions) ---
+    let opt_topo = Topology::parse(&rome, "2x4")?;
+    let opt_mix = Mix::parse(
+        "dcopy:8+ddot2:8+stream:8+daxpy:8+schoenauer:8+vecsum:8+dscal:8+ddot3:8",
+    )?;
+    let mut opt_kernels: Vec<KernelId> = opt_mix.groups.iter().map(|g| g.kernel).collect();
+    opt_kernels.sort_by_key(|k| k.key());
+    opt_kernels.dedup();
+    let opt_meas =
+        CharCache::global().characterize_source(&opt_topo.base, &opt_kernels, &CharSource::Ecm)?;
+    let opt_chars: HashMap<KernelId, (f64, f64)> =
+        opt_meas.iter().map(|(&k, c)| (k, (c.f, c.bs_gbs))).collect();
+    let opt_space = SearchSpace::from_mix(&opt_topo, &opt_mix, &opt_chars)?;
+    let opt_cfg = SearchConfig {
+        budget: if smoke { 400 } else { 1500 },
+        ..SearchConfig::default()
+    };
+    let base_cfg = SearchConfig {
+        parallel: false,
+        use_delta: false,
+        memoize: false,
+        ..opt_cfg
+    };
+    let opt_warm = optimize(&opt_space, &opt_cfg)?; // warm-up + reference
+    let base_warm = optimize(&opt_space, &base_cfg)?;
+    assert_eq!(
+        base_warm.best, opt_warm.best,
+        "delta/parallel/memo scoring must find the identical winner"
+    );
+    assert_eq!(
+        base_warm.best_score.to_bits(),
+        opt_warm.best_score.to_bits(),
+        "delta re-rating must be bit-identical to the full re-solve"
+    );
+    let mut owalls = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let r = optimize(&opt_space, &opt_cfg)?;
+        owalls.push(t0.elapsed().as_secs_f64());
+        assert_eq!(r.best, opt_warm.best, "optimizer search must be deterministic");
+    }
+    let opt_wall = membw::stats::median(&owalls);
+    let mut bwalls = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let r = optimize(&opt_space, &base_cfg)?;
+        bwalls.push(t0.elapsed().as_secs_f64());
+        assert_eq!(r.best, opt_warm.best, "optimizer search must be deterministic");
+    }
+    let base_wall = membw::stats::median(&bwalls);
+    let opt_eps = opt_warm.scored as f64 / opt_wall;
+    let base_eps = base_warm.scored as f64 / base_wall;
+    let opt_speedup = (base_wall / base_warm.scored as f64) / (opt_wall / opt_warm.scored as f64);
+    println!(
+        "optimizer ({}, {} groups, budget {}): delta+parallel+memo {:.1} ms ({:.0} evals/s), \
+         sequential full {:.1} ms ({:.0} evals/s) — speedup {:.1}x; \
+         {} interfaces re-rated, {} reused, {} full solves",
+        opt_topo.label(),
+        opt_space.k(),
+        opt_cfg.budget,
+        opt_wall * 1e3,
+        opt_eps,
+        base_wall * 1e3,
+        base_eps,
+        opt_speedup,
+        opt_warm.delta.iface_evals,
+        opt_warm.delta.iface_reused,
+        opt_warm.delta.full_solves,
+    );
+    let opt_json = format!(
+        "{{\n  \"mode\": \"{}\",\n  \"optimizer\": {{\n    \"topology\": \"{}\",\n    \"groups\": {},\n    \"objective\": \"{}\",\n    \"starts\": {},\n    \"beam\": {},\n    \"budget\": {},\n    \"evaluations\": {},\n    \"wall_s\": {:.6},\n    \"evaluations_per_s\": {:.1},\n    \"full_evaluations\": {},\n    \"full_wall_s\": {:.6},\n    \"full_evaluations_per_s\": {:.1},\n    \"speedup_vs_full\": {:.3},\n    \"best_label\": \"{}\",\n    \"best_score\": {:.6},\n    \"delta\": {{ \"evals\": {}, \"iface_evals\": {}, \"iface_reused\": {}, \"full_solves\": {} }},\n    \"stats\": {}\n  }},\n  \"char_cache\": {}\n}}\n",
+        if smoke { "smoke" } else { "full" },
+        opt_topo.label(),
+        opt_space.k(),
+        opt_cfg.objective.name(),
+        opt_cfg.starts,
+        opt_cfg.beam,
+        opt_cfg.budget,
+        opt_warm.scored,
+        opt_wall,
+        opt_eps,
+        base_warm.scored,
+        base_wall,
+        base_eps,
+        opt_speedup,
+        opt_warm.best_label,
+        opt_warm.best_score,
+        opt_warm.delta.evals,
+        opt_warm.delta.iface_evals,
+        opt_warm.delta.iface_reused,
+        opt_warm.delta.full_solves,
+        stats_json(&opt_warm.stats),
+        char_cache_json(),
+    );
+    let opt_path = out_dir.join("BENCH_optimizer.json");
+    std::fs::write(&opt_path, &opt_json)?;
+    println!("wrote {}", opt_path.display());
 
     let json_opt = |x: Option<f64>| x.map(|v| format!("{v:.6}")).unwrap_or_else(|| "null".into());
     let cosim_json: Vec<String> = cosim_rows

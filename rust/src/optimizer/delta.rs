@@ -1,0 +1,451 @@
+//! Incremental re-rating of placement candidates ("delta evaluation").
+//!
+//! A neighborhood move changes one or two groups' `(home, remote_frac)`.
+//! Only the interfaces whose *member portions* change can produce
+//! different water-fill grants: the pass-1 grant of an interface is a
+//! pure function of its member `(group, weight, target)` list, and a
+//! group contributes at most one portion per memory interface. So a move
+//! re-runs [`fill_mem_iface`]/[`fill_link_iface`] on the dirty interfaces
+//! only and copies every other grant from the incumbent, keyed by
+//! `(group, target)`.
+//!
+//! **Dirty rule** (validated bit-exact against the full solve by
+//! `python/optimizer_mirror.py`, 300 cases × 8 moves):
+//!
+//! * memory interface `d` is dirty iff some changed group's portion
+//!   weight at target `d` differs (exact `f64` inequality — no epsilon);
+//! * a link is dirty iff some changed group's `(weight, link)` pair at a
+//!   target differs, in which case both the old and the new link of that
+//!   target are marked.
+//!
+//! Clean interfaces see bit-identical member inputs in the same order
+//! (portions are group-major and each group posts at most one portion
+//! per interface), so copying their grants is exact, not approximate.
+//!
+//! Gating is where incrementality ends: once [`any_gated`] fires, the
+//! Gauss-Seidel fixed point couples every interface, so the evaluator
+//! falls back to the full [`share_remote`] solve — trivially
+//! bit-identical, just not incremental. The stored state always keeps
+//! the *pass-1* grants (what clean-copy needs) and the *final* rates
+//! (what scoring needs).
+//!
+//! Changes may alter a group's `home` and `remote_frac` only; `n`, `f`,
+//! and `bs_gbs` must stay fixed (the dirty rule keys on weights, not
+//! traffic character — debug-asserted in [`DeltaEval::eval`]).
+
+use crate::error::Result;
+use crate::sharing::remote::{
+    any_gated, expand_portions, fill_link_iface, fill_mem_iface, lockstep_rate, share_remote,
+};
+use crate::sharing::{Portion, RemoteGroup, TopoShape};
+
+/// Counters of the delta evaluator, merged across a whole search.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DeltaStats {
+    /// Candidate evaluations performed (full or incremental).
+    pub evals: u64,
+    /// Interfaces re-rated from scratch.
+    pub iface_evals: u64,
+    /// Interfaces whose grants were copied from the incumbent.
+    pub iface_reused: u64,
+    /// Evaluations that fell back to the full Gauss-Seidel solve.
+    pub full_solves: u64,
+}
+
+impl DeltaStats {
+    /// Accumulate another counter set into this one.
+    pub fn merge(&mut self, other: DeltaStats) {
+        self.evals += other.evals;
+        self.iface_evals += other.iface_evals;
+        self.iface_reused += other.iface_reused;
+        self.full_solves += other.full_solves;
+    }
+}
+
+/// The result of evaluating a move against an incumbent: the would-be new
+/// incumbent state plus counters. Score from [`EvalOutcome::rates`];
+/// [`DeltaEval::commit`] it to advance the incumbent.
+#[derive(Debug, Clone)]
+pub struct EvalOutcome {
+    groups: Vec<RemoteGroup>,
+    portions: Vec<Portion>,
+    mem_grant: Vec<f64>,
+    link_grant: Vec<f64>,
+    /// Final per-core rate of each group, GB/s (post fixed point when the
+    /// candidate is gated).
+    pub rates: Vec<f64>,
+    /// Whether the candidate needed the Gauss-Seidel fallback.
+    pub gated: bool,
+    /// Counters of this one evaluation (`evals == 1`).
+    pub stats: DeltaStats,
+}
+
+/// Incremental evaluator holding one incumbent placement's solved state.
+///
+/// [`DeltaEval::eval`] takes `&self` — a frontier node's evaluator can
+/// score all its neighbor moves from parallel threads, then
+/// [`DeltaEval::commit`] the chosen outcome.
+#[derive(Debug, Clone)]
+pub struct DeltaEval {
+    shape: TopoShape,
+    links: Vec<(usize, usize)>,
+    groups: Vec<RemoteGroup>,
+    portions: Vec<Portion>,
+    /// Pass-1 (uncapped water-fill) grants per portion — the clean-copy
+    /// source. NOT the final grants when the incumbent is gated.
+    mem_grant: Vec<f64>,
+    link_grant: Vec<f64>,
+    rates: Vec<f64>,
+}
+
+impl DeltaEval {
+    /// Solve `groups` from scratch and hold the state as the incumbent.
+    pub fn new(shape: TopoShape, groups: Vec<RemoteGroup>) -> Result<DeltaEval> {
+        let links = shape.links();
+        let mut de = DeltaEval {
+            shape,
+            links,
+            groups: Vec::new(),
+            portions: Vec::new(),
+            mem_grant: Vec::new(),
+            link_grant: Vec::new(),
+            rates: Vec::new(),
+        };
+        let outcome = de.solve_full(groups)?;
+        de.commit(outcome);
+        Ok(de)
+    }
+
+    /// Final per-core rates of the incumbent, GB/s, in group order.
+    pub fn rates(&self) -> &[f64] {
+        &self.rates
+    }
+
+    /// The incumbent's groups.
+    pub fn groups(&self) -> &[RemoteGroup] {
+        &self.groups
+    }
+
+    /// Evaluate `changes` (per-group replacements, `(index, new_group)`)
+    /// against the incumbent, re-rating dirty interfaces only.
+    ///
+    /// Bit-identical to solving the changed placement with
+    /// [`share_remote`]: same rates always, same grants whenever the
+    /// candidate is ungated (property-tested in
+    /// `tests/optimizer_conformance.rs` and mirrored in Python).
+    pub fn eval(&self, changes: &[(usize, RemoteGroup)]) -> Result<EvalOutcome> {
+        if changes.is_empty() {
+            return Ok(EvalOutcome {
+                groups: self.groups.clone(),
+                portions: self.portions.clone(),
+                mem_grant: self.mem_grant.clone(),
+                link_grant: self.link_grant.clone(),
+                rates: self.rates.clone(),
+                gated: false,
+                stats: DeltaStats {
+                    evals: 1,
+                    iface_reused: (self.shape.n_domains() + self.links.len()) as u64,
+                    ..DeltaStats::default()
+                },
+            });
+        }
+
+        let nd = self.shape.n_domains();
+        let nl = self.links.len();
+        let k = self.groups.len();
+        let links_modeled = self.shape.link_bw_gbs > 0.0;
+
+        let mut new_groups = self.groups.clone();
+        let mut dirty_mem = vec![false; nd];
+        let mut dirty_link = vec![false; nl];
+        for &(gi, ng) in changes {
+            let og = &self.groups[gi];
+            debug_assert!(
+                ng.n == og.n && ng.f == og.f && ng.bs_gbs == og.bs_gbs,
+                "delta changes may only move a group, not change its traffic character"
+            );
+            // Per-target (weight, link) of the old and new routing.
+            let mut old_w = vec![(0.0f64, None); nd];
+            for (t, link, w) in crate::sharing::portion_routes(
+                &self.shape.socket_of,
+                &self.links,
+                links_modeled,
+                og.home,
+                og.remote_frac,
+            ) {
+                old_w[t] = (w, link);
+            }
+            let mut new_w = vec![(0.0f64, None); nd];
+            for (t, link, w) in crate::sharing::portion_routes(
+                &self.shape.socket_of,
+                &self.links,
+                links_modeled,
+                ng.home,
+                ng.remote_frac,
+            ) {
+                new_w[t] = (w, link);
+            }
+            for t in 0..nd {
+                let (wo, lo) = old_w[t];
+                let (wn, ln) = new_w[t];
+                if wo != wn {
+                    dirty_mem[t] = true;
+                }
+                if (wo, lo) != (wn, ln) {
+                    if let Some(li) = lo {
+                        dirty_link[li] = true;
+                    }
+                    if let Some(li) = ln {
+                        dirty_link[li] = true;
+                    }
+                }
+            }
+            new_groups[gi] = ng;
+        }
+
+        let new_portions = expand_portions(&self.shape, &new_groups, &self.links)?;
+        let np = new_portions.len();
+
+        // Old portion index per (group, target): unique because a group
+        // posts at most one portion per target.
+        let mut old_at = vec![usize::MAX; k * nd];
+        for (i, p) in self.portions.iter().enumerate() {
+            old_at[p.group * nd + p.target] = i;
+        }
+
+        // One pass over the new portions: collect member lists of the
+        // dirty interfaces, copy incumbent grants everywhere else.
+        let mut mem_grant = vec![0.0f64; np];
+        let mut link_grant = vec![0.0f64; np];
+        let mut mem_idx: Vec<Vec<usize>> = vec![Vec::new(); nd];
+        let mut link_idx: Vec<Vec<usize>> = vec![Vec::new(); nl];
+        for (i, p) in new_portions.iter().enumerate() {
+            if dirty_mem[p.target] {
+                mem_idx[p.target].push(i);
+            } else {
+                mem_grant[i] = self.mem_grant[old_at[p.group * nd + p.target]];
+            }
+            if let Some(li) = p.link {
+                if dirty_link[li] {
+                    link_idx[li].push(i);
+                } else {
+                    link_grant[i] = self.link_grant[old_at[p.group * nd + p.target]];
+                }
+            }
+        }
+
+        let caps = vec![f64::INFINITY; k];
+        let mut stats = DeltaStats { evals: 1, ..DeltaStats::default() };
+        for d in 0..nd {
+            if dirty_mem[d] {
+                fill_mem_iface(
+                    &self.shape,
+                    &new_groups,
+                    &new_portions,
+                    &mem_idx[d],
+                    d,
+                    &caps,
+                    &mut mem_grant,
+                );
+                stats.iface_evals += 1;
+            } else {
+                stats.iface_reused += 1;
+            }
+        }
+        for li in 0..nl {
+            if dirty_link[li] {
+                fill_link_iface(
+                    &self.shape,
+                    &new_groups,
+                    &new_portions,
+                    &link_idx[li],
+                    li,
+                    &self.links,
+                    &caps,
+                    &mut link_grant,
+                );
+                stats.iface_evals += 1;
+            } else {
+                stats.iface_reused += 1;
+            }
+        }
+
+        let rates: Vec<f64> = (0..k)
+            .map(|gi| lockstep_rate(&new_groups, &new_portions, &mem_grant, &link_grant, gi))
+            .collect();
+
+        if any_gated(&new_groups, &new_portions, &mem_grant, &link_grant, &rates) {
+            // The fixed point couples every interface; fall back to the
+            // full solve for the rates but keep the pass-1 grants as the
+            // clean-copy source of later moves.
+            let full = share_remote(&self.shape, &new_groups)?;
+            stats.full_solves += 1;
+            return Ok(EvalOutcome {
+                groups: new_groups,
+                portions: new_portions,
+                mem_grant,
+                link_grant,
+                rates: full.per_core_gbs,
+                gated: true,
+                stats,
+            });
+        }
+
+        Ok(EvalOutcome {
+            groups: new_groups,
+            portions: new_portions,
+            mem_grant,
+            link_grant,
+            rates,
+            gated: false,
+            stats,
+        })
+    }
+
+    /// Make `outcome` the new incumbent.
+    pub fn commit(&mut self, outcome: EvalOutcome) {
+        self.groups = outcome.groups;
+        self.portions = outcome.portions;
+        self.mem_grant = outcome.mem_grant;
+        self.link_grant = outcome.link_grant;
+        self.rates = outcome.rates;
+    }
+
+    /// Full from-scratch solve shaped as an [`EvalOutcome`] (used by
+    /// [`DeltaEval::new`]): pass-1 fill for the grant store, final rates
+    /// from [`share_remote`].
+    fn solve_full(&self, groups: Vec<RemoteGroup>) -> Result<EvalOutcome> {
+        let portions = expand_portions(&self.shape, &groups, &self.links)?;
+        let np = portions.len();
+        let nd = self.shape.n_domains();
+        let caps = vec![f64::INFINITY; groups.len()];
+        let mut mem_grant = vec![0.0f64; np];
+        let mut link_grant = vec![0.0f64; np];
+        let mut stats = DeltaStats { evals: 1, ..DeltaStats::default() };
+        for d in 0..nd {
+            let idx: Vec<usize> = (0..np).filter(|&p| portions[p].target == d).collect();
+            fill_mem_iface(&self.shape, &groups, &portions, &idx, d, &caps, &mut mem_grant);
+            stats.iface_evals += 1;
+        }
+        for li in 0..self.links.len() {
+            let idx: Vec<usize> = (0..np).filter(|&p| portions[p].link == Some(li)).collect();
+            fill_link_iface(
+                &self.shape,
+                &groups,
+                &portions,
+                &idx,
+                li,
+                &self.links,
+                &caps,
+                &mut link_grant,
+            );
+            stats.iface_evals += 1;
+        }
+        let rates: Vec<f64> = (0..groups.len())
+            .map(|gi| lockstep_rate(&groups, &portions, &mem_grant, &link_grant, gi))
+            .collect();
+        let gated = any_gated(&groups, &portions, &mem_grant, &link_grant, &rates);
+        let rates = if gated {
+            stats.full_solves += 1;
+            share_remote(&self.shape, &groups)?.per_core_gbs
+        } else {
+            rates
+        };
+        Ok(EvalOutcome { groups, portions, mem_grant, link_grant, rates, gated, stats })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sharing::share_remote;
+    use crate::simulator::XorShift64;
+
+    fn shape(nd_per_socket: usize, sockets: usize, link: f64) -> TopoShape {
+        let mut socket_of = Vec::new();
+        for s in 0..sockets {
+            for _ in 0..nd_per_socket {
+                socket_of.push(s);
+            }
+        }
+        let n = socket_of.len();
+        TopoShape { socket_of, bw_scale: vec![1.0; n], link_bw_gbs: link, link_bw_rev_gbs: link }
+    }
+
+    fn random_groups(rng: &mut XorShift64, nd: usize, k: usize) -> Vec<RemoteGroup> {
+        (0..k)
+            .map(|_| RemoteGroup {
+                home: rng.next_below(nd),
+                n: 1 + rng.next_below(8),
+                f: 0.05 + 0.9 * rng.next_f64(),
+                bs_gbs: 10.0 + 40.0 * rng.next_f64(),
+                remote_frac: if nd >= 2 && rng.next_below(2) == 1 {
+                    [0.0, 0.1, 0.25, 0.5][rng.next_below(4)]
+                } else {
+                    0.0
+                },
+            })
+            .collect()
+    }
+
+    fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn delta_matches_full_solve_on_random_move_sequences() {
+        let mut rng = XorShift64::new(0xD17A);
+        for case in 0..60 {
+            let sh = shape(2, 2, if case % 3 == 0 { 0.0 } else { 30.0 });
+            let nd = sh.n_domains();
+            let mut groups = random_groups(&mut rng, nd, 2 + rng.next_below(4));
+            let mut de = DeltaEval::new(sh.clone(), groups.clone()).unwrap();
+            for _ in 0..6 {
+                let gi = rng.next_below(groups.len());
+                let mut ng = groups[gi];
+                if rng.next_below(2) == 0 {
+                    ng.home = rng.next_below(nd);
+                } else {
+                    ng.remote_frac = [0.0, 0.1, 0.25, 0.5][rng.next_below(4)];
+                }
+                let outcome = de.eval(&[(gi, ng)]).unwrap();
+                groups[gi] = ng;
+                let full = share_remote(&sh, &groups).unwrap();
+                assert_bits_eq(&outcome.rates, &full.per_core_gbs, "rates");
+                de.commit(outcome);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_change_reproduces_the_incumbent() {
+        let sh = shape(2, 2, 30.0);
+        let groups = random_groups(&mut XorShift64::new(3), 4, 3);
+        let de = DeltaEval::new(sh, groups).unwrap();
+        let outcome = de.eval(&[]).unwrap();
+        assert_bits_eq(&outcome.rates, de.rates(), "rates");
+        assert_eq!(outcome.stats.iface_evals, 0);
+    }
+
+    #[test]
+    fn swap_move_marks_both_groups_dirty_and_matches() {
+        let sh = shape(1, 2, 25.0);
+        let mut groups = vec![
+            RemoteGroup { home: 0, n: 4, f: 0.4, bs_gbs: 30.0, remote_frac: 0.25 },
+            RemoteGroup { home: 1, n: 4, f: 0.6, bs_gbs: 25.0, remote_frac: 0.0 },
+        ];
+        let de = DeltaEval::new(sh.clone(), groups.clone()).unwrap();
+        let changes = vec![
+            (0usize, RemoteGroup { home: 1, ..groups[0] }),
+            (1usize, RemoteGroup { home: 0, ..groups[1] }),
+        ];
+        let outcome = de.eval(&changes).unwrap();
+        groups[0].home = 1;
+        groups[1].home = 0;
+        let full = share_remote(&sh, &groups).unwrap();
+        assert_bits_eq(&outcome.rates, &full.per_core_gbs, "rates");
+    }
+}

@@ -1,0 +1,156 @@
+//! Sharded, concurrency-safe score memo for batched candidate scoring.
+//!
+//! The existing composition memos ([`crate::sharing::RemoteRateModel`]'s
+//! `HashMap` and the 2-entry-MRU `ShareCache`) are built for one
+//! sequential caller: a single lock (or `&mut self`) in front of either
+//! would serialize the 16 scoring threads of [`crate::parallel::par_map`],
+//! and an MRU of depth 2 thrashes when every thread probes a different
+//! candidate. This memo shards the key space over [`N_SHARDS`] mutexes
+//! keyed by an FNV-1a hash of the candidate encoding, so concurrent
+//! lookups only contend when they hash to the same shard.
+//!
+//! Memoizing by candidate alone (ignoring which incumbent the evaluation
+//! started from) is sound because a candidate's score is
+//! parent-independent: delta evaluation is bit-identical to the full
+//! re-solve (see [`crate::optimizer::DeltaEval`]), so every path to a
+//! candidate produces the same rates.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::space::Candidate;
+
+/// Number of shards (power of two so the hash folds with a mask).
+const N_SHARDS: usize = 16;
+
+/// Per-shard entry cap: like `RemoteRateModel`, a full shard is cleared
+/// rather than evicted entry-by-entry — searches revisit recent
+/// candidates, so a periodic flush keeps the common case a hit without
+/// unbounded growth. 1 M candidates ≈ 100 MB worst case across shards.
+const MAX_ENTRIES_PER_SHARD: usize = 65_536;
+
+/// Concurrency-safe candidate → score memo.
+pub struct ShardedScoreMemo {
+    shards: Vec<Mutex<HashMap<Candidate, f64>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for ShardedScoreMemo {
+    fn default() -> Self {
+        ShardedScoreMemo::new()
+    }
+}
+
+impl ShardedScoreMemo {
+    /// An empty memo.
+    pub fn new() -> ShardedScoreMemo {
+        ShardedScoreMemo {
+            shards: (0..N_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// FNV-1a over the candidate encoding, folded to a shard index.
+    fn shard_of(c: &Candidate) -> usize {
+        let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+        let mut eat = |byte: u8| {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        };
+        for &d in &c.home {
+            for b in d.to_le_bytes() {
+                eat(b);
+            }
+        }
+        for &r in &c.remote_ppm {
+            for b in r.to_le_bytes() {
+                eat(b);
+            }
+        }
+        // Fold the high bits in so the mask doesn't only see FNV's
+        // low-entropy low byte.
+        ((h ^ (h >> 32)) as usize) & (N_SHARDS - 1)
+    }
+
+    /// The memoized score of `c`, counting a hit or miss.
+    pub fn lookup(&self, c: &Candidate) -> Option<f64> {
+        let shard = self.shards[Self::shard_of(c)].lock().expect("score memo poisoned");
+        match shard.get(c) {
+            Some(&s) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(s)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Record `score` for `c` (clearing the shard first when full).
+    pub fn insert(&self, c: &Candidate, score: f64) {
+        let mut shard = self.shards[Self::shard_of(c)].lock().expect("score memo poisoned");
+        if shard.len() >= MAX_ENTRIES_PER_SHARD {
+            shard.clear();
+        }
+        shard.insert(c.clone(), score);
+    }
+
+    /// `(hits, misses, entries)` across all shards.
+    pub fn stats(&self) -> (u64, u64, usize) {
+        let entries = self
+            .shards
+            .iter()
+            .map(|s| s.lock().expect("score memo poisoned").len())
+            .sum();
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed), entries)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(h: Vec<u16>, r: Vec<u32>) -> Candidate {
+        Candidate { home: h, remote_ppm: r }
+    }
+
+    #[test]
+    fn lookup_insert_round_trip_and_counters() {
+        let memo = ShardedScoreMemo::new();
+        let c = cand(vec![0, 1, 2], vec![0, 250_000, 0]);
+        assert_eq!(memo.lookup(&c), None);
+        memo.insert(&c, 42.5);
+        assert_eq!(memo.lookup(&c), Some(42.5));
+        let (hits, misses, entries) = memo.stats();
+        assert_eq!((hits, misses, entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn distinct_candidates_do_not_collide() {
+        let memo = ShardedScoreMemo::new();
+        for i in 0..64u16 {
+            memo.insert(&cand(vec![i, i + 1], vec![u32::from(i), 0]), i as f64);
+        }
+        for i in 0..64u16 {
+            assert_eq!(memo.lookup(&cand(vec![i, i + 1], vec![u32::from(i), 0])), Some(i as f64));
+        }
+    }
+
+    #[test]
+    fn concurrent_access_is_consistent() {
+        let memo = ShardedScoreMemo::new();
+        let cands: Vec<Candidate> =
+            (0..256u16).map(|i| cand(vec![i % 4, i / 4], vec![0, u32::from(i) * 1000])).collect();
+        let results = crate::parallel::par_map(&cands, |c| {
+            memo.insert(c, f64::from(c.home[1]));
+            memo.lookup(c)
+        });
+        for (c, r) in cands.iter().zip(results) {
+            assert_eq!(r, Some(f64::from(c.home[1])), "{c:?}");
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! Placement / co-schedule search engine.
+//!
+//! The analytic model rates a placement in microseconds, which makes it
+//! viable as the *inner loop of a search* rather than just a predictor.
+//! This module turns it into one:
+//!
+//! * [`space`] — the search space: per-group home domains and remote
+//!   fractions, pins and capacity constraints, neighborhood moves
+//!   (migrate / swap / retune), deterministic start candidates.
+//! * [`delta`] — incremental re-rating: a move re-solves only the
+//!   interfaces whose member portions changed, bit-identical to a full
+//!   [`crate::sharing::share_remote`] re-solve (gated placements fall
+//!   back to the full fixed point).
+//! * [`memo`] — a sharded, concurrency-safe candidate → score memo so
+//!   parallel scoring threads neither serialize nor thrash.
+//! * [`search`] — the multi-start beam driver with batched parallel
+//!   scoring and fixed-seed determinism; objectives: aggregate
+//!   throughput, makespan (finalists re-ranked by
+//!   [`crate::timeline::simulate_placed`]), max-interference.
+//! * [`pairing`] — model-guided pairing of a task queue onto one
+//!   domain (the `task_scheduler` example's policy, beam-generalized).
+//!
+//! The headline metric is raw evaluation throughput (placements
+//! scored per second): `repro bench` measures delta + parallel + memo
+//! against a sequential full-re-solve baseline into
+//! `results/BENCH_optimizer.json`, and `repro optimize` exposes the
+//! search on the CLI. See `docs/OPTIMIZER.md` for the worked example.
+
+pub mod delta;
+pub mod memo;
+pub mod pairing;
+pub mod search;
+pub mod space;
+
+pub use delta::{DeltaEval, DeltaStats, EvalOutcome};
+pub use memo::ShardedScoreMemo;
+pub use pairing::{plan_pairing, PairPlan, PairTask};
+pub use search::{optimize, Objective, OptResult, SearchConfig, TraceStep};
+pub use space::{Candidate, Move, OptGroup, SearchSpace, DEFAULT_REMOTE_LEVELS};

@@ -1,0 +1,253 @@
+//! Model-guided pairing of a task queue onto one contention domain.
+//!
+//! The paper's task-parallel outlook: a queue of tasks is gang-scheduled
+//! two at a time, each pair sharing the domain half/half. The planner
+//! picks partners by the *predicted* co-run slot time — the sharing model
+//! (Eqs. 4+5) when both halves saturate, plain demand subtraction when a
+//! compute-bound (low `f`) task barely touches the interface (the
+//! paper's Fig. 2 scenario split).
+//!
+//! [`plan_pairing`] with `beam == 1` reproduces the greedy policy the
+//! `task_scheduler` example originally hand-rolled (LPT anchor, best
+//! partner by slot time with a 2% tie tolerance, then most filled work):
+//! the example now calls this planner and simulates the resulting plan.
+//! `beam > 1` keeps the `beam` best partial schedules by accumulated
+//! predicted time instead of committing to the single greedy choice.
+
+use crate::sharing::{share_two_groups, KernelGroup};
+
+/// One queued task, reduced to what the model needs.
+#[derive(Debug, Clone)]
+pub struct PairTask {
+    /// Display name (reports only).
+    pub name: String,
+    /// Memory request fraction of the task's kernel (Eq. 2).
+    pub f: f64,
+    /// Saturated bandwidth of the task's kernel, GB/s.
+    pub bs_gbs: f64,
+    /// Data volume the task moves, GB.
+    pub gbytes: f64,
+}
+
+/// A pairing schedule: `(anchor, partner)` task indices in execution
+/// order; a trailing unpaired task runs solo on the full domain.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PairPlan {
+    /// Task-index pairs, in slot order.
+    pub pairs: Vec<(usize, Option<usize>)>,
+    /// Predicted total time of the plan, seconds (model-side estimate —
+    /// callers wanting a simulator-grade number evaluate the pairs
+    /// themselves, like the `task_scheduler` example does).
+    pub predicted_total_s: f64,
+}
+
+/// Predicted co-run slot of anchor `a` and partner `b` on `cores` split
+/// half/half: `(slot time, filled time)` = `(max, min)` of the two
+/// per-task times under the predicted bandwidths.
+fn predict_slot(cores: usize, a: &PairTask, b: &PairTask) -> (f64, f64) {
+    let half = cores / 2;
+    let (na, nb) = (half, cores - half);
+    let (da, db) = (na as f64 * a.f * a.bs_gbs, nb as f64 * b.f * b.bs_gbs);
+    let sat_a = na as f64 * a.f >= 0.95;
+    let sat_b = nb as f64 * b.f >= 0.95;
+    let (bw_a, bw_b) = match (sat_a, sat_b) {
+        (true, true) => {
+            let p = share_two_groups(
+                &KernelGroup { n: na, f: a.f, bs_gbs: a.bs_gbs },
+                &KernelGroup { n: nb, f: b.f, bs_gbs: b.bs_gbs },
+            );
+            (p.group_bw_gbs[0], p.group_bw_gbs[1])
+        }
+        (true, false) => (da.min(a.bs_gbs - db), db),
+        (false, true) => (da, db.min(b.bs_gbs - da)),
+        (false, false) => (da, db),
+    };
+    let ta = a.gbytes / bw_a.max(1e-9);
+    let tb = b.gbytes / bw_b.max(1e-9);
+    (ta.max(tb), ta.min(tb))
+}
+
+/// Predicted solo time of a task on the full domain (homogeneous
+/// bandwidth `min(n f b_s, b_s)`).
+fn predict_solo(cores: usize, t: &PairTask) -> f64 {
+    t.gbytes / (cores as f64 * t.f * t.bs_gbs).min(t.bs_gbs)
+}
+
+/// Rank partner `x` against `y` for a fixed anchor: slot time with a 2%
+/// tolerance, then maximize the filled work inside the slot.
+fn better_partner(sx: (f64, f64), sy: (f64, f64)) -> std::cmp::Ordering {
+    let ((tx, fx), (ty, fy)) = (sx, sy);
+    if (tx - ty).abs() / tx.max(ty).max(1e-9) < 0.02 {
+        fy.partial_cmp(&fx).expect("finite fill times")
+    } else {
+        tx.partial_cmp(&ty).expect("finite slot times")
+    }
+}
+
+/// One partial schedule during the beam search.
+#[derive(Debug, Clone)]
+struct Partial {
+    /// Remaining queue, ascending by solo time (anchors pop off the back).
+    queue: Vec<usize>,
+    pairs: Vec<(usize, Option<usize>)>,
+    total_s: f64,
+}
+
+/// Plan the pairing of `tasks` on a `cores`-core domain.
+///
+/// Anchors are chosen longest-predicted-solo-first (classic LPT, half
+/// domain as the reference size); partners by [`better_partner`]. With
+/// `beam == 1` this is exactly the greedy policy; larger beams explore
+/// the `beam` best partner choices per slot and keep the `beam` best
+/// partial schedules. Deterministic: ties break on task index.
+pub fn plan_pairing(cores: usize, tasks: &[PairTask], beam: usize) -> PairPlan {
+    let beam = beam.max(1);
+    if tasks.is_empty() {
+        return PairPlan { pairs: Vec::new(), predicted_total_s: 0.0 };
+    }
+    // LPT order: ascending solo time on half the domain, pop from back.
+    let half_solo = |i: usize| {
+        let t = &tasks[i];
+        t.gbytes / (cores as f64 / 2.0 * t.f * t.bs_gbs).min(t.bs_gbs)
+    };
+    let mut order: Vec<usize> = (0..tasks.len()).collect();
+    order.sort_by(|&x, &y| half_solo(x).partial_cmp(&half_solo(y)).expect("finite solo times"));
+
+    let mut frontier = vec![Partial { queue: order, pairs: Vec::new(), total_s: 0.0 }];
+    loop {
+        if frontier.iter().all(|p| p.queue.is_empty()) {
+            break;
+        }
+        let mut next: Vec<Partial> = Vec::new();
+        for p in &frontier {
+            let mut p = p.clone();
+            let Some(a) = p.queue.pop() else {
+                next.push(p);
+                continue;
+            };
+            if p.queue.is_empty() {
+                p.total_s += predict_solo(cores, &tasks[a]);
+                p.pairs.push((a, None));
+                next.push(p);
+                continue;
+            }
+            // The `beam` best partners, each extracted with the same
+            // `min_by` fold the greedy uses (the 2%-tolerance comparator
+            // is not transitive, so a sort could panic — a fold cannot,
+            // and beam 1 then matches the greedy pick exactly).
+            let slots: Vec<(f64, f64)> = p
+                .queue
+                .iter()
+                .map(|&b| predict_slot(cores, &tasks[a], &tasks[b]))
+                .collect();
+            let mut ranked: Vec<usize> = Vec::with_capacity(beam);
+            let mut pool: Vec<usize> = (0..p.queue.len()).collect();
+            while ranked.len() < beam && !pool.is_empty() {
+                let at = pool
+                    .iter()
+                    .enumerate()
+                    .min_by(|(_, &x), (_, &y)| better_partner(slots[x], slots[y]))
+                    .map(|(i, _)| i)
+                    .expect("nonempty pool");
+                ranked.push(pool.remove(at));
+            }
+            for &qi in &ranked {
+                let mut q = p.clone();
+                let b = q.queue.remove(qi);
+                q.total_s += predict_slot(cores, &tasks[a], &tasks[b]).0;
+                q.pairs.push((a, Some(b)));
+                next.push(q);
+            }
+        }
+        next.sort_by(|x, y| {
+            x.total_s.total_cmp(&y.total_s).then_with(|| x.pairs.cmp(&y.pairs))
+        });
+        next.truncate(beam);
+        frontier = next;
+    }
+    let best = frontier
+        .into_iter()
+        .min_by(|x, y| x.total_s.total_cmp(&y.total_s).then_with(|| x.pairs.cmp(&y.pairs)))
+        .expect("nonempty frontier");
+    PairPlan { pairs: best.pairs, predicted_total_s: best.total_s }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(name: &str, f: f64, bs: f64, gb: f64) -> PairTask {
+        PairTask { name: name.into(), f, bs_gbs: bs, gbytes: gb }
+    }
+
+    /// The hand-rolled greedy from the pre-optimizer `task_scheduler`
+    /// example, kept verbatim as the reference beam-1 must match.
+    fn reference_greedy(cores: usize, tasks: &[PairTask]) -> Vec<(usize, Option<usize>)> {
+        let half_solo = |i: usize| {
+            let t = &tasks[i];
+            t.gbytes / (cores as f64 / 2.0 * t.f * t.bs_gbs).min(t.bs_gbs)
+        };
+        let mut queue: Vec<usize> = (0..tasks.len()).collect();
+        queue.sort_by(|&x, &y| half_solo(x).partial_cmp(&half_solo(y)).unwrap());
+        let mut pairs = Vec::new();
+        while let Some(a) = queue.pop() {
+            if queue.is_empty() {
+                pairs.push((a, None));
+                break;
+            }
+            let best = queue
+                .iter()
+                .enumerate()
+                .min_by(|(_, &x), (_, &y)| {
+                    better_partner(
+                        predict_slot(cores, &tasks[a], &tasks[x]),
+                        predict_slot(cores, &tasks[a], &tasks[y]),
+                    )
+                })
+                .map(|(i, _)| i)
+                .unwrap();
+            let b = queue.remove(best);
+            pairs.push((a, Some(b)));
+        }
+        pairs
+    }
+
+    fn mixed_queue() -> Vec<PairTask> {
+        let mut tasks = Vec::new();
+        for i in 0..4 {
+            tasks.push(task("stream", 0.85, 25.0, 60.0 + 5.0 * i as f64));
+            tasks.push(task("dgemm", 0.01, 30.0, 4.0));
+            tasks.push(task("ddot2", 0.7, 27.0, 60.0));
+            tasks.push(task("dgemm", 0.01, 30.0, 4.0));
+        }
+        tasks
+    }
+
+    #[test]
+    fn beam_one_matches_the_reference_greedy() {
+        let tasks = mixed_queue();
+        let plan = plan_pairing(18, &tasks, 1);
+        assert_eq!(plan.pairs, reference_greedy(18, &tasks));
+    }
+
+    #[test]
+    fn odd_queue_leaves_one_solo_task() {
+        let tasks = vec![
+            task("a", 0.8, 25.0, 50.0),
+            task("b", 0.5, 25.0, 30.0),
+            task("c", 0.02, 30.0, 5.0),
+        ];
+        let plan = plan_pairing(16, &tasks, 1);
+        assert_eq!(plan.pairs.len(), 2);
+        assert_eq!(plan.pairs.last().unwrap().1, None);
+        assert!(plan.predicted_total_s > 0.0);
+    }
+
+    #[test]
+    fn wider_beam_never_predicts_worse() {
+        let tasks = mixed_queue();
+        let greedy = plan_pairing(18, &tasks, 1);
+        let beamed = plan_pairing(18, &tasks, 3);
+        assert!(beamed.predicted_total_s <= greedy.predicted_total_s + 1e-12);
+    }
+}

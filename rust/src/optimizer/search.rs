@@ -1,0 +1,576 @@
+//! Multi-start beam search over placement candidates.
+//!
+//! The driver is a plain local search: each start (compact, scatter, then
+//! fixed-seed random placements) keeps a beam of incumbents, scores the
+//! whole neighborhood of the beam as one batch through
+//! [`crate::parallel::par_map`], and advances while the best neighbor
+//! *strictly* improves on the start's best. Strict improvement plus a
+//! global scoring budget guarantees termination.
+//!
+//! Determinism: candidate enumeration order is fixed
+//! ([`SearchSpace::neighbors`]), `par_map` returns results in input
+//! order, delta evaluation is bit-identical to the full solve, and score
+//! ties break on the candidate encoding ([`Candidate`]'s derived `Ord`).
+//! So the incumbent trace is a pure function of `(space, config)` — the
+//! same with or without threads, delta evaluation, or the memo
+//! (property-tested in `tests/optimizer_conformance.rs`).
+//!
+//! Objectives score from the analytic model's per-core rates; `makespan`
+//! additionally co-simulates the finalists (best candidate per start)
+//! with [`crate::timeline::simulate_placed`] and picks the winner by
+//! simulated time. The in-search makespan surrogate is the bandwidth-only
+//! bound `max_g volume / rate_g`; the finalist co-simulation adds
+//! desynchronization and per-domain contention dynamics on top.
+
+use std::time::Instant;
+
+use crate::desync::{CoSimConfig, Phase, Program, SimStats, SyncKind};
+use crate::error::Result;
+use crate::kernels::KernelId;
+use crate::parallel::par_map;
+use crate::sharing::{share_remote, RemoteShare};
+use crate::simulator::XorShift64;
+use crate::timeline::simulate_placed;
+use crate::topology::{RankLayout, RemoteTraffic};
+
+use super::delta::{DeltaEval, DeltaStats};
+use super::memo::ShardedScoreMemo;
+use super::space::{Candidate, SearchSpace};
+
+/// What the search maximizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Aggregate model bandwidth, `Σ n_g · rate_g` (GB/s).
+    Throughput,
+    /// Negative bandwidth-bound completion time of the slowest group,
+    /// `-max_g volume / rate_g`; finalists are re-ranked by a real
+    /// [`simulate_placed`] co-simulation.
+    Makespan,
+    /// Worst normalized per-group progress, `min_g rate_g / (f_g · b_s,g)`
+    /// — maximizing it minimizes the worst interference slowdown.
+    MaxInterference,
+}
+
+impl Objective {
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Result<Objective> {
+        match s.to_ascii_lowercase().as_str() {
+            "throughput" | "tput" => Ok(Objective::Throughput),
+            "makespan" => Ok(Objective::Makespan),
+            "max-interference" | "interference" => Ok(Objective::MaxInterference),
+            other => Err(crate::error::Error::InvalidPlan(format!(
+                "unknown objective '{other}' (throughput, makespan, max-interference)"
+            ))),
+        }
+    }
+
+    /// CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Objective::Throughput => "throughput",
+            Objective::Makespan => "makespan",
+            Objective::MaxInterference => "max-interference",
+        }
+    }
+
+    /// Score a candidate from the model's per-core rates (higher wins).
+    fn score(self, space: &SearchSpace, gb_per_core: f64, rates: &[f64]) -> f64 {
+        match self {
+            Objective::Throughput => {
+                space.groups.iter().zip(rates).map(|(g, r)| g.n as f64 * r).sum()
+            }
+            Objective::Makespan => {
+                let worst = space
+                    .groups
+                    .iter()
+                    .zip(rates)
+                    .map(|(_, r)| gb_per_core / r.max(f64::MIN_POSITIVE))
+                    .fold(0.0f64, f64::max);
+                -worst
+            }
+            Objective::MaxInterference => space
+                .groups
+                .iter()
+                .zip(rates)
+                .map(|(g, r)| r / (g.f * g.bs_gbs))
+                .fold(f64::INFINITY, f64::min),
+        }
+    }
+}
+
+/// Tuning knobs of one search run.
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    /// What to maximize.
+    pub objective: Objective,
+    /// Seed of the random starts (fixed seed ⇒ identical trace).
+    pub seed: u64,
+    /// Number of starts: compact, scatter, then `starts - 2` random.
+    pub starts: usize,
+    /// Beam width (1 = greedy hill climbing).
+    pub beam: usize,
+    /// Total scoring budget across all starts (candidates scored).
+    pub budget: usize,
+    /// Per-core data volume, GB — the time unit of the makespan
+    /// objective and the finalist co-simulation.
+    pub gb_per_core: f64,
+    /// Score candidate batches through [`par_map`] (off = serial).
+    pub parallel: bool,
+    /// Score moves incrementally with [`DeltaEval`] (off = every
+    /// candidate is a full [`share_remote`] re-solve).
+    pub use_delta: bool,
+    /// Memoize candidate scores in a [`ShardedScoreMemo`].
+    pub memoize: bool,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            objective: Objective::Throughput,
+            seed: 42,
+            starts: 4,
+            beam: 2,
+            budget: 2000,
+            gb_per_core: 8.0,
+            parallel: true,
+            use_delta: true,
+            memoize: true,
+        }
+    }
+}
+
+/// One improvement of the global best during the search.
+#[derive(Debug, Clone)]
+pub struct TraceStep {
+    /// Candidates scored (across the whole search) when this incumbent
+    /// took the lead.
+    pub scored_at: u64,
+    /// Start index it came from.
+    pub start: usize,
+    /// Beam step within the start (0 = the start candidate itself).
+    pub step: usize,
+    /// Its score.
+    pub score: f64,
+    /// Mix-DSL-style label of the candidate.
+    pub label: String,
+    /// The candidate.
+    pub candidate: Candidate,
+}
+
+/// Result of one search run.
+#[derive(Debug, Clone)]
+pub struct OptResult {
+    /// Winning candidate.
+    pub best: Candidate,
+    /// Its mix-DSL-style label.
+    pub best_label: String,
+    /// Its score under the configured objective.
+    pub best_score: f64,
+    /// Its per-core model rates, GB/s, in group order.
+    pub best_rates: Vec<f64>,
+    /// The full sharing solution of the winner (per-domain and per-link
+    /// interface summaries for the report).
+    pub share: RemoteShare,
+    /// Incumbent improvements, in order.
+    pub trace: Vec<TraceStep>,
+    /// Candidates scored (memo hits included) — the throughput
+    /// numerator of the bench.
+    pub scored: u64,
+    /// Candidates actually evaluated against the model (memo misses).
+    pub evaluated: u64,
+    /// Delta-evaluator counters, merged across the search.
+    pub delta: DeltaStats,
+    /// Cache counters (`memo_*` filled from the score memo; the co-sim
+    /// fields come from the finalist simulation when one ran).
+    pub stats: SimStats,
+    /// Wall-clock spent searching, seconds.
+    pub wall_s: f64,
+    /// Simulated makespan of the winner, seconds (makespan objective
+    /// only).
+    pub makespan_s: Option<f64>,
+}
+
+/// One beam slot: a scored candidate plus (when delta evaluation is on)
+/// its solved incumbent state.
+struct Node {
+    cand: Candidate,
+    score: f64,
+    de: Option<DeltaEval>,
+}
+
+/// Score one candidate from scratch (the no-delta path).
+fn full_rates(space: &SearchSpace, cand: &Candidate) -> Result<Vec<f64>> {
+    Ok(share_remote(&space.shape, &space.remote_groups(cand))?.per_core_gbs)
+}
+
+/// Run the search. See the module docs for the guarantees.
+pub fn optimize(space: &SearchSpace, cfg: &SearchConfig) -> Result<OptResult> {
+    let t0 = Instant::now();
+    let memo = ShardedScoreMemo::new();
+    let mut rng = XorShift64::new(cfg.seed);
+    let mut scored: u64 = 0;
+    let mut evaluated: u64 = 0;
+    let mut delta = DeltaStats::default();
+    let mut trace: Vec<TraceStep> = Vec::new();
+    let mut global_best: Option<(f64, Candidate, Vec<f64>)> = None;
+
+    let n_ifaces = (space.shape.n_domains() + space.shape.links().len()) as u64;
+    let starts = cfg.starts.max(1);
+    let budget = cfg.budget.max(1);
+
+    for start in 0..starts {
+        if scored >= budget as u64 {
+            break;
+        }
+        let start_cand = match start {
+            0 => space.start_compact()?,
+            1 => space.start_scatter()?,
+            _ => space.start_random(&mut rng)?,
+        };
+
+        // Score the start itself (always a real evaluation so the beam
+        // has an incumbent state to delta against).
+        let de = if cfg.use_delta {
+            Some(DeltaEval::new(space.shape.clone(), space.remote_groups(&start_cand))?)
+        } else {
+            None
+        };
+        let rates = match &de {
+            Some(de) => de.rates().to_vec(),
+            None => full_rates(space, &start_cand)?,
+        };
+        let start_score = cfg.objective.score(space, cfg.gb_per_core, &rates);
+        scored += 1;
+        evaluated += 1;
+        delta.evals += 1;
+        delta.iface_evals += n_ifaces;
+        if cfg.memoize {
+            memo.insert(&start_cand, start_score);
+        }
+        let mut local_best = start_score;
+        if global_best.as_ref().is_none_or(|(s, _, _)| start_score > *s) {
+            global_best = Some((start_score, start_cand.clone(), rates.clone()));
+            trace.push(TraceStep {
+                scored_at: scored,
+                start,
+                step: 0,
+                score: start_score,
+                label: space.label(&start_cand),
+                candidate: start_cand.clone(),
+            });
+        }
+        let mut frontier: Vec<Node> = vec![Node { cand: start_cand, score: start_score, de }];
+
+        for step in 1.. {
+            if scored >= budget as u64 {
+                break;
+            }
+            // The batch: every neighbor of every beam slot, deduped,
+            // tagged with the slot it deltas against.
+            let mut batch: Vec<(Candidate, usize)> = Vec::new();
+            for (pi, node) in frontier.iter().enumerate() {
+                for mv in space.neighbors(&node.cand) {
+                    batch.push((node.cand.apply(mv), pi));
+                }
+            }
+            batch.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.cmp(&b.1)));
+            batch.dedup_by(|a, b| a.0 == b.0);
+            batch.retain(|(c, _)| frontier.iter().all(|n| n.cand != *c));
+            let room = (budget as u64 - scored) as usize;
+            batch.truncate(room);
+            if batch.is_empty() {
+                break;
+            }
+
+            // Score the batch: memo probe, then delta against the parent
+            // slot (or a full re-solve). Returns per-candidate counters;
+            // merging stays on this thread so no atomics are needed.
+            let score_one = |item: &(Candidate, usize)| -> Result<(f64, DeltaStats, bool)> {
+                let (cand, pi) = item;
+                if cfg.memoize {
+                    if let Some(s) = memo.lookup(cand) {
+                        return Ok((s, DeltaStats::default(), false));
+                    }
+                }
+                let (rates, stats) = match &frontier[*pi].de {
+                    Some(de) => {
+                        let outcome = de.eval(&space.changes(&frontier[*pi].cand, cand))?;
+                        (outcome.rates, outcome.stats)
+                    }
+                    None => {
+                        let rates = full_rates(space, cand)?;
+                        (
+                            rates,
+                            DeltaStats {
+                                evals: 1,
+                                iface_evals: n_ifaces,
+                                full_solves: 1,
+                                ..DeltaStats::default()
+                            },
+                        )
+                    }
+                };
+                let s = cfg.objective.score(space, cfg.gb_per_core, &rates);
+                if cfg.memoize {
+                    memo.insert(cand, s);
+                }
+                Ok((s, stats, true))
+            };
+            let results: Vec<Result<(f64, DeltaStats, bool)>> = if cfg.parallel {
+                par_map(&batch, score_one)
+            } else {
+                batch.iter().map(score_one).collect()
+            };
+
+            let mut wave: Vec<(f64, usize)> = Vec::with_capacity(batch.len());
+            for (bi, r) in results.into_iter().enumerate() {
+                let (s, st, was_eval) = r?;
+                scored += 1;
+                if was_eval {
+                    evaluated += 1;
+                }
+                delta.merge(st);
+                wave.push((s, bi));
+            }
+            // Best first; ties break on the candidate encoding so the
+            // ranking is independent of scoring order.
+            wave.sort_by(|a, b| {
+                b.0.total_cmp(&a.0).then_with(|| batch[a.1].0.cmp(&batch[b.1].0))
+            });
+
+            let top_score = wave[0].0;
+            if top_score <= local_best {
+                break;
+            }
+            local_best = top_score;
+
+            // Promote the beam: re-evaluate each survivor against its
+            // parent slot and commit, giving it its own incumbent state.
+            let mut next: Vec<Node> = Vec::with_capacity(cfg.beam.max(1));
+            for &(s, bi) in wave.iter().take(cfg.beam.max(1)) {
+                let (cand, pi) = &batch[bi];
+                let de = match &frontier[*pi].de {
+                    Some(parent) => {
+                        let mut de = parent.clone();
+                        let outcome = de.eval(&space.changes(&frontier[*pi].cand, cand))?;
+                        de.commit(outcome);
+                        Some(de)
+                    }
+                    None => None,
+                };
+                next.push(Node { cand: cand.clone(), score: s, de });
+            }
+
+            if global_best.as_ref().is_none_or(|(s, _, _)| top_score > *s) {
+                let winner = &next[0];
+                let rates = match &winner.de {
+                    Some(de) => de.rates().to_vec(),
+                    None => full_rates(space, &winner.cand)?,
+                };
+                global_best = Some((top_score, winner.cand.clone(), rates));
+                trace.push(TraceStep {
+                    scored_at: scored,
+                    start,
+                    step,
+                    score: top_score,
+                    label: space.label(&winner.cand),
+                    candidate: winner.cand.clone(),
+                });
+            }
+            frontier = next;
+        }
+    }
+
+    let (mut best_score, mut best, mut best_rates) =
+        global_best.expect("at least one start was scored");
+
+    // Makespan finalists: re-rank the surrogate's favorites with a real
+    // co-simulation of the winning placements.
+    let mut makespan_s = None;
+    let mut sim_stats = SimStats::default();
+    if cfg.objective == Objective::Makespan {
+        let mut finalists: Vec<Candidate> =
+            trace.iter().rev().map(|t| t.candidate.clone()).collect();
+        finalists.dedup();
+        finalists.truncate(4);
+        let mut ranked: Option<(f64, Candidate)> = None;
+        for cand in &finalists {
+            let (m, st) = simulate_makespan(space, cand, cfg.gb_per_core);
+            if ranked.as_ref().is_none_or(|(best_m, _)| m < *best_m) {
+                ranked = Some((m, cand.clone()));
+                sim_stats = st;
+            }
+        }
+        if let Some((m, cand)) = ranked {
+            if cand != best {
+                best_rates = full_rates(space, &cand)?;
+                best_score = cfg.objective.score(space, cfg.gb_per_core, &best_rates);
+                best = cand;
+            }
+            makespan_s = Some(m);
+        }
+    }
+
+    let share = share_remote(&space.shape, &space.remote_groups(&best))?;
+    let (memo_hits, memo_misses, memo_entries) = memo.stats();
+    sim_stats.memo_hits = memo_hits;
+    sim_stats.memo_misses = memo_misses;
+    sim_stats.memo_entries = memo_entries;
+
+    Ok(OptResult {
+        best_label: space.label(&best),
+        best,
+        best_score,
+        best_rates,
+        share,
+        trace,
+        scored,
+        evaluated,
+        delta,
+        stats: sim_stats,
+        wall_s: t0.elapsed().as_secs_f64(),
+        makespan_s,
+    })
+}
+
+/// Co-simulate one candidate: every group's ranks on its home domain, one
+/// kernel phase per group (all ranks run all phases — the co-simulation
+/// measures how the *placement* bears the program, not per-group
+/// heterogeneity), remote fractions averaged per home domain weighted by
+/// resident cores. Returns the simulated makespan (slowest rank) and the
+/// run's engine counters.
+fn simulate_makespan(space: &SearchSpace, cand: &Candidate, gb_per_core: f64) -> (f64, SimStats) {
+    let nd = space.shape.n_domains();
+    let mut rank_domain = Vec::new();
+    let mut frac_num = vec![0.0f64; nd];
+    let mut frac_den = vec![0.0f64; nd];
+    for (gi, g) in space.groups.iter().enumerate() {
+        let d = cand.home[gi] as usize;
+        rank_domain.extend(std::iter::repeat_n(d, g.n));
+        frac_num[d] += g.n as f64 * cand.remote_ppm[gi] as f64 / 1e6;
+        frac_den[d] += g.n as f64;
+    }
+    let frac: Vec<f64> =
+        frac_num.iter().zip(&frac_den).map(|(n, d)| if *d > 0.0 { n / d } else { 0.0 }).collect();
+    let remote =
+        if frac.iter().any(|&f| f > 0.0) { Some(RemoteTraffic { frac }) } else { None };
+    let n_ranks = rank_domain.len();
+    let layout = RankLayout {
+        n_domains: nd,
+        rank_domain,
+        bw_scale: space.shape.bw_scale.clone(),
+        socket_of: space.shape.socket_of.clone(),
+        node_of: space.node_of.clone(),
+        link_bw_gbs: space.shape.link_bw_gbs,
+        link_bw_rev_gbs: space.shape.link_bw_rev_gbs,
+        collective_extra_s: space.collective_extra_s,
+        remote,
+    };
+    let mut chars: Vec<(KernelId, f64, f64)> = Vec::new();
+    let mut phases = Vec::new();
+    for g in &space.groups {
+        if !chars.iter().any(|(k, _, _)| *k == g.kernel) {
+            chars.push((g.kernel, g.f, g.bs_gbs));
+        }
+        phases.push(Phase::Kernel {
+            kernel: g.kernel,
+            volume_bytes: gb_per_core * 1e9,
+            sync: SyncKind::None,
+            label: "opt",
+        });
+    }
+    let program = Program { phases, iterations: 1 };
+    let config = CoSimConfig::default();
+    let result = simulate_placed(&program, n_ranks, &config, &chars, &layout);
+    let makespan = result
+        .finish_s
+        .iter()
+        .copied()
+        .map(|f| if f.is_finite() { f } else { result.t_end_s })
+        .fold(0.0f64, f64::max);
+    (makespan, result.stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::space::OptGroup;
+    use crate::sharing::TopoShape;
+
+    fn space2x2() -> SearchSpace {
+        let shape = TopoShape {
+            socket_of: vec![0, 0, 1, 1],
+            bw_scale: vec![1.0; 4],
+            link_bw_gbs: 30.0,
+            link_bw_rev_gbs: 30.0,
+        };
+        let mk = |name: &str, n: usize, f: f64, bs: f64| OptGroup {
+            name: name.into(),
+            kernel: KernelId::Dcopy,
+            n,
+            f,
+            bs_gbs: bs,
+            pinned: None,
+            fixed_remote_ppm: None,
+        };
+        SearchSpace::new(
+            shape,
+            vec![8; 4],
+            vec![
+                mk("a", 6, 0.9, 40.0),
+                mk("b", 6, 0.8, 38.0),
+                mk("c", 4, 0.2, 20.0),
+                mk("d", 4, 0.3, 24.0),
+            ],
+            super::super::space::DEFAULT_REMOTE_LEVELS.to_vec(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn winner_beats_compact_and_scatter_starts() {
+        let space = space2x2();
+        let cfg = SearchConfig { budget: 400, ..SearchConfig::default() };
+        let res = optimize(&space, &cfg).unwrap();
+        for start in [space.start_compact().unwrap(), space.start_scatter().unwrap()] {
+            let rates = full_rates(&space, &start).unwrap();
+            let s = cfg.objective.score(&space, cfg.gb_per_core, &rates);
+            assert!(res.best_score >= s, "winner {} < start {s}", res.best_score);
+        }
+    }
+
+    #[test]
+    fn fixed_seed_gives_identical_traces_across_modes() {
+        let space = space2x2();
+        let base = SearchConfig { budget: 300, ..SearchConfig::default() };
+        let fullcfg = SearchConfig {
+            parallel: false,
+            use_delta: false,
+            memoize: false,
+            ..base.clone()
+        };
+        let a = optimize(&space, &base).unwrap();
+        let b = optimize(&space, &fullcfg).unwrap();
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.best_score.to_bits(), b.best_score.to_bits());
+        assert_eq!(a.trace.len(), b.trace.len());
+        for (x, y) in a.trace.iter().zip(&b.trace) {
+            assert_eq!(x.candidate, y.candidate);
+            assert_eq!(x.score.to_bits(), y.score.to_bits());
+        }
+    }
+
+    #[test]
+    fn makespan_objective_reports_a_simulated_time() {
+        let space = space2x2();
+        let cfg = SearchConfig {
+            objective: Objective::Makespan,
+            budget: 150,
+            starts: 2,
+            ..SearchConfig::default()
+        };
+        let res = optimize(&space, &cfg).unwrap();
+        let m = res.makespan_s.expect("makespan objective simulates finalists");
+        assert!(m > 0.0 && m.is_finite());
+    }
+}

@@ -1,0 +1,536 @@
+//! The placement search space: groups, candidates, and neighborhood moves.
+//!
+//! A **candidate** assigns every kernel group a home ccNUMA domain and a
+//! remote-access fraction (stored in parts per million, like the mix DSL's
+//! `%r` suffix). The space knows which groups are pinned (`@dN` in the
+//! mix) or carry a fixed `%r`, the per-domain core capacities, and the
+//! palette of remote-fraction levels a retune move may pick from.
+//!
+//! Moves are the classic placement neighborhood: migrate one group,
+//! swap two groups' homes, retune one group's remote fraction. Move
+//! enumeration order is deterministic (migrations, then swaps, then
+//! retunes, each in index order), which — together with the fixed-seed
+//! xorshift starts — makes the whole search reproducible.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::kernels::KernelId;
+use crate::scenario::Mix;
+use crate::sharing::{RemoteGroup, TopoShape};
+use crate::simulator::XorShift64;
+use crate::topology::{GroupPlacement, Topology};
+
+/// One kernel group to place: its traffic character plus any constraints
+/// the mix imposed.
+#[derive(Debug, Clone)]
+pub struct OptGroup {
+    /// Display name (kernel name; used in candidate labels and reports).
+    pub name: String,
+    /// Kernel identity (used by the makespan finalist co-simulation).
+    pub kernel: KernelId,
+    /// Cores in the group.
+    pub n: usize,
+    /// Memory request fraction of the kernel (Eq. 2).
+    pub f: f64,
+    /// Nominal saturated bandwidth of the kernel, GB/s.
+    pub bs_gbs: f64,
+    /// Fixed home domain (`@dN` pin); `None` = the search may place it.
+    pub pinned: Option<usize>,
+    /// Fixed remote fraction in ppm (`%r` suffix); `None` = the search
+    /// may retune it over [`SearchSpace::remote_levels`].
+    pub fixed_remote_ppm: Option<u32>,
+}
+
+/// One point of the search space: per-group home domain + remote ppm.
+///
+/// Derives `Ord`/`Hash` so candidates can key the sharded score memo and
+/// break score ties deterministically.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Candidate {
+    /// Home domain per group.
+    pub home: Vec<u16>,
+    /// Remote fraction per group, parts per million.
+    pub remote_ppm: Vec<u32>,
+}
+
+/// One neighborhood move on a candidate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Move {
+    /// Migrate group `.0` to domain `.1`.
+    Migrate(usize, u16),
+    /// Swap the home domains of groups `.0` and `.1`.
+    Swap(usize, usize),
+    /// Set group `.0`'s remote fraction to `.1` ppm.
+    Retune(usize, u32),
+}
+
+impl Candidate {
+    /// The candidate with `mv` applied.
+    pub fn apply(&self, mv: Move) -> Candidate {
+        let mut c = self.clone();
+        match mv {
+            Move::Migrate(g, d) => c.home[g] = d,
+            Move::Swap(a, b) => c.home.swap(a, b),
+            Move::Retune(g, ppm) => c.remote_ppm[g] = ppm,
+        }
+        c
+    }
+}
+
+/// The search space: topology shape + groups + move palette.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    /// Topology shape the model evaluates on.
+    pub shape: TopoShape,
+    /// Core capacity of each domain.
+    pub domain_cores: Vec<usize>,
+    /// Cluster node of each domain (used by the makespan finalist
+    /// co-simulation; all zero on single-node topologies).
+    pub node_of: Vec<usize>,
+    /// Extra collective release latency, seconds (makespan finalists).
+    pub collective_extra_s: f64,
+    /// The groups to place.
+    pub groups: Vec<OptGroup>,
+    /// Remote-fraction palette (ppm) retune moves pick from. Empty on
+    /// single-domain shapes (remote traffic needs >= 2 domains).
+    pub remote_levels: Vec<u32>,
+}
+
+/// Default retune palette: 0, 10%, 25%, 50% remote (ppm).
+pub const DEFAULT_REMOTE_LEVELS: [u32; 4] = [0, 100_000, 250_000, 500_000];
+
+impl SearchSpace {
+    /// Build a space from explicit parts, validating capacities and pins.
+    pub fn new(
+        shape: TopoShape,
+        domain_cores: Vec<usize>,
+        groups: Vec<OptGroup>,
+        remote_levels: Vec<u32>,
+    ) -> Result<SearchSpace> {
+        let nd = shape.n_domains();
+        if domain_cores.len() != nd {
+            return Err(Error::InvalidPlan(format!(
+                "{} domain capacities for a {nd}-domain shape",
+                domain_cores.len()
+            )));
+        }
+        let total: usize = domain_cores.iter().sum();
+        let used: usize = groups.iter().map(|g| g.n).sum();
+        if used > total {
+            return Err(Error::InvalidPlan(format!(
+                "groups need {used} cores but the topology has {total}"
+            )));
+        }
+        for (gi, g) in groups.iter().enumerate() {
+            if g.n == 0 {
+                return Err(Error::InvalidPlan(format!("group {gi} ({}) has no cores", g.name)));
+            }
+            if let Some(d) = g.pinned {
+                if d >= nd {
+                    return Err(Error::InvalidPlan(format!(
+                        "group {gi} ({}) pinned to missing domain d{d}",
+                        g.name
+                    )));
+                }
+            }
+            if let Some(ppm) = g.fixed_remote_ppm {
+                if ppm > 1_000_000 || (ppm > 0 && nd < 2) {
+                    return Err(Error::InvalidPlan(format!(
+                        "group {gi} ({}) has an invalid fixed remote fraction {ppm} ppm",
+                        g.name
+                    )));
+                }
+            }
+        }
+        let remote_levels = if nd < 2 {
+            Vec::new()
+        } else {
+            let mut lv: Vec<u32> = remote_levels.into_iter().filter(|&p| p <= 1_000_000).collect();
+            lv.sort_unstable();
+            lv.dedup();
+            lv
+        };
+        let node_of = vec![0; nd];
+        Ok(SearchSpace {
+            shape,
+            domain_cores,
+            node_of,
+            collective_extra_s: 0.0,
+            groups,
+            remote_levels,
+        })
+    }
+
+    /// Build a space from a parsed mix on a topology: one [`OptGroup`] per
+    /// mix group, characterized by `chars` (`(f, b_s)` per kernel). `@dN`
+    /// pins become hard constraints; an explicit `%r` freezes that group's
+    /// remote fraction and everything else searches over the default
+    /// palette. Idle cores simply reduce the usable capacity headroom.
+    pub fn from_mix(
+        topo: &Topology,
+        mix: &Mix,
+        chars: &HashMap<KernelId, (f64, f64)>,
+    ) -> Result<SearchSpace> {
+        let mut groups = Vec::with_capacity(mix.groups.len());
+        for g in &mix.groups {
+            let &(f, bs_gbs) = chars.get(&g.kernel).ok_or_else(|| {
+                Error::InvalidPlan(format!("kernel {:?} not characterized", g.kernel))
+            })?;
+            let pinned = match g.place {
+                GroupPlacement::Domain(d) => Some(d),
+                _ => None,
+            };
+            let fixed = if g.remote_ppm > 0 { Some(g.remote_ppm) } else { None };
+            groups.push(OptGroup {
+                name: g.kernel.key().to_string(),
+                kernel: g.kernel,
+                n: g.cores,
+                f,
+                bs_gbs,
+                pinned,
+                fixed_remote_ppm: fixed,
+            });
+        }
+        let domain_cores: Vec<usize> = topo.domains.iter().map(|d| d.machine.cores).collect();
+        let mut space = SearchSpace::new(
+            topo.shape(),
+            domain_cores,
+            groups,
+            DEFAULT_REMOTE_LEVELS.to_vec(),
+        )?;
+        space.node_of = topo.node_of();
+        space.collective_extra_s = topo.collective_extra_s();
+        Ok(space)
+    }
+
+    /// Number of groups.
+    pub fn k(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Per-domain core load of a candidate.
+    pub fn loads(&self, c: &Candidate) -> Vec<usize> {
+        let mut load = vec![0usize; self.shape.n_domains()];
+        for (g, &d) in self.groups.iter().zip(&c.home) {
+            load[d as usize] += g.n;
+        }
+        load
+    }
+
+    /// Whether a candidate respects pins, capacities, and fixed fractions.
+    pub fn feasible(&self, c: &Candidate) -> bool {
+        if c.home.len() != self.k() || c.remote_ppm.len() != self.k() {
+            return false;
+        }
+        let nd = self.shape.n_domains();
+        for (gi, g) in self.groups.iter().enumerate() {
+            let d = c.home[gi] as usize;
+            if d >= nd || g.pinned.is_some_and(|p| p != d) {
+                return false;
+            }
+            let ppm = c.remote_ppm[gi];
+            if ppm > 1_000_000 || (ppm > 0 && nd < 2) {
+                return false;
+            }
+            if g.fixed_remote_ppm.is_some_and(|p| p != ppm) {
+                return false;
+            }
+        }
+        self.loads(c).iter().zip(&self.domain_cores).all(|(l, cap)| l <= cap)
+    }
+
+    /// The initial remote ppm of group `gi` (its fixed value, else 0).
+    fn initial_ppm(&self, gi: usize) -> u32 {
+        self.groups[gi].fixed_remote_ppm.unwrap_or(0)
+    }
+
+    /// First-fit start: pinned groups at their pins, the rest fill
+    /// domains in order (the compact policy).
+    pub fn start_compact(&self) -> Result<Candidate> {
+        self.place_free(|free, _gi, n| free.iter().position(|&(_, room)| room >= n))
+    }
+
+    /// Round-robin start: pinned groups at their pins, free group `i`
+    /// goes to the first domain with room at or after `i mod nd`.
+    pub fn start_scatter(&self) -> Result<Candidate> {
+        let nd = self.shape.n_domains();
+        let mut turn = 0usize;
+        self.place_free(move |free, _gi, n| {
+            let pick = (0..free.len())
+                .map(|o| (turn + o) % free.len())
+                .find(|&i| free[i].1 >= n);
+            turn = (turn + 1) % nd.max(1);
+            pick
+        })
+    }
+
+    /// Random feasible start from a deterministic xorshift stream: free
+    /// groups pick a uniformly random domain with room; searchable remote
+    /// fractions pick a random palette level.
+    pub fn start_random(&self, rng: &mut XorShift64) -> Result<Candidate> {
+        let mut c = self.place_free(|free, _gi, n| {
+            let fits: Vec<usize> =
+                (0..free.len()).filter(|&i| free[i].1 >= n).collect();
+            // Draw even when placement is forced, to keep the stream
+            // length independent of capacities.
+            let pick = rng.next_below(fits.len().max(1));
+            fits.get(pick).or(fits.first()).copied()
+        })?;
+        if !self.remote_levels.is_empty() {
+            for gi in 0..self.k() {
+                let lv = self.remote_levels[rng.next_below(self.remote_levels.len())];
+                if self.groups[gi].fixed_remote_ppm.is_none() {
+                    c.remote_ppm[gi] = lv;
+                }
+            }
+        }
+        Ok(c)
+    }
+
+    /// Shared placement scaffold: pins first, then `pick` chooses among
+    /// `(domain, room)` slots for each free group in index order.
+    fn place_free(
+        &self,
+        mut pick: impl FnMut(&[(usize, usize)], usize, usize) -> Option<usize>,
+    ) -> Result<Candidate> {
+        let nd = self.shape.n_domains();
+        let mut room = self.domain_cores.clone();
+        let mut home = vec![0u16; self.k()];
+        for (gi, g) in self.groups.iter().enumerate() {
+            if let Some(d) = g.pinned {
+                if room[d] < g.n {
+                    return Err(Error::InvalidPlan(format!(
+                        "pinned group {gi} ({}) overflows domain d{d}",
+                        g.name
+                    )));
+                }
+                room[d] -= g.n;
+                home[gi] = d as u16;
+            }
+        }
+        for (gi, g) in self.groups.iter().enumerate() {
+            if g.pinned.is_some() {
+                continue;
+            }
+            let free: Vec<(usize, usize)> = (0..nd).map(|d| (d, room[d])).collect();
+            let slot = pick(&free, gi, g.n).ok_or_else(|| {
+                Error::InvalidPlan(format!("no domain has room for group {gi} ({})", g.name))
+            })?;
+            let d = free[slot].0;
+            if room[d] < g.n {
+                return Err(Error::InvalidPlan(format!(
+                    "picked domain d{d} lacks room for group {gi} ({})",
+                    g.name
+                )));
+            }
+            room[d] -= g.n;
+            home[gi] = d as u16;
+        }
+        let remote_ppm = (0..self.k()).map(|gi| self.initial_ppm(gi)).collect();
+        Ok(Candidate { home, remote_ppm })
+    }
+
+    /// All feasible neighborhood moves of `c`, in deterministic order:
+    /// migrations (group asc, domain asc), swaps (i < j), retunes
+    /// (group asc, palette asc).
+    pub fn neighbors(&self, c: &Candidate) -> Vec<Move> {
+        let nd = self.shape.n_domains();
+        let load = self.loads(c);
+        let mut out = Vec::new();
+        for (gi, g) in self.groups.iter().enumerate() {
+            if g.pinned.is_some() {
+                continue;
+            }
+            let from = c.home[gi] as usize;
+            for d in 0..nd {
+                if d != from && load[d] + g.n <= self.domain_cores[d] {
+                    out.push(Move::Migrate(gi, d as u16));
+                }
+            }
+        }
+        for i in 0..self.k() {
+            if self.groups[i].pinned.is_some() {
+                continue;
+            }
+            for j in (i + 1)..self.k() {
+                if self.groups[j].pinned.is_some() {
+                    continue;
+                }
+                let (di, dj) = (c.home[i] as usize, c.home[j] as usize);
+                if di == dj {
+                    continue;
+                }
+                let (ni, nj) = (self.groups[i].n, self.groups[j].n);
+                if load[di] - ni + nj <= self.domain_cores[di]
+                    && load[dj] - nj + ni <= self.domain_cores[dj]
+                {
+                    out.push(Move::Swap(i, j));
+                }
+            }
+        }
+        for gi in 0..self.k() {
+            if self.groups[gi].fixed_remote_ppm.is_some() {
+                continue;
+            }
+            for &lv in &self.remote_levels {
+                if lv != c.remote_ppm[gi] {
+                    out.push(Move::Retune(gi, lv));
+                }
+            }
+        }
+        out
+    }
+
+    /// The analytic-model groups of a candidate, in group order.
+    pub fn remote_groups(&self, c: &Candidate) -> Vec<RemoteGroup> {
+        self.groups
+            .iter()
+            .enumerate()
+            .map(|(gi, g)| RemoteGroup {
+                home: c.home[gi] as usize,
+                n: g.n,
+                f: g.f,
+                bs_gbs: g.bs_gbs,
+                remote_frac: c.remote_ppm[gi] as f64 / 1e6,
+            })
+            .collect()
+    }
+
+    /// The groups whose `(home, remote_frac)` differ between `from` and
+    /// `to`, as delta-evaluation changes.
+    pub fn changes(&self, from: &Candidate, to: &Candidate) -> Vec<(usize, RemoteGroup)> {
+        let mut out = Vec::new();
+        for gi in 0..self.k() {
+            if from.home[gi] != to.home[gi] || from.remote_ppm[gi] != to.remote_ppm[gi] {
+                let g = &self.groups[gi];
+                out.push((
+                    gi,
+                    RemoteGroup {
+                        home: to.home[gi] as usize,
+                        n: g.n,
+                        f: g.f,
+                        bs_gbs: g.bs_gbs,
+                        remote_frac: to.remote_ppm[gi] as f64 / 1e6,
+                    },
+                ));
+            }
+        }
+        out
+    }
+
+    /// A mix-DSL-style label of a candidate:
+    /// `dcopy:8@d1%r0.25+ddot2:8@d0`.
+    pub fn label(&self, c: &Candidate) -> String {
+        let parts: Vec<String> = self
+            .groups
+            .iter()
+            .enumerate()
+            .map(|(gi, g)| {
+                let r = c.remote_ppm[gi];
+                let suffix = if r > 0 {
+                    format!("%r{}", r as f64 / 1e6)
+                } else {
+                    String::new()
+                };
+                format!("{}:{}@d{}{}", g.name, g.n, c.home[gi], suffix)
+            })
+            .collect();
+        parts.join("+")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape2x2() -> TopoShape {
+        TopoShape {
+            socket_of: vec![0, 0, 1, 1],
+            bw_scale: vec![1.0; 4],
+            link_bw_gbs: 30.0,
+            link_bw_rev_gbs: 30.0,
+        }
+    }
+
+    fn group(name: &str, n: usize) -> OptGroup {
+        OptGroup {
+            name: name.into(),
+            kernel: KernelId::Dcopy,
+            n,
+            f: 0.5,
+            bs_gbs: 32.0,
+            pinned: None,
+            fixed_remote_ppm: None,
+        }
+    }
+
+    fn space4(groups: Vec<OptGroup>) -> SearchSpace {
+        SearchSpace::new(shape2x2(), vec![8; 4], groups, DEFAULT_REMOTE_LEVELS.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn compact_and_scatter_starts_are_feasible_and_distinct() {
+        let s = space4(vec![group("a", 4), group("b", 4), group("c", 4)]);
+        let compact = s.start_compact().unwrap();
+        let scatter = s.start_scatter().unwrap();
+        assert!(s.feasible(&compact));
+        assert!(s.feasible(&scatter));
+        assert_eq!(compact.home, vec![0, 0, 1]);
+        assert_eq!(scatter.home, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn pins_and_fixed_fractions_are_respected_everywhere() {
+        let mut a = group("a", 4);
+        a.pinned = Some(2);
+        a.fixed_remote_ppm = Some(250_000);
+        let s = space4(vec![a, group("b", 4)]);
+        let c = s.start_compact().unwrap();
+        assert_eq!(c.home[0], 2);
+        assert_eq!(c.remote_ppm[0], 250_000);
+        for mv in s.neighbors(&c) {
+            match mv {
+                Move::Migrate(g, _) | Move::Retune(g, _) => assert_ne!(g, 0),
+                Move::Swap(i, j) => {
+                    assert_ne!(i, 0);
+                    assert_ne!(j, 0);
+                }
+            }
+            assert!(s.feasible(&c.apply(mv)), "{mv:?}");
+        }
+    }
+
+    #[test]
+    fn neighbors_respect_capacity() {
+        // Two 8-core groups on 8-core domains: no domain can host both.
+        let s = space4(vec![group("a", 8), group("b", 8)]);
+        let c = s.start_compact().unwrap();
+        assert_eq!(c.home, vec![0, 1]);
+        for mv in s.neighbors(&c) {
+            assert!(s.feasible(&c.apply(mv)), "{mv:?} breaks capacity");
+            if let Move::Migrate(_, d) = mv {
+                assert!(d >= 2, "migrating onto an occupied domain must be pruned");
+            }
+        }
+    }
+
+    #[test]
+    fn random_starts_are_deterministic_per_seed() {
+        let s = space4(vec![group("a", 4), group("b", 4), group("c", 8)]);
+        let mut r1 = XorShift64::new(7);
+        let mut r2 = XorShift64::new(7);
+        let c1 = s.start_random(&mut r1).unwrap();
+        let c2 = s.start_random(&mut r2).unwrap();
+        assert_eq!(c1, c2);
+        assert!(s.feasible(&c1));
+    }
+
+    #[test]
+    fn label_round_trips_the_mix_dsl_shape() {
+        let s = space4(vec![group("dcopy", 4), group("ddot2", 4)]);
+        let mut c = s.start_compact().unwrap();
+        c.remote_ppm[0] = 250_000;
+        assert_eq!(s.label(&c), "dcopy:4@d0%r0.25+ddot2:4@d0");
+    }
+}

@@ -5,6 +5,7 @@
 //! bench harness call these.
 
 mod experiments;
+mod optimizer;
 mod scenario;
 mod table;
 
@@ -12,5 +13,6 @@ pub use experiments::{
     ablation_report, fig1_report, fig3_report, fig4_report, fig6_report, fig7_report, fig8_report, fig9_report,
     table1_report, table2_report, ExperimentCtx,
 };
+pub use optimizer::optimizer_report;
 pub use scenario::{scenario_report, topology_scenario_report};
 pub use table::AsciiTable;

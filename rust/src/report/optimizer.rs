@@ -1,0 +1,179 @@
+//! Report surface of the placement optimizer: incumbent trace, winner
+//! share tables, and the search-throughput / cache counters that make
+//! `repro optimize` runs comparable.
+
+use std::fmt::Write as _;
+
+use crate::error::Result;
+use crate::optimizer::{OptResult, SearchConfig, SearchSpace};
+use crate::report::experiments::ExperimentCtx;
+use crate::report::table::AsciiTable;
+use crate::topology::Topology;
+
+/// Render one search result: the configuration, the incumbent trace, the
+/// winner's per-group and per-interface share tables, and the
+/// evaluations/s + cache-counter footer. Also writes
+/// `optimizer_<topology>.csv` (trace + winner rows) under the context's
+/// output directory.
+pub fn optimizer_report(
+    ctx: &ExperimentCtx,
+    topo: &Topology,
+    space: &SearchSpace,
+    cfg: &SearchConfig,
+    result: &OptResult,
+) -> Result<String> {
+    let mut out = String::new();
+    writeln!(
+        out,
+        "OPTIMIZE on {} — objective {}, {} groups, {} starts, beam {}, budget {}, seed {}",
+        topo.label(),
+        cfg.objective.name(),
+        space.k(),
+        cfg.starts,
+        cfg.beam,
+        cfg.budget,
+        cfg.seed
+    )
+    .unwrap();
+
+    writeln!(out, "\nincumbent trace ({} improvements):", result.trace.len()).unwrap();
+    let mut tt = AsciiTable::new(&["scored", "start", "step", "score", "candidate"]);
+    for step in &result.trace {
+        tt.row(vec![
+            step.scored_at.to_string(),
+            step.start.to_string(),
+            step.step.to_string(),
+            format!("{:.3}", step.score),
+            step.label.clone(),
+        ]);
+    }
+    out.push_str(&tt.render());
+
+    writeln!(out, "\nwinner: {}   score {:.3}", result.best_label, result.best_score).unwrap();
+    if let Some(m) = result.makespan_s {
+        writeln!(out, "simulated makespan: {m:.3} s").unwrap();
+    }
+    let mut wt = AsciiTable::new(&["group", "kernel", "n", "home", "%r", "rate/core", "agg GB/s"]);
+    for (gi, g) in space.groups.iter().enumerate() {
+        wt.row(vec![
+            gi.to_string(),
+            g.name.clone(),
+            g.n.to_string(),
+            format!("d{}", result.best.home[gi]),
+            format!("{:.2}", result.best.remote_ppm[gi] as f64 / 1e6),
+            format!("{:.2}", result.best_rates[gi]),
+            format!("{:.1}", result.share.group_bw_gbs[gi]),
+        ]);
+    }
+    out.push_str(&wt.render());
+
+    let mut dt = AsciiTable::new(&["iface", "b_mix GB/s", "demand GB/s", "state"]);
+    for (d, iface) in result.share.domains.iter().enumerate() {
+        dt.row(vec![
+            format!("d{d}"),
+            format!("{:.1}", iface.b_mix_gbs),
+            format!("{:.1}", iface.demand_gbs),
+            if iface.saturated { "saturated" } else { "nonsaturated" }.to_string(),
+        ]);
+    }
+    for (li, link) in space.shape.links().iter().zip(&result.share.links) {
+        if link.demand_gbs <= 0.0 {
+            continue;
+        }
+        dt.row(vec![
+            format!("s{}->s{}", li.0, li.1),
+            format!("{:.1}", link.b_mix_gbs),
+            format!("{:.1}", link.demand_gbs),
+            if link.saturated { "saturated" } else { "nonsaturated" }.to_string(),
+        ]);
+    }
+    out.push_str("winner interfaces:\n");
+    out.push_str(&dt.render());
+
+    let evals_per_s = result.scored as f64 / result.wall_s.max(1e-12);
+    writeln!(
+        out,
+        "\nsearch: {} scored ({} evaluated) in {:.3} s — {:.0} evaluations/s",
+        result.scored, result.evaluated, result.wall_s, evals_per_s
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "delta: {} evals, {} interfaces re-rated, {} reused ({:.1}% saved), {} full solves",
+        result.delta.evals,
+        result.delta.iface_evals,
+        result.delta.iface_reused,
+        100.0 * result.delta.iface_reused as f64
+            / (result.delta.iface_evals + result.delta.iface_reused).max(1) as f64,
+        result.delta.full_solves
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "score memo: {} hits, {} misses, {} entries",
+        result.stats.memo_hits, result.stats.memo_misses, result.stats.memo_entries
+    )
+    .unwrap();
+
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    let mut csv = String::from("kind,index,start,step,score,home,remote_frac,rate_per_core\n");
+    for step in &result.trace {
+        writeln!(
+            csv,
+            "trace,{},{},{},{},,,",
+            step.scored_at, step.start, step.step, step.score
+        )
+        .unwrap();
+    }
+    for gi in 0..space.k() {
+        writeln!(
+            csv,
+            "winner,{gi},,,{},{},{},{}",
+            result.best_score,
+            result.best.home[gi],
+            result.best.remote_ppm[gi] as f64 / 1e6,
+            result.best_rates[gi]
+        )
+        .unwrap();
+    }
+    std::fs::write(ctx.out_dir.join(format!("optimizer_{}.csv", topo.label())), csv)?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{machine, MachineId};
+    use crate::kernels::KernelId;
+    use crate::optimizer::optimize;
+    use crate::scenario::Mix;
+    use std::collections::HashMap;
+
+    #[test]
+    fn report_renders_and_writes_csv() {
+        let dir = std::env::temp_dir().join("membw-optimizer-report");
+        let ctx = ExperimentCtx::fluid(dir.clone());
+        let m = machine(MachineId::Rome);
+        let topo = Topology::parse(&m, "2x2").unwrap();
+        let mix = Mix::parse("dcopy:16+ddot2:16").unwrap();
+        let chars: HashMap<KernelId, (f64, f64)> = [
+            (KernelId::Dcopy, (0.85, 30.0)),
+            (KernelId::Ddot2, (0.7, 28.0)),
+        ]
+        .into_iter()
+        .collect();
+        let space = SearchSpace::from_mix(&topo, &mix, &chars).unwrap();
+        let cfg = SearchConfig { budget: 120, starts: 2, ..SearchConfig::default() };
+        let result = optimize(&space, &cfg).unwrap();
+        let text = optimizer_report(&ctx, &topo, &space, &cfg, &result).unwrap();
+        assert!(text.contains("OPTIMIZE on"), "{text}");
+        assert!(text.contains("incumbent trace"));
+        assert!(text.contains("winner:"));
+        assert!(text.contains("evaluations/s"));
+        assert!(text.contains("score memo:"));
+        let csv =
+            std::fs::read_to_string(dir.join(format!("optimizer_{}.csv", topo.label()))).unwrap();
+        assert!(csv.starts_with("kind,index"));
+        assert!(csv.contains("winner,0"));
+    }
+}

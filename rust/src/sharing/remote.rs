@@ -265,7 +265,11 @@ const FIXED_POINT_TOL: f64 = 1e-12;
 /// Relative slack when deciding whether a portion outruns its group's
 /// lockstep rate (i.e. whether the group is gated at all); loose enough to
 /// ignore round-off between portions of an ungated group.
-const GATING_TOL: f64 = 1e-9;
+///
+/// `pub(crate)` so the optimizer's delta evaluator
+/// ([`crate::optimizer::DeltaEval`]) applies the *same* gating test and
+/// stays bit-identical to this module.
+pub(crate) const GATING_TOL: f64 = 1e-9;
 
 /// One global water-fill over every interface with per-group per-core rate
 /// caps: grants per portion plus per-interface summaries.
@@ -274,6 +278,140 @@ struct Fill {
     link_grant: Vec<f64>,
     domains: Vec<InterfaceShare>,
     links: Vec<InterfaceShare>,
+}
+
+/// Expand `groups` into traffic portions, validating homes and fractions.
+/// The single portion-expansion path of the model — [`share_remote`] and
+/// the optimizer's delta evaluator both call it, so a candidate placement
+/// and its full re-solve can never route differently.
+pub(crate) fn expand_portions(
+    shape: &TopoShape,
+    groups: &[RemoteGroup],
+    links: &[(usize, usize)],
+) -> Result<Vec<Portion>> {
+    let nd = shape.n_domains();
+    let mut portions: Vec<Portion> = Vec::new();
+    for (gi, g) in groups.iter().enumerate() {
+        if !g.remote_frac.is_finite() || !(0.0..=1.0).contains(&g.remote_frac) {
+            return Err(Error::InvalidPlan(format!(
+                "remote fraction {} of group {gi} outside [0, 1]",
+                g.remote_frac
+            )));
+        }
+        if g.home >= nd {
+            return Err(Error::InvalidPlan(format!(
+                "group {gi} homed on domain d{} but the shape has {nd} domains",
+                g.home
+            )));
+        }
+        if g.remote_frac > 0.0 && nd < 2 {
+            return Err(Error::InvalidPlan(
+                "remote accesses need at least two ccNUMA domains".into(),
+            ));
+        }
+        for (target, link, weight) in
+            portion_routes(&shape.socket_of, links, shape.link_bw_gbs > 0.0, g.home, g.remote_frac)
+        {
+            portions.push(Portion {
+                group: gi,
+                target,
+                weight,
+                link,
+                mem_bw_gbs: 0.0,
+                link_grant_gbs: 0.0,
+                granted_bw_gbs: 0.0,
+            });
+        }
+    }
+    Ok(portions)
+}
+
+/// Water-fill one domain's memory interface over the portions `idx` (all
+/// with `target == d`, in global portion-index order), writing grants into
+/// `mem_grant` at the global indices. The capacity (generalized Eq. 4
+/// mean) is taken over the *uncapped* thread weights, so caps redistribute
+/// bandwidth without changing what the interface can deliver.
+///
+/// `pub(crate)`: this is the per-interface unit the optimizer's delta
+/// evaluator re-runs on dirty interfaces only — the shared implementation
+/// is what makes delta evaluation bit-identical to [`share_remote`].
+pub(crate) fn fill_mem_iface(
+    shape: &TopoShape,
+    groups: &[RemoteGroup],
+    portions: &[Portion],
+    idx: &[usize],
+    d: usize,
+    caps: &[f64],
+    mem_grant: &mut [f64],
+) -> InterfaceShare {
+    let wg: Vec<WeightedGroup> = idx
+        .iter()
+        .map(|&p| {
+            let g = &groups[portions[p].group];
+            WeightedGroup {
+                n: g.n as f64 * portions[p].weight,
+                f: g.f,
+                bs_gbs: g.bs_gbs * shape.bw_scale[d],
+            }
+        })
+        .collect();
+    let n_tot: f64 = wg.iter().map(|g| g.n).sum();
+    if n_tot == 0.0 {
+        return InterfaceShare::default();
+    }
+    let b_mix: f64 = wg.iter().map(|g| g.n * g.bs_gbs).sum::<f64>() / n_tot;
+    let rc: Vec<f64> = idx.iter().map(|&p| caps[portions[p].group]).collect();
+    let share = share_weighted_capped(&wg, b_mix, &rc);
+    for (k, &p) in idx.iter().enumerate() {
+        mem_grant[p] = share.groups[k].group_bw_gbs;
+    }
+    InterfaceShare {
+        b_mix_gbs: b_mix,
+        demand_gbs: wg.iter().map(|g| g.n * g.f * g.bs_gbs).sum(),
+        saturated: share.saturated,
+    }
+}
+
+/// Water-fill one directed link over the portions `idx` (all with
+/// `link == Some(li)`, in global portion-index order) at its own
+/// per-direction capacity; a portion's demand is still that of the memory
+/// stream it ships. Shared with the delta evaluator like
+/// [`fill_mem_iface`].
+pub(crate) fn fill_link_iface(
+    shape: &TopoShape,
+    groups: &[RemoteGroup],
+    portions: &[Portion],
+    idx: &[usize],
+    li: usize,
+    links: &[(usize, usize)],
+    caps: &[f64],
+    link_grant: &mut [f64],
+) -> InterfaceShare {
+    if idx.is_empty() {
+        return InterfaceShare::default();
+    }
+    let wg: Vec<WeightedGroup> = idx
+        .iter()
+        .map(|&p| {
+            let g = &groups[portions[p].group];
+            WeightedGroup {
+                n: g.n as f64 * portions[p].weight,
+                f: g.f,
+                bs_gbs: g.bs_gbs * shape.bw_scale[portions[p].target],
+            }
+        })
+        .collect();
+    let capacity = shape.link_capacity_gbs(links[li]);
+    let rc: Vec<f64> = idx.iter().map(|&p| caps[portions[p].group]).collect();
+    let share = share_weighted_capped(&wg, capacity, &rc);
+    for (k, &p) in idx.iter().enumerate() {
+        link_grant[p] = share.groups[k].group_bw_gbs;
+    }
+    InterfaceShare {
+        b_mix_gbs: capacity,
+        demand_gbs: wg.iter().map(|g| g.n * g.f * g.bs_gbs).sum(),
+        saturated: share.saturated,
+    }
 }
 
 fn fill(
@@ -287,73 +425,18 @@ fn fill(
     let mut mem_grant = vec![0.0f64; portions.len()];
     let mut link_grant = vec![0.0f64; portions.len()];
 
-    // Every memory interface runs the generalized Eqs. (4)+(5) over the
-    // portions it carries; the capacity (generalized Eq. 4 mean) is taken
-    // over the *uncapped* thread weights, so caps redistribute bandwidth
-    // without changing what the interface can deliver.
     let mut domains = vec![InterfaceShare::default(); nd];
     for (d, dom_share) in domains.iter_mut().enumerate() {
         let idx: Vec<usize> = (0..portions.len()).filter(|&p| portions[p].target == d).collect();
-        let wg: Vec<WeightedGroup> = idx
-            .iter()
-            .map(|&p| {
-                let g = &groups[portions[p].group];
-                WeightedGroup {
-                    n: g.n as f64 * portions[p].weight,
-                    f: g.f,
-                    bs_gbs: g.bs_gbs * shape.bw_scale[d],
-                }
-            })
-            .collect();
-        let n_tot: f64 = wg.iter().map(|g| g.n).sum();
-        if n_tot == 0.0 {
-            continue;
-        }
-        let b_mix: f64 = wg.iter().map(|g| g.n * g.bs_gbs).sum::<f64>() / n_tot;
-        let rc: Vec<f64> = idx.iter().map(|&p| caps[portions[p].group]).collect();
-        let share = share_weighted_capped(&wg, b_mix, &rc);
-        for (k, &p) in idx.iter().enumerate() {
-            mem_grant[p] = share.groups[k].group_bw_gbs;
-        }
-        *dom_share = InterfaceShare {
-            b_mix_gbs: b_mix,
-            demand_gbs: wg.iter().map(|g| g.n * g.f * g.bs_gbs).sum(),
-            saturated: share.saturated,
-        };
+        *dom_share = fill_mem_iface(shape, groups, portions, &idx, d, caps, &mut mem_grant);
     }
 
-    // Every directed link runs the same water-fill at its own per-direction
-    // capacity; a portion's demand is still that of the memory stream it
-    // ships.
     let mut link_shares = vec![InterfaceShare::default(); links.len()];
     for (li, link_share) in link_shares.iter_mut().enumerate() {
         let idx: Vec<usize> =
             (0..portions.len()).filter(|&p| portions[p].link == Some(li)).collect();
-        if idx.is_empty() {
-            continue;
-        }
-        let wg: Vec<WeightedGroup> = idx
-            .iter()
-            .map(|&p| {
-                let g = &groups[portions[p].group];
-                WeightedGroup {
-                    n: g.n as f64 * portions[p].weight,
-                    f: g.f,
-                    bs_gbs: g.bs_gbs * shape.bw_scale[portions[p].target],
-                }
-            })
-            .collect();
-        let capacity = shape.link_capacity_gbs(links[li]);
-        let rc: Vec<f64> = idx.iter().map(|&p| caps[portions[p].group]).collect();
-        let share = share_weighted_capped(&wg, capacity, &rc);
-        for (k, &p) in idx.iter().enumerate() {
-            link_grant[p] = share.groups[k].group_bw_gbs;
-        }
-        *link_share = InterfaceShare {
-            b_mix_gbs: capacity,
-            demand_gbs: wg.iter().map(|g| g.n * g.f * g.bs_gbs).sum(),
-            saturated: share.saturated,
-        };
+        *link_share =
+            fill_link_iface(shape, groups, portions, &idx, li, links, caps, &mut link_grant);
     }
 
     Fill { mem_grant, link_grant, domains, links: link_shares }
@@ -361,8 +444,15 @@ fn fill(
 
 /// Lockstep rate of one group under a fill: `min_p grant_p / (n · w_p)`
 /// over its portions (a cross-socket portion is gated by the slower of its
-/// two interfaces).
-fn group_rate(groups: &[RemoteGroup], portions: &[Portion], f: &Fill, gi: usize) -> f64 {
+/// two interfaces). Takes raw grant slices so the optimizer's delta
+/// evaluator shares the exact arithmetic.
+pub(crate) fn lockstep_rate(
+    groups: &[RemoteGroup],
+    portions: &[Portion],
+    mem_grant: &[f64],
+    link_grant: &[f64],
+    gi: usize,
+) -> f64 {
     let n = groups[gi].n as f64;
     if n == 0.0 {
         return 0.0;
@@ -373,8 +463,8 @@ fn group_rate(groups: &[RemoteGroup], portions: &[Portion], f: &Fill, gi: usize)
             continue;
         }
         let grant = match p.link {
-            Some(_) => f.mem_grant[i].min(f.link_grant[i]),
-            None => f.mem_grant[i],
+            Some(_) => mem_grant[i].min(link_grant[i]),
+            None => mem_grant[i],
         };
         rate = rate.min(grant / (n * p.weight));
     }
@@ -383,6 +473,36 @@ fn group_rate(groups: &[RemoteGroup], portions: &[Portion], f: &Fill, gi: usize)
     } else {
         0.0
     }
+}
+
+fn group_rate(groups: &[RemoteGroup], portions: &[Portion], f: &Fill, gi: usize) -> f64 {
+    lockstep_rate(groups, portions, &f.mem_grant, &f.link_grant, gi)
+}
+
+/// Whether any group is gated by a slower portion under the pass-1 fill —
+/// the trigger of the Gauss-Seidel sweeps. Shared with the delta evaluator
+/// (which falls back to the full solve whenever this fires).
+pub(crate) fn any_gated(
+    groups: &[RemoteGroup],
+    portions: &[Portion],
+    mem_grant: &[f64],
+    link_grant: &[f64],
+    rates: &[f64],
+) -> bool {
+    for (i, p) in portions.iter().enumerate() {
+        let n = groups[p.group].n as f64;
+        if n == 0.0 {
+            continue;
+        }
+        let grant = match p.link {
+            Some(_) => mem_grant[i].min(link_grant[i]),
+            None => mem_grant[i],
+        };
+        if grant / (n * p.weight) > rates[p.group] * (1.0 + GATING_TOL) {
+            return true;
+        }
+    }
+    false
 }
 
 /// Evaluate the remote-aware sharing model over `groups` on `shape`.
@@ -413,43 +533,10 @@ pub fn share_remote_with_cap(
     groups: &[RemoteGroup],
     max_sweeps: usize,
 ) -> Result<RemoteShare> {
-    let nd = shape.n_domains();
     let links = shape.links();
 
-    // 1. Expand groups into traffic portions.
-    let mut portions: Vec<Portion> = Vec::new();
-    for (gi, g) in groups.iter().enumerate() {
-        if !g.remote_frac.is_finite() || !(0.0..=1.0).contains(&g.remote_frac) {
-            return Err(Error::InvalidPlan(format!(
-                "remote fraction {} of group {gi} outside [0, 1]",
-                g.remote_frac
-            )));
-        }
-        if g.home >= nd {
-            return Err(Error::InvalidPlan(format!(
-                "group {gi} homed on domain d{} but the shape has {nd} domains",
-                g.home
-            )));
-        }
-        if g.remote_frac > 0.0 && nd < 2 {
-            return Err(Error::InvalidPlan(
-                "remote accesses need at least two ccNUMA domains".into(),
-            ));
-        }
-        for (target, link, weight) in
-            portion_routes(&shape.socket_of, &links, shape.link_bw_gbs > 0.0, g.home, g.remote_frac)
-        {
-            portions.push(Portion {
-                group: gi,
-                target,
-                weight,
-                link,
-                mem_bw_gbs: 0.0,
-                link_grant_gbs: 0.0,
-                granted_bw_gbs: 0.0,
-            });
-        }
-    }
+    // 1. Expand groups into traffic portions (validates homes/fractions).
+    let mut portions = expand_portions(shape, groups, &links)?;
 
     // 2. Pass 1: uncapped global fill (the historical single-pass answer).
     let k = groups.len();
@@ -459,22 +546,9 @@ pub fn share_remote_with_cap(
 
     // 3. A group is gated when some portion of it could run faster than
     // its lockstep rate — that surplus grant is stranded capacity.
-    let mut gated = vec![false; k];
-    for (i, p) in portions.iter().enumerate() {
-        let n = groups[p.group].n as f64;
-        if n == 0.0 {
-            continue;
-        }
-        let grant = match p.link {
-            Some(_) => first.mem_grant[i].min(first.link_grant[i]),
-            None => first.mem_grant[i],
-        };
-        if grant / (n * p.weight) > rates[p.group] * (1.0 + GATING_TOL) {
-            gated[p.group] = true;
-        }
-    }
+    let gated = any_gated(groups, &portions, &first.mem_grant, &first.link_grant, &rates);
 
-    let (per_core_gbs, final_fill, iterations, converged) = if !gated.iter().any(|&g| g) {
+    let (per_core_gbs, final_fill, iterations, converged) = if !gated {
         // No stranded capacity: pass 1 is already the fixed point.
         (rates, first, 1, true)
     } else {

@@ -1,0 +1,151 @@
+//! Conformance properties of the placement optimizer
+//! (`membw::optimizer`), end to end through the public API:
+//!
+//! * the search winner is never worse than the deterministic compact /
+//!   scatter starts or a fully hand-pinned placement,
+//! * incremental delta re-rating is bit-identical to a full
+//!   `share_remote` re-solve along randomized move sequences,
+//! * a fixed seed gives an identical incumbent trace, independent of the
+//!   delta / parallel / memo fast paths.
+
+use std::collections::HashMap;
+
+use membw::config::{machine, MachineId};
+use membw::kernels::KernelId;
+use membw::optimizer::{optimize, DeltaEval, SearchConfig, SearchSpace};
+use membw::scenario::{CharCache, CharSource, Mix};
+use membw::sharing::share_remote;
+use membw::simulator::XorShift64;
+use membw::topology::Topology;
+
+/// ECM-characterized `(f, b_s)` per kernel of a mix, the same source the
+/// CLI uses.
+fn chars_of(topo: &Topology, mix: &Mix) -> HashMap<KernelId, (f64, f64)> {
+    let mut kernels: Vec<KernelId> = mix.groups.iter().map(|g| g.kernel).collect();
+    kernels.sort_by_key(|k| k.key());
+    kernels.dedup();
+    let meas = CharCache::global()
+        .characterize_source(&topo.base, &kernels, &CharSource::Ecm)
+        .expect("ECM characterization");
+    meas.iter().map(|(&k, c)| (k, (c.f, c.bs_gbs))).collect()
+}
+
+/// Full-model throughput score of a candidate, the Objective::Throughput
+/// formula recomputed independently: `Σ n_g · rate_g`.
+fn full_score(space: &SearchSpace, cand: &membw::optimizer::Candidate) -> f64 {
+    let share = share_remote(&space.shape, &space.remote_groups(cand)).expect("full solve");
+    share
+        .per_core_gbs
+        .iter()
+        .zip(&space.groups)
+        .map(|(r, g)| g.n as f64 * r)
+        .sum()
+}
+
+#[test]
+fn winner_is_never_worse_than_compact_scatter_or_pinned_baselines() {
+    let m = machine(MachineId::Rome);
+    let topo = Topology::parse(&m, "2x2").unwrap();
+    let mix = Mix::parse("dcopy:8+ddot2:8+stream:8+daxpy:8").unwrap();
+    let space = SearchSpace::from_mix(&topo, &mix, &chars_of(&topo, &mix)).unwrap();
+    let cfg = SearchConfig { budget: 400, starts: 3, ..SearchConfig::default() };
+    let result = optimize(&space, &cfg).unwrap();
+
+    let compact = space.start_compact().unwrap();
+    let scatter = space.start_scatter().unwrap();
+    for (name, base) in [("compact", &compact), ("scatter", &scatter)] {
+        let s = full_score(&space, base);
+        assert!(
+            result.best_score >= s - 1e-9,
+            "winner {} must be >= the {name} start {s} ({})",
+            result.best_score,
+            space.label(base),
+        );
+    }
+
+    // A fully hand-pinned placement (one group per domain) is also a
+    // feasible point of the same space, so the winner must cover it too.
+    let pinned_mix = Mix::parse("dcopy:8@d0+ddot2:8@d1+stream:8@d2+daxpy:8@d3").unwrap();
+    let pinned_space =
+        SearchSpace::from_mix(&topo, &pinned_mix, &chars_of(&topo, &pinned_mix)).unwrap();
+    let pinned = pinned_space.start_compact().unwrap();
+    assert_eq!(pinned.home, vec![0, 1, 2, 3], "pins must be honored");
+    let s = full_score(&space, &pinned);
+    assert!(
+        result.best_score >= s - 1e-9,
+        "winner {} must be >= the pinned placement {s}",
+        result.best_score,
+    );
+}
+
+#[test]
+fn delta_re_rating_is_bit_identical_to_full_solves_on_random_walks() {
+    let m = machine(MachineId::Rome);
+    let topo = Topology::parse(&m, "2x4").unwrap();
+    // One group with a frozen remote fraction so cross-socket link
+    // interfaces carry traffic from the first step on.
+    let mix = Mix::parse("dcopy:8%r0.25+ddot2:8+stream:8+daxpy:8+vecsum:8").unwrap();
+    let space = SearchSpace::from_mix(&topo, &mix, &chars_of(&topo, &mix)).unwrap();
+
+    for seed in [1u64, 7, 0xC0FFEE] {
+        let mut rng = XorShift64::new(seed);
+        let mut cand = space.start_compact().unwrap();
+        let mut de =
+            DeltaEval::new(space.shape.clone(), space.remote_groups(&cand)).unwrap();
+        for step in 0..40 {
+            let moves = space.neighbors(&cand);
+            assert!(!moves.is_empty(), "the neighborhood must not be empty");
+            let mv = moves[rng.next_below(moves.len())];
+            let next = cand.apply(mv);
+            let out = de.eval(&space.changes(&cand, &next)).unwrap();
+            let full = share_remote(&space.shape, &space.remote_groups(&next)).unwrap();
+            for (gi, (a, b)) in out.rates.iter().zip(&full.per_core_gbs).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "seed {seed} step {step} group {gi}: delta {a} != full {b} for {:?}",
+                    mv,
+                );
+            }
+            de.commit(out);
+            cand = next;
+        }
+    }
+}
+
+#[test]
+fn fixed_seed_traces_are_identical_across_fast_paths() {
+    let m = machine(MachineId::Rome);
+    let topo = Topology::parse(&m, "2x2").unwrap();
+    let mix = Mix::parse("dcopy:8+ddot2:8+stream:8+daxpy:8").unwrap();
+    let space = SearchSpace::from_mix(&topo, &mix, &chars_of(&topo, &mix)).unwrap();
+    let cfg = SearchConfig { budget: 250, starts: 4, ..SearchConfig::default() };
+
+    let reference = optimize(&space, &cfg).unwrap();
+    let rerun = optimize(&space, &cfg).unwrap();
+    let serial_full = optimize(
+        &space,
+        &SearchConfig { parallel: false, use_delta: false, memoize: false, ..cfg },
+    )
+    .unwrap();
+
+    for (tag, other) in [("rerun", &rerun), ("serial full re-solve", &serial_full)] {
+        assert_eq!(reference.best, other.best, "{tag}: winner differs");
+        assert_eq!(
+            reference.best_score.to_bits(),
+            other.best_score.to_bits(),
+            "{tag}: best score differs"
+        );
+        assert_eq!(reference.scored, other.scored, "{tag}: scored count differs");
+        assert_eq!(reference.trace.len(), other.trace.len(), "{tag}: trace length differs");
+        for (a, b) in reference.trace.iter().zip(&other.trace) {
+            assert_eq!(a.candidate, b.candidate, "{tag}: incumbent differs");
+            assert_eq!(a.score.to_bits(), b.score.to_bits(), "{tag}: incumbent score differs");
+            assert_eq!(
+                (a.scored_at, a.start, a.step),
+                (b.scored_at, b.start, b.step),
+                "{tag}: incumbent position differs"
+            );
+        }
+    }
+}

@@ -10,7 +10,10 @@ Metrics (higher is better):
   pipeline and of its single-interface baseline sweep;
 * ``BENCH_cluster.json`` — ``events_per_s`` of the 64-node cluster co-sim
   and its ``speedup_vs_full`` over the full-recompute rating reference
-  (a drop in either means the incremental path lost its edge).
+  (a drop in either means the incremental path lost its edge);
+* ``BENCH_optimizer.json`` — ``evaluations_per_s`` of the placement
+  optimizer's delta + parallel + memo search and its ``speedup_vs_full``
+  over the sequential full-re-solve baseline.
 
 Usage::
 
@@ -49,7 +52,12 @@ from pathlib import Path
 # >15% slower than the committed baseline fails the gate.
 THRESHOLD = 0.15
 
-GATED_FILES = ["BENCH_cosim.json", "BENCH_multi_iface.json", "BENCH_cluster.json"]
+GATED_FILES = [
+    "BENCH_cosim.json",
+    "BENCH_multi_iface.json",
+    "BENCH_cluster.json",
+    "BENCH_optimizer.json",
+]
 
 
 def metrics_of(name: str, doc: dict) -> dict[str, float]:
@@ -68,6 +76,9 @@ def metrics_of(name: str, doc: dict) -> dict[str, float]:
     elif name == "BENCH_cluster.json":
         out["cluster.events_per_s"] = float(doc["cluster"]["events_per_s"])
         out["cluster.speedup_vs_full"] = float(doc["cluster"]["speedup_vs_full"])
+    elif name == "BENCH_optimizer.json":
+        out["optimizer.evaluations_per_s"] = float(doc["optimizer"]["evaluations_per_s"])
+        out["optimizer.speedup_vs_full"] = float(doc["optimizer"]["speedup_vs_full"])
     return out
 
 
