@@ -109,6 +109,45 @@ def ecm_workload(m, kname):
     return d, c, f, bs
 
 
+def ecm_workload_stencil(m):
+    """LC-at-L3 jacobi-like 2D stencil (mirror-representative of
+    kernels::jacobi_traffic with the layer condition satisfied at L3):
+    DRAM sees 3 streams/line (1 read + 1 write + 1 RFO), L2<->L3 sees 5
+    (the two extra stencil rows hit in L3). Returns
+    (d_l3, c, f, bs, f_l3, bs_l3, l3_frac) where d_l3 is the L2-miss line
+    rate, (f, bs) the DRAM-level chars, (f_l3, bs_l3) the L3-level chars,
+    and l3_frac the fraction of L2-miss lines that stop at the shared L3.
+
+    Identities the tandem folding relies on (exact in f64):
+      f  * bs  == d_mem * 64 * freq   (DRAM demand per core)
+      f3 * bs3 == d_l3  * 64 * freq   (L3 demand per core)
+    """
+    mem_total, l3_total = 3, 5
+    wf = 1.0 / mem_total
+    loads, stores, flops = 4.0, 1.0, 4.0
+    lanes = m["simd"] / 8.0
+    iters = ELEMS_PER_LINE
+    t_ol = iters * flops / (2.0 * lanes * 2.0)
+    t_l1reg = math.ceil(iters * loads / lanes) / m["ld_per_cy"]
+    t_l1l2 = l3_total * CACHE_LINE / m["l1l2"]
+    t_l2l3 = l3_total * CACHE_LINE / m["l2l3"]
+    bs = saturated_bw(m, wf, mem_total)
+    t_mem = mem_total * CACHE_LINE / (bs / m["freq"])
+    residue_lines = mem_total if m["residue_all"] else mem_total - 1
+    t_lat = m["residue"] * residue_lines
+    if m["overlap"] == "sum":
+        t_ecm = max(t_ol, t_l1reg + t_l1l2 + t_l2l3 + t_mem + t_lat)
+    else:
+        t_ecm = max(t_ol, t_l1reg, t_l1l2, t_l2l3, t_mem + t_lat)
+    f = t_mem / t_ecm
+    f3 = t_l2l3 / t_ecm
+    bs3 = m["l2l3"] * m["freq"]
+    d_l3 = l3_total / t_ecm
+    c = cost_factor(m, wf, mem_total)
+    l3_frac = 1.0 - mem_total / l3_total
+    return d_l3, c, f, bs, f3, bs3, l3_frac
+
+
 # --------------------------------------------------------------------------
 # xorshift64* (rust/src/simulator/xorshift.rs)
 # --------------------------------------------------------------------------
@@ -236,14 +275,17 @@ def des_seed(m, workloads, warmup=40000.0, measure=400000.0, seed=0xB4D5EED):
 
 class Net:
     """mem_caps: lines/cy per domain; links: DIRECTED socket pairs (a, b)
-    with per-direction capacities link_caps (lines/cy) / link_caps_gbs."""
+    with per-direction capacities link_caps (lines/cy) / link_caps_gbs;
+    l3_caps_gbs: one shared-L3 interface per socket (empty = unmodeled)."""
 
-    def __init__(self, mem_caps, socket_of, links, link_caps_gbs, m):
+    def __init__(self, mem_caps, socket_of, links, link_caps_gbs, m, l3_caps_gbs=None):
         self.mem_caps = mem_caps
         self.socket_of = socket_of
         self.links = links
         self.link_caps_gbs = link_caps_gbs
         self.link_caps = [g / m["freq"] / CACHE_LINE for g in link_caps_gbs]
+        self.l3_caps_gbs = l3_caps_gbs or []
+        self.l3_caps = [g / m["freq"] / CACHE_LINE for g in self.l3_caps_gbs]
         self.m = m
 
 
@@ -261,19 +303,35 @@ def net_of(m, sockets, domains_per_socket, bw_scale=None):
     fwd = m["link_bw"]
     rev = m.get("link_bw_rev", fwd) or fwd
     link_caps_gbs = [fwd if a < b else rev for a, b in links]
-    return Net(mem_caps, socket_of, links, link_caps_gbs, m)
+    l3 = m.get("l3_bw", 0.0)
+    l3_caps_gbs = [l3] * sockets if l3 > 0.0 else []
+    return Net(mem_caps, socket_of, links, link_caps_gbs, m, l3_caps_gbs)
 
 
 def route(net, streams):
-    """streams: list of (d, c, home, r). Returns portions
-    (stream, target, link_or_None, weight). A cross-socket portion rides
-    the directed link (socket_of[home] -> socket_of[target])."""
+    """streams: (d, c, home, r) or (d, c, home, r, l3_frac). Returns
+    portions (stream, target, link_or_None, weight, l3_socket_or_None,
+    mem_stage_bool). A cross-socket portion rides the directed link
+    (socket_of[home] -> socket_of[target]). A stream with l3_frac > 0 is
+    L3-resident: `d` is its L2-miss line rate, l3_frac of those lines stop
+    at the home socket's shared L3 (l3-only portion) and the rest continue
+    to DRAM in tandem (L3 stage first, then the home memory interface)."""
     nd = len(net.mem_caps)
     portions = []
-    for si, (d, c, home, r) in enumerate(streams):
+    for si, s in enumerate(streams):
+        d, c, home, r = s[:4]
+        l3f = s[4] if len(s) > 4 else 0.0
+        if l3f > 0.0:
+            assert r == 0.0, "L3-resident streams do not spread remotely"
+            assert net.l3_caps, "L3-resident stream on a net without an L3 node"
+            sock = net.socket_of[home]
+            portions.append((si, home, None, l3f, sock, False))
+            if l3f < 1.0:
+                portions.append((si, home, None, 1.0 - l3f, sock, True))
+            continue
         home_w = 1.0 - r
         if home_w > 0.0:
-            portions.append((si, home, None, home_w))
+            portions.append((si, home, None, home_w, None, True))
         if r > 0.0:
             w = r / (nd - 1)
             for t in range(nd):
@@ -282,7 +340,7 @@ def route(net, streams):
                 link = None
                 if net.socket_of[t] != net.socket_of[home] and net.links:
                     link = net.links.index((net.socket_of[home], net.socket_of[t]))
-                portions.append((si, t, link, w))
+                portions.append((si, t, link, w, None, True))
     return portions
 
 
@@ -295,41 +353,62 @@ def fluid_net(net, streams, warmup=4096, measure=12288):
     `min_p grant_p / w_p` assumes. With r = 0 every stream has exactly one
     portion and the loop is bit-identical to the seed fused loop.
 
+    L3-resident streams drain their l3-only portions at the shared-L3
+    node's rate and their tandem portions at min(lam_l3, lam_mem); an L3
+    line costs 1.0 at the L3 node, and only mem-stage occupancy reaches
+    the memory interface (weighted by the stream's DRAM cost factor c).
+
     Returns (per-portion lines/cy, portions, per-interface utilization
-    [mem..., links...])."""
+    [mem..., links..., l3...])."""
     m = net.m
     nd = len(net.mem_caps)
     nl = len(net.links)
+    n3 = len(net.l3_caps)
     ns = len(streams)
     portions = route(net, streams)
     np_ = len(portions)
     by_stream = [[i for i in range(np_) if portions[i][0] == s] for s in range(ns)]
     ds = [streams[s][0] for s in range(ns)]
     cs = [streams[s][1] for s in range(ns)]
-    win = [m["D0"] + m["beta"] * ds[s] * cs[s] * m["L0"] for s in range(ns)]
+    # The concurrency window hides DRAM latency, so it is sized from the
+    # DRAM-equivalent demand d*(1 - l3_frac): L3 hits complete at cache
+    # latency and do not hold a miss slot. Bitwise d*1.0 == d at frac 0.
+    l3fs = [streams[s][4] if len(streams[s]) > 4 else 0.0 for s in range(ns)]
+    win = [m["D0"] + m["beta"] * (ds[s] * (1.0 - l3fs[s])) * cs[s] * m["L0"]
+           for s in range(ns)]
     occ = [0.0] * np_
     served = [0.0] * np_
     occ_mem = [0.0] * nd
     occ_link = [0.0] * nl
+    occ_l3 = [0.0] * n3
     u_mem = [0.0] * nd
     u_link = [0.0] * nl
+    u_l3 = [0.0] * n3
     for cycle in range(warmup + measure + 1):
         measuring = cycle > warmup
         lam_mem = [min(net.mem_caps[d] / occ_mem[d], 1.0) if occ_mem[d] > 1e-12 else 1.0
                    for d in range(nd)]
         lam_link = [min(net.link_caps[l] / occ_link[l], 1.0) if occ_link[l] > 1e-12 else 1.0
                     for l in range(nl)]
+        lam_l3 = [min(net.l3_caps[s3] / occ_l3[s3], 1.0) if occ_l3[s3] > 1e-12 else 1.0
+                  for s3 in range(n3)]
         if measuring:
             for d in range(nd):
                 u_mem[d] += min(occ_mem[d] / net.mem_caps[d], 1.0)
             for l in range(nl):
                 u_link[l] += min(occ_link[l] / net.link_caps[l], 1.0)
+            for s3 in range(n3):
+                u_l3[s3] += min(occ_l3[s3] / net.l3_caps[s3], 1.0)
         occ_mem = [0.0] * nd
         occ_link = [0.0] * nl
+        occ_l3 = [0.0] * n3
         # Drain every portion at its interface rate.
         for i in range(np_):
-            _, tgt, link, _ = portions[i]
-            lam = lam_mem[tgt] if link is None else min(lam_mem[tgt], lam_link[link])
+            _, tgt, link, _, l3s, mem = portions[i]
+            if l3s is None:
+                lam = lam_mem[tgt] if link is None else min(lam_mem[tgt], lam_link[link])
+            else:
+                lam = min(lam_l3[l3s], lam_mem[tgt]) if mem else lam_l3[l3s]
             o_pre = occ[i]
             if measuring:
                 served[i] += lam * o_pre
@@ -342,11 +421,15 @@ def fluid_net(net, streams, warmup=4096, measure=12288):
                 for i in by_stream[s]:
                     occ[i] += inflow * portions[i][3]
         for i in range(np_):
-            _, tgt, link, _ = portions[i]
-            occ_mem[tgt] += occ[i] * cs[portions[i][0]]
+            _, tgt, link, _, l3s, mem = portions[i]
+            if mem:
+                occ_mem[tgt] += occ[i] * cs[portions[i][0]]
             if link is not None:
                 occ_link[link] += occ[i]
-    util = [u / measure for u in u_mem] + [u / measure for u in u_link]
+            if l3s is not None:
+                occ_l3[l3s] += occ[i]
+    util = ([u / measure for u in u_mem] + [u / measure for u in u_link]
+            + [u / measure for u in u_l3])
     return [s / measure for s in served], portions, util
 
 
@@ -360,16 +443,22 @@ def des_net(net, streams, warmup=40000.0, measure=400000.0, seed=0xB4D5EED):
     With r = 0 every stream has one portion, no portion-pick draw is made,
     and each domain replays the seed DES bit for bit.
 
+    L3-resident streams: the shared-L3 node is a first service stage (cost
+    1/C_l3 per line, like a link); an l3-only portion completes there,
+    a tandem portion continues into the home memory interface.
+
     Returns (per-portion lines/cy, portions)."""
     m = net.m
     nd = len(net.mem_caps)
+    nl = len(net.links)
+    n3 = len(net.l3_caps)
     ns = len(streams)
     portions = route(net, streams)
     np_ = len(portions)
 
-    # Union-find over interfaces (mem d -> d, link l -> nd + l); a stream
-    # couples every interface its portions touch.
-    parent = list(range(nd + len(net.links)))
+    # Union-find over interfaces (mem d -> d, link l -> nd + l, L3 node
+    # s -> nd + nl + s); a stream couples every interface its portions touch.
+    parent = list(range(nd + nl + n3))
 
     def find(x):
         while parent[x] != x:
@@ -382,15 +471,17 @@ def des_net(net, streams, warmup=40000.0, measure=400000.0, seed=0xB4D5EED):
         if ra != rb:
             parent[max(ra, rb)] = min(ra, rb)
 
-    for _, tgt, link, _ in portions:
-        if link is not None:
-            union(tgt, nd + link)
+    for p in portions:
+        if p[2] is not None:
+            union(p[1], nd + p[2])
+        if p[4] is not None:
+            union(p[1], nd + nl + p[4])
     for s in range(ns):
         targets = [portions[i][1] for i in range(np_) if portions[i][0] == s]
         for t in targets[1:]:
             union(targets[0], t)
 
-    comp_of_iface = [find(x) for x in range(nd + len(net.links))]
+    comp_of_iface = [find(x) for x in range(nd + nl + n3)]
     comps = sorted(set(comp_of_iface[portions[i][1]] for i in range(np_)))
     served = [0] * np_
     for comp in comps:
@@ -406,20 +497,23 @@ def des_net(net, streams, warmup=40000.0, measure=400000.0, seed=0xB4D5EED):
         outstanding, blocked = [0] * ks, [False] * ks
         for s in sl:
             d, c = streams[s][0], streams[s][1]
+            l3f = streams[s][4] if len(streams[s]) > 4 else 0.0
             gap.append(1.0 / d if d > 0.0 else math.inf)
-            w = m["D0"] + m["beta"] * d * c * m["L0"]
+            w = m["D0"] + m["beta"] * (d * (1.0 - l3f)) * c * m["L0"]
             window.append(max(int(math.floor(w + 0.5)), 1))
-        mcost, lcost = [], []
-        q_mem, q_link = [0] * k, [0] * k
+        mcost, lcost, l3cost = [], [], []
+        q_mem, q_link, q_l3 = [0] * k, [0] * k, [0] * k
         stream_of = []
         for i in local:
-            _, tgt, link, _ = portions[i]
+            _, tgt, link, _, l3s, _ = portions[i]
             c = streams[portions[i][0]][1]
             mcost.append(c / net.mem_caps[tgt])
             lcost.append(1.0 / net.link_caps[link] if link is not None else 0.0)
+            l3cost.append(1.0 / net.l3_caps[l3s] if l3s is not None else 0.0)
             stream_of.append(sl.index(portions[i][0]))
         mem_busy = {}
         link_busy = {}
+        l3_busy = {}
         heap = []
         for sj in range(ks):
             if math.isfinite(gap[sj]):
@@ -429,7 +523,8 @@ def des_net(net, streams, warmup=40000.0, measure=400000.0, seed=0xB4D5EED):
         def try_serve_mem(t, d):
             if mem_busy.get(d, False):
                 return
-            members = [j for j in range(k) if portions[local[j]][1] == d]
+            members = [j for j in range(k)
+                       if portions[local[j]][1] == d and portions[local[j]][5]]
             total = sum(q_mem[j] for j in members)
             if total == 0:
                 return
@@ -462,6 +557,24 @@ def des_net(net, streams, warmup=40000.0, measure=400000.0, seed=0xB4D5EED):
             link_busy[l] = True
             heapq.heappush(heap, (t + lcost[pick], pick, 2))
 
+        def try_serve_l3(t, s3):
+            if l3_busy.get(s3, False):
+                return
+            members = [j for j in range(k) if portions[local[j]][4] == s3]
+            total = sum(q_l3[j] for j in members)
+            if total == 0:
+                return
+            x = int(rng.next_f64() * total)
+            pick = members[0]
+            for j in members:
+                if x < q_l3[j]:
+                    pick = j
+                    break
+                x -= q_l3[j]
+            q_l3[pick] -= 1
+            l3_busy[s3] = True
+            heapq.heappush(heap, (t + l3cost[pick], pick, 3))
+
         while heap:
             t, j, kind = heapq.heappop(heap)
             if t >= t_end:
@@ -486,9 +599,13 @@ def des_net(net, streams, warmup=40000.0, measure=400000.0, seed=0xB4D5EED):
                                 break
                             x -= w
                     link = portions[local[p]][2]
+                    l3s = portions[local[p]][4]
                     if link is not None:
                         q_link[p] += 1
                         try_serve_link(t, link)
+                    elif l3s is not None:
+                        q_l3[p] += 1
+                        try_serve_l3(t, l3s)
                     else:
                         q_mem[p] += 1
                         try_serve_mem(t, portions[local[p]][1])
@@ -496,14 +613,33 @@ def des_net(net, streams, warmup=40000.0, measure=400000.0, seed=0xB4D5EED):
                     blocked[j] = True
             elif kind == 2:
                 # j is a local portion index leaving its link stage.
-                _, tgt, link, _ = portions[local[j]]
+                _, tgt, link, _, _, _ = portions[local[j]]
                 q_mem[j] += 1
                 link_busy[link] = False
                 try_serve_mem(t, tgt)
                 try_serve_link(t, link)
+            elif kind == 3:
+                # j is a local portion index leaving the shared-L3 stage.
+                _, tgt, _, _, l3s, mem = portions[local[j]]
+                l3_busy[l3s] = False
+                if mem:
+                    # Tandem portion: the line continues to the memory iface.
+                    q_mem[j] += 1
+                    try_serve_mem(t, tgt)
+                    try_serve_l3(t, l3s)
+                else:
+                    # L3-only portion: the line completes at the L3 node.
+                    sj = stream_of[j]
+                    outstanding[sj] -= 1
+                    if t >= warmup:
+                        served[local[j]] += 1
+                    if blocked[sj]:
+                        blocked[sj] = False
+                        heapq.heappush(heap, (t, sj, 0))
+                    try_serve_l3(t, l3s)
             else:
                 # j is a local portion index whose line finished at memory.
-                _, tgt, link, _ = portions[local[j]]
+                _, tgt, link, _, _, _ = portions[local[j]]
                 sj = stream_of[j]
                 outstanding[sj] -= 1
                 if t >= warmup:
@@ -521,9 +657,9 @@ def lockstep_per_stream(net, streams, per_portion, portions):
     out = []
     for si in range(len(streams)):
         rate = math.inf
-        for i, (s, _, _, w) in enumerate(portions):
-            if s == si:
-                rate = min(rate, to_gbs(net.m, per_portion[i]) / w)
+        for i, p in enumerate(portions):
+            if p[0] == si:
+                rate = min(rate, to_gbs(net.m, per_portion[i]) / p[3])
         out.append(rate if math.isfinite(rate) else 0.0)
     return out
 
@@ -570,14 +706,44 @@ def share_weighted_capped(groups, capacity, rate_caps):
     return bw
 
 
+def _gkind(g):
+    """Group kind: None (memory-bound), ("l3", f_l3, bs_l3), or ("comp",)."""
+    return g[5] if len(g) > 5 else None
+
+
 def _expand_portions(net, groups):
-    """Analytic portion expansion: (group, target, link_or_None, weight),
-    routed through the same directed-link rule as route()."""
+    """Analytic portion expansion: 7-tuples (group, target, link_or_None,
+    weight, l3_socket_or_None, mem_stage_bool, cap_scale), routed through
+    the same directed-link rule as route().
+
+    A memory-bound group expands exactly as before (all portions mem-stage,
+    cap_scale 1.0). An L3-kind group expands to at most two weight-1.0
+    single-stage portions on its home socket/domain: an L3 portion carrying
+    ALL its L2-miss traffic (chars f_l3, bs_l3) and — when f*bs > 0 — a
+    mem portion carrying its DRAM continuation (group chars f, bs). The mem
+    portion's cap_scale = (f*bs)/(f_l3*bs_l3) converts the group's
+    L3-level per-core rate cap into DRAM-level units, so the lockstep min
+    across the two portions is taken in one common (L3-level) unit.
+    A compute-bound group expands to no portions at all."""
     nd = len(net.mem_caps)
     portions = []
-    for gi, (home, n, f, bs, r) in enumerate(groups):
+    for gi, g in enumerate(groups):
+        home, n, f, bs, r = g[:5]
+        kind = _gkind(g)
+        if kind is not None and kind[0] == "comp":
+            continue
+        if kind is not None and kind[0] == "l3":
+            assert r == 0.0, "L3-resident groups do not spread remotely"
+            assert net.l3_caps_gbs, "L3 group on a net without an L3 node"
+            f3, bs3 = kind[1], kind[2]
+            sock = net.socket_of[home]
+            portions.append((gi, home, None, 1.0, sock, False, 1.0))
+            if f * bs > 0.0:
+                portions.append((gi, home, None, 1.0, None, True,
+                                 (f * bs) / (f3 * bs3)))
+            continue
         if 1.0 - r > 0.0:
-            portions.append((gi, home, None, 1.0 - r))
+            portions.append((gi, home, None, 1.0 - r, None, True, 1.0))
         if r > 0.0:
             w = r / (nd - 1)
             for t in range(nd):
@@ -586,19 +752,22 @@ def _expand_portions(net, groups):
                 link = None
                 if net.socket_of[t] != net.socket_of[home] and net.links:
                     link = net.links.index((net.socket_of[home], net.socket_of[t]))
-                portions.append((gi, t, link, w))
+                portions.append((gi, t, link, w, None, True, 1.0))
     return portions
 
 
 def _fill(net, groups, portions, caps):
     """One global water-fill over every interface with per-group per-core
-    rate caps. Returns (mem_grant, link_grant) per portion."""
+    rate caps (caps are in the group's reporting unit; a portion's
+    cap_scale converts them to its own interface's unit). Returns
+    (mem_grant, link_grant, l3_grant) per portion."""
     nd = len(net.mem_caps)
     scale = [net.mem_caps[d] / capacity_lines_per_cy(net.m) for d in range(nd)]
     mem_grant = [0.0] * len(portions)
     link_grant = [0.0] * len(portions)
+    l3_grant = [0.0] * len(portions)
     for d in range(nd):
-        idx = [i for i, p in enumerate(portions) if p[1] == d]
+        idx = [i for i, p in enumerate(portions) if p[1] == d and p[5]]
         wg = [(groups[portions[i][0]][1] * portions[i][3],
                groups[portions[i][0]][2],
                groups[portions[i][0]][3] * scale[d]) for i in idx]
@@ -606,7 +775,7 @@ def _fill(net, groups, portions, caps):
         if n_tot == 0.0:
             continue
         b_mix = sum(g[0] * g[2] for g in wg) / n_tot
-        rc = [caps[portions[i][0]] for i in idx]
+        rc = [caps[portions[i][0]] * portions[i][6] for i in idx]
         for i, bw in zip(idx, share_weighted_capped(wg, b_mix, rc)):
             mem_grant[i] = bw
     for l in range(len(net.links)):
@@ -616,29 +785,59 @@ def _fill(net, groups, portions, caps):
         wg = [(groups[portions[i][0]][1] * portions[i][3],
                groups[portions[i][0]][2],
                groups[portions[i][0]][3] * scale[portions[i][1]]) for i in idx]
-        rc = [caps[portions[i][0]] for i in idx]
+        rc = [caps[portions[i][0]] * portions[i][6] for i in idx]
         for i, bw in zip(idx, share_weighted_capped(wg, net.link_caps_gbs[l], rc)):
             link_grant[i] = bw
-    return mem_grant, link_grant
+    for s3 in range(len(net.l3_caps_gbs)):
+        idx = [i for i, p in enumerate(portions) if p[4] == s3]
+        if not idx:
+            continue
+        wg = []
+        for i in idx:
+            g = groups[portions[i][0]]
+            kind = _gkind(g)
+            wg.append((g[1] * portions[i][3], kind[1], kind[2]))
+        rc = [caps[portions[i][0]] * portions[i][6] for i in idx]
+        for i, bw in zip(idx, share_weighted_capped(wg, net.l3_caps_gbs[s3], rc)):
+            l3_grant[i] = bw
+    return mem_grant, link_grant, l3_grant
 
 
-def _group_rate(groups, portions, mem_grant, link_grant, gi):
-    """Lockstep rate of one group: min_p grant_p / (n w_p)."""
-    n = groups[gi][1]
+def _portion_grant(portions, mem_grant, link_grant, l3_grant, i):
+    p = portions[i]
+    if p[4] is not None and not p[5]:
+        return l3_grant[i]
+    if p[2] is None:
+        return mem_grant[i]
+    return min(mem_grant[i], link_grant[i])
+
+
+def _group_rate(groups, portions, mem_grant, link_grant, l3_grant, gi):
+    """Lockstep rate of one group: min_p grant_p / (n w_p) / cap_scale_p,
+    reported in the group's own unit (DRAM GB/s for memory-bound groups,
+    L3-level GB/s for L3 groups). Compute-bound groups never queue on any
+    shared interface and run at their core-bound rate f*bs."""
+    g = groups[gi]
+    kind = _gkind(g)
+    if kind is not None and kind[0] == "comp":
+        return g[2] * g[3]
+    n = g[1]
     if n == 0:
         return 0.0
     rate = math.inf
-    for i, (g, _, link, w) in enumerate(portions):
-        if g != gi:
+    for i, p in enumerate(portions):
+        if p[0] != gi:
             continue
-        grant = mem_grant[i] if link is None else min(mem_grant[i], link_grant[i])
-        rate = min(rate, grant / (n * w))
+        grant = _portion_grant(portions, mem_grant, link_grant, l3_grant, i)
+        rate = min(rate, grant / (n * p[3]) / p[6])
     return rate if math.isfinite(rate) else 0.0
 
 
 def share_remote(net, groups, max_sweeps=64, tol=1e-12):
-    """groups: (home, n, f, bs, r). Returns (per_core, portions, info).
-    Mirrors sharing::remote::share_remote: global fixed-point water-fill.
+    """groups: (home, n, f, bs, r) or (home, n, f, bs, r, kind) with kind
+    None | ("l3", f_l3, bs_l3) | ("comp",). Returns (per_core, portions,
+    info). Mirrors sharing::remote::share_remote: global fixed-point
+    water-fill over memory, link, AND shared-L3 interfaces.
 
     Pass 1 is the plain uncapped fill; if no group is gated by a slower
     portion the result is returned verbatim (iterations == 1, bit-identical
@@ -650,17 +849,20 @@ def share_remote(net, groups, max_sweeps=64, tol=1e-12):
     k = len(groups)
     portions = _expand_portions(net, groups)
     caps = [math.inf] * k
-    mem_grant, link_grant = _fill(net, groups, portions, caps)
-    rates = [_group_rate(groups, portions, mem_grant, link_grant, g) for g in range(k)]
+    mem_grant, link_grant, l3_grant = _fill(net, groups, portions, caps)
+    rates = [_group_rate(groups, portions, mem_grant, link_grant, l3_grant, g)
+             for g in range(k)]
     gated = [False] * k
-    for i, (g, _, link, w) in enumerate(portions):
+    for i, p in enumerate(portions):
+        g, w = p[0], p[3]
         n = groups[g][1]
         if n == 0:
             continue
-        grant = mem_grant[i] if link is None else min(mem_grant[i], link_grant[i])
-        if grant / (n * w) > rates[g] * (1.0 + 1e-9):
+        grant = _portion_grant(portions, mem_grant, link_grant, l3_grant, i)
+        if grant / (n * w) / p[6] > rates[g] * (1.0 + 1e-9):
             gated[g] = True
-    info = dict(iterations=1, mem_grant=mem_grant, link_grant=link_grant)
+    info = dict(iterations=1, mem_grant=mem_grant, link_grant=link_grant,
+                l3_grant=l3_grant)
     if not any(gated):
         return rates, portions, info
     iterations = 1
@@ -669,16 +871,17 @@ def share_remote(net, groups, max_sweeps=64, tol=1e-12):
         for g in range(k):
             saved = caps[g]
             caps[g] = math.inf
-            mg, lg = _fill(net, groups, portions, caps)
-            r = _group_rate(groups, portions, mg, lg, g)
+            mg, lg, tg = _fill(net, groups, portions, caps)
+            r = _group_rate(groups, portions, mg, lg, tg, g)
             caps[g] = r
             if math.isfinite(saved):
                 delta = max(delta, abs(r - saved) / max(saved, 1.0))
         iterations += 1
         if delta <= tol:
             break
-    mem_grant, link_grant = _fill(net, groups, portions, caps)
-    info = dict(iterations=iterations, mem_grant=mem_grant, link_grant=link_grant)
+    mem_grant, link_grant, l3_grant = _fill(net, groups, portions, caps)
+    info = dict(iterations=iterations, mem_grant=mem_grant, link_grant=link_grant,
+                l3_grant=l3_grant)
     return caps, portions, info
 
 
@@ -876,8 +1079,9 @@ def gated_example(verbose=True):
     model_pc, mportions, info = share_remote(net, groups)
     # Historical single pass: uncapped fill only.
     caps = [math.inf] * len(groups)
-    mg, lg = _fill(net, groups, mportions, caps)
-    old_pc = [_group_rate(groups, mportions, mg, lg, g) for g in range(len(groups))]
+    mg, lg, tg = _fill(net, groups, mportions, caps)
+    old_pc = [_group_rate(groups, mportions, mg, lg, tg, g)
+              for g in range(len(groups))]
     errs = [abs(sim_pc[4 * g] - model_pc[g]) / model_pc[g] for g in range(2)]
     old_err = abs(sim_pc[4] - old_pc[1]) / old_pc[1]
     if verbose:
@@ -896,6 +1100,114 @@ def gated_example(verbose=True):
     return sim_pc, model_pc, old_pc
 
 
+def check_l3_degenerate():
+    """Memory-bound-only traffic on a net WITH a configured L3 node is
+    bit-identical to the same net without one, at every layer (model,
+    fluid, DES) — the structural degenerate-case guarantee that lets
+    builtin machine rows carry l3_bw_gbs estimates without perturbing any
+    existing scenario."""
+    m = MACHINES["rome"]
+    m_l3 = dict(m, l3_bw=120.0)
+    dc = ecm_workload(m, "dcopy")
+    dd = ecm_workload(m, "ddot2")
+    net = net_of(m, 2, 1)
+    net_l3 = net_of(m_l3, 2, 1)
+    groups = [(0, 4, dc[2], dc[3], 0.25), (1, 3, dd[2], dd[3], 0.0)]
+    pc_a, po_a, info_a = share_remote(net, groups)
+    pc_b, po_b, info_b = share_remote(net_l3, groups)
+    assert pc_a == pc_b, "model perturbed by an unused L3 node"
+    assert info_a["iterations"] == info_b["iterations"]
+    assert info_a["mem_grant"] == info_b["mem_grant"]
+    assert [p[:4] for p in po_a] == [p[:4] for p in po_b]
+    streams = [(dc[0], dc[1], 0, 0.25)] * 4 + [(dd[0], dd[1], 1, 0.0)] * 3
+    fa, _, ua = fluid_net(net, streams)
+    fb, _, ub = fluid_net(net_l3, streams)
+    assert fa == fb, "fluid perturbed by an unused L3 node"
+    assert ua == ub[:len(ua)] and all(u == 0.0 for u in ub[len(ua):])
+    cfg = dict(warmup=20000.0, measure=100000.0)
+    da, _ = des_net(net, streams, **cfg)
+    db, _ = des_net(net_l3, streams, **cfg)
+    assert da == db, "DES perturbed by an unused L3 node"
+    print("ok: mem-only traffic with an L3 node configured is bit-identical "
+          "to no L3 node (model + fluid + DES)")
+
+
+def check_compute_zero_share():
+    """A compute-bound group caps at its core-bound rate f*bs and consumes
+    zero bandwidth share: its memory-bound peers are bitwise unchanged."""
+    m = dict(MACHINES["rome"], l3_bw=120.0)
+    net = net_of(m, 1, 1)
+    _, _, f, bs = ecm_workload(m, "dcopy")
+    alone, _, _ = share_remote(net, [(0, 4, f, bs, 0.0)])
+    both, portions, info = share_remote(
+        net, [(0, 4, f, bs, 0.0), (0, 4, 0.05, bs, 0.0, ("comp",))])
+    assert both[0] == alone[0], "compute peer perturbed the memory-bound group"
+    assert both[1] == 0.05 * bs, "compute group must run at f*bs"
+    assert all(p[0] == 0 for p in portions), "compute group expanded portions"
+    assert info["iterations"] == 1
+    print("ok: compute-bound groups cap at f*bs and consume zero "
+          "bandwidth share (peers bitwise unchanged)")
+
+
+def check_pure_l3():
+    """A fully L3-resident group (no DRAM traffic at all) water-fills the
+    shared-L3 node exactly like a memory group fills a controller."""
+    m = dict(MACHINES["rome"], l3_bw=120.0)
+    net = net_of(m, 1, 1)
+    f3, bs3 = 0.625, m["l2l3"] * m["freq"]
+    pc, portions, info = share_remote(net, [(0, 8, 0.0, 0.0, 0.0, ("l3", f3, bs3))])
+    want = min(f3 * bs3, 120.0 / 8.0)  # demand 8*47 GB/s >> 120 -> fair split
+    assert abs(pc[0] - want) < 1e-12, f"pure-L3 rate {pc[0]!r} != {want!r}"
+    assert len(portions) == 1 and portions[0][4] == 0 and not portions[0][5]
+    assert info["iterations"] == 1
+    assert info["l3_grant"][0] == 120.0
+    print(f"ok: pure-L3 group water-fills the L3 node ({pc[0]:.3f} GB/s/core)")
+
+
+def l3_mixed_example(verbose=True):
+    """THE LC-at-L3 conformance case: a jacobi-like stencil whose layer
+    condition holds at L3 (5 L2-miss lines per update, 3 continuing to
+    DRAM) shares one Rome domain with streaming dcopy, under a 120 GB/s
+    shared-L3 node. The stencil contends on BOTH the L3 node (all its
+    L2-miss lines) and the memory controller (its DRAM continuation, in
+    tandem); dcopy contends on the memory controller only. Both
+    interfaces saturate, the fixed point engages, and the fluid
+    simulation stays within the paper's 8% ceiling of the model."""
+    m = dict(MACHINES["rome"], l3_bw=120.0)
+    net = net_of(m, 1, 1)
+    d_l3, c, f, bs, f3, bs3, frac = ecm_workload_stencil(m)
+    dd, dc_, fd, bsd = ecm_workload(m, "dcopy")
+    streams = [(d_l3, c, 0, 0.0, frac)] * 4 + [(dd, dc_, 0, 0.0)] * 4
+    pp, portions, util = fluid_net(net, streams)
+    sim_pc = lockstep_per_stream(net, streams, pp, portions)
+    groups = [(0, 4, f, bs, 0.0, ("l3", f3, bs3)), (0, 4, fd, bsd, 0.0)]
+    model_pc, mportions, info = share_remote(net, groups)
+    des_pp, des_portions = des_net(net, streams, warmup=20000.0, measure=100000.0)
+    des_pc = lockstep_per_stream(net, streams, des_pp, des_portions)
+    errs = [abs(sim_pc[0] - model_pc[0]) / model_pc[0],
+            abs(sim_pc[4] - model_pc[1]) / model_pc[1]]
+    des_errs = [abs(des_pc[0] - model_pc[0]) / model_pc[0],
+                abs(des_pc[4] - model_pc[1]) / model_pc[1]]
+    if verbose:
+        print("\nLC-at-L3 mixed example: stencil:4@l3 + dcopy:4 on one Rome "
+              "domain, 120 GB/s shared L3")
+        print(f"  stencil chars: f = {f:.4f}, b_s = {bs:.2f} | "
+              f"f_l3 = {f3:.4f}, b_l3 = {bs3:.2f} GB/s, l3_frac = {frac:.2f}")
+        print(f"  stencil (L3-level): model {model_pc[0]:.3f}, "
+              f"fluid {sim_pc[0]:.3f}, DES {des_pc[0]:.3f} GB/s/core "
+              f"(fluid err {errs[0] * 100:.2f}%)")
+        print(f"  dcopy  (DRAM):      model {model_pc[1]:.3f}, "
+              f"fluid {sim_pc[4]:.3f}, DES {des_pc[4]:.3f} GB/s/core "
+              f"(fluid err {errs[1] * 100:.2f}%)")
+        print(f"  fixed point: {info['iterations']} iterations; "
+              f"util mem {util[0]:.3f}, l3 {util[1]:.3f}")
+    assert max(errs) < 0.08, f"LC-at-L3 fluid vs model error {max(errs)}"
+    assert max(des_errs) < 0.12, f"LC-at-L3 DES vs model error {max(des_errs)}"
+    print("ok: LC-at-L3 mixed scenario fluid within 8% of the fixed point "
+          f"(worst {max(errs) * 100:.2f}%; DES worst {max(des_errs) * 100:.2f}%)")
+    return sim_pc, model_pc, info
+
+
 if __name__ == "__main__":
     check_fluid_degenerate()
     check_fluid_r0_multidomain()
@@ -906,4 +1218,8 @@ if __name__ == "__main__":
     worked_example()
     gated_example()
     mixed_example()
+    check_l3_degenerate()
+    check_compute_zero_share()
+    check_pure_l3()
+    l3_mixed_example()
     print("\nall mirror checks passed")

@@ -26,10 +26,17 @@ Why the dirty set is what it is:
   or changes weight on it (a cross-socket home move redirects portions
   to the other direction; an intra-socket move keeps link ids and
   weights).
+* Cache-topology extension: an L3-kind group's portions live only on its
+  home socket's L3 node (weight 1.0) plus, when it still streams DRAM
+  traffic, a tandem mem portion on its home domain. A home move
+  therefore dirties exactly the two sockets' L3 nodes and -- iff the
+  tandem exists -- the two home mem interfaces. Compute-bound groups own
+  no portions and dirty nothing.
 * Member ORDER per interface is stable under clean-ness: portions are
-  group-major with targets ascending, and each group has at most one
-  portion per target, so a clean interface sees the same members in the
-  same order -- float summation order (b_mix) cannot drift.
+  group-major with targets ascending, each group has at most one
+  mem-stage portion per target and at most one L3 portion, so a clean
+  interface sees the same members in the same order -- float summation
+  order (b_mix) cannot drift.
 
 Run:  python3 python/optimizer_mirror.py
 """
@@ -41,7 +48,10 @@ from netfluid_mirror import (
     MACHINES,
     _expand_portions,
     _fill,
+    _gkind,
     _group_rate,
+    _portion_grant,
+    capacity_lines_per_cy,
     net_of,
     share_remote,
     share_weighted_capped,
@@ -49,8 +59,8 @@ from netfluid_mirror import (
 
 
 def _routes(net, home, r):
-    """(target, link_or_None, weight) triples of one group -- the shared
-    portion-routing rule (portion_routes in sharing/remote.rs)."""
+    """(target, link_or_None, weight) triples of one memory-bound group --
+    the shared portion-routing rule (portion_routes in sharing/remote.rs)."""
     nd = len(net.mem_caps)
     out = []
     if 1.0 - r > 0.0:
@@ -68,31 +78,39 @@ def _routes(net, home, r):
 
 
 class DeltaEval:
-    """Incremental pass-1 evaluator over (home, remote_frac) moves."""
+    """Incremental pass-1 evaluator over (home, remote_frac) moves.
+
+    Portions are the 7-tuples of _expand_portions:
+    (group, target, link_or_None, weight, l3_socket_or_None,
+    mem_stage_bool, cap_scale)."""
 
     def __init__(self, net, groups):
         self.net = net
         self.groups = list(groups)
         self.portions = _expand_portions(net, groups)
         caps = [math.inf] * len(groups)
-        self.mem_grant, self.link_grant = _fill(net, groups, self.portions, caps)
+        self.mem_grant, self.link_grant, self.l3_grant = _fill(
+            net, groups, self.portions, caps)
         self.rates, self.gated = self._finish(groups, self.portions,
-                                              self.mem_grant, self.link_grant)
+                                              self.mem_grant, self.link_grant,
+                                              self.l3_grant)
         # Effort counters (the Rust port surfaces these through SimStats).
-        self.iface_evals = len(net.mem_caps) + len(net.links)
+        self.iface_evals = (len(net.mem_caps) + len(net.links)
+                            + len(net.l3_caps_gbs))
         self.iface_reused = 0
         self.full_solves = 0
 
-    def _finish(self, groups, portions, mem_grant, link_grant):
-        rates = [_group_rate(groups, portions, mem_grant, link_grant, g)
-                 for g in range(len(groups))]
+    def _finish(self, groups, portions, mem_grant, link_grant, l3_grant):
+        rates = [_group_rate(groups, portions, mem_grant, link_grant,
+                             l3_grant, g) for g in range(len(groups))]
         gated = False
-        for i, (g, _, link, w) in enumerate(portions):
+        for i, p in enumerate(portions):
+            g, w = p[0], p[3]
             n = groups[g][1]
             if n == 0:
                 continue
-            grant = mem_grant[i] if link is None else min(mem_grant[i], link_grant[i])
-            if grant / (n * w) > rates[g] * (1.0 + 1e-9):
+            grant = _portion_grant(portions, mem_grant, link_grant, l3_grant, i)
+            if grant / (n * w) / p[6] > rates[g] * (1.0 + 1e-9):
                 gated = True
         if gated:
             self_rates, _, _ = share_remote(self.net, groups)
@@ -100,13 +118,26 @@ class DeltaEval:
         return rates, False
 
     def dirty_set(self, changes):
-        """(dirty mem domains, dirty links) of a move; changes maps
-        group index -> new (home, n, f, bs, r)."""
-        dirty_mem, dirty_link = set(), set()
+        """(dirty mem domains, dirty links, dirty L3 sockets) of a move;
+        changes maps group index -> new group tuple (kind never changes)."""
+        net = self.net
+        dirty_mem, dirty_link, dirty_l3 = set(), set(), set()
         for gi, new_g in changes.items():
-            old = {t: (l, w) for t, l, w in
-                   _routes(self.net, self.groups[gi][0], self.groups[gi][4])}
-            new = {t: (l, w) for t, l, w in _routes(self.net, new_g[0], new_g[4])}
+            old_g = self.groups[gi]
+            assert _gkind(old_g) == _gkind(new_g), "moves never change kind"
+            kind = _gkind(old_g)
+            if kind is not None and kind[0] == "comp":
+                continue
+            if kind is not None and kind[0] == "l3":
+                if new_g[0] != old_g[0]:
+                    dirty_l3.add(net.socket_of[old_g[0]])
+                    dirty_l3.add(net.socket_of[new_g[0]])
+                    if old_g[2] * old_g[3] > 0.0:
+                        dirty_mem.add(old_g[0])
+                        dirty_mem.add(new_g[0])
+                continue
+            old = {t: (l, w) for t, l, w in _routes(net, old_g[0], old_g[4])}
+            new = {t: (l, w) for t, l, w in _routes(net, new_g[0], new_g[4])}
             for t in set(old) | set(new):
                 lo, wo = old.get(t, (None, 0.0))
                 ln, wn = new.get(t, (None, 0.0))
@@ -117,7 +148,7 @@ class DeltaEval:
                         dirty_link.add(lo)
                     if ln is not None:
                         dirty_link.add(ln)
-        return dirty_mem, dirty_link
+        return dirty_mem, dirty_link, dirty_l3
 
     def eval_move(self, changes):
         """Score a move without committing: returns (rates, state) where
@@ -127,39 +158,44 @@ class DeltaEval:
         for gi, g in changes.items():
             new_groups[gi] = g
         new_portions = _expand_portions(net, new_groups)
-        dirty_mem, dirty_link = self.dirty_set(changes)
+        dirty_mem, dirty_link, dirty_l3 = self.dirty_set(changes)
 
-        # Old grants keyed by (group, target): each group has exactly one
-        # portion per target, so the key is unique.
-        old_at = {(p[0], p[1]): i for i, p in enumerate(self.portions)}
+        # Old grants keyed by (group, target), split by stage: a group has
+        # at most one mem-stage portion per target, and at most one L3
+        # portion (an L3 group's two portions share the same target, so a
+        # single map would collide -- mirror of delta.rs old_at_mem/old_at_l3).
+        old_at_mem = {(p[0], p[1]): i for i, p in enumerate(self.portions)
+                      if p[5]}
+        old_at_l3 = {(p[0], p[1]): i for i, p in enumerate(self.portions)
+                     if p[4] is not None and not p[5]}
         nd = len(net.mem_caps)
-        # scale as _fill computes it (mem_caps[d] / capacity):
-        from netfluid_mirror import capacity_lines_per_cy
         cap0 = capacity_lines_per_cy(net.m)
         scale = [net.mem_caps[d] / cap0 for d in range(nd)]
 
         mem_grant = [0.0] * len(new_portions)
         link_grant = [0.0] * len(new_portions)
+        l3_grant = [0.0] * len(new_portions)
         caps = [math.inf] * len(new_groups)
 
         for d in range(nd):
-            idx = [i for i, p in enumerate(new_portions) if p[1] == d]
+            idx = [i for i, p in enumerate(new_portions)
+                   if p[1] == d and p[5]]
             if d in dirty_mem:
                 wg = [(new_groups[new_portions[i][0]][1] * new_portions[i][3],
                        new_groups[new_portions[i][0]][2],
                        new_groups[new_portions[i][0]][3] * scale[d]) for i in idx]
                 n_tot = sum(g[0] for g in wg)
+                self.iface_evals += 1
                 if n_tot == 0.0:
                     continue
                 b_mix = sum(g[0] * g[2] for g in wg) / n_tot
-                rc = [caps[new_portions[i][0]] for i in idx]
+                rc = [caps[new_portions[i][0]] * new_portions[i][6] for i in idx]
                 for i, bw in zip(idx, share_weighted_capped(wg, b_mix, rc)):
                     mem_grant[i] = bw
-                self.iface_evals += 1
             else:
                 for i in idx:
-                    mem_grant[i] = self.mem_grant[old_at[(new_portions[i][0],
-                                                          new_portions[i][1])]]
+                    mem_grant[i] = self.mem_grant[old_at_mem[(new_portions[i][0],
+                                                              new_portions[i][1])]]
                 self.iface_reused += 1
         for l in range(len(net.links)):
             idx = [i for i, p in enumerate(new_portions) if p[2] == l]
@@ -171,37 +207,60 @@ class DeltaEval:
                        new_groups[new_portions[i][0]][2],
                        new_groups[new_portions[i][0]][3] * scale[new_portions[i][1]])
                       for i in idx]
-                rc = [caps[new_portions[i][0]] for i in idx]
+                rc = [caps[new_portions[i][0]] * new_portions[i][6] for i in idx]
                 for i, bw in zip(idx, share_weighted_capped(wg, net.link_caps_gbs[l], rc)):
                     link_grant[i] = bw
                 self.iface_evals += 1
             else:
                 for i in idx:
-                    link_grant[i] = self.link_grant[old_at[(new_portions[i][0],
-                                                            new_portions[i][1])]]
+                    link_grant[i] = self.link_grant[old_at_mem[(new_portions[i][0],
+                                                                new_portions[i][1])]]
+                self.iface_reused += 1
+        for s3 in range(len(net.l3_caps_gbs)):
+            idx = [i for i, p in enumerate(new_portions)
+                   if p[4] == s3 and not p[5]]
+            if s3 in dirty_l3:
+                self.iface_evals += 1
+                if not idx:
+                    continue
+                wg = []
+                for i in idx:
+                    g = new_groups[new_portions[i][0]]
+                    kind = _gkind(g)
+                    wg.append((g[1] * new_portions[i][3], kind[1], kind[2]))
+                rc = [caps[new_portions[i][0]] * new_portions[i][6] for i in idx]
+                for i, bw in zip(idx, share_weighted_capped(wg, net.l3_caps_gbs[s3], rc)):
+                    l3_grant[i] = bw
+            else:
+                for i in idx:
+                    l3_grant[i] = self.l3_grant[old_at_l3[(new_portions[i][0],
+                                                           new_portions[i][1])]]
                 self.iface_reused += 1
 
-        rates = [_group_rate(new_groups, new_portions, mem_grant, link_grant, g)
-                 for g in range(len(new_groups))]
+        rates = [_group_rate(new_groups, new_portions, mem_grant, link_grant,
+                             l3_grant, g) for g in range(len(new_groups))]
         gated = False
-        for i, (g, _, link, w) in enumerate(new_portions):
+        for i, p in enumerate(new_portions):
+            g, w = p[0], p[3]
             n = new_groups[g][1]
             if n == 0:
                 continue
-            grant = mem_grant[i] if link is None else min(mem_grant[i], link_grant[i])
-            if grant / (n * w) > rates[g] * (1.0 + 1e-9):
+            grant = _portion_grant(new_portions, mem_grant, link_grant,
+                                   l3_grant, i)
+            if grant / (n * w) / p[6] > rates[g] * (1.0 + 1e-9):
                 gated = True
         if gated:
             rates, _, _ = share_remote(net, new_groups)
             self.full_solves += 1
-        return rates, (new_groups, new_portions, mem_grant, link_grant, rates, gated)
+        return rates, (new_groups, new_portions, mem_grant, link_grant,
+                       l3_grant, rates, gated)
 
     def commit(self, state):
         (self.groups, self.portions, self.mem_grant, self.link_grant,
-         self.rates, self.gated) = state
+         self.l3_grant, self.rates, self.gated) = state
 
 
-def random_shape(rng):
+def random_shape(rng, l3_bw=None):
     m = dict(MACHINES["rome"])
     kind = rng.choice(["2x1", "2x2", "2x4", "4x1", "1x4"])
     sockets, per = (int(kind.split("x")[0]), int(kind.split("x")[1]))
@@ -209,6 +268,8 @@ def random_shape(rng):
         m["link_bw"] = rng.choice([2.0, 8.0, 20.0])
     if rng.random() < 0.3:
         m["link_bw_rev"] = rng.choice([2.0, 8.0, 20.0])
+    if l3_bw is not None:
+        m["l3_bw"] = l3_bw
     scale = None
     if rng.random() < 0.3:
         scale = [rng.choice([0.5, 1.0, 1.25]) for _ in range(sockets * per)]
@@ -226,6 +287,32 @@ def random_groups(rng, nd, k):
     return out
 
 
+def random_kinded_groups(rng, nd, k):
+    """Groups drawing from all three kinds, mirroring the distribution of
+    the delta.rs `random_kinded_groups` test helper: ~1/3 L3 (half with no
+    DRAM tandem), ~1/6 compute-bound, the rest memory-bound."""
+    levels = [0.0, 0.1, 0.25, 0.5, 1.0]
+    out = []
+    for _ in range(k):
+        home = rng.randrange(nd)
+        n = rng.choice([1, 2, 4, 8])
+        roll = rng.randrange(6)
+        if roll in (0, 1):
+            f3 = 0.2 + 0.6 * rng.random()
+            bs3 = 40.0 + 40.0 * rng.random()
+            if rng.random() < 0.5:
+                f, bs = 0.0, 0.0
+            else:
+                f, bs = rng.choice([0.3, 0.55]), rng.choice([24.0, 32.0])
+            out.append((home, n, f, bs, 0.0, ("l3", f3, bs3)))
+        elif roll == 2:
+            out.append((home, n, 0.05, rng.choice([24.0, 32.0]), 0.0, ("comp",)))
+        else:
+            out.append((home, n, rng.choice([0.08, 0.3, 0.55, 0.84]),
+                        rng.choice([24.0, 32.0, 60.0]), rng.choice(levels)))
+    return out
+
+
 def random_move(rng, groups, nd):
     levels = [0.0, 0.1, 0.25, 0.5, 1.0]
     kind = rng.choice(["migrate", "retune", "swap"])
@@ -236,7 +323,18 @@ def random_move(rng, groups, nd):
     gi = rng.randrange(len(groups))
     g = groups[gi]
     if kind == "retune":
-        return {gi: g[:4] + (rng.choice(levels),)}
+        return {gi: g[:4] + (rng.choice(levels),) + g[5:]}
+    return {gi: (rng.randrange(nd),) + g[1:]}
+
+
+def random_kinded_move(rng, groups, nd):
+    """Only memory-bound groups may retune their remote fraction; L3 and
+    compute-bound groups only move home (L3 keeps r == 0)."""
+    gi = rng.randrange(len(groups))
+    g = groups[gi]
+    if _gkind(g) is None and rng.random() < 0.4:
+        levels = [0.0, 0.1, 0.25, 0.5, 1.0]
+        return {gi: g[:4] + (rng.choice(levels),) + g[5:]}
     return {gi: (rng.randrange(nd),) + g[1:]}
 
 
@@ -261,7 +359,7 @@ def check_delta_vs_full(cases=300, moves_per_case=8, seed=0xD17A):
             assert rates == ref_rates, (
                 f"case {case} move {mv}: delta {rates} != full {ref_rates}\n"
                 f"  groups {new_groups}")
-            if not state[5]:  # ungated: grants must match pass 1 exactly
+            if not state[6]:  # ungated: grants must match pass 1 exactly
                 assert state[2] == ref_info["mem_grant"], f"case {case} move {mv}: mem"
                 assert state[3] == ref_info["link_grant"], f"case {case} move {mv}: link"
             else:
@@ -278,11 +376,50 @@ def check_delta_vs_full(cases=300, moves_per_case=8, seed=0xD17A):
           f"{evald_total} evaluated)")
 
 
+def check_delta_vs_full_kinded(cases=150, moves_per_case=8, seed=0xCAC4E):
+    """The cache-topology extension of the invariant: random walks over
+    compositions carrying L3 and compute-bound groups stay bit-identical
+    to the full share_remote re-solve (mirrors the delta.rs test
+    delta_matches_full_solve_with_l3_and_compute_groups)."""
+    rng = random.Random(seed)
+    l3_hits = reused_total = evald_total = 0
+    for case in range(cases):
+        net = random_shape(rng, l3_bw=120.0)
+        nd = len(net.mem_caps)
+        groups = random_kinded_groups(rng, nd, rng.choice([3, 4, 6, 8]))
+        delta = DeltaEval(net, groups)
+        ref_rates, _, _ = share_remote(net, groups)
+        assert delta.rates == ref_rates, f"case {case}: init mismatch"
+        for mv in range(moves_per_case):
+            changes = random_kinded_move(rng, delta.groups, nd)
+            rates, state = delta.eval_move(changes)
+            new_groups = list(delta.groups)
+            for gi, g in changes.items():
+                new_groups[gi] = g
+            ref_rates, _, ref_info = share_remote(net, new_groups)
+            assert rates == ref_rates, (
+                f"case {case} move {mv}: delta {rates} != full {ref_rates}\n"
+                f"  groups {new_groups}")
+            if not state[6]:
+                assert state[2] == ref_info["mem_grant"], f"case {case} move {mv}: mem"
+                assert state[4] == ref_info["l3_grant"], f"case {case} move {mv}: l3"
+            delta.commit(state)
+            if any(_gkind(g) is not None and _gkind(g)[0] == "l3"
+                   for g in (new_groups[gi] for gi in changes)):
+                l3_hits += 1
+        reused_total += delta.iface_reused
+        evald_total += delta.iface_evals
+    assert l3_hits > 0, "the sweep never moved an L3 group"
+    assert reused_total > 0, "the kinded sweep never reused an interface"
+    print(f"[OK] delta == full with L3/compute groups on {cases} cases x "
+          f"{moves_per_case} moves ({l3_hits} L3-group moves, "
+          f"{reused_total} ifaces reused, {evald_total} evaluated)")
+
+
 def check_clean_interface_inputs(cases=200, seed=0xFACE):
     """Independent check of the dirty-set rule itself: on every move, the
     (n*w, f, bs*scale, order) inputs of every CLEAN interface are
     bit-identical before and after."""
-    from netfluid_mirror import capacity_lines_per_cy
     rng = random.Random(seed)
     for case in range(cases):
         net = random_shape(rng)
@@ -295,13 +432,12 @@ def check_clean_interface_inputs(cases=200, seed=0xFACE):
         new_groups = list(groups)
         for gi, g in changes.items():
             new_groups[gi] = g
-        dirty_mem, dirty_link = delta.dirty_set(changes)
+        dirty_mem, dirty_link, _ = delta.dirty_set(changes)
         old_p = _expand_portions(net, groups)
         new_p = _expand_portions(net, new_groups)
 
         def iface_inputs(portions, gs, d=None, l=None):
             sel = [p for p in portions if (p[1] == d if d is not None else p[2] == l)]
-            t = d if d is not None else None
             return [(p[0], p[1], gs[p[0]][1] * p[3], gs[p[0]][2],
                      gs[p[0]][3] * scale[p[1]]) for p in sel]
 
@@ -321,4 +457,5 @@ def check_clean_interface_inputs(cases=200, seed=0xFACE):
 if __name__ == "__main__":
     check_clean_interface_inputs()
     check_delta_vs_full()
+    check_delta_vs_full_kinded()
     print("optimizer mirror: all checks passed")

@@ -48,6 +48,7 @@ pub fn machine_to_toml(m: &Machine) -> String {
          link_bw_gbs = {}\n\
          link_bw_rev_gbs = {}\n\
          link_latency_us = {}\n\
+         l3_bw_gbs = {}\n\
          \n[queue]\n\
          base_latency_cy = {}\n\
          depth_floor = {}\n\
@@ -75,6 +76,7 @@ pub fn machine_to_toml(m: &Machine) -> String {
         m.link_bw_gbs,
         m.link_bw_rev_gbs,
         m.link_latency_us,
+        m.l3_bw_gbs,
         m.queue.base_latency_cy,
         m.queue.depth_floor,
         m.queue.depth_beta,
@@ -180,6 +182,10 @@ pub fn load_machine_toml(path: &Path) -> Result<Machine> {
         link_bw_gbs,
         link_bw_rev_gbs,
         link_latency_us: get_f_or("", "link_latency_us", 0.0)?,
+        // Optional with default 0 (= no shared-L3 interface modeled):
+        // config files predating the cache-topology extension describe a
+        // machine on which every group contends on the memory controller.
+        l3_bw_gbs: get_f_or("", "l3_bw_gbs", 0.0)?,
         queue: QueueParams {
             base_latency_cy: get_f("queue", "base_latency_cy")?,
             depth_floor: get_f("queue", "depth_floor")?,
@@ -214,6 +220,7 @@ mod tests {
             assert!((back.link_bw_gbs - m.link_bw_gbs).abs() < 1e-12);
             assert!((back.link_bw_rev_gbs - m.link_bw_rev_gbs).abs() < 1e-12);
             assert!((back.link_latency_us - m.link_latency_us).abs() < 1e-12);
+            assert!((back.l3_bw_gbs - m.l3_bw_gbs).abs() < 1e-12);
         }
     }
 
@@ -280,6 +287,24 @@ mod tests {
         let m = load_machine_toml(&path).unwrap();
         assert!(m.link_bw_gbs > 0.0);
         assert_eq!(m.link_bw_rev_gbs.to_bits(), m.link_bw_gbs.to_bits());
+    }
+
+    #[test]
+    fn missing_l3_bw_defaults_to_unmodeled() {
+        // Pre-cache-topology config files lack the key; they describe a
+        // machine with no shared-L3 interface (bit-identical old behavior).
+        let dir = std::env::temp_dir().join("membw-toml-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("no-l3.toml");
+        let text = machine_to_toml(&builtin_machines()[0]);
+        let legacy: String = text
+            .lines()
+            .filter(|l| !l.starts_with("l3_bw_gbs"))
+            .collect::<Vec<_>>()
+            .join("\n");
+        std::fs::write(&path, legacy).unwrap();
+        let m = load_machine_toml(&path).unwrap();
+        assert_eq!(m.l3_bw_gbs, 0.0);
     }
 
     #[test]

@@ -183,6 +183,16 @@ pub struct Machine {
     /// `S`-socket topology pays an extra `(S-1) * link_latency_us` of
     /// barrier latency. `0` disables the term.
     pub link_latency_us: f64,
+    /// Aggregate shared-L3 bandwidth per SOCKET, GB/s. Not a Table I
+    /// quantity — the paper assumes every kernel is memory-bound; this
+    /// feeds the cache-topology extension, where L3-resident groups
+    /// contend on a per-socket shared-L3 interface instead of the memory
+    /// controller. Built-in values are spec-sheet estimates (aggregate
+    /// L2↔L3 transfer capability across the socket's cores / CCXs). `0`
+    /// disables the L3 interface: the cache-topology layers are then
+    /// bit-identical to the memory-only model, and `@l3` mix overrides
+    /// are rejected.
+    pub l3_bw_gbs: f64,
     /// Queueing calibration of the memory interface.
     pub queue: QueueParams,
 }
@@ -244,6 +254,7 @@ impl Machine {
             self.queue.depth_beta.to_bits(),
             self.queue.latency_penalty.to_bits(),
             self.queue.write_penalty.to_bits(),
+            self.l3_bw_gbs.to_bits(),
         ] {
             calib = mix_bits(calib, v);
         }
@@ -337,6 +348,8 @@ pub fn builtin_machines() -> Vec<Machine> {
             link_bw_gbs: 38.4,
             link_bw_rev_gbs: 38.4,
             link_latency_us: 0.6,
+            // Estimated aggregate shared-L3 bandwidth per socket.
+            l3_bw_gbs: 320.0,
             queue: QueueParams {
                 base_latency_cy: 200.0,
                 depth_floor: 1.5,
@@ -369,6 +382,8 @@ pub fn builtin_machines() -> Vec<Machine> {
             link_bw_gbs: 38.4,
             link_bw_rev_gbs: 38.4,
             link_latency_us: 0.6,
+            // Estimated aggregate shared-L3 bandwidth per socket.
+            l3_bw_gbs: 560.0,
             queue: QueueParams {
                 base_latency_cy: 230.0,
                 depth_floor: 1.5,
@@ -402,6 +417,8 @@ pub fn builtin_machines() -> Vec<Machine> {
             link_bw_gbs: 62.4,
             link_bw_rev_gbs: 62.4,
             link_latency_us: 0.5,
+            // Estimated aggregate shared-L3 bandwidth per socket.
+            l3_bw_gbs: 700.0,
             queue: QueueParams {
                 base_latency_cy: 220.0,
                 depth_floor: 1.5,
@@ -435,6 +452,8 @@ pub fn builtin_machines() -> Vec<Machine> {
             link_bw_gbs: 64.0,
             link_bw_rev_gbs: 64.0,
             link_latency_us: 0.7,
+            // Estimated aggregate shared-L3 bandwidth per socket.
+            l3_bw_gbs: 1400.0,
             queue: QueueParams {
                 base_latency_cy: 260.0,
                 depth_floor: 1.5,
@@ -582,6 +601,10 @@ mod tests {
         let mut clocked = m.clone();
         clocked.freq_ghz *= 1.1;
         assert_ne!(m.fingerprint(), clocked.fingerprint());
+        // The shared-L3 capacity feeds classification and the L3 water-fill.
+        let mut recached = m.clone();
+        recached.l3_bw_gbs *= 0.5;
+        assert_ne!(m.fingerprint(), recached.fingerprint());
     }
 
     #[test]

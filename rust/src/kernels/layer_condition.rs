@@ -105,6 +105,45 @@ mod tests {
     }
 
     #[test]
+    fn lc_boundary_is_inclusive_at_exactly_the_safety_fraction() {
+        // Three rows landing EXACTLY on LC_SAFETY · cache stay fulfilled
+        // (the comparison is `<=`): 3 · inner · 8 == 0.5 · l2 here. Cache
+        // sizes are picked divisible by 3 · 8 / LC_SAFETY so the boundary
+        // grid is exactly representable.
+        let l2 = 240.0 * KIB;
+        let l3 = 2400.0 * KIB;
+        let inner = (LC_SAFETY * l2) as usize / (3 * 8);
+        assert_eq!(3.0 * (inner * 8) as f64, LC_SAFETY * l2, "exact boundary grid");
+        let at = analyze_lc(inner, 8, l2, l3);
+        assert_eq!(at.condition, LayerCondition::FulfilledAtL2);
+        assert_eq!(at.three_rows_bytes, LC_SAFETY * l2);
+        // One element more tips over to the next level; same at the L3
+        // boundary.
+        let over = analyze_lc(inner + 1, 8, l2, l3);
+        assert_eq!(over.condition, LayerCondition::FulfilledAtL3);
+        let inner3 = (LC_SAFETY * l3) as usize / (3 * 8);
+        assert_eq!(3.0 * (inner3 * 8) as f64, LC_SAFETY * l3, "exact boundary grid");
+        assert_eq!(analyze_lc(inner3, 8, l2, l3).condition, LayerCondition::FulfilledAtL3);
+        assert_eq!(analyze_lc(inner3 + 1, 8, l2, l3).condition, LayerCondition::Violated);
+    }
+
+    #[test]
+    fn violated_lc_streams_match_the_l3_class_at_every_level() {
+        // LC violated at L3: the source rows re-stream from memory at the
+        // L2↔L3 boundary exactly as in the LC_L3 class (3 + extra reads);
+        // per-level stream counts pin reads/writes/rfo individually, not
+        // just the totals.
+        for extra in [0usize, 1] {
+            let (mem, l3, l2) = jacobi_traffic(LayerCondition::Violated, extra);
+            let (_, l3_lc3, l2_lc3) = jacobi_traffic(LayerCondition::FulfilledAtL3, extra);
+            assert_eq!((l3.reads, l3.writes, l3.rfo), (3 + extra, 1, 1));
+            assert_eq!((l3.reads, l3.writes, l3.rfo), (l3_lc3.reads, l3_lc3.writes, l3_lc3.rfo));
+            assert_eq!((l2.reads, l2.writes, l2.rfo), (l2_lc3.reads, l2_lc3.writes, l2_lc3.rfo));
+            assert_eq!((mem.reads, mem.writes, mem.rfo), (1 + extra, 1, 1));
+        }
+    }
+
+    #[test]
     fn jacobi_v2_traffic_matches_table2() {
         // v2 reads an extra RHS grid: LC_L2 4 (2+1+1), LC_L3 6 (4+1+1).
         let (mem, l3, _) = jacobi_traffic(LayerCondition::FulfilledAtL2, 1);

@@ -28,7 +28,7 @@
 //!                # placement search: `@dN` pins and `%r` fractions in the
 //!                # mix are hard constraints; everything else is searched
 //! repro bench [--mode smoke|full] [--out results/]
-//!             # BENCH_{cosim,topology,multi_iface,cluster,optimizer}.json
+//!             # BENCH_{cosim,topology,multi_iface,cache,cluster,optimizer}.json
 //! repro dump-configs <dir>              # write machine TOMLs
 //! repro selftest                        # PJRT artifact vs rust engines
 //! ```
@@ -165,7 +165,8 @@ run `repro experiment all --out results/` to regenerate every table and figure;\
 `repro optimize --machine rome --topology 2x4 --mix \"dcopy:8+ddot2:8+stream:8+daxpy:8\"`\n\
   searches home domains and %r fractions for the best placement (docs/OPTIMIZER.md);\n\
 `repro bench` runs the fixed-seed benchmarks and writes BENCH_cosim.json,\n\
-  BENCH_topology.json, BENCH_multi_iface.json, BENCH_cluster.json\n\
+  BENCH_topology.json, BENCH_multi_iface.json, BENCH_cache.json\n\
+  (shared-L3 cache-topology mixes), BENCH_cluster.json\n\
   (the 64-node cluster co-sim: incremental re-rating vs full recompute)\n\
   and BENCH_optimizer.json (placement-search evaluation throughput);\n\
 see docs/CLI.md for every flag with sample output.";
@@ -573,8 +574,10 @@ fn cmd_optimize(f: &HashMap<String, String>) -> Result<()> {
 /// baseline, and the 64-node cluster co-sim (incremental re-rating vs the
 /// full-recompute reference), plus the placement-optimizer search
 /// (delta + parallel + memo vs a sequential full-re-solve baseline on an
-/// 8-group dual-socket Rome mix). Emits `BENCH_cosim.json`,
-/// `BENCH_topology.json`, `BENCH_multi_iface.json`, `BENCH_cluster.json`,
+/// 8-group dual-socket Rome mix), and the cache-topology pipeline
+/// (explicit `@l3` groups contending at a shared-L3 node next to DRAM
+/// streams). Emits `BENCH_cosim.json`, `BENCH_topology.json`,
+/// `BENCH_multi_iface.json`, `BENCH_cache.json`, `BENCH_cluster.json`,
 /// and `BENCH_optimizer.json` under `--out` (CI uploads all as artifacts,
 /// checks their existence, and gates events/s regressions against the
 /// committed baselines). Every payload carries the cache counters of the
@@ -893,6 +896,84 @@ fn cmd_bench(f: &HashMap<String, String>) -> Result<()> {
     let multi_path = out_dir.join("BENCH_multi_iface.json");
     std::fs::write(&multi_path, &multi_json)?;
     println!("wrote {}", multi_path.display());
+
+    // --- cache-topology substrate: explicitly cache-bound (`@l3`) groups
+    // contending at a shared-L3 interface alongside DRAM-bound streams, on
+    // a single Rome domain with the paper's per-domain L3 estimate
+    // (120 GB/s). Each mix runs through the topology pipeline (L3 node +
+    // memory interface fixed point); emitted as BENCH_cache.json (CI
+    // checks its existence and gates cases/s regressions) ---
+    let mut rome_l3 = machine(MachineId::Rome);
+    rome_l3.l3_bw_gbs = 120.0;
+    let cache_topo = Topology::single(&rome_l3);
+    let cache_specs = [
+        "jacobil3-v1:4@l3+dcopy:4",
+        "jacobil3-v1:8@l3",
+        "jacobil3-v1:4@l3+ddot2:4",
+    ];
+    let cache_mixes: Vec<Mix> =
+        cache_specs.iter().copied().map(Mix::parse).collect::<Result<Vec<_>>>()?;
+    let cache_warm =
+        run_mixes_on(&cache_topo, Placement::Compact, &cache_mixes, &MeasureEngine::Fluid)?;
+    let mut cwalls = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        run_mixes_on(&cache_topo, Placement::Compact, &cache_mixes, &MeasureEngine::Fluid)?;
+        cwalls.push(t0.elapsed().as_secs_f64());
+    }
+    let cache_wall = membw::stats::median(&cwalls);
+    let cache_cases_per_s = cache_mixes.len() as f64 / cache_wall;
+    // Classifier hit counters: how many socket-level groups the runner
+    // routed to a shared-L3 node vs the memory interface across the sweep.
+    let cache_groups_total: usize = cache_warm.cases.iter().map(|c| c.socket.len()).sum();
+    let cache_groups_l3: usize = cache_warm
+        .cases
+        .iter()
+        .map(|c| c.l3.iter().map(|r| r.origins.len()).sum::<usize>())
+        .sum();
+    println!(
+        "cache-topology pipeline (fluid, rome 1 domain, l3_bw {:.0} GB/s): {} cache mixes \
+         in {:.3} ms ({:.1} cases/s)",
+        rome_l3.l3_bw_gbs,
+        cache_mixes.len(),
+        cache_wall * 1e3,
+        cache_cases_per_s,
+    );
+    let cache_rows: Vec<String> = cache_warm
+        .cases
+        .iter()
+        .map(|case| {
+            // Exactly one shared-L3 record per case here (single socket,
+            // every mix carries an @l3 group).
+            let l3 = &case.l3[0];
+            format!(
+                "    {{\n      \"mix\": \"{}\",\n      \"simulated_total_gbs\": {:.4},\n      \"model_total_gbs\": {:.4},\n      \"l3_simulated_gbs\": {:.4},\n      \"l3_model_gbs\": {:.4},\n      \"l3_saturated\": {}\n    }}",
+                case.mix.label(),
+                case.measured_total_gbs,
+                case.model_total_gbs,
+                l3.measured_total_gbs,
+                l3.model_total_gbs,
+                l3.saturated,
+            )
+        })
+        .collect();
+    let cache_json = format!(
+        "{{\n  \"mode\": \"{}\",\n  \"cache\": {{\n    \"engine\": \"fluid\",\n    \"topology\": \"{}\",\n    \"l3_bw_gbs\": {:.1},\n    \"cases\": {},\n    \"wall_s\": {:.6},\n    \"cases_per_s\": {:.1}\n  }},\n  \"classifier\": {{\n    \"groups\": {},\n    \"l3_bound_groups\": {},\n    \"mem_bound_groups\": {}\n  }},\n  \"case_detail\": [\n{}\n  ],\n  \"char_cache\": {}\n}}\n",
+        if smoke { "smoke" } else { "full" },
+        cache_topo.label(),
+        rome_l3.l3_bw_gbs,
+        cache_mixes.len(),
+        cache_wall,
+        cache_cases_per_s,
+        cache_groups_total,
+        cache_groups_l3,
+        cache_groups_total - cache_groups_l3,
+        cache_rows.join(",\n"),
+        char_cache_json(),
+    );
+    let cache_path = out_dir.join("BENCH_cache.json");
+    std::fs::write(&cache_path, &cache_json)?;
+    println!("wrote {}", cache_path.display());
 
     // --- cluster co-sim: a 64-node fleet of NPS4 Rome sockets (256
     // domains, 2048 ranks) with inter-domain remote traffic inside every

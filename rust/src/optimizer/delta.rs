@@ -35,9 +35,10 @@
 
 use crate::error::Result;
 use crate::sharing::remote::{
-    any_gated, expand_portions, fill_link_iface, fill_mem_iface, lockstep_rate, share_remote,
+    any_gated, expand_portions, fill_l3_iface, fill_link_iface, fill_mem_iface, lockstep_rate,
+    share_remote,
 };
-use crate::sharing::{Portion, RemoteGroup, TopoShape};
+use crate::sharing::{GroupKind, Portion, RemoteGroup, TopoShape};
 
 /// Counters of the delta evaluator, merged across a whole search.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -71,6 +72,7 @@ pub struct EvalOutcome {
     portions: Vec<Portion>,
     mem_grant: Vec<f64>,
     link_grant: Vec<f64>,
+    l3_grant: Vec<f64>,
     /// Final per-core rate of each group, GB/s (post fixed point when the
     /// candidate is gated).
     pub rates: Vec<f64>,
@@ -95,6 +97,7 @@ pub struct DeltaEval {
     /// source. NOT the final grants when the incumbent is gated.
     mem_grant: Vec<f64>,
     link_grant: Vec<f64>,
+    l3_grant: Vec<f64>,
     rates: Vec<f64>,
 }
 
@@ -109,6 +112,7 @@ impl DeltaEval {
             portions: Vec::new(),
             mem_grant: Vec::new(),
             link_grant: Vec::new(),
+            l3_grant: Vec::new(),
             rates: Vec::new(),
         };
         let outcome = de.solve_full(groups)?;
@@ -134,17 +138,19 @@ impl DeltaEval {
     /// candidate is ungated (property-tested in
     /// `tests/optimizer_conformance.rs` and mirrored in Python).
     pub fn eval(&self, changes: &[(usize, RemoteGroup)]) -> Result<EvalOutcome> {
+        let n3 = if self.shape.l3_bw_gbs > 0.0 { self.shape.n_sockets() } else { 0 };
         if changes.is_empty() {
             return Ok(EvalOutcome {
                 groups: self.groups.clone(),
                 portions: self.portions.clone(),
                 mem_grant: self.mem_grant.clone(),
                 link_grant: self.link_grant.clone(),
+                l3_grant: self.l3_grant.clone(),
                 rates: self.rates.clone(),
                 gated: false,
                 stats: DeltaStats {
                     evals: 1,
-                    iface_reused: (self.shape.n_domains() + self.links.len()) as u64,
+                    iface_reused: (self.shape.n_domains() + self.links.len() + n3) as u64,
                     ..DeltaStats::default()
                 },
             });
@@ -158,12 +164,38 @@ impl DeltaEval {
         let mut new_groups = self.groups.clone();
         let mut dirty_mem = vec![false; nd];
         let mut dirty_link = vec![false; nl];
+        let mut dirty_l3 = vec![false; n3];
         for &(gi, ng) in changes {
             let og = &self.groups[gi];
             debug_assert!(
-                ng.n == og.n && ng.f == og.f && ng.bs_gbs == og.bs_gbs,
+                ng.n == og.n && ng.f == og.f && ng.bs_gbs == og.bs_gbs && ng.kind == og.kind,
                 "delta changes may only move a group, not change its traffic character"
             );
+            match og.kind {
+                // A compute-bound group posts no portions: moving it
+                // changes nothing anywhere in the fixed point.
+                GroupKind::Compute => {
+                    new_groups[gi] = ng;
+                    continue;
+                }
+                // An L3-resident group posts one portion on its home
+                // socket's L3 plus (when it drains to DRAM at all) the
+                // tandem continuation on the home memory interface; a
+                // home move dirties both ends of both.
+                GroupKind::L3 { .. } => {
+                    if ng.home != og.home {
+                        dirty_l3[self.shape.socket_of[og.home]] = true;
+                        dirty_l3[self.shape.socket_of[ng.home]] = true;
+                        if og.f * og.bs_gbs > 0.0 {
+                            dirty_mem[og.home] = true;
+                            dirty_mem[ng.home] = true;
+                        }
+                    }
+                    new_groups[gi] = ng;
+                    continue;
+                }
+                GroupKind::Mem => {}
+            }
             // Per-target (weight, link) of the old and new routing.
             let mut old_w = vec![(0.0f64, None); nd];
             for (t, link, w) in crate::sharing::portion_routes(
@@ -206,30 +238,47 @@ impl DeltaEval {
         let new_portions = expand_portions(&self.shape, &new_groups, &self.links)?;
         let np = new_portions.len();
 
-        // Old portion index per (group, target): unique because a group
-        // posts at most one portion per target.
-        let mut old_at = vec![usize::MAX; k * nd];
+        // Old portion index per (group, target): unique once split by
+        // the mem flag, because a group posts at most one mem-facing
+        // portion per target plus (for L3 groups) one L3-facing one.
+        let mut old_at_mem = vec![usize::MAX; k * nd];
+        let mut old_at_l3 = vec![usize::MAX; k * nd];
         for (i, p) in self.portions.iter().enumerate() {
-            old_at[p.group * nd + p.target] = i;
+            if p.mem {
+                old_at_mem[p.group * nd + p.target] = i;
+            } else {
+                old_at_l3[p.group * nd + p.target] = i;
+            }
         }
 
         // One pass over the new portions: collect member lists of the
         // dirty interfaces, copy incumbent grants everywhere else.
         let mut mem_grant = vec![0.0f64; np];
         let mut link_grant = vec![0.0f64; np];
+        let mut l3_grant = vec![0.0f64; np];
         let mut mem_idx: Vec<Vec<usize>> = vec![Vec::new(); nd];
         let mut link_idx: Vec<Vec<usize>> = vec![Vec::new(); nl];
+        let mut l3_idx: Vec<Vec<usize>> = vec![Vec::new(); n3];
         for (i, p) in new_portions.iter().enumerate() {
-            if dirty_mem[p.target] {
-                mem_idx[p.target].push(i);
-            } else {
-                mem_grant[i] = self.mem_grant[old_at[p.group * nd + p.target]];
+            if p.mem {
+                if dirty_mem[p.target] {
+                    mem_idx[p.target].push(i);
+                } else {
+                    mem_grant[i] = self.mem_grant[old_at_mem[p.group * nd + p.target]];
+                }
             }
             if let Some(li) = p.link {
                 if dirty_link[li] {
                     link_idx[li].push(i);
                 } else {
-                    link_grant[i] = self.link_grant[old_at[p.group * nd + p.target]];
+                    link_grant[i] = self.link_grant[old_at_mem[p.group * nd + p.target]];
+                }
+            }
+            if let Some(s3) = p.l3 {
+                if dirty_l3[s3] {
+                    l3_idx[s3].push(i);
+                } else {
+                    l3_grant[i] = self.l3_grant[old_at_l3[p.group * nd + p.target]];
                 }
             }
         }
@@ -269,12 +318,29 @@ impl DeltaEval {
                 stats.iface_reused += 1;
             }
         }
+        for s in 0..n3 {
+            if dirty_l3[s] {
+                fill_l3_iface(
+                    &self.shape,
+                    &new_groups,
+                    &new_portions,
+                    &l3_idx[s],
+                    &caps,
+                    &mut l3_grant,
+                );
+                stats.iface_evals += 1;
+            } else {
+                stats.iface_reused += 1;
+            }
+        }
 
         let rates: Vec<f64> = (0..k)
-            .map(|gi| lockstep_rate(&new_groups, &new_portions, &mem_grant, &link_grant, gi))
+            .map(|gi| {
+                lockstep_rate(&new_groups, &new_portions, &mem_grant, &link_grant, &l3_grant, gi)
+            })
             .collect();
 
-        if any_gated(&new_groups, &new_portions, &mem_grant, &link_grant, &rates) {
+        if any_gated(&new_groups, &new_portions, &mem_grant, &link_grant, &l3_grant, &rates) {
             // The fixed point couples every interface; fall back to the
             // full solve for the rates but keep the pass-1 grants as the
             // clean-copy source of later moves.
@@ -285,6 +351,7 @@ impl DeltaEval {
                 portions: new_portions,
                 mem_grant,
                 link_grant,
+                l3_grant,
                 rates: full.per_core_gbs,
                 gated: true,
                 stats,
@@ -296,6 +363,7 @@ impl DeltaEval {
             portions: new_portions,
             mem_grant,
             link_grant,
+            l3_grant,
             rates,
             gated: false,
             stats,
@@ -308,6 +376,7 @@ impl DeltaEval {
         self.portions = outcome.portions;
         self.mem_grant = outcome.mem_grant;
         self.link_grant = outcome.link_grant;
+        self.l3_grant = outcome.l3_grant;
         self.rates = outcome.rates;
     }
 
@@ -321,9 +390,11 @@ impl DeltaEval {
         let caps = vec![f64::INFINITY; groups.len()];
         let mut mem_grant = vec![0.0f64; np];
         let mut link_grant = vec![0.0f64; np];
+        let mut l3_grant = vec![0.0f64; np];
         let mut stats = DeltaStats { evals: 1, ..DeltaStats::default() };
         for d in 0..nd {
-            let idx: Vec<usize> = (0..np).filter(|&p| portions[p].target == d).collect();
+            let idx: Vec<usize> =
+                (0..np).filter(|&p| portions[p].target == d && portions[p].mem).collect();
             fill_mem_iface(&self.shape, &groups, &portions, &idx, d, &caps, &mut mem_grant);
             stats.iface_evals += 1;
         }
@@ -341,17 +412,23 @@ impl DeltaEval {
             );
             stats.iface_evals += 1;
         }
+        let n3 = if self.shape.l3_bw_gbs > 0.0 { self.shape.n_sockets() } else { 0 };
+        for s in 0..n3 {
+            let idx: Vec<usize> = (0..np).filter(|&p| portions[p].l3 == Some(s)).collect();
+            fill_l3_iface(&self.shape, &groups, &portions, &idx, &caps, &mut l3_grant);
+            stats.iface_evals += 1;
+        }
         let rates: Vec<f64> = (0..groups.len())
-            .map(|gi| lockstep_rate(&groups, &portions, &mem_grant, &link_grant, gi))
+            .map(|gi| lockstep_rate(&groups, &portions, &mem_grant, &link_grant, &l3_grant, gi))
             .collect();
-        let gated = any_gated(&groups, &portions, &mem_grant, &link_grant, &rates);
+        let gated = any_gated(&groups, &portions, &mem_grant, &link_grant, &l3_grant, &rates);
         let rates = if gated {
             stats.full_solves += 1;
             share_remote(&self.shape, &groups)?.per_core_gbs
         } else {
             rates
         };
-        Ok(EvalOutcome { groups, portions, mem_grant, link_grant, rates, gated, stats })
+        Ok(EvalOutcome { groups, portions, mem_grant, link_grant, l3_grant, rates, gated, stats })
     }
 }
 
@@ -369,7 +446,17 @@ mod tests {
             }
         }
         let n = socket_of.len();
-        TopoShape { socket_of, bw_scale: vec![1.0; n], link_bw_gbs: link, link_bw_rev_gbs: link }
+        TopoShape {
+            socket_of,
+            bw_scale: vec![1.0; n],
+            link_bw_gbs: link,
+            link_bw_rev_gbs: link,
+            l3_bw_gbs: 0.0,
+        }
+    }
+
+    fn shape_l3(nd_per_socket: usize, sockets: usize, link: f64, l3: f64) -> TopoShape {
+        TopoShape { l3_bw_gbs: l3, ..shape(nd_per_socket, sockets, link) }
     }
 
     fn random_groups(rng: &mut XorShift64, nd: usize, k: usize) -> Vec<RemoteGroup> {
@@ -384,8 +471,34 @@ mod tests {
                 } else {
                     0.0
                 },
+                kind: GroupKind::Mem,
             })
             .collect()
+    }
+
+    /// Like [`random_groups`] but roughly a third of the groups are
+    /// L3-resident (local-only, with and without a DRAM tandem) and a
+    /// sixth compute-bound, exercising every portion flavour.
+    fn random_kinded_groups(rng: &mut XorShift64, nd: usize, k: usize) -> Vec<RemoteGroup> {
+        let mut groups = random_groups(rng, nd, k);
+        for g in &mut groups {
+            match rng.next_below(6) {
+                0 | 1 => {
+                    g.remote_frac = 0.0;
+                    if rng.next_below(2) == 0 {
+                        g.f = 0.0;
+                        g.bs_gbs = 0.0;
+                    }
+                    g.kind = GroupKind::L3 {
+                        f_l3: 0.2 + 0.6 * rng.next_f64(),
+                        bs_l3_gbs: 40.0 + 40.0 * rng.next_f64(),
+                    };
+                }
+                2 => g.kind = GroupKind::Compute,
+                _ => {}
+            }
+        }
+        groups
     }
 
     fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
@@ -421,6 +534,31 @@ mod tests {
     }
 
     #[test]
+    fn delta_matches_full_solve_with_l3_and_compute_groups() {
+        let mut rng = XorShift64::new(0xCAC4E);
+        for case in 0..40 {
+            let sh = shape_l3(2, 2, if case % 3 == 0 { 0.0 } else { 30.0 }, 120.0);
+            let nd = sh.n_domains();
+            let mut groups = random_kinded_groups(&mut rng, nd, 3 + rng.next_below(4));
+            let mut de = DeltaEval::new(sh.clone(), groups.clone()).unwrap();
+            for _ in 0..6 {
+                let gi = rng.next_below(groups.len());
+                let mut ng = groups[gi];
+                if matches!(ng.kind, GroupKind::Mem) && rng.next_below(2) == 0 {
+                    ng.remote_frac = [0.0, 0.1, 0.25, 0.5][rng.next_below(4)];
+                } else {
+                    ng.home = rng.next_below(nd);
+                }
+                let outcome = de.eval(&[(gi, ng)]).unwrap();
+                groups[gi] = ng;
+                let full = share_remote(&sh, &groups).unwrap();
+                assert_bits_eq(&outcome.rates, &full.per_core_gbs, "rates");
+                de.commit(outcome);
+            }
+        }
+    }
+
+    #[test]
     fn empty_change_reproduces_the_incumbent() {
         let sh = shape(2, 2, 30.0);
         let groups = random_groups(&mut XorShift64::new(3), 4, 3);
@@ -434,8 +572,22 @@ mod tests {
     fn swap_move_marks_both_groups_dirty_and_matches() {
         let sh = shape(1, 2, 25.0);
         let mut groups = vec![
-            RemoteGroup { home: 0, n: 4, f: 0.4, bs_gbs: 30.0, remote_frac: 0.25 },
-            RemoteGroup { home: 1, n: 4, f: 0.6, bs_gbs: 25.0, remote_frac: 0.0 },
+            RemoteGroup {
+                home: 0,
+                n: 4,
+                f: 0.4,
+                bs_gbs: 30.0,
+                remote_frac: 0.25,
+                kind: GroupKind::Mem,
+            },
+            RemoteGroup {
+                home: 1,
+                n: 4,
+                f: 0.6,
+                bs_gbs: 25.0,
+                remote_frac: 0.0,
+                kind: GroupKind::Mem,
+            },
         ];
         let de = DeltaEval::new(sh.clone(), groups.clone()).unwrap();
         let changes = vec![

@@ -503,6 +503,7 @@ mod tests {
             bw_scale: vec![1.0; 4],
             link_bw_gbs: 30.0,
             link_bw_rev_gbs: 30.0,
+            l3_bw_gbs: 0.0,
         };
         let mk = |name: &str, n: usize, f: f64, bs: f64| OptGroup {
             name: name.into(),
@@ -512,6 +513,7 @@ mod tests {
             bs_gbs: bs,
             pinned: None,
             fixed_remote_ppm: None,
+            kind: crate::sharing::GroupKind::Mem,
         };
         SearchSpace::new(
             shape,

@@ -17,7 +17,7 @@ use std::collections::HashMap;
 use crate::error::{Error, Result};
 use crate::kernels::KernelId;
 use crate::scenario::Mix;
-use crate::sharing::{RemoteGroup, TopoShape};
+use crate::sharing::{GroupKind, RemoteGroup, TopoShape};
 use crate::simulator::XorShift64;
 use crate::topology::{GroupPlacement, Topology};
 
@@ -40,6 +40,12 @@ pub struct OptGroup {
     /// Fixed remote fraction in ppm (`%r` suffix); `None` = the search
     /// may retune it over [`SearchSpace::remote_levels`].
     pub fixed_remote_ppm: Option<u32>,
+    /// Contention class of the group. [`SearchSpace::from_mix`] always
+    /// builds `Mem` groups (its `(f, b_s)` characterization is the DRAM
+    /// roofline); callers constructing spaces directly may place
+    /// L3-resident or compute-bound groups, which the delta evaluator
+    /// re-rates on the matching interfaces.
+    pub kind: GroupKind,
 }
 
 /// One point of the search space: per-group home domain + remote ppm.
@@ -174,6 +180,17 @@ impl SearchSpace {
     ) -> Result<SearchSpace> {
         let mut groups = Vec::with_capacity(mix.groups.len());
         for g in &mix.groups {
+            if !matches!(g.bound, crate::scenario::BoundHint::Auto | crate::scenario::BoundHint::Mem)
+            {
+                return Err(Error::InvalidPlan(format!(
+                    "group '{}:{}{}': the placement optimizer characterizes groups on the \
+                     DRAM roofline; drop the `{}` suffix or run the mix as a scenario",
+                    g.kernel.key(),
+                    g.cores,
+                    g.bound.suffix(),
+                    g.bound.suffix(),
+                )));
+            }
             let &(f, bs_gbs) = chars.get(&g.kernel).ok_or_else(|| {
                 Error::InvalidPlan(format!("kernel {:?} not characterized", g.kernel))
             })?;
@@ -190,6 +207,7 @@ impl SearchSpace {
                 bs_gbs,
                 pinned,
                 fixed_remote_ppm: fixed,
+                kind: GroupKind::Mem,
             });
         }
         let domain_cores: Vec<usize> = topo.domains.iter().map(|d| d.machine.cores).collect();
@@ -393,6 +411,7 @@ impl SearchSpace {
                 f: g.f,
                 bs_gbs: g.bs_gbs,
                 remote_frac: c.remote_ppm[gi] as f64 / 1e6,
+                kind: g.kind,
             })
             .collect()
     }
@@ -412,6 +431,7 @@ impl SearchSpace {
                         f: g.f,
                         bs_gbs: g.bs_gbs,
                         remote_frac: to.remote_ppm[gi] as f64 / 1e6,
+                        kind: g.kind,
                     },
                 ));
             }
@@ -450,6 +470,7 @@ mod tests {
             bw_scale: vec![1.0; 4],
             link_bw_gbs: 30.0,
             link_bw_rev_gbs: 30.0,
+            l3_bw_gbs: 0.0,
         }
     }
 
@@ -462,6 +483,7 @@ mod tests {
             bs_gbs: 32.0,
             pinned: None,
             fixed_remote_ppm: None,
+            kind: GroupKind::Mem,
         }
     }
 

@@ -234,6 +234,35 @@ pub fn topology_scenario_report(
             }
             out.push_str(&lt.render());
         }
+        // Phases with cache-bound groups additionally report every shared
+        // L3 that carried traffic. Bandwidths are L3-level (lines crossing
+        // L2↔L3), not DRAM traffic.
+        for l3 in &phase.l3 {
+            writeln!(
+                out,
+                "[L3 {}] b_l3 {:.1} GB/s   [{}, simulated {:.1} GB/s, model {:.1} GB/s]",
+                l3.label(),
+                l3.l3_bw_gbs,
+                if l3.saturated { "saturated" } else { "nonsaturated" },
+                l3.measured_total_gbs,
+                l3.model_total_gbs,
+            )
+            .unwrap();
+            let mut ct = AsciiTable::new(&[
+                "group", "kernel", "n", "sim GB/s", "model GB/s", "alpha model",
+            ]);
+            for (g, origin) in l3.groups.iter().zip(&l3.origins) {
+                ct.row(vec![
+                    format!("{origin}"),
+                    g.kernel.key().to_string(),
+                    g.n.to_string(),
+                    format!("{:.2}", g.measured_bw_gbs),
+                    format!("{:.2}", g.model_bw_gbs),
+                    format!("{:.3}", g.model_alpha),
+                ]);
+            }
+            out.push_str(&ct.render());
+        }
     }
     writeln!(
         out,
@@ -300,6 +329,21 @@ mod tests {
         assert!(csv.contains(",l0-1,"), "forward link rows in the CSV");
         assert!(csv.contains(",l1-0,"), "reverse link rows in the CSV");
         assert!(csv.contains("%r0.25"), "remote suffix in the mix label");
+    }
+
+    #[test]
+    fn l3_bound_report_renders_l3_table() {
+        let dir = std::env::temp_dir().join("membw-topo-l3-report");
+        let ctx = ExperimentCtx::fluid(dir.clone());
+        let m = machine(MachineId::Rome);
+        let topo = Topology::socket(&m);
+        let sc = Scenario::parse("rome-l3", "jacobil3-v1:4@d0@l3+dcopy:4@d0+idle:24").unwrap();
+        let text = topology_scenario_report(&ctx, &topo, Placement::Compact, &sc).unwrap();
+        assert!(text.contains("[L3 l3s0]"), "{text}");
+        assert!(text.contains("b_l3"), "{text}");
+        let csv = std::fs::read_to_string(dir.join("scenario_rome-l3_rome-1s4d.csv")).unwrap();
+        assert!(csv.contains(",l3s0,"), "L3 rows in the CSV: {csv}");
+        assert!(csv.contains("@l3"), "bound suffix in the mix label");
     }
 
     #[test]

@@ -54,4 +54,4 @@ pub use results::{
     TopoMixResultSet, TopoScenarioResult,
 };
 pub use runner::{run_mixes, run_mixes_on, run_scenario, run_scenario_on, MeasureEngine};
-pub use spec::{remote_ppm_of, slugify, GroupSpec, Mix, Scenario};
+pub use spec::{remote_ppm_of, slugify, BoundHint, GroupSpec, Mix, Scenario};

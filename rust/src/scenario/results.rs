@@ -218,6 +218,42 @@ impl LinkResult {
     }
 }
 
+/// Contention outcome of one socket's shared-L3 interface under a mix:
+/// the groups whose working sets are L3-resident on this socket, with
+/// simulated L3-level traffic and modeled L3 grants. Only present when
+/// the machine models a shared-L3 bandwidth (`l3_bw_gbs > 0`) *and* some
+/// group classifies (or is forced) cache-bound.
+///
+/// Bandwidths here are **L3-level** GB/s (lines crossing L2↔L3), not
+/// DRAM traffic: an LC-at-L3 stencil moves more lines at L3 than at the
+/// memory interface, and it is the L3-level rate the shared cache grants.
+#[derive(Debug, Clone)]
+pub struct L3Result {
+    /// Socket whose shared L3 this record describes.
+    pub socket: usize,
+    /// Modeled aggregate L3 bandwidth of the socket, GB/s.
+    pub l3_bw_gbs: f64,
+    /// Per-group L3-level traffic (`n` = cores contending at this L3;
+    /// `model_alpha` = share of the L3's granted traffic).
+    pub groups: Vec<GroupOutcome>,
+    /// For each entry of `groups`, the socket-level group index it
+    /// aggregates.
+    pub origins: Vec<usize>,
+    /// Total simulated (measured) L3-level traffic, GB/s.
+    pub measured_total_gbs: f64,
+    /// Total modeled L3 grant, GB/s.
+    pub model_total_gbs: f64,
+    /// Whether the model finds the shared L3 saturated.
+    pub saturated: bool,
+}
+
+impl L3Result {
+    /// Display label of the L3 interface, e.g. `l3s0`.
+    pub fn label(&self) -> String {
+        format!("l3s{}", self.socket)
+    }
+}
+
 /// Outcome of one socket-level mix resolved onto a multi-domain topology:
 /// per-domain [`MixResult`]s (contention is evaluated independently per
 /// ccNUMA domain) plus the socket-level aggregate per original group.
@@ -246,6 +282,9 @@ pub struct TopoMixResult {
     /// Per-link traffic records (empty when no group sends remote traffic
     /// across sockets).
     pub links: Vec<LinkResult>,
+    /// Per-socket shared-L3 records (empty when no group contends at a
+    /// modeled shared L3).
+    pub l3: Vec<L3Result>,
     /// Measured aggregate bandwidth over the whole socket, GB/s.
     pub measured_total_gbs: f64,
     /// Modeled aggregate bandwidth over the whole socket, GB/s.
@@ -272,7 +311,8 @@ impl TopoMixResult {
     }
 
     /// One CSV row per (domain, sub-group), then one `l<a>-<b>` row per
-    /// (link, crossing group), then one `socket` row per original group.
+    /// (link, crossing group), then one `l3s<s>` row per (shared L3,
+    /// resident group), then one `socket` row per original group.
     pub fn to_csv_rows(&self) -> Vec<String> {
         let mut rows = Vec::new();
         for ((did, dr), origin) in self.domain_ids.iter().zip(&self.domains).zip(&self.origins) {
@@ -312,6 +352,33 @@ impl TopoMixResult {
                     self.mix.label(),
                     link.sockets.0,
                     link.sockets.1,
+                    origin,
+                    g.kernel.key(),
+                    g.n,
+                    g.measured_per_core,
+                    g.model_per_core,
+                    g.measured_bw_gbs,
+                    g.model_bw_gbs,
+                    alpha_meas,
+                    g.model_alpha,
+                    g.error(),
+                ));
+            }
+        }
+        for l3 in &self.l3 {
+            for (g, origin) in l3.groups.iter().zip(&l3.origins) {
+                let alpha_meas = if l3.measured_total_gbs > 0.0 {
+                    g.measured_bw_gbs / l3.measured_total_gbs
+                } else {
+                    0.0
+                };
+                rows.push(format!(
+                    "{},{},{},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.5},{:.5},{:.5}",
+                    self.machine.key(),
+                    self.topology,
+                    self.placement,
+                    self.mix.label(),
+                    l3.label(),
                     origin,
                     g.kernel.key(),
                     g.n,
@@ -522,6 +589,16 @@ mod tests {
             saturated: false,
         };
         assert_eq!(link.label(), "s0->s1");
+        let l3 = L3Result {
+            socket: 0,
+            l3_bw_gbs: 320.0,
+            groups: vec![d0.groups[1].clone()],
+            origins: vec![1],
+            measured_total_gbs: d0.groups[1].measured_bw_gbs,
+            model_total_gbs: d0.groups[1].model_bw_gbs,
+            saturated: false,
+        };
+        assert_eq!(l3.label(), "l3s0");
         let topo = TopoMixResult {
             machine: MachineId::Rome,
             topology: "rome-1s4d".into(),
@@ -532,25 +609,27 @@ mod tests {
             origins: vec![vec![0, 1], vec![0, 1]],
             socket,
             links: vec![link],
+            l3: vec![l3],
             measured_total_gbs: 2.0 * d0.measured_total_gbs,
             model_total_gbs: 2.0 * d0.model_total_gbs,
             remote_converged: None,
         };
         let header_cols = TopoMixResult::csv_header().split(',').count();
         let rows = topo.to_csv_rows();
-        // 2 groups x 2 domains + 1 link row + 2 socket rows.
-        assert_eq!(rows.len(), 7);
+        // 2 groups x 2 domains + 1 link row + 1 L3 row + 2 socket rows.
+        assert_eq!(rows.len(), 8);
         for row in &rows {
             assert_eq!(row.split(',').count(), header_cols, "{row}");
         }
         assert!(rows[4].contains(",l0-1,"));
-        assert!(rows[5].contains(",socket,"));
+        assert!(rows[5].contains(",l3s0,"));
+        assert!(rows[6].contains(",socket,"));
         assert_eq!(topo.all_errors().len(), 4);
         let dir = std::env::temp_dir().join("membw-topo-results-test");
         let set = TopoMixResultSet { cases: vec![topo] };
         set.write_csv(&dir.join("topo.csv")).unwrap();
         let csv = std::fs::read_to_string(dir.join("topo.csv")).unwrap();
-        assert_eq!(csv.lines().count(), 1 + 7);
+        assert_eq!(csv.lines().count(), 1 + 8);
     }
 
     #[test]

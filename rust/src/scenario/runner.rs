@@ -22,11 +22,11 @@ use crate::parallel::par_map;
 use crate::runtime::{PjrtSimExecutor, SimCase};
 use crate::scenario::cache::{CharCache, EngineKind};
 use crate::scenario::results::{
-    GroupOutcome, LinkResult, MixResult, MixResultSet, ScenarioResult, TopoMixResult,
+    GroupOutcome, L3Result, LinkResult, MixResult, MixResultSet, ScenarioResult, TopoMixResult,
     TopoMixResultSet, TopoScenarioResult,
 };
-use crate::scenario::spec::{GroupSpec, Mix, Scenario};
-use crate::sharing::{share_multigroup, share_remote, KernelGroup, RemoteGroup};
+use crate::scenario::spec::{BoundHint, GroupSpec, Mix, Scenario};
+use crate::sharing::{share_multigroup, share_remote, GroupKind, KernelGroup, RemoteGroup};
 use crate::simulator::{
     run_engine, run_net_engine, CoreWorkload, Engine, IfaceNet, KernelMeasurement, NetStream,
 };
@@ -86,6 +86,82 @@ fn workloads_for(machine: &Machine, mix: &Mix) -> Vec<CoreWorkload> {
     }
     ws.extend(vec![CoreWorkload::idle(); mix.idle_cores]);
     ws
+}
+
+/// L3-level contention characterization of a cache-resident (or
+/// `@l3`-forced) kernel on `m`.
+///
+/// The tandem model routes **every** L2-miss line through the shared L3
+/// before the survivors continue to memory, so the L3-level demand is the
+/// full L2-miss count `sig.l3.total()` — deliberately not
+/// [`crate::ecm::effective_l3_lines`], which subtracts the victim-LLC
+/// bypass and only feeds the single-core ECM runtime. The L3 request
+/// fraction follows Eq. (2) one level up: `f_L3 = T_L2L3 / T_ECM` at the
+/// wire rate `b_L3 = l2l3_bpc · freq` (identity: `f_L3 · b_L3` equals the
+/// L2-miss line rate times 64 B).
+fn l3_kind(sig: &crate::kernels::KernelSignature, m: &Machine) -> Result<GroupKind> {
+    if m.l3_bw_gbs <= 0.0 {
+        return Err(crate::error::Error::InvalidPlan(format!(
+            "kernel '{}' classifies cache-bound but machine '{}' models no \
+             shared-L3 bandwidth (l3_bw_gbs = 0)",
+            sig.name,
+            m.id.key(),
+        )));
+    }
+    if sig.l3.total() <= sig.mem.total() {
+        return Err(crate::error::Error::InvalidPlan(format!(
+            "kernel '{}' has no L3-resident reuse traffic ({} L2-miss lines \
+             vs {} memory lines per unit) — it contends at the memory \
+             interface, not the shared L3",
+            sig.name,
+            sig.l3.total(),
+            sig.mem.total(),
+        )));
+    }
+    let p = crate::ecm::predict(sig, m);
+    let t_l2l3 = sig.l3.total() as f64 * m.line_cycles(m.l2l3_bpc);
+    Ok(GroupKind::L3 { f_l3: t_l2l3 / p.t_ecm, bs_l3_gbs: m.l2l3_bpc * m.freq_ghz })
+}
+
+/// Effective contention kind of one group on `m`: an explicit
+/// `@mem`/`@l3`/`@comp` suffix wins; `Auto` classifies from the ECM
+/// signature. A kernel whose working set never leaves the cache hierarchy
+/// (`mem.total() == 0`) contends at the shared L3 when one is modeled; a
+/// kernel whose roofline knee `n_s = 1/f` lies beyond the machine's core
+/// count (`f · cores < 1`) can never saturate memory and is compute-bound.
+/// Every kernel in the built-in registry classifies `Mem` on every
+/// built-in machine (pinned by the cache-topology conformance suite), so
+/// auto-classification leaves all pre-existing mixes bit-identical.
+fn effective_kind(g: &GroupSpec, m: &Machine) -> Result<GroupKind> {
+    let sig = kernel(g.kernel);
+    match g.bound {
+        BoundHint::Mem => Ok(GroupKind::Mem),
+        BoundHint::Compute => Ok(GroupKind::Compute),
+        BoundHint::L3 => {
+            if g.remote_frac() > 0.0 {
+                return Err(crate::error::Error::InvalidPlan(
+                    "a group bound to the shared L3 (@l3) cannot also carry a \
+                     remote-access fraction (%r)"
+                        .into(),
+                ));
+            }
+            l3_kind(&sig, m)
+        }
+        BoundHint::Auto => {
+            if sig.mem.total() == 0
+                && crate::ecm::effective_l3_lines(&sig, m) > 0.0
+                && m.l3_bw_gbs > 0.0
+            {
+                return l3_kind(&sig, m);
+            }
+            let p = crate::ecm::predict(&sig, m);
+            if p.f * m.cores as f64 < 1.0 {
+                Ok(GroupKind::Compute)
+            } else {
+                Ok(GroupKind::Mem)
+            }
+        }
+    }
 }
 
 /// Compose the per-mix result from raw per-core bandwidths plus the
@@ -167,6 +243,20 @@ fn measure_mixes(
 pub fn run_mixes(machine: &Machine, mixes: &[Mix], engine: &MeasureEngine) -> Result<MixResultSet> {
     for mix in mixes {
         mix.validate(machine)?;
+        // The flat single-interface pipeline models memory contention only;
+        // cache- and compute-bound groups need the multi-interface path.
+        for g in &mix.groups {
+            if effective_kind(g, machine)? != GroupKind::Mem {
+                return Err(crate::error::Error::InvalidPlan(format!(
+                    "group '{}:{}{}' is not memory-bound; cache- and \
+                     compute-bound groups need the topology pipeline (run \
+                     the mix on a topology, e.g. `--domains 1`)",
+                    g.kernel.key(),
+                    g.cores,
+                    g.bound.suffix(),
+                )));
+            }
+        }
     }
     let mut kernels: Vec<KernelId> = mixes.iter().flat_map(|m| m.kernels()).collect();
     kernels.sort_by_key(|k| k.key());
@@ -214,9 +304,21 @@ pub fn run_mixes_on(
     mixes: &[Mix],
     engine: &MeasureEngine,
 ) -> Result<TopoMixResultSet> {
-    if mixes.iter().any(|m| m.has_remote()) {
-        // Remote traffic couples domains and links; the all-local path
-        // below stays untouched (and bit-identical to its pre-remote form).
+    // Remote traffic couples domains and links, and cache-/compute-bound
+    // groups contend on interfaces the per-domain path does not model; both
+    // route through the multi-interface pipeline. The all-local all-Mem
+    // path below stays untouched (and bit-identical to its pre-remote
+    // form) — with the built-in registry, auto-classification is always
+    // `Mem`, so only `%r` or an explicit `@l3`/`@comp` changes routes.
+    let mut needs_network = mixes.iter().any(|m| m.has_remote());
+    for mx in mixes {
+        for g in &mx.groups {
+            if effective_kind(g, &topo.base)? != GroupKind::Mem {
+                needs_network = true;
+            }
+        }
+    }
+    if needs_network {
         return run_mixes_on_remote(topo, placement, mixes, engine);
     }
     // split rejects empty mixes, out-of-range pins, and capacity overflow.
@@ -244,6 +346,7 @@ pub fn run_mixes_on(
             origins: Vec::new(),
             socket: Vec::new(),
             links: Vec::new(),
+            l3: Vec::new(),
             measured_total_gbs: 0.0,
             model_total_gbs: 0.0,
             remote_converged: None,
@@ -328,8 +431,8 @@ fn aggregate_socket(case: &mut TopoMixResult, mix: &Mix) {
         .collect();
 }
 
-/// The remote-access variant of [`run_mixes_on`], taken when any group
-/// carries a `%r` suffix.
+/// The multi-interface variant of [`run_mixes_on`], taken when any group
+/// carries a `%r` suffix or classifies cache- or compute-bound.
 ///
 /// **Model**: one [`share_remote`] evaluation per mix — every memory
 /// interface and every inter-socket link runs the generalized Eqs. (4)+(5)
@@ -353,8 +456,9 @@ fn run_mixes_on_remote(
 ) -> Result<TopoMixResultSet> {
     if matches!(engine, MeasureEngine::Pjrt(_)) {
         return Err(crate::error::Error::InvalidPlan(
-            "remote-access mixes need an in-process engine (fluid or des); \
-             the PJRT artifact has a fixed single-interface geometry"
+            "remote-access and cache-/compute-bound mixes need an in-process \
+             engine (fluid or des); the PJRT artifact has a fixed \
+             single-interface geometry"
                 .into(),
         ));
     }
@@ -376,6 +480,9 @@ fn run_mixes_on_remote(
         domain: usize,
         origin: usize,
         spec: GroupSpec,
+        /// Effective contention kind on the base machine (domains scale
+        /// memory bandwidth only; L3 and core rates are base properties).
+        kind: GroupKind,
     }
 
     /// One mix's model evaluation plus its routed measurement streams.
@@ -394,7 +501,8 @@ fn run_mixes_on_remote(
         let mut residents: Vec<Resident> = Vec::new();
         for dm in &split.domains {
             for (sg, &origin) in dm.mix.groups.iter().zip(&dm.origin) {
-                residents.push(Resident { domain: dm.domain, origin, spec: *sg });
+                let kind = effective_kind(sg, &topo.base)?;
+                residents.push(Resident { domain: dm.domain, origin, spec: *sg, kind });
             }
         }
         let groups: Vec<RemoteGroup> = residents
@@ -407,26 +515,38 @@ fn run_mixes_on_remote(
                     f: c.f,
                     bs_gbs: c.bs_gbs,
                     remote_frac: r.spec.remote_frac(),
+                    kind: r.kind,
                 }
             })
             .collect();
         let share = share_remote(&shape, &groups)?;
         // Every resident core is one stream homed on its domain; its
         // intrinsic demand comes from the home domain's (possibly scaled)
-        // machine row, exactly as on the all-local per-domain path.
+        // machine row, exactly as on the all-local per-domain path. An
+        // L3-resident group's stream instead carries its L2-miss line rate
+        // with the surviving fraction `1 - mem/l3` stopping at the shared
+        // L3 (the tandem expansion in `simulator::network::route_streams`);
+        // a compute-bound group's stream keeps its (low) intrinsic memory
+        // demand — the engine grants a non-saturating demand in full, which
+        // is exactly the model's "capped at the core-bound rate" claim.
         let mut streams: Vec<NetStream> = Vec::new();
         let mut stream_resident: Vec<usize> = Vec::new();
         for (ri, r) in residents.iter().enumerate() {
-            let w = CoreWorkload::from_kernel(
-                &kernel(r.spec.kernel),
-                &topo.domains[r.domain].machine,
-                ri,
-            );
+            let dmach = &topo.domains[r.domain].machine;
+            let sig = kernel(r.spec.kernel);
+            let mut w = CoreWorkload::from_kernel(&sig, dmach, ri);
+            let mut l3_frac = 0.0;
+            if matches!(r.kind, GroupKind::L3 { .. }) {
+                let p = crate::ecm::predict(&sig, dmach);
+                w.demand_lines_per_cy = sig.l3.total() as f64 / p.t_ecm;
+                l3_frac = 1.0 - sig.mem.total() as f64 / sig.l3.total() as f64;
+            }
             for _ in 0..r.spec.cores {
                 streams.push(NetStream {
                     workload: w,
                     home: r.domain,
                     remote_frac: r.spec.remote_frac(),
+                    l3_frac,
                 });
                 stream_resident.push(ri);
             }
@@ -446,16 +566,23 @@ fn run_mixes_on_remote(
 
         // Aggregate the engine's per-core portion drains onto the model's
         // portion list (both sides enumerate portions in the same routing
-        // order: home first, then remote targets in domain order).
-        let mut portion_index: HashMap<(usize, usize), usize> = HashMap::new();
+        // order: home first, then remote targets in domain order). The key
+        // carries the memory-stage flag because an L3-resident group owns
+        // *two* portions on the same (group, target) pair: the L3-level
+        // portion (`mem == false`) and the tandem continuation that drains
+        // against the home memory controller (`mem == true`). Compute-bound
+        // groups have no model portions at all, so their simulated drain
+        // maps onto nothing and is reported per-stream only.
+        let mut portion_index: HashMap<(usize, usize, bool), usize> = HashMap::new();
         for (p, portion) in share.portions.iter().enumerate() {
-            portion_index.insert((portion.group, portion.target), p);
+            portion_index.insert((portion.group, portion.target, portion.mem), p);
         }
         let mut portion_meas = vec![0.0f64; share.portions.len()];
         for (pi, np) in sim.portions.iter().enumerate() {
             let ri = stream_resident[np.stream];
-            let p = portion_index[&(ri, np.target)];
-            portion_meas[p] += sim.per_portion_gbs[pi];
+            if let Some(&p) = portion_index.get(&(ri, np.target, np.mem)) {
+                portion_meas[p] += sim.per_portion_gbs[pi];
+            }
         }
 
         // Per-core lockstep rates straight from the engine (slowest portion
@@ -576,6 +703,62 @@ fn run_mixes_on_remote(
             });
         }
 
+        // Per-shared-L3 records, aggregated by socket-level group. In the
+        // tandem model *all* of an L3-resident group's L2-miss lines cross
+        // its home socket's shared L3 (the L3-resident fraction stops
+        // there, the rest continues to memory), so the measured column is
+        // the group's full simulated L3-level drain and the model column
+        // its achieved L3-level bandwidth from the fixed point.
+        let mut l3_results: Vec<L3Result> = Vec::new();
+        let n_sockets = shape.socket_of.iter().copied().max().map_or(0, |s| s + 1);
+        for s in 0..n_sockets {
+            let pidx: Vec<usize> = (0..share.portions.len())
+                .filter(|&p| share.portions[p].l3 == Some(s) && !share.portions[p].mem)
+                .collect();
+            if pidx.is_empty() {
+                continue;
+            }
+            let k = mx.groups.len();
+            let mut meas = vec![0.0f64; k];
+            let mut model = vec![0.0f64; k];
+            let mut cores = vec![0usize; k];
+            for &p in &pidx {
+                let ri = share.portions[p].group;
+                let origin = residents[ri].origin;
+                meas[origin] += meas_pc[ri] * residents[ri].spec.cores as f64;
+                model[origin] += share.group_bw_gbs[ri];
+                cores[origin] += residents[ri].spec.cores;
+            }
+            let meas_total: f64 = meas.iter().sum();
+            let model_total: f64 = model.iter().sum();
+            let mut groups_out = Vec::new();
+            let mut origins = Vec::new();
+            for gi in 0..k {
+                if cores[gi] == 0 {
+                    continue;
+                }
+                groups_out.push(GroupOutcome {
+                    kernel: mx.groups[gi].kernel,
+                    n: cores[gi],
+                    measured_bw_gbs: meas[gi],
+                    measured_per_core: meas[gi] / cores[gi] as f64,
+                    model_bw_gbs: model[gi],
+                    model_per_core: model[gi] / cores[gi] as f64,
+                    model_alpha: if model_total > 0.0 { model[gi] / model_total } else { 0.0 },
+                });
+                origins.push(gi);
+            }
+            l3_results.push(L3Result {
+                socket: s,
+                l3_bw_gbs: shape.l3_bw_gbs,
+                groups: groups_out,
+                origins,
+                measured_total_gbs: meas_total,
+                model_total_gbs: model_total,
+                saturated: share.l3[s].saturated,
+            });
+        }
+
         let mut case = TopoMixResult {
             machine: topo.base.id,
             topology: topo.label(),
@@ -586,6 +769,7 @@ fn run_mixes_on_remote(
             origins: origins_out,
             socket: Vec::new(),
             links: link_results,
+            l3: l3_results,
             measured_total_gbs: 0.0,
             model_total_gbs: 0.0,
             remote_converged: Some(share.converged),

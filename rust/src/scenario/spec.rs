@@ -42,6 +42,57 @@ pub fn slugify(name: &str) -> String {
     }
 }
 
+/// Boundedness override for a group (`@mem`/`@l3`/`@comp` DSL suffixes).
+///
+/// `Auto` (the default, no suffix) classifies from the kernel signature:
+/// a group is L3-resident when its working set produces no memory traffic
+/// but does move L2↔L3 lines (and the machine models `l3_bw_gbs`), and
+/// compute-bound when its roofline knee lies beyond the machine's core
+/// count (`f · cores < 1` — memory can never saturate, so every core runs
+/// at its core-bound rate). The explicit suffixes force the classification —
+/// e.g. `@l3` for a blocked/tiled kernel the static signature cannot see.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BoundHint {
+    /// Classify from the kernel signature (no suffix).
+    Auto,
+    /// Force memory-bound: contend on the home memory controller.
+    Mem,
+    /// Force L3-resident: contend on the home socket's shared-L3
+    /// interface (needs `l3_bw_gbs > 0` on the machine).
+    L3,
+    /// Force compute-bound: cap at the core-bound rate, zero bandwidth
+    /// share.
+    Compute,
+}
+
+impl Default for BoundHint {
+    fn default() -> Self {
+        BoundHint::Auto
+    }
+}
+
+impl BoundHint {
+    /// Canonical DSL suffix (empty for `Auto`).
+    pub fn suffix(&self) -> &'static str {
+        match self {
+            BoundHint::Auto => "",
+            BoundHint::Mem => "@mem",
+            BoundHint::L3 => "@l3",
+            BoundHint::Compute => "@comp",
+        }
+    }
+}
+
+/// Parse a bound-override suffix token (without the `@`).
+fn parse_bound_hint(s: &str) -> Option<BoundHint> {
+    match s.to_ascii_lowercase().as_str() {
+        "mem" => Some(BoundHint::Mem),
+        "l3" => Some(BoundHint::L3),
+        "comp" | "compute" => Some(BoundHint::Compute),
+        _ => None,
+    }
+}
+
 /// One group of cores all executing the same kernel.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct GroupSpec {
@@ -58,6 +109,8 @@ pub struct GroupSpec {
     /// integer so mixes stay `Eq`/hashable; use
     /// [`GroupSpec::remote_frac`] for the `f64` value.
     pub remote_ppm: u32,
+    /// Boundedness override (`@mem`/`@l3`/`@comp` suffix; `Auto` = none).
+    pub bound: BoundHint,
 }
 
 impl GroupSpec {
@@ -97,7 +150,26 @@ impl Mix {
 
     /// Add a kernel group with an explicit topology placement.
     pub fn with_on(mut self, kernel: KernelId, cores: usize, place: GroupPlacement) -> Self {
-        self.groups.push(GroupSpec { kernel, cores, place, remote_ppm: 0 });
+        self.groups.push(GroupSpec {
+            kernel,
+            cores,
+            place,
+            remote_ppm: 0,
+            bound: BoundHint::Auto,
+        });
+        self
+    }
+
+    /// Add a kernel group with a placement and an explicit boundedness
+    /// override (the `@l3`/`@comp`/`@mem` DSL suffixes as a builder).
+    pub fn with_bound_on(
+        mut self,
+        kernel: KernelId,
+        cores: usize,
+        place: GroupPlacement,
+        bound: BoundHint,
+    ) -> Self {
+        self.groups.push(GroupSpec { kernel, cores, place, remote_ppm: 0, bound });
         self
     }
 
@@ -120,7 +192,7 @@ impl Mix {
             "remote fraction {remote_frac} outside [0, 1]"
         );
         let remote_ppm = remote_ppm_of(remote_frac);
-        self.groups.push(GroupSpec { kernel, cores, place, remote_ppm });
+        self.groups.push(GroupSpec { kernel, cores, place, remote_ppm, bound: BoundHint::Auto });
         self
     }
 
@@ -182,6 +254,33 @@ impl Mix {
         ks
     }
 
+    /// Check the bound-override constraints against a machine's shared-L3
+    /// capacity: `@l3` groups need a modeled L3 and cannot also send
+    /// remote traffic (an L3-resident working set does not cross sockets).
+    pub fn validate_bounds(&self, l3_bw_gbs: f64) -> Result<()> {
+        for g in &self.groups {
+            if g.bound == BoundHint::L3 {
+                if l3_bw_gbs <= 0.0 {
+                    return Err(Error::InvalidPlan(format!(
+                        "mix '{}': group '{}' is forced @l3 but the machine models no \
+                         shared-L3 bandwidth (l3_bw_gbs = 0)",
+                        self.label(),
+                        g.kernel.key()
+                    )));
+                }
+                if g.remote_ppm > 0 {
+                    return Err(Error::InvalidPlan(format!(
+                        "mix '{}': group '{}' is forced @l3 and cannot also carry a \
+                         remote-access fraction",
+                        self.label(),
+                        g.kernel.key()
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Validate the mix against a machine's contention domain.
     pub fn validate(&self, m: &Machine) -> Result<()> {
         if self.active_cores() == 0 {
@@ -190,6 +289,7 @@ impl Mix {
                 self.label()
             )));
         }
+        self.validate_bounds(m.l3_bw_gbs)?;
         if self.has_remote() {
             return Err(Error::InvalidPlan(format!(
                 "mix '{}' carries remote-access fractions, which need a multi-domain topology",
@@ -208,8 +308,8 @@ impl Mix {
         Ok(())
     }
 
-    /// Canonical text form: `kernel:cores[@place][%rF]` joined by `+`,
-    /// idle last.
+    /// Canonical text form: `kernel:cores[@place][@bound][%rF]` joined by
+    /// `+`, idle last.
     pub fn label(&self) -> String {
         let mut parts: Vec<String> = self
             .groups
@@ -220,7 +320,14 @@ impl Mix {
                 } else {
                     String::new()
                 };
-                format!("{}:{}{}{}", g.kernel.key(), g.cores, g.place.suffix(), remote)
+                format!(
+                    "{}:{}{}{}{}",
+                    g.kernel.key(),
+                    g.cores,
+                    g.place.suffix(),
+                    g.bound.suffix(),
+                    remote
+                )
             })
             .collect();
         if self.idle_cores > 0 {
@@ -279,21 +386,38 @@ impl Mix {
             if cores == 0 {
                 return Err(err(count_pos, "positive core count", "0"));
             }
-            let place = match place_raw {
-                None => GroupPlacement::Auto,
-                Some(p) => {
-                    let ppos = tstart
-                        + name_raw.len()
-                        + 1
-                        + count_raw.len()
-                        + 1
-                        + (p.len() - p.trim_start().len());
-                    parse_group_placement(p.trim())
-                        .ok_or_else(|| {
-                            err(ppos, "placement 'dN', 'scatter' or 'compact'", p.trim())
-                        })?
+            // The `@` suffix chain: at most one placement and at most one
+            // bound override, in either order (`dcopy:4@d0@l3`,
+            // `fma:4@comp@scatter`). `@compact` is a placement, `@comp` a
+            // bound — exact spellings disambiguate.
+            let mut place = GroupPlacement::Auto;
+            let mut bound = BoundHint::Auto;
+            if let Some(chain) = place_raw {
+                let mut spos = tstart + name_raw.len() + 1 + count_raw.len() + 1;
+                for tok in chain.split('@') {
+                    let tpos = spos + (tok.len() - tok.trim_start().len());
+                    spos += tok.len() + 1;
+                    let t = tok.trim();
+                    if let Some(b) = parse_bound_hint(t) {
+                        if bound != BoundHint::Auto {
+                            return Err(err(tpos, "at most one bound override per group", t));
+                        }
+                        bound = b;
+                    } else if let Some(p) = parse_group_placement(t) {
+                        if place != GroupPlacement::Auto {
+                            return Err(err(tpos, "at most one placement per group", t));
+                        }
+                        place = p;
+                    } else {
+                        return Err(err(
+                            tpos,
+                            "placement 'dN', 'scatter' or 'compact', \
+                             or bound 'mem', 'l3' or 'comp'",
+                            t,
+                        ));
+                    }
                 }
-            };
+            }
             let remote_ppm = match remote_raw {
                 None => 0,
                 Some(r) => {
@@ -325,6 +449,13 @@ impl Mix {
                         term,
                     ));
                 }
+                if bound != BoundHint::Auto {
+                    return Err(err(
+                        tstart,
+                        "no bound override on idle cores (they do not contend)",
+                        term,
+                    ));
+                }
                 if remote_ppm > 0 {
                     return Err(err(
                         tstart,
@@ -337,7 +468,9 @@ impl Mix {
                 let kernel = KernelId::parse(name)
                     .map_err(|_| err(tstart, "kernel name or 'idle'", name))?;
                 mix = mix.with_on(kernel, cores, place);
-                mix.groups.last_mut().expect("group just pushed").remote_ppm = remote_ppm;
+                let g = mix.groups.last_mut().expect("group just pushed");
+                g.remote_ppm = remote_ppm;
+                g.bound = bound;
             }
         }
         if mix.groups.is_empty() && mix.idle_cores == 0 {
@@ -348,8 +481,10 @@ impl Mix {
 
     /// Validate the mix against a topology under a placement policy:
     /// active cores present, every `@dN` pin in range, every group and the
-    /// idle cores placeable (all checked by [`Placement::split`]).
+    /// idle cores placeable (all checked by [`Placement::split`]), and the
+    /// bound-override constraints against the base machine.
     pub fn validate_on(&self, topo: &Topology, placement: Placement) -> Result<()> {
+        self.validate_bounds(topo.base.l3_bw_gbs)?;
         placement.split(topo, self).map(|_| ())
     }
 }
@@ -587,6 +722,79 @@ mod tests {
     }
 
     #[test]
+    fn bound_suffixes_roundtrip() {
+        // `@l3`/`@comp`/`@mem` parse in either order around a placement and
+        // round-trip through the canonical label (place before bound).
+        let mix = Mix::parse("jacobil3-v1:4@d0@l3+ddot1:2@comp+dcopy:4@mem+stream:4+idle:2")
+            .unwrap();
+        assert_eq!(mix.groups[0].bound, BoundHint::L3);
+        assert_eq!(mix.groups[0].place, GroupPlacement::Domain(0));
+        assert_eq!(mix.groups[1].bound, BoundHint::Compute);
+        assert_eq!(mix.groups[2].bound, BoundHint::Mem);
+        assert_eq!(mix.groups[3].bound, BoundHint::Auto);
+        assert_eq!(
+            mix.label(),
+            "jacobil3-v1:4@d0@l3+ddot1:2@comp+dcopy:4@mem+stream:4+idle:2"
+        );
+        assert_eq!(Mix::parse(&mix.label()).unwrap(), mix);
+        // Bound before placement and the long 'compute' spelling normalize.
+        let flipped = Mix::parse("jacobil3-v1:4@l3@d0+ddot1:2@COMPUTE").unwrap();
+        assert_eq!(flipped.groups[0].bound, BoundHint::L3);
+        assert_eq!(flipped.groups[0].place, GroupPlacement::Domain(0));
+        assert_eq!(flipped.groups[1].bound, BoundHint::Compute);
+        assert_eq!(flipped.label(), "jacobil3-v1:4@d0@l3+ddot1:2@comp");
+        // `@compact` stays a placement, not a truncated `@compute`.
+        let compact = Mix::parse("dcopy:4@compact").unwrap();
+        assert_eq!(compact.groups[0].place, GroupPlacement::Compact);
+        assert_eq!(compact.groups[0].bound, BoundHint::Auto);
+        // Builder equivalence.
+        let built = Mix::new()
+            .with_bound_on(KernelId::JacobiV1L3, 4, GroupPlacement::Domain(0), BoundHint::L3)
+            .with_bound_on(KernelId::Ddot1, 2, GroupPlacement::Auto, BoundHint::Compute);
+        assert_eq!(built, flipped);
+    }
+
+    /// Malformed or contradictory `@bound` suffixes surface as structured
+    /// [`Error::MixParse`] with byte-accurate positions.
+    #[test]
+    fn bound_parse_errors_are_structured() {
+        let case = |spec: &str, want_pos: usize, want_expected: &str| {
+            match Mix::parse(spec).unwrap_err() {
+                Error::MixParse { spec: s, pos, expected, .. } => {
+                    assert_eq!(s, spec, "spec echoed");
+                    assert_eq!(pos, want_pos, "position in '{spec}'");
+                    assert!(
+                        expected.contains(want_expected),
+                        "'{spec}': expected token '{expected}' should mention '{want_expected}'"
+                    );
+                }
+                other => panic!("'{spec}': wanted MixParse, got {other}"),
+            }
+        };
+        // Unknown suffix token: the message now names both token classes.
+        case("dcopy:4@l4", 8, "bound 'mem', 'l3' or 'comp'");
+        // Duplicate bound, duplicate placement: position of the SECOND token.
+        case("dcopy:4@l3@comp", 11, "at most one bound override");
+        case("dcopy:4@d0@d1", 11, "at most one placement");
+        case("dcopy:4@d0@l3@mem", 14, "at most one bound override");
+        // Idle cores take no bound override.
+        case("idle:2@l3", 0, "no bound override on idle cores");
+        // Validation: @l3 needs a machine with l3_bw_gbs > 0, and excludes %r.
+        let mut m = machine(MachineId::Rome);
+        let l3mix = Mix::parse("jacobil3-v1:4@l3+dcopy:4").unwrap();
+        l3mix.validate(&m).unwrap();
+        m.l3_bw_gbs = 0.0;
+        let e = l3mix.validate(&m).unwrap_err().to_string();
+        assert!(e.contains("l3_bw_gbs"), "{e}");
+        let e2 = Mix::parse("jacobil3-v1:4@l3%r0.25")
+            .unwrap()
+            .validate_bounds(120.0)
+            .unwrap_err()
+            .to_string();
+        assert!(e2.contains("remote"), "{e2}");
+    }
+
+    #[test]
     fn default_remote_fills_only_unset_groups() {
         let mix = Mix::parse("dcopy:4%r0.5+ddot2:4+idle:2")
             .unwrap()
@@ -679,7 +887,8 @@ mod tests {
                 kernel: KernelId::Dcopy,
                 cores: 6,
                 place: GroupPlacement::Auto,
-                remote_ppm: 0
+                remote_ppm: 0,
+                bound: BoundHint::Auto
             }
         );
         assert_eq!(
@@ -688,7 +897,8 @@ mod tests {
                 kernel: KernelId::Ddot2,
                 cores: 4,
                 place: GroupPlacement::Auto,
-                remote_ppm: 0
+                remote_ppm: 0,
+                bound: BoundHint::Auto
             }
         );
         assert_eq!(mix.idle_cores, 0);

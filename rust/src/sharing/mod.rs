@@ -48,7 +48,7 @@ pub use multigroup::{
     share_weighted_capped, GroupShare, GroupShareEntry, WeightedGroup,
 };
 pub use remote::{
-    portion_routes, share_remote, InterfaceShare, Portion, RemoteGroup, RemoteRateModel,
-    RemoteShare, TopoShape,
+    portion_routes, share_remote, GroupKind, InterfaceShare, Portion, RemoteGroup,
+    RemoteRateModel, RemoteShare, TopoShape,
 };
 pub use share_cache::{ShareCache, ShareCacheStats, MAX_GROUP_CORES, MAX_SLOTS};

@@ -49,7 +49,7 @@
 //! # Examples
 //!
 //! ```
-//! use membw::sharing::{share_remote, RemoteGroup, TopoShape};
+//! use membw::sharing::{share_remote, GroupKind, RemoteGroup, TopoShape};
 //!
 //! // Two sockets x one domain, 10 GB/s per link direction.
 //! let shape = TopoShape {
@@ -57,9 +57,17 @@
 //!     bw_scale: vec![1.0, 1.0],
 //!     link_bw_gbs: 10.0,
 //!     link_bw_rev_gbs: 10.0,
+//!     l3_bw_gbs: 0.0,
 //! };
 //! // 8 cores on domain 0 sending a quarter of their lines to domain 1.
-//! let groups = [RemoteGroup { home: 0, n: 8, f: 0.3, bs_gbs: 60.0, remote_frac: 0.25 }];
+//! let groups = [RemoteGroup {
+//!     home: 0,
+//!     n: 8,
+//!     f: 0.3,
+//!     bs_gbs: 60.0,
+//!     remote_frac: 0.25,
+//!     kind: GroupKind::Mem,
+//! }];
 //! let share = share_remote(&shape, &groups).unwrap();
 //! // The remote quarter crosses the s0->s1 direction of the duplex link...
 //! assert_eq!(shape.links(), vec![(0, 1), (1, 0)]);
@@ -92,6 +100,12 @@ pub struct TopoShape {
     /// index), GB/s. Equal to [`TopoShape::link_bw_gbs`] on symmetric
     /// duplex machines (the common case, and the loader default).
     pub link_bw_rev_gbs: f64,
+    /// Aggregate bandwidth of one socket's shared-L3 cache, GB/s (0 = L3
+    /// not modeled as a contention interface; L3-resident groups are then
+    /// rejected). Each socket contributes one shared-L3 interface node,
+    /// fixed-capacity like the links (the per-domain `bw_scale` does NOT
+    /// apply — it models memory-side throttling).
+    pub l3_bw_gbs: f64,
 }
 
 impl TopoShape {
@@ -179,6 +193,43 @@ pub fn portion_routes(
     out
 }
 
+/// Where a group's working set is bound — which shared interfaces its
+/// line stream actually contends on.
+///
+/// The default ([`GroupKind::Mem`]) is the paper's assumption: every
+/// kernel is DRAM-bound and the memory controllers (plus links) are the
+/// only shared resources. The two other kinds wire the in-tree cache
+/// topology layers (`kernels::layer_condition`, `ecm::application`,
+/// `ecm::scaling`) into the sharing network; see `docs/MODEL.md`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum GroupKind {
+    /// DRAM-bound: all portions contend on memory interfaces (and links).
+    Mem,
+    /// L3-resident (the working set hits in L2/L3, e.g. a stencil whose
+    /// layer condition holds at L3): ALL its L2-miss lines contend on the
+    /// home socket's shared-L3 interface with the L3-level
+    /// characterization below, and its DRAM continuation (`f · bs_gbs`,
+    /// when nonzero) contends on the home memory interface in tandem —
+    /// the slower stage gates the stream. Its per-core rates are reported
+    /// at the L3 (L2-miss) level.
+    L3 {
+        /// L2↔L3 transfer-time fraction of the kernel, `t_L2L3 / t_ECM`.
+        f_l3: f64,
+        /// Per-core saturated L2↔L3 bandwidth, GB/s (`l2l3_bpc · freq`).
+        bs_l3_gbs: f64,
+    },
+    /// Compute-bound (left of the roofline knee, `n · f < 1`): runs at its
+    /// core-bound rate `f · bs_gbs` and consumes zero bandwidth share on
+    /// every interface.
+    Compute,
+}
+
+impl Default for GroupKind {
+    fn default() -> Self {
+        GroupKind::Mem
+    }
+}
+
 /// One kernel group resident on a home domain, with a remote-access split.
 #[derive(Debug, Clone, Copy)]
 pub struct RemoteGroup {
@@ -194,6 +245,8 @@ pub struct RemoteGroup {
     /// Fraction of the group's cache-line stream that goes to remote
     /// domains (uniformly spread); in `[0, 1]`.
     pub remote_frac: f64,
+    /// Which shared interfaces the group contends on (see [`GroupKind`]).
+    pub kind: GroupKind,
 }
 
 /// One traffic portion of a group: the slice of its line stream aimed at
@@ -209,11 +262,27 @@ pub struct Portion {
     /// Index into [`TopoShape::links`] if the portion crosses sockets
     /// (None when intra-socket or when links are not modeled).
     pub link: Option<usize>,
+    /// Socket whose shared-L3 interface this portion contends on (only
+    /// the L3 portion of an [`GroupKind::L3`] group; None otherwise).
+    pub l3: Option<usize>,
+    /// Whether the portion queues on its target memory interface. True
+    /// for every portion of a memory-bound group and for the DRAM
+    /// continuation of an L3 group; false for an L3-only portion.
+    pub mem: bool,
+    /// Conversion from the group's reporting unit to this portion's
+    /// interface unit: a group's per-core rate cap is multiplied by this
+    /// before capping the portion's demand. 1.0 everywhere except the
+    /// DRAM continuation of an L3 group, where it is
+    /// `(f·bs) / (f_l3·bs_l3)` (DRAM GB/s per L3-level GB/s).
+    pub cap_scale: f64,
     /// Water-fill grant on the target memory interface, GB/s.
     pub mem_bw_gbs: f64,
     /// Water-fill grant on the link (only meaningful when `link` is set).
     pub link_grant_gbs: f64,
-    /// Effective grant: the minimum of the two, GB/s.
+    /// Water-fill grant on the shared-L3 interface (only meaningful when
+    /// `l3` is set).
+    pub l3_grant_gbs: f64,
+    /// Effective grant at the portion's own interface(s), GB/s.
     pub granted_bw_gbs: f64,
 }
 
@@ -242,6 +311,9 @@ pub struct RemoteShare {
     pub domains: Vec<InterfaceShare>,
     /// Per-link summaries, parallel to [`TopoShape::links`].
     pub links: Vec<InterfaceShare>,
+    /// Per-socket shared-L3 interface summaries (empty when
+    /// [`TopoShape::l3_bw_gbs`] is 0, i.e. L3 not modeled).
+    pub l3: Vec<InterfaceShare>,
     /// All traffic portions with their grants (reporting detail).
     pub portions: Vec<Portion>,
     /// Water-fill passes until convergence: 1 when no group was gated (the
@@ -276,8 +348,10 @@ pub(crate) const GATING_TOL: f64 = 1e-9;
 struct Fill {
     mem_grant: Vec<f64>,
     link_grant: Vec<f64>,
+    l3_grant: Vec<f64>,
     domains: Vec<InterfaceShare>,
     links: Vec<InterfaceShare>,
+    l3: Vec<InterfaceShare>,
 }
 
 /// Expand `groups` into traffic portions, validating homes and fractions.
@@ -309,6 +383,67 @@ pub(crate) fn expand_portions(
                 "remote accesses need at least two ccNUMA domains".into(),
             ));
         }
+        match g.kind {
+            // Compute-bound groups never queue on a shared interface.
+            GroupKind::Compute => continue,
+            GroupKind::L3 { f_l3, bs_l3_gbs } => {
+                if shape.l3_bw_gbs <= 0.0 {
+                    return Err(Error::InvalidPlan(format!(
+                        "group {gi} is L3-resident but the machine models no \
+                         shared-L3 bandwidth (l3_bw_gbs = 0)"
+                    )));
+                }
+                if g.remote_frac > 0.0 {
+                    return Err(Error::InvalidPlan(format!(
+                        "group {gi} is L3-resident and cannot spread remotely \
+                         (remote_frac {})",
+                        g.remote_frac
+                    )));
+                }
+                if !(f_l3 > 0.0) || !(bs_l3_gbs > 0.0) {
+                    return Err(Error::InvalidPlan(format!(
+                        "group {gi} has a non-positive L3 characterization \
+                         (f_l3 {f_l3}, bs_l3 {bs_l3_gbs})"
+                    )));
+                }
+                // ALL L2-miss lines contend on the home socket's L3 node...
+                let sock = shape.socket_of[g.home];
+                portions.push(Portion {
+                    group: gi,
+                    target: g.home,
+                    weight: 1.0,
+                    link: None,
+                    l3: Some(sock),
+                    mem: false,
+                    cap_scale: 1.0,
+                    mem_bw_gbs: 0.0,
+                    link_grant_gbs: 0.0,
+                    l3_grant_gbs: 0.0,
+                    granted_bw_gbs: 0.0,
+                });
+                // ...and the DRAM continuation (if any) on the home memory
+                // interface, in tandem: both portions carry weight 1.0 and
+                // the lockstep min over them gates the stream. cap_scale
+                // converts the group's L3-level rate cap to DRAM units.
+                if g.f * g.bs_gbs > 0.0 {
+                    portions.push(Portion {
+                        group: gi,
+                        target: g.home,
+                        weight: 1.0,
+                        link: None,
+                        l3: None,
+                        mem: true,
+                        cap_scale: (g.f * g.bs_gbs) / (f_l3 * bs_l3_gbs),
+                        mem_bw_gbs: 0.0,
+                        link_grant_gbs: 0.0,
+                        l3_grant_gbs: 0.0,
+                        granted_bw_gbs: 0.0,
+                    });
+                }
+                continue;
+            }
+            GroupKind::Mem => {}
+        }
         for (target, link, weight) in
             portion_routes(&shape.socket_of, links, shape.link_bw_gbs > 0.0, g.home, g.remote_frac)
         {
@@ -317,8 +452,12 @@ pub(crate) fn expand_portions(
                 target,
                 weight,
                 link,
+                l3: None,
+                mem: true,
+                cap_scale: 1.0,
                 mem_bw_gbs: 0.0,
                 link_grant_gbs: 0.0,
+                l3_grant_gbs: 0.0,
                 granted_bw_gbs: 0.0,
             });
         }
@@ -360,7 +499,8 @@ pub(crate) fn fill_mem_iface(
         return InterfaceShare::default();
     }
     let b_mix: f64 = wg.iter().map(|g| g.n * g.bs_gbs).sum::<f64>() / n_tot;
-    let rc: Vec<f64> = idx.iter().map(|&p| caps[portions[p].group]).collect();
+    let rc: Vec<f64> =
+        idx.iter().map(|&p| caps[portions[p].group] * portions[p].cap_scale).collect();
     let share = share_weighted_capped(&wg, b_mix, &rc);
     for (k, &p) in idx.iter().enumerate() {
         mem_grant[p] = share.groups[k].group_bw_gbs;
@@ -402,13 +542,56 @@ pub(crate) fn fill_link_iface(
         })
         .collect();
     let capacity = shape.link_capacity_gbs(links[li]);
-    let rc: Vec<f64> = idx.iter().map(|&p| caps[portions[p].group]).collect();
+    let rc: Vec<f64> =
+        idx.iter().map(|&p| caps[portions[p].group] * portions[p].cap_scale).collect();
     let share = share_weighted_capped(&wg, capacity, &rc);
     for (k, &p) in idx.iter().enumerate() {
         link_grant[p] = share.groups[k].group_bw_gbs;
     }
     InterfaceShare {
         b_mix_gbs: capacity,
+        demand_gbs: wg.iter().map(|g| g.n * g.f * g.bs_gbs).sum(),
+        saturated: share.saturated,
+    }
+}
+
+/// Water-fill one socket's shared-L3 interface over the portions `idx`
+/// (all with `l3 == Some(s)`, in global portion-index order) at the
+/// fixed capacity [`TopoShape::l3_bw_gbs`]. An L3 portion's
+/// characterization is its group's L3-level `(f_l3, bs_l3)` pair, not its
+/// DRAM chars — the L3 node shares L2-miss bandwidth, not DRAM bandwidth.
+/// Shared with the delta evaluator like [`fill_mem_iface`].
+pub(crate) fn fill_l3_iface(
+    shape: &TopoShape,
+    groups: &[RemoteGroup],
+    portions: &[Portion],
+    idx: &[usize],
+    caps: &[f64],
+    l3_grant: &mut [f64],
+) -> InterfaceShare {
+    if idx.is_empty() {
+        return InterfaceShare::default();
+    }
+    let wg: Vec<WeightedGroup> = idx
+        .iter()
+        .map(|&p| {
+            let g = &groups[portions[p].group];
+            let (f_l3, bs_l3) = match g.kind {
+                GroupKind::L3 { f_l3, bs_l3_gbs } => (f_l3, bs_l3_gbs),
+                // expand_portions only routes L3 portions for L3 groups.
+                _ => unreachable!("L3 portion of a non-L3 group"),
+            };
+            WeightedGroup { n: g.n as f64 * portions[p].weight, f: f_l3, bs_gbs: bs_l3 }
+        })
+        .collect();
+    let rc: Vec<f64> =
+        idx.iter().map(|&p| caps[portions[p].group] * portions[p].cap_scale).collect();
+    let share = share_weighted_capped(&wg, shape.l3_bw_gbs, &rc);
+    for (k, &p) in idx.iter().enumerate() {
+        l3_grant[p] = share.groups[k].group_bw_gbs;
+    }
+    InterfaceShare {
+        b_mix_gbs: shape.l3_bw_gbs,
         demand_gbs: wg.iter().map(|g| g.n * g.f * g.bs_gbs).sum(),
         saturated: share.saturated,
     }
@@ -424,10 +607,12 @@ fn fill(
     let nd = shape.n_domains();
     let mut mem_grant = vec![0.0f64; portions.len()];
     let mut link_grant = vec![0.0f64; portions.len()];
+    let mut l3_grant = vec![0.0f64; portions.len()];
 
     let mut domains = vec![InterfaceShare::default(); nd];
     for (d, dom_share) in domains.iter_mut().enumerate() {
-        let idx: Vec<usize> = (0..portions.len()).filter(|&p| portions[p].target == d).collect();
+        let idx: Vec<usize> =
+            (0..portions.len()).filter(|&p| portions[p].target == d && portions[p].mem).collect();
         *dom_share = fill_mem_iface(shape, groups, portions, &idx, d, caps, &mut mem_grant);
     }
 
@@ -439,20 +624,56 @@ fn fill(
             fill_link_iface(shape, groups, portions, &idx, li, links, caps, &mut link_grant);
     }
 
-    Fill { mem_grant, link_grant, domains, links: link_shares }
+    let n_l3 = if shape.l3_bw_gbs > 0.0 { shape.n_sockets() } else { 0 };
+    let mut l3_shares = vec![InterfaceShare::default(); n_l3];
+    for (s, l3_share) in l3_shares.iter_mut().enumerate() {
+        let idx: Vec<usize> = (0..portions.len()).filter(|&p| portions[p].l3 == Some(s)).collect();
+        *l3_share = fill_l3_iface(shape, groups, portions, &idx, caps, &mut l3_grant);
+    }
+
+    Fill { mem_grant, link_grant, l3_grant, domains, links: link_shares, l3: l3_shares }
 }
 
-/// Lockstep rate of one group under a fill: `min_p grant_p / (n · w_p)`
-/// over its portions (a cross-socket portion is gated by the slower of its
-/// two interfaces). Takes raw grant slices so the optimizer's delta
-/// evaluator shares the exact arithmetic.
+/// The grant of portion `i` at its own interface(s): the L3 grant for an
+/// L3-only portion, the mem/link minimum for a cross-socket portion, the
+/// mem grant otherwise. One helper so [`lockstep_rate`], [`any_gated`]
+/// and the final reporting pass cannot disagree.
+pub(crate) fn portion_grant(
+    p: &Portion,
+    i: usize,
+    mem_grant: &[f64],
+    link_grant: &[f64],
+    l3_grant: &[f64],
+) -> f64 {
+    if p.l3.is_some() && !p.mem {
+        l3_grant[i]
+    } else {
+        match p.link {
+            Some(_) => mem_grant[i].min(link_grant[i]),
+            None => mem_grant[i],
+        }
+    }
+}
+
+/// Lockstep rate of one group under a fill:
+/// `min_p grant_p / (n · w_p) / cap_scale_p` over its portions, reported
+/// in the group's own unit — DRAM GB/s for memory-bound groups, L3-level
+/// (L2-miss) GB/s for L3 groups. A cross-socket portion is gated by the
+/// slower of its two interfaces; an L3 group by the slower of its L3 node
+/// and DRAM-continuation stages. Compute-bound groups have no portions
+/// and run at their core-bound rate `f · bs`. Takes raw grant slices so
+/// the optimizer's delta evaluator shares the exact arithmetic.
 pub(crate) fn lockstep_rate(
     groups: &[RemoteGroup],
     portions: &[Portion],
     mem_grant: &[f64],
     link_grant: &[f64],
+    l3_grant: &[f64],
     gi: usize,
 ) -> f64 {
+    if let GroupKind::Compute = groups[gi].kind {
+        return groups[gi].f * groups[gi].bs_gbs;
+    }
     let n = groups[gi].n as f64;
     if n == 0.0 {
         return 0.0;
@@ -462,11 +683,8 @@ pub(crate) fn lockstep_rate(
         if p.group != gi {
             continue;
         }
-        let grant = match p.link {
-            Some(_) => mem_grant[i].min(link_grant[i]),
-            None => mem_grant[i],
-        };
-        rate = rate.min(grant / (n * p.weight));
+        let grant = portion_grant(p, i, mem_grant, link_grant, l3_grant);
+        rate = rate.min(grant / (n * p.weight) / p.cap_scale);
     }
     if rate.is_finite() {
         rate
@@ -476,7 +694,7 @@ pub(crate) fn lockstep_rate(
 }
 
 fn group_rate(groups: &[RemoteGroup], portions: &[Portion], f: &Fill, gi: usize) -> f64 {
-    lockstep_rate(groups, portions, &f.mem_grant, &f.link_grant, gi)
+    lockstep_rate(groups, portions, &f.mem_grant, &f.link_grant, &f.l3_grant, gi)
 }
 
 /// Whether any group is gated by a slower portion under the pass-1 fill —
@@ -487,6 +705,7 @@ pub(crate) fn any_gated(
     portions: &[Portion],
     mem_grant: &[f64],
     link_grant: &[f64],
+    l3_grant: &[f64],
     rates: &[f64],
 ) -> bool {
     for (i, p) in portions.iter().enumerate() {
@@ -494,11 +713,8 @@ pub(crate) fn any_gated(
         if n == 0.0 {
             continue;
         }
-        let grant = match p.link {
-            Some(_) => mem_grant[i].min(link_grant[i]),
-            None => mem_grant[i],
-        };
-        if grant / (n * p.weight) > rates[p.group] * (1.0 + GATING_TOL) {
+        let grant = portion_grant(p, i, mem_grant, link_grant, l3_grant);
+        if grant / (n * p.weight) / p.cap_scale > rates[p.group] * (1.0 + GATING_TOL) {
             return true;
         }
     }
@@ -546,7 +762,8 @@ pub fn share_remote_with_cap(
 
     // 3. A group is gated when some portion of it could run faster than
     // its lockstep rate — that surplus grant is stranded capacity.
-    let gated = any_gated(groups, &portions, &first.mem_grant, &first.link_grant, &rates);
+    let gated =
+        any_gated(groups, &portions, &first.mem_grant, &first.link_grant, &first.l3_grant, &rates);
 
     let (per_core_gbs, final_fill, iterations, converged) = if !gated {
         // No stranded capacity: pass 1 is already the fixed point.
@@ -584,10 +801,14 @@ pub fn share_remote_with_cap(
     for (i, p) in portions.iter_mut().enumerate() {
         p.mem_bw_gbs = final_fill.mem_grant[i];
         p.link_grant_gbs = final_fill.link_grant[i];
-        p.granted_bw_gbs = match p.link {
-            Some(_) => p.mem_bw_gbs.min(p.link_grant_gbs),
-            None => p.mem_bw_gbs,
-        };
+        p.l3_grant_gbs = final_fill.l3_grant[i];
+        p.granted_bw_gbs = portion_grant(
+            p,
+            i,
+            &final_fill.mem_grant,
+            &final_fill.link_grant,
+            &final_fill.l3_grant,
+        );
     }
     let group_bw_gbs: Vec<f64> =
         per_core_gbs.iter().zip(groups).map(|(&r, g)| r * g.n as f64).collect();
@@ -597,6 +818,7 @@ pub fn share_remote_with_cap(
         group_bw_gbs,
         domains: final_fill.domains,
         links: final_fill.links,
+        l3: final_fill.l3,
         portions,
         iterations,
         converged,
@@ -621,6 +843,9 @@ pub struct RemoteRateModel {
     frac: Vec<f64>,
     /// `(f, b_s[GB/s])` per kernel slot (nominal, unscaled).
     chars: Vec<(f64, f64)>,
+    /// Cache-topology kind per kernel slot ([`GroupKind::Mem`] unless the
+    /// caller classified the slot otherwise).
+    kinds: Vec<GroupKind>,
     cache: HashMap<Vec<u16>, Vec<f64>>,
     hits: u64,
     misses: u64,
@@ -637,7 +862,23 @@ impl RemoteRateModel {
     /// all programming errors of the caller (the layout is validated at
     /// construction time in [`crate::topology::RankLayout::with_remote`]).
     pub fn new(shape: TopoShape, frac: Vec<f64>, chars: Vec<(f64, f64)>) -> Self {
+        let kinds = vec![GroupKind::Mem; chars.len()];
+        Self::new_with_kinds(shape, frac, chars, kinds)
+    }
+
+    /// [`RemoteRateModel::new`] with an explicit cache-topology kind per
+    /// kernel slot. An [`GroupKind::L3`] slot must only be populated on
+    /// domains with remote fraction 0 (L3-resident streams do not spread),
+    /// and needs [`TopoShape::l3_bw_gbs`] > 0 — both are enforced per
+    /// composition by [`share_remote`].
+    pub fn new_with_kinds(
+        shape: TopoShape,
+        frac: Vec<f64>,
+        chars: Vec<(f64, f64)>,
+        kinds: Vec<GroupKind>,
+    ) -> Self {
         assert_eq!(frac.len(), shape.n_domains(), "one remote fraction per domain");
+        assert_eq!(kinds.len(), chars.len(), "one kind per kernel slot");
         for &r in &frac {
             assert!(
                 r.is_finite() && (0.0..=1.0).contains(&r),
@@ -648,7 +889,7 @@ impl RemoteRateModel {
             shape.n_domains() >= 2 || frac.iter().all(|&r| r == 0.0),
             "remote accesses need at least two ccNUMA domains"
         );
-        RemoteRateModel { shape, frac, chars, cache: HashMap::new(), hits: 0, misses: 0 }
+        RemoteRateModel { shape, frac, chars, kinds, cache: HashMap::new(), hits: 0, misses: 0 }
     }
 
     /// Number of kernel slots.
@@ -661,6 +902,7 @@ impl RemoteRateModel {
         shape: &TopoShape,
         frac: &[f64],
         chars: &[(f64, f64)],
+        kinds: &[GroupKind],
         counts: &[u16],
     ) -> Vec<f64> {
         let nk = chars.len();
@@ -677,6 +919,7 @@ impl RemoteRateModel {
                         f,
                         bs_gbs: bs,
                         remote_frac: frac[d],
+                        kind: kinds[k],
                     });
                 }
             }
@@ -711,7 +954,7 @@ impl RemoteRateModel {
             if self.cache.len() >= MAX_CACHED_COMPOSITIONS {
                 self.cache.clear();
             }
-            let rates = Self::compute(&self.shape, &self.frac, &self.chars, counts);
+            let rates = Self::compute(&self.shape, &self.frac, &self.chars, &self.kinds, counts);
             self.cache.insert(counts.to_vec(), rates);
         }
         self.cache.get(counts).expect("present or just inserted").as_slice()
@@ -742,10 +985,11 @@ mod tests {
             bw_scale: vec![1.0, 1.0],
             link_bw_gbs: 2.0,
             link_bw_rev_gbs: 2.0,
+            l3_bw_gbs: 0.0,
         };
         let groups = [
-            RemoteGroup { home: 0, n: 4, f: 0.8, bs_gbs: 32.0, remote_frac: 0.5 },
-            RemoteGroup { home: 0, n: 4, f: 0.8, bs_gbs: 32.0, remote_frac: 0.0 },
+            RemoteGroup { home: 0, n: 4, f: 0.8, bs_gbs: 32.0, remote_frac: 0.5, kind: GroupKind::Mem },
+            RemoteGroup { home: 0, n: 4, f: 0.8, bs_gbs: 32.0, remote_frac: 0.0, kind: GroupKind::Mem },
         ];
         let share = share_remote(&shape, &groups).unwrap();
         // A is gated by the 2 GB/s link: 2 / (4 * 0.5) = 1 GB/s per core.
@@ -780,16 +1024,17 @@ mod tests {
             bw_scale: vec![1.0, 1.0],
             link_bw_gbs: 2.0,
             link_bw_rev_gbs: 2.0,
+            l3_bw_gbs: 0.0,
         };
         let groups = [
-            RemoteGroup { home: 0, n: 4, f: 0.8, bs_gbs: 32.0, remote_frac: 0.5 },
-            RemoteGroup { home: 0, n: 4, f: 0.8, bs_gbs: 32.0, remote_frac: 0.0 },
+            RemoteGroup { home: 0, n: 4, f: 0.8, bs_gbs: 32.0, remote_frac: 0.5, kind: GroupKind::Mem },
+            RemoteGroup { home: 0, n: 4, f: 0.8, bs_gbs: 32.0, remote_frac: 0.0, kind: GroupKind::Mem },
         ];
         let capped = share_remote_with_cap(&shape, &groups, 1).unwrap();
         assert!(!capped.converged, "one sweep from infinite caps cannot settle");
         assert_eq!(capped.iterations, 2, "pass 1 plus the single allowed sweep");
         // The ungated branch never sweeps, so a cap of zero still converges.
-        let ungated = [RemoteGroup { home: 0, n: 4, f: 0.8, bs_gbs: 32.0, remote_frac: 1.0 }];
+        let ungated = [RemoteGroup { home: 0, n: 4, f: 0.8, bs_gbs: 32.0, remote_frac: 1.0, kind: GroupKind::Mem }];
         let one_pass = share_remote_with_cap(&shape, &ungated, 0).unwrap();
         assert!(one_pass.converged);
         assert_eq!(one_pass.iterations, 1);
@@ -805,10 +1050,11 @@ mod tests {
             bw_scale: vec![1.0, 1.0],
             link_bw_gbs: 2.0,
             link_bw_rev_gbs: 2.0,
+            l3_bw_gbs: 0.0,
         };
         let groups = [
-            RemoteGroup { home: 0, n: 4, f: 0.8, bs_gbs: 32.0, remote_frac: 1.0 },
-            RemoteGroup { home: 1, n: 4, f: 0.8, bs_gbs: 32.0, remote_frac: 1.0 },
+            RemoteGroup { home: 0, n: 4, f: 0.8, bs_gbs: 32.0, remote_frac: 1.0, kind: GroupKind::Mem },
+            RemoteGroup { home: 1, n: 4, f: 0.8, bs_gbs: 32.0, remote_frac: 1.0, kind: GroupKind::Mem },
         ];
         let share = share_remote(&shape, &groups).unwrap();
         // Single-portion groups are never gated: one pass.
@@ -826,6 +1072,7 @@ mod tests {
             bw_scale: vec![1.0; 4],
             link_bw_gbs: link_bw,
             link_bw_rev_gbs: link_bw,
+            l3_bw_gbs: 0.0,
         }
     }
 
@@ -837,6 +1084,7 @@ mod tests {
             bw_scale: vec![1.0; 4],
             link_bw_gbs: 1.0,
             link_bw_rev_gbs: 2.0,
+            l3_bw_gbs: 0.0,
         };
         let links = four.links();
         assert_eq!(links.len(), 12, "4 sockets -> 12 directed pairs");
@@ -854,9 +1102,9 @@ mod tests {
     fn zero_remote_fraction_matches_share_multigroup_bitwise() {
         let shape = two_socket_shape(40.0);
         let groups = [
-            RemoteGroup { home: 0, n: 4, f: 0.84, bs_gbs: 32.0, remote_frac: 0.0 },
-            RemoteGroup { home: 0, n: 4, f: 0.75, bs_gbs: 33.0, remote_frac: 0.0 },
-            RemoteGroup { home: 2, n: 6, f: 0.30, bs_gbs: 35.0, remote_frac: 0.0 },
+            RemoteGroup { home: 0, n: 4, f: 0.84, bs_gbs: 32.0, remote_frac: 0.0, kind: GroupKind::Mem },
+            RemoteGroup { home: 0, n: 4, f: 0.75, bs_gbs: 33.0, remote_frac: 0.0, kind: GroupKind::Mem },
+            RemoteGroup { home: 2, n: 6, f: 0.30, bs_gbs: 35.0, remote_frac: 0.0, kind: GroupKind::Mem },
         ];
         let remote = share_remote(&shape, &groups).unwrap();
         let d0 = share_multigroup(&[
@@ -886,20 +1134,21 @@ mod tests {
             bw_scale: vec![1.0, 1.0],
             link_bw_gbs: 0.0,
             link_bw_rev_gbs: 0.0,
+            l3_bw_gbs: 0.0,
         };
         let local = share_remote(
             &shape,
             &[
-                RemoteGroup { home: 0, n: 8, f: 0.8, bs_gbs: 32.0, remote_frac: 0.0 },
-                RemoteGroup { home: 1, n: 8, f: 0.8, bs_gbs: 32.0, remote_frac: 0.0 },
+                RemoteGroup { home: 0, n: 8, f: 0.8, bs_gbs: 32.0, remote_frac: 0.0, kind: GroupKind::Mem },
+                RemoteGroup { home: 1, n: 8, f: 0.8, bs_gbs: 32.0, remote_frac: 0.0, kind: GroupKind::Mem },
             ],
         )
         .unwrap();
         let spread = share_remote(
             &shape,
             &[
-                RemoteGroup { home: 0, n: 8, f: 0.8, bs_gbs: 32.0, remote_frac: 0.5 },
-                RemoteGroup { home: 1, n: 8, f: 0.8, bs_gbs: 32.0, remote_frac: 0.5 },
+                RemoteGroup { home: 0, n: 8, f: 0.8, bs_gbs: 32.0, remote_frac: 0.5, kind: GroupKind::Mem },
+                RemoteGroup { home: 1, n: 8, f: 0.8, bs_gbs: 32.0, remote_frac: 0.5, kind: GroupKind::Mem },
             ],
         )
         .unwrap();
@@ -918,10 +1167,11 @@ mod tests {
                 bw_scale: vec![1.0, 1.0],
                 link_bw_gbs: link_bw,
                 link_bw_rev_gbs: link_bw,
+                l3_bw_gbs: 0.0,
             };
             share_remote(
                 &shape,
-                &[RemoteGroup { home: 0, n: 8, f: 0.8, bs_gbs: 32.0, remote_frac: 0.5 }],
+                &[RemoteGroup { home: 0, n: 8, f: 0.8, bs_gbs: 32.0, remote_frac: 0.5, kind: GroupKind::Mem }],
             )
             .unwrap()
         };
@@ -948,8 +1198,9 @@ mod tests {
             bw_scale: vec![1.0],
             link_bw_gbs: 0.0,
             link_bw_rev_gbs: 0.0,
+            l3_bw_gbs: 0.0,
         };
-        let g = RemoteGroup { home: 0, n: 2, f: 0.5, bs_gbs: 50.0, remote_frac: 0.5 };
+        let g = RemoteGroup { home: 0, n: 2, f: 0.5, bs_gbs: 50.0, remote_frac: 0.5, kind: GroupKind::Mem };
         assert!(share_remote(&single, &[g]).is_err(), "remote needs >= 2 domains");
         let shape = two_socket_shape(10.0);
         let bad_frac = RemoteGroup { remote_frac: 1.5, ..g };

@@ -96,7 +96,7 @@ impl<'a> DesSimulator<'a> {
         let net = IfaceNet::single(m);
         let streams: Vec<NetStream> = workloads
             .iter()
-            .map(|&w| NetStream { workload: w, home: 0, remote_frac: 0.0 })
+            .map(|&w| NetStream { workload: w, home: 0, remote_frac: 0.0, l3_frac: 0.0 })
             .collect();
         let r = NetDesSimulator::new(&net, self.config.clone()).run(&streams);
         let total_gbs = r.per_stream_gbs.iter().sum();

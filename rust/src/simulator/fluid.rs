@@ -114,7 +114,7 @@ impl<'a> FluidSimulator<'a> {
         let net = IfaceNet::single(m);
         let streams: Vec<NetStream> = workloads
             .iter()
-            .map(|&w| NetStream { workload: w, home: 0, remote_frac: 0.0 })
+            .map(|&w| NetStream { workload: w, home: 0, remote_frac: 0.0, l3_frac: 0.0 })
             .collect();
         let r = NetFluidSimulator::new(&net, self.config.clone()).run(&streams);
         let total_gbs = r.per_stream_gbs.iter().sum();

@@ -83,6 +83,11 @@ pub struct IfaceNet {
     /// Capacity of each directed link, lines/cy, parallel to
     /// [`IfaceNet::links`] (positive whenever the link exists).
     pub link_caps: Vec<f64>,
+    /// Shared-L3 capacity per SOCKET, lines/cy. Empty when the cache
+    /// topology is not modeled ([`Machine::l3_bw_gbs`] = 0): L3-resident
+    /// streams are then rejected by [`route_streams`] and everything else
+    /// is bit-identical to the memory-only network.
+    pub l3_caps: Vec<f64>,
     /// Core clock, GHz (converts line rates to GB/s).
     pub freq_ghz: f64,
     /// Queueing calibration shared by every interface.
@@ -98,6 +103,7 @@ impl IfaceNet {
             socket_of: vec![0],
             links: Vec::new(),
             link_caps: Vec::new(),
+            l3_caps: Vec::new(),
             freq_ghz: m.freq_ghz,
             queue: m.queue,
         }
@@ -116,11 +122,19 @@ impl IfaceNet {
                 to_lines(if a < b { topo.base.link_bw_gbs } else { topo.base.link_bw_rev_gbs })
             })
             .collect();
+        let socket_of = topo.socket_of();
+        let n_sockets = socket_of.iter().copied().max().map_or(0, |s| s + 1);
+        let l3_caps = if topo.base.l3_bw_gbs > 0.0 {
+            vec![to_lines(topo.base.l3_bw_gbs); n_sockets]
+        } else {
+            Vec::new()
+        };
         IfaceNet {
             mem_capacity: topo.domains.iter().map(|d| d.machine.capacity_lines_per_cy()).collect(),
-            socket_of: topo.socket_of(),
+            socket_of,
             links,
             link_caps,
+            l3_caps,
             freq_ghz: topo.base.freq_ghz,
             queue: topo.base.queue,
         }
@@ -149,6 +163,13 @@ pub struct NetStream {
     pub home: usize,
     /// Remote-access fraction in `[0, 1]`.
     pub remote_frac: f64,
+    /// Fraction of the stream's lines that complete at the home socket's
+    /// shared L3 in `[0, 1]` (0 = purely DRAM-resident, the degenerate
+    /// memory-only case). When `> 0` the workload demand is the L3-level
+    /// line rate `d_l3` and the remainder `1 - l3_frac` is served in
+    /// tandem L3 → memory (the LC-at-L3 stencil shape). Requires
+    /// `remote_frac == 0` and a modeled L3 ([`IfaceNet::l3_caps`]).
+    pub l3_frac: f64,
 }
 
 /// One traffic portion of a stream: the slice aimed at one target domain,
@@ -163,6 +184,13 @@ pub struct NetPortion {
     pub link: Option<usize>,
     /// Fraction of the stream's lines in this portion (`> 0`).
     pub weight: f64,
+    /// Socket whose shared-L3 node serves this portion's FIRST stage
+    /// (L3-resident streams only; `None` for memory-only portions).
+    pub l3: Option<usize>,
+    /// Whether the portion has a memory-interface stage. `true` for every
+    /// memory-only portion; `false` for the L3-hit slice of an L3-resident
+    /// stream (its lines complete at the L3 node).
+    pub mem: bool,
 }
 
 /// Expand streams into routed portions through the *same* routing rule
@@ -182,6 +210,35 @@ pub fn route_streams(net: &IfaceNet, streams: &[NetStream]) -> Vec<NetPortion> {
         assert!(r.is_finite() && (0.0..=1.0).contains(&r), "remote fraction {r} outside [0, 1]");
         assert!(s.home < nd, "stream {si} homed on domain d{} of {nd}", s.home);
         assert!(r == 0.0 || nd >= 2, "remote accesses need at least two ccNUMA domains");
+        let l3f = s.l3_frac;
+        assert!(l3f.is_finite() && (0.0..=1.0).contains(&l3f), "L3 fraction {l3f} outside [0, 1]");
+        if l3f > 0.0 {
+            // L3-resident stream: an L3-hit slice completing at the home
+            // socket's shared-L3 node plus, for the miss slice, a tandem
+            // L3 → memory portion (same two-stage shape as link → memory).
+            assert!(r == 0.0, "L3-resident streams cannot have remote accesses");
+            assert!(!net.l3_caps.is_empty(), "L3-resident stream on a network without l3_bw_gbs");
+            let sock = net.socket_of[s.home];
+            portions.push(NetPortion {
+                stream: si,
+                target: s.home,
+                link: None,
+                weight: l3f,
+                l3: Some(sock),
+                mem: false,
+            });
+            if l3f < 1.0 {
+                portions.push(NetPortion {
+                    stream: si,
+                    target: s.home,
+                    link: None,
+                    weight: 1.0 - l3f,
+                    l3: Some(sock),
+                    mem: true,
+                });
+            }
+            continue;
+        }
         for (target, link, weight) in crate::sharing::portion_routes(
             &net.socket_of,
             &net.links,
@@ -189,7 +246,7 @@ pub fn route_streams(net: &IfaceNet, streams: &[NetStream]) -> Vec<NetPortion> {
             s.home,
             r,
         ) {
-            portions.push(NetPortion { stream: si, target, link, weight });
+            portions.push(NetPortion { stream: si, target, link, weight, l3: None, mem: true });
         }
     }
     portions
@@ -210,10 +267,16 @@ pub struct NetResult {
     /// Total *simulated* traffic per link, GB/s (lines that actually
     /// crossed, not offered demand).
     pub link_total_gbs: Vec<f64>,
+    /// Total drained L3-level traffic per socket's shared-L3 node, GB/s
+    /// (empty when L3 is not modeled).
+    pub l3_total_gbs: Vec<f64>,
     /// Mean utilization per memory interface (0..1).
     pub mem_utilization: Vec<f64>,
     /// Mean utilization per link (0..1).
     pub link_utilization: Vec<f64>,
+    /// Mean utilization per shared-L3 node (0..1; empty when L3 is not
+    /// modeled).
+    pub l3_utilization: Vec<f64>,
     /// Events processed (DES; 0 for the fluid engine).
     pub events: u64,
 }
@@ -226,6 +289,7 @@ impl NetResult {
         served_lines_per_cy: &[f64],
         mem_utilization: Vec<f64>,
         link_utilization: Vec<f64>,
+        l3_utilization: Vec<f64>,
         events: u64,
     ) -> Self {
         let per_portion_gbs: Vec<f64> =
@@ -242,10 +306,16 @@ impl NetResult {
         }
         let mut mem_total_gbs = vec![0.0f64; net.n_domains()];
         let mut link_total_gbs = vec![0.0f64; net.links.len()];
+        let mut l3_total_gbs = vec![0.0f64; net.l3_caps.len()];
         for (pi, p) in portions.iter().enumerate() {
-            mem_total_gbs[p.target] += per_portion_gbs[pi];
+            if p.mem {
+                mem_total_gbs[p.target] += per_portion_gbs[pi];
+            }
             if let Some(l) = p.link {
                 link_total_gbs[l] += per_portion_gbs[pi];
+            }
+            if let Some(s3) = p.l3 {
+                l3_total_gbs[s3] += per_portion_gbs[pi];
             }
         }
         NetResult {
@@ -254,8 +324,10 @@ impl NetResult {
             per_stream_gbs,
             mem_total_gbs,
             link_total_gbs,
+            l3_total_gbs,
             mem_utilization,
             link_utilization,
+            l3_utilization,
             events,
         }
     }
@@ -286,22 +358,34 @@ impl<'a> NetFluidSimulator<'a> {
         let by_stream: Vec<Vec<usize>> = (0..ns)
             .map(|s| (0..np).filter(|&i| portions[i].stream == s).collect())
             .collect();
+        let n3 = net.l3_caps.len();
         let ds: Vec<f64> = streams.iter().map(|s| s.workload.demand_lines_per_cy).collect();
         let cs: Vec<f64> = streams.iter().map(|s| s.workload.cost_factor).collect();
-        // ONE shared issue window per stream, sized from the stream's full
-        // demand — the lockstep-stream substrate (module docs).
+        let l3fs: Vec<f64> = streams.iter().map(|s| s.l3_frac).collect();
+        // ONE shared issue window per stream, sized from the stream's
+        // DRAM-equivalent demand — the lockstep-stream substrate (module
+        // docs). L3 hits complete at cache latency and do not need
+        // DRAM-latency-hiding slots, so the window scales with the miss
+        // slice `d · (1 - l3_frac)`; at `l3_frac = 0` the product
+        // `d · 1.0` is bitwise `d` and the window is the memory-only one.
         let win: Vec<f64> = (0..ns)
-            .map(|s| q.depth_floor + q.depth_beta * ds[s] * cs[s] * q.base_latency_cy)
+            .map(|s| {
+                q.depth_floor
+                    + q.depth_beta * (ds[s] * (1.0 - l3fs[s])) * cs[s] * q.base_latency_cy
+            })
             .collect();
 
         let mut occ = vec![0.0f64; np];
         let mut served = vec![0.0f64; np];
         let mut occ_mem = vec![0.0f64; nd];
         let mut occ_link = vec![0.0f64; nl];
+        let mut occ_l3 = vec![0.0f64; n3];
         let mut u_mem = vec![0.0f64; nd];
         let mut u_link = vec![0.0f64; nl];
+        let mut u_l3 = vec![0.0f64; n3];
         let mut lam_mem = vec![1.0f64; nd];
         let mut lam_link = vec![1.0f64; nl];
+        let mut lam_l3 = vec![1.0f64; n3];
 
         // Drain / issue / accumulate phases per cycle; with r = 0 every
         // stream has one portion of weight 1 and the arithmetic is
@@ -324,6 +408,13 @@ impl<'a> NetFluidSimulator<'a> {
                     1.0
                 };
             }
+            for s3 in 0..n3 {
+                lam_l3[s3] = if occ_l3[s3] > 1e-12 {
+                    (net.l3_caps[s3] / occ_l3[s3]).min(1.0)
+                } else {
+                    1.0
+                };
+            }
             if measuring {
                 for d in 0..nd {
                     u_mem[d] += (occ_mem[d] / net.mem_capacity[d]).min(1.0);
@@ -331,15 +422,24 @@ impl<'a> NetFluidSimulator<'a> {
                 for l in 0..nl {
                     u_link[l] += (occ_link[l] / net.link_caps[l]).min(1.0);
                 }
+                for s3 in 0..n3 {
+                    u_l3[s3] += (occ_l3[s3] / net.l3_caps[s3]).min(1.0);
+                }
             }
             occ_mem.fill(0.0);
             occ_link.fill(0.0);
-            // Drain every portion at its interface rate.
+            occ_l3.fill(0.0);
+            // Drain every portion at its interface rate; a tandem portion
+            // (link → mem, or L3 → mem) drains at the slower stage.
             for i in 0..np {
                 let p = &portions[i];
-                let lam = match p.link {
-                    Some(l) => lam_mem[p.target].min(lam_link[l]),
-                    None => lam_mem[p.target],
+                let lam = if let Some(s3) = p.l3 {
+                    if p.mem { lam_l3[s3].min(lam_mem[p.target]) } else { lam_l3[s3] }
+                } else {
+                    match p.link {
+                        Some(l) => lam_mem[p.target].min(lam_link[l]),
+                        None => lam_mem[p.target],
+                    }
                 };
                 let o_pre = occ[i];
                 if measuring {
@@ -360,9 +460,14 @@ impl<'a> NetFluidSimulator<'a> {
             // Accumulate interface occupancies for the next cycle's λ.
             for i in 0..np {
                 let p = &portions[i];
-                occ_mem[p.target] += occ[i] * cs[p.stream];
+                if p.mem {
+                    occ_mem[p.target] += occ[i] * cs[p.stream];
+                }
                 if let Some(l) = p.link {
                     occ_link[l] += occ[i]; // wire rate: link cost factor 1.0
+                }
+                if let Some(s3) = p.l3 {
+                    occ_l3[s3] += occ[i]; // L3 serves lines at wire rate too
                 }
             }
         }
@@ -376,6 +481,7 @@ impl<'a> NetFluidSimulator<'a> {
             &served_rate,
             u_mem.iter().map(|u| u / cycles).collect(),
             u_link.iter().map(|u| u / cycles).collect(),
+            u_l3.iter().map(|u| u / cycles).collect(),
             0,
         )
     }
@@ -405,6 +511,7 @@ impl TimeKey {
 const EV_ISSUE: u8 = 0;
 const EV_MEM_DONE: u8 = 1;
 const EV_LINK_DONE: u8 = 2;
+const EV_L3_DONE: u8 = 3;
 
 /// The multi-interface discrete-event simulator (see the module docs).
 pub struct NetDesSimulator<'a> {
@@ -439,15 +546,17 @@ impl<'a> NetDesSimulator<'a> {
         let net = self.net;
         let nd = net.n_domains();
         let nl = net.links.len();
+        let n3 = net.l3_caps.len();
         let portions = route_streams(net, streams);
         let np = portions.len();
 
         // Connected components of the interface graph, via union-find over
-        // interface ids (mem d → d, link l → nd + l). Interfaces are
-        // joined by link-crossing portions AND by the shared issue window
-        // of every multi-portion stream — the lockstep window couples all
+        // interface ids (mem d → d, link l → nd + l, shared-L3 s →
+        // nd + nl + s). Interfaces are joined by link-crossing portions,
+        // by L3-stage portions, AND by the shared issue window of every
+        // multi-portion stream — the lockstep window couples all
         // interfaces one stream touches.
-        let mut parent: Vec<usize> = (0..nd + nl).collect();
+        let mut parent: Vec<usize> = (0..nd + nl + n3).collect();
         fn find(parent: &mut [usize], mut x: usize) -> usize {
             while parent[x] != x {
                 parent[x] = parent[parent[x]];
@@ -465,6 +574,9 @@ impl<'a> NetDesSimulator<'a> {
             if let Some(l) = p.link {
                 union(&mut parent, p.target, nd + l);
             }
+            if let Some(s3) = p.l3 {
+                union(&mut parent, p.target, nd + nl + s3);
+            }
         }
         for s in 0..streams.len() {
             let mut first: Option<usize> = None;
@@ -475,7 +587,7 @@ impl<'a> NetDesSimulator<'a> {
                 }
             }
         }
-        let comp_of_iface: Vec<usize> = (0..nd + nl).map(|x| find(&mut parent, x)).collect();
+        let comp_of_iface: Vec<usize> = (0..nd + nl + n3).map(|x| find(&mut parent, x)).collect();
         let mut roots: Vec<usize> = portions.iter().map(|p| comp_of_iface[p.target]).collect();
         roots.sort_unstable();
         roots.dedup();
@@ -496,6 +608,7 @@ impl<'a> NetDesSimulator<'a> {
             let mut served = vec![0u64; np];
             let mut mem_busy_accum = vec![0.0f64; nd];
             let mut link_busy_accum = vec![0.0f64; nl];
+            let mut l3_busy_accum = vec![0.0f64; n3];
             let events = run_des_component(
                 net,
                 &self.config,
@@ -505,8 +618,9 @@ impl<'a> NetDesSimulator<'a> {
                 &mut served,
                 &mut mem_busy_accum,
                 &mut link_busy_accum,
+                &mut l3_busy_accum,
             );
-            (events, served, mem_busy_accum, link_busy_accum)
+            (events, served, mem_busy_accum, link_busy_accum, l3_busy_accum)
         };
         let results = if parallel {
             crate::parallel::par_map(&comps, run_one)
@@ -516,8 +630,9 @@ impl<'a> NetDesSimulator<'a> {
         let mut served = vec![0u64; np];
         let mut mem_busy_accum = vec![0.0f64; nd];
         let mut link_busy_accum = vec![0.0f64; nl];
+        let mut l3_busy_accum = vec![0.0f64; n3];
         let mut events: u64 = 0;
-        for (ev, s, mb, lb) in &results {
+        for (ev, s, mb, lb, l3b) in &results {
             events += ev;
             for (acc, v) in served.iter_mut().zip(s) {
                 *acc += v;
@@ -526,6 +641,9 @@ impl<'a> NetDesSimulator<'a> {
                 *acc += v;
             }
             for (acc, v) in link_busy_accum.iter_mut().zip(lb) {
+                *acc += v;
+            }
+            for (acc, v) in l3_busy_accum.iter_mut().zip(l3b) {
                 *acc += v;
             }
         }
@@ -539,6 +657,7 @@ impl<'a> NetDesSimulator<'a> {
             &served_rate,
             mem_busy_accum.iter().map(|b| (b / cycles).min(1.0)).collect(),
             link_busy_accum.iter().map(|b| (b / cycles).min(1.0)).collect(),
+            l3_busy_accum.iter().map(|b| (b / cycles).min(1.0)).collect(),
             events,
         )
     }
@@ -562,6 +681,7 @@ fn run_des_component(
     served: &mut [u64],
     mem_busy_accum: &mut [f64],
     link_busy_accum: &mut [f64],
+    l3_busy_accum: &mut [f64],
 ) -> u64 {
     let q = &net.queue;
     let mut rng = XorShift64::new(config.seed);
@@ -581,21 +701,30 @@ fn run_des_component(
         let d = streams[s].workload.demand_lines_per_cy;
         let c = streams[s].workload.cost_factor;
         gap[sj] = if d > 0.0 { 1.0 / d } else { f64::INFINITY };
-        window[sj] =
-            (q.depth_floor + q.depth_beta * d * c * q.base_latency_cy).round().max(1.0) as usize;
+        // Window sized from the DRAM-equivalent demand (see the fluid
+        // engine): bitwise the memory-only window at `l3_frac = 0`.
+        window[sj] = (q.depth_floor
+            + q.depth_beta * (d * (1.0 - streams[s].l3_frac)) * c * q.base_latency_cy)
+            .round()
+            .max(1.0) as usize;
     }
     // Per local portion: service costs and owning local stream.
     let mut mcost = vec![0.0f64; k];
     let mut lcost = vec![0.0f64; k];
+    let mut l3cost = vec![0.0f64; k];
     let mut stream_of = vec![0usize; k];
     let mut q_mem = vec![0usize; k];
     let mut q_link = vec![0usize; k];
+    let mut q_l3 = vec![0usize; k];
     for (j, &i) in local.iter().enumerate() {
         let p = &portions[i];
         let c = streams[p.stream].workload.cost_factor;
         mcost[j] = c / net.mem_capacity[p.target];
         if let Some(l) = p.link {
             lcost[j] = 1.0 / net.link_caps[l];
+        }
+        if let Some(s3) = p.l3 {
+            l3cost[j] = 1.0 / net.l3_caps[s3]; // L3 serves at wire rate
         }
         let sj = sl.binary_search(&p.stream).expect("portion's stream is local");
         stream_of[j] = sj;
@@ -608,14 +737,21 @@ fn run_des_component(
     // the lottery iterates them in this order).
     let mut mem_members: Vec<Vec<usize>> = vec![Vec::new(); net.n_domains()];
     let mut link_members: Vec<Vec<usize>> = vec![Vec::new(); net.links.len()];
+    let mut l3_members: Vec<Vec<usize>> = vec![Vec::new(); net.l3_caps.len()];
     for (j, &i) in local.iter().enumerate() {
-        mem_members[portions[i].target].push(j);
+        if portions[i].mem {
+            mem_members[portions[i].target].push(j);
+        }
         if let Some(l) = portions[i].link {
             link_members[l].push(j);
+        }
+        if let Some(s3) = portions[i].l3 {
+            l3_members[s3].push(j);
         }
     }
     let mut mem_busy = vec![false; net.n_domains()];
     let mut link_busy = vec![false; net.links.len()];
+    let mut l3_busy = vec![false; net.l3_caps.len()];
 
     let mut heap: BinaryHeap<Reverse<(TimeKey, usize, u8)>> = BinaryHeap::new();
     for (sj, g) in gap.iter().enumerate() {
@@ -692,34 +828,47 @@ fn run_des_component(
                         }
                         pick
                     };
-                    match portions[local[pick]].link {
-                        Some(l) => {
-                            q_link[pick] += 1;
-                            try_serve(
-                                t,
-                                &link_members[l],
-                                &mut q_link,
-                                &mut link_busy[l],
-                                &lcost,
-                                EV_LINK_DONE,
-                                &mut rng,
-                                &mut heap,
-                            );
-                        }
-                        None => {
-                            let tgt = portions[local[pick]].target;
-                            q_mem[pick] += 1;
-                            try_serve(
-                                t,
-                                &mem_members[tgt],
-                                &mut q_mem,
-                                &mut mem_busy[tgt],
-                                &mcost,
-                                EV_MEM_DONE,
-                                &mut rng,
-                                &mut heap,
-                            );
-                        }
+                    let pp = &portions[local[pick]];
+                    if let Some(l) = pp.link {
+                        q_link[pick] += 1;
+                        try_serve(
+                            t,
+                            &link_members[l],
+                            &mut q_link,
+                            &mut link_busy[l],
+                            &lcost,
+                            EV_LINK_DONE,
+                            &mut rng,
+                            &mut heap,
+                        );
+                    } else if let Some(s3) = pp.l3 {
+                        // L3-resident line: the shared-L3 node is the
+                        // FIRST service stage (tandem L3 → mem for the
+                        // miss slice, completion at L3 for the hit slice).
+                        q_l3[pick] += 1;
+                        try_serve(
+                            t,
+                            &l3_members[s3],
+                            &mut q_l3,
+                            &mut l3_busy[s3],
+                            &l3cost,
+                            EV_L3_DONE,
+                            &mut rng,
+                            &mut heap,
+                        );
+                    } else {
+                        let tgt = pp.target;
+                        q_mem[pick] += 1;
+                        try_serve(
+                            t,
+                            &mem_members[tgt],
+                            &mut q_mem,
+                            &mut mem_busy[tgt],
+                            &mcost,
+                            EV_MEM_DONE,
+                            &mut rng,
+                            &mut heap,
+                        );
                     }
                 } else {
                     blocked[j] = true;
@@ -753,6 +902,51 @@ fn run_des_component(
                     &mut link_busy[l],
                     &lcost,
                     EV_LINK_DONE,
+                    &mut rng,
+                    &mut heap,
+                );
+            }
+            EV_L3_DONE => {
+                // `j` is a component-local PORTION index: the line finished
+                // shared-L3 service. A miss-slice (tandem) line queues at
+                // the home memory interface; a hit-slice line is fully
+                // served and leaves its stream's window.
+                let p = &portions[local[j]];
+                let s3 = p.l3.expect("L3 completion on an L3 portion");
+                if t >= config.warmup_cycles {
+                    l3_busy_accum[s3] += l3cost[j];
+                }
+                l3_busy[s3] = false;
+                if p.mem {
+                    q_mem[j] += 1;
+                    try_serve(
+                        t,
+                        &mem_members[p.target],
+                        &mut q_mem,
+                        &mut mem_busy[p.target],
+                        &mcost,
+                        EV_MEM_DONE,
+                        &mut rng,
+                        &mut heap,
+                    );
+                } else {
+                    let sj = stream_of[j];
+                    outstanding[sj] -= 1;
+                    if t >= config.warmup_cycles {
+                        served[local[j]] += 1;
+                    }
+                    if blocked[sj] {
+                        blocked[sj] = false;
+                        heap.push(Reverse((TimeKey::of(t), sj, EV_ISSUE)));
+                    }
+                }
+                try_serve(
+                    t,
+                    &l3_members[s3],
+                    &mut q_l3,
+                    &mut l3_busy[s3],
+                    &l3cost,
+                    EV_L3_DONE,
                     &mut rng,
                     &mut heap,
                 );
@@ -809,6 +1003,7 @@ mod tests {
             workload: CoreWorkload::from_kernel(&kernel(k), m, 0),
             home,
             remote_frac: r,
+            l3_frac: 0.0,
         }
     }
 
@@ -882,6 +1077,7 @@ mod tests {
                 f: chars.f,
                 bs_gbs: chars.bs_gbs,
                 remote_frac: 0.5,
+                kind: crate::sharing::GroupKind::Mem,
             })
             .collect();
         let model = share_remote(&topo.shape(), &groups).unwrap();
@@ -956,7 +1152,8 @@ mod tests {
     fn idle_and_all_remote_streams_are_handled() {
         let (m, topo) = two_socket_rome();
         let net = IfaceNet::of_topology(&topo);
-        let idle = NetStream { workload: CoreWorkload::idle(), home: 0, remote_frac: 0.0 };
+        let idle =
+            NetStream { workload: CoreWorkload::idle(), home: 0, remote_frac: 0.0, l3_frac: 0.0 };
         let all_remote = stream(KernelId::Ddot2, &m, 0, 1.0);
         let r = NetFluidSimulator::new(&net, FluidConfig::default()).run(&[idle, all_remote]);
         assert_eq!(r.per_stream_gbs[0], 0.0, "idle streams drain nothing");

@@ -318,6 +318,12 @@ pub fn simulate_placed_mode(
                 bw_scale: layout.bw_scale[..dpn].to_vec(),
                 link_bw_gbs: layout.link_bw_gbs,
                 link_bw_rev_gbs: layout.link_bw_rev_gbs,
+                // Timeline programs characterize kernels at the memory
+                // level only (every slot is `GroupKind::Mem`, see
+                // `RemoteRateModel::new`), so no portion ever routes to a
+                // shared-L3 interface and the capacity is irrelevant; 0
+                // keeps the shape's degenerate fixed point bit-identical.
+                l3_bw_gbs: 0.0,
             },
             spec.frac[..dpn].to_vec(),
             chars.iter().map(|&(_, f, bs)| (f, bs)).collect(),

@@ -281,6 +281,7 @@ impl Topology {
             bw_scale: self.bw_scales(),
             link_bw_gbs: self.base.link_bw_gbs,
             link_bw_rev_gbs: self.base.link_bw_rev_gbs,
+            l3_bw_gbs: self.base.l3_bw_gbs,
         }
     }
 

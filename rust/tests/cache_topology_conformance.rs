@@ -1,0 +1,324 @@
+//! Cache-topology conformance — shared-L3 interfaces and compute-bound
+//! groups.
+//!
+//! The contention model historically knew one interface class per ccNUMA
+//! domain: the memory controller. This suite pins the cache-topology
+//! extension against the authoritative Python reference
+//! (`python/netfluid_mirror.py`, whose self-checks derive every number
+//! asserted here):
+//!
+//! 1. **degenerate bit-identity** — memory-bound-only traffic on a shape
+//!    WITH a configured shared-L3 node is bitwise the no-L3 answer at the
+//!    model layer and through the whole topology pipeline (this is what
+//!    lets the builtin machine rows carry `l3_bw_gbs` estimates without
+//!    perturbing any existing scenario);
+//! 2. **auto-classification** — every registry kernel classifies
+//!    memory-bound (the roofline knee `1/f` of the most compute-heavy
+//!    kernel still lies well inside a socket), so only an explicit
+//!    `@l3`/`@comp` suffix or `%r` changes routes;
+//! 3. **pure-L3 water-fill** — an L3-resident group fills the shared-L3
+//!    node exactly like a memory group fills a controller (mirror
+//!    `check_pure_l3`: 15.0 GB/s/core);
+//! 4. **compute-bound zero share** — a compute-bound group caps at `f·b_s`
+//!    and its memory-bound peers are bitwise unchanged (mirror
+//!    `check_compute_zero_share`);
+//! 5. **the LC-at-L3 mixed scenario end to end** — a jacobi stencil whose
+//!    layer condition holds at L3 shares a Rome domain with streaming
+//!    dcopy under a 120 GB/s shared L3; both interfaces saturate and the
+//!    fluid/DES engines stay within the paper's 8% ceiling of the fixed
+//!    point (mirror `l3_mixed_example`: worst 4.55%).
+
+use membw::config::{machine, MachineId};
+use membw::error::Error;
+use membw::kernels::kernel;
+use membw::scenario::{run_mixes, run_mixes_on, MeasureEngine, Mix};
+use membw::sharing::{share_remote, GroupKind, RemoteGroup, TopoShape};
+use membw::topology::{Placement, Topology};
+
+/// Rome full-socket dcopy characterization, exactly as
+/// `python/netfluid_mirror.py::ecm_workload` computes it.
+const DCOPY_F: f64 = 0.8357432872482309;
+const DCOPY_BS: f64 = 32.843963205239454;
+
+/// One monolithic domain, optionally with a shared-L3 node.
+fn one_domain(l3_gbs: f64) -> TopoShape {
+    TopoShape {
+        socket_of: vec![0],
+        bw_scale: vec![1.0],
+        link_bw_gbs: 0.0,
+        link_bw_rev_gbs: 0.0,
+        l3_bw_gbs: l3_gbs,
+    }
+}
+
+/// Two monolithic sockets joined by a symmetric-duplex link.
+fn two_socket(link_gbs: f64, l3_gbs: f64) -> TopoShape {
+    TopoShape {
+        socket_of: vec![0, 1],
+        bw_scale: vec![1.0, 1.0],
+        link_bw_gbs: link_gbs,
+        link_bw_rev_gbs: link_gbs,
+        l3_bw_gbs: l3_gbs,
+    }
+}
+
+fn mem(home: usize, n: usize, f: f64, bs: f64, r: f64) -> RemoteGroup {
+    RemoteGroup { home, n, f, bs_gbs: bs, remote_frac: r, kind: GroupKind::Mem }
+}
+
+/// Mirror `check_l3_degenerate` (model layer): memory-bound groups —
+/// local and remote — produce bitwise identical rates, grants, and
+/// iteration counts whether or not the shape models a shared L3.
+#[test]
+fn mem_only_model_is_bit_identical_with_an_l3_node() {
+    let groups = [
+        mem(0, 4, DCOPY_F, DCOPY_BS, 0.25),
+        mem(1, 3, 0.8299900114233997, 34.23, 0.0),
+    ];
+    let without = share_remote(&two_socket(64.0, 0.0), &groups).unwrap();
+    let with = share_remote(&two_socket(64.0, 120.0), &groups).unwrap();
+    assert_eq!(without.iterations, with.iterations);
+    for (a, b) in without.per_core_gbs.iter().zip(&with.per_core_gbs) {
+        assert_eq!(a.to_bits(), b.to_bits(), "model perturbed by an unused L3 node");
+    }
+    for (a, b) in without.portions.iter().zip(&with.portions) {
+        assert_eq!(a.mem_bw_gbs.to_bits(), b.mem_bw_gbs.to_bits());
+        assert_eq!((a.group, a.target, a.link, a.mem), (b.group, b.target, b.link, b.mem));
+        assert_eq!(a.l3, None);
+        assert_eq!(b.l3, None);
+    }
+    // The L3 interfaces exist on the second shape but hold no portions
+    // and grant nothing.
+    assert!(without.l3.is_empty());
+    assert_eq!(with.l3.len(), 2);
+    for iface in &with.l3 {
+        assert_eq!(iface.demand_gbs, 0.0);
+        assert!(!iface.saturated);
+    }
+}
+
+/// The whole topology pipeline — placement split, simulation, model,
+/// reporting — is bitwise invariant to the builtin `l3_bw_gbs` estimate
+/// for registry mixes, on both the per-domain path (all-local) and the
+/// multi-interface path (`%r`). This also pins auto-classification:
+/// every registry kernel is memory-bound on Rome, so no kernel silently
+/// reroutes to the L3 or compute class.
+#[test]
+fn registry_mixes_are_invariant_to_the_builtin_l3_estimate() {
+    let with = machine(MachineId::Rome);
+    assert!(with.l3_bw_gbs > 0.0, "builtin Rome should estimate its shared-L3 bandwidth");
+    let mut without = with.clone();
+    without.l3_bw_gbs = 0.0;
+
+    for mix_s in ["dcopy:8@d0+ddot2:8@d1+jacobil3-v1:8@d2+idle:8", "dcopy:16%r0.25+ddot2:16"] {
+        let mix = Mix::parse(mix_s).unwrap();
+        let a = run_mixes_on(
+            &Topology::socket(&with),
+            Placement::Compact,
+            &[mix.clone()],
+            &MeasureEngine::Fluid,
+        )
+        .unwrap();
+        let b = run_mixes_on(
+            &Topology::socket(&without),
+            Placement::Compact,
+            &[mix],
+            &MeasureEngine::Fluid,
+        )
+        .unwrap();
+        let (ca, cb) = (&a.cases[0], &b.cases[0]);
+        assert_eq!(ca.measured_total_gbs.to_bits(), cb.measured_total_gbs.to_bits(), "{mix_s}");
+        assert_eq!(ca.model_total_gbs.to_bits(), cb.model_total_gbs.to_bits(), "{mix_s}");
+        for (ga, gb) in ca.socket.iter().zip(&cb.socket) {
+            assert_eq!(ga.measured_per_core.to_bits(), gb.measured_per_core.to_bits(), "{mix_s}");
+            assert_eq!(ga.model_per_core.to_bits(), gb.model_per_core.to_bits(), "{mix_s}");
+        }
+        // No L3 records on either: memory-bound groups post no L3 portions.
+        assert!(ca.l3.is_empty(), "{mix_s}: spurious L3 record");
+        assert!(cb.l3.is_empty(), "{mix_s}");
+    }
+}
+
+/// Every registry kernel's roofline knee `1/f` lies inside a Rome socket
+/// (`f · cores >= 1`), so `Auto` never classifies a registry group as
+/// compute-bound — the arithmetic backstop of the bit-identity pin above.
+#[test]
+fn no_registry_kernel_is_compute_bound_on_builtin_machines() {
+    for id in [MachineId::Bdw1, MachineId::Bdw2, MachineId::Clx, MachineId::Rome] {
+        let m = machine(id);
+        for (kid, sig) in membw::kernels::all_kernels() {
+            let p = membw::ecm::predict(&sig, &m);
+            assert!(
+                p.f * m.cores as f64 >= 1.0,
+                "{:?} on {:?}: f = {} never saturates memory",
+                kid,
+                id,
+                p.f
+            );
+        }
+    }
+}
+
+/// Mirror `check_pure_l3`: a fully L3-resident group (no DRAM traffic at
+/// all) water-fills the shared-L3 node exactly like a memory group fills
+/// a controller — 8 cores demanding `f3·b_3 = 47` GB/s each against a
+/// 120 GB/s node split it fairly at 15.0 GB/s/core.
+#[test]
+fn pure_l3_group_water_fills_the_l3_node() {
+    let shape = one_domain(120.0);
+    let f3 = 0.625;
+    let bs3 = 32.0 * 2.35; // l2l3_bpc · freq on Rome = 75.2 GB/s
+    let groups = [RemoteGroup {
+        home: 0,
+        n: 8,
+        f: 0.0,
+        bs_gbs: 0.0,
+        remote_frac: 0.0,
+        kind: GroupKind::L3 { f_l3: f3, bs_l3_gbs: bs3 },
+    }];
+    let share = share_remote(&shape, &groups).unwrap();
+    let want = (f3 * bs3).min(120.0 / 8.0);
+    assert!(
+        (share.per_core_gbs[0] - want).abs() < 1e-12,
+        "pure-L3 rate {} != {want}",
+        share.per_core_gbs[0]
+    );
+    assert_eq!(share.iterations, 1);
+    assert_eq!(share.portions.len(), 1, "no DRAM tandem when f·b_s = 0");
+    assert_eq!(share.portions[0].l3, Some(0));
+    assert!(!share.portions[0].mem);
+    assert_eq!(share.l3.len(), 1);
+    assert!(share.l3[0].saturated, "8 × 47 GB/s of demand saturates 120 GB/s");
+    // The memory controller below is untouched.
+    assert_eq!(share.domains[0].demand_gbs, 0.0);
+}
+
+/// Mirror `check_compute_zero_share`: a compute-bound group caps at its
+/// core-bound rate `f·b_s` and consumes zero bandwidth share — its
+/// memory-bound peer is bitwise unchanged by the co-residency.
+#[test]
+fn compute_bound_group_takes_zero_bandwidth_share() {
+    let shape = one_domain(120.0);
+    let alone = share_remote(&shape, &[mem(0, 4, DCOPY_F, DCOPY_BS, 0.0)]).unwrap();
+    let peer = RemoteGroup {
+        home: 0,
+        n: 4,
+        f: 0.05,
+        bs_gbs: DCOPY_BS,
+        remote_frac: 0.0,
+        kind: GroupKind::Compute,
+    };
+    let both = share_remote(&shape, &[mem(0, 4, DCOPY_F, DCOPY_BS, 0.0), peer]).unwrap();
+    assert_eq!(
+        both.per_core_gbs[0].to_bits(),
+        alone.per_core_gbs[0].to_bits(),
+        "compute peer perturbed the memory-bound group"
+    );
+    assert_eq!(both.per_core_gbs[1].to_bits(), (0.05 * DCOPY_BS).to_bits());
+    assert!(both.portions.iter().all(|p| p.group == 0), "compute group expanded portions");
+    assert_eq!(both.iterations, 1);
+}
+
+/// THE LC-at-L3 conformance case, end to end through the scenario
+/// pipeline (mirror `l3_mixed_example`): `jacobil3-v1:4@l3 + dcopy:4` on
+/// one Rome domain with the shared L3 squeezed to 120 GB/s. The stencil
+/// contends on BOTH the L3 node (all 5 L2-miss lines per update) and the
+/// memory controller (its 3-line DRAM continuation, in tandem); dcopy
+/// contends on the controller only. Both interfaces saturate and both
+/// engines land within the paper's 8% ceiling (mirror: fluid worst
+/// 4.55%, DES worst 1.80%; model 6.842 / 4.105 GB/s/core).
+#[test]
+fn lc_at_l3_mixed_scenario_stays_within_the_paper_ceiling() {
+    let mut m = machine(MachineId::Rome);
+    m.l3_bw_gbs = 120.0;
+    let topo = Topology::single(&m);
+    let mix = Mix::parse("jacobil3-v1:4@l3+dcopy:4").unwrap();
+
+    for engine in [MeasureEngine::Fluid, MeasureEngine::Des] {
+        let rs = run_mixes_on(&topo, Placement::Compact, &[mix.clone()], &engine).unwrap();
+        let case = &rs.cases[0];
+        assert_eq!(case.remote_converged, Some(true));
+
+        // Model pins (mirror values; both sides are the same double
+        // arithmetic, so they agree far tighter than the print precision).
+        let stencil = &case.socket[0];
+        let dcopy = &case.socket[1];
+        assert!((stencil.model_per_core - 6.842).abs() < 5e-3, "{}", stencil.model_per_core);
+        assert!((dcopy.model_per_core - 4.105).abs() < 5e-3, "{}", dcopy.model_per_core);
+
+        // Simulation within the ceiling, per group.
+        for g in &case.socket {
+            assert!(
+                g.error() < 0.08,
+                "{:?}: simulated {} vs model {} ({:.1}%)",
+                g.kernel,
+                g.measured_per_core,
+                g.model_per_core,
+                g.error() * 100.0
+            );
+        }
+
+        // One saturated L3 record carrying only the stencil.
+        assert_eq!(case.l3.len(), 1);
+        let l3 = &case.l3[0];
+        assert_eq!(l3.socket, 0);
+        assert_eq!(l3.l3_bw_gbs, 120.0);
+        assert!(l3.saturated, "4 stencil cores demand > 120 GB/s of L3");
+        assert_eq!(l3.origins, vec![0]);
+        assert_eq!(l3.groups[0].n, 4);
+        let l3_err =
+            (l3.measured_total_gbs - l3.model_total_gbs).abs() / l3.model_total_gbs;
+        assert!(l3_err < 0.08, "L3 totals: {} vs {}", l3.measured_total_gbs, l3.model_total_gbs);
+    }
+}
+
+/// Classification guard rails: `@l3` needs a modeled L3, L3-resident
+/// reuse, and no `%r`; the flat single-machine pipeline rejects every
+/// non-memory-bound group with a pointer at the topology path.
+#[test]
+fn misclassified_groups_are_rejected_with_useful_errors() {
+    let rome = machine(MachineId::Rome);
+    let engine = MeasureEngine::Fluid;
+
+    // @l3 on a streaming kernel: every L2-miss line continues to DRAM,
+    // there is no L3-resident reuse to model.
+    let err = run_mixes_on(
+        &Topology::single(&rome),
+        Placement::Compact,
+        &[Mix::parse("dcopy:4@l3+ddot2:4").unwrap()],
+        &engine,
+    )
+    .unwrap_err();
+    assert!(matches!(err, Error::InvalidPlan(ref s) if s.contains("L3-resident")), "{err}");
+
+    // @l3 on a machine that does not model shared-L3 bandwidth.
+    let mut no_l3 = rome.clone();
+    no_l3.l3_bw_gbs = 0.0;
+    let err = run_mixes_on(
+        &Topology::single(&no_l3),
+        Placement::Compact,
+        &[Mix::parse("jacobil3-v1:4@l3+dcopy:4").unwrap()],
+        &engine,
+    )
+    .unwrap_err();
+    assert!(matches!(err, Error::InvalidPlan(ref s) if s.contains("l3_bw_gbs")), "{err}");
+
+    // @l3 combined with a remote fraction is contradictory: an
+    // L3-resident working set does not stream to another socket.
+    let err = run_mixes_on(
+        &Topology::socket(&rome),
+        Placement::Compact,
+        &[Mix::parse("jacobil3-v1:4@d0@l3%r0.25+dcopy:4@d1+idle:24").unwrap()],
+        &engine,
+    )
+    .unwrap_err();
+    assert!(matches!(err, Error::InvalidPlan(ref s) if s.contains("remote")), "{err}");
+
+    // The flat pipeline models memory contention only.
+    let err = run_mixes(&rome, &[Mix::parse("jacobil3-v1:4@l3+dcopy:4").unwrap()], &engine)
+        .unwrap_err();
+    assert!(matches!(err, Error::InvalidPlan(ref s) if s.contains("topology")), "{err}");
+    let err = run_mixes(&rome, &[Mix::parse("dcopy:4@comp+ddot2:4").unwrap()], &engine)
+        .unwrap_err();
+    assert!(matches!(err, Error::InvalidPlan(ref s) if s.contains("topology")), "{err}");
+}

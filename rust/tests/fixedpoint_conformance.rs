@@ -23,7 +23,7 @@ use membw::config::{machine, MachineId};
 use membw::kernels::{kernel, KernelId};
 use membw::sharing::{
     share_domains, share_multigroup, share_remote, share_weighted, share_weighted_capacity,
-    KernelGroup, RemoteGroup, TopoShape, WeightedGroup,
+    GroupKind, KernelGroup, RemoteGroup, TopoShape, WeightedGroup,
 };
 use membw::simulator::{CoreWorkload, FluidConfig, IfaceNet, NetFluidSimulator, NetStream};
 use membw::topology::Topology;
@@ -44,6 +44,7 @@ fn two_socket(link_gbs: f64) -> TopoShape {
         bw_scale: vec![1.0, 1.0],
         link_bw_gbs: link_gbs,
         link_bw_rev_gbs: link_gbs,
+        l3_bw_gbs: 0.0,
     }
 }
 
@@ -58,8 +59,8 @@ fn two_socket(link_gbs: f64) -> TopoShape {
 fn stranded_capacity_is_returned_to_the_ungated_group() {
     let shape = two_socket(2.0);
     let groups = [
-        RemoteGroup { home: 0, n: 4, f: 0.8, bs_gbs: 32.0, remote_frac: 0.5 },
-        RemoteGroup { home: 0, n: 4, f: 0.8, bs_gbs: 32.0, remote_frac: 0.0 },
+        RemoteGroup { home: 0, n: 4, f: 0.8, bs_gbs: 32.0, remote_frac: 0.5, kind: GroupKind::Mem },
+        RemoteGroup { home: 0, n: 4, f: 0.8, bs_gbs: 32.0, remote_frac: 0.0, kind: GroupKind::Mem },
     ];
     let share = share_remote(&shape, &groups).unwrap();
     assert!(
@@ -105,7 +106,7 @@ fn ungated_scenario_terminates_in_one_pass() {
     // stranded — with one group or two identical ones.
     let one = share_remote(
         &shape,
-        &[RemoteGroup { home: 0, n: 8, f: DCOPY_F, bs_gbs: DCOPY_BS, remote_frac: 0.5 }],
+        &[RemoteGroup { home: 0, n: 8, f: DCOPY_F, bs_gbs: DCOPY_BS, remote_frac: 0.5, kind: GroupKind::Mem }],
     )
     .unwrap();
     assert_eq!(one.iterations, 1, "ungated: the first pass is the fixed point");
@@ -114,8 +115,8 @@ fn ungated_scenario_terminates_in_one_pass() {
     let two = share_remote(
         &shape,
         &[
-            RemoteGroup { home: 0, n: 4, f: DCOPY_F, bs_gbs: DCOPY_BS, remote_frac: 0.5 },
-            RemoteGroup { home: 0, n: 4, f: DCOPY_F, bs_gbs: DCOPY_BS, remote_frac: 0.5 },
+            RemoteGroup { home: 0, n: 4, f: DCOPY_F, bs_gbs: DCOPY_BS, remote_frac: 0.5, kind: GroupKind::Mem },
+            RemoteGroup { home: 0, n: 4, f: DCOPY_F, bs_gbs: DCOPY_BS, remote_frac: 0.5, kind: GroupKind::Mem },
         ],
     )
     .unwrap();
@@ -135,9 +136,9 @@ fn ungated_scenario_terminates_in_one_pass() {
 fn zero_remote_matches_share_domains_bitwise() {
     let shape = two_socket(40.0);
     let groups = [
-        RemoteGroup { home: 0, n: 4, f: 0.84, bs_gbs: 32.0, remote_frac: 0.0 },
-        RemoteGroup { home: 0, n: 4, f: 0.75, bs_gbs: 33.0, remote_frac: 0.0 },
-        RemoteGroup { home: 1, n: 6, f: 0.30, bs_gbs: 35.0, remote_frac: 0.0 },
+        RemoteGroup { home: 0, n: 4, f: 0.84, bs_gbs: 32.0, remote_frac: 0.0, kind: GroupKind::Mem },
+        RemoteGroup { home: 0, n: 4, f: 0.75, bs_gbs: 33.0, remote_frac: 0.0, kind: GroupKind::Mem },
+        RemoteGroup { home: 1, n: 6, f: 0.30, bs_gbs: 35.0, remote_frac: 0.0, kind: GroupKind::Mem },
     ];
     let share = share_remote(&shape, &groups).unwrap();
     assert_eq!(share.iterations, 1);
@@ -173,10 +174,11 @@ fn single_interface_matches_eq5_bitwise() {
         bw_scale: vec![1.0],
         link_bw_gbs: 0.0,
         link_bw_rev_gbs: 0.0,
+        l3_bw_gbs: 0.0,
     };
     let groups = [
-        RemoteGroup { home: 0, n: 6, f: 0.35, bs_gbs: 55.0, remote_frac: 0.0 },
-        RemoteGroup { home: 0, n: 4, f: 0.20, bs_gbs: 66.0, remote_frac: 0.0 },
+        RemoteGroup { home: 0, n: 6, f: 0.35, bs_gbs: 55.0, remote_frac: 0.0, kind: GroupKind::Mem },
+        RemoteGroup { home: 0, n: 4, f: 0.20, bs_gbs: 66.0, remote_frac: 0.0, kind: GroupKind::Mem },
     ];
     let share = share_remote(&shape, &groups).unwrap();
     let eq5 = share_multigroup(&[
@@ -207,7 +209,7 @@ fn one_direction_duplex_matches_half_duplex_numbers() {
     // portion's surplus.
     let quarter = share_remote(
         &shape,
-        &[RemoteGroup { home: 0, n: 8, f: DCOPY_F, bs_gbs: DCOPY_BS, remote_frac: 0.25 }],
+        &[RemoteGroup { home: 0, n: 8, f: DCOPY_F, bs_gbs: DCOPY_BS, remote_frac: 0.25, kind: GroupKind::Mem }],
     )
     .unwrap();
     let old_home = share_weighted(&[WeightedGroup { n: 6.0, f: DCOPY_F, bs_gbs: DCOPY_BS }]);
@@ -225,7 +227,7 @@ fn one_direction_duplex_matches_half_duplex_numbers() {
     // r = 0.5: fully ungated (both portions gate at the same rate).
     let half = share_remote(
         &shape,
-        &[RemoteGroup { home: 0, n: 8, f: DCOPY_F, bs_gbs: DCOPY_BS, remote_frac: 0.5 }],
+        &[RemoteGroup { home: 0, n: 8, f: DCOPY_F, bs_gbs: DCOPY_BS, remote_frac: 0.5, kind: GroupKind::Mem }],
     )
     .unwrap();
     let old_half = share_weighted(&[WeightedGroup { n: 4.0, f: DCOPY_F, bs_gbs: DCOPY_BS }]);
@@ -253,14 +255,14 @@ fn gated_regime_fluid_matches_fixed_point_and_refutes_single_pass() {
     let dm = &topo.domains[0].machine;
     let wa = CoreWorkload::from_kernel(&kernel(KernelId::Dcopy), dm, 0);
     let wb = CoreWorkload::from_kernel(&kernel(KernelId::Ddot2), dm, 1);
-    let mut streams = vec![NetStream { workload: wa, home: 0, remote_frac: 0.5 }; 4];
-    streams.extend(vec![NetStream { workload: wb, home: 0, remote_frac: 0.0 }; 4]);
+    let mut streams = vec![NetStream { workload: wa, home: 0, remote_frac: 0.5, l3_frac: 0.0 }; 4];
+    streams.extend(vec![NetStream { workload: wb, home: 0, remote_frac: 0.0, l3_frac: 0.0 }; 4]);
     let sim = NetFluidSimulator::new(&net, FluidConfig::default()).run(&streams);
 
     let shape = two_socket(8.0);
     let groups = [
-        RemoteGroup { home: 0, n: 4, f: DCOPY_F, bs_gbs: DCOPY_BS, remote_frac: 0.5 },
-        RemoteGroup { home: 0, n: 4, f: DDOT2_F, bs_gbs: DDOT2_BS, remote_frac: 0.0 },
+        RemoteGroup { home: 0, n: 4, f: DCOPY_F, bs_gbs: DCOPY_BS, remote_frac: 0.5, kind: GroupKind::Mem },
+        RemoteGroup { home: 0, n: 4, f: DDOT2_F, bs_gbs: DDOT2_BS, remote_frac: 0.0, kind: GroupKind::Mem },
     ];
     let share = share_remote(&shape, &groups).unwrap();
     assert!(share.iterations > 1, "the squeezed link gates dcopy");

@@ -606,3 +606,195 @@ fn prop_scatter_equals_compact_on_single_domain() {
         }
     }
 }
+
+// --- cache-topology properties (shared-L3 interfaces, compute groups) ---
+
+mod cache_topology {
+    use super::*;
+    use membw::optimizer::DeltaEval;
+    use membw::sharing::{share_remote, GroupKind, RemoteGroup, TopoShape};
+
+    fn random_shape(rng: &mut XorShift64, l3_gbs: f64) -> TopoShape {
+        let sockets = 1 + rng.next_below(2);
+        let dpn = 1 + rng.next_below(2);
+        let mut socket_of = Vec::new();
+        for s in 0..sockets {
+            for _ in 0..dpn {
+                socket_of.push(s);
+            }
+        }
+        let n = socket_of.len();
+        let link = if sockets > 1 { 8.0 + 56.0 * rng.next_f64() } else { 0.0 };
+        TopoShape {
+            socket_of,
+            bw_scale: vec![1.0; n],
+            link_bw_gbs: link,
+            link_bw_rev_gbs: link,
+            l3_bw_gbs: l3_gbs,
+        }
+    }
+
+    fn random_remote_group(rng: &mut XorShift64, nd: usize) -> RemoteGroup {
+        RemoteGroup {
+            home: rng.next_below(nd),
+            n: 1 + rng.next_below(8),
+            f: 0.05 + 0.9 * rng.next_f64(),
+            bs_gbs: 10.0 + 40.0 * rng.next_f64(),
+            remote_frac: if nd >= 2 && rng.next_below(2) == 1 {
+                [0.0, 0.1, 0.25, 0.5][rng.next_below(4)]
+            } else {
+                0.0
+            },
+            kind: GroupKind::Mem,
+        }
+    }
+
+    /// Roughly a third of the groups L3-resident (with and without a DRAM
+    /// tandem), a sixth compute-bound — every portion flavour appears.
+    fn random_kinded_group(rng: &mut XorShift64, nd: usize) -> RemoteGroup {
+        let mut g = random_remote_group(rng, nd);
+        match rng.next_below(6) {
+            0 | 1 => {
+                g.remote_frac = 0.0;
+                if rng.next_below(2) == 0 {
+                    g.f = 0.0;
+                    g.bs_gbs = 0.0;
+                }
+                g.kind = GroupKind::L3 {
+                    f_l3: 0.2 + 0.6 * rng.next_f64(),
+                    bs_l3_gbs: 40.0 + 40.0 * rng.next_f64(),
+                };
+            }
+            2 => g.kind = GroupKind::Compute,
+            _ => {}
+        }
+        g
+    }
+
+    /// Memory-bound-only mixes are bitwise invariant to the shape's
+    /// `l3_bw_gbs` — the structural degenerate-case guarantee, over random
+    /// shapes, group counts, and remote fractions.
+    #[test]
+    fn prop_mem_only_mixes_invariant_to_l3_bw() {
+        let mut rng = XorShift64::new(0xCAC4E1);
+        for case in 0..CASES {
+            let shape0 = random_shape(&mut rng, 0.0);
+            let nd = shape0.n_domains();
+            let k = 1 + rng.next_below(5);
+            let groups: Vec<RemoteGroup> =
+                (0..k).map(|_| random_remote_group(&mut rng, nd)).collect();
+            let shape1 = TopoShape { l3_bw_gbs: 60.0 + 200.0 * rng.next_f64(), ..shape0.clone() };
+            let a = share_remote(&shape0, &groups).unwrap();
+            let b = share_remote(&shape1, &groups).unwrap();
+            assert_eq!(a.iterations, b.iterations, "case {case}");
+            for (x, y) in a.per_core_gbs.iter().zip(&b.per_core_gbs) {
+                assert_eq!(x.to_bits(), y.to_bits(), "case {case}: rate perturbed by l3_bw");
+            }
+            for iface in &b.l3 {
+                assert_eq!(iface.demand_gbs, 0.0, "case {case}: phantom L3 demand");
+            }
+        }
+    }
+
+    /// Per-interface conservation with every group kind in play: grants on
+    /// each memory controller, each link direction, and each shared L3 sum
+    /// to at most the interface capacity (equality when saturated), and
+    /// every group's rate respects its own roofline cap.
+    #[test]
+    fn prop_interface_grants_conserve_capacity_with_l3() {
+        let mut rng = XorShift64::new(0xCAC4E2);
+        for case in 0..CASES {
+            let shape = random_shape(&mut rng, 120.0);
+            let nd = shape.n_domains();
+            let k = 1 + rng.next_below(5);
+            let groups: Vec<RemoteGroup> =
+                (0..k).map(|_| random_kinded_group(&mut rng, nd)).collect();
+            let share = share_remote(&shape, &groups).unwrap();
+            assert_eq!(share.l3.len(), shape.n_sockets(), "case {case}");
+
+            for s in 0..shape.n_sockets() {
+                let granted: f64 = share
+                    .portions
+                    .iter()
+                    .filter(|p| p.l3 == Some(s) && !p.mem)
+                    .map(|p| p.l3_grant_gbs)
+                    .sum();
+                assert!(
+                    granted <= shape.l3_bw_gbs * (1.0 + 1e-9),
+                    "case {case}: L3 s{s} over capacity ({granted})"
+                );
+                if share.l3[s].saturated {
+                    assert!(
+                        (granted - shape.l3_bw_gbs).abs() < 1e-6,
+                        "case {case}: saturated L3 s{s} grants {granted}"
+                    );
+                }
+            }
+            for d in 0..nd {
+                let granted: f64 = share
+                    .portions
+                    .iter()
+                    .filter(|p| p.target == d && p.mem)
+                    .map(|p| p.mem_bw_gbs)
+                    .sum();
+                assert!(
+                    granted <= share.domains[d].b_mix_gbs * (1.0 + 1e-9) + 1e-9,
+                    "case {case}: d{d} over b_mix ({granted} vs {})",
+                    share.domains[d].b_mix_gbs
+                );
+            }
+            for (gi, g) in groups.iter().enumerate() {
+                let rate = share.per_core_gbs[gi];
+                assert!(rate >= -1e-9, "case {case}: negative rate");
+                match g.kind {
+                    GroupKind::Mem => {
+                        assert!(rate <= g.f * g.bs_gbs * (1.0 + 1e-9), "case {case}")
+                    }
+                    GroupKind::L3 { f_l3, bs_l3_gbs } => {
+                        assert!(rate <= f_l3 * bs_l3_gbs * (1.0 + 1e-9), "case {case}")
+                    }
+                    GroupKind::Compute => {
+                        assert_eq!(rate.to_bits(), (g.f * g.bs_gbs).to_bits(), "case {case}")
+                    }
+                }
+            }
+        }
+    }
+
+    /// Random move walks with L3 and compute candidates in the pool: the
+    /// delta evaluator's rates stay bit-identical to the from-scratch
+    /// fixed point after every commit.
+    #[test]
+    fn prop_delta_walks_bit_identical_with_l3_candidates() {
+        let mut rng = XorShift64::new(0xCAC4E3);
+        for case in 0..60 {
+            let shape = random_shape(&mut rng, 100.0 + 100.0 * rng.next_f64());
+            let nd = shape.n_domains();
+            let k = 2 + rng.next_below(4);
+            let mut groups: Vec<RemoteGroup> =
+                (0..k).map(|_| random_kinded_group(&mut rng, nd)).collect();
+            let mut de = DeltaEval::new(shape.clone(), groups.clone()).unwrap();
+            for step in 0..8 {
+                let gi = rng.next_below(groups.len());
+                let mut ng = groups[gi];
+                if matches!(ng.kind, GroupKind::Mem) && rng.next_below(2) == 0 {
+                    ng.remote_frac =
+                        if nd >= 2 { [0.0, 0.1, 0.25, 0.5][rng.next_below(4)] } else { 0.0 };
+                } else {
+                    ng.home = rng.next_below(nd);
+                }
+                let outcome = de.eval(&[(gi, ng)]).unwrap();
+                groups[gi] = ng;
+                let full = share_remote(&shape, &groups).unwrap();
+                for (a, b) in outcome.rates.iter().zip(&full.per_core_gbs) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "case {case} step {step}: delta diverged from full solve"
+                    );
+                }
+                de.commit(outcome);
+            }
+        }
+    }
+}

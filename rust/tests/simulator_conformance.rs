@@ -287,11 +287,11 @@ fn net_fluid_r0_matches_per_domain_runs_bitwise() {
     w0.extend(vec![wl(KernelId::Ddot2, d0m); 2]);
     w0.push(CoreWorkload::idle());
     for &w in &w0 {
-        streams.push(NetStream { workload: w, home: 0, remote_frac: 0.0 });
+        streams.push(NetStream { workload: w, home: 0, remote_frac: 0.0, l3_frac: 0.0 });
     }
     let w1 = vec![wl(KernelId::Ddot2, d1m); 3];
     for &w in &w1 {
-        streams.push(NetStream { workload: w, home: 1, remote_frac: 0.0 });
+        streams.push(NetStream { workload: w, home: 1, remote_frac: 0.0, l3_frac: 0.0 });
     }
     let r = NetFluidSimulator::new(&net, FluidConfig::default()).run(&streams);
     let solo0 = FluidSimulator::new(d0m, FluidConfig::default()).run(&w0);
@@ -319,10 +319,10 @@ fn net_des_r0_matches_per_domain_runs_bitwise() {
     let w1 = vec![wl(KernelId::Ddot2, &m); 4];
     let mut streams: Vec<NetStream> = Vec::new();
     for &w in &w0 {
-        streams.push(NetStream { workload: w, home: 0, remote_frac: 0.0 });
+        streams.push(NetStream { workload: w, home: 0, remote_frac: 0.0, l3_frac: 0.0 });
     }
     for &w in &w1 {
-        streams.push(NetStream { workload: w, home: 1, remote_frac: 0.0 });
+        streams.push(NetStream { workload: w, home: 1, remote_frac: 0.0, l3_frac: 0.0 });
     }
     let r = NetDesSimulator::new(&net, cfg.clone()).run(&streams);
     let solo0 = DesSimulator::new(&m, cfg.clone()).run(&w0);

@@ -27,7 +27,7 @@ use membw::scenario::{
     run_mixes, run_mixes_on, run_scenario, run_scenario_on, CharCache, CharSource, EngineKind,
     Mix, Scenario,
 };
-use membw::sharing::{share_domains, share_remote, KernelGroup, RemoteGroup};
+use membw::sharing::{share_domains, share_remote, GroupKind, KernelGroup, RemoteGroup};
 use membw::sweep::MeasureEngine;
 use membw::topology::{Placement, Topology};
 
@@ -204,11 +204,11 @@ fn remote_zero_share_model_is_bit_identical_to_share_domains() {
     ];
     let mut remote_groups: Vec<RemoteGroup> = Vec::new();
     for g in &d0 {
-        let rg = RemoteGroup { home: 0, n: g.n, f: g.f, bs_gbs: g.bs_gbs, remote_frac: 0.0 };
+        let rg = RemoteGroup { home: 0, n: g.n, f: g.f, bs_gbs: g.bs_gbs, remote_frac: 0.0, kind: GroupKind::Mem };
         remote_groups.push(rg);
     }
     for g in &d5 {
-        let rg = RemoteGroup { home: 5, n: g.n, f: g.f, bs_gbs: g.bs_gbs, remote_frac: 0.0 };
+        let rg = RemoteGroup { home: 5, n: g.n, f: g.f, bs_gbs: g.bs_gbs, remote_frac: 0.0, kind: GroupKind::Mem };
         remote_groups.push(rg);
     }
     let remote = share_remote(&shape, &remote_groups).unwrap();

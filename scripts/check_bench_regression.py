@@ -8,6 +8,8 @@ Metrics (higher is better):
   ``scenario.cases_per_s`` of the scenario sweep;
 * ``BENCH_multi_iface.json`` — ``cases_per_s`` of the multi-interface
   pipeline and of its single-interface baseline sweep;
+* ``BENCH_cache.json`` — ``cases_per_s`` of the cache-topology pipeline
+  (shared-L3 ``@l3`` mixes next to DRAM-bound streams);
 * ``BENCH_cluster.json`` — ``events_per_s`` of the 64-node cluster co-sim
   and its ``speedup_vs_full`` over the full-recompute rating reference
   (a drop in either means the incremental path lost its edge);
@@ -55,6 +57,7 @@ THRESHOLD = 0.15
 GATED_FILES = [
     "BENCH_cosim.json",
     "BENCH_multi_iface.json",
+    "BENCH_cache.json",
     "BENCH_cluster.json",
     "BENCH_optimizer.json",
 ]
@@ -73,6 +76,8 @@ def metrics_of(name: str, doc: dict) -> dict[str, float]:
         out["single_iface_baseline.cases_per_s"] = float(
             doc["single_iface_baseline"]["cases_per_s"]
         )
+    elif name == "BENCH_cache.json":
+        out["cache.cases_per_s"] = float(doc["cache"]["cases_per_s"])
     elif name == "BENCH_cluster.json":
         out["cluster.events_per_s"] = float(doc["cluster"]["events_per_s"])
         out["cluster.speedup_vs_full"] = float(doc["cluster"]["speedup_vs_full"])
