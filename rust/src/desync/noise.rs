@@ -54,6 +54,12 @@ impl NoiseModel {
 ///   sampler used by the event-driven timeline engine: the next event time
 ///   is known in advance, so it can sit in a priority queue instead of being
 ///   polled every step.
+///
+/// The stream is `Clone` so a paused timeline run can checkpoint it
+/// (`timeline::EngineCheckpoint`): the RNG state and the pending arrival
+/// time are the entire stream state, and cloning them preserves the draw
+/// sequence bit for bit.
+#[derive(Debug, Clone)]
 pub struct NoiseStream {
     model: NoiseModel,
     rng: XorShift64,

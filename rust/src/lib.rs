@@ -48,6 +48,11 @@
 //!   workload mixes (kernel groups + idle cores) and time-phased scenarios,
 //!   executed batched and parallel on any engine through the shared
 //!   characterization cache, with the multigroup prediction attached,
+//! * [`service`] — the streaming co-scheduling service behind
+//!   `repro serve`: jobs submitted/retired over a line-delimited JSON
+//!   protocol, admitted by *incremental but exact* residual search with
+//!   periodic repacks, sharing one process-wide score memo and
+//!   characterization cache, with a checkpoint-resumed makespan probe,
 //! * [`sweep`] — pairing-sweep plans (the Fig. 4 parameter space) and the
 //!   two-group runner, now the k=2 special case of [`scenario`],
 //! * [`stats`] — descriptive statistics, error metrics, skewness,
@@ -69,6 +74,7 @@ pub mod parallel;
 pub mod report;
 pub mod runtime;
 pub mod scenario;
+pub mod service;
 pub mod sharing;
 pub mod simulator;
 pub mod stats;

@@ -14,6 +14,19 @@
 //! parent-independent: delta evaluation is bit-identical to the full
 //! re-solve (see [`crate::optimizer::DeltaEval`]), so every path to a
 //! candidate produces the same rates.
+//!
+//! # Namespaces
+//!
+//! A [`Candidate`] is only meaningful relative to its
+//! [`crate::optimizer::SearchSpace`] (the same `home`/`remote_ppm`
+//! vectors describe different placements in different spaces), so a memo
+//! shared across searches over *different* spaces — the `repro serve`
+//! service keeps one process-wide memo alive across all requests — must
+//! not let their entries alias. [`ShardedScoreMemo::lookup_ns`] /
+//! [`ShardedScoreMemo::insert_ns`] therefore key every entry by a caller
+//! namespace (`SearchSpace::fingerprint`); the un-suffixed
+//! [`ShardedScoreMemo::lookup`] / [`ShardedScoreMemo::insert`] are the
+//! namespace-0 special case used by single-space searches.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -30,9 +43,9 @@ const N_SHARDS: usize = 16;
 /// unbounded growth. 1 M candidates ≈ 100 MB worst case across shards.
 const MAX_ENTRIES_PER_SHARD: usize = 65_536;
 
-/// Concurrency-safe candidate → score memo.
+/// Concurrency-safe `(namespace, candidate)` → score memo.
 pub struct ShardedScoreMemo {
-    shards: Vec<Mutex<HashMap<Candidate, f64>>>,
+    shards: Vec<Mutex<HashMap<u64, HashMap<Candidate, f64>>>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -53,13 +66,17 @@ impl ShardedScoreMemo {
         }
     }
 
-    /// FNV-1a over the candidate encoding, folded to a shard index.
-    fn shard_of(c: &Candidate) -> usize {
+    /// FNV-1a over the namespace and candidate encoding, folded to a
+    /// shard index.
+    fn shard_of(ns: u64, c: &Candidate) -> usize {
         let mut h: u64 = 0xCBF2_9CE4_8422_2325;
         let mut eat = |byte: u8| {
             h ^= byte as u64;
             h = h.wrapping_mul(0x0000_0100_0000_01B3);
         };
+        for b in ns.to_le_bytes() {
+            eat(b);
+        }
         for &d in &c.home {
             for b in d.to_le_bytes() {
                 eat(b);
@@ -75,10 +92,11 @@ impl ShardedScoreMemo {
         ((h ^ (h >> 32)) as usize) & (N_SHARDS - 1)
     }
 
-    /// The memoized score of `c`, counting a hit or miss.
-    pub fn lookup(&self, c: &Candidate) -> Option<f64> {
-        let shard = self.shards[Self::shard_of(c)].lock().expect("score memo poisoned");
-        match shard.get(c) {
+    /// The memoized score of `c` under namespace `ns`, counting a hit or
+    /// miss.
+    pub fn lookup_ns(&self, ns: u64, c: &Candidate) -> Option<f64> {
+        let shard = self.shards[Self::shard_of(ns, c)].lock().expect("score memo poisoned");
+        match shard.get(&ns).and_then(|inner| inner.get(c)) {
             Some(&s) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 Some(s)
@@ -90,21 +108,34 @@ impl ShardedScoreMemo {
         }
     }
 
-    /// Record `score` for `c` (clearing the shard first when full).
-    pub fn insert(&self, c: &Candidate, score: f64) {
-        let mut shard = self.shards[Self::shard_of(c)].lock().expect("score memo poisoned");
-        if shard.len() >= MAX_ENTRIES_PER_SHARD {
+    /// Record `score` for `c` under namespace `ns` (clearing the shard
+    /// first when full).
+    pub fn insert_ns(&self, ns: u64, c: &Candidate, score: f64) {
+        let mut shard = self.shards[Self::shard_of(ns, c)].lock().expect("score memo poisoned");
+        if shard.values().map(HashMap::len).sum::<usize>() >= MAX_ENTRIES_PER_SHARD {
             shard.clear();
         }
-        shard.insert(c.clone(), score);
+        shard.entry(ns).or_default().insert(c.clone(), score);
     }
 
-    /// `(hits, misses, entries)` across all shards.
+    /// The memoized score of `c` in the default namespace.
+    pub fn lookup(&self, c: &Candidate) -> Option<f64> {
+        self.lookup_ns(0, c)
+    }
+
+    /// Record `score` for `c` in the default namespace.
+    pub fn insert(&self, c: &Candidate, score: f64) {
+        self.insert_ns(0, c, score)
+    }
+
+    /// `(hits, misses, entries)` across all shards and namespaces.
     pub fn stats(&self) -> (u64, u64, usize) {
         let entries = self
             .shards
             .iter()
-            .map(|s| s.lock().expect("score memo poisoned").len())
+            .map(|s| {
+                s.lock().expect("score memo poisoned").values().map(HashMap::len).sum::<usize>()
+            })
             .sum();
         (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed), entries)
     }
@@ -138,6 +169,23 @@ mod tests {
         for i in 0..64u16 {
             assert_eq!(memo.lookup(&cand(vec![i, i + 1], vec![u32::from(i), 0])), Some(i as f64));
         }
+    }
+
+    #[test]
+    fn namespaces_do_not_alias() {
+        // The same candidate encoding means different placements in
+        // different search spaces; entries must stay per-namespace.
+        let memo = ShardedScoreMemo::new();
+        let c = cand(vec![1, 0], vec![0, 0]);
+        memo.insert_ns(7, &c, 1.0);
+        memo.insert_ns(9, &c, 2.0);
+        memo.insert(&c, 3.0); // default namespace 0
+        assert_eq!(memo.lookup_ns(7, &c), Some(1.0));
+        assert_eq!(memo.lookup_ns(9, &c), Some(2.0));
+        assert_eq!(memo.lookup(&c), Some(3.0));
+        assert_eq!(memo.lookup_ns(8, &c), None);
+        let (_, _, entries) = memo.stats();
+        assert_eq!(entries, 3);
     }
 
     #[test]

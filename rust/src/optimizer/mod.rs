@@ -12,7 +12,9 @@
 //!   [`crate::sharing::share_remote`] re-solve (gated placements fall
 //!   back to the full fixed point).
 //! * [`memo`] — a sharded, concurrency-safe candidate → score memo so
-//!   parallel scoring threads neither serialize nor thrash.
+//!   parallel scoring threads neither serialize nor thrash; namespaced
+//!   by [`SearchSpace::fingerprint`] so one process-wide memo can stay
+//!   warm across the searches of a `repro serve` session.
 //! * [`search`] — the multi-start beam driver with batched parallel
 //!   scoring and fixed-seed determinism; objectives: aggregate
 //!   throughput, makespan (finalists re-ranked by
@@ -35,5 +37,5 @@ pub mod space;
 pub use delta::{DeltaEval, DeltaStats, EvalOutcome};
 pub use memo::ShardedScoreMemo;
 pub use pairing::{plan_pairing, PairPlan, PairTask};
-pub use search::{optimize, Objective, OptResult, SearchConfig, TraceStep};
+pub use search::{optimize, optimize_with_memo, Objective, OptResult, SearchConfig, TraceStep};
 pub use space::{Candidate, Move, OptGroup, SearchSpace, DEFAULT_REMOTE_LEVELS};

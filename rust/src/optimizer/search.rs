@@ -205,8 +205,27 @@ fn full_rates(space: &SearchSpace, cand: &Candidate) -> Result<Vec<f64>> {
 
 /// Run the search. See the module docs for the guarantees.
 pub fn optimize(space: &SearchSpace, cfg: &SearchConfig) -> Result<OptResult> {
+    optimize_with_memo(space, cfg, &ShardedScoreMemo::new(), 0)
+}
+
+/// [`optimize`] against a caller-owned score memo under namespace `ns`
+/// (use [`SearchSpace::fingerprint`] when the memo outlives one space).
+///
+/// This is the cross-request entry point of the `repro serve` service:
+/// one process-wide memo stays warm across admissions. Sharing is exact —
+/// a candidate's score is a pure function of `(space, candidate)` (delta
+/// evaluation is bit-identical to the full solve), so pre-warmed entries
+/// change only the `evaluated` / cache counters, never the incumbent
+/// trace or the winner. The returned `stats.memo_*` counters read the
+/// *shared* memo, i.e. they are cumulative across every search that used
+/// it.
+pub fn optimize_with_memo(
+    space: &SearchSpace,
+    cfg: &SearchConfig,
+    memo: &ShardedScoreMemo,
+    ns: u64,
+) -> Result<OptResult> {
     let t0 = Instant::now();
-    let memo = ShardedScoreMemo::new();
     let mut rng = XorShift64::new(cfg.seed);
     let mut scored: u64 = 0;
     let mut evaluated: u64 = 0;
@@ -245,7 +264,7 @@ pub fn optimize(space: &SearchSpace, cfg: &SearchConfig) -> Result<OptResult> {
         delta.evals += 1;
         delta.iface_evals += n_ifaces;
         if cfg.memoize {
-            memo.insert(&start_cand, start_score);
+            memo.insert_ns(ns, &start_cand, start_score);
         }
         let mut local_best = start_score;
         if global_best.as_ref().is_none_or(|(s, _, _)| start_score > *s) {
@@ -288,7 +307,7 @@ pub fn optimize(space: &SearchSpace, cfg: &SearchConfig) -> Result<OptResult> {
             let score_one = |item: &(Candidate, usize)| -> Result<(f64, DeltaStats, bool)> {
                 let (cand, pi) = item;
                 if cfg.memoize {
-                    if let Some(s) = memo.lookup(cand) {
+                    if let Some(s) = memo.lookup_ns(ns, cand) {
                         return Ok((s, DeltaStats::default(), false));
                     }
                 }
@@ -312,7 +331,7 @@ pub fn optimize(space: &SearchSpace, cfg: &SearchConfig) -> Result<OptResult> {
                 };
                 let s = cfg.objective.score(space, cfg.gb_per_core, &rates);
                 if cfg.memoize {
-                    memo.insert(cand, s);
+                    memo.insert_ns(ns, cand, s);
                 }
                 Ok((s, stats, true))
             };
@@ -433,13 +452,20 @@ pub fn optimize(space: &SearchSpace, cfg: &SearchConfig) -> Result<OptResult> {
     })
 }
 
-/// Co-simulate one candidate: every group's ranks on its home domain, one
-/// kernel phase per group (all ranks run all phases — the co-simulation
-/// measures how the *placement* bears the program, not per-group
-/// heterogeneity), remote fractions averaged per home domain weighted by
-/// resident cores. Returns the simulated makespan (slowest rank) and the
-/// run's engine counters.
-fn simulate_makespan(space: &SearchSpace, cand: &Candidate, gb_per_core: f64) -> (f64, SimStats) {
+/// Build the finalist co-simulation inputs for one candidate: every
+/// group's ranks on its home domain, one kernel phase per group (all
+/// ranks run all phases — the co-simulation measures how the *placement*
+/// bears the program, not per-group heterogeneity), remote fractions
+/// averaged per home domain weighted by resident cores.
+///
+/// Shared between the in-search finalist simulation and the `repro serve`
+/// makespan probe so both simulate byte-identical setups. Returns
+/// `(program, layout, chars, n_ranks)`.
+pub(crate) fn makespan_setup(
+    space: &SearchSpace,
+    cand: &Candidate,
+    gb_per_core: f64,
+) -> (Program, RankLayout, Vec<(KernelId, f64, f64)>, usize) {
     let nd = space.shape.n_domains();
     let mut rank_domain = Vec::new();
     let mut frac_num = vec![0.0f64; nd];
@@ -479,7 +505,13 @@ fn simulate_makespan(space: &SearchSpace, cand: &Candidate, gb_per_core: f64) ->
             label: "opt",
         });
     }
-    let program = Program { phases, iterations: 1 };
+    (Program { phases, iterations: 1 }, layout, chars, n_ranks)
+}
+
+/// Co-simulate one candidate via [`makespan_setup`]. Returns the
+/// simulated makespan (slowest rank) and the run's engine counters.
+fn simulate_makespan(space: &SearchSpace, cand: &Candidate, gb_per_core: f64) -> (f64, SimStats) {
+    let (program, layout, chars, n_ranks) = makespan_setup(space, cand, gb_per_core);
     let config = CoSimConfig::default();
     let result = simulate_placed(&program, n_ranks, &config, &chars, &layout);
     let makespan = result
@@ -560,6 +592,29 @@ mod tests {
             assert_eq!(x.candidate, y.candidate);
             assert_eq!(x.score.to_bits(), y.score.to_bits());
         }
+    }
+
+    #[test]
+    fn warm_shared_memo_changes_counters_not_the_outcome() {
+        let space = space2x2();
+        let cfg = SearchConfig { budget: 300, ..SearchConfig::default() };
+        let ns = space.fingerprint();
+        let memo = ShardedScoreMemo::new();
+        let cold = optimize_with_memo(&space, &cfg, &memo, ns).unwrap();
+        let warm = optimize_with_memo(&space, &cfg, &memo, ns).unwrap();
+        assert_eq!(cold.best, warm.best);
+        assert_eq!(cold.best_score.to_bits(), warm.best_score.to_bits());
+        assert_eq!(cold.trace.len(), warm.trace.len());
+        for (x, y) in cold.trace.iter().zip(&warm.trace) {
+            assert_eq!(x.candidate, y.candidate);
+            assert_eq!(x.score.to_bits(), y.score.to_bits());
+        }
+        assert_eq!(cold.scored, warm.scored);
+        assert!(warm.evaluated < cold.evaluated, "warm run should hit the memo");
+        // The reference optimize() is the same search against a fresh memo.
+        let fresh = optimize(&space, &cfg).unwrap();
+        assert_eq!(fresh.best, cold.best);
+        assert_eq!(fresh.best_score.to_bits(), cold.best_score.to_bits());
     }
 
     #[test]

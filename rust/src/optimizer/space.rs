@@ -227,6 +227,68 @@ impl SearchSpace {
         self.groups.len()
     }
 
+    /// FNV-1a fingerprint of everything a candidate's score depends on:
+    /// the topology shape, capacities, groups (traffic character, pins,
+    /// fixed fractions, kinds), and the retune palette. Two spaces with
+    /// the same fingerprint score any candidate identically, so the
+    /// fingerprint is the memo namespace of a process-wide
+    /// [`crate::optimizer::ShardedScoreMemo`] shared across searches
+    /// (the `repro serve` service).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+        let mut eat_u64 = |v: u64| {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01B3);
+            }
+        };
+        for &s in &self.shape.socket_of {
+            eat_u64(s as u64);
+        }
+        for &s in &self.shape.bw_scale {
+            eat_u64(s.to_bits());
+        }
+        eat_u64(self.shape.link_bw_gbs.to_bits());
+        eat_u64(self.shape.link_bw_rev_gbs.to_bits());
+        eat_u64(self.shape.l3_bw_gbs.to_bits());
+        for &c in &self.domain_cores {
+            eat_u64(c as u64);
+        }
+        for &n in &self.node_of {
+            eat_u64(n as u64);
+        }
+        eat_u64(self.collective_extra_s.to_bits());
+        for g in &self.groups {
+            for b in g.kernel.key().bytes() {
+                eat_u64(b as u64);
+            }
+            eat_u64(g.n as u64);
+            eat_u64(g.f.to_bits());
+            eat_u64(g.bs_gbs.to_bits());
+            eat_u64(match g.pinned {
+                Some(d) => d as u64 + 1,
+                None => 0,
+            });
+            eat_u64(match g.fixed_remote_ppm {
+                Some(p) => u64::from(p) + 1,
+                None => 0,
+            });
+            match g.kind {
+                GroupKind::Mem => eat_u64(1),
+                GroupKind::L3 { f_l3, bs_l3_gbs } => {
+                    eat_u64(2);
+                    eat_u64(f_l3.to_bits());
+                    eat_u64(bs_l3_gbs.to_bits());
+                }
+                GroupKind::Compute => eat_u64(3),
+            }
+        }
+        for &lv in &self.remote_levels {
+            eat_u64(u64::from(lv));
+        }
+        h ^ (h >> 32)
+    }
+
     /// Per-domain core load of a candidate.
     pub fn loads(&self, c: &Candidate) -> Vec<usize> {
         let mut load = vec![0usize; self.shape.n_domains()];

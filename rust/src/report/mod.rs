@@ -7,6 +7,7 @@
 mod experiments;
 mod optimizer;
 mod scenario;
+mod service;
 mod table;
 
 pub use experiments::{
@@ -15,4 +16,5 @@ pub use experiments::{
 };
 pub use optimizer::optimizer_report;
 pub use scenario::{scenario_report, topology_scenario_report};
+pub use service::serve_report;
 pub use table::AsciiTable;

@@ -1,0 +1,90 @@
+//! Report surface of the `repro serve` session: the request/response
+//! transcript and the final fleet placement, rendered as the same ASCII
+//! tables the rest of the report layer uses.
+
+use std::fmt::Write as _;
+
+use crate::report::table::AsciiTable;
+use crate::service::{ServeConfig, Service};
+use crate::topology::Topology;
+
+/// Render one serve session: header, the numbered request → response
+/// transcript (responses elided to their leading fields past 100 chars —
+/// the full lines live in the JSON session log next to this report), and
+/// the final fleet table.
+pub fn serve_report(
+    topo: &Topology,
+    cfg: &ServeConfig,
+    transcript: &[(String, String)],
+    service: &Service,
+) -> String {
+    let mut out = String::new();
+    writeln!(
+        out,
+        "SERVE on {} — objective {}, seed {}, repack every {}, {} requests",
+        topo.label(),
+        cfg.objective.name(),
+        cfg.seed,
+        if cfg.repack_every == 0 {
+            "never".to_string()
+        } else {
+            cfg.repack_every.to_string()
+        },
+        transcript.len(),
+    )
+    .unwrap();
+
+    writeln!(out, "\ntranscript:").unwrap();
+    let mut tt = AsciiTable::new(&["#", "request", "response"]);
+    for (i, (req, resp)) in transcript.iter().enumerate() {
+        let short = if resp.chars().count() > 100 {
+            let head: String = resp.chars().take(97).collect();
+            format!("{head}...")
+        } else {
+            resp.clone()
+        };
+        tt.row(vec![i.to_string(), req.clone(), short]);
+    }
+    out.push_str(&tt.render());
+
+    writeln!(out, "\nfinal fleet ({} live jobs):", service.jobs_len()).unwrap();
+    let mut ft = AsciiTable::new(&["job", "kernel", "n", "home", "%r"]);
+    for (id, groups) in service.placements() {
+        for (kernel, cores, home, remote_ppm) in groups {
+            ft.row(vec![
+                id.clone(),
+                kernel.key().to_string(),
+                cores.to_string(),
+                format!("d{home}"),
+                format!("{:.2}", remote_ppm as f64 / 1e6),
+            ]);
+        }
+    }
+    out.push_str(&ft.render());
+    if let Some(r) = service.last_result() {
+        writeln!(out, "fleet score: {:.3} ({})", r.best_score, r.best_label).unwrap();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::machine_by_name;
+    use crate::scenario::CharSource;
+
+    #[test]
+    fn renders_header_transcript_and_fleet() {
+        let m = machine_by_name("rome").unwrap();
+        let topo = Topology::parse(&m, "2x4").unwrap();
+        let cfg = ServeConfig::default();
+        let mut s = Service::new(topo.clone(), cfg.clone(), CharSource::Ecm);
+        let req = r#"{"op":"submit","id":"j0","mix":"dcopy:6"}"#.to_string();
+        let resp = s.handle_line(&req);
+        let text = serve_report(&topo, &cfg, &[(req, resp)], &s);
+        assert!(text.contains("SERVE on"), "{text}");
+        assert!(text.contains("transcript"), "{text}");
+        assert!(text.contains("dcopy"), "{text}");
+        assert!(text.contains("fleet score"), "{text}");
+    }
+}

@@ -1,0 +1,732 @@
+//! The long-running co-scheduling engine behind `repro serve`.
+//!
+//! The service holds a *fleet*: the set of admitted jobs and the placement
+//! the optimizer committed for them. Admission is **incremental but
+//! exact**:
+//!
+//! * On `submit`, settled jobs keep their committed placement — their
+//!   groups enter the search space *pinned* (home fixed, remote fraction
+//!   frozen), so the beam search only explores the new job's groups over
+//!   the residual capacity. Pinning is a hard constraint of
+//!   [`SearchSpace`] itself, so this is bit-identical to a cold
+//!   [`optimize`] run over the same residual space — not an
+//!   approximation of it (pinned in `tests/service_conformance.rs`).
+//! * Every [`ServeConfig::repack_every`]-th submit is a *repack*: all
+//!   groups go in free (only mix-native `@dN` pins and `%r` freezes
+//!   survive), bounding the drift a greedy admission sequence can
+//!   accumulate. A repack equals the cold `repro optimize` of the
+//!   combined mix.
+//! * On `finish`, the retired job's cores are freed and the residual
+//!   fleet is re-scored through the same pinned-space path (a fully
+//!   pinned space has exactly one candidate, so this is a cheap exact
+//!   re-rate, not a search).
+//!
+//! All requests share one process-wide [`ShardedScoreMemo`] (namespaced
+//! by [`SearchSpace::fingerprint`]) and the process-wide
+//! [`CharCache`], so repeated admissions of similar fleets hit warm
+//! caches; the hit rates surface in every `snapshot` response.
+//!
+//! The *makespan probe* co-simulates the committed placement through the
+//! checkpointable timeline engine
+//! ([`crate::timeline::simulate_placed_until`]): each `query` advances
+//! the simulation by one [`ServeConfig::probe_slice_s`] slice from its
+//! [`EngineCheckpoint`] instead of re-simulating from `t = 0`, and
+//! `snapshot` drives it to completion. Checkpoint/resume is bit-identical
+//! to an uninterrupted run, so the probe's makespan equals the one-shot
+//! simulation of the same placement.
+
+use std::collections::HashMap;
+use std::sync::OnceLock;
+
+use crate::desync::{CoSimConfig, Program, SimStats};
+use crate::error::{Error, Result};
+use crate::kernels::KernelId;
+use crate::optimizer::{
+    optimize_with_memo, Objective, OptGroup, OptResult, SearchConfig, SearchSpace,
+    ShardedScoreMemo, DEFAULT_REMOTE_LEVELS,
+};
+use crate::optimizer::search::makespan_setup;
+use crate::scenario::{CharCache, CharSource, Mix};
+use crate::sharing::GroupKind;
+use crate::timeline::{
+    resume_placed, simulate_placed_until, EngineCheckpoint, RatingMode, SimStep,
+};
+use crate::topology::{RankLayout, Topology};
+
+use super::request::{json_escape, Request};
+
+/// The process-wide score memo every service instance shares (mirrors
+/// [`CharCache::global`]). Namespacing by space fingerprint keeps
+/// concurrent fleets from aliasing.
+pub fn service_memo() -> &'static ShardedScoreMemo {
+    static MEMO: OnceLock<ShardedScoreMemo> = OnceLock::new();
+    MEMO.get_or_init(ShardedScoreMemo::new)
+}
+
+/// Tuning knobs of a serve session.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Search objective for every admission.
+    pub objective: Objective,
+    /// Search seed (fixed seed ⇒ byte-identical session replay).
+    pub seed: u64,
+    /// Multi-start count per admission.
+    pub starts: usize,
+    /// Beam width.
+    pub beam: usize,
+    /// Scoring budget per admission.
+    pub budget: usize,
+    /// Per-core data volume, GB (makespan probe time unit).
+    pub gb_per_core: f64,
+    /// Every n-th submit re-packs the whole fleet from scratch (0 =
+    /// never): the drift bound on incremental admission.
+    pub repack_every: usize,
+    /// How much simulated time one `query` advances the makespan probe.
+    pub probe_slice_s: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        let s = SearchConfig::default();
+        ServeConfig {
+            objective: s.objective,
+            seed: s.seed,
+            starts: s.starts,
+            beam: s.beam,
+            budget: s.budget,
+            gb_per_core: s.gb_per_core,
+            repack_every: 8,
+            probe_slice_s: 0.05,
+        }
+    }
+}
+
+/// One group of an admitted job: its committed placement plus the
+/// mix-native constraints that survive a repack.
+#[derive(Debug, Clone)]
+struct JobGroup {
+    kernel: KernelId,
+    cores: usize,
+    /// Committed home domain.
+    home: u16,
+    /// Committed remote fraction (ppm).
+    remote_ppm: u32,
+    /// `@dN` pin from the mix (survives repacks).
+    mix_pin: Option<usize>,
+    /// `%r` freeze from the mix (survives repacks).
+    mix_ppm: Option<u32>,
+}
+
+/// One admitted job.
+#[derive(Debug, Clone)]
+struct Job {
+    id: String,
+    mix_label: String,
+    groups: Vec<JobGroup>,
+}
+
+/// The incrementally advanced makespan co-simulation of the committed
+/// placement.
+struct Probe {
+    program: Program,
+    layout: RankLayout,
+    chars: Vec<(KernelId, f64, f64)>,
+    n_ranks: usize,
+    /// Paused engine state (`None` before the first advance or after
+    /// completion).
+    cp: Option<EngineCheckpoint>,
+    /// Next stop time.
+    t_next: f64,
+    /// Final makespan once the simulation completed.
+    makespan: Option<f64>,
+    /// Engine counters of the completed run.
+    stats: SimStats,
+}
+
+impl Probe {
+    /// Advance the simulation by one slice (no-op once complete).
+    /// Returns the simulated time reached.
+    fn advance(&mut self, slice: f64) -> f64 {
+        if let Some(m) = self.makespan {
+            return m;
+        }
+        let config = CoSimConfig::default();
+        let step = match self.cp.take() {
+            None => simulate_placed_until(
+                &self.program,
+                self.n_ranks,
+                &config,
+                &self.chars,
+                &self.layout,
+                RatingMode::Incremental,
+                self.t_next,
+            ),
+            Some(cp) => resume_placed(
+                &self.program,
+                self.n_ranks,
+                &config,
+                &self.chars,
+                &self.layout,
+                RatingMode::Incremental,
+                cp,
+                self.t_next,
+            ),
+        };
+        match step {
+            SimStep::Paused(cp) => {
+                let t = cp.t_end();
+                self.cp = Some(cp);
+                self.t_next += slice;
+                t
+            }
+            SimStep::Done(r) => {
+                let m = r
+                    .finish_s
+                    .iter()
+                    .copied()
+                    .map(|f| if f.is_finite() { f } else { r.t_end_s })
+                    .fold(0.0f64, f64::max);
+                self.makespan = Some(m);
+                self.stats = r.stats;
+                m
+            }
+        }
+    }
+
+    /// Drive the simulation to completion.
+    fn finish(&mut self) -> f64 {
+        while self.makespan.is_none() {
+            self.t_next = f64::INFINITY;
+            self.advance(0.0);
+        }
+        self.makespan.expect("loop exits only when set")
+    }
+}
+
+/// The streaming co-scheduling service. One instance per `repro serve`
+/// session; the score memo and characterization cache are process-wide.
+pub struct Service<'a> {
+    topo: Topology,
+    cfg: ServeConfig,
+    source: CharSource<'a>,
+    memo: &'static ShardedScoreMemo,
+    chars: HashMap<KernelId, (f64, f64)>,
+    jobs: Vec<Job>,
+    /// Result of the latest optimize pass over the fleet.
+    last: Option<OptResult>,
+    probe: Option<Probe>,
+    submits: u64,
+    finishes: u64,
+    repacks: u64,
+    scored: u64,
+    evaluated: u64,
+    probe_resumes: u64,
+}
+
+impl<'a> Service<'a> {
+    /// A service over a topology with a characterization source.
+    pub fn new(topo: Topology, cfg: ServeConfig, source: CharSource<'a>) -> Service<'a> {
+        Service {
+            topo,
+            cfg,
+            source,
+            memo: service_memo(),
+            chars: HashMap::new(),
+            jobs: Vec::new(),
+            last: None,
+            probe: None,
+            submits: 0,
+            finishes: 0,
+            repacks: 0,
+            scored: 0,
+            evaluated: 0,
+            probe_resumes: 0,
+        }
+    }
+
+    /// Live job count.
+    pub fn jobs_len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// The latest optimize result over the fleet (for tests/benches).
+    pub fn last_result(&self) -> Option<&OptResult> {
+        self.last.as_ref()
+    }
+
+    /// The committed placement: per job, `(id, [(kernel, cores, home,
+    /// remote_ppm)])` in admission order (for tests/benches).
+    pub fn placements(&self) -> Vec<(String, Vec<(KernelId, usize, u16, u32)>)> {
+        self.jobs
+            .iter()
+            .map(|j| {
+                (
+                    j.id.clone(),
+                    j.groups
+                        .iter()
+                        .map(|g| (g.kernel, g.cores, g.home, g.remote_ppm))
+                        .collect(),
+                )
+            })
+            .collect()
+    }
+
+    fn search_config(&self) -> SearchConfig {
+        SearchConfig {
+            objective: self.cfg.objective,
+            seed: self.cfg.seed,
+            starts: self.cfg.starts,
+            beam: self.cfg.beam,
+            budget: self.cfg.budget,
+            gb_per_core: self.cfg.gb_per_core,
+            ..SearchConfig::default()
+        }
+    }
+
+    /// Characterize any of `mix`'s kernels the service hasn't seen yet
+    /// (warm [`CharCache::global`] entries make repeats free).
+    fn characterize(&mut self, mix: &Mix) -> Result<()> {
+        let kernels = mix.kernels();
+        let meas = CharCache::global().characterize_source(&self.topo.base, &kernels, &self.source)?;
+        for (&k, c) in meas.iter() {
+            self.chars.insert(k, (c.f, c.bs_gbs));
+        }
+        Ok(())
+    }
+
+    /// One [`OptGroup`] per group of an admitted job. `settled` pins the
+    /// committed placement; otherwise only the mix-native constraints
+    /// apply (the repack path).
+    fn job_groups(job: &Job, chars: &HashMap<KernelId, (f64, f64)>, settled: bool) -> Vec<OptGroup> {
+        job.groups
+            .iter()
+            .map(|g| {
+                let &(f, bs_gbs) = chars.get(&g.kernel).expect("admitted kernels characterized");
+                let (pinned, fixed) = if settled {
+                    (Some(g.home as usize), Some(g.remote_ppm))
+                } else {
+                    (g.mix_pin, g.mix_ppm)
+                };
+                OptGroup {
+                    name: g.kernel.key().to_string(),
+                    kernel: g.kernel,
+                    n: g.cores,
+                    f,
+                    bs_gbs,
+                    pinned,
+                    fixed_remote_ppm: fixed,
+                    kind: GroupKind::Mem,
+                }
+            })
+            .collect()
+    }
+
+    /// Build the fleet's search space: existing jobs first (pinned unless
+    /// `repack`), then the incoming mix's groups under their mix-native
+    /// constraints. Construction mirrors [`SearchSpace::from_mix`] field
+    /// for field, so an empty fleet's space is identical to the one
+    /// `repro optimize` builds for the same mix.
+    fn build_space(&self, incoming: Option<&Mix>, repack: bool) -> Result<SearchSpace> {
+        let mut groups: Vec<OptGroup> = Vec::new();
+        for job in &self.jobs {
+            groups.extend(Self::job_groups(job, &self.chars, !repack));
+        }
+        if let Some(mix) = incoming {
+            for g in &mix.groups {
+                if !matches!(
+                    g.bound,
+                    crate::scenario::BoundHint::Auto | crate::scenario::BoundHint::Mem
+                ) {
+                    return Err(Error::InvalidPlan(format!(
+                        "group '{}:{}{}': the co-scheduling service places groups on the \
+                         DRAM roofline; drop the `{}` suffix",
+                        g.kernel.key(),
+                        g.cores,
+                        g.bound.suffix(),
+                        g.bound.suffix(),
+                    )));
+                }
+                let &(f, bs_gbs) = self.chars.get(&g.kernel).ok_or_else(|| {
+                    Error::InvalidPlan(format!("kernel {:?} not characterized", g.kernel))
+                })?;
+                groups.push(OptGroup {
+                    name: g.kernel.key().to_string(),
+                    kernel: g.kernel,
+                    n: g.cores,
+                    f,
+                    bs_gbs,
+                    pinned: match g.place {
+                        crate::topology::GroupPlacement::Domain(d) => Some(d),
+                        _ => None,
+                    },
+                    fixed_remote_ppm: if g.remote_ppm > 0 { Some(g.remote_ppm) } else { None },
+                    kind: GroupKind::Mem,
+                });
+            }
+        }
+        let domain_cores: Vec<usize> =
+            self.topo.domains.iter().map(|d| d.machine.cores).collect();
+        let mut space = SearchSpace::new(
+            self.topo.shape(),
+            domain_cores,
+            groups,
+            DEFAULT_REMOTE_LEVELS.to_vec(),
+        )?;
+        space.node_of = self.topo.node_of();
+        space.collective_extra_s = self.topo.collective_extra_s();
+        Ok(space)
+    }
+
+    /// Run the shared-memo search over `space` and account its counters.
+    fn optimize_fleet(&mut self, space: &SearchSpace) -> Result<OptResult> {
+        let result =
+            optimize_with_memo(space, &self.search_config(), self.memo, space.fingerprint())?;
+        self.scored += result.scored;
+        self.evaluated += result.evaluated;
+        Ok(result)
+    }
+
+    /// Rebuild the makespan probe for the committed placement.
+    fn rebuild_probe(&mut self, space: &SearchSpace, result: &OptResult) {
+        let (program, layout, chars, n_ranks) =
+            makespan_setup(space, &result.best, self.cfg.gb_per_core);
+        self.probe = if n_ranks > 0 {
+            Some(Probe {
+                program,
+                layout,
+                chars,
+                n_ranks,
+                cp: None,
+                t_next: self.cfg.probe_slice_s.max(1e-6),
+                makespan: None,
+                stats: SimStats::default(),
+            })
+        } else {
+            None
+        };
+    }
+
+    /// Commit `result.best` back onto the jobs (group order is admission
+    /// order, so the space's groups map 1:1 onto the fleet's).
+    fn commit(&mut self, result: &OptResult) {
+        let mut gi = 0;
+        for job in &mut self.jobs {
+            for g in &mut job.groups {
+                g.home = result.best.home[gi];
+                g.remote_ppm = result.best.remote_ppm[gi];
+                gi += 1;
+            }
+        }
+        debug_assert_eq!(gi, result.best.home.len(), "fleet/space group count mismatch");
+    }
+
+    /// Admit a job: parse, characterize, search the residual (or repack),
+    /// commit. Errors leave the fleet untouched.
+    pub fn submit(&mut self, id: &str, mix_spec: &str) -> Result<()> {
+        if self.jobs.iter().any(|j| j.id == id) {
+            return Err(Error::InvalidPlan(format!("job id '{id}' is already live")));
+        }
+        let mix = Mix::parse(mix_spec)?;
+        if mix.groups.is_empty() {
+            return Err(Error::InvalidPlan(format!(
+                "mix '{}' has no active groups to place",
+                mix.label()
+            )));
+        }
+        self.characterize(&mix)?;
+        let repack = self.cfg.repack_every > 0
+            && !self.jobs.is_empty()
+            && (self.submits + 1) % self.cfg.repack_every as u64 == 0;
+        let space = self.build_space(Some(&mix), repack)?;
+        let result = self.optimize_fleet(&space)?;
+        // Only commit after the search succeeded.
+        self.jobs.push(Job {
+            id: id.to_string(),
+            mix_label: mix.label(),
+            groups: mix
+                .groups
+                .iter()
+                .map(|g| JobGroup {
+                    kernel: g.kernel,
+                    cores: g.cores,
+                    home: 0,
+                    remote_ppm: 0,
+                    mix_pin: match g.place {
+                        crate::topology::GroupPlacement::Domain(d) => Some(d),
+                        _ => None,
+                    },
+                    mix_ppm: if g.remote_ppm > 0 { Some(g.remote_ppm) } else { None },
+                })
+                .collect(),
+        });
+        self.commit(&result);
+        self.submits += 1;
+        if repack {
+            self.repacks += 1;
+        }
+        self.rebuild_probe(&space, &result);
+        self.last = Some(result);
+        Ok(())
+    }
+
+    /// Retire a job and exactly re-rate the residual fleet.
+    pub fn finish(&mut self, id: &str) -> Result<()> {
+        let idx = self
+            .jobs
+            .iter()
+            .position(|j| j.id == id)
+            .ok_or_else(|| Error::InvalidPlan(format!("no live job with id '{id}'")))?;
+        self.jobs.remove(idx);
+        self.finishes += 1;
+        if self.jobs.is_empty() {
+            self.last = None;
+            self.probe = None;
+            return Ok(());
+        }
+        // Fully pinned residual space: exactly one candidate, so this is
+        // an exact re-rate of the surviving placement, not a search.
+        let space = self.build_space(None, false)?;
+        let result = self.optimize_fleet(&space)?;
+        self.commit(&result);
+        self.rebuild_probe(&space, &result);
+        self.last = Some(result);
+        Ok(())
+    }
+
+    /// A job's placement and rates, advancing the makespan probe one
+    /// slice.
+    fn query_response(&mut self, id: &str) -> Result<String> {
+        let (job_idx, gi0) = {
+            let mut gi = 0;
+            let mut found = None;
+            for (ji, job) in self.jobs.iter().enumerate() {
+                if job.id == id {
+                    found = Some((ji, gi));
+                    break;
+                }
+                gi += job.groups.len();
+            }
+            found.ok_or_else(|| Error::InvalidPlan(format!("no live job with id '{id}'")))?
+        };
+        let probe_t = match &mut self.probe {
+            Some(p) => {
+                self.probe_resumes += 1;
+                p.advance(self.cfg.probe_slice_s.max(1e-6))
+            }
+            None => 0.0,
+        };
+        let last = self.last.as_ref().expect("live jobs imply a result");
+        let job = &self.jobs[job_idx];
+        let groups: Vec<String> = job
+            .groups
+            .iter()
+            .enumerate()
+            .map(|(k, g)| {
+                format!(
+                    r#"{{"kernel":"{}","cores":{},"home":{},"remote_ppm":{},"rate_gbs":{}}}"#,
+                    g.kernel.key(),
+                    g.cores,
+                    g.home,
+                    g.remote_ppm,
+                    last.best_rates[gi0 + k],
+                )
+            })
+            .collect();
+        Ok(format!(
+            r#"{{"ok":true,"op":"query","id":"{}","mix":"{}","groups":[{}],"probe_t_s":{}}}"#,
+            json_escape(&job.id),
+            json_escape(&job.mix_label),
+            groups.join(","),
+            probe_t,
+        ))
+    }
+
+    /// The full fleet state: placements, completed makespan probe, and
+    /// every cache/search counter.
+    fn snapshot_response(&mut self) -> String {
+        let makespan = match &mut self.probe {
+            Some(p) => {
+                self.probe_resumes += 1;
+                Some(p.finish())
+            }
+            None => None,
+        };
+        let jobs: Vec<String> = self
+            .jobs
+            .iter()
+            .map(|j| {
+                let placement: Vec<String> = j
+                    .groups
+                    .iter()
+                    .map(|g| {
+                        let mut s = format!("{}:{}@d{}", g.kernel.key(), g.cores, g.home);
+                        if g.remote_ppm > 0 {
+                            s.push_str(&format!("%r{}", g.remote_ppm as f64 / 1e6));
+                        }
+                        s
+                    })
+                    .collect();
+                format!(
+                    r#"{{"id":"{}","mix":"{}","placement":"{}"}}"#,
+                    json_escape(&j.id),
+                    json_escape(&j.mix_label),
+                    json_escape(&placement.join("+")),
+                )
+            })
+            .collect();
+        let (memo_hits, memo_misses, memo_entries) = self.memo.stats();
+        let cc = CharCache::global().stats();
+        let score = self.last.as_ref().map(|r| r.best_score);
+        format!(
+            concat!(
+                r#"{{"ok":true,"op":"snapshot","jobs":[{}],"score":{},"makespan_s":{},"#,
+                r#""counters":{{"submits":{},"finishes":{},"repacks":{},"scored":{},"#,
+                r#""evaluated":{},"probe_resumes":{},"#,
+                r#""memo":{{"hits":{},"misses":{},"entries":{}}},"#,
+                r#""char_cache":{{"hits":{},"misses":{},"entries":{}}}}}}}"#
+            ),
+            jobs.join(","),
+            score.map_or_else(|| "null".to_string(), |s| s.to_string()),
+            makespan.map_or_else(|| "null".to_string(), |m| m.to_string()),
+            self.submits,
+            self.finishes,
+            self.repacks,
+            self.scored,
+            self.evaluated,
+            self.probe_resumes,
+            memo_hits,
+            memo_misses,
+            memo_entries,
+            cc.hits,
+            cc.misses,
+            cc.entries,
+        )
+    }
+
+    /// Handle one request line, returning one JSON response line. Every
+    /// failure path returns a structured `"ok":false` response — the
+    /// session keeps running.
+    pub fn handle_line(&mut self, line: &str) -> String {
+        let err = |e: Error| format!(r#"{{"ok":false,"error":"{}"}}"#, json_escape(&e.to_string()));
+        let req = match Request::parse(line) {
+            Ok(r) => r,
+            Err(e) => return err(e),
+        };
+        match req {
+            Request::Submit { id, mix } => match self.submit(&id, &mix) {
+                Ok(()) => {
+                    let last = self.last.as_ref().expect("submit succeeded");
+                    format!(
+                        concat!(
+                            r#"{{"ok":true,"op":"submit","id":"{}","placement":"{}","#,
+                            r#""score":{},"scored":{},"evaluated":{},"jobs":{}}}"#
+                        ),
+                        json_escape(&id),
+                        json_escape(&last.best_label),
+                        last.best_score,
+                        last.scored,
+                        last.evaluated,
+                        self.jobs.len(),
+                    )
+                }
+                Err(e) => err(e),
+            },
+            Request::Finish { id } => match self.finish(&id) {
+                Ok(()) => format!(
+                    r#"{{"ok":true,"op":"finish","id":"{}","jobs":{}}}"#,
+                    json_escape(&id),
+                    self.jobs.len(),
+                ),
+                Err(e) => err(e),
+            },
+            Request::Query { id } => match self.query_response(&id) {
+                Ok(s) => s,
+                Err(e) => err(e),
+            },
+            Request::Snapshot => self.snapshot_response(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::machine_by_name;
+
+    fn service() -> Service<'static> {
+        let m = machine_by_name("rome").unwrap();
+        let topo = Topology::parse(&m, "2x4").unwrap();
+        Service::new(topo, ServeConfig::default(), CharSource::Ecm)
+    }
+
+    #[test]
+    fn submit_finish_query_snapshot_round_trip() {
+        let mut s = service();
+        let r = s.handle_line(r#"{"op":"submit","id":"j0","mix":"dcopy:6"}"#);
+        assert!(r.contains(r#""ok":true"#), "{r}");
+        assert!(r.contains(r#""op":"submit""#), "{r}");
+        let r = s.handle_line(r#"{"op":"submit","id":"j1","mix":"ddot2:6"}"#);
+        assert!(r.contains(r#""jobs":2"#), "{r}");
+        let r = s.handle_line(r#"{"op":"query","id":"j1"}"#);
+        assert!(r.contains(r#""op":"query""#) && r.contains("rate_gbs"), "{r}");
+        let r = s.handle_line(r#"{"op":"finish","id":"j0"}"#);
+        assert!(r.contains(r#""jobs":1"#), "{r}");
+        let r = s.handle_line(r#"{"op":"snapshot"}"#);
+        assert!(r.contains(r#""makespan_s":"#) && r.contains(r#""submits":2"#), "{r}");
+        assert!(r.contains(r#""finishes":1"#), "{r}");
+    }
+
+    #[test]
+    fn errors_are_structured_and_leave_the_fleet_intact() {
+        let mut s = service();
+        assert!(s.handle_line(r#"{"op":"submit","id":"j0","mix":"dcopy:6"}"#).contains("true"));
+        // Duplicate id.
+        let r = s.handle_line(r#"{"op":"submit","id":"j0","mix":"ddot2:4"}"#);
+        assert!(r.contains(r#""ok":false"#) && r.contains("already live"), "{r}");
+        // Unparseable mix.
+        let r = s.handle_line(r#"{"op":"submit","id":"j1","mix":"???"}"#);
+        assert!(r.contains(r#""ok":false"#), "{r}");
+        // Unknown job.
+        let r = s.handle_line(r#"{"op":"finish","id":"nope"}"#);
+        assert!(r.contains(r#""ok":false"#), "{r}");
+        // Garbage line.
+        let r = s.handle_line("garbage {{{");
+        assert!(r.contains(r#""ok":false"#), "{r}");
+        assert_eq!(s.jobs_len(), 1);
+    }
+
+    #[test]
+    fn overfull_admission_is_rejected_and_fleet_survives() {
+        let mut s = service();
+        assert!(s.handle_line(r#"{"op":"submit","id":"a","mix":"dcopy:30"}"#).contains("true"));
+        // 2x4 rome has 64 cores; a second 40-core job cannot fit.
+        let r = s.handle_line(r#"{"op":"submit","id":"b","mix":"ddot2:40"}"#);
+        assert!(r.contains(r#""ok":false"#), "{r}");
+        assert_eq!(s.jobs_len(), 1);
+        // The fleet still answers queries.
+        assert!(s.handle_line(r#"{"op":"query","id":"a"}"#).contains("true"));
+    }
+
+    #[test]
+    fn session_replay_is_deterministic() {
+        let lines = [
+            r#"{"op":"submit","id":"j0","mix":"dcopy:6"}"#,
+            r#"{"op":"submit","id":"j1","mix":"ddot2:6+daxpy:4"}"#,
+            r#"{"op":"query","id":"j0"}"#,
+            r#"{"op":"finish","id":"j0"}"#,
+            r#"{"op":"submit","id":"j2","mix":"stream:8%r0.25"}"#,
+            r#"{"op":"snapshot"}"#,
+        ];
+        let run = || -> Vec<String> {
+            let mut s = service();
+            lines.iter().map(|l| s.handle_line(l)).collect()
+        };
+        let a = run();
+        let b = run();
+        // Everything except the process-global cache counters (which grow
+        // across replays within one process) must match byte for byte.
+        for (x, y) in a.iter().zip(&b).take(lines.len() - 1) {
+            assert_eq!(x, y);
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! The `repro serve` layer: a streaming co-scheduling service.
+//!
+//! `repro optimize` answers one placement question and exits; real
+//! schedulers face a *stream* — jobs arrive, run, and retire while the
+//! fleet's placement must stay good. This module turns the optimizer
+//! into that long-running service:
+//!
+//! * [`request`] — the line-delimited JSON protocol: a dependency-free
+//!   recursive-descent [`request::parse_json`] (the crate links no JSON
+//!   crate by design) and the [`Request`] grammar
+//!   (`submit` / `finish` / `query` / `snapshot`).
+//! * [`fleet`] — the [`Service`] engine: incremental-but-exact admission
+//!   over a pinned residual space, periodic full repacks as a drift
+//!   bound, one process-wide score memo + characterization cache shared
+//!   across all requests, and a checkpoint-resumed makespan probe over
+//!   [`crate::timeline::simulate_placed_until`].
+//!
+//! The protocol is replayable: a fixed-seed session maps a request file
+//! to byte-identical response lines (modulo process-global cache
+//! counters in `snapshot`), which is what the CI smoke test and
+//! `tests/service_conformance.rs` pin. `BENCH_serve.json` measures the
+//! amortized admission throughput against per-request cold `optimize`
+//! runs. See `docs/CLI.md` for the request grammar and a worked session.
+
+pub mod fleet;
+pub mod request;
+
+pub use fleet::{service_memo, ServeConfig, Service};
+pub use request::{json_escape, parse_json, JsonValue, Request};

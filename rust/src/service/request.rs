@@ -1,0 +1,451 @@
+//! The line protocol of `repro serve`: one JSON object per line.
+//!
+//! The repo deliberately carries zero dependencies, so this is a small
+//! hand-rolled recursive-descent JSON parser. It is a *hardened text
+//! surface*: arbitrary bytes must come back as a structured
+//! [`Error::InvalidPlan`] with a byte position — never a panic and never
+//! unbounded recursion (nesting is capped at [`MAX_DEPTH`]). The fuzz
+//! suite (`tests/fuzz_surfaces.rs`) throws byte soups at
+//! [`Request::parse`] to hold it to that.
+//!
+//! Request grammar (one object per line; unknown keys are ignored):
+//!
+//! ```text
+//! {"op":"submit","id":"<job>","mix":"<mix DSL>"}   admit a job
+//! {"op":"finish","id":"<job>"}                     retire a job
+//! {"op":"query","id":"<job>"}                      placement + rates
+//! {"op":"snapshot"}                                fleet state + counters
+//! ```
+
+use crate::error::{Error, Result};
+
+/// Maximum nesting depth the parser accepts (arrays/objects). Requests
+/// are flat in practice; the cap turns a `[[[[…` bomb into an error
+/// instead of a stack overflow.
+const MAX_DEPTH: usize = 64;
+
+/// A parsed JSON value. Object keys keep their input order (`Vec`, not a
+/// map) so round-trips and error positions stay deterministic.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    /// `null`.
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// Any JSON number (always parsed as `f64`).
+    Num(f64),
+    /// A string, with escapes resolved.
+    Str(String),
+    /// An array.
+    Arr(Vec<JsonValue>),
+    /// An object, in key order.
+    Obj(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    /// The value of `key` if this is an object containing it.
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Obj(pairs) => {
+                pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+            }
+            _ => None,
+        }
+    }
+
+    /// The string content if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Parse one JSON document (surrounding whitespace allowed, trailing
+/// garbage rejected).
+pub fn parse_json(s: &str) -> Result<JsonValue> {
+    let mut p = Parser { bytes: s.as_bytes(), pos: 0 };
+    p.skip_ws();
+    let v = p.value(0)?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(p.err("end of input"));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn err(&self, expected: &str) -> Error {
+        let found = match self.bytes.get(self.pos) {
+            Some(&b) if b.is_ascii_graphic() => format!("'{}'", b as char),
+            Some(&b) => format!("byte 0x{b:02x}"),
+            None => "end of input".to_string(),
+        };
+        Error::InvalidPlan(format!(
+            "request parse error at byte {}: expected {expected}, found {found}",
+            self.pos
+        ))
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.bytes.get(self.pos), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn eat(&mut self, b: u8) -> bool {
+        if self.bytes.get(self.pos) == Some(&b) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<JsonValue> {
+        if depth > MAX_DEPTH {
+            return Err(Error::InvalidPlan(format!(
+                "request parse error at byte {}: nesting deeper than {MAX_DEPTH}",
+                self.pos
+            )));
+        }
+        match self.bytes.get(self.pos) {
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
+            Some(b'"') => Ok(JsonValue::Str(self.string()?)),
+            Some(b't') => self.literal(b"true", JsonValue::Bool(true)),
+            Some(b'f') => self.literal(b"false", JsonValue::Bool(false)),
+            Some(b'n') => self.literal(b"null", JsonValue::Null),
+            Some(b'-' | b'0'..=b'9') => self.number(),
+            _ => Err(self.err("a JSON value")),
+        }
+    }
+
+    fn literal(&mut self, word: &[u8], v: JsonValue) -> Result<JsonValue> {
+        if self.bytes[self.pos..].starts_with(word) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(self.err(std::str::from_utf8(word).expect("ascii literal")))
+        }
+    }
+
+    fn number(&mut self) -> Result<JsonValue> {
+        let start = self.pos;
+        if self.eat(b'-') {}
+        while matches!(self.bytes.get(self.pos), Some(b'0'..=b'9')) {
+            self.pos += 1;
+        }
+        if self.eat(b'.') {
+            while matches!(self.bytes.get(self.pos), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.bytes.get(self.pos), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.bytes.get(self.pos), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.bytes.get(self.pos), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).expect("ascii number");
+        match text.parse::<f64>() {
+            Ok(n) if n.is_finite() => Ok(JsonValue::Num(n)),
+            _ => {
+                self.pos = start;
+                Err(self.err("a finite JSON number"))
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        if !self.eat(b'"') {
+            return Err(self.err("'\"'"));
+        }
+        let mut out = String::new();
+        loop {
+            match self.bytes.get(self.pos) {
+                None => return Err(self.err("closing '\"'")),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.bytes.get(self.pos) {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'u') => {
+                            self.pos += 1; // past the 'u'
+                            let cp = self.hex4()?;
+                            // Surrogate pairs: a high surrogate must be
+                            // followed by an escaped low surrogate.
+                            let c = if (0xD800..0xDC00).contains(&cp) {
+                                if !(self.eat(b'\\') && self.eat(b'u')) {
+                                    return Err(self.err("a low-surrogate \\u escape"));
+                                }
+                                let lo = self.hex4()?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    return Err(self.err("a low surrogate"));
+                                }
+                                let v = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                char::from_u32(v)
+                            } else {
+                                char::from_u32(cp)
+                            };
+                            match c {
+                                Some(c) => out.push(c),
+                                None => return Err(self.err("a valid unicode escape")),
+                            }
+                            // hex4 advanced past the digits already.
+                            continue;
+                        }
+                        _ => return Err(self.err("a string escape")),
+                    }
+                    self.pos += 1;
+                }
+                Some(&b) if b < 0x20 => return Err(self.err("no raw control bytes")),
+                Some(_) => {
+                    // Copy one UTF-8 scalar (input is &str, so boundaries
+                    // are valid).
+                    let rest = std::str::from_utf8(&self.bytes[self.pos..])
+                        .map_err(|_| self.err("valid UTF-8"))?;
+                    let c = rest.chars().next().expect("non-empty checked above");
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    /// Four hex digits starting at the current position.
+    fn hex4(&mut self) -> Result<u32> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let d = match self.bytes.get(self.pos) {
+                Some(&b @ b'0'..=b'9') => (b - b'0') as u32,
+                Some(&b @ b'a'..=b'f') => (b - b'a' + 10) as u32,
+                Some(&b @ b'A'..=b'F') => (b - b'A' + 10) as u32,
+                _ => return Err(self.err("4 hex digits")),
+            };
+            v = (v << 4) | d;
+            self.pos += 1;
+        }
+        Ok(v)
+    }
+
+    fn array(&mut self, depth: usize) -> Result<JsonValue> {
+        self.pos += 1; // past '['
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.eat(b']') {
+            return Ok(JsonValue::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value(depth + 1)?);
+            self.skip_ws();
+            if self.eat(b']') {
+                return Ok(JsonValue::Arr(items));
+            }
+            if !self.eat(b',') {
+                return Err(self.err("',' or ']'"));
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<JsonValue> {
+        self.pos += 1; // past '{'
+        let mut pairs = Vec::new();
+        self.skip_ws();
+        if self.eat(b'}') {
+            return Ok(JsonValue::Obj(pairs));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            if !self.eat(b':') {
+                return Err(self.err("':'"));
+            }
+            self.skip_ws();
+            let val = self.value(depth + 1)?;
+            pairs.push((key, val));
+            self.skip_ws();
+            if self.eat(b'}') {
+                return Ok(JsonValue::Obj(pairs));
+            }
+            if !self.eat(b',') {
+                return Err(self.err("',' or '}'"));
+            }
+        }
+    }
+}
+
+/// Escape a string for embedding in emitted JSON.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// One request of the serve protocol.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Admit job `id` running `mix` (mix DSL, see `Mix::parse`).
+    Submit {
+        /// Job identifier (any non-empty string, unique among live jobs).
+        id: String,
+        /// The mix DSL spec.
+        mix: String,
+    },
+    /// Retire job `id`, freeing its cores.
+    Finish {
+        /// Job identifier.
+        id: String,
+    },
+    /// Report job `id`'s placement and current model rates.
+    Query {
+        /// Job identifier.
+        id: String,
+    },
+    /// Report the whole fleet, final makespan probe, and counters.
+    Snapshot,
+}
+
+impl Request {
+    /// Parse one request line. Never panics on malformed input.
+    pub fn parse(line: &str) -> Result<Request> {
+        let v = parse_json(line)?;
+        let op = v
+            .get("op")
+            .and_then(JsonValue::as_str)
+            .ok_or_else(|| Error::InvalidPlan("request needs a string \"op\" key".into()))?;
+        let id_of = |v: &JsonValue| -> Result<String> {
+            let id = v
+                .get("id")
+                .and_then(JsonValue::as_str)
+                .ok_or_else(|| {
+                    Error::InvalidPlan(format!("op \"{op}\" needs a string \"id\" key"))
+                })?;
+            if id.is_empty() {
+                return Err(Error::InvalidPlan("job id must be non-empty".into()));
+            }
+            Ok(id.to_string())
+        };
+        match op {
+            "submit" => {
+                let mix = v
+                    .get("mix")
+                    .and_then(JsonValue::as_str)
+                    .ok_or_else(|| {
+                        Error::InvalidPlan("op \"submit\" needs a string \"mix\" key".into())
+                    })?
+                    .to_string();
+                Ok(Request::Submit { id: id_of(&v)?, mix })
+            }
+            "finish" => Ok(Request::Finish { id: id_of(&v)? }),
+            "query" => Ok(Request::Query { id: id_of(&v)? }),
+            "snapshot" => Ok(Request::Snapshot),
+            other => Err(Error::InvalidPlan(format!(
+                "unknown op '{other}' (submit, finish, query, snapshot)"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_each_request_form() {
+        assert_eq!(
+            Request::parse(r#"{"op":"submit","id":"j0","mix":"dcopy:6"}"#).unwrap(),
+            Request::Submit { id: "j0".into(), mix: "dcopy:6".into() }
+        );
+        assert_eq!(
+            Request::parse(r#"{"op":"finish","id":"j0"}"#).unwrap(),
+            Request::Finish { id: "j0".into() }
+        );
+        assert_eq!(
+            Request::parse(r#"{"op":"query","id":"j0"}"#).unwrap(),
+            Request::Query { id: "j0".into() }
+        );
+        assert_eq!(Request::parse(r#"{"op":"snapshot"}"#).unwrap(), Request::Snapshot);
+        // Unknown keys are ignored; key order is free.
+        assert_eq!(
+            Request::parse(r#"{"mix":"ddot2:4","note":1,"id":"a","op":"submit"}"#).unwrap(),
+            Request::Submit { id: "a".into(), mix: "ddot2:4".into() }
+        );
+    }
+
+    #[test]
+    fn structured_errors_on_malformed_input() {
+        for bad in [
+            "",
+            "{",
+            "notjson",
+            r#"{"op":"submit"}"#,
+            r#"{"op":"launch","id":"x"}"#,
+            r#"{"op":"submit","id":"","mix":"dcopy:4"}"#,
+            r#"{"op":"submit","id":3,"mix":"dcopy:4"}"#,
+            r#"{"op":"snapshot"} trailing"#,
+            "{\"op\":\"snapshot\"\u{0}}",
+        ] {
+            let e = Request::parse(bad).unwrap_err();
+            assert!(matches!(e, Error::InvalidPlan(_)), "{bad:?} -> {e:?}");
+        }
+    }
+
+    #[test]
+    fn deep_nesting_is_rejected_not_overflowed() {
+        let mut s = String::from(r#"{"op":"#);
+        s.push_str(&"[".repeat(10_000));
+        let e = Request::parse(&s).unwrap_err();
+        assert!(format!("{e}").contains("nesting"), "{e}");
+    }
+
+    #[test]
+    fn strings_resolve_escapes_and_surrogates() {
+        let v = parse_json(r#""a\"b\\c\nA😀""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "a\"b\\c\nA\u{1F600}");
+        // Escaped BMP scalar plus an escaped surrogate pair.
+        let v = parse_json("\"\\u0041\\ud83d\\ude00\"").unwrap();
+        assert_eq!(v.as_str().unwrap(), "A\u{1F600}");
+        // A lone high surrogate is an error, not a panic.
+        assert!(parse_json(r#""\ud83d x""#).is_err());
+    }
+
+    #[test]
+    fn json_escape_round_trips_through_parse() {
+        let original = "mix \"x\"\\\n\tudone\u{1}";
+        let quoted = format!("\"{}\"", json_escape(original));
+        let v = parse_json(&quoted).unwrap();
+        assert_eq!(v.as_str().unwrap(), original);
+    }
+}

@@ -54,6 +54,17 @@
 //!   *observed* — at a completion, a composition change, or a rate change
 //!   in their own domain — so an event touches O(affected domains ×
 //!   kernels) state, not O(all domains × kernels).
+//!
+//! # Checkpoint / resume
+//!
+//! [`simulate_placed_until`] runs the same loop but stops once the next
+//! event would land past a stop time, returning an [`EngineCheckpoint`]
+//! that owns the complete mutable state; [`resume_placed`] continues from
+//! it. The pause check only *reads* the next completion time and the
+//! queue head, so a paused-and-resumed run is bit-identical to an
+//! uninterrupted [`simulate_placed`] (the `repro serve` makespan probe
+//! leans on this to advance a fleet simulation incrementally across
+//! requests).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -204,6 +215,9 @@ struct Sim<'a> {
     wake_set: Vec<usize>,
     events: u64,
     stats: SimStats,
+    /// Simulated time of the last processed event (the eventual
+    /// `t_end_s`; survives a pause/resume cycle via the checkpoint).
+    t_end: f64,
 }
 
 /// Run the event-driven co-simulation on a single contention domain (the
@@ -263,6 +277,136 @@ pub fn simulate_placed_mode(
     layout: &RankLayout,
     mode: RatingMode,
 ) -> CoSimResult {
+    match simulate_placed_until(program, n_ranks, config, chars, layout, mode, f64::INFINITY) {
+        SimStep::Done(r) => r,
+        SimStep::Paused(_) => unreachable!("an unbounded run cannot pause"),
+    }
+}
+
+/// Outcome of one bounded stretch of simulation.
+pub enum SimStep {
+    /// The program ran to completion (or hit `t_max_s`); the result is
+    /// final.
+    Done(CoSimResult),
+    /// Simulated time reached `t_stop` with work pending. Resume with
+    /// [`resume_placed`].
+    Paused(EngineCheckpoint),
+}
+
+/// The complete mutable engine state of a paused run.
+///
+/// Opaque by design: the only valid use is handing it back to
+/// [`resume_placed`] with the *same* program, config, characterizations,
+/// layout, and rating mode (basic dimension mismatches panic; semantic
+/// mismatches are the caller's contract). The checkpoint owns every
+/// mutable piece of the engine — rank states, the event queue (cloning a
+/// `BinaryHeap` preserves its internal layout, so a resumed run pops the
+/// exact same sequence), the per-slot completion heaps, drained-bytes
+/// integrals, noise RNG streams — so a paused-and-resumed run is
+/// bit-identical to an uninterrupted one (pinned in
+/// `tests/service_conformance.rs`). The memoized sharing models are *not*
+/// checkpointed: they are pure composition → rate memos, rebuilt empty on
+/// resume, which changes the `share_*`/`remote_*` cache counters (they
+/// then cover only the final segment) but never a rate.
+#[derive(Clone)]
+pub struct EngineCheckpoint {
+    n: usize,
+    nd: usize,
+    nk: usize,
+    total: usize,
+    states: Vec<RankState>,
+    completed: Vec<i64>,
+    trace: TraceLog,
+    finish: Vec<f64>,
+    noise: Vec<NoiseStream>,
+    collective_arrived: Vec<u32>,
+    queue: EventQueue,
+    counts: Vec<u16>,
+    integral: Vec<f64>,
+    rates: Vec<f64>,
+    t_fold: Vec<f64>,
+    dirty: Vec<bool>,
+    t_complete: Vec<f64>,
+    run_ver: Vec<u64>,
+    groups: Vec<BinaryHeap<Reverse<u128>>>,
+    events: u64,
+    stats: SimStats,
+    t_end: f64,
+}
+
+impl EngineCheckpoint {
+    /// Simulated time of the last processed event.
+    pub fn t_end(&self) -> f64 {
+        self.t_end
+    }
+
+    /// Events processed so far.
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+}
+
+/// How [`Sim::run_until`] stopped.
+enum StepEnd {
+    Finished,
+    Paused,
+}
+
+/// [`simulate_placed_mode`], but stop once the next event would land
+/// past `t_stop` (events at exactly `t_stop` still fire). Returns the
+/// final result if the program finished first, otherwise a resumable
+/// [`EngineCheckpoint`]. `t_stop = ∞` never pauses — this is exactly the
+/// code path of [`simulate_placed`].
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_placed_until(
+    program: &Program,
+    n_ranks: usize,
+    config: &CoSimConfig,
+    chars: &[(KernelId, f64, f64)],
+    layout: &RankLayout,
+    mode: RatingMode,
+    t_stop: f64,
+) -> SimStep {
+    let mut sim = build_sim(program, n_ranks, config, chars, layout, mode);
+    sim.seed();
+    drive(sim, t_stop)
+}
+
+/// Resume a paused run from its checkpoint up to a new `t_stop`. The
+/// caller must pass the same program, config, characterizations, layout,
+/// and mode the checkpoint was taken under.
+#[allow(clippy::too_many_arguments)]
+pub fn resume_placed(
+    program: &Program,
+    n_ranks: usize,
+    config: &CoSimConfig,
+    chars: &[(KernelId, f64, f64)],
+    layout: &RankLayout,
+    mode: RatingMode,
+    cp: EngineCheckpoint,
+    t_stop: f64,
+) -> SimStep {
+    let mut sim = build_sim(program, n_ranks, config, chars, layout, mode);
+    sim.restore(cp);
+    drive(sim, t_stop)
+}
+
+fn drive(mut sim: Sim<'_>, t_stop: f64) -> SimStep {
+    match sim.run_until(t_stop) {
+        StepEnd::Finished => SimStep::Done(sim.finalize()),
+        StepEnd::Paused => SimStep::Paused(sim.checkpoint()),
+    }
+}
+
+/// Validate the inputs and assemble a fresh (un-seeded) engine.
+fn build_sim<'a>(
+    program: &'a Program,
+    n_ranks: usize,
+    config: &CoSimConfig,
+    chars: &[(KernelId, f64, f64)],
+    layout: &RankLayout,
+    mode: RatingMode,
+) -> Sim<'a> {
     let nd = layout.n_domains;
     assert_eq!(layout.rank_domain.len(), n_ranks, "layout must place every rank");
     assert_eq!(layout.bw_scale.len(), nd, "layout must scale every domain");
@@ -366,7 +510,7 @@ pub fn simulate_placed_mode(
         .collect();
 
     let scratch_len = if remote.is_some() { dpn * nk } else { 0 };
-    let sim = Sim {
+    Sim {
         program,
         infos,
         n: n_ranks,
@@ -403,8 +547,8 @@ pub fn simulate_placed_mode(
         wake_set: Vec::new(),
         events: 0,
         stats: SimStats::default(),
-    };
-    sim.run()
+        t_end: 0.0,
+    }
 }
 
 impl Sim<'_> {
@@ -716,23 +860,40 @@ impl Sim<'_> {
         self.wake_neighbors(t);
     }
 
-    fn run(mut self) -> CoSimResult {
+    /// Schedule the initial events of a fresh run: staggered rank starts
+    /// and the first noise arrival of every enabled stream. Never called
+    /// on a restored checkpoint (its queue already carries the pending
+    /// events).
+    fn seed(&mut self) {
         for r in 0..self.n {
             self.queue.push(r as f64 * self.stagger, EventKind::Start, r);
             if self.noise[r].enabled() {
                 self.queue.push(self.noise[r].next_at(), EventKind::Noise, r);
             }
         }
-        let mut t_end = 0.0f64;
+    }
+
+    /// Drive the event loop until the program finishes, `t_max` is hit
+    /// (both `Finished`), or the next event would land past `t_stop`
+    /// (`Paused`). The pause check observes only the *times* of the next
+    /// completion and queue head — it consumes nothing — so pausing is
+    /// invisible to the event sequence.
+    fn run_until(&mut self, t_stop: f64) -> StepEnd {
         loop {
             let tq = self.queue.peek_time().unwrap_or(f64::INFINITY);
             let tc = self.next_complete();
+            if tc.min(tq) > t_stop {
+                if self.queue.is_empty() && tc == f64::INFINITY {
+                    return StepEnd::Finished; // nothing pending at all
+                }
+                return StepEnd::Paused;
+            }
             // Strict `<`: at equal times queue events fire first (completion
             // has the lowest tie-break priority, as in the legacy stepper).
             if tc < tq {
                 if tc > self.t_max {
-                    t_end = self.t_max;
-                    break;
+                    self.t_end = self.t_max;
+                    return StepEnd::Finished;
                 }
                 let t = tc;
                 // Every domain projecting this exact instant completes now;
@@ -746,14 +907,14 @@ impl Sim<'_> {
                     }
                 }
                 self.events += 1;
-                t_end = t;
+                self.t_end = t;
                 self.do_completions(t);
                 self.refresh(t);
                 continue;
             }
             let ev = match self.queue.pop() {
                 Some(e) => e,
-                None => break,
+                None => return StepEnd::Finished,
             };
             if ev.kind == EventKind::Noise {
                 // Valid only while the rank runs a kernel and the arrival
@@ -765,12 +926,12 @@ impl Sim<'_> {
                 }
             }
             if ev.t > self.t_max {
-                t_end = self.t_max;
-                break;
+                self.t_end = self.t_max;
+                return StepEnd::Finished;
             }
             self.events += 1;
             let t = ev.t;
-            t_end = t;
+            self.t_end = t;
             match ev.kind {
                 EventKind::Start => {
                     self.states[ev.idx] = RankState::Ready { flat: 0 };
@@ -838,6 +999,11 @@ impl Sim<'_> {
             }
             self.refresh(t);
         }
+    }
+
+    /// Fold the sharing-model cache counters into the stats and emit the
+    /// final result.
+    fn finalize(self) -> CoSimResult {
         let mut stats = self.stats;
         for c in &self.share {
             let s = c.stats();
@@ -853,10 +1019,66 @@ impl Sim<'_> {
         CoSimResult {
             trace: self.trace,
             finish_s: self.finish,
-            t_end_s: t_end,
+            t_end_s: self.t_end,
             events: self.events,
             stats,
         }
+    }
+
+    /// Move the mutable engine state out into a resumable checkpoint.
+    fn checkpoint(self) -> EngineCheckpoint {
+        EngineCheckpoint {
+            n: self.n,
+            nd: self.nd,
+            nk: self.nk,
+            total: self.total,
+            states: self.states,
+            completed: self.completed,
+            trace: self.trace,
+            finish: self.finish,
+            noise: self.noise,
+            collective_arrived: self.collective_arrived,
+            queue: self.queue,
+            counts: self.counts,
+            integral: self.integral,
+            rates: self.rates,
+            t_fold: self.t_fold,
+            dirty: self.dirty,
+            t_complete: self.t_complete,
+            run_ver: self.run_ver,
+            groups: self.groups,
+            events: self.events,
+            stats: self.stats,
+            t_end: self.t_end,
+        }
+    }
+
+    /// Overwrite the freshly built (un-seeded) engine with a checkpoint's
+    /// state. Dimension mismatches mean the caller resumed against a
+    /// different program/layout — a contract violation, so panic.
+    fn restore(&mut self, cp: EngineCheckpoint) {
+        assert_eq!(self.n, cp.n, "checkpoint resumed with a different rank count");
+        assert_eq!(self.nd, cp.nd, "checkpoint resumed with a different domain count");
+        assert_eq!(self.nk, cp.nk, "checkpoint resumed with different kernel characterizations");
+        assert_eq!(self.total, cp.total, "checkpoint resumed with a different program");
+        self.states = cp.states;
+        self.completed = cp.completed;
+        self.trace = cp.trace;
+        self.finish = cp.finish;
+        self.noise = cp.noise;
+        self.collective_arrived = cp.collective_arrived;
+        self.queue = cp.queue;
+        self.counts = cp.counts;
+        self.integral = cp.integral;
+        self.rates = cp.rates;
+        self.t_fold = cp.t_fold;
+        self.dirty = cp.dirty;
+        self.t_complete = cp.t_complete;
+        self.run_ver = cp.run_ver;
+        self.groups = cp.groups;
+        self.events = cp.events;
+        self.stats = cp.stats;
+        self.t_end = cp.t_end;
     }
 }
 
@@ -1258,6 +1480,58 @@ mod tests {
         );
         assert_eq!(full.stats.node_rates_reused, 0);
         assert!(incr.stats.remote_misses > 0);
+    }
+
+    #[test]
+    fn paused_and_resumed_run_is_bit_identical() {
+        // Drive the same noisy cluster run in 1 ms slices through the
+        // checkpoint API and compare against the uninterrupted run, bit
+        // for bit (stats excluded: the rebuilt share/remote memos count
+        // only the final segment).
+        let mut c = cfg();
+        c.noise = NoiseModel::mild(7);
+        c.initial_stagger_s = 1e-4;
+        let prog = one_kernel_program(9e8);
+        let chars = [(KernelId::Ddot2, 0.4, 100.0)];
+        let layout = two_node_layout(0.4);
+        let oneshot = simulate_placed(&prog, 8, &c, &chars, &layout);
+        let mut t_stop = 1e-3;
+        let mut step =
+            simulate_placed_until(&prog, 8, &c, &chars, &layout, RatingMode::Incremental, t_stop);
+        let mut resumes = 0;
+        let sliced = loop {
+            match step {
+                SimStep::Done(r) => break r,
+                SimStep::Paused(cp) => {
+                    assert!(cp.t_end() <= t_stop);
+                    t_stop += 1e-3;
+                    resumes += 1;
+                    step = resume_placed(
+                        &prog,
+                        8,
+                        &c,
+                        &chars,
+                        &layout,
+                        RatingMode::Incremental,
+                        cp,
+                        t_stop,
+                    );
+                }
+            }
+        };
+        assert!(resumes > 3, "test slices too coarse to exercise resume ({resumes})");
+        assert_eq!(oneshot.trace.records.len(), sliced.trace.records.len());
+        for (x, y) in oneshot.trace.records.iter().zip(&sliced.trace.records) {
+            assert_eq!(x.rank, y.rank);
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.t_start.to_bits(), y.t_start.to_bits());
+            assert_eq!(x.t_end.to_bits(), y.t_end.to_bits());
+        }
+        for (a, b) in oneshot.finish_s.iter().zip(&sliced.finish_s) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(oneshot.t_end_s.to_bits(), sliced.t_end_s.to_bits());
+        assert_eq!(oneshot.events, sliced.events);
     }
 
     #[test]

@@ -142,7 +142,12 @@ fn unpack(key: u128) -> Event {
 }
 
 /// Deterministic min-queue of [`Event`]s over packed `u128` keys.
-#[derive(Default)]
+///
+/// `Clone` is derived so a paused simulation can checkpoint the queue
+/// (`engine::EngineCheckpoint`): cloning a [`BinaryHeap`] preserves its
+/// internal layout, so a resumed run pops the exact same sequence as an
+/// uninterrupted one.
+#[derive(Default, Clone)]
 pub struct EventQueue {
     heap: BinaryHeap<Reverse<u128>>,
     seq: u64,

@@ -20,7 +20,10 @@
 //!   concurrent per-domain timelines over one shared event queue; on
 //!   cluster layouts the coupled remote path re-rates *per node*,
 //!   incrementally — see [`engine::RatingMode`] and the engine's module
-//!   docs on cluster scaling).
+//!   docs on cluster scaling). A run can also be paused at a stop time
+//!   and resumed bit-identically from its [`engine::EngineCheckpoint`]
+//!   ([`engine::simulate_placed_until`] / [`engine::resume_placed`] —
+//!   the incremental makespan probe of `repro serve`).
 //!
 //! [`crate::desync::CoSimEngine`] is the user-facing driver over this
 //! layer; the legacy stepper survives behind the `legacy-stepper` feature
@@ -64,5 +67,8 @@
 pub mod event;
 pub mod engine;
 
-pub use engine::{simulate, simulate_placed, simulate_placed_mode, RatingMode};
+pub use engine::{
+    resume_placed, simulate, simulate_placed, simulate_placed_mode, simulate_placed_until,
+    EngineCheckpoint, RatingMode, SimStep,
+};
 pub use event::{Event, EventKind, EventQueue};

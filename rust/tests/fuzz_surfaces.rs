@@ -1,0 +1,209 @@
+//! Fuzz-style never-panic property tests for the two text surfaces of
+//! the crate: the mix/scenario DSL (`scenario::spec`) and the `repro
+//! serve` request protocol (`service::request`).
+//!
+//! Both parsers face hostile input — the DSL arrives via `--mix` and the
+//! request parser via a long-running stdin stream — so every byte soup
+//! must come back as a structured [`membw::Error`], never a panic, and
+//! every valid spec must survive a Display → parse round trip. The
+//! generators are seeded xorshift, so failures reproduce exactly.
+
+use membw::scenario::{Mix, Scenario};
+use membw::service::{parse_json, Request};
+
+/// Deterministic xorshift64* driver.
+struct XorShift(u64);
+
+impl XorShift {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n as u64) as usize
+    }
+
+    /// A printable-heavy but arbitrary byte string (always valid UTF-8 —
+    /// both surfaces take `&str`, so UTF-8 validity is the caller's
+    /// contract; hostile *bytes* are rejected upstream by I/O).
+    fn soup(&mut self, max_len: usize) -> String {
+        let len = self.below(max_len + 1);
+        (0..len)
+            .map(|_| {
+                match self.below(10) {
+                    // DSL/JSON-relevant punctuation, to reach deep parser states.
+                    0 => *b"+:@%./{}[]\",\\ud".get(self.below(15)).unwrap() as char,
+                    // Digits and signs.
+                    1 | 2 => *b"0123456789-+.eE".get(self.below(15)).unwrap() as char,
+                    // Keywords fragments.
+                    3 => *b"dcopystreamidlesubmt".get(self.below(20)).unwrap() as char,
+                    // Any printable ASCII.
+                    4..=7 => (0x20 + self.below(0x5f) as u8) as char,
+                    // Control bytes.
+                    8 => (self.below(0x20) as u8) as char,
+                    // Non-ASCII scalar values.
+                    _ => char::from_u32(0xa0 + self.next() as u32 % 0x2_0000)
+                        .unwrap_or('\u{fffd}'),
+                }
+            })
+            .collect()
+    }
+
+    /// Mutate a valid template: splice, truncate, duplicate, or corrupt.
+    fn mutate(&mut self, template: &str) -> String {
+        let mut s: Vec<char> = template.chars().collect();
+        for _ in 0..1 + self.below(4) {
+            if s.is_empty() {
+                break;
+            }
+            match self.below(4) {
+                0 => {
+                    let at = self.below(s.len());
+                    s.truncate(at);
+                }
+                1 => {
+                    let at = self.below(s.len());
+                    s.remove(at);
+                }
+                2 => {
+                    let at = self.below(s.len() + 1);
+                    let c = (0x20 + self.below(0x5f) as u8) as char;
+                    s.insert(at, c);
+                }
+                _ => {
+                    let at = self.below(s.len());
+                    let from = self.below(s.len());
+                    s[at] = s[from];
+                }
+            }
+        }
+        s.into_iter().collect()
+    }
+}
+
+const KERNELS: [&str; 8] =
+    ["dcopy", "ddot2", "stream", "daxpy", "vecsum", "dscal", "waxpby", "ddot1"];
+const FRACS: [&str; 3] = ["0.1", "0.25", "0.5"];
+
+/// A random syntactically valid mix spec (groups with optional `@dN`
+/// pins, `@mem` bounds, `%r` fractions, optional idle tail — all
+/// suffix-order combinations the DSL accepts).
+fn random_valid_mix(rng: &mut XorShift) -> String {
+    let n_groups = 1 + rng.below(4);
+    let mut parts: Vec<String> = (0..n_groups)
+        .map(|_| {
+            let mut g = format!("{}:{}", KERNELS[rng.below(KERNELS.len())], 1 + rng.below(8));
+            if rng.below(3) == 0 {
+                g.push_str(&format!("@d{}", rng.below(8)));
+            }
+            if rng.below(4) == 0 {
+                g.push_str("@mem");
+            }
+            if rng.below(3) == 0 {
+                g.push_str(&format!("%r{}", FRACS[rng.below(FRACS.len())]));
+            }
+            g
+        })
+        .collect();
+    if rng.below(3) == 0 {
+        parts.push(format!("idle:{}", 1 + rng.below(6)));
+    }
+    parts.join("+")
+}
+
+#[test]
+fn mix_and_scenario_parsers_never_panic_on_soup() {
+    let mut rng = XorShift(0xfeed_beef_0001);
+    for _ in 0..4000 {
+        let s = rng.soup(80);
+        // Any Err is fine; a panic fails the test by unwinding.
+        let _ = Mix::parse(&s);
+        let _ = Scenario::parse("fuzz", &s);
+    }
+}
+
+#[test]
+fn mix_parser_never_panics_on_mutated_valid_specs() {
+    let mut rng = XorShift(0xfeed_beef_0002);
+    for _ in 0..4000 {
+        let template = random_valid_mix(&mut rng);
+        let s = rng.mutate(&template);
+        let _ = Mix::parse(&s);
+        // Scenario shares the group grammar; `/` separators come from
+        // mutation occasionally.
+        let _ = Scenario::parse("fuzz", &s);
+    }
+}
+
+#[test]
+fn valid_mixes_round_trip_through_their_canonical_label() {
+    let mut rng = XorShift(0xfeed_beef_0003);
+    for _ in 0..500 {
+        let spec = random_valid_mix(&mut rng);
+        let mix = Mix::parse(&spec).unwrap_or_else(|e| panic!("'{spec}' must parse: {e}"));
+        let label = mix.label();
+        let reparsed =
+            Mix::parse(&label).unwrap_or_else(|e| panic!("canonical '{label}' must parse: {e}"));
+        assert_eq!(reparsed.label(), label, "canonical form must be a fixed point");
+        assert_eq!(reparsed.groups.len(), mix.groups.len());
+        assert_eq!(reparsed.idle_cores, mix.idle_cores);
+        for (a, b) in reparsed.groups.iter().zip(&mix.groups) {
+            assert_eq!(a.kernel, b.kernel);
+            assert_eq!(a.cores, b.cores);
+            assert_eq!(a.remote_ppm, b.remote_ppm);
+        }
+    }
+}
+
+#[test]
+fn request_parser_never_panics_on_soup() {
+    let mut rng = XorShift(0xfeed_beef_0004);
+    for _ in 0..4000 {
+        let s = rng.soup(120);
+        let _ = parse_json(&s);
+        let _ = Request::parse(&s);
+    }
+}
+
+#[test]
+fn request_parser_never_panics_on_mutated_valid_requests() {
+    let templates = [
+        r#"{"op":"submit","id":"j0","mix":"dcopy:6+ddot2:6@d3%r0.25"}"#,
+        r#"{"op":"finish","id":"j0"}"#,
+        r#"{"op":"query","id":"j-é😀"}"#,
+        r#"{"op":"snapshot"}"#,
+        r#"{"op":"submit","id":"x","mix":"stream:4","extra":[1,2,{"a":null}]}"#,
+    ];
+    let mut rng = XorShift(0xfeed_beef_0005);
+    for _ in 0..4000 {
+        let s = rng.mutate(templates[rng.below(templates.len())]);
+        let _ = parse_json(&s);
+        let _ = Request::parse(&s);
+    }
+}
+
+#[test]
+fn valid_requests_parse_to_their_structured_form() {
+    // The happy paths stay reachable under the same entry points the fuzz
+    // loops hammer (guards the fuzz tests against vacuous success).
+    assert!(matches!(
+        Request::parse(r#"{"op":"submit","id":"a","mix":"dcopy:4"}"#),
+        Ok(Request::Submit { .. })
+    ));
+    assert!(matches!(
+        Request::parse(r#"{"op":"finish","id":"a"}"#),
+        Ok(Request::Finish { .. })
+    ));
+    assert!(matches!(
+        Request::parse(r#"{"op":"query","id":"a"}"#),
+        Ok(Request::Query { .. })
+    ));
+    assert!(matches!(Request::parse(r#"{"op":"snapshot"}"#), Ok(Request::Snapshot)));
+    assert!(Request::parse("").is_err());
+    assert!(Request::parse(r#"{"op":"submit","id":"","mix":"dcopy:4"}"#).is_err());
+}

@@ -1,0 +1,320 @@
+//! Conformance pins of the `repro serve` layer: the service's incremental
+//! admission is *exact*, not approximate.
+//!
+//! * A submit on an empty fleet is bit-identical to the cold
+//!   `repro optimize` of the same mix (the shared warm memo changes
+//!   counters, never outcomes).
+//! * A submit→finish→submit replay equals the cold optimize of the
+//!   hand-built residual space (settled jobs pinned, newcomer free).
+//! * A repack equals the cold optimize of the combined mix under its
+//!   mix-native constraints.
+//! * The checkpoint/resume makespan probe path
+//!   (`simulate_placed_until` / `resume_placed`) is bit-identical to
+//!   simulating from `t = 0`, over randomized noisy cluster traces in
+//!   both rating modes.
+
+use std::collections::HashMap;
+
+use membw::config::machine_by_name;
+use membw::desync::{CoSimConfig, NoiseModel, Phase, Program, SyncKind};
+use membw::kernels::KernelId;
+use membw::optimizer::{
+    optimize, OptGroup, OptResult, SearchConfig, SearchSpace, DEFAULT_REMOTE_LEVELS,
+};
+use membw::scenario::{CharCache, CharSource, Mix};
+use membw::service::{ServeConfig, Service};
+use membw::sharing::GroupKind;
+use membw::timeline::{
+    resume_placed, simulate_placed_mode, simulate_placed_until, RatingMode, SimStep,
+};
+use membw::topology::{RankLayout, Topology};
+
+fn rome_2x4() -> Topology {
+    let m = machine_by_name("rome").unwrap();
+    Topology::parse(&m, "2x4").unwrap()
+}
+
+fn chars_for(topo: &Topology, mix: &Mix) -> HashMap<KernelId, (f64, f64)> {
+    let meas = CharCache::global()
+        .characterize_source(&topo.base, &mix.kernels(), &CharSource::Ecm)
+        .unwrap();
+    meas.iter().map(|(&k, c)| (k, (c.f, c.bs_gbs))).collect()
+}
+
+/// The search configuration the service derives from a [`ServeConfig`].
+fn search_cfg(cfg: &ServeConfig) -> SearchConfig {
+    SearchConfig {
+        objective: cfg.objective,
+        seed: cfg.seed,
+        starts: cfg.starts,
+        beam: cfg.beam,
+        budget: cfg.budget,
+        gb_per_core: cfg.gb_per_core,
+        ..SearchConfig::default()
+    }
+}
+
+/// Bit-level outcome equality: winner, score, rates, and the full
+/// incumbent trace. `evaluated` and memo counters are *expected* to
+/// differ between a warm shared memo and a cold one — everything that
+/// describes the search's outcome must not.
+fn assert_same_outcome(warm: &OptResult, cold: &OptResult) {
+    assert_eq!(warm.best, cold.best, "winner candidate diverged");
+    assert_eq!(
+        warm.best_score.to_bits(),
+        cold.best_score.to_bits(),
+        "best score diverged: {} vs {}",
+        warm.best_score,
+        cold.best_score
+    );
+    assert_eq!(warm.best_label, cold.best_label);
+    assert_eq!(warm.scored, cold.scored, "scored-candidate count diverged");
+    assert_eq!(warm.best_rates.len(), cold.best_rates.len());
+    for (a, b) in warm.best_rates.iter().zip(&cold.best_rates) {
+        assert_eq!(a.to_bits(), b.to_bits(), "per-group rate diverged");
+    }
+    assert_eq!(warm.trace.len(), cold.trace.len(), "trace length diverged");
+    for (a, b) in warm.trace.iter().zip(&cold.trace) {
+        assert_eq!(a.scored_at, b.scored_at);
+        assert_eq!(a.start, b.start);
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.score.to_bits(), b.score.to_bits());
+        assert_eq!(a.label, b.label);
+        assert_eq!(a.candidate, b.candidate);
+    }
+}
+
+#[test]
+fn empty_fleet_submit_is_bit_identical_to_cold_optimize() {
+    let topo = rome_2x4();
+    let cfg = ServeConfig { budget: 600, ..ServeConfig::default() };
+    let spec = "dcopy:8+ddot2:8+stream:8+daxpy:8";
+
+    let mut svc = Service::new(topo.clone(), cfg.clone(), CharSource::Ecm);
+    svc.submit("j0", spec).unwrap();
+    let warm = svc.last_result().unwrap();
+
+    let mix = Mix::parse(spec).unwrap();
+    let chars = chars_for(&topo, &mix);
+    let space = SearchSpace::from_mix(&topo, &mix, &chars).unwrap();
+    let cold = optimize(&space, &search_cfg(&cfg)).unwrap();
+    assert_same_outcome(warm, &cold);
+
+    // Mix-native constraints survive the service path too.
+    let spec = "dcopy:8@d2+ddot2:8%r0.25+stream:8";
+    let mut svc = Service::new(topo.clone(), cfg.clone(), CharSource::Ecm);
+    svc.submit("j0", spec).unwrap();
+    let mix = Mix::parse(spec).unwrap();
+    let chars = chars_for(&topo, &mix);
+    let space = SearchSpace::from_mix(&topo, &mix, &chars).unwrap();
+    let cold = optimize(&space, &search_cfg(&cfg)).unwrap();
+    assert_same_outcome(svc.last_result().unwrap(), &cold);
+    let (_, groups) = &svc.placements()[0];
+    assert_eq!(groups[0].2, 2, "@d2 pin must be honored");
+    assert_eq!(groups[1].3, 250_000, "%r0.25 freeze must be honored");
+}
+
+#[test]
+fn residual_admission_matches_cold_optimize_of_the_pinned_space() {
+    let topo = rome_2x4();
+    // repack_every: 0 keeps every admission on the residual path.
+    let cfg = ServeConfig { budget: 600, repack_every: 0, ..ServeConfig::default() };
+
+    let mut svc = Service::new(topo.clone(), cfg.clone(), CharSource::Ecm);
+    svc.submit("j0", "dcopy:6+ddot2:6").unwrap();
+    svc.submit("j1", "stream:6").unwrap();
+    svc.finish("j0").unwrap();
+    // The placement j1 holds now is what the next admission pins.
+    let settled = svc.placements();
+    assert_eq!(settled.len(), 1);
+    assert_eq!(settled[0].0, "j1");
+    let incoming = Mix::parse("daxpy:6+vecsum:6").unwrap();
+    svc.submit("j2", "daxpy:6+vecsum:6").unwrap();
+    let warm = svc.last_result().unwrap();
+
+    // Hand-build the residual space the service must have searched: j1's
+    // groups pinned at their committed placement, then j2's groups free.
+    let union = Mix::parse("stream:6+daxpy:6+vecsum:6").unwrap();
+    let chars = chars_for(&topo, &union);
+    let mut groups: Vec<OptGroup> = Vec::new();
+    for &(kernel, cores, home, remote_ppm) in &settled[0].1 {
+        let (f, bs_gbs) = chars[&kernel];
+        groups.push(OptGroup {
+            name: kernel.key().to_string(),
+            kernel,
+            n: cores,
+            f,
+            bs_gbs,
+            pinned: Some(home as usize),
+            fixed_remote_ppm: Some(remote_ppm),
+            kind: GroupKind::Mem,
+        });
+    }
+    for g in &incoming.groups {
+        let (f, bs_gbs) = chars[&g.kernel];
+        groups.push(OptGroup {
+            name: g.kernel.key().to_string(),
+            kernel: g.kernel,
+            n: g.cores,
+            f,
+            bs_gbs,
+            pinned: None,
+            fixed_remote_ppm: None,
+            kind: GroupKind::Mem,
+        });
+    }
+    let domain_cores: Vec<usize> = topo.domains.iter().map(|d| d.machine.cores).collect();
+    let mut space =
+        SearchSpace::new(topo.shape(), domain_cores, groups, DEFAULT_REMOTE_LEVELS.to_vec())
+            .unwrap();
+    space.node_of = topo.node_of();
+    space.collective_extra_s = topo.collective_extra_s();
+    let cold = optimize(&space, &search_cfg(&cfg)).unwrap();
+    assert_same_outcome(warm, &cold);
+
+    // And the settled job really did not move.
+    let after = svc.placements();
+    assert_eq!(after[0].1, settled[0].1, "pinned job moved during admission");
+}
+
+#[test]
+fn repack_equals_cold_optimize_of_the_combined_mix() {
+    let topo = rome_2x4();
+    // Every 2nd submit repacks; the 2nd submit below is one.
+    let cfg = ServeConfig { budget: 600, repack_every: 2, ..ServeConfig::default() };
+
+    let mut svc = Service::new(topo.clone(), cfg.clone(), CharSource::Ecm);
+    svc.submit("a", "dcopy:6@d1").unwrap();
+    svc.submit("b", "ddot2:6%r0.25+stream:6").unwrap();
+    let warm = svc.last_result().unwrap();
+
+    // A repack frees everything except mix-native constraints — exactly
+    // the cold optimize of the concatenated mix.
+    let union = Mix::parse("dcopy:6@d1+ddot2:6%r0.25+stream:6").unwrap();
+    let chars = chars_for(&topo, &union);
+    let space = SearchSpace::from_mix(&topo, &union, &chars).unwrap();
+    let cold = optimize(&space, &search_cfg(&cfg)).unwrap();
+    assert_same_outcome(warm, &cold);
+    let (_, a_groups) = &svc.placements()[0];
+    assert_eq!(a_groups[0].2, 1, "@d1 pin must survive the repack");
+}
+
+/// Deterministic xorshift64* driver for the randomized traces.
+struct XorShift(u64);
+
+impl XorShift {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+
+    /// Uniform in [0, 1).
+    fn f64(&mut self) -> f64 {
+        (self.next() >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+#[test]
+fn sliced_checkpoint_resume_is_bit_identical_to_oneshot() {
+    let kernels = Mix::parse("dcopy:1+ddot2:1+stream:1").unwrap().kernels();
+    let chars: Vec<(KernelId, f64, f64)> = kernels
+        .iter()
+        .enumerate()
+        .map(|(i, &k)| (k, 0.3 + 0.05 * i as f64, 90.0 + 10.0 * i as f64))
+        .collect();
+    let syncs = [SyncKind::None, SyncKind::Neighbors, SyncKind::Global];
+    let labels = ["A", "B", "C"];
+
+    for (mode, remote_frac, trace_seed) in [
+        (RatingMode::Incremental, 0.0, 1u64),
+        (RatingMode::Incremental, 0.25, 2),
+        (RatingMode::FullRecompute, 0.0, 3),
+        (RatingMode::FullRecompute, 0.25, 4),
+    ] {
+        let mut rng = XorShift(0x9e37_79b9_7f4a_7c15 ^ trace_seed);
+        let phases: Vec<Phase> = (0..3)
+            .map(|i| Phase::Kernel {
+                kernel: chars[i].0,
+                volume_bytes: 2e8 + 6e8 * rng.f64(),
+                sync: syncs[(rng.next() % 3) as usize],
+                label: labels[i],
+            })
+            .collect();
+        let program = Program { phases, iterations: 2 };
+        let config = CoSimConfig {
+            dt_s: 1.0, // ignored by the event engine
+            t_max_s: 1e6,
+            initial_stagger_s: 1e-4 + 4e-4 * rng.f64(),
+            neighbor_radius: 1 + (rng.next() % 2) as usize,
+            noise: NoiseModel::mild(7 + trace_seed),
+        };
+        let n_ranks = 8;
+        let layout = RankLayout {
+            n_domains: 4,
+            rank_domain: (0..n_ranks).map(|r| r % 4).collect(),
+            bw_scale: vec![1.0; 4],
+            socket_of: vec![0, 0, 1, 1],
+            node_of: vec![0, 0, 1, 1],
+            link_bw_gbs: 40.0,
+            link_bw_rev_gbs: 40.0,
+            collective_extra_s: 2e-6,
+            remote: None,
+        }
+        .with_remote(remote_frac)
+        .unwrap();
+
+        let oneshot = simulate_placed_mode(&program, n_ranks, &config, &chars, &layout, mode);
+
+        // Replay the identical run in randomized slices through the
+        // checkpoint.
+        let mut t_stop = 1e-3 * (0.5 + rng.f64());
+        let mut resumes = 0u32;
+        let mut step =
+            simulate_placed_until(&program, n_ranks, &config, &chars, &layout, mode, t_stop);
+        let sliced = loop {
+            match step {
+                SimStep::Done(r) => break r,
+                SimStep::Paused(cp) => {
+                    assert!(
+                        cp.t_end() <= t_stop,
+                        "paused past the stop time: {} > {t_stop}",
+                        cp.t_end()
+                    );
+                    t_stop += 1e-3 * (0.5 + rng.f64());
+                    resumes += 1;
+                    step = resume_placed(
+                        &program, n_ranks, &config, &chars, &layout, mode, cp, t_stop,
+                    );
+                }
+            }
+        };
+        assert!(resumes > 2, "trace too short to exercise resume ({resumes} resumes)");
+
+        assert_eq!(sliced.events, oneshot.events, "event count diverged (mode {mode:?})");
+        assert_eq!(
+            sliced.t_end_s.to_bits(),
+            oneshot.t_end_s.to_bits(),
+            "t_end diverged (mode {mode:?})"
+        );
+        assert_eq!(sliced.finish_s.len(), oneshot.finish_s.len());
+        for (a, b) in sliced.finish_s.iter().zip(&oneshot.finish_s) {
+            assert_eq!(a.to_bits(), b.to_bits(), "finish time diverged (mode {mode:?})");
+        }
+        assert_eq!(
+            sliced.trace.records.len(),
+            oneshot.trace.records.len(),
+            "trace length diverged (mode {mode:?})"
+        );
+        for (a, b) in sliced.trace.records.iter().zip(&oneshot.trace.records) {
+            assert_eq!(a.rank, b.rank);
+            assert_eq!(a.iteration, b.iteration);
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.t_start.to_bits(), b.t_start.to_bits());
+            assert_eq!(a.t_end.to_bits(), b.t_end.to_bits());
+        }
+    }
+}

@@ -15,7 +15,11 @@ Metrics (higher is better):
   (a drop in either means the incremental path lost its edge);
 * ``BENCH_optimizer.json`` — ``evaluations_per_s`` of the placement
   optimizer's delta + parallel + memo search and its ``speedup_vs_full``
-  over the sequential full-re-solve baseline.
+  over the sequential full-re-solve baseline;
+* ``BENCH_serve.json`` — ``requests_per_s`` of the streaming
+  co-scheduling service's warm session replay and its
+  ``speedup_vs_cold`` over per-request cold ``repro optimize`` runs
+  (a drop means incremental admission or the shared memo lost its edge).
 
 Usage::
 
@@ -60,6 +64,7 @@ GATED_FILES = [
     "BENCH_cache.json",
     "BENCH_cluster.json",
     "BENCH_optimizer.json",
+    "BENCH_serve.json",
 ]
 
 
@@ -84,6 +89,9 @@ def metrics_of(name: str, doc: dict) -> dict[str, float]:
     elif name == "BENCH_optimizer.json":
         out["optimizer.evaluations_per_s"] = float(doc["optimizer"]["evaluations_per_s"])
         out["optimizer.speedup_vs_full"] = float(doc["optimizer"]["speedup_vs_full"])
+    elif name == "BENCH_serve.json":
+        out["serve.requests_per_s"] = float(doc["serve"]["requests_per_s"])
+        out["serve.speedup_vs_cold"] = float(doc["serve"]["speedup_vs_cold"])
     return out
 
 

@@ -1,0 +1,166 @@
+#!/usr/bin/env python3
+"""Tests for the bench regression gate (``check_bench_regression.py``).
+
+The gate is the only thing standing between a perf regression and a green
+CI run, so it gets its own coverage: the pass, fail, unseeded-skip,
+mode-mismatch, and ``--update`` paths are each exercised end-to-end as a
+subprocess against fixture JSON — including the ``BENCH_serve.json``
+metrics of the streaming co-scheduling service.
+
+Stdlib only; runs in CI right before the real gate::
+
+    python3 scripts/test_check_bench_regression.py
+"""
+
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+import tempfile
+import unittest
+from pathlib import Path
+
+GATE = Path(__file__).resolve().parent / "check_bench_regression.py"
+
+
+def serve_doc(requests_per_s: float, speedup: float, mode: str = "smoke") -> dict:
+    """A minimal but schema-true BENCH_serve.json document."""
+    return {
+        "mode": mode,
+        "serve": {
+            "topology": "2x4",
+            "requests": 10,
+            "submits": 9,
+            "budget": 400,
+            "repack_every": 8,
+            "wall_s": 10.0 / requests_per_s,
+            "requests_per_s": requests_per_s,
+            "cold_wall_s": 1.0,
+            "cold_requests_per_s": requests_per_s / speedup,
+            "speedup_vs_cold": speedup,
+            "final_score": 123.456,
+            "memo": {"hits": 1000, "misses": 100, "entries": 100},
+        },
+        "char_cache": {"hits": 10, "misses": 8, "entries": 8},
+    }
+
+
+def optimizer_doc(evals_per_s: float, mode: str = "smoke") -> dict:
+    return {
+        "mode": mode,
+        "optimizer": {"evaluations_per_s": evals_per_s, "speedup_vs_full": 4.0},
+        "char_cache": {"hits": 1, "misses": 1, "entries": 1},
+    }
+
+
+def run_gate(*args: str) -> subprocess.CompletedProcess:
+    return subprocess.run(
+        [sys.executable, str(GATE), *args],
+        capture_output=True,
+        text=True,
+        check=False,
+    )
+
+
+class GateTest(unittest.TestCase):
+    def setUp(self) -> None:
+        self._tmp = tempfile.TemporaryDirectory()
+        root = Path(self._tmp.name)
+        self.results = root / "results"
+        self.baselines = root / "baselines"
+        self.results.mkdir()
+        self.baselines.mkdir()
+
+    def tearDown(self) -> None:
+        self._tmp.cleanup()
+
+    def write(self, where: Path, name: str, doc: dict) -> None:
+        (where / name).write_text(json.dumps(doc) + "\n")
+
+    def gate(self, *extra: str) -> subprocess.CompletedProcess:
+        return run_gate(
+            "--results", str(self.results), "--baselines", str(self.baselines), *extra
+        )
+
+    def test_pass_within_threshold(self) -> None:
+        self.write(self.baselines, "BENCH_serve.json", serve_doc(100.0, 8.0))
+        # 10% slower: inside the 15% budget.
+        self.write(self.results, "BENCH_serve.json", serve_doc(90.0, 7.5))
+        p = self.gate()
+        self.assertEqual(p.returncode, 0, p.stdout + p.stderr)
+        self.assertIn("ok    BENCH_serve.json serve.requests_per_s", p.stdout)
+        self.assertIn("serve.speedup_vs_cold", p.stdout)
+        self.assertNotIn("FAIL", p.stdout)
+
+    def test_fail_on_throughput_regression(self) -> None:
+        self.write(self.baselines, "BENCH_serve.json", serve_doc(100.0, 8.0))
+        # 50% slower: far past the 15% budget.
+        self.write(self.results, "BENCH_serve.json", serve_doc(50.0, 8.0))
+        p = self.gate()
+        self.assertEqual(p.returncode, 1, p.stdout + p.stderr)
+        self.assertIn("FAIL  BENCH_serve.json serve.requests_per_s", p.stdout)
+
+    def test_fail_on_speedup_regression(self) -> None:
+        # Requests/s held, but the amortization edge collapsed.
+        self.write(self.baselines, "BENCH_serve.json", serve_doc(100.0, 8.0))
+        self.write(self.results, "BENCH_serve.json", serve_doc(100.0, 2.0))
+        p = self.gate()
+        self.assertEqual(p.returncode, 1, p.stdout + p.stderr)
+        self.assertIn("FAIL  BENCH_serve.json serve.speedup_vs_cold", p.stdout)
+
+    def test_unseeded_baseline_skips_with_exit_zero(self) -> None:
+        self.write(self.results, "BENCH_serve.json", serve_doc(100.0, 8.0))
+        p = self.gate()
+        self.assertEqual(p.returncode, 0, p.stdout + p.stderr)
+        self.assertIn("SKIP  BENCH_serve.json: no committed baseline", p.stdout)
+        self.assertIn("gate passes vacuously", p.stdout)
+
+    def test_mode_mismatch_skips_that_file(self) -> None:
+        self.write(self.baselines, "BENCH_serve.json", serve_doc(100.0, 8.0, mode="full"))
+        self.write(self.results, "BENCH_serve.json", serve_doc(10.0, 1.0, mode="smoke"))
+        p = self.gate()
+        self.assertEqual(p.returncode, 0, p.stdout + p.stderr)
+        self.assertIn("mode mismatch", p.stdout)
+        self.assertNotIn("FAIL", p.stdout)
+
+    def test_regression_in_one_file_fails_while_other_passes(self) -> None:
+        self.write(self.baselines, "BENCH_optimizer.json", optimizer_doc(1000.0))
+        self.write(self.results, "BENCH_optimizer.json", optimizer_doc(990.0))
+        self.write(self.baselines, "BENCH_serve.json", serve_doc(100.0, 8.0))
+        self.write(self.results, "BENCH_serve.json", serve_doc(40.0, 8.0))
+        p = self.gate()
+        self.assertEqual(p.returncode, 1, p.stdout + p.stderr)
+        self.assertIn("ok    BENCH_optimizer.json", p.stdout)
+        self.assertIn("FAIL  BENCH_serve.json", p.stdout)
+
+    def test_report_json_is_written(self) -> None:
+        self.write(self.baselines, "BENCH_serve.json", serve_doc(100.0, 8.0))
+        self.write(self.results, "BENCH_serve.json", serve_doc(95.0, 8.0))
+        report = self.results / "BENCH_regression_report.json"
+        p = self.gate("--report", str(report))
+        self.assertEqual(p.returncode, 0, p.stdout + p.stderr)
+        doc = json.loads(report.read_text())
+        self.assertEqual(doc["regressions"], 0)
+        metrics = {row["metric"] for row in doc["comparisons"]}
+        self.assertIn("serve.requests_per_s", metrics)
+        self.assertIn("serve.speedup_vs_cold", metrics)
+
+    def test_update_seeds_the_baselines(self) -> None:
+        self.write(self.results, "BENCH_serve.json", serve_doc(100.0, 8.0))
+        p = self.gate("--update")
+        self.assertEqual(p.returncode, 0, p.stdout + p.stderr)
+        self.assertTrue((self.baselines / "BENCH_serve.json").exists())
+        # An identical re-run against the fresh baselines passes.
+        p = self.gate()
+        self.assertEqual(p.returncode, 0, p.stdout + p.stderr)
+        self.assertIn("ok    BENCH_serve.json", p.stdout)
+
+    def test_update_with_empty_results_fails(self) -> None:
+        p = self.gate("--update")
+        self.assertEqual(p.returncode, 1, p.stdout + p.stderr)
+        self.assertIn("nothing to update", p.stdout)
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)
